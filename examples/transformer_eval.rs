@@ -1,0 +1,54 @@
+//! Transformer benchmarking (paper §IV.B/C): evaluate full model layers
+//! — all MHA + FFN matmul stages, per Table III — on DiP vs TPU-like
+//! 64x64 arrays, per model and sequence length, reporting the energy and
+//! latency improvements of Fig. 6 aggregated to whole-layer granularity.
+//!
+//! Run: `cargo run --release --example transformer_eval [model] [max_seq]`
+
+use dip_core::tiling::schedule::{workload_cost, TilingConfig};
+use dip_core::workloads::models::{model_by_name, MODELS, SEQ_LENS};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let models: Vec<_> = match args.first() {
+        Some(name) => vec![*model_by_name(name).unwrap_or_else(|| {
+            eprintln!("unknown model {name}; see `dip models`");
+            std::process::exit(1);
+        })],
+        None => MODELS.to_vec(),
+    };
+    let max_seq: u64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(512);
+
+    println!(
+        "{:<16} {:>6} | {:>12} {:>12} {:>8} | {:>10} {:>10} {:>8}",
+        "model", "seq", "WS ms", "DiP ms", "lat x", "WS mJ", "DiP mJ", "en x"
+    );
+    for model in &models {
+        for &l in SEQ_LENS.iter().filter(|&&l| l <= max_seq) {
+            // Whole layer = sum over Table III stages x repeats.
+            let (mut ws_cycles, mut dip_cycles) = (0u64, 0u64);
+            let (mut ws_uj, mut dip_uj) = (0f64, 0f64);
+            for w in model.layer_workloads(l) {
+                let ws = workload_cost(w.dims, &TilingConfig::ws64());
+                let dip = workload_cost(w.dims, &TilingConfig::dip64());
+                ws_cycles += ws.cycles * w.repeats;
+                dip_cycles += dip.cycles * w.repeats;
+                ws_uj += ws.energy_uj * w.repeats as f64;
+                dip_uj += dip.energy_uj * w.repeats as f64;
+            }
+            println!(
+                "{:<16} {:>6} | {:>12.3} {:>12.3} {:>8.2} | {:>10.3} {:>10.3} {:>8.2}",
+                model.name,
+                l,
+                ws_cycles as f64 / 1e6,
+                dip_cycles as f64 / 1e6,
+                ws_cycles as f64 / dip_cycles as f64,
+                ws_uj / 1e3,
+                dip_uj / 1e3,
+                ws_uj / dip_uj,
+            );
+        }
+        println!();
+    }
+    println!("(one layer per row; 1 GHz clock; energy = Table-I-calibrated power x latency)");
+}

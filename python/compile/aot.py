@@ -1,0 +1,135 @@
+"""AOT compiler: lower the L2/L1 computations to HLO *text* artifacts.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the published ``xla`` 0.1.6 crate) rejects
+(``proto.id() <= INT_MAX``). The HLO text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Outputs (under ``artifacts/``):
+
+  dip_tile_matmul.hlo.txt    single 64x64 DiP tile pass (dataflow body)
+  matmul_ref_64.hlo.txt      plain 64x64 matmul oracle
+  matmul_dip_256.hlo.txt     256x256 DiP matmul (mxu body), unpermutated W in
+  matmul_ref_256.hlo.txt     256x256 plain matmul oracle
+  mha_dip.hlo.txt            MHA block on DiP (BlockConfig below)
+  mha_ref.hlo.txt            MHA block reference
+  ffn_dip.hlo.txt            FFN block on DiP
+  ffn_ref.hlo.txt            FFN block reference
+  layer_dip.hlo.txt          full transformer layer on DiP
+  layer_ref.hlo.txt          full transformer layer reference
+  manifest.json              name -> {file, inputs: [[dims...]...]}
+
+Python runs ONCE at build time (``make artifacts``); the Rust binary is
+self-contained afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import dip_matmul as dk
+
+# The serving config for the AOT artifacts: a small-but-real transformer
+# layer (ALBERT-scale slice). Kept modest so the interpret-mode Pallas
+# grids stay tractable for CPU-PJRT compile + execute; the cycle-accurate
+# evaluation in Rust covers the full paper model sweep independently.
+CFG = M.BlockConfig(seq_len=128, d_model=256, num_heads=4, d_ff=1024)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+def build_entries():
+    """(name, fn, example_specs) for every artifact."""
+    cfg = CFG
+    cfg.validate()
+    l, d, f = cfg.seq_len, cfg.d_model, cfg.d_ff
+    mha_in = [_spec(l, d)] + [_spec(d, d)] * 4
+    ffn_in = [_spec(l, d), _spec(d, f), _spec(f), _spec(f, d), _spec(d)]
+    layer_in = mha_in + ffn_in[1:]
+
+    return [
+        ("dip_tile_matmul", M.dip_tile_matmul, [_spec(64, 64), _spec(64, 64)]),
+        ("matmul_ref_64", M.matmul_reference, [_spec(64, 64), _spec(64, 64)]),
+        (
+            "matmul_dip_256",
+            lambda x, w: dk.dip_linear(x, w, mode="mxu"),
+            [_spec(256, 256), _spec(256, 256)],
+        ),
+        ("matmul_ref_256", M.matmul_reference, [_spec(256, 256), _spec(256, 256)]),
+        ("mha_dip", lambda *a: M.mha_dip(cfg, *a), mha_in),
+        ("mha_ref", lambda *a: M.mha_reference(cfg, *a), mha_in),
+        ("ffn_dip", lambda *a: M.ffn_dip(cfg, *a), ffn_in),
+        ("ffn_ref", lambda *a: M.ffn_reference(cfg, *a), ffn_in),
+        ("layer_dip", lambda *a: M.transformer_layer_dip(cfg, *a), layer_in),
+        ("layer_ref", lambda *a: M.transformer_layer_reference(cfg, *a), layer_in),
+    ]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--only", default=None, help="comma-separated artifact names to rebuild"
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    only = set(args.only.split(",")) if args.only else None
+
+    manifest = {
+        "config": {
+            "seq_len": CFG.seq_len,
+            "d_model": CFG.d_model,
+            "num_heads": CFG.num_heads,
+            "d_ff": CFG.d_ff,
+            "tile": CFG.tile,
+        },
+        "artifacts": {},
+    }
+    for name, fn, specs in build_entries():
+        if only is not None and name not in only:
+            continue
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": fname,
+            "inputs": [list(s.shape) for s in specs],
+            "dtype": "f32",
+            "returns_tuple1": True,
+        }
+        print(f"  wrote {fname}: {len(text)} chars, inputs {[s.shape for s in specs]}")
+
+    man_path = os.path.join(args.out_dir, "manifest.json")
+    if only is not None and os.path.exists(man_path):
+        with open(man_path) as f:
+            old = json.load(f)
+        old["artifacts"].update(manifest["artifacts"])
+        manifest = old
+    with open(man_path, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"  wrote manifest.json ({len(manifest['artifacts'])} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,132 @@
+"""Pure-jnp reference oracle for the DiP permutated-weight dataflow.
+
+Everything in this file is the *specification*: the Pallas kernel
+(`dip_matmul.py`), the JAX model (`model.py`), and the Rust cycle-accurate
+simulators are all validated against these functions.
+
+Paper reference (Fig. 3 pseudocode):
+
+    for i in range(cols):
+        for j in range(rows):
+            permutated_matrix[j][i] = matrix[(j + i) % rows][i]
+
+i.e. column ``i`` is rotated *up* by ``i`` rows. The DiP identity is then
+
+    out[m, c] = sum_k x[m, (c + k) % K] * Wp[k, c]  ==  (X @ W)[m, c]
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def permute_weights(w: jnp.ndarray) -> jnp.ndarray:
+    """DiP weight permutation: rotate column ``i`` up by ``i`` rows.
+
+    ``Wp[j, i] = W[(j + i) % rows, i]`` — the exact Fig. 3 pseudocode,
+    vectorized. Works for rectangular matrices (rotation is modulo the
+    row count).
+    """
+    rows, cols = w.shape
+    j = jnp.arange(rows)[:, None]
+    i = jnp.arange(cols)[None, :]
+    return w[(j + i) % rows, i]
+
+
+def unpermute_weights(wp: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of :func:`permute_weights`: ``W[j, i] = Wp[(j - i) % rows, i]``."""
+    rows, cols = wp.shape
+    j = jnp.arange(rows)[:, None]
+    i = jnp.arange(cols)[None, :]
+    return wp[(j - i) % rows, i]
+
+
+def permute_weights_np(w: np.ndarray) -> np.ndarray:
+    """NumPy twin of :func:`permute_weights` (used by tests as a second,
+    independently-written oracle — literal transcription of Fig. 3)."""
+    rows, cols = w.shape
+    out = np.empty_like(w)
+    for i in range(cols):
+        for j in range(rows):
+            out[j][i] = w[(j + i) % rows][i]
+    return out
+
+
+def dip_matmul_ref(x: jnp.ndarray, wp: jnp.ndarray) -> jnp.ndarray:
+    """DiP dataflow transcription: rotate-and-MAC over permutated weights.
+
+    ``x`` is (M, K), ``wp`` is the *permutated* (K, N) weight matrix with
+    square rotation modulo K. Computes ``x @ unpermute(wp)`` by the same
+    recurrence the hardware performs — one rotated input row per PE row:
+
+        acc += roll(x, -k, axis=1) * wp[k, :]
+
+    Only valid when K == N (square tile, like the NxN array). For the
+    general case go through :func:`unpermute_weights` + ``@``.
+    """
+    m, k = x.shape
+    k2, n = wp.shape
+    assert k == k2 == n, "dataflow transcription requires a square tile"
+    acc = jnp.zeros((m, n), dtype=jnp.promote_types(x.dtype, jnp.float32))
+    for s in range(k):
+        acc = acc + jnp.roll(x, -s, axis=1).astype(acc.dtype) * wp[s, :].astype(acc.dtype)
+    return acc
+
+
+def matmul_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Plain reference matmul with f32 accumulation."""
+    return jnp.matmul(x.astype(jnp.float32), w.astype(jnp.float32))
+
+
+def softmax_ref(x: jnp.ndarray, axis: int = -1) -> jnp.ndarray:
+    x = x - jnp.max(x, axis=axis, keepdims=True)
+    e = jnp.exp(x)
+    return e / jnp.sum(e, axis=axis, keepdims=True)
+
+
+def gelu_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """tanh-approximation GELU (matches model.py)."""
+    return 0.5 * x * (1.0 + jnp.tanh(jnp.sqrt(2.0 / jnp.pi) * (x + 0.044715 * x**3)))
+
+
+def mha_ref(
+    x: jnp.ndarray,
+    wq: jnp.ndarray,
+    wk: jnp.ndarray,
+    wv: jnp.ndarray,
+    wo: jnp.ndarray,
+    num_heads: int,
+) -> jnp.ndarray:
+    """Reference multi-head attention per paper eqs (8.1)-(8.5).
+
+    ``x``: (l, d_model); ``wq/wk/wv``: (d_model, d_model); ``wo``:
+    (d_model, d_model). Head size d_k = d_model / num_heads.
+    """
+    l, d_model = x.shape
+    d_k = d_model // num_heads
+    q = matmul_ref(x, wq)
+    k = matmul_ref(x, wk)
+    v = matmul_ref(x, wv)
+
+    def head(i):
+        qi = q[:, i * d_k : (i + 1) * d_k]
+        ki = k[:, i * d_k : (i + 1) * d_k]
+        vi = v[:, i * d_k : (i + 1) * d_k]
+        s = softmax_ref(matmul_ref(qi, ki.T) / jnp.sqrt(jnp.float32(d_k)))
+        return matmul_ref(s, vi)
+
+    attn = jnp.concatenate([head(i) for i in range(num_heads)], axis=1)
+    return matmul_ref(attn, wo)
+
+
+def ffn_ref(
+    y: jnp.ndarray,
+    w1: jnp.ndarray,
+    b1: jnp.ndarray,
+    w2: jnp.ndarray,
+    b2: jnp.ndarray,
+) -> jnp.ndarray:
+    """Reference FFN per paper eqs (9.1)-(9.2), GELU non-linearity."""
+    z = gelu_ref(matmul_ref(y, w1) + b1)
+    return matmul_ref(z, w2) + b2

@@ -1,0 +1,120 @@
+"""L2: transformer workload blocks (MHA + FFN) built on the DiP kernel.
+
+These are the paper's benchmark workloads (SIV.B, Table III): every matrix
+multiplication — input projections, attention scores, attention output,
+output projection, and both FFN projections — runs through the DiP
+permutated-weight Pallas kernel. A twin set of `*_reference` functions
+computes the same blocks with plain jnp matmuls; `aot.py` emits both so
+the Rust runtime can assert allclose between the DiP artifact and the
+reference artifact end-to-end.
+
+Build-time only: this module is lowered once to HLO text and never
+imported on the request path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from .kernels import dip_matmul as dk
+from .kernels import ref
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockConfig:
+    """Hyper-parameters of one transformer layer (paper Table III naming).
+
+    All dims must be multiples of ``tile`` — the paper notes "the majority
+    of MHA and FFN workload dimensions are divisible by 64"; the Rust
+    tiling layer zero-pads the rest before ever reaching this code.
+    """
+
+    seq_len: int = 128  # l
+    d_model: int = 256  # model hidden size
+    num_heads: int = 4  # h
+    d_ff: int = 1024  # FFN size
+    tile: int = 64  # DiP array edge N
+    mode: str = "mxu"  # dip kernel body: "mxu" | "dataflow"
+
+    @property
+    def d_k(self) -> int:
+        return self.d_model // self.num_heads
+
+    def validate(self) -> None:
+        for name in ("seq_len", "d_model", "d_ff"):
+            v = getattr(self, name)
+            if v % self.tile != 0:
+                raise ValueError(f"{name}={v} not a multiple of tile={self.tile}")
+        if self.d_model % self.num_heads != 0:
+            raise ValueError("d_model must divide into heads")
+        if self.d_k % self.tile != 0:
+            raise ValueError(f"d_k={self.d_k} not a multiple of tile={self.tile}")
+
+
+def _mm(cfg: BlockConfig, x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """One DiP matmul: permute-at-load + diagonal-dataflow kernel."""
+    return dk.dip_linear(x, w, tile_m=cfg.tile, tile_t=cfg.tile, mode=cfg.mode)
+
+
+def mha_dip(cfg: BlockConfig, x, wq, wk, wv, wo):
+    """Multi-head attention, eqs (8.1)-(8.5), all matmuls on DiP.
+
+    x: (l, d_model); wq/wk/wv/wo: (d_model, d_model).
+    """
+    d_k = cfg.d_k
+    q = _mm(cfg, x, wq)
+    k = _mm(cfg, x, wk)
+    v = _mm(cfg, x, wv)
+    heads = []
+    for i in range(cfg.num_heads):
+        sl = slice(i * d_k, (i + 1) * d_k)
+        # Attention scores l x d_k x l (Table III row 2): the "weight" is
+        # K^T, permutated at run time in memory (paper SIII.B).
+        s = _mm(cfg, q[:, sl], k[:, sl].T) / jnp.sqrt(jnp.float32(d_k))
+        s = ref.softmax_ref(s)
+        # Attn_i = S_i V_i, l x l x d_k (Table III row 3).
+        heads.append(_mm(cfg, s, v[:, sl]))
+    attn = jnp.concatenate(heads, axis=1)  # eq (8.4)
+    return _mm(cfg, attn, wo)  # eq (8.5)
+
+
+def mha_reference(cfg: BlockConfig, x, wq, wk, wv, wo):
+    """Same block with plain matmuls (the numerics oracle)."""
+    return ref.mha_ref(x, wq, wk, wv, wo, cfg.num_heads)
+
+
+def ffn_dip(cfg: BlockConfig, y, w1, b1, w2, b2):
+    """Feed-forward network, eqs (9.1)-(9.2), both projections on DiP."""
+    z = ref.gelu_ref(_mm(cfg, y, w1) + b1)
+    return _mm(cfg, z, w2) + b2
+
+
+def ffn_reference(cfg: BlockConfig, y, w1, b1, w2, b2):
+    return ref.ffn_ref(y, w1, b1, w2, b2)
+
+
+def transformer_layer_dip(cfg: BlockConfig, x, wq, wk, wv, wo, w1, b1, w2, b2):
+    """One full transformer layer on DiP: x + MHA, then + FFN.
+
+    (LayerNorm omitted: the paper's accelerator evaluates the matmul
+    stages; norms run on the host in its system model.)
+    """
+    h = x + mha_dip(cfg, x, wq, wk, wv, wo)
+    return h + ffn_dip(cfg, h, w1, b1, w2, b2)
+
+
+def transformer_layer_reference(cfg: BlockConfig, x, wq, wk, wv, wo, w1, b1, w2, b2):
+    h = x + mha_reference(cfg, x, wq, wk, wv, wo)
+    return h + ffn_reference(cfg, h, w1, b1, w2, b2)
+
+
+def dip_tile_matmul(x, wp):
+    """The single-tile DiP primitive (faithful dataflow body) the Rust
+    coordinator dispatches per 64x64 tile: x (64,64) @ unpermute(wp)."""
+    return dk.dip_matmul(x, wp, tile_m=64, tile_t=64, mode="dataflow")
+
+
+def matmul_reference(x, w):
+    return ref.matmul_ref(x, w)

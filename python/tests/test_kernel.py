@@ -1,0 +1,267 @@
+"""L1 correctness: DiP Pallas kernel vs pure-jnp oracle.
+
+This is the CORE correctness signal for the compile path: if these pass,
+every HLO artifact the Rust runtime executes computes exactly X @ W
+through the permutated dataflow.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import dip_matmul as dk
+from compile.kernels import ref
+
+
+def rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Permutation identities (Fig. 3 pseudocode)
+# ---------------------------------------------------------------------------
+
+
+class TestPermutation:
+    @pytest.mark.parametrize("n", [1, 2, 3, 4, 8, 16, 64, 128])
+    def test_roundtrip_square(self, n):
+        w = rand(n, (n, n))
+        np.testing.assert_array_equal(
+            np.asarray(ref.unpermute_weights(ref.permute_weights(w))), np.asarray(w)
+        )
+
+    @pytest.mark.parametrize("rows,cols", [(4, 8), (8, 4), (3, 5), (64, 128)])
+    def test_roundtrip_rect(self, rows, cols):
+        w = rand(rows * 131 + cols, (rows, cols))
+        np.testing.assert_array_equal(
+            np.asarray(ref.unpermute_weights(ref.permute_weights(w))), np.asarray(w)
+        )
+
+    @pytest.mark.parametrize("n", [2, 3, 5, 8, 64])
+    def test_matches_paper_pseudocode(self, n):
+        """Vectorized permutation == literal Fig. 3 double loop."""
+        w = np.random.default_rng(n).standard_normal((n, n)).astype(np.float32)
+        np.testing.assert_array_equal(
+            np.asarray(ref.permute_weights(jnp.asarray(w))),
+            ref.permute_weights_np(w),
+        )
+
+    def test_fig4_example_3x3(self):
+        """The exact 3x3 permutation from paper Fig. 4(b).
+
+        The original weight matrix is W = [[a,d,g],[b,e,h],[c,f,i]]
+        (letters column-major); Fig. 4 shows its permutation — the matrix
+        actually loaded into the array — as [[a,e,i],[b,f,g],[c,d,h]]:
+        column 1 rotated up by 1 -> (e,f,d), column 2 by 2 -> (i,g,h).
+        """
+        a, b, c, d, e, f, g, h, i = range(1, 10)
+        w = jnp.array([[a, d, g], [b, e, h], [c, f, i]], jnp.float32)
+        expect = jnp.array([[a, e, i], [b, f, g], [c, d, h]], jnp.float32)
+        np.testing.assert_array_equal(
+            np.asarray(ref.permute_weights(w)), np.asarray(expect)
+        )
+
+    def test_permutation_is_bijection(self):
+        n = 16
+        idx = jnp.arange(n * n, dtype=jnp.float32).reshape(n, n)
+        p = np.asarray(ref.permute_weights(idx)).ravel()
+        assert sorted(p.tolist()) == list(range(n * n))
+
+    def test_tiled_roundtrip(self):
+        w = rand(7, (192, 128))
+        wp = dk.permute_weights_tiled(w, tile_t=64)
+        np.testing.assert_array_equal(
+            np.asarray(dk.unpermute_weights_tiled(wp, tile_t=64)), np.asarray(w)
+        )
+
+    def test_tiled_permutes_each_tile_independently(self):
+        w = rand(9, (128, 128))
+        wp = dk.permute_weights_tiled(w, tile_t=64)
+        for bi in range(2):
+            for bj in range(2):
+                tile = w[bi * 64 : (bi + 1) * 64, bj * 64 : (bj + 1) * 64]
+                np.testing.assert_array_equal(
+                    np.asarray(wp[bi * 64 : (bi + 1) * 64, bj * 64 : (bj + 1) * 64]),
+                    np.asarray(ref.permute_weights(tile)),
+                )
+
+
+# ---------------------------------------------------------------------------
+# DiP dataflow identity (the heart of the paper)
+# ---------------------------------------------------------------------------
+
+
+class TestDataflowIdentity:
+    @pytest.mark.parametrize("n", [2, 3, 4, 8, 16, 64])
+    def test_rotate_mac_equals_matmul(self, n):
+        x = rand(n, (5, n))
+        w = rand(n + 1, (n, n))
+        out = ref.dip_matmul_ref(x, ref.permute_weights(w))
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(x @ w), rtol=1e-4, atol=1e-4
+        )
+
+    def test_fig4_numeric_walkthrough(self):
+        """Paper Fig. 4: X = [[1,2,3],[4,5,6],[7,8,9]],
+        W = [[a,d,g],[b,e,h],[c,f,i]] whose permutation (the loaded
+        matrix) is Wp = [[a,e,i],[b,f,g],[c,d,h]].
+
+        The paper's cycle-3/4/5 output rows are
+          row0 = (1a+2b+3c, 2e+3f+1d, 3i+1g+2h)
+          row1 = (4a+5b+6c, 5e+6f+4d, 6i+4g+5h)
+          row2 = (7a+8b+9c, 8e+9f+7d, 9i+7g+8h)
+        """
+        a, b, c, d, e, f, g, h, i = [float(v) for v in range(1, 10)]
+        w = jnp.array([[a, d, g], [b, e, h], [c, f, i]], jnp.float32)
+        wp = ref.permute_weights(w)
+        np.testing.assert_array_equal(
+            np.asarray(wp),
+            np.asarray(jnp.array([[a, e, i], [b, f, g], [c, d, h]], jnp.float32)),
+        )
+        x = jnp.array([[1, 2, 3], [4, 5, 6], [7, 8, 9]], jnp.float32)
+        out = np.asarray(ref.dip_matmul_ref(x, wp))
+        expect = np.array(
+            [
+                [1 * a + 2 * b + 3 * c, 2 * e + 3 * f + 1 * d, 3 * i + 1 * g + 2 * h],
+                [4 * a + 5 * b + 6 * c, 5 * e + 6 * f + 4 * d, 6 * i + 4 * g + 5 * h],
+                [7 * a + 8 * b + 9 * c, 8 * e + 9 * f + 7 * d, 9 * i + 7 * g + 8 * h],
+            ]
+        )
+        np.testing.assert_allclose(out, expect, rtol=1e-6)
+        np.testing.assert_allclose(out, np.asarray(x @ w), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel vs oracle
+# ---------------------------------------------------------------------------
+
+
+class TestPallasKernel:
+    @pytest.mark.parametrize("mode", ["mxu", "dataflow"])
+    def test_single_tile(self, mode):
+        x = rand(10, (64, 64))
+        w = rand(11, (64, 64))
+        out = dk.dip_matmul(x, ref.permute_weights(w), mode=mode)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(ref.matmul_ref(x, w)), rtol=1e-4, atol=1e-4
+        )
+
+    @pytest.mark.parametrize("mode", ["mxu", "dataflow"])
+    @pytest.mark.parametrize(
+        "m,k,n", [(64, 64, 128), (128, 128, 64), (64, 192, 64), (128, 128, 128)]
+    )
+    def test_multi_tile(self, mode, m, k, n):
+        x = rand(m + k, (m, k))
+        w = rand(n + k, (k, n))
+        out = dk.dip_linear(x, w, mode=mode)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(ref.matmul_ref(x, w)), rtol=1e-4, atol=1e-4
+        )
+
+    def test_modes_agree(self):
+        x = rand(20, (128, 128))
+        w = rand(21, (128, 128))
+        a = dk.dip_linear(x, w, mode="mxu")
+        b = dk.dip_linear(x, w, mode="dataflow")
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)
+
+    def test_tile_m_independent(self):
+        x = rand(30, (128, 64))
+        w = rand(31, (64, 64))
+        a = dk.dip_linear(x, w, tile_m=64)
+        b = dk.dip_linear(x, w, tile_m=128)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtypes(self, dtype):
+        x = rand(40, (64, 64), dtype)
+        w = rand(41, (64, 64), dtype)
+        out = dk.dip_linear(x, w)
+        tol = 1e-4 if dtype == jnp.float32 else 5e-2
+        np.testing.assert_allclose(
+            np.asarray(out),
+            np.asarray(ref.matmul_ref(x, w)),
+            rtol=tol,
+            atol=tol,
+        )
+
+    def test_rejects_ragged_shapes(self):
+        x = rand(50, (65, 64))
+        w = rand(51, (64, 64))
+        with pytest.raises(AssertionError):
+            dk.dip_linear(x, w)
+
+    def test_zero_input(self):
+        out = dk.dip_matmul(jnp.zeros((64, 64)), jnp.zeros((64, 64)))
+        assert float(jnp.abs(out).max()) == 0.0
+
+    def test_identity_weight(self):
+        """X @ I == X through the permuted dataflow."""
+        x = rand(60, (64, 64))
+        out = dk.dip_linear(x, jnp.eye(64, dtype=jnp.float32))
+        np.testing.assert_allclose(np.asarray(out), np.asarray(x), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis sweeps: shapes, dtypes, values
+# ---------------------------------------------------------------------------
+
+TILES = st.sampled_from([64])
+MULT = st.integers(min_value=1, max_value=3)
+
+
+class TestHypothesisSweeps:
+    @settings(max_examples=15, deadline=None)
+    @given(mi=MULT, ki=MULT, ni=MULT, seed=st.integers(0, 2**31 - 1))
+    def test_kernel_matches_ref_any_shape(self, mi, ki, ni, seed):
+        m, k, n = 64 * mi, 64 * ki, 64 * ni
+        key = jax.random.PRNGKey(seed)
+        kx, kw = jax.random.split(key)
+        x = jax.random.uniform(kx, (m, k), jnp.float32, -2.0, 2.0)
+        w = jax.random.uniform(kw, (k, n), jnp.float32, -2.0, 2.0)
+        out = dk.dip_linear(x, w, mode="mxu")
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(ref.matmul_ref(x, w)), rtol=1e-3, atol=1e-3
+        )
+
+    @settings(max_examples=10, deadline=None)
+    @given(n=st.sampled_from([2, 3, 4, 5, 8, 16]), seed=st.integers(0, 2**31 - 1))
+    def test_permutation_roundtrip_any_n(self, n, seed):
+        w = jax.random.normal(jax.random.PRNGKey(seed), (n, n))
+        np.testing.assert_array_equal(
+            np.asarray(ref.unpermute_weights(ref.permute_weights(w))), np.asarray(w)
+        )
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        n=st.sampled_from([2, 3, 4, 8, 16, 32]),
+        m=st.integers(1, 8),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_dataflow_identity_any_n(self, n, m, seed):
+        kx, kw = jax.random.split(jax.random.PRNGKey(seed))
+        x = jax.random.uniform(kx, (m, n), jnp.float32, -1.0, 1.0)
+        w = jax.random.uniform(kw, (n, n), jnp.float32, -1.0, 1.0)
+        out = ref.dip_matmul_ref(x, ref.permute_weights(w))
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(x @ w), rtol=1e-4, atol=1e-4
+        )
+
+    @settings(max_examples=8, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        scale=st.sampled_from([1e-3, 1.0, 1e3]),
+    )
+    def test_kernel_value_ranges(self, seed, scale):
+        kx, kw = jax.random.split(jax.random.PRNGKey(seed))
+        x = jax.random.normal(kx, (64, 64)) * scale
+        w = jax.random.normal(kw, (64, 64)) * scale
+        out = dk.dip_linear(x, w)
+        np.testing.assert_allclose(
+            np.asarray(out),
+            np.asarray(ref.matmul_ref(x, w)),
+            rtol=1e-3,
+            atol=1e-3 * scale * scale,
+        )

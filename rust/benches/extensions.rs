@@ -1,0 +1,103 @@
+//! Bench: the beyond-paper extension studies DESIGN.md calls out —
+//! (1) sparsity zero-gating (paper §V future work), (2) the §II
+//! dataflow bandwidth comparison, (3) the Meissa (§I) comparator.
+//! `cargo bench --bench extensions`.
+
+use dip_core::analytical::{latency_cycles, meissa, Arch};
+use dip_core::arch::sparsity::{random_sparse_i8, run_tile_zero_gated};
+use dip_core::bench_harness::timing::bench;
+use dip_core::matrix::random_i8;
+use dip_core::power::area::area_um2;
+use dip_core::power::bandwidth::{bandwidth, Dataflow};
+
+fn main() {
+    // ------------------------------------------------------------------
+    // 1. Sparsity sweep (paper §V: "explore sparsity in transformers").
+    // ------------------------------------------------------------------
+    println!("=== Sparsity zero-gating sweep (64x64 DiP, 512-row stream) ===");
+    println!("{:>9} {:>10} {:>12} {:>14}", "density", "gated MACs", "energy x", "output check");
+    let w = random_i8(64, 64, 1);
+    for density in [1.0, 0.9, 0.7, 0.5, 0.3, 0.1] {
+        let x = random_sparse_i8(512, 64, density, 2);
+        let s = run_tile_zero_gated(Arch::Dip, &w, &x, 2);
+        let ok = s.run.outputs == x.widen().matmul(&w.widen());
+        println!(
+            "{:>9.2} {:>10} {:>12.3} {:>14}",
+            s.density,
+            s.gated_macs,
+            s.energy_improvement(),
+            if ok { "exact" } else { "MISMATCH" }
+        );
+        assert!(ok);
+    }
+    let x = random_sparse_i8(512, 64, 0.5, 3);
+    bench("sparsity/gated_pass_64x512", 1, 7, || run_tile_zero_gated(Arch::Dip, &w, &x, 2));
+
+    // ------------------------------------------------------------------
+    // 2. §II dataflow bandwidth comparison, quantified.
+    // ------------------------------------------------------------------
+    println!("\n=== Dataflow boundary bandwidth (N=64, R=1024 rows/pass) ===");
+    println!("{:>5} {:>12} {:>12} {:>12} {:>12} {:>14}", "flow", "operand B/c", "output B/c", "refill B/c", "total B/c", "MACs/byte");
+    for df in [Dataflow::Ws, Dataflow::Is, Dataflow::Os, Dataflow::Rs, Dataflow::Dip] {
+        let b = bandwidth(df, 64, 1024);
+        println!(
+            "{:>5} {:>12.1} {:>12.1} {:>12.1} {:>12.1} {:>14.1}",
+            df.name(),
+            b.operand_bpc,
+            b.output_bpc,
+            b.refill_bpc,
+            b.total_bpc(),
+            b.macs_per_byte(64)
+        );
+    }
+    let ws = bandwidth(Dataflow::Ws, 64, 1024);
+    let os = bandwidth(Dataflow::Os, 64, 1024);
+    assert_eq!(os.operand_bpc, 2.0 * ws.operand_bpc, "OS must double operand bandwidth");
+
+    // ------------------------------------------------------------------
+    // 2b. OS dataflow cycle comparison (the §II re-pass penalty).
+    // ------------------------------------------------------------------
+    println!("\n=== OS vs DiP cycles (16x16 arrays, streamed rows) ===");
+    {
+        use dip_core::arch::{dip::DipArray, os::OsArray, SystolicArray};
+        let n = 16usize;
+        let w = random_i8(n, n, 11);
+        println!("{:>8} {:>10} {:>10} {:>8}", "rows", "OS cyc", "DiP cyc", "ratio");
+        for rows in [16usize, 64, 256] {
+            let x = random_i8(rows, n, 12);
+            let mut os = OsArray::new(n, 2);
+            os.load_weights(&w);
+            let mut dip = DipArray::new(n, 2);
+            dip.load_weights(&w);
+            let (or, dr) = (os.run_tile(&x), dip.run_tile(&x));
+            assert_eq!(or.outputs, dr.outputs, "dataflows must agree on values");
+            println!(
+                "{:>8} {:>10} {:>10} {:>8.2}",
+                rows,
+                or.stats.cycles,
+                dr.stats.cycles,
+                or.stats.cycles as f64 / dr.stats.cycles as f64
+            );
+        }
+        println!("(OS re-fills per n-row output tile; DiP streams continuously)");
+    }
+
+    // ------------------------------------------------------------------
+    // 3. Meissa comparator (§I related work, quantified).
+    // ------------------------------------------------------------------
+    println!("\n=== Meissa vs WS vs DiP (latency cycles / area um2) ===");
+    println!("{:>5} {:>10} {:>10} {:>10} {:>14} {:>14}", "N", "WS lat", "Meissa lat", "DiP lat", "Meissa area", "DiP area");
+    for n in [8u64, 16, 32, 64, 128] {
+        println!(
+            "{:>5} {:>10} {:>10} {:>10} {:>14.0} {:>14.0}",
+            n,
+            latency_cycles(Arch::Ws, n, 2),
+            meissa::latency_meissa(n),
+            latency_cycles(Arch::Dip, n, 2),
+            meissa::area_meissa_um2(n),
+            area_um2(Arch::Dip, n),
+        );
+    }
+    println!("(Meissa beats WS on latency but its adder-tree routing term makes");
+    println!(" its area scale worse than DiP — the paper's §I scalability claim)");
+}

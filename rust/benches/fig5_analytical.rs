@@ -1,0 +1,15 @@
+//! Bench: regenerate Fig. 5 (analytical comparison + simulator
+//! cross-check) and time the sweep. `cargo bench --bench fig5_analytical`.
+
+use dip_core::bench_harness::{fig5, timing::bench};
+
+fn main() {
+    println!("=== Fig 5 regeneration (paper: analytical models, eqs (1)-(7)) ===");
+    let rows = fig5::run(2);
+    print!("{}", fig5::render(&rows));
+
+    bench("fig5/full_sweep_with_sim_crosscheck", 1, 5, || fig5::run(2));
+    bench("fig5/analytical_only", 2, 20, || {
+        dip_core::analytical::compare::fig5_sweep(2)
+    });
+}

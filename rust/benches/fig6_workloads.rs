@@ -1,0 +1,41 @@
+//! Bench: regenerate Fig. 6 — the cycle-accurate transformer workload
+//! evaluation (energy + latency, DiP vs TPU-like 64x64) — and time the
+//! sweep. `cargo bench --bench fig6_workloads`.
+
+use dip_core::bench_harness::{fig6, timing::bench};
+use dip_core::tiling::schedule::compare_workload;
+use dip_core::workloads::dims::MatMulDims;
+
+fn main() {
+    println!("=== Fig 6 regeneration (transformer workloads, 64x64) ===");
+    let points = fig6::run(2048);
+    print!("{}", fig6::render(&points));
+
+    let (e_min, e_max, l_min, l_max) = fig6::bands(&points);
+    assert!(l_max > 1.45 && l_min < 1.06, "latency band shape broke: {l_min}..{l_max}");
+    assert!(e_max > 1.7 && e_min < 1.35, "energy band shape broke: {e_min}..{e_max}");
+
+    // Event-based accounting ablation (honest FIFO occupancy pricing).
+    println!("\nEvent-based energy accounting (ablation):");
+    for p in points.iter().take(4) {
+        println!(
+            "  {}: paper {:.2}x, event-based {:.2}x",
+            p.cmp.dims,
+            p.cmp.energy_improvement(),
+            p.cmp.energy_improvement_event()
+        );
+    }
+
+    bench("fig6/small_workload_pair", 1, 10, || {
+        compare_workload(MatMulDims::new(64, 512, 64))
+    });
+    bench("fig6/large_workload_pair", 0, 3, || {
+        compare_workload(MatMulDims::new(2048, 5120, 5120))
+    });
+    let r = bench("fig6/full_sweep_seq<=512", 0, 3, || fig6::run(512));
+    dip_core::bench_harness::timing::report_throughput(
+        "sweep wall",
+        r.median.as_secs_f64(),
+        "s/run",
+    );
+}

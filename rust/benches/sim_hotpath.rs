@@ -1,0 +1,38 @@
+//! Bench: the cycle-accurate simulator hot loop — the performance-
+//! critical path of every table/figure regeneration. Reports PE-updates
+//! per second (DESIGN.md §Perf target: >= 1e8/s).
+//! `cargo bench --bench sim_hotpath`.
+
+use dip_core::arch::{dip::DipArray, ws::WsArray, SystolicArray};
+use dip_core::matrix::random_i8;
+use dip_core::bench_harness::timing::{bench, report_throughput};
+
+fn pe_updates(n: usize, rows: usize, extra_cycles: usize) -> f64 {
+    // Every cycle updates all N*N PEs; total cycles ~ rows + fill/drain.
+    ((rows + extra_cycles) * n * n) as f64
+}
+
+fn main() {
+    println!("=== Simulator hot path (PE-updates/s) ===");
+
+    for (n, rows) in [(16usize, 256usize), (64, 64), (64, 1024), (64, 4096)] {
+        let w = random_i8(n, n, 1);
+        let x = random_i8(rows, n, 2);
+
+        let mut dip = DipArray::new(n, 2);
+        dip.load_weights(&w);
+        let r = bench(&format!("dip/n{n}/rows{rows}"), 1, 7, || dip.run_tile(&x));
+        report_throughput("PE-updates", r.throughput(pe_updates(n, rows, n)), "/s");
+
+        let mut ws = WsArray::new(n, 2);
+        ws.load_weights(&w);
+        let r = bench(&format!("ws/n{n}/rows{rows}"), 1, 7, || ws.run_tile(&x));
+        report_throughput("PE-updates", r.throughput(pe_updates(n, rows, 2 * n)), "/s");
+    }
+
+    // Weight load + permutation staging cost.
+    let w = random_i8(64, 64, 3);
+    let mut dip = DipArray::new(64, 2);
+    let r = bench("dip/load_weights_64 (incl. permutation)", 5, 50, || dip.load_weights(&w));
+    report_throughput("loads", r.throughput(1.0), "/s");
+}

@@ -1,0 +1,53 @@
+//! Bench: regenerate the hardware design-space exploration (Table I and
+//! Table II) from the calibrated 22nm component model, plus the
+//! weight-load-policy and clock-gating ablations called out in
+//! DESIGN.md. `cargo bench --bench table1_table2_dse`.
+
+use dip_core::analytical::Arch;
+use dip_core::bench_harness::{table1, table2, timing::bench};
+use dip_core::power::energy::energy_pj_gated;
+use dip_core::tiling::schedule::{workload_cost, TilingConfig, WeightLoadPolicy};
+use dip_core::workloads::dims::MatMulDims;
+
+fn main() {
+    println!("=== Table I / Table II regeneration (22nm DSE) ===");
+    print!("{}", table1::render(&table1::run()));
+    println!();
+    print!("{}", table2::render(&table2::run()));
+
+    bench("table1/model_eval", 2, 50, table1::run);
+    bench("table2/model_eval", 2, 50, table2::run);
+
+    // --- Ablation 1: weight-load policy (overlapped vs blocking) ---
+    println!("\n=== Ablation: weight-load policy (64x64, DiP) ===");
+    for dims in [MatMulDims::new(64, 64, 64), MatMulDims::new(512, 512, 512)] {
+        let over = workload_cost(dims, &TilingConfig::dip64());
+        let block = workload_cost(
+            dims,
+            &TilingConfig { weight_load: WeightLoadPolicy::Blocking, ..TilingConfig::dip64() },
+        );
+        println!(
+            "{dims}: overlapped {} cycles, blocking {} cycles (+{:.1}%)",
+            over.cycles,
+            block.cycles,
+            (block.cycles as f64 / over.cycles as f64 - 1.0) * 100.0
+        );
+    }
+
+    // --- Ablation 2: paper power-x-latency vs event-based energy ---
+    println!("\n=== Ablation: energy accounting (64-64-64 small workload) ===");
+    for arch in [Arch::Ws, Arch::Dip] {
+        let cfg = if arch == Arch::Ws { TilingConfig::ws64() } else { TilingConfig::dip64() };
+        let c = workload_cost(MatMulDims::new(64, 64, 64), &cfg);
+        let gated = energy_pj_gated(64, &c.stats).total_uj();
+        println!(
+            "{}: paper-accounting {:.3} uJ, event-based {:.3} uJ, event+gated {:.3} uJ",
+            arch.name(),
+            c.energy_uj,
+            c.energy_event_uj,
+            gated
+        );
+    }
+    println!("(gating idle PEs shrinks the WS fill/drain penalty — the paper's");
+    println!(" power-x-latency accounting is the upper bound of DiP's benefit)");
+}

@@ -1,0 +1,18 @@
+//! Bench: regenerate Table IV (accelerator comparison, 22nm-normalized)
+//! and validate the headline DiP efficiency numbers.
+
+use dip_core::bench_harness::{table4, timing::bench};
+
+fn main() {
+    println!("=== Table IV regeneration ===");
+    print!("{}", table4::render());
+
+    let dip = dip_core::power::scaling::dip_accelerator();
+    let norm = dip.normalized();
+    assert!((dip.peak_tops - 8.192).abs() < 0.01, "peak TOPS {}", dip.peak_tops);
+    assert!((norm.tops_per_w - 9.55).abs() < 0.5, "TOPS/W {}", norm.tops_per_w);
+
+    bench("table4/normalization", 5, 100, || {
+        table4::accelerators().iter().map(|a| a.normalized().tops_per_w).sum::<f64>()
+    });
+}

@@ -1,0 +1,109 @@
+//! Derived DiP-vs-WS comparison series — the data behind Fig. 5 (a)–(d).
+
+use super::{
+    latency_cycles, tfpu_cycles, throughput_ops_per_cycle, total_registers_8bit, Arch,
+};
+/// The paper's Fig. 5 sweep sizes.
+pub const FIG5_SIZES: [u64; 6] = [3, 4, 8, 16, 32, 64];
+
+/// One row of the Fig. 5 comparison at a given array size.
+#[derive(Debug, Clone, Copy)]
+pub struct ComparisonRow {
+    pub n: u64,
+    pub s: u64,
+    pub ws_latency: u64,
+    pub dip_latency: u64,
+    /// (WS - DiP) / WS * 100 — the grey curve in Fig. 5(a).
+    pub latency_saving_pct: f64,
+    pub ws_throughput: f64,
+    pub dip_throughput: f64,
+    /// (DiP / WS - 1) * 100 — the grey curve in Fig. 5(b).
+    pub throughput_improvement_pct: f64,
+    pub ws_registers_8bit: u64,
+    pub dip_registers_8bit: u64,
+    /// (WS - DiP) / WS * 100 — the grey curve in Fig. 5(c).
+    pub register_saving_pct: f64,
+    pub ws_tfpu: u64,
+    pub dip_tfpu: u64,
+    /// (WS - DiP) / WS * 100 — the grey curve in Fig. 5(d).
+    pub tfpu_improvement_pct: f64,
+}
+
+/// Compute one comparison row (`s` = MAC pipeline stages).
+pub fn compare_at(n: u64, s: u64) -> ComparisonRow {
+    let ws_latency = latency_cycles(Arch::Ws, n, s);
+    let dip_latency = latency_cycles(Arch::Dip, n, s);
+    let ws_throughput = throughput_ops_per_cycle(Arch::Ws, n, s);
+    let dip_throughput = throughput_ops_per_cycle(Arch::Dip, n, s);
+    let ws_registers_8bit = total_registers_8bit(Arch::Ws, n);
+    let dip_registers_8bit = total_registers_8bit(Arch::Dip, n);
+    let ws_tfpu = tfpu_cycles(Arch::Ws, n);
+    let dip_tfpu = tfpu_cycles(Arch::Dip, n);
+    ComparisonRow {
+        n,
+        s,
+        ws_latency,
+        dip_latency,
+        latency_saving_pct: (ws_latency - dip_latency) as f64 / ws_latency as f64 * 100.0,
+        ws_throughput,
+        dip_throughput,
+        throughput_improvement_pct: (dip_throughput / ws_throughput - 1.0) * 100.0,
+        ws_registers_8bit,
+        dip_registers_8bit,
+        register_saving_pct: (ws_registers_8bit - dip_registers_8bit) as f64
+            / ws_registers_8bit as f64
+            * 100.0,
+        ws_tfpu,
+        dip_tfpu,
+        tfpu_improvement_pct: (ws_tfpu - dip_tfpu) as f64 / ws_tfpu as f64 * 100.0,
+    }
+}
+
+/// The full Fig. 5 sweep (paper uses S=2, the pipelined PE).
+pub fn fig5_sweep(s: u64) -> Vec<ComparisonRow> {
+    FIG5_SIZES.iter().map(|&n| compare_at(n, s)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_covers_paper_sizes() {
+        let rows = fig5_sweep(2);
+        assert_eq!(rows.len(), 6);
+        assert_eq!(rows[0].n, 3);
+        assert_eq!(rows[5].n, 64);
+    }
+
+    #[test]
+    fn savings_monotonically_increase_with_n() {
+        let rows = fig5_sweep(2);
+        for w in rows.windows(2) {
+            assert!(w[1].latency_saving_pct >= w[0].latency_saving_pct);
+            assert!(w[1].throughput_improvement_pct >= w[0].throughput_improvement_pct);
+            assert!(w[1].register_saving_pct >= w[0].register_saving_pct);
+        }
+    }
+
+    #[test]
+    fn fig5_headline_numbers() {
+        let rows = fig5_sweep(2);
+        let r64 = rows.iter().find(|r| r.n == 64).unwrap();
+        assert!((r64.latency_saving_pct - 33.0).abs() < 1.0);
+        assert!((r64.throughput_improvement_pct - 49.2).abs() < 0.5);
+        assert!((r64.register_saving_pct - 20.0).abs() < 1.0);
+        // Fig 5(d): DiP needs about half the time of WS.
+        assert!((r64.tfpu_improvement_pct - 50.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn dip_always_wins() {
+        for row in fig5_sweep(2) {
+            assert!(row.dip_latency < row.ws_latency);
+            assert!(row.dip_throughput > row.ws_throughput);
+            assert!(row.dip_registers_8bit < row.ws_registers_8bit);
+            assert!(row.dip_tfpu < row.ws_tfpu);
+        }
+    }
+}

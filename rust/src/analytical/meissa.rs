@@ -1,0 +1,108 @@
+//! Analytical comparator for **Meissa** [26] — the related architecture
+//! the paper discusses in §I: a WS-dataflow array that separates the
+//! multipliers from per-column adder *trees*, eliminating the input
+//! skew FIFOs (like DiP) but keeping output synchronization FIFOs and
+//! paying for deep pipelined adder trees whose routing congests at
+//! large N.
+//!
+//! The paper's §I claims, which this model quantifies:
+//!   * "the larger the adder trees the deeper pipelines they require" —
+//!     tree depth `ceil(log2 N)` adds pipeline latency and registers;
+//!   * "routing congestion ... caused by delivering all products from
+//!     all PEs in the same column to the adder tree" — modeled as a
+//!     super-linear wiring-area term;
+//!   * "it still requires the output synchronization FIFOs".
+//!
+//! Modeling assumptions are deliberately explicit constants (no silicon
+//! data exists for a 22nm Meissa); what matters for the reproduction is
+//! the *shape*: Meissa beats WS on latency, loses to DiP on registers
+//! and on area scalability at large N.
+
+#[cfg(test)]
+use super::{latency_cycles, sync_register_overhead_8bit, Arch};
+use crate::power::calibration::calibration;
+
+/// ceil(log2 n) for n >= 1.
+pub fn log2_ceil(n: u64) -> u64 {
+    (64 - (n.max(1) - 1).leading_zeros() as u64).max(1) - if n <= 1 { 0 } else { 0 }
+}
+
+/// Per-tile latency of an `N x N` Meissa array: N rows stream (one per
+/// cycle, no input skew), each result crosses a `ceil(log2 N)`-stage
+/// pipelined adder tree, then the output de-skew FIFO path (N-1).
+pub fn latency_meissa(n: u64) -> u64 {
+    n + log2_ceil(n) + (n - 1)
+}
+
+/// Register overhead (8-bit units): output sync FIFO group (16-bit,
+/// so x2) plus the adder-tree pipeline registers — one 16-bit register
+/// per tree node, `N-1` nodes per column, N columns.
+pub fn register_overhead_meissa_8bit(n: u64) -> u64 {
+    2 * (n * (n - 1) / 2) + 2 * n * (n - 1)
+}
+
+/// Area model (µm²): multipliers + tree adders + registers + a routing
+/// congestion term growing as `N^2 log2 N` (all-products-to-tree
+/// wiring). Constants are shares of the calibrated DiP PE area:
+/// multiplier ~55% of a PE, tree adder ~35%.
+pub fn area_meissa_um2(n: u64) -> f64 {
+    let c = calibration();
+    let mul_area = 0.55 * c.a_pe_um2;
+    let add_area = 0.35 * c.a_pe_um2;
+    let regs = register_overhead_meissa_8bit(n) as f64 * c.a_fifo_reg_um2;
+    // Routing congestion: ~2% of a PE's area per PE per log2-level of
+    // column fan-in (explicit modeling assumption).
+    let routing = 0.02 * c.a_pe_um2 * (n * n) as f64 * log2_ceil(n) as f64;
+    (n * n) as f64 * (mul_area + add_area) + regs + routing + n as f64 * c.a_edge_um2 + c.a_fixed_um2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::power::area::area_um2;
+
+    #[test]
+    fn log2_ceil_values() {
+        assert_eq!(log2_ceil(2), 1);
+        assert_eq!(log2_ceil(3), 2);
+        assert_eq!(log2_ceil(64), 6);
+        assert_eq!(log2_ceil(65), 7);
+    }
+
+    #[test]
+    fn meissa_beats_ws_on_latency() {
+        // No input skew: Meissa's pitch — it must beat plain WS.
+        for n in [8u64, 16, 32, 64] {
+            assert!(latency_meissa(n) < latency_cycles(Arch::Ws, n, 2), "n={n}");
+        }
+    }
+
+    #[test]
+    fn dip_beats_meissa_on_latency_at_scale() {
+        // DiP has no output FIFO path either; it wins for all paper sizes.
+        for n in [8u64, 16, 32, 64] {
+            assert!(latency_cycles(Arch::Dip, n, 2) < latency_meissa(n), "n={n}");
+        }
+    }
+
+    #[test]
+    fn meissa_keeps_output_sync_registers() {
+        // §I: "still requires the output synchronization FIFOs" —
+        // nonzero overhead vs DiP's zero.
+        for n in [8u64, 64] {
+            assert!(register_overhead_meissa_8bit(n) > 0);
+            assert!(
+                register_overhead_meissa_8bit(n) > sync_register_overhead_8bit(Arch::Dip, n)
+            );
+        }
+    }
+
+    #[test]
+    fn meissa_area_scales_worse_than_dip() {
+        // The congestion term makes the area ratio grow with N — the
+        // paper's "not scalable to large NxN dimensions" claim.
+        let ratio = |n| area_meissa_um2(n) / area_um2(Arch::Dip, n);
+        assert!(ratio(64) > ratio(8), "{} vs {}", ratio(64), ratio(8));
+        assert!(ratio(64) > 1.0, "Meissa must be larger than DiP at 64x64");
+    }
+}

@@ -1,0 +1,160 @@
+//! Closed-form analytical models for the WS and DiP arrays — the paper's
+//! eqs (1)–(7) — plus the derived comparison series behind Fig. 5.
+//!
+//! The cycle-accurate simulators in [`crate::arch`] are validated against
+//! these formulas (and vice versa) by unit + property tests: the models
+//! and the RTL-level simulation must agree cycle-for-cycle.
+
+pub mod compare;
+pub mod meissa;
+
+/// Which architecture a model describes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Arch {
+    /// Conventional weight-stationary (TPU-like) with skew FIFOs.
+    Ws,
+    /// Diagonal-input permutated weight-stationary (the paper).
+    Dip,
+}
+
+impl Arch {
+    pub fn name(self) -> &'static str {
+        match self {
+            Arch::Ws => "WS",
+            Arch::Dip => "DiP",
+        }
+    }
+}
+
+/// Latency in cycles to process one `N x N` input tile.
+///
+/// eq (1): WS = `3N + S - 3`;  eq (5): DiP = `2N + S - 2`.
+pub fn latency_cycles(arch: Arch, n: u64, s: u64) -> u64 {
+    match arch {
+        Arch::Ws => 3 * n + s - 3,
+        Arch::Dip => 2 * n + s - 2,
+    }
+}
+
+/// Throughput in operations/cycle for one tile: `2 N^3 / latency`.
+///
+/// eq (2) for WS, eq (6) for DiP.
+pub fn throughput_ops_per_cycle(arch: Arch, n: u64, s: u64) -> f64 {
+    (2 * n * n * n) as f64 / latency_cycles(arch, n, s) as f64
+}
+
+/// Time to full PE utilization in cycles.
+///
+/// eq (4): WS = `2N - 1`;  eq (7): DiP = `N`.
+pub fn tfpu_cycles(arch: Arch, n: u64) -> u64 {
+    match arch {
+        Arch::Ws => 2 * n - 1,
+        Arch::Dip => n,
+    }
+}
+
+/// Synchronization-register overhead (register *count*), eq (3):
+/// WS = `N (N - 1)` (two triangular FIFO groups of `N(N-1)/2`);
+/// DiP = 0 (the architectural claim).
+pub fn sync_register_overhead(arch: Arch, n: u64) -> u64 {
+    match arch {
+        Arch::Ws => n * (n - 1),
+        Arch::Dip => 0,
+    }
+}
+
+/// Synchronization-register overhead *normalized to 8-bit* units
+/// (Fig. 5c's accounting): the WS input group holds 8-bit inputs (1
+/// unit each), the output group holds 16-bit psums (2 units each).
+pub fn sync_register_overhead_8bit(arch: Arch, n: u64) -> u64 {
+    match arch {
+        Arch::Ws => n * (n - 1) / 2 + 2 * (n * (n - 1) / 2),
+        Arch::Dip => 0,
+    }
+}
+
+/// Internal PE registers normalized to 8-bit units, per the paper's PE
+/// (§III.A): weight 8 b (1) + input 8 b (1) + multiplier 16 b (2) +
+/// adder 16 b (2) = 6 units per PE. Identical for WS and DiP.
+pub fn pe_internal_registers_8bit(n: u64) -> u64 {
+    6 * n * n
+}
+
+/// Total registers normalized to 8-bit (PE-internal + synchronization)
+/// — the quantity plotted in Fig. 5(c).
+pub fn total_registers_8bit(arch: Arch, n: u64) -> u64 {
+    pe_internal_registers_8bit(n) + sync_register_overhead_8bit(arch, n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_eq1_eq5_spot_values() {
+        // Paper §III.C: DiP takes 2N-1 cycles at S=1 and 2N at S=2.
+        assert_eq!(latency_cycles(Arch::Dip, 3, 1), 5);
+        assert_eq!(latency_cycles(Arch::Dip, 3, 2), 6);
+        assert_eq!(latency_cycles(Arch::Ws, 3, 1), 7);
+        assert_eq!(latency_cycles(Arch::Ws, 64, 2), 191);
+        assert_eq!(latency_cycles(Arch::Dip, 64, 2), 128);
+    }
+
+    #[test]
+    fn latency_savings_match_fig5a_endpoints() {
+        // Fig 5(a): saved latency 28% at 3x3 rising to 33% at 64x64.
+        // NOTE: the paper's 28% endpoint is only consistent with S=1
+        // ((7-5)/7 = 28.6%) while its Fig 5(b) endpoints imply S=2 —
+        // we match each figure with the S its numbers imply.
+        let sav = |n| {
+            let w = latency_cycles(Arch::Ws, n, 1) as f64;
+            let d = latency_cycles(Arch::Dip, n, 1) as f64;
+            (w - d) / w * 100.0
+        };
+        assert!((sav(3) - 28.0).abs() < 1.0, "3x3 -> {}", sav(3));
+        assert!((sav(64) - 33.0).abs() < 1.0, "64x64 -> {}", sav(64));
+    }
+
+    #[test]
+    fn throughput_improvement_matches_fig5b_endpoints() {
+        // Fig 5(b): improvement 33.3% at 3x3 to 49.2% at 64x64 (S=2).
+        let imp = |n| {
+            (throughput_ops_per_cycle(Arch::Dip, n, 2)
+                / throughput_ops_per_cycle(Arch::Ws, n, 2)
+                - 1.0)
+                * 100.0
+        };
+        assert!((imp(3) - 33.3).abs() < 0.5, "3x3 -> {}", imp(3));
+        assert!((imp(64) - 49.2).abs() < 0.5, "64x64 -> {}", imp(64));
+    }
+
+    #[test]
+    fn tfpu_improvement_is_about_half() {
+        for n in [3u64, 8, 64] {
+            assert_eq!(tfpu_cycles(Arch::Ws, n), 2 * n - 1);
+            assert_eq!(tfpu_cycles(Arch::Dip, n), n);
+        }
+    }
+
+    #[test]
+    fn register_overhead_eq3() {
+        assert_eq!(sync_register_overhead(Arch::Ws, 64), 64 * 63);
+        assert_eq!(sync_register_overhead(Arch::Dip, 64), 0);
+    }
+
+    #[test]
+    fn register_savings_match_fig5c_64x64() {
+        // Fig 5(c): ~20% of total registers saved at 64x64.
+        let n = 64;
+        let ws = total_registers_8bit(Arch::Ws, n) as f64;
+        let dip = total_registers_8bit(Arch::Dip, n) as f64;
+        let saved = (ws - dip) / ws * 100.0;
+        assert!((saved - 20.0).abs() < 1.0, "saved={saved}");
+    }
+
+    #[test]
+    fn throughput_peaks_at_n_cubed_scale() {
+        // 64x64 DiP @ S=2: 2*64^3/128 = 4096 ops/cycle = 2 ops/PE/cycle.
+        assert_eq!(throughput_ops_per_cycle(Arch::Dip, 64, 2), 4096.0);
+    }
+}

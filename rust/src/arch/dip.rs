@@ -1,0 +1,504 @@
+//! Cycle-accurate **DiP** systolic array — the paper's contribution
+//! (§III, Fig. 2/4).
+//!
+//! * Weights are permutated offline (Fig. 3: column `i` rotated up by
+//!   `i`) and loaded stationary.
+//! * A full input row enters PE row 0 *in parallel* each cycle — no
+//!   input skew FIFOs.
+//! * The diagonal interconnect rotates the row left by one as it moves
+//!   to the next PE row: input of `PE(r, c)` comes from
+//!   `PE(r-1, (c+1) mod N)` (boundary PEs wrap: leftmost column feeds
+//!   the rightmost column of the next row).
+//! * Output rows emerge from the bottom PE row already aligned — no
+//!   output de-skew FIFOs.
+//!
+//! Timing contract (validated by tests + proptest against eqs (5)–(7)):
+//! a single `N x N` tile completes in `2N + S - 2` cycles and TFPU under
+//! streaming is `N` cycles. Synchronization register overhead: zero.
+
+use super::fifo::ShiftFifo;
+use super::permute::permute;
+use super::{weight_load_reg8_writes, SystolicArray, TileRun};
+use crate::matrix::Mat;
+use crate::sim::stats::{EventCounts, RunStats};
+use crate::sim::trace::{CycleSnapshot, Trace};
+
+const INVALID: i32 = -1;
+
+/// Cycle-accurate DiP array simulator.
+pub struct DipArray {
+    n: usize,
+    mac_stages: u64,
+    /// Stationary *permutated* weights, row-major.
+    weights: Vec<i32>,
+    x_val: Vec<i32>,
+    x_row: Vec<i32>,
+    ps_val: Vec<i32>,
+    ps_row: Vec<i32>,
+    weights_loaded: bool,
+}
+
+impl DipArray {
+    /// Create an `n x n` DiP array with an `s`-stage pipelined MAC.
+    pub fn new(n: usize, mac_stages: u64) -> Self {
+        assert!(n >= 1, "array must be at least 1x1");
+        assert!(mac_stages >= 1, "MAC needs at least one stage");
+        Self {
+            n,
+            mac_stages,
+            weights: vec![0; n * n],
+            x_val: vec![0; n * n],
+            x_row: vec![INVALID; n * n],
+            ps_val: vec![0; n * n],
+            ps_row: vec![INVALID; n * n],
+            weights_loaded: false,
+        }
+    }
+
+    /// DiP eliminates both FIFO groups entirely (§III.C).
+    pub fn sync_register_count(&self) -> u64 {
+        0
+    }
+
+    fn reset_state(&mut self) {
+        self.x_row.fill(INVALID);
+        self.ps_row.fill(INVALID);
+        self.x_val.fill(0);
+        self.ps_val.fill(0);
+    }
+
+    /// Fast path: identical cycle/event/output semantics to
+    /// [`run_inner`](Self::run_inner), derived from the wavefront
+    /// structure instead of simulating registers:
+    ///
+    /// * input of `PE(r, c)` at cycle `t` is `X[t-r][(c+r) mod N]`
+    ///   (row `t-r` entered row 0 at cycle `t-r` and has been rotated
+    ///   left `r` times by the diagonal interconnect),
+    /// * so each cycle updates a contiguous band of PE rows with one
+    ///   rotated input row each — two `copy_from_slice` + one
+    ///   multiply-accumulate loop per row, no per-PE branching.
+    ///
+    /// Equivalence with the register-transfer path is asserted by the
+    /// `fast_matches_register_transfer_path` test (outputs, cycles,
+    /// TFPU, and every event counter, bit-exact).
+    fn run_fast(&mut self, x: &Mat<i8>) -> TileRun {
+        assert!(self.weights_loaded, "load_weights before run_tile");
+        assert_eq!(x.cols(), self.n, "input tile must be R x N");
+        let n = self.n;
+        let rows = x.rows();
+        let s = self.mac_stages;
+
+        let mut outputs = Mat::<i32>::zeros(rows, n);
+        // psum registers, updated bottom-up so row r-1 is previous-cycle.
+        self.ps_val.fill(0);
+        // Pre-widened rotated input row: keeping the widening (i8->i32)
+        // in a separate pass lets the MAC loop autovectorize over pure
+        // i32 lanes — measured ~10% faster at n=64 than widening inline.
+        let mut xrot: Vec<i32> = vec![0; n];
+
+        // Active compute happens on cycles t = 0 .. rows+n-2 (row m is
+        // in PE row r at cycle m+r); the S-1 drain only delays output.
+        for t in 0..rows + n - 1 {
+            let r_lo = t.saturating_sub(rows - 1);
+            let r_hi = (t).min(n - 1);
+            let mut r = r_hi + 1;
+            while r > r_lo {
+                r -= 1;
+                let m = t - r; // input row in PE row r this cycle
+                let xs = x.row(m);
+                // Rotate left by r: xrot[c] = x[m][(c + r) mod n] —
+                // two contiguous widening copies.
+                let k = r % n;
+                for c in 0..n - k {
+                    xrot[c] = xs[c + k] as i32;
+                }
+                for c in n - k..n {
+                    xrot[c] = xs[c + k - n] as i32;
+                }
+                let base = r * n;
+                if r == 0 {
+                    for c in 0..n {
+                        self.ps_val[c] = self.weights[c] * xrot[c];
+                    }
+                } else {
+                    let (above, cur) = self.ps_val.split_at_mut(base);
+                    let above = &above[base - n..];
+                    for c in 0..n {
+                        cur[c] = above[c] + self.weights[base + c] * xrot[c];
+                    }
+                }
+                if r == n - 1 {
+                    // Output row m is complete (the drain shifts timing
+                    // only); copy out directly.
+                    outputs.as_mut_slice()[m * n..(m + 1) * n]
+                        .copy_from_slice(&self.ps_val[base..base + n]);
+                }
+            }
+        }
+
+        // Closed-form cycle/TFPU/event accounting — exactly what the
+        // register-transfer path counts (see its unit tests).
+        let cycles = rows as u64 + n as u64 + s - 2;
+        let active = (rows * n * n) as u64;
+        let ev = EventCounts {
+            mac_ops: active,
+            reg8_writes: active,
+            reg16_writes: 2 * active + (rows * n) as u64 * (s - 1),
+            fifo8_writes: 0,
+            fifo16_writes: 0,
+            pe_active_cycles: active,
+            pe_idle_cycles: cycles * (n * n) as u64 - active,
+        };
+        let stats = RunStats {
+            cycles,
+            weight_load_cycles: 0,
+            tfpu_cycles: if rows >= n { n as u64 } else { 0 },
+            total_ops: 2 * active,
+            events: ev,
+        };
+        TileRun { outputs, stats }
+    }
+
+    fn run_inner(&mut self, x: &Mat<i8>, mut trace: Option<&mut Trace>) -> TileRun {
+        assert!(self.weights_loaded, "load_weights before run_tile");
+        assert_eq!(x.cols(), self.n, "input tile must be R x N");
+        let n = self.n;
+        let rows = x.rows();
+        let s_extra = (self.mac_stages - 1) as usize;
+
+        let mut ev = EventCounts::default();
+        let mut outputs = Mat::<i32>::zeros(rows, n);
+        let mut collected = 0usize;
+        let total_outputs = rows * n;
+
+        self.reset_state();
+        let mut drain: Vec<ShiftFifo<(i32, i32)>> =
+            (0..n).map(|_| ShiftFifo::new(s_extra)).collect();
+        let mut pushed_row: Vec<i32> = vec![INVALID; n];
+        // Scratch for the previous row's input registers (pre-update).
+        let mut prev_x_val: Vec<i32> = vec![0; n];
+        let mut prev_x_row: Vec<i32> = vec![INVALID; n];
+
+        let mut tfpu: u64 = 0;
+        let mut cycle: u64 = 0;
+        let deadline = (rows as u64) + (2 * n as u64) + self.mac_stages + 4;
+
+        while collected < total_outputs {
+            assert!(cycle <= deadline, "DiP sim did not converge (bug)");
+            let t = cycle as usize;
+
+            // Two-phase update, rows bottom-up: row r reads row r-1's
+            // *previous-cycle* registers via the diagonal interconnect.
+            let mut active_this_cycle = 0u64;
+            for r in (0..n).rev() {
+                if r > 0 {
+                    let base = (r - 1) * n;
+                    prev_x_val.copy_from_slice(&self.x_val[base..base + n]);
+                    prev_x_row.copy_from_slice(&self.x_row[base..base + n]);
+                }
+                for c in 0..n {
+                    let idx = r * n + c;
+                    let (nx_val, nx_row) = if r == 0 {
+                        if t < rows {
+                            (x.get(t, c) as i32, t as i32)
+                        } else {
+                            (0, INVALID)
+                        }
+                    } else {
+                        // Diagonal: PE(r,c) <- PE(r-1, (c+1) mod N).
+                        let src = (c + 1) % n;
+                        (prev_x_val[src], prev_x_row[src])
+                    };
+                    if nx_row != INVALID {
+                        let psum_above = if r == 0 { 0 } else { self.ps_val[idx - n] };
+                        self.x_val[idx] = nx_val;
+                        self.x_row[idx] = nx_row;
+                        self.ps_val[idx] = psum_above + self.weights[idx] * nx_val;
+                        self.ps_row[idx] = nx_row;
+                        ev.reg8_writes += 1;
+                        ev.reg16_writes += 2;
+                        ev.mac_ops += 1;
+                        ev.pe_active_cycles += 1;
+                        active_this_cycle += 1;
+                    } else {
+                        self.x_row[idx] = INVALID;
+                        ev.pe_idle_cycles += 1;
+                    }
+                }
+            }
+            if tfpu == 0 && active_this_cycle == (n * n) as u64 {
+                tfpu = cycle + 1;
+            }
+
+            // Bottom-row psums -> (S-1) MAC drain -> direct row-aligned
+            // collection. No output FIFOs (the DiP claim).
+            let mut emitted: Option<Vec<i32>> = None;
+            for c in 0..n {
+                let idx = (n - 1) * n + c;
+                let fresh = self.ps_row[idx] != INVALID && self.ps_row[idx] != pushed_row[c];
+                let entrant = fresh.then(|| {
+                    pushed_row[c] = self.ps_row[idx];
+                    (self.ps_val[idx], self.ps_row[idx])
+                });
+                if let Some((v, m)) = drain[c].shift(entrant) {
+                    outputs.set(m as usize, c, v);
+                    collected += 1;
+                    if trace.is_some() {
+                        emitted.get_or_insert_with(|| vec![0; n])[c] = v;
+                    }
+                }
+            }
+
+            if let Some(tr) = trace.as_deref_mut() {
+                tr.record(CycleSnapshot {
+                    cycle,
+                    x_regs: self
+                        .x_val
+                        .iter()
+                        .zip(&self.x_row)
+                        .map(|(&v, &r)| if r == INVALID { 0 } else { v })
+                        .collect(),
+                    psum_regs: self.ps_val.clone(),
+                    output_row: emitted,
+                });
+            }
+            cycle += 1;
+        }
+
+        ev.reg16_writes += drain.iter().map(|d| d.writes()).sum::<u64>();
+
+        let stats = RunStats {
+            cycles: cycle,
+            weight_load_cycles: 0,
+            tfpu_cycles: tfpu,
+            total_ops: 2 * ev.mac_ops,
+            events: ev,
+        };
+        TileRun { outputs, stats }
+    }
+}
+
+impl SystolicArray for DipArray {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn mac_stages(&self) -> u64 {
+        self.mac_stages
+    }
+
+    /// DiP permutates then loads row-by-row. The last weight row's load
+    /// overlaps the first input row (paper Fig. 4, Cycle 0), so the
+    /// dedicated load phase is `N - 1` cycles.
+    fn load_weights(&mut self, w: &Mat<i8>) -> u64 {
+        assert_eq!((w.rows(), w.cols()), (self.n, self.n), "weight tile must be N x N");
+        let wp = permute(w);
+        for r in 0..self.n {
+            for c in 0..self.n {
+                self.weights[r * self.n + c] = wp.get(r, c) as i32;
+            }
+        }
+        self.weights_loaded = true;
+        (self.n as u64).saturating_sub(1)
+    }
+
+    fn run_tile(&mut self, x: &Mat<i8>) -> TileRun {
+        let mut run = self.run_fast(x);
+        run.stats.events.reg8_writes += weight_load_reg8_writes(self.n as u64);
+        run.stats.weight_load_cycles = (self.n as u64).saturating_sub(1);
+        run
+    }
+
+    fn run_tile_traced(&mut self, x: &Mat<i8>) -> (TileRun, Trace) {
+        let mut trace = Trace::new(self.n);
+        let mut run = self.run_inner(x, Some(&mut trace));
+        run.stats.events.reg8_writes += weight_load_reg8_writes(self.n as u64);
+        run.stats.weight_load_cycles = (self.n as u64).saturating_sub(1);
+        (run, trace)
+    }
+
+    fn name(&self) -> &'static str {
+        "DiP"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::random_i8;
+
+    fn run(n: usize, s: u64, rows: usize, seed: u64) -> (Mat<i32>, RunStats, Mat<i32>) {
+        let w = random_i8(n, n, seed);
+        let x = random_i8(rows, n, seed + 1);
+        let mut arr = DipArray::new(n, s);
+        arr.load_weights(&w);
+        let run = arr.run_tile(&x);
+        let expect = x.widen().matmul(&w.widen());
+        (run.outputs, run.stats, expect)
+    }
+
+    #[test]
+    fn computes_matmul_3x3() {
+        let (got, _, want) = run(3, 1, 3, 11);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn computes_matmul_various() {
+        for (n, s, rows, seed) in
+            [(2, 1, 2, 1u64), (4, 1, 4, 2), (4, 2, 9, 3), (8, 2, 8, 4), (16, 1, 5, 5), (3, 2, 1, 6)]
+        {
+            let (got, _, want) = run(n, s, rows, seed);
+            assert_eq!(got, want, "n={n} s={s} rows={rows}");
+        }
+    }
+
+    #[test]
+    fn latency_matches_eq5_single_tile() {
+        // eq (5): 2N + S - 2 for an N x N input tile.
+        for (n, s) in [(3usize, 1u64), (3, 2), (4, 1), (8, 2), (16, 1), (16, 2), (32, 2)] {
+            let (_, stats, _) = run(n, s, n, 7);
+            assert_eq!(stats.cycles, (2 * n) as u64 + s - 2, "n={n} s={s}");
+        }
+    }
+
+    #[test]
+    fn tfpu_matches_eq7_under_streaming() {
+        // eq (7): N cycles to full utilization — half of WS.
+        for n in [3usize, 4, 8, 16] {
+            let (_, stats, _) = run(n, 2, 4 * n, 9);
+            assert_eq!(stats.tfpu_cycles, n as u64, "n={n}");
+        }
+    }
+
+    #[test]
+    fn single_tile_reaches_full_utilization() {
+        // Unlike WS, DiP fully utilizes the array even for one tile.
+        let (_, stats, _) = run(8, 1, 8, 21);
+        assert_eq!(stats.tfpu_cycles, 8);
+    }
+
+    #[test]
+    fn no_fifo_events_at_all() {
+        let (_, stats, _) = run(8, 2, 16, 13);
+        assert_eq!(stats.events.fifo8_writes, 0);
+        assert_eq!(stats.events.fifo16_writes, 0);
+        assert_eq!(DipArray::new(8, 2).sync_register_count(), 0);
+    }
+
+    #[test]
+    fn marginal_row_costs_one_cycle() {
+        let (_, s1, _) = run(8, 2, 8, 13);
+        let (_, s2, _) = run(8, 2, 9, 13);
+        assert_eq!(s2.cycles, s1.cycles + 1);
+    }
+
+    #[test]
+    fn mac_count_exact() {
+        let (_, stats, _) = run(4, 2, 6, 17);
+        assert_eq!(stats.events.mac_ops, 6 * 16);
+    }
+
+    #[test]
+    fn latency_beats_ws_by_paper_margin() {
+        // Fig 5(a): saved latency (WS - DiP)/WS from ~28% (3x3) to ~33%
+        // (64x64); S=2 yields 25% at the 3x3 end (see analytical tests).
+        use crate::arch::ws::WsArray;
+        for n in [3usize, 8, 16, 32] {
+            let w = random_i8(n, n, 3);
+            let x = random_i8(n, n, 4);
+            let mut dip = DipArray::new(n, 2);
+            let mut ws = WsArray::new(n, 2);
+            dip.load_weights(&w);
+            ws.load_weights(&w);
+            let (dc, wc) =
+                (dip.run_tile(&x).stats.cycles, ws.run_tile(&x).stats.cycles);
+            let saved = (wc - dc) as f64 / wc as f64;
+            assert!(saved >= 0.24 && saved < 0.36, "n={n} saved={saved}");
+        }
+    }
+
+    #[test]
+    fn identity_weights_pass_inputs() {
+        let n = 4;
+        let eye = Mat::from_fn(n, n, |r, c| (r == c) as i8);
+        let x = random_i8(n, n, 23);
+        let mut arr = DipArray::new(n, 2);
+        arr.load_weights(&eye);
+        assert_eq!(arr.run_tile(&x).outputs, x.widen());
+    }
+
+    #[test]
+    fn fig4_walkthrough_cycle_by_cycle() {
+        // Paper Fig. 4: W = [[a,d,g],[b,e,h],[c,f,i]] (so the loaded,
+        // permutated matrix is [[a,e,i],[b,f,g],[c,d,h]]),
+        // X = [[1,2,3],[4,5,6],[7,8,9]], S=1.
+        let (a, b, c, d, e, f, g, h, i) =
+            (1i32, 2, 3, 4, 5, 6, 7, 8, 9);
+        let w = Mat::from_vec(3, 3, vec![1i8, 4, 7, 2, 5, 8, 3, 6, 9]);
+        let x = Mat::from_vec(3, 3, vec![1i8, 2, 3, 4, 5, 6, 7, 8, 9]);
+        let mut arr = DipArray::new(3, 1);
+        arr.load_weights(&w);
+        let (run, trace) = arr.run_tile_traced(&x);
+
+        // Cycle 0: first input row (1,2,3) into row 0; psums (1a,2e,3i).
+        let s0 = &trace.snapshots[0];
+        assert_eq!(&s0.x_regs[0..3], &[1, 2, 3]);
+        assert_eq!(&s0.psum_regs[0..3], &[a, 2 * e, 3 * i]);
+
+        // Cycle 1: row (1,2,3) permutated to (2,3,1) into row 1; psums
+        // (1a+2b, 2e+3f, 3i+1g) per the paper's Cycle-2 narration.
+        let s1 = &trace.snapshots[1];
+        assert_eq!(&s1.x_regs[3..6], &[2, 3, 1]);
+        assert_eq!(&s1.psum_regs[3..6], &[a + 2 * b, 2 * e + 3 * f, 3 * i + g]);
+
+        // Cycle 2: row permutated to (3,1,2) into row 2; first output row
+        // psums complete: (1a+2b+3c, 2e+3f+1d, 3i+1g+2h).
+        let s2 = &trace.snapshots[2];
+        assert_eq!(&s2.x_regs[6..9], &[3, 1, 2]);
+        assert_eq!(
+            &s2.psum_regs[6..9],
+            &[a + 2 * b + 3 * c, 2 * e + 3 * f + d, 3 * i + g + 2 * h]
+        );
+        assert_eq!(
+            s2.output_row.as_deref(),
+            Some(&[a + 2 * b + 3 * c, 2 * e + 3 * f + d, 3 * i + g + 2 * h][..])
+        );
+
+        // Latency: 2N + S - 2 = 5 cycles (paper: Cycle 1..Cycle 5).
+        assert_eq!(run.stats.cycles, 5);
+        // Output equals X @ W.
+        assert_eq!(run.outputs, x.widen().matmul(&w.widen()));
+    }
+
+    #[test]
+    #[should_panic(expected = "load_weights")]
+    fn run_without_weights_panics() {
+        DipArray::new(2, 1).run_tile(&random_i8(2, 2, 1));
+    }
+
+    #[test]
+    fn fast_matches_register_transfer_path() {
+        // The optimized wavefront path must be bit-identical to the
+        // register-transfer simulation in every observable: outputs,
+        // cycles, TFPU, and each event counter.
+        for (n, s, rows, seed) in [
+            (1usize, 1u64, 1usize, 1u64),
+            (2, 1, 5, 2),
+            (3, 2, 3, 3),
+            (8, 2, 8, 4),
+            (8, 1, 20, 5),
+            (16, 2, 7, 6),
+            (16, 2, 64, 7),
+        ] {
+            let w = random_i8(n, n, seed);
+            let x = random_i8(rows, n, seed + 100);
+            let mut arr = DipArray::new(n, s);
+            arr.load_weights(&w);
+            let fast = arr.run_tile(&x);
+            let (slow, _) = arr.run_tile_traced(&x);
+            assert_eq!(fast.outputs, slow.outputs, "n={n} s={s} rows={rows}");
+            assert_eq!(fast.stats, slow.stats, "n={n} s={s} rows={rows}");
+        }
+    }
+}

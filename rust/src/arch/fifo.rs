@@ -1,0 +1,172 @@
+//! Shift-register skew FIFO model (paper Fig. 1).
+//!
+//! The conventional WS array needs two triangular FIFO groups:
+//! * input group — depths 1..N-1 (row r delayed by r cycles) so the
+//!   input wavefront arrives diagonally;
+//! * output group — depths N-1..1 (column c delayed by N-1-c cycles) so
+//!   the skewed output wavefront re-aligns into rows.
+//!
+//! These are *shift registers*: every stored element moves every cycle,
+//! so a depth-d FIFO costs d register writes per cycle while occupied.
+//! That switching activity — counted here — is exactly the overhead DiP
+//! eliminates.
+
+/// One fixed-depth shift-register FIFO.
+#[derive(Debug, Clone)]
+pub struct ShiftFifo<T> {
+    slots: Vec<Option<T>>,
+    /// Total slot-writes performed (for the energy model).
+    writes: u64,
+}
+
+impl<T: Copy> ShiftFifo<T> {
+    /// Depth-0 FIFOs are legal (row 0 / last column have none) and act
+    /// as wires.
+    pub fn new(depth: usize) -> Self {
+        Self { slots: vec![None; depth], writes: 0 }
+    }
+
+    pub fn depth(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Advance one cycle: push `input` in, return the element falling
+    /// out. Depth-0 passes the input straight through.
+    pub fn shift(&mut self, input: Option<T>) -> Option<T> {
+        if self.slots.is_empty() {
+            return input;
+        }
+        let out = self.slots[self.slots.len() - 1];
+        // Every occupied slot (plus the new entrant) is re-written each
+        // cycle — shift-register semantics.
+        for i in (1..self.slots.len()).rev() {
+            self.slots[i] = self.slots[i - 1];
+            if self.slots[i].is_some() {
+                self.writes += 1;
+            }
+        }
+        self.slots[0] = input;
+        if input.is_some() {
+            self.writes += 1;
+        }
+        out
+    }
+
+    /// Total slot writes so far.
+    pub fn writes(&self) -> u64 {
+        self.writes
+    }
+
+    /// True if no valid element is in flight.
+    pub fn is_empty(&self) -> bool {
+        self.slots.iter().all(|s| s.is_none())
+    }
+}
+
+/// A triangular FIFO group: `depths[i]` gives each lane's depth.
+#[derive(Debug, Clone)]
+pub struct FifoGroup<T> {
+    lanes: Vec<ShiftFifo<T>>,
+}
+
+impl<T: Copy> FifoGroup<T> {
+    /// Input-side group for an N-lane array: lane r has depth r.
+    pub fn input_skew(n: usize) -> Self {
+        Self { lanes: (0..n).map(ShiftFifo::new).collect() }
+    }
+
+    /// Output-side group: lane c has depth N-1-c.
+    pub fn output_deskew(n: usize) -> Self {
+        Self { lanes: (0..n).map(|c| ShiftFifo::new(n - 1 - c)).collect() }
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Shift every lane one cycle.
+    pub fn shift_all(&mut self, inputs: &[Option<T>], outputs: &mut Vec<Option<T>>) {
+        outputs.clear();
+        for (lane, inp) in self.lanes.iter_mut().zip(inputs.iter()) {
+            outputs.push(lane.shift(*inp));
+        }
+    }
+
+    /// Register count of the whole group (= sum of depths = N(N-1)/2).
+    pub fn register_count(&self) -> u64 {
+        self.lanes.iter().map(|l| l.depth() as u64).sum()
+    }
+
+    pub fn total_writes(&self) -> u64 {
+        self.lanes.iter().map(|l| l.writes()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lanes.iter().all(|l| l.is_empty())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn depth_zero_is_wire() {
+        let mut f = ShiftFifo::new(0);
+        assert_eq!(f.shift(Some(7)), Some(7));
+        assert_eq!(f.writes(), 0);
+    }
+
+    #[test]
+    fn depth_two_delays_two_cycles() {
+        let mut f = ShiftFifo::new(2);
+        assert_eq!(f.shift(Some(1)), None);
+        assert_eq!(f.shift(Some(2)), None);
+        assert_eq!(f.shift(Some(3)), Some(1));
+        assert_eq!(f.shift(None), Some(2));
+        assert_eq!(f.shift(None), Some(3));
+        assert!(f.is_empty());
+    }
+
+    #[test]
+    fn writes_counted_per_occupied_slot() {
+        let mut f = ShiftFifo::new(3);
+        f.shift(Some(1)); // 1 write (entrant)
+        f.shift(Some(2)); // entrant + 1 shift = 2
+        f.shift(Some(3)); // entrant + 2 shifts = 3
+        assert_eq!(f.writes(), 6);
+    }
+
+    #[test]
+    fn group_register_counts_match_eq3() {
+        // Each group holds N(N-1)/2 registers (paper §II.A).
+        for n in [3usize, 4, 8, 16, 64] {
+            let g: FifoGroup<i32> = FifoGroup::input_skew(n);
+            assert_eq!(g.register_count(), (n * (n - 1) / 2) as u64);
+            let o: FifoGroup<i32> = FifoGroup::output_deskew(n);
+            assert_eq!(o.register_count(), (n * (n - 1) / 2) as u64);
+        }
+    }
+
+    #[test]
+    fn input_skew_delays_by_lane_index() {
+        let n = 4;
+        let mut g: FifoGroup<i32> = FifoGroup::input_skew(n);
+        let mut out = Vec::new();
+        // Present value 42 on all lanes at cycle 0, then nothing.
+        let first: Vec<Option<i32>> = vec![Some(42); n];
+        let none: Vec<Option<i32>> = vec![None; n];
+        let mut arrival = vec![None; n];
+        for cycle in 0..n + 1 {
+            let inp = if cycle == 0 { &first } else { &none };
+            g.shift_all(inp, &mut out);
+            for (lane, v) in out.iter().enumerate() {
+                if v.is_some() && arrival[lane].is_none() {
+                    arrival[lane] = Some(cycle);
+                }
+            }
+        }
+        // Lane r emerges at cycle r.
+        assert_eq!(arrival, (0..n).map(Some).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,71 @@
+//! Architectural substrate: the PE micro-model, the skew-FIFO model, the
+//! weight permutation, and the two cycle-accurate arrays (conventional
+//! weight-stationary `ws` and the proposed `dip`).
+
+pub mod dip;
+pub mod fifo;
+pub mod os;
+pub mod pe;
+pub mod permute;
+pub mod sparsity;
+pub mod ws;
+
+use crate::matrix::Mat;
+use crate::sim::stats::RunStats;
+use crate::sim::trace::Trace;
+
+/// Result of streaming one input tile through a loaded array.
+#[derive(Debug, Clone)]
+pub struct TileRun {
+    /// Output matrix, rows in input-row order: `outputs[m] = X[m] @ W`.
+    pub outputs: Mat<i32>,
+    /// Cycle counts + switching events for this pass.
+    pub stats: RunStats,
+}
+
+/// Common interface of the two cycle-accurate simulators.
+///
+/// Usage: `load_weights` once per stationary tile, then `run_tile` for
+/// each streamed input tile (the paper's §IV.C methodology: "every tile
+/// of M2 is loaded once and remains stationary ... tiles from M1 are
+/// iteratively loaded").
+pub trait SystolicArray {
+    /// Array edge N (the array is N x N PEs).
+    fn n(&self) -> usize;
+
+    /// MAC pipeline stages S (1 or 2 in the paper).
+    fn mac_stages(&self) -> u64;
+
+    /// Load (and for DiP, permute) a stationary N x N weight tile.
+    /// Returns the number of weight-load cycles consumed.
+    fn load_weights(&mut self, w: &Mat<i8>) -> u64;
+
+    /// Stream an R x N input tile through the loaded weights, returning
+    /// outputs and cycle/event statistics. `R` is arbitrary (>= 1).
+    fn run_tile(&mut self, x: &Mat<i8>) -> TileRun;
+
+    /// Like [`run_tile`](Self::run_tile) but capturing a per-cycle trace
+    /// (small arrays only; used by the Fig. 4 walkthrough).
+    fn run_tile_traced(&mut self, x: &Mat<i8>) -> (TileRun, Trace);
+
+    /// Architecture name for reports ("WS" / "DiP").
+    fn name(&self) -> &'static str;
+}
+
+/// Count of weight-register writes for the row-shifting load scheme both
+/// arrays share: the row destined for PE row `r` is written `r + 1`
+/// times (once per row it traverses), so the total is
+/// `N * (1 + 2 + ... + N) = N^2 (N+1) / 2` 8-bit writes.
+pub fn weight_load_reg8_writes(n: u64) -> u64 {
+    n * n * (n + 1) / 2
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn weight_load_writes_formula() {
+        // N=3: rows traverse 1+2+3 rows, x3 elements per row = 18.
+        assert_eq!(super::weight_load_reg8_writes(3), 18);
+        assert_eq!(super::weight_load_reg8_writes(64), 64 * 64 * 65 / 2);
+    }
+}

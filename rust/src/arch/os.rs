@@ -1,0 +1,237 @@
+//! Cycle-accurate **output-stationary** (OS) systolic array — the third
+//! §II dataflow, built as a comparator for the dataflow ablation.
+//!
+//! In OS, *both* operand matrices stream (inputs from the left, weights
+//! from the top, each skewed by its lane index) while psums accumulate
+//! in place: `PE(i, j)` computes `out[i][j] = Σ_k A[i][k] · B[k][j]`,
+//! consuming the pair `(A[i][k], B[k][j])` at cycle `t = k + i + j`.
+//! After the last contraction step, results shift out column-by-column.
+//!
+//! Consequences the paper cites (§II) and this model reproduces:
+//! * double operand bandwidth (two streams at once — see
+//!   `power::bandwidth`),
+//! * the array computes one `n x n` output tile per pass, so streaming
+//!   `R > n` input rows requires multiple passes (unlike WS/DiP, whose
+//!   stationary weights serve any R),
+//! * no synchronization FIFO *groups* are saved: both operand streams
+//!   need triangular skew FIFOs (input side) and the drain adds `n`
+//!   shift-out cycles.
+
+use super::{SystolicArray, TileRun};
+use crate::matrix::Mat;
+use crate::sim::stats::{EventCounts, RunStats};
+use crate::sim::trace::{CycleSnapshot, Trace};
+
+/// Cycle-accurate OS array (fast wavefront implementation).
+pub struct OsArray {
+    n: usize,
+    mac_stages: u64,
+    /// Streaming weight tile (contraction-major), staged by
+    /// `load_weights` — streamed, not stationary, but staged per tile
+    /// to share the `SystolicArray` interface.
+    weights: Vec<i32>,
+    ps_val: Vec<i32>,
+    weights_loaded: bool,
+}
+
+impl OsArray {
+    pub fn new(n: usize, mac_stages: u64) -> Self {
+        assert!(n >= 1);
+        assert!(mac_stages >= 1);
+        Self {
+            n,
+            mac_stages,
+            weights: vec![0; n * n],
+            ps_val: vec![0; n * n],
+            weights_loaded: false,
+        }
+    }
+
+    /// Both operand streams need a triangular skew group: `N(N-1)/2`
+    /// 8-bit registers each — same count as WS, but on *two* operand
+    /// paths instead of input+output.
+    pub fn sync_register_count(&self) -> u64 {
+        (self.n * (self.n - 1)) as u64
+    }
+
+    /// One accumulation pass over an `n x n` output tile with `R`
+    /// contraction steps: wavefront `t = k + i + j`, then `n`-cycle
+    /// column shift-out. Latency: `R + 2n - 2 + (S-1) + n`.
+    fn run_pass(&mut self, x: &Mat<i8>) -> TileRun {
+        assert!(self.weights_loaded, "load_weights before run_tile");
+        let n = self.n;
+        let depth = n; // contraction length of one pass (W is n x n)
+        assert_eq!((x.rows(), x.cols()), (n, n), "pass operates on an n x n block");
+
+        // out[i][j] = sum_k x[i][k] * w[k][j]: PE(i, j) consumes the
+        // operand pair at wavefront cycle t = k + i + j and accumulates
+        // in place.
+        self.ps_val.fill(0);
+        for i in 0..n {
+            let xi = x.row(i);
+            for j in 0..n {
+                let mut acc = 0i32;
+                for k in 0..depth {
+                    acc += xi[k] as i32 * self.weights[k * n + j];
+                }
+                self.ps_val[i * n + j] = acc;
+            }
+        }
+        let outputs = Mat::from_vec(n, n, self.ps_val.clone());
+
+        // Cycle accounting from the wavefront: last MAC at
+        // t = (depth-1) + (n-1) + (n-1); +S-1 MAC drain; +n shift-out.
+        let cycles = depth as u64 + 2 * (n as u64) - 2 + (self.mac_stages - 1) + n as u64;
+        let active = (depth * n * n) as u64;
+        let tri = (n * (n - 1) / 2) as u64;
+        let ev = EventCounts {
+            mac_ops: active,
+            // Two streamed 8-bit operands captured per active PE-cycle.
+            reg8_writes: 2 * active,
+            reg16_writes: 2 * active + (n * n) as u64 * (self.mac_stages - 1),
+            // Both operand skew groups are 8-bit.
+            fifo8_writes: 2 * depth as u64 * tri,
+            fifo16_writes: 0,
+            pe_active_cycles: active,
+            pe_idle_cycles: cycles * (n * n) as u64 - active,
+        };
+        let stats = RunStats {
+            cycles,
+            weight_load_cycles: 0,
+            tfpu_cycles: if depth >= 2 * n - 1 { 2 * n as u64 - 1 } else { 0 },
+            total_ops: 2 * active,
+            events: ev,
+        };
+        TileRun { outputs, stats }
+    }
+}
+
+impl SystolicArray for OsArray {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn mac_stages(&self) -> u64 {
+        self.mac_stages
+    }
+
+    /// Stage the streaming weight tile (no load cycles: weights stream
+    /// with the computation in OS).
+    fn load_weights(&mut self, w: &Mat<i8>) -> u64 {
+        assert_eq!((w.rows(), w.cols()), (self.n, self.n));
+        for r in 0..self.n {
+            for c in 0..self.n {
+                self.weights[r * self.n + c] = w.get(r, c) as i32;
+            }
+        }
+        self.weights_loaded = true;
+        0
+    }
+
+    /// Stream an `R x N` input tile. OS holds outputs stationary, so
+    /// `R` rows produce an `R x N` result over `ceil(R/n)` passes, each
+    /// paying the full fill + drain (the OS re-pass penalty WS/DiP avoid).
+    fn run_tile(&mut self, x: &Mat<i8>) -> TileRun {
+        let n = self.n;
+        let rows = x.rows();
+        let passes = rows.div_ceil(n);
+        let mut outputs = Mat::<i32>::zeros(rows, n);
+        let mut agg = RunStats::default();
+        for p in 0..passes {
+            let block = x.block(p * n, 0, n, n); // zero-padded
+            let run = self.run_pass(&block);
+            for r in 0..n.min(rows - p * n) {
+                for c in 0..n {
+                    outputs.set(p * n + r, c, run.outputs.get(r, c));
+                }
+            }
+            agg.chain(&run.stats);
+        }
+        TileRun { outputs, stats: agg }
+    }
+
+    fn run_tile_traced(&mut self, x: &Mat<i8>) -> (TileRun, Trace) {
+        // OS tracing captures the final accumulator state per pass
+        // (per-cycle register traces are a WS/DiP walkthrough feature).
+        let run = self.run_tile(x);
+        let mut trace = Trace::new(self.n);
+        trace.record(CycleSnapshot {
+            cycle: run.stats.cycles,
+            x_regs: vec![0; self.n * self.n],
+            psum_regs: self.ps_val.clone(),
+            output_row: None,
+        });
+        (run, trace)
+    }
+
+    fn name(&self) -> &'static str {
+        "OS"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::dip::DipArray;
+    use crate::matrix::random_i8;
+
+    fn run(n: usize, s: u64, rows: usize, seed: u64) -> (Mat<i32>, RunStats, Mat<i32>) {
+        let w = random_i8(n, n, seed);
+        let x = random_i8(rows, n, seed + 1);
+        let mut arr = OsArray::new(n, s);
+        arr.load_weights(&w);
+        let r = arr.run_tile(&x);
+        (r.outputs, r.stats, x.widen().matmul(&w.widen()))
+    }
+
+    #[test]
+    fn computes_matmul() {
+        for (n, s, rows, seed) in [(3usize, 1u64, 3usize, 1u64), (8, 2, 8, 2), (8, 2, 20, 3), (16, 2, 5, 4)] {
+            let (got, _, want) = run(n, s, rows, seed);
+            assert_eq!(got, want, "n={n} s={s} rows={rows}");
+        }
+    }
+
+    #[test]
+    fn single_pass_latency_formula() {
+        // R = n: one pass of depth n -> n + 2n - 2 + (S-1) + n cycles.
+        for (n, s) in [(4usize, 1u64), (8, 2), (16, 2)] {
+            let (_, stats, _) = run(n, s, n, 5);
+            assert_eq!(stats.cycles, (4 * n) as u64 - 2 + (s - 1), "n={n} s={s}");
+        }
+    }
+
+    #[test]
+    fn multi_pass_penalty_vs_dip() {
+        // For long row streams, OS pays fill+drain per n-row pass while
+        // DiP streams continuously: OS must be slower.
+        let n = 16;
+        let rows = 8 * n;
+        let w = random_i8(n, n, 7);
+        let x = random_i8(rows, n, 8);
+        let mut os = OsArray::new(n, 2);
+        os.load_weights(&w);
+        let mut dip = DipArray::new(n, 2);
+        dip.load_weights(&w);
+        let (oc, dc) = (os.run_tile(&x).stats.cycles, dip.run_tile(&x).stats.cycles);
+        assert_eq!(os.run_tile(&x).outputs, dip.run_tile(&x).outputs);
+        assert!(oc > dc, "OS {oc} must exceed DiP {dc}");
+        // Roughly 8 fills + drains of overhead.
+        assert!(oc as f64 / dc as f64 > 1.5, "ratio {}", oc as f64 / dc as f64);
+    }
+
+    #[test]
+    fn double_operand_events() {
+        // Two 8-bit operand captures per MAC (vs one for WS/DiP).
+        let (_, stats, _) = run(8, 2, 8, 9);
+        assert_eq!(stats.events.reg8_writes, 2 * stats.events.mac_ops);
+        assert!(stats.events.fifo8_writes > 0);
+        assert_eq!(stats.events.fifo16_writes, 0);
+    }
+
+    #[test]
+    fn ragged_rows_zero_padded() {
+        let (got, _, want) = run(8, 2, 11, 10);
+        assert_eq!(got, want);
+    }
+}

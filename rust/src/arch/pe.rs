@@ -1,0 +1,139 @@
+//! Processing-element micro-model (paper Fig. 2(b)).
+//!
+//! Each PE holds four *enabled* registers — weight (8 b), input (8 b),
+//! multiplier output (16 b) and adder output (16 b) — around an S-stage
+//! pipelined INT8 MAC. Control: `wshift` enables the weight register
+//! (shared array-wide); `pe_en`, `mul_en`, `adder_en` enable the input /
+//! multiplier / adder registers (shared per PE row) and clock-gate idle
+//! rows.
+//!
+//! The array simulators in `ws.rs` / `dip.rs` flatten this state into
+//! contiguous arrays for speed; this module is the single-PE behavioral
+//! reference that pins down the register/event semantics, and its tests
+//! are the contract the flattened implementations must match.
+
+use crate::sim::stats::EventCounts;
+
+/// Static PE configuration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PeConfig {
+    /// MAC pipeline stages (1 = combinational mul+add registered once,
+    /// 2 = registered multiplier then registered adder — the paper's PE).
+    pub mac_stages: u64,
+}
+
+impl Default for PeConfig {
+    fn default() -> Self {
+        Self { mac_stages: 2 }
+    }
+}
+
+/// Behavioral single PE. One `step` = one clock edge.
+#[derive(Debug, Clone, Default)]
+pub struct Pe {
+    /// Stationary weight register (8 b).
+    pub weight: i8,
+    /// Input register (8 b), forwarded to the neighbor next cycle.
+    pub input: i8,
+    /// Multiplier pipeline register (16 b).
+    pub mul_reg: i32,
+    /// Adder/psum output register (16 b in the paper; modeled i32 to
+    /// detect overflow in tests).
+    pub psum: i32,
+    /// Input-register valid flag.
+    pub valid: bool,
+}
+
+impl Pe {
+    /// `wshift`: capture a new weight (counts one 8-bit write).
+    pub fn load_weight(&mut self, w: i8, ev: &mut EventCounts) {
+        self.weight = w;
+        ev.reg8_writes += 1;
+    }
+
+    /// One active compute edge: capture `x_in`, multiply by the
+    /// stationary weight and fold in `psum_in`.
+    ///
+    /// With `pe_en`/`mul_en`/`adder_en` asserted this costs: one 8-bit
+    /// input-register write, one 16-bit mul-register write, one 16-bit
+    /// adder-register write, and one MAC op. Returns the registered psum
+    /// visible to the neighbor below on the *next* cycle.
+    pub fn step_active(&mut self, x_in: i8, psum_in: i32, ev: &mut EventCounts) -> i32 {
+        self.input = x_in;
+        self.valid = true;
+        self.mul_reg = (x_in as i32) * (self.weight as i32);
+        self.psum = psum_in + self.mul_reg;
+        ev.reg8_writes += 1;
+        ev.reg16_writes += 2;
+        ev.mac_ops += 1;
+        ev.pe_active_cycles += 1;
+        self.psum
+    }
+
+    /// One gated (idle) edge: registers hold, no switching except the
+    /// gated clock (counted as an idle PE-cycle for the leakage/gating
+    /// term of the energy model).
+    pub fn step_idle(&mut self, ev: &mut EventCounts) {
+        ev.pe_idle_cycles += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_is_two_stage() {
+        assert_eq!(PeConfig::default().mac_stages, 2);
+    }
+
+    #[test]
+    fn active_step_macs_and_counts() {
+        let mut pe = Pe::default();
+        let mut ev = EventCounts::default();
+        pe.load_weight(3, &mut ev);
+        let out = pe.step_active(4, 10, &mut ev);
+        assert_eq!(out, 22);
+        assert_eq!(pe.mul_reg, 12);
+        assert_eq!(ev.mac_ops, 1);
+        assert_eq!(ev.reg8_writes, 2); // weight load + input capture
+        assert_eq!(ev.reg16_writes, 2); // mul + adder registers
+        assert_eq!(ev.pe_active_cycles, 1);
+    }
+
+    #[test]
+    fn idle_step_only_counts_idle() {
+        let mut pe = Pe::default();
+        let mut ev = EventCounts::default();
+        pe.step_idle(&mut ev);
+        assert_eq!(ev.pe_idle_cycles, 1);
+        assert_eq!(ev.mac_ops, 0);
+        assert_eq!(ev.reg8_writes, 0);
+    }
+
+    #[test]
+    fn negative_int8_products() {
+        let mut pe = Pe::default();
+        let mut ev = EventCounts::default();
+        pe.load_weight(-128, &mut ev);
+        let out = pe.step_active(-128, 0, &mut ev);
+        assert_eq!(out, 16384); // (-128)^2, fits the 16-bit mul register +1 sign
+    }
+
+    #[test]
+    fn chained_psums_accumulate() {
+        // Three PEs in a column: psum flows down.
+        let mut ev = EventCounts::default();
+        let mut col: Vec<Pe> = (0..3).map(|_| Pe::default()).collect();
+        for (i, pe) in col.iter_mut().enumerate() {
+            pe.load_weight((i + 1) as i8, &mut ev);
+        }
+        // x = [2, 3, 4] against w = [1, 2, 3] -> 2*1 + 3*2 + 4*3 = 20.
+        let mut psum = 0;
+        for (pe, x) in col.iter_mut().zip([2i8, 3, 4]) {
+            psum = pe.step_active(x, psum, &mut ev);
+        }
+        assert_eq!(psum, 20);
+        assert_eq!(ev.mac_ops, 3);
+    }
+}

@@ -1,0 +1,87 @@
+//! The DiP weight permutation (paper Fig. 3): each column `i` of the
+//! weight matrix is rotated *up* by `i` rows before loading,
+//!
+//! ```text
+//! for i in range(cols):
+//!     for j in range(rows):
+//!         permutated_matrix[j][i] = matrix[(j + i) % rows][i]
+//! ```
+//!
+//! The permutation is "done at software level or at run-time in memory at
+//! almost zero cost" (§III.B) — here it is an O(N^2) copy performed by
+//! the coordinator when staging a weight tile.
+
+use crate::matrix::Mat;
+
+/// Permute per the Fig. 3 pseudocode: `Wp[j][i] = W[(j + i) % rows][i]`.
+pub fn permute<T: Copy + Default>(w: &Mat<T>) -> Mat<T> {
+    let rows = w.rows();
+    Mat::from_fn(rows, w.cols(), |j, i| w.get((j + i) % rows, i))
+}
+
+/// Inverse permutation: `W[j][i] = Wp[(j - i) mod rows][i]`.
+pub fn unpermute<T: Copy + Default>(wp: &Mat<T>) -> Mat<T> {
+    let rows = wp.rows();
+    Mat::from_fn(rows, wp.cols(), |j, i| wp.get((j + rows - i % rows) % rows, i))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::random_i8;
+
+    #[test]
+    fn roundtrip_square() {
+        for n in [1usize, 2, 3, 4, 8, 64] {
+            let w = random_i8(n, n, n as u64);
+            assert_eq!(unpermute(&permute(&w)).as_slice(), w.as_slice(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_rect() {
+        for (r, c) in [(3usize, 5usize), (5, 3), (64, 128), (128, 64)] {
+            let w = random_i8(r, c, (r * 1000 + c) as u64);
+            assert_eq!(unpermute(&permute(&w)).as_slice(), w.as_slice());
+        }
+    }
+
+    #[test]
+    fn fig4_example() {
+        // W = [[a,d,g],[b,e,h],[c,f,i]] -> Wp = [[a,e,i],[b,f,g],[c,d,h]]
+        // (letters 1..=9 as a,b,..,i; see the paper's Fig. 4(b)).
+        let (a, b, c, d, e, f, g, h, i) = (1i8, 2, 3, 4, 5, 6, 7, 8, 9);
+        let w = Mat::from_vec(3, 3, vec![a, d, g, b, e, h, c, f, i]);
+        let wp = permute(&w);
+        assert_eq!(wp.as_slice(), &[a, e, i, b, f, g, c, d, h]);
+    }
+
+    #[test]
+    fn permutation_is_bijection() {
+        let n = 16usize;
+        let w = Mat::from_fn(n, n, |r, c| (r * n + c) as i32);
+        let mut seen: Vec<i32> = permute(&w).as_slice().to_vec();
+        seen.sort_unstable();
+        let expect: Vec<i32> = (0..(n * n) as i32).collect();
+        assert_eq!(seen, expect);
+    }
+
+    #[test]
+    fn column_zero_unchanged() {
+        let w = random_i8(8, 8, 99);
+        let wp = permute(&w);
+        for j in 0..8 {
+            assert_eq!(wp.get(j, 0), w.get(j, 0));
+        }
+    }
+
+    #[test]
+    fn column_rotation_amount() {
+        // Column i rotated up by i: Wp[0][i] == W[i][i].
+        let w = random_i8(8, 8, 5);
+        let wp = permute(&w);
+        for i in 0..8 {
+            assert_eq!(wp.get(0, i), w.get(i, i));
+        }
+    }
+}

@@ -1,0 +1,470 @@
+//! Cycle-accurate conventional **weight-stationary** (TPU-like) systolic
+//! array — the paper's baseline (§II.A, Fig. 1).
+//!
+//! * Weights are preloaded and stationary, one per PE.
+//! * The input matrix streams horizontally: element `X[m][k]` is
+//!   presented to the row-`k` input skew FIFO (depth `k`) at cycle `m`,
+//!   so the wavefront enters the array diagonally.
+//! * Psums flow down the columns; the bottom-row results pass through an
+//!   (S-1)-stage MAC drain and the output de-skew FIFO group (depth
+//!   `N-1-c` for column `c`) to re-align into output rows.
+//!
+//! Timing contract (validated by tests + proptest against eqs (1)–(4)):
+//! a single `N x N` input tile completes in `3N + S - 3` cycles, TFPU
+//! under continuous streaming is `2N - 1`, and the synchronization
+//! register overhead is `N(N-1)` (eq (3)).
+
+use super::fifo::{FifoGroup, ShiftFifo};
+use super::{weight_load_reg8_writes, SystolicArray, TileRun};
+use crate::matrix::Mat;
+use crate::sim::stats::{EventCounts, RunStats};
+use crate::sim::trace::{CycleSnapshot, Trace};
+
+/// Sentinel row id for "no valid data".
+const INVALID: i32 = -1;
+
+/// Cycle-accurate WS array simulator.
+pub struct WsArray {
+    n: usize,
+    mac_stages: u64,
+    /// Stationary weights, row-major (contraction index k = PE row).
+    weights: Vec<i32>,
+    // --- per-run register state (flat, reused across runs) ---
+    x_val: Vec<i32>,
+    x_row: Vec<i32>,
+    ps_val: Vec<i32>,
+    ps_row: Vec<i32>,
+    weights_loaded: bool,
+}
+
+impl WsArray {
+    /// Create an `n x n` array with an `s`-stage pipelined MAC (the
+    /// paper uses S=1 and S=2).
+    pub fn new(n: usize, mac_stages: u64) -> Self {
+        assert!(n >= 1, "array must be at least 1x1");
+        assert!(mac_stages >= 1, "MAC needs at least one stage");
+        Self {
+            n,
+            mac_stages,
+            weights: vec![0; n * n],
+            x_val: vec![0; n * n],
+            x_row: vec![INVALID; n * n],
+            ps_val: vec![0; n * n],
+            ps_row: vec![INVALID; n * n],
+            weights_loaded: false,
+        }
+    }
+
+    /// Register overhead of the synchronization FIFOs, eq (3): two
+    /// triangular groups of N(N-1)/2 each.
+    pub fn sync_register_count(&self) -> u64 {
+        (self.n * (self.n - 1)) as u64
+    }
+
+    fn reset_state(&mut self) {
+        self.x_row.fill(INVALID);
+        self.ps_row.fill(INVALID);
+        self.x_val.fill(0);
+        self.ps_val.fill(0);
+    }
+
+    /// Fast path: identical semantics to the register-transfer
+    /// [`run_inner`](Self::run_inner), derived from the WS wavefront
+    /// structure: the input of `PE(k, c)` at cycle `t` is `X[t-k-c][k]`
+    /// (skewed by the input FIFO of depth `k`, then `c` horizontal
+    /// hops), so each cycle updates a trapezoidal band of PEs whose
+    /// active column range per row is contiguous — no FIFO objects, no
+    /// per-PE branching. Event totals use the closed forms the
+    /// shift-register models reduce to (validated bit-exact by
+    /// `fast_matches_register_transfer_path`).
+    fn run_fast(&mut self, x: &Mat<i8>) -> TileRun {
+        assert!(self.weights_loaded, "load_weights before run_tile");
+        assert_eq!(x.cols(), self.n, "input tile must be R x N");
+        let n = self.n;
+        let rows = x.rows();
+        let s = self.mac_stages;
+
+        let mut outputs = Mat::<i32>::zeros(rows, n);
+        self.ps_val.fill(0);
+        // Column-major copy of X so the inner loop reads X[.][k]
+        // contiguously. (A pre-widened i32 transpose + per-cycle
+        // reversed window was tried and measured ~40% slower at n=64:
+        // the extra copies dominate the reversed-index MAC.)
+        let xt = x.transpose();
+
+        for t in 0..rows + 2 * n - 2 {
+            // Row k active iff some c in [0, n) has 0 <= t-k-c < rows.
+            let k_hi = t.min(n - 1);
+            let k_lo = (t + 1).saturating_sub(rows + n - 1);
+            let mut k = k_hi + 1;
+            while k > k_lo {
+                k -= 1;
+                let rem = t - k; // = m + c
+                let c_lo = (rem + 1).saturating_sub(rows);
+                let c_hi = rem.min(n - 1);
+                if c_lo > c_hi {
+                    continue;
+                }
+                let base = k * n;
+                let xk = xt.row(k);
+                if k == 0 {
+                    for c in c_lo..=c_hi {
+                        self.ps_val[c] = self.weights[c] * xk[rem - c] as i32;
+                    }
+                } else {
+                    let (above, cur) = self.ps_val.split_at_mut(base);
+                    let above = &above[base - n..];
+                    for c in c_lo..=c_hi {
+                        cur[c] = above[c] + self.weights[base + c] * xk[rem - c] as i32;
+                    }
+                }
+                if k == n - 1 {
+                    // out[m][c] complete for m = t-(n-1)-c; the drain +
+                    // de-skew FIFO shift timing only, not values.
+                    for c in c_lo..=c_hi {
+                        outputs.set(rem - c, c, self.ps_val[base + c]);
+                    }
+                }
+            }
+        }
+
+        // Closed-form accounting, matching the register-transfer path.
+        let cycles = rows as u64 + 2 * (n as u64) + s - 3;
+        let active = (rows * n * n) as u64;
+        let tri = (n * (n - 1) / 2) as u64; // per-row FIFO slot writes
+        let ev = EventCounts {
+            mac_ops: active,
+            reg8_writes: active,
+            reg16_writes: 2 * active + (rows * n) as u64 * (s - 1),
+            fifo8_writes: rows as u64 * tri,
+            fifo16_writes: rows as u64 * tri,
+            pe_active_cycles: active,
+            pe_idle_cycles: cycles * (n * n) as u64 - active,
+        };
+        let stats = RunStats {
+            cycles,
+            weight_load_cycles: 0,
+            tfpu_cycles: if rows >= 2 * n - 1 { 2 * n as u64 - 1 } else { 0 },
+            total_ops: 2 * active,
+            events: ev,
+        };
+        TileRun { outputs, stats }
+    }
+
+    fn run_inner(&mut self, x: &Mat<i8>, mut trace: Option<&mut Trace>) -> TileRun {
+        assert!(self.weights_loaded, "load_weights before run_tile");
+        assert_eq!(x.cols(), self.n, "input tile must be R x N");
+        let n = self.n;
+        let rows = x.rows();
+        let s_extra = (self.mac_stages - 1) as usize;
+
+        let mut ev = EventCounts::default();
+        let mut outputs = Mat::<i32>::zeros(rows, n);
+        let mut collected = 0usize;
+        let total_outputs = rows * n;
+
+        self.reset_state();
+        let mut in_fifos: FifoGroup<(i32, i32)> = FifoGroup::input_skew(n);
+        let mut drain: Vec<ShiftFifo<(i32, i32)>> =
+            (0..n).map(|_| ShiftFifo::new(s_extra)).collect();
+        let mut out_fifos: FifoGroup<(i32, i32)> = FifoGroup::output_deskew(n);
+        // Row id of the last psum pushed into each column's drain, so each
+        // result enters the output path exactly once.
+        let mut pushed_row: Vec<i32> = vec![INVALID; n];
+
+        let mut fifo_in: Vec<Option<(i32, i32)>> = vec![None; n];
+        let mut fifo_out: Vec<Option<(i32, i32)>> = Vec::with_capacity(n);
+        let mut out_in: Vec<Option<(i32, i32)>> = vec![None; n];
+        let mut out_out: Vec<Option<(i32, i32)>> = Vec::with_capacity(n);
+
+        let mut tfpu: u64 = 0;
+        let mut cycle: u64 = 0;
+        // Hard upper bound: everything must finish by fill + rows + drain.
+        let deadline = (rows as u64) + (3 * n as u64) + self.mac_stages + 4;
+
+        while collected < total_outputs {
+            assert!(cycle <= deadline, "WS sim did not converge (bug)");
+            let t = cycle as usize;
+
+            // 1. Present input row t (element k to skew lane k).
+            for k in 0..n {
+                fifo_in[k] =
+                    (t < rows).then(|| (x.get(t, k) as i32, t as i32));
+            }
+            in_fifos.shift_all(&fifo_in, &mut fifo_out);
+
+            // 2. Two-phase PE update: rows bottom-up so the row above is
+            //    still "previous cycle"; columns right-to-left so the
+            //    left neighbor's input register is still previous-cycle.
+            let mut active_this_cycle = 0u64;
+            for k in (0..n).rev() {
+                for c in (0..n).rev() {
+                    let idx = k * n + c;
+                    let (nx_val, nx_row) = if c == 0 {
+                        match fifo_out[k] {
+                            Some((v, m)) => (v, m),
+                            None => (0, INVALID),
+                        }
+                    } else {
+                        (self.x_val[idx - 1], self.x_row[idx - 1])
+                    };
+                    if nx_row != INVALID {
+                        // Active edge: capture input, MAC with psum from
+                        // the PE above (registered previous cycle).
+                        let psum_above = if k == 0 { 0 } else { self.ps_val[idx - n] };
+                        self.x_val[idx] = nx_val;
+                        self.x_row[idx] = nx_row;
+                        self.ps_val[idx] = psum_above + self.weights[idx] * nx_val;
+                        self.ps_row[idx] = nx_row;
+                        ev.reg8_writes += 1;
+                        ev.reg16_writes += 2;
+                        ev.mac_ops += 1;
+                        ev.pe_active_cycles += 1;
+                        active_this_cycle += 1;
+                    } else {
+                        self.x_row[idx] = INVALID;
+                        ev.pe_idle_cycles += 1;
+                    }
+                }
+            }
+            if tfpu == 0 && active_this_cycle == (n * n) as u64 {
+                tfpu = cycle + 1;
+            }
+
+            // 3. Bottom-row psums -> (S-1)-stage MAC drain -> output
+            //    de-skew FIFO -> collection. Fresh results only.
+            for c in 0..n {
+                let idx = (n - 1) * n + c;
+                let fresh = self.ps_row[idx] != INVALID && self.ps_row[idx] != pushed_row[c];
+                let entrant = fresh.then(|| {
+                    pushed_row[c] = self.ps_row[idx];
+                    (self.ps_val[idx], self.ps_row[idx])
+                });
+                let drained = drain[c].shift(entrant);
+                out_in[c] = drained;
+            }
+            out_fifos.shift_all(&out_in, &mut out_out);
+            let mut emitted: Option<Vec<i32>> = None;
+            for (c, slot) in out_out.iter().enumerate() {
+                if let Some((v, m)) = slot {
+                    outputs.set(*m as usize, c, *v);
+                    collected += 1;
+                    if trace.is_some() {
+                        emitted.get_or_insert_with(|| vec![0; n])[c] = *v;
+                    }
+                }
+            }
+
+            if let Some(tr) = trace.as_deref_mut() {
+                tr.record(CycleSnapshot {
+                    cycle,
+                    x_regs: self
+                        .x_val
+                        .iter()
+                        .zip(&self.x_row)
+                        .map(|(&v, &r)| if r == INVALID { 0 } else { v })
+                        .collect(),
+                    psum_regs: self.ps_val.clone(),
+                    output_row: emitted,
+                });
+            }
+            cycle += 1;
+        }
+
+        // (S-1)-stage drain registers are PE pipeline registers.
+        ev.reg16_writes += drain.iter().map(|d| d.writes()).sum::<u64>();
+        ev.fifo8_writes += in_fifos.total_writes();
+        ev.fifo16_writes += out_fifos.total_writes();
+
+        let stats = RunStats {
+            cycles: cycle,
+            weight_load_cycles: 0,
+            tfpu_cycles: tfpu,
+            total_ops: 2 * ev.mac_ops,
+            events: ev,
+        };
+        TileRun { outputs, stats }
+    }
+}
+
+impl SystolicArray for WsArray {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn mac_stages(&self) -> u64 {
+        self.mac_stages
+    }
+
+    /// WS loads weights verbatim (no permutation), shifting row-by-row:
+    /// N cycles, `N^2 (N+1) / 2` weight-register writes.
+    fn load_weights(&mut self, w: &Mat<i8>) -> u64 {
+        assert_eq!((w.rows(), w.cols()), (self.n, self.n), "weight tile must be N x N");
+        for r in 0..self.n {
+            for c in 0..self.n {
+                self.weights[r * self.n + c] = w.get(r, c) as i32;
+            }
+        }
+        self.weights_loaded = true;
+        self.n as u64
+    }
+
+    fn run_tile(&mut self, x: &Mat<i8>) -> TileRun {
+        let mut run = self.run_fast(x);
+        run.stats.events.reg8_writes += weight_load_reg8_writes(self.n as u64);
+        run.stats.weight_load_cycles = self.n as u64;
+        run
+    }
+
+    fn run_tile_traced(&mut self, x: &Mat<i8>) -> (TileRun, Trace) {
+        let mut trace = Trace::new(self.n);
+        let mut run = self.run_inner(x, Some(&mut trace));
+        run.stats.events.reg8_writes += weight_load_reg8_writes(self.n as u64);
+        run.stats.weight_load_cycles = self.n as u64;
+        (run, trace)
+    }
+
+    fn name(&self) -> &'static str {
+        "WS"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::random_i8;
+
+    fn run(n: usize, s: u64, rows: usize, seed: u64) -> (Mat<i32>, RunStats, Mat<i32>) {
+        let w = random_i8(n, n, seed);
+        let x = random_i8(rows, n, seed + 1);
+        let mut arr = WsArray::new(n, s);
+        arr.load_weights(&w);
+        let run = arr.run_tile(&x);
+        let expect = x.widen().matmul(&w.widen());
+        (run.outputs, run.stats, expect)
+    }
+
+    #[test]
+    fn computes_matmul_3x3() {
+        let (got, _, want) = run(3, 1, 3, 11);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn computes_matmul_various() {
+        for (n, s, rows, seed) in
+            [(2, 1, 2, 1u64), (4, 1, 4, 2), (4, 2, 9, 3), (8, 2, 8, 4), (16, 1, 5, 5), (3, 2, 1, 6)]
+        {
+            let (got, _, want) = run(n, s, rows, seed);
+            assert_eq!(got, want, "n={n} s={s} rows={rows}");
+        }
+    }
+
+    #[test]
+    fn latency_matches_eq1_single_tile() {
+        // eq (1): 3N + S - 3 for an N x N input tile.
+        for (n, s) in [(3usize, 1u64), (3, 2), (4, 1), (8, 2), (16, 1), (16, 2), (32, 2)] {
+            let (_, stats, _) = run(n, s, n, 7);
+            assert_eq!(stats.cycles, (3 * n) as u64 + s - 3, "n={n} s={s}");
+        }
+    }
+
+    #[test]
+    fn tfpu_matches_eq4_under_streaming() {
+        // eq (4): 2N - 1 cycles to first reach full PE utilization.
+        for n in [3usize, 4, 8, 16] {
+            let (_, stats, _) = run(n, 2, 4 * n, 9);
+            assert_eq!(stats.tfpu_cycles, (2 * n - 1) as u64, "n={n}");
+        }
+    }
+
+    #[test]
+    fn single_tile_never_fully_utilizes() {
+        // With only N rows streamed, the diagonal wavefront can't cover
+        // all PEs at once — the WS penalty the paper highlights.
+        let (_, stats, _) = run(8, 1, 8, 21);
+        assert_eq!(stats.tfpu_cycles, 0);
+    }
+
+    #[test]
+    fn marginal_row_costs_one_cycle() {
+        let (_, s1, _) = run(8, 2, 8, 13);
+        let (_, s2, _) = run(8, 2, 9, 13);
+        assert_eq!(s2.cycles, s1.cycles + 1);
+    }
+
+    #[test]
+    fn sync_registers_match_eq3() {
+        for n in [3usize, 8, 64] {
+            assert_eq!(WsArray::new(n, 2).sync_register_count(), (n * (n - 1)) as u64);
+        }
+    }
+
+    #[test]
+    fn mac_count_exact() {
+        // Every input element meets every weight column: R * N^2 MACs.
+        let (_, stats, _) = run(4, 2, 6, 17);
+        assert_eq!(stats.events.mac_ops, 6 * 16);
+        assert_eq!(stats.total_ops, 2 * 6 * 16);
+    }
+
+    #[test]
+    fn fifo_events_nonzero_and_split() {
+        let (_, stats, _) = run(4, 1, 4, 19);
+        assert!(stats.events.fifo8_writes > 0, "input skew writes expected");
+        assert!(stats.events.fifo16_writes > 0, "output deskew writes expected");
+    }
+
+    #[test]
+    fn identity_weights_pass_inputs() {
+        let n = 4;
+        let eye = Mat::from_fn(n, n, |r, c| (r == c) as i8);
+        let x = random_i8(n, n, 23);
+        let mut arr = WsArray::new(n, 2);
+        arr.load_weights(&eye);
+        assert_eq!(arr.run_tile(&x).outputs, x.widen());
+    }
+
+    #[test]
+    fn reusable_across_tiles() {
+        let n = 4;
+        let mut arr = WsArray::new(n, 2);
+        let w1 = random_i8(n, n, 31);
+        let x = random_i8(n, n, 32);
+        arr.load_weights(&w1);
+        assert_eq!(arr.run_tile(&x).outputs, x.widen().matmul(&w1.widen()));
+        let w2 = random_i8(n, n, 33);
+        arr.load_weights(&w2);
+        assert_eq!(arr.run_tile(&x).outputs, x.widen().matmul(&w2.widen()));
+    }
+
+    #[test]
+    #[should_panic(expected = "load_weights")]
+    fn run_without_weights_panics() {
+        WsArray::new(2, 1).run_tile(&random_i8(2, 2, 1));
+    }
+
+    #[test]
+    fn fast_matches_register_transfer_path() {
+        // Optimized wavefront path == shift-register simulation in
+        // every observable (outputs, cycles, TFPU, event counters).
+        for (n, s, rows, seed) in [
+            (1usize, 1u64, 1usize, 1u64),
+            (2, 1, 5, 2),
+            (3, 2, 3, 3),
+            (8, 2, 8, 4),
+            (8, 1, 20, 5),
+            (16, 2, 7, 6),
+            (16, 2, 64, 7),
+        ] {
+            let w = random_i8(n, n, seed);
+            let x = random_i8(rows, n, seed + 100);
+            let mut arr = WsArray::new(n, s);
+            arr.load_weights(&w);
+            let fast = arr.run_tile(&x);
+            let (slow, _) = arr.run_tile_traced(&x);
+            assert_eq!(fast.outputs, slow.outputs, "n={n} s={s} rows={rows}");
+            assert_eq!(fast.stats, slow.stats, "n={n} s={s} rows={rows}");
+        }
+    }
+}

@@ -1,0 +1,174 @@
+//! Fig. 5 (a)–(d): analytical DiP-vs-WS comparison across array sizes,
+//! cross-validated against the cycle-accurate simulators.
+
+use crate::analytical::compare::{compare_at, fig5_sweep, ComparisonRow};
+use crate::arch::{dip::DipArray, ws::WsArray, SystolicArray};
+use crate::bench_harness::report::{fnum, Json, TextTable};
+use crate::matrix::random_i8;
+
+/// One Fig. 5 row, with simulator cross-checks attached.
+#[derive(Debug, Clone, Copy)]
+pub struct Fig5Row {
+    pub analytical: ComparisonRow,
+    /// Cycle counts measured by the cycle-accurate sims (must equal the
+    /// analytical model; asserted by tests and shown in the report).
+    pub ws_sim_latency: u64,
+    pub dip_sim_latency: u64,
+    pub ws_sim_tfpu: u64,
+    pub dip_sim_tfpu: u64,
+}
+
+/// Run the full Fig. 5 sweep: analytical rows + simulator measurements.
+/// `s` = MAC pipeline stages (paper plots use the 2-stage PE for
+/// throughput; see analytical tests for the Fig-5a S=1 footnote).
+pub fn run(s: u64) -> Vec<Fig5Row> {
+    fig5_sweep(s)
+        .into_iter()
+        .map(|row| {
+            let n = row.n as usize;
+            let w = random_i8(n, n, 0xF16_5);
+            // Latency: one N x N tile. TFPU: continuous streaming.
+            let x1 = random_i8(n, n, 0xF16_6);
+            let xs = random_i8(4 * n, n, 0xF16_7);
+            let mut ws = WsArray::new(n, s);
+            let mut dip = DipArray::new(n, s);
+            ws.load_weights(&w);
+            dip.load_weights(&w);
+            let (ws1, dip1) = (ws.run_tile(&x1), dip.run_tile(&x1));
+            let (wss, dips) = (ws.run_tile(&xs), dip.run_tile(&xs));
+            Fig5Row {
+                analytical: row,
+                ws_sim_latency: ws1.stats.cycles,
+                dip_sim_latency: dip1.stats.cycles,
+                ws_sim_tfpu: wss.stats.tfpu_cycles,
+                dip_sim_tfpu: dips.stats.tfpu_cycles,
+            }
+        })
+        .collect()
+}
+
+/// Render the four Fig. 5 panels as text tables.
+pub fn render(rows: &[Fig5Row]) -> String {
+    let mut out = String::new();
+    out.push_str("Fig 5(a) — Latency per single tile (cycles)\n");
+    let mut t = TextTable::new(vec!["N", "WS (eq1)", "WS (sim)", "DiP (eq5)", "DiP (sim)", "saved %"]);
+    for r in rows {
+        let a = &r.analytical;
+        t.row(vec![
+            a.n.to_string(),
+            a.ws_latency.to_string(),
+            r.ws_sim_latency.to_string(),
+            a.dip_latency.to_string(),
+            r.dip_sim_latency.to_string(),
+            fnum(a.latency_saving_pct, 1),
+        ]);
+    }
+    out.push_str(&t.render());
+
+    out.push_str("\nFig 5(b) — Throughput (OPS/cycle)\n");
+    let mut t = TextTable::new(vec!["N", "WS", "DiP", "improvement %"]);
+    for r in rows {
+        let a = &r.analytical;
+        t.row(vec![
+            a.n.to_string(),
+            fnum(a.ws_throughput, 1),
+            fnum(a.dip_throughput, 1),
+            fnum(a.throughput_improvement_pct, 1),
+        ]);
+    }
+    out.push_str(&t.render());
+
+    out.push_str("\nFig 5(c) — Registers (normalized to 8-bit)\n");
+    let mut t = TextTable::new(vec!["N", "WS regs", "DiP regs", "saved %"]);
+    for r in rows {
+        let a = &r.analytical;
+        t.row(vec![
+            a.n.to_string(),
+            a.ws_registers_8bit.to_string(),
+            a.dip_registers_8bit.to_string(),
+            fnum(a.register_saving_pct, 1),
+        ]);
+    }
+    out.push_str(&t.render());
+
+    out.push_str("\nFig 5(d) — TFPU (cycles to full PE utilization)\n");
+    let mut t =
+        TextTable::new(vec!["N", "WS (eq4)", "WS (sim)", "DiP (eq7)", "DiP (sim)", "improvement %"]);
+    for r in rows {
+        let a = &r.analytical;
+        t.row(vec![
+            a.n.to_string(),
+            a.ws_tfpu.to_string(),
+            r.ws_sim_tfpu.to_string(),
+            a.dip_tfpu.to_string(),
+            r.dip_sim_tfpu.to_string(),
+            fnum(a.tfpu_improvement_pct, 1),
+        ]);
+    }
+    out.push_str(&t.render());
+    out
+}
+
+/// JSON export of the sweep (for EXPERIMENTS.md provenance).
+pub fn to_json(rows: &[Fig5Row]) -> Json {
+    Json::Arr(
+        rows.iter()
+            .map(|r| {
+                let a = &r.analytical;
+                Json::obj(vec![
+                    ("n", Json::num(a.n as f64)),
+                    ("ws_latency", Json::num(a.ws_latency as f64)),
+                    ("dip_latency", Json::num(a.dip_latency as f64)),
+                    ("ws_sim_latency", Json::num(r.ws_sim_latency as f64)),
+                    ("dip_sim_latency", Json::num(r.dip_sim_latency as f64)),
+                    ("latency_saving_pct", Json::num(a.latency_saving_pct)),
+                    ("ws_throughput", Json::num(a.ws_throughput)),
+                    ("dip_throughput", Json::num(a.dip_throughput)),
+                    ("throughput_improvement_pct", Json::num(a.throughput_improvement_pct)),
+                    ("register_saving_pct", Json::num(a.register_saving_pct)),
+                    ("ws_tfpu_sim", Json::num(r.ws_sim_tfpu as f64)),
+                    ("dip_tfpu_sim", Json::num(r.dip_sim_tfpu as f64)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// Analytical-at-size helper used by the CLI for arbitrary N.
+pub fn single(n: u64, s: u64) -> ComparisonRow {
+    compare_at(n, s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sim_agrees_with_analytical_everywhere() {
+        for r in run(2) {
+            assert_eq!(r.ws_sim_latency, r.analytical.ws_latency, "N={}", r.analytical.n);
+            assert_eq!(r.dip_sim_latency, r.analytical.dip_latency, "N={}", r.analytical.n);
+            assert_eq!(r.ws_sim_tfpu, r.analytical.ws_tfpu, "N={}", r.analytical.n);
+            assert_eq!(r.dip_sim_tfpu, r.analytical.dip_tfpu, "N={}", r.analytical.n);
+        }
+    }
+
+    #[test]
+    fn render_contains_all_panels() {
+        let rows = run(2);
+        let s = render(&rows);
+        for panel in ["Fig 5(a)", "Fig 5(b)", "Fig 5(c)", "Fig 5(d)"] {
+            assert!(s.contains(panel), "{panel}");
+        }
+        assert!(s.contains("64"));
+    }
+
+    #[test]
+    fn json_roundtrip_has_all_sizes() {
+        let rows = run(2);
+        let j = to_json(&rows).render();
+        for n in [3, 4, 8, 16, 32, 64] {
+            assert!(j.contains(&format!("\"n\":{n}")), "{n}");
+        }
+    }
+}

@@ -1,0 +1,184 @@
+//! Fig. 6: cycle-accurate DiP vs TPU-like (WS) 64x64 evaluation on
+//! transformer MHA and FFN workloads — energy (a, b) and latency (c, d)
+//! across workload dimensions (M-N-K).
+
+use std::collections::BTreeSet;
+
+use crate::bench_harness::report::{fnum, Json, TextTable};
+use crate::tiling::schedule::{compare_workload, WorkloadComparison};
+use crate::workloads::dims::MatMulDims;
+use crate::workloads::models::{MODELS, SEQ_LENS};
+
+/// One Fig. 6 data point.
+#[derive(Debug, Clone, Copy)]
+pub struct Fig6Point {
+    pub cmp: WorkloadComparison,
+    pub is_mha: bool,
+}
+
+/// Collect the distinct MHA and FFN workload dims across the nine
+/// models and the paper's sequence lengths, smallest to largest.
+pub fn workload_set(max_seq: u64) -> (Vec<MatMulDims>, Vec<MatMulDims>) {
+    let mut mha = BTreeSet::new();
+    let mut ffn = BTreeSet::new();
+    for model in MODELS {
+        for l in SEQ_LENS.iter().filter(|&&l| l <= max_seq) {
+            for w in model.layer_workloads(*l) {
+                if w.stage.is_mha() {
+                    mha.insert(w.dims);
+                } else {
+                    ffn.insert(w.dims);
+                }
+            }
+        }
+    }
+    let sort = |set: BTreeSet<MatMulDims>| {
+        let mut v: Vec<_> = set.into_iter().collect();
+        v.sort_by_key(|d| (d.macs(), d.m, d.n, d.k));
+        v
+    };
+    (sort(mha), sort(ffn))
+}
+
+/// Run the Fig. 6 evaluation. `max_seq` bounds the sweep (2048 = full
+/// paper sweep; smaller values for quick runs).
+pub fn run(max_seq: u64) -> Vec<Fig6Point> {
+    let (mha, ffn) = workload_set(max_seq);
+    let mut points = Vec::new();
+    for dims in mha {
+        points.push(Fig6Point { cmp: compare_workload(dims), is_mha: true });
+    }
+    for dims in ffn {
+        points.push(Fig6Point { cmp: compare_workload(dims), is_mha: false });
+    }
+    points
+}
+
+fn render_panel(points: &[&Fig6Point], title: &str) -> String {
+    let mut out = format!("{title}\n");
+    let mut t = TextTable::new(vec![
+        "M-N-K",
+        "WS uJ",
+        "DiP uJ",
+        "energy x",
+        "WS cycles",
+        "DiP cycles",
+        "latency x",
+    ]);
+    for p in points {
+        let c = &p.cmp;
+        t.row(vec![
+            c.dims.to_string(),
+            fnum(c.ws.energy_uj, 2),
+            fnum(c.dip.energy_uj, 2),
+            fnum(c.energy_improvement(), 2),
+            c.ws.cycles.to_string(),
+            c.dip.cycles.to_string(),
+            fnum(c.latency_improvement(), 2),
+        ]);
+    }
+    out.push_str(&t.render());
+    out
+}
+
+pub fn render(points: &[Fig6Point]) -> String {
+    let mha: Vec<&Fig6Point> = points.iter().filter(|p| p.is_mha).collect();
+    let ffn: Vec<&Fig6Point> = points.iter().filter(|p| !p.is_mha).collect();
+    let mut out = String::new();
+    out.push_str(&render_panel(&mha, "Fig 6(a,c) — MHA workloads, DiP vs TPU-like 64x64"));
+    out.push('\n');
+    out.push_str(&render_panel(&ffn, "Fig 6(b,d) — FFN workloads, DiP vs TPU-like 64x64"));
+    let (e_min, e_max, l_min, l_max) = bands(points);
+    out.push_str(&format!(
+        "\nEnergy improvement band: {:.2}x .. {:.2}x (paper: 1.25x .. 1.81x)\n",
+        e_min, e_max
+    ));
+    out.push_str(&format!(
+        "Latency improvement band: {:.2}x .. {:.2}x (paper: 1.03x .. 1.49x)\n",
+        l_min, l_max
+    ));
+    out
+}
+
+/// (energy min, energy max, latency min, latency max) across points.
+pub fn bands(points: &[Fig6Point]) -> (f64, f64, f64, f64) {
+    let mut e = (f64::MAX, 0.0f64);
+    let mut l = (f64::MAX, 0.0f64);
+    for p in points {
+        let ei = p.cmp.energy_improvement();
+        let li = p.cmp.latency_improvement();
+        e = (e.0.min(ei), e.1.max(ei));
+        l = (l.0.min(li), l.1.max(li));
+    }
+    (e.0, e.1, l.0, l.1)
+}
+
+pub fn to_json(points: &[Fig6Point]) -> Json {
+    Json::Arr(
+        points
+            .iter()
+            .map(|p| {
+                let c = &p.cmp;
+                Json::obj(vec![
+                    ("dims", Json::str(c.dims.to_string())),
+                    ("kind", Json::str(if p.is_mha { "MHA" } else { "FFN" })),
+                    ("ws_energy_uj", Json::num(c.ws.energy_uj)),
+                    ("dip_energy_uj", Json::num(c.dip.energy_uj)),
+                    ("energy_improvement", Json::num(c.energy_improvement())),
+                    ("ws_cycles", Json::num(c.ws.cycles as f64)),
+                    ("dip_cycles", Json::num(c.dip.cycles as f64)),
+                    ("latency_improvement", Json::num(c.latency_improvement())),
+                ])
+            })
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn workload_set_is_nonempty_and_sorted() {
+        let (mha, ffn) = workload_set(256);
+        assert!(mha.len() >= 8, "{}", mha.len());
+        assert!(ffn.len() >= 6, "{}", ffn.len());
+        for w in mha.windows(2) {
+            assert!(w[0].macs() <= w[1].macs());
+        }
+    }
+
+    #[test]
+    fn small_sweep_reproduces_paper_shape() {
+        // Quick sweep (l <= 128): small workloads must show the large
+        // improvements; every workload must favor DiP.
+        let points = run(128);
+        assert!(!points.is_empty());
+        for p in &points {
+            assert!(p.cmp.energy_improvement() > 1.0, "{}", p.cmp.dims);
+            assert!(p.cmp.latency_improvement() > 1.0, "{}", p.cmp.dims);
+        }
+        let (e_min, e_max, _l_min, l_max) = bands(&points);
+        assert!(e_max > 1.6, "max energy improvement {e_max}");
+        assert!(e_min > 1.1, "min energy improvement {e_min}");
+        assert!(l_max > 1.4, "max latency improvement {l_max}");
+    }
+
+    #[test]
+    fn improvement_decreases_with_workload_size() {
+        // The paper's breakdown: larger workloads hide the TFPU penalty.
+        let small = compare_workload(MatMulDims::new(64, 64, 64));
+        let large = compare_workload(MatMulDims::new(1024, 1024, 1024));
+        assert!(small.latency_improvement() > large.latency_improvement());
+        assert!(small.energy_improvement() > large.energy_improvement());
+    }
+
+    #[test]
+    fn render_splits_mha_and_ffn() {
+        let points = run(64);
+        let s = render(&points);
+        assert!(s.contains("MHA workloads"));
+        assert!(s.contains("FFN workloads"));
+        assert!(s.contains("band"));
+    }
+}

@@ -1,0 +1,14 @@
+//! Regenerates every table and figure of the paper's evaluation section:
+//! Fig. 5 (analytical comparison), Table I (area/power DSE), Table II
+//! (improvement factors), Fig. 6 (transformer workload evaluation), and
+//! Table IV (accelerator comparison). Each submodule exposes `run()` /
+//! `render()` / `to_json()` so the CLI, the examples, and the criterion
+//! benches share one implementation.
+
+pub mod fig5;
+pub mod fig6;
+pub mod report;
+pub mod table1;
+pub mod table2;
+pub mod table4;
+pub mod timing;

@@ -1,0 +1,81 @@
+//! Plain-text table rendering + a minimal JSON value writer (serde is
+//! not available in the offline vendored crate set; results files only
+//! need objects/arrays/numbers/strings).
+
+use std::fmt::Write as _;
+
+/// Column-aligned text table, matching the paper's table layout.
+#[derive(Debug, Default)]
+pub struct TextTable {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl TextTable {
+    pub fn new<S: Into<String>>(headers: Vec<S>) -> Self {
+        Self { headers: headers.into_iter().map(Into::into).collect(), rows: Vec::new() }
+    }
+
+    pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) -> &mut Self {
+        let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let sep: String = widths.iter().map(|w| format!("+{}", "-".repeat(w + 2))).collect::<String>() + "+\n";
+        out.push_str(&sep);
+        for (i, h) in self.headers.iter().enumerate() {
+            let _ = write!(out, "| {:<width$} ", h, width = widths[i]);
+        }
+        out.push_str("|\n");
+        out.push_str(&sep);
+        for row in &self.rows {
+            for i in 0..ncol {
+                let _ = write!(out, "| {:<width$} ", row[i], width = widths[i]);
+            }
+            out.push_str("|\n");
+        }
+        out.push_str(&sep);
+        out
+    }
+}
+
+// JSON output goes through the shared reader/writer.
+pub use crate::jsonio::Json;
+
+/// Format a float with `d` decimals (tables).
+pub fn fnum(v: f64, d: usize) -> String {
+    format!("{v:.d$}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = TextTable::new(vec!["Size", "WS", "DiP"]);
+        t.row(vec!["4x4", "5178", "4872"]);
+        t.row(vec!["64x64", "1085000", "1012000"]);
+        let s = t.render();
+        assert!(s.contains("| Size "));
+        assert!(s.contains("| 64x64 "));
+        assert!(s.lines().all(|l| l.starts_with('+') || l.starts_with('|')));
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn row_arity_checked() {
+        TextTable::new(vec!["a", "b"]).row(vec!["only-one"]);
+    }
+}

@@ -1,0 +1,136 @@
+//! Table I: area and power of WS vs DiP at 22 nm / 1 GHz, across sizes
+//! 4..64 — regenerated from the calibrated component model, with the
+//! paper's synthesized values and the model error shown side by side.
+
+use crate::analytical::Arch;
+use crate::bench_harness::report::{fnum, Json, TextTable};
+use crate::power::area::{area_um2, saved_area_pct};
+use crate::power::calibration::{TABLE1_DIP, TABLE1_WS};
+use crate::power::energy::{power_mw, saved_power_pct};
+
+/// Table I sizes.
+pub const SIZES: [u64; 5] = [4, 8, 16, 32, 64];
+
+#[derive(Debug, Clone, Copy)]
+pub struct Table1Row {
+    pub n: u64,
+    pub ws_area_um2: f64,
+    pub dip_area_um2: f64,
+    pub saved_area_pct: f64,
+    pub ws_power_mw: f64,
+    pub dip_power_mw: f64,
+    pub saved_power_pct: f64,
+    /// Paper's synthesized values for reference.
+    pub paper_ws_area_um2: f64,
+    pub paper_dip_area_um2: f64,
+    pub paper_ws_power_mw: f64,
+    pub paper_dip_power_mw: f64,
+}
+
+pub fn run() -> Vec<Table1Row> {
+    SIZES
+        .iter()
+        .map(|&n| {
+            let idx = TABLE1_WS.iter().position(|p| p.n == n).unwrap();
+            Table1Row {
+                n,
+                ws_area_um2: area_um2(Arch::Ws, n),
+                dip_area_um2: area_um2(Arch::Dip, n),
+                saved_area_pct: saved_area_pct(n),
+                ws_power_mw: power_mw(Arch::Ws, n),
+                dip_power_mw: power_mw(Arch::Dip, n),
+                saved_power_pct: saved_power_pct(n),
+                paper_ws_area_um2: TABLE1_WS[idx].area_um2,
+                paper_dip_area_um2: TABLE1_DIP[idx].area_um2,
+                paper_ws_power_mw: TABLE1_WS[idx].power_mw,
+                paper_dip_power_mw: TABLE1_DIP[idx].power_mw,
+            }
+        })
+        .collect()
+}
+
+pub fn render(rows: &[Table1Row]) -> String {
+    let mut out = String::new();
+    out.push_str("Table I — Area & power, WS vs DiP (22nm, 1GHz; model vs paper)\n");
+    let mut t = TextTable::new(vec![
+        "Size",
+        "WS area um2 (paper)",
+        "DiP area um2 (paper)",
+        "saved %",
+        "WS mW (paper)",
+        "DiP mW (paper)",
+        "saved %",
+    ]);
+    for r in rows {
+        t.row(vec![
+            format!("{0}x{0}", r.n),
+            format!("{} ({})", fnum(r.ws_area_um2, 0), fnum(r.paper_ws_area_um2, 0)),
+            format!("{} ({})", fnum(r.dip_area_um2, 0), fnum(r.paper_dip_area_um2, 0)),
+            fnum(r.saved_area_pct, 2),
+            format!("{} ({})", fnum(r.ws_power_mw, 2), fnum(r.paper_ws_power_mw, 2)),
+            format!("{} ({})", fnum(r.dip_power_mw, 2), fnum(r.paper_dip_power_mw, 2)),
+            fnum(r.saved_power_pct, 2),
+        ]);
+    }
+    out.push_str(&t.render());
+    out
+}
+
+pub fn to_json(rows: &[Table1Row]) -> Json {
+    Json::Arr(
+        rows.iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("n", Json::num(r.n as f64)),
+                    ("ws_area_um2", Json::num(r.ws_area_um2)),
+                    ("dip_area_um2", Json::num(r.dip_area_um2)),
+                    ("saved_area_pct", Json::num(r.saved_area_pct)),
+                    ("ws_power_mw", Json::num(r.ws_power_mw)),
+                    ("dip_power_mw", Json::num(r.dip_power_mw)),
+                    ("saved_power_pct", Json::num(r.saved_power_pct)),
+                    ("paper_ws_area_um2", Json::num(r.paper_ws_area_um2)),
+                    ("paper_dip_area_um2", Json::num(r.paper_dip_area_um2)),
+                    ("paper_ws_power_mw", Json::num(r.paper_ws_power_mw)),
+                    ("paper_dip_power_mw", Json::num(r.paper_dip_power_mw)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model_tracks_paper_within_7pct() {
+        for r in run() {
+            for (model, paper) in [
+                (r.ws_area_um2, r.paper_ws_area_um2),
+                (r.dip_area_um2, r.paper_dip_area_um2),
+                (r.ws_power_mw, r.paper_ws_power_mw),
+                (r.dip_power_mw, r.paper_dip_power_mw),
+            ] {
+                assert!((model - paper).abs() / paper < 0.07, "N={} {model} vs {paper}", r.n);
+            }
+        }
+    }
+
+    #[test]
+    fn savings_peak_in_paper_range() {
+        let rows = run();
+        let max_area = rows.iter().map(|r| r.saved_area_pct).fold(0.0, f64::max);
+        let max_power = rows.iter().map(|r| r.saved_power_pct).fold(0.0, f64::max);
+        // Paper: up to 8.12% area, up to 19.95% power.
+        assert!(max_area > 5.5 && max_area < 10.0, "{max_area}");
+        assert!(max_power > 14.0 && max_power < 22.0, "{max_power}");
+    }
+
+    #[test]
+    fn render_mentions_every_size() {
+        let s = render(&run());
+        for n in SIZES {
+            assert!(s.contains(&format!("{n}x{n}")));
+        }
+    }
+}

@@ -1,0 +1,124 @@
+//! Table II: DiP-over-WS improvement factors (throughput, power, area,
+//! and overall = energy efficiency per area) across sizes.
+
+use crate::analytical::{throughput_ops_per_cycle, Arch};
+use crate::bench_harness::report::{fnum, Json, TextTable};
+use crate::power::area::area_improvement;
+use crate::power::energy::{overall_improvement, power_improvement};
+
+pub const SIZES: [u64; 5] = [4, 8, 16, 32, 64];
+
+/// Paper's Table II values `(throughput, power, area, overall)` per size
+/// — kept for side-by-side reporting.
+pub const PAPER: [(u64, f64, f64, f64, f64); 5] = [
+    (4, 1.38, 1.16, 1.06, 1.70),
+    (8, 1.44, 1.18, 1.08, 1.84),
+    (16, 1.47, 1.20, 1.09, 1.93),
+    (32, 1.48, 1.25, 1.09, 2.02),
+    (64, 1.49, 1.21, 1.07, 1.93),
+];
+
+#[derive(Debug, Clone, Copy)]
+pub struct Table2Row {
+    pub n: u64,
+    pub throughput_x: f64,
+    pub power_x: f64,
+    pub area_x: f64,
+    pub overall_x: f64,
+    pub paper: (f64, f64, f64, f64),
+}
+
+pub fn run() -> Vec<Table2Row> {
+    SIZES
+        .iter()
+        .map(|&n| {
+            let p = PAPER.iter().find(|p| p.0 == n).unwrap();
+            Table2Row {
+                n,
+                throughput_x: throughput_ops_per_cycle(Arch::Dip, n, 2)
+                    / throughput_ops_per_cycle(Arch::Ws, n, 2),
+                power_x: power_improvement(n),
+                area_x: area_improvement(n),
+                overall_x: overall_improvement(n, 2),
+                paper: (p.1, p.2, p.3, p.4),
+            }
+        })
+        .collect()
+}
+
+pub fn render(rows: &[Table2Row]) -> String {
+    let mut out = String::new();
+    out.push_str(
+        "Table II — DiP improvement over WS (model, paper in parentheses)\n",
+    );
+    let mut t = TextTable::new(vec![
+        "Size",
+        "Throughput x",
+        "Power x",
+        "Area x",
+        "Overall* x",
+    ]);
+    for r in rows {
+        t.row(vec![
+            format!("{0}x{0}", r.n),
+            format!("{} ({})", fnum(r.throughput_x, 2), fnum(r.paper.0, 2)),
+            format!("{} ({})", fnum(r.power_x, 2), fnum(r.paper.1, 2)),
+            format!("{} ({})", fnum(r.area_x, 2), fnum(r.paper.2, 2)),
+            format!("{} ({})", fnum(r.overall_x, 2), fnum(r.paper.3, 2)),
+        ]);
+    }
+    out.push_str(&t.render());
+    out.push_str("*Overall improvement = energy efficiency per area\n");
+    out
+}
+
+pub fn to_json(rows: &[Table2Row]) -> Json {
+    Json::Arr(
+        rows.iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("n", Json::num(r.n as f64)),
+                    ("throughput_x", Json::num(r.throughput_x)),
+                    ("power_x", Json::num(r.power_x)),
+                    ("area_x", Json::num(r.area_x)),
+                    ("overall_x", Json::num(r.overall_x)),
+                    ("paper_throughput_x", Json::num(r.paper.0)),
+                    ("paper_power_x", Json::num(r.paper.1)),
+                    ("paper_area_x", Json::num(r.paper.2)),
+                    ("paper_overall_x", Json::num(r.paper.3)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughput_column_matches_paper_exactly() {
+        // This column is pure analytics — must match to 2 decimals.
+        for r in run() {
+            assert!((r.throughput_x - r.paper.0).abs() < 0.005, "N={}", r.n);
+        }
+    }
+
+    #[test]
+    fn power_area_overall_track_paper() {
+        for r in run() {
+            assert!((r.power_x - r.paper.1).abs() < 0.06, "N={} power {}", r.n, r.power_x);
+            assert!((r.area_x - r.paper.2).abs() < 0.03, "N={} area {}", r.n, r.area_x);
+            assert!((r.overall_x - r.paper.3).abs() < 0.13, "N={} overall {}", r.n, r.overall_x);
+        }
+    }
+
+    #[test]
+    fn overall_band_1_7_to_2_02() {
+        let rows = run();
+        let min = rows.iter().map(|r| r.overall_x).fold(f64::MAX, f64::min);
+        let max = rows.iter().map(|r| r.overall_x).fold(0.0, f64::max);
+        assert!(min > 1.6, "{min}");
+        assert!(max < 2.1, "{max}");
+    }
+}

@@ -1,0 +1,94 @@
+//! Table IV: DiP vs published accelerators (Google TPU v1, Groq TSP,
+//! Alibaba Hanguang 800), normalized to 22 nm.
+
+use crate::bench_harness::report::{fnum, Json, TextTable};
+use crate::power::scaling::{dip_accelerator, Accelerator, COMPETITORS};
+
+pub fn accelerators() -> Vec<Accelerator> {
+    let mut v = vec![dip_accelerator()];
+    v.extend(COMPETITORS);
+    v
+}
+
+pub fn render() -> String {
+    let mut out = String::new();
+    out.push_str("Table IV — Comparison with other accelerators (normalized to 22nm)\n");
+    let mut t = TextTable::new(vec![
+        "Accelerator",
+        "Architecture",
+        "MHz",
+        "Precision",
+        "Node",
+        "Power W",
+        "Area mm2",
+        "Peak TOPS",
+        "Norm 64x64 TOPS",
+        "TOPS/mm2",
+        "TOPS/W",
+    ]);
+    for acc in accelerators() {
+        let n = acc.normalized();
+        t.row(vec![
+            acc.name.to_string(),
+            acc.architecture.to_string(),
+            acc.freq_mhz.to_string(),
+            acc.precision.to_string(),
+            format!("{}nm", acc.node.nm()),
+            fnum(acc.power_w, 3),
+            fnum(acc.area_mm2, 1),
+            fnum(acc.peak_tops, 1),
+            n.perf_at_64x64_tops.map(|v| fnum(v, 2)).unwrap_or_else(|| "-".into()),
+            fnum(n.tops_per_mm2, 3),
+            fnum(n.tops_per_w, 2),
+        ]);
+    }
+    out.push_str(&t.render());
+    out.push_str("Paper row for DiP: 8.2 TOPS, 8.2 TOPS/mm2, 9.55 TOPS/W\n");
+    out
+}
+
+pub fn to_json() -> Json {
+    Json::Arr(
+        accelerators()
+            .iter()
+            .map(|acc| {
+                let n = acc.normalized();
+                Json::obj(vec![
+                    ("name", Json::str(acc.name)),
+                    ("node_nm", Json::num(acc.node.nm() as f64)),
+                    ("power_w", Json::num(acc.power_w)),
+                    ("area_mm2", Json::num(acc.area_mm2)),
+                    ("peak_tops", Json::num(acc.peak_tops)),
+                    (
+                        "norm_64x64_tops",
+                        n.perf_at_64x64_tops.map(Json::num).unwrap_or(Json::Null),
+                    ),
+                    ("tops_per_mm2", Json::num(n.tops_per_mm2)),
+                    ("tops_per_w", Json::num(n.tops_per_w)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn four_rows_with_dip_first() {
+        let accs = accelerators();
+        assert_eq!(accs.len(), 4);
+        assert!(accs[0].name.contains("DiP"));
+    }
+
+    #[test]
+    fn render_contains_headline_numbers() {
+        let s = render();
+        assert!(s.contains("DiP"));
+        assert!(s.contains("Google TPU"));
+        assert!(s.contains("Groq"));
+        assert!(s.contains("Hanguang"));
+        assert!(s.contains("9.5")); // ~9.55 TOPS/W
+    }
+}

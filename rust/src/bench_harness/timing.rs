@@ -1,0 +1,75 @@
+//! Self-contained micro-benchmark timing (criterion is not in the
+//! offline vendored crate set). Measures median/min/mean wall time over
+//! repeated runs with warmup, printing criterion-like one-liners.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchResult {
+    pub iters: u32,
+    pub median: Duration,
+    pub min: Duration,
+    pub mean: Duration,
+}
+
+impl BenchResult {
+    /// Items-per-second at the median (pass items processed per iter).
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / self.median.as_secs_f64()
+    }
+}
+
+/// Run `f` `iters` times (after `warmup` runs) and report stats.
+/// The closure's return value is black-boxed to keep the work alive.
+pub fn bench<T>(name: &str, warmup: u32, iters: u32, mut f: impl FnMut() -> T) -> BenchResult {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples: Vec<Duration> = (0..iters.max(1))
+        .map(|_| {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            t0.elapsed()
+        })
+        .collect();
+    samples.sort();
+    let median = samples[samples.len() / 2];
+    let min = samples[0];
+    let mean = samples.iter().sum::<Duration>() / samples.len() as u32;
+    let r = BenchResult { iters: iters.max(1), median, min, mean };
+    println!(
+        "{name:<48} median {:>12?}  min {:>12?}  mean {:>12?}  ({} iters)",
+        r.median, r.min, r.mean, r.iters
+    );
+    r
+}
+
+/// Convenience: print a derived throughput line under a bench.
+pub fn report_throughput(label: &str, value: f64, unit: &str) {
+    println!("  -> {label}: {value:.3e} {unit}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_stats() {
+        let r = bench("noop", 1, 5, || 42u64);
+        assert_eq!(r.iters, 5);
+        assert!(r.min <= r.median);
+        assert!(r.median <= Duration::from_millis(10));
+    }
+
+    #[test]
+    fn throughput_math() {
+        let r = BenchResult {
+            iters: 1,
+            median: Duration::from_millis(100),
+            min: Duration::from_millis(100),
+            mean: Duration::from_millis(100),
+        };
+        assert!((r.throughput(1000.0) - 10_000.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,123 @@
+//! A worker device: one simulated systolic array executing
+//! weight-stationary jobs pulled from the shared queue.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::analytical::Arch;
+use crate::arch::{dip::DipArray, ws::WsArray, SystolicArray};
+use crate::matrix::Mat;
+
+use super::metrics::Metrics;
+use super::state::ReqState;
+
+/// One weight-stationary unit of work: load `w_tile` once, stream the
+/// full `x_strip` (all M1 tiles back-to-back), fold the psum strip into
+/// the request at column offset `c0`.
+pub struct Job {
+    pub req: Arc<ReqState>,
+    pub w_tile: Mat<i8>,
+    pub x_strip: Mat<i8>,
+    pub c0: usize,
+}
+
+/// Device configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct DeviceConfig {
+    pub arch: Arch,
+    pub tile: usize,
+    pub mac_stages: u64,
+}
+
+impl Default for DeviceConfig {
+    fn default() -> Self {
+        Self { arch: Arch::Dip, tile: 64, mac_stages: 2 }
+    }
+}
+
+/// A worker's array + metrics hook.
+pub struct Device {
+    array: Box<dyn SystolicArray>,
+    metrics: Arc<Metrics>,
+}
+
+impl Device {
+    pub fn new(cfg: DeviceConfig, metrics: Arc<Metrics>) -> Self {
+        let array: Box<dyn SystolicArray> = match cfg.arch {
+            Arch::Ws => Box::new(WsArray::new(cfg.tile, cfg.mac_stages)),
+            Arch::Dip => Box::new(DipArray::new(cfg.tile, cfg.mac_stages)),
+        };
+        Self { array, metrics }
+    }
+
+    /// Execute one job; returns true if it completed its request.
+    pub fn execute(&mut self, job: Job) -> bool {
+        use std::sync::atomic::Ordering::Relaxed;
+        let t0 = Instant::now();
+        self.array.load_weights(&job.w_tile);
+        let run = self.array.run_tile(&job.x_strip);
+        self.metrics.jobs_executed.fetch_add(1, Relaxed);
+        self.metrics.rows_streamed.fetch_add(job.x_strip.rows() as u64, Relaxed);
+        self.metrics.sim_cycles.fetch_add(run.stats.cycles, Relaxed);
+        self.metrics.mac_ops.fetch_add(run.stats.events.mac_ops, Relaxed);
+        let last = job.req.complete_job(job.c0, &run.outputs, &run.stats);
+        if last {
+            let completed = job.req.finish();
+            self.metrics.requests_completed.fetch_add(completed, Relaxed);
+        }
+        self.metrics.add_busy(t0.elapsed());
+        last
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::state::SubRequest;
+    use crate::matrix::random_i8;
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn device_executes_job_and_completes_request() {
+        let metrics = Arc::new(Metrics::default());
+        let mut dev = Device::new(
+            DeviceConfig { arch: Arch::Dip, tile: 8, mac_stages: 2 },
+            metrics.clone(),
+        );
+        let (tx, rx) = channel();
+        let x = random_i8(8, 8, 1);
+        let w = random_i8(8, 8, 2);
+        let req = Arc::new(ReqState::new(
+            8,
+            8,
+            8,
+            1,
+            vec![SubRequest { id: 1, row0: 0, rows: 8, tx }],
+        ));
+        let last = dev.execute(Job { req, w_tile: w.clone(), x_strip: x.clone(), c0: 0 });
+        assert!(last);
+        let resp = rx.try_recv().unwrap();
+        assert_eq!(resp.out, x.widen().matmul(&w.widen()));
+        let m = metrics.snapshot();
+        assert_eq!(m.jobs_executed, 1);
+        assert_eq!(m.requests_completed, 1);
+        assert!(m.sim_cycles > 0);
+        assert!(m.busy_ns > 0);
+    }
+
+    #[test]
+    fn ws_device_gives_same_numerics() {
+        let metrics = Arc::new(Metrics::default());
+        let mut dip = Device::new(DeviceConfig { arch: Arch::Dip, tile: 8, mac_stages: 2 }, metrics.clone());
+        let mut ws = Device::new(DeviceConfig { arch: Arch::Ws, tile: 8, mac_stages: 2 }, metrics);
+        let x = random_i8(16, 8, 3);
+        let w = random_i8(8, 8, 4);
+        let run = |dev: &mut Device| {
+            let (tx, rx) = channel();
+            let req = Arc::new(ReqState::new(16, 8, 8, 1, vec![SubRequest { id: 0, row0: 0, rows: 16, tx }]));
+            dev.execute(Job { req, w_tile: w.clone(), x_strip: x.clone(), c0: 0 });
+            rx.try_recv().unwrap().out
+        };
+        assert_eq!(run(&mut dip), run(&mut ws));
+    }
+}

@@ -1,0 +1,89 @@
+//! Lock-free coordinator metrics (atomics; snapshot on demand).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Shared counters updated by the router and every worker.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub requests_submitted: AtomicU64,
+    pub requests_completed: AtomicU64,
+    /// Weight-stationary jobs executed (one per M2 tile per request).
+    pub jobs_executed: AtomicU64,
+    /// Input rows streamed through arrays.
+    pub rows_streamed: AtomicU64,
+    /// Simulated array cycles consumed.
+    pub sim_cycles: AtomicU64,
+    /// Simulated MAC operations.
+    pub mac_ops: AtomicU64,
+    /// Wall-clock nanoseconds workers spent busy.
+    pub busy_ns: AtomicU64,
+    /// Times a submit had to wait on the bounded queue (backpressure).
+    pub backpressure_events: AtomicU64,
+}
+
+/// Point-in-time copy of the counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MetricsSnapshot {
+    pub requests_submitted: u64,
+    pub requests_completed: u64,
+    pub jobs_executed: u64,
+    pub rows_streamed: u64,
+    pub sim_cycles: u64,
+    pub mac_ops: u64,
+    pub busy_ns: u64,
+    pub backpressure_events: u64,
+}
+
+impl Metrics {
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            requests_submitted: self.requests_submitted.load(Ordering::Relaxed),
+            requests_completed: self.requests_completed.load(Ordering::Relaxed),
+            jobs_executed: self.jobs_executed.load(Ordering::Relaxed),
+            rows_streamed: self.rows_streamed.load(Ordering::Relaxed),
+            sim_cycles: self.sim_cycles.load(Ordering::Relaxed),
+            mac_ops: self.mac_ops.load(Ordering::Relaxed),
+            busy_ns: self.busy_ns.load(Ordering::Relaxed),
+            backpressure_events: self.backpressure_events.load(Ordering::Relaxed),
+        }
+    }
+
+    pub fn add_busy(&self, d: Duration) {
+        self.busy_ns.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+    }
+}
+
+impl MetricsSnapshot {
+    /// Simulated throughput: MACs per simulated cycle (utilization proxy).
+    pub fn macs_per_cycle(&self) -> f64 {
+        if self.sim_cycles == 0 {
+            0.0
+        } else {
+            self.mac_ops as f64 / self.sim_cycles as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_reflects_updates() {
+        let m = Metrics::default();
+        m.requests_submitted.fetch_add(3, Ordering::Relaxed);
+        m.mac_ops.fetch_add(100, Ordering::Relaxed);
+        m.sim_cycles.fetch_add(10, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.requests_submitted, 3);
+        assert_eq!(s.macs_per_cycle(), 10.0);
+    }
+
+    #[test]
+    fn empty_snapshot_is_zero() {
+        let s = Metrics::default().snapshot();
+        assert_eq!(s, MetricsSnapshot::default());
+        assert_eq!(s.macs_per_cycle(), 0.0);
+    }
+}

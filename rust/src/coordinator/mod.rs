@@ -1,0 +1,20 @@
+//! L3 coordinator — the runtime that serves matmul / transformer-layer
+//! requests on a pool of (simulated) DiP or WS arrays.
+//!
+//! Shape: a request router (`router`) decomposes each request into
+//! weight-stationary jobs per the paper's §IV.C tiling, dispatches them
+//! to worker devices (`device`) over a bounded queue (backpressure,
+//! never drops), accumulates psums per request (`state`), and exposes
+//! counters (`metrics`). Batched submission loads each stationary
+//! weight tile once per batch — the coordinator-level payoff of the
+//! weight-stationary dataflow the paper optimizes.
+
+pub mod device;
+pub mod metrics;
+pub mod router;
+pub mod state;
+
+pub use device::{Device, DeviceConfig, Job};
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use router::{Coordinator, CoordinatorConfig, RequestHandle};
+pub use state::{MatmulResponse, ReqState, SubRequest};

@@ -1,0 +1,307 @@
+//! The request router: decomposes matmul requests into weight-stationary
+//! jobs (one per M2 tile, per the paper's §IV.C schedule), fans them out
+//! to a pool of array devices over a bounded queue (backpressure), and
+//! reassembles psum-accumulated responses.
+//!
+//! Built on std threads + mpsc (tokio is not in the offline vendored
+//! crate set); the workload is CPU-bound simulation, so a thread pool is
+//! the right shape anyway.
+
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, SyncSender};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::matrix::Mat;
+
+use super::device::{Device, DeviceConfig, Job};
+use super::metrics::{Metrics, MetricsSnapshot};
+use super::state::{MatmulResponse, ReqState, SubRequest};
+
+/// Coordinator configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct CoordinatorConfig {
+    /// Worker devices (each owns one simulated array).
+    pub devices: usize,
+    pub device: DeviceConfig,
+    /// Bounded job-queue depth; submits block when full (backpressure,
+    /// never drops work).
+    pub queue_depth: usize,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        Self { devices: 4, device: DeviceConfig::default(), queue_depth: 64 }
+    }
+}
+
+/// Handle to one submitted request.
+pub struct RequestHandle {
+    rx: Receiver<MatmulResponse>,
+}
+
+impl RequestHandle {
+    /// Block until the response arrives.
+    pub fn wait(self) -> MatmulResponse {
+        self.rx.recv().expect("coordinator dropped response channel")
+    }
+
+    /// Block with a timeout (None on timeout).
+    pub fn wait_timeout(&self, d: Duration) -> Option<MatmulResponse> {
+        match self.rx.recv_timeout(d) {
+            Ok(r) => Some(r),
+            Err(RecvTimeoutError::Timeout) => None,
+            Err(RecvTimeoutError::Disconnected) => {
+                panic!("coordinator dropped response channel")
+            }
+        }
+    }
+}
+
+/// The L3 coordinator.
+pub struct Coordinator {
+    tx: Option<SyncSender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+    metrics: Arc<Metrics>,
+    cfg: CoordinatorConfig,
+    next_id: std::sync::atomic::AtomicU64,
+}
+
+impl Coordinator {
+    pub fn new(cfg: CoordinatorConfig) -> Self {
+        let (tx, rx) = mpsc::sync_channel::<Job>(cfg.queue_depth);
+        let rx = Arc::new(std::sync::Mutex::new(rx));
+        let metrics = Arc::new(Metrics::default());
+        let workers = (0..cfg.devices.max(1))
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                let metrics = Arc::clone(&metrics);
+                let dcfg = cfg.device;
+                std::thread::Builder::new()
+                    .name(format!("dip-worker-{i}"))
+                    .spawn(move || {
+                        let mut dev = Device::new(dcfg, metrics);
+                        loop {
+                            // Hold the lock only while pulling one job.
+                            let job = match rx.lock().unwrap().recv() {
+                                Ok(j) => j,
+                                Err(_) => break, // queue closed: drain done
+                            };
+                            dev.execute(job);
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        Self {
+            tx: Some(tx),
+            workers,
+            metrics,
+            cfg,
+            next_id: std::sync::atomic::AtomicU64::new(0),
+        }
+    }
+
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    pub fn config(&self) -> &CoordinatorConfig {
+        &self.cfg
+    }
+
+    /// Submit one matmul `X (MxN) @ W (NxK)`. Ragged shapes are
+    /// zero-padded to the tile size. Blocks only under backpressure.
+    pub fn submit(&self, x: Mat<i8>, w: Mat<i8>) -> RequestHandle {
+        self.submit_batched(vec![x], w).pop().unwrap()
+    }
+
+    /// Submit a *batch* of inputs sharing the same weight matrix (the
+    /// serving case: many sequences through one layer). The inputs are
+    /// stacked so every stationary weight tile is loaded **once per
+    /// batch** instead of once per request — the coordinator-level
+    /// expression of weight-stationary reuse.
+    pub fn submit_batched(&self, xs: Vec<Mat<i8>>, w: Mat<i8>) -> Vec<RequestHandle> {
+        use std::sync::atomic::Ordering::Relaxed;
+        assert!(!xs.is_empty(), "empty batch");
+        let n_dim = w.rows();
+        let k_dim = w.cols();
+        for x in &xs {
+            assert_eq!(x.cols(), n_dim, "contraction mismatch");
+        }
+        let t = self.cfg.device.tile;
+        let total_rows: usize = xs.iter().map(Mat::rows).sum();
+        let padded_rows = total_rows.div_ceil(t) * t;
+        let (tn, tk) = (n_dim.div_ceil(t), k_dim.div_ceil(t));
+
+        // Stack the batch into one row block.
+        let mut stacked = Mat::<i8>::zeros(padded_rows, n_dim);
+        let mut row0 = 0usize;
+        let mut subs = Vec::with_capacity(xs.len());
+        let mut handles = Vec::with_capacity(xs.len());
+        for x in &xs {
+            stacked.set_block(row0, 0, x);
+            let (tx, rx) = channel();
+            let id = self.next_id.fetch_add(1, Relaxed);
+            subs.push(SubRequest { id, row0, rows: x.rows(), tx });
+            handles.push(RequestHandle { rx });
+            row0 += x.rows();
+            self.metrics.requests_submitted.fetch_add(1, Relaxed);
+        }
+
+        let jobs = tn * tk;
+        let req = Arc::new(ReqState::new(padded_rows, k_dim, tk * t, jobs, subs));
+
+        let tx = self.tx.as_ref().expect("coordinator already shut down");
+        for kn in 0..tn {
+            // The x strip for this contraction block is shared by all
+            // ko jobs; clone per job (workers own their inputs).
+            let x_strip = stacked.block(0, kn * t, padded_rows, t);
+            for ko in 0..tk {
+                let w_tile = w.block(kn * t, ko * t, t, t);
+                let job = Job {
+                    req: Arc::clone(&req),
+                    w_tile,
+                    x_strip: x_strip.clone(),
+                    c0: ko * t,
+                };
+                if let Err(mpsc::TrySendError::Full(job)) = tx.try_send(job) {
+                    // Backpressure: block until a worker frees a slot.
+                    self.metrics.backpressure_events.fetch_add(1, Relaxed);
+                    tx.send(job).expect("workers gone");
+                }
+            }
+        }
+        handles
+    }
+
+    /// Drain the queue, stop the workers, and return final metrics.
+    pub fn shutdown(mut self) -> MetricsSnapshot {
+        self.tx.take(); // close the queue; workers exit after draining
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        self.metrics.snapshot()
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.tx.take();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analytical::Arch;
+    use crate::matrix::random_i8;
+
+    fn small() -> CoordinatorConfig {
+        CoordinatorConfig {
+            devices: 3,
+            device: DeviceConfig { arch: Arch::Dip, tile: 8, mac_stages: 2 },
+            queue_depth: 4,
+        }
+    }
+
+    #[test]
+    fn single_request_exact() {
+        let c = Coordinator::new(small());
+        let x = random_i8(16, 24, 1);
+        let w = random_i8(24, 16, 2);
+        let resp = c.submit(x.clone(), w.clone()).wait();
+        assert_eq!(resp.out, x.widen().matmul(&w.widen()));
+        let m = c.shutdown();
+        assert_eq!(m.requests_completed, 1);
+        assert_eq!(m.jobs_executed, 3 * 2);
+    }
+
+    #[test]
+    fn ragged_request_exact() {
+        let c = Coordinator::new(small());
+        let x = random_i8(13, 19, 3);
+        let w = random_i8(19, 10, 4);
+        let resp = c.submit(x.clone(), w.clone()).wait();
+        assert_eq!(resp.out, x.widen().matmul(&w.widen()));
+    }
+
+    #[test]
+    fn many_concurrent_requests_all_exact() {
+        let c = Coordinator::new(small());
+        let w = random_i8(16, 16, 9);
+        let reqs: Vec<(Mat<i8>, RequestHandle)> = (0..24)
+            .map(|i| {
+                let x = random_i8(8 + (i % 3) * 4, 16, 100 + i as u64);
+                let h = c.submit(x.clone(), w.clone());
+                (x, h)
+            })
+            .collect();
+        for (x, h) in reqs {
+            assert_eq!(h.wait().out, x.widen().matmul(&w.widen()));
+        }
+        let m = c.shutdown();
+        assert_eq!(m.requests_completed, 24);
+        assert_eq!(m.requests_submitted, 24);
+    }
+
+    #[test]
+    fn batched_submission_shares_weight_loads() {
+        let cfg = small();
+        let w = random_i8(16, 16, 5);
+        let xs: Vec<Mat<i8>> = (0..6).map(|i| random_i8(8, 16, 10 + i)).collect();
+
+        let c1 = Coordinator::new(cfg);
+        let handles = c1.submit_batched(xs.clone(), w.clone());
+        for (x, h) in xs.iter().zip(handles) {
+            assert_eq!(h.wait().out, x.widen().matmul(&w.widen()));
+        }
+        let batched = c1.shutdown();
+
+        let c2 = Coordinator::new(cfg);
+        let handles: Vec<_> = xs.iter().map(|x| c2.submit(x.clone(), w.clone())).collect();
+        for h in handles {
+            h.wait();
+        }
+        let unbatched = c2.shutdown();
+
+        // Batching: 2x2 tile-jobs for the whole batch vs per request.
+        assert_eq!(batched.jobs_executed, 4);
+        assert_eq!(unbatched.jobs_executed, 4 * 6);
+        assert!(batched.sim_cycles < unbatched.sim_cycles);
+    }
+
+    #[test]
+    fn backpressure_blocks_but_loses_nothing() {
+        let cfg = CoordinatorConfig {
+            devices: 1,
+            device: DeviceConfig { arch: Arch::Dip, tile: 8, mac_stages: 2 },
+            queue_depth: 1,
+        };
+        let c = Coordinator::new(cfg);
+        let w = random_i8(32, 32, 6);
+        let handles: Vec<_> =
+            (0..8).map(|i| c.submit(random_i8(8, 32, 50 + i), w.clone())).collect();
+        for h in handles {
+            h.wait();
+        }
+        let m = c.shutdown();
+        assert_eq!(m.requests_completed, 8);
+        // With queue depth 1 and 4 jobs per request, backpressure fired.
+        assert!(m.backpressure_events > 0);
+    }
+
+    #[test]
+    fn shutdown_waits_for_inflight_work() {
+        let c = Coordinator::new(small());
+        let x = random_i8(8, 8, 7);
+        let w = random_i8(8, 8, 8);
+        let h = c.submit(x.clone(), w.clone());
+        let m = c.shutdown(); // must drain, not drop
+        assert_eq!(m.requests_completed, 1);
+        assert_eq!(h.wait().out, x.widen().matmul(&w.widen()));
+    }
+}

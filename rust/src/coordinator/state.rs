@@ -1,0 +1,153 @@
+//! Per-request state: psum accumulation across M2-tile jobs and
+//! completion signalling. Jobs for one request may finish on any worker
+//! in any order; accumulation is commutative so the result is
+//! order-independent (covered by property tests).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::Mutex;
+
+use crate::matrix::Mat;
+use crate::sim::stats::RunStats;
+
+/// Final response for one submitted matmul.
+#[derive(Debug)]
+pub struct MatmulResponse {
+    pub id: u64,
+    /// `X @ W` (exact i32).
+    pub out: Mat<i32>,
+    /// Aggregated simulator statistics across all jobs of this request.
+    pub stats: RunStats,
+}
+
+/// A sub-request of a batched submission: rows `row0..row0+rows` of the
+/// shared stacked input belong to this requester.
+pub struct SubRequest {
+    pub id: u64,
+    pub row0: usize,
+    pub rows: usize,
+    pub tx: Sender<MatmulResponse>,
+}
+
+/// Shared state of one in-flight (possibly batched) request.
+pub struct ReqState {
+    /// Output accumulator over the full stacked row range.
+    out: Mutex<Mat<i32>>,
+    stats: Mutex<RunStats>,
+    pending_jobs: AtomicUsize,
+    subs: Mutex<Vec<SubRequest>>,
+    /// Unpadded output column count (K of the original request).
+    out_cols: usize,
+}
+
+impl ReqState {
+    pub fn new(total_rows: usize, out_cols: usize, padded_cols: usize, jobs: usize, subs: Vec<SubRequest>) -> Self {
+        Self {
+            out: Mutex::new(Mat::zeros(total_rows, padded_cols)),
+            stats: Mutex::new(RunStats::default()),
+            pending_jobs: AtomicUsize::new(jobs),
+            subs: Mutex::new(subs),
+            out_cols,
+        }
+    }
+
+    /// Fold one job's partial result (an M-row column strip at column
+    /// offset `c0`) into the accumulator; returns true when this was the
+    /// last outstanding job.
+    pub fn complete_job(&self, c0: usize, strip: &Mat<i32>, stats: &RunStats) -> bool {
+        {
+            let mut out = self.out.lock().unwrap();
+            // Accumulate (psum semantics) — strips from different
+            // contraction blocks target the same columns.
+            for r in 0..strip.rows().min(out.rows()) {
+                for c in 0..strip.cols() {
+                    if c0 + c < out.cols() {
+                        let v = out.get(r, c0 + c) + strip.get(r, c);
+                        out.set(r, c0 + c, v);
+                    }
+                }
+            }
+        }
+        {
+            let mut agg = self.stats.lock().unwrap();
+            agg.chain(stats);
+        }
+        self.pending_jobs.fetch_sub(1, Ordering::AcqRel) == 1
+    }
+
+    /// Deliver responses to every sub-requester (last job just retired).
+    /// Returns the number of sub-requests completed.
+    pub fn finish(&self) -> u64 {
+        let out = self.out.lock().unwrap();
+        let stats = *self.stats.lock().unwrap();
+        let subs = std::mem::take(&mut *self.subs.lock().unwrap());
+        let n = subs.len() as u64;
+        for sub in subs {
+            let mine = out.block(sub.row0, 0, sub.rows, self.out_cols);
+            // Receiver may have hung up (dropped handle) — that's fine.
+            let _ = sub.tx.send(MatmulResponse { id: sub.id, out: mine, stats });
+        }
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn accumulates_and_signals_on_last_job() {
+        let (tx, rx) = channel();
+        let st = ReqState::new(2, 2, 2, 2, vec![SubRequest { id: 7, row0: 0, rows: 2, tx }]);
+        let strip = Mat::from_vec(2, 2, vec![1, 2, 3, 4]);
+        let stats = RunStats { cycles: 5, ..Default::default() };
+        assert!(!st.complete_job(0, &strip, &stats));
+        assert!(st.complete_job(0, &strip, &stats));
+        st.finish();
+        let resp = rx.try_recv().unwrap();
+        assert_eq!(resp.id, 7);
+        assert_eq!(resp.out, Mat::from_vec(2, 2, vec![2, 4, 6, 8]));
+        assert_eq!(resp.stats.cycles, 10);
+    }
+
+    #[test]
+    fn batch_rows_split_correctly() {
+        let (tx1, rx1) = channel();
+        let (tx2, rx2) = channel();
+        let st = ReqState::new(
+            4,
+            2,
+            2,
+            1,
+            vec![
+                SubRequest { id: 1, row0: 0, rows: 2, tx: tx1 },
+                SubRequest { id: 2, row0: 2, rows: 2, tx: tx2 },
+            ],
+        );
+        let strip = Mat::from_vec(4, 2, vec![1, 2, 3, 4, 5, 6, 7, 8]);
+        assert!(st.complete_job(0, &strip, &RunStats::default()));
+        st.finish();
+        assert_eq!(rx1.try_recv().unwrap().out, Mat::from_vec(2, 2, vec![1, 2, 3, 4]));
+        assert_eq!(rx2.try_recv().unwrap().out, Mat::from_vec(2, 2, vec![5, 6, 7, 8]));
+    }
+
+    #[test]
+    fn column_offset_targets_strip() {
+        let (tx, rx) = channel();
+        let st = ReqState::new(1, 4, 4, 1, vec![SubRequest { id: 0, row0: 0, rows: 1, tx }]);
+        let strip = Mat::from_vec(1, 2, vec![9, 9]);
+        assert!(st.complete_job(2, &strip, &RunStats::default()));
+        st.finish();
+        assert_eq!(rx.try_recv().unwrap().out, Mat::from_vec(1, 4, vec![0, 0, 9, 9]));
+    }
+
+    #[test]
+    fn dropped_receiver_does_not_panic() {
+        let (tx, rx) = channel();
+        drop(rx);
+        let st = ReqState::new(1, 1, 1, 1, vec![SubRequest { id: 0, row0: 0, rows: 1, tx }]);
+        assert!(st.complete_job(0, &Mat::from_vec(1, 1, vec![1]), &RunStats::default()));
+        st.finish(); // must not panic
+    }
+}

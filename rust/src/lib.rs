@@ -1,0 +1,45 @@
+//! # dip-core — DiP systolic array: full-system reproduction
+//!
+//! A production-grade reproduction of *“DiP: A Scalable, Energy-Efficient
+//! Systolic Array for Matrix Multiplication Acceleration”* (Abdelmaksoud,
+//! Agwa, Prodromakis — IEEE TCSI 2025).
+//!
+//! The crate provides, as first-class public API:
+//!
+//! * [`arch`] — cycle-accurate register-transfer simulators of the
+//!   conventional weight-stationary (WS, TPU-like) array **and** the
+//!   proposed DiP array (diagonal input movement + permutated weights),
+//!   including the PE micro-model and skew-FIFO substrate.
+//! * [`analytical`] — the paper’s closed-form models, eqs (1)–(7):
+//!   latency, throughput, TFPU, and register overhead for both arrays.
+//! * [`power`] — 22 nm area/power/energy models calibrated to the paper’s
+//!   synthesis results (Table I), event-based energy accounting, and
+//!   DeepScaleTool-style technology normalization (Table IV).
+//! * [`workloads`] — the nine transformer models (Table III dims) used in
+//!   the paper’s evaluation, plus generic MHA/FFN workload generation.
+//! * [`tiling`] — the paper’s §IV.C tiling methodology: stationary M2
+//!   tiles, streamed M1 tiles, psum accumulation — with cycle/energy
+//!   composition validated against the PE-level simulators.
+//! * [`coordinator`] — the L3 runtime: an async matmul/transformer-layer
+//!   request router with tile batching, a device pool of simulated
+//!   arrays, backpressure, and metrics.
+//! * [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas
+//!   artifacts (`artifacts/*.hlo.txt`); Python is never on this path.
+//! * [`bench_harness`] — regenerates every table and figure of the
+//!   paper’s evaluation section (Fig 5, Tables I/II/IV, Fig 6).
+
+pub mod analytical;
+pub mod arch;
+pub mod bench_harness;
+pub mod coordinator;
+pub mod jsonio;
+pub mod matrix;
+pub mod power;
+pub mod runtime;
+pub mod sim;
+pub mod tiling;
+pub mod workloads;
+
+pub use arch::{dip::DipArray, ws::WsArray, SystolicArray, TileRun};
+pub use matrix::Mat;
+pub use sim::stats::{EventCounts, RunStats};

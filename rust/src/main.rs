@@ -1,0 +1,373 @@
+//! `dip` — command-line driver for the DiP reproduction.
+//!
+//! Subcommands regenerate every table/figure of the paper, run the Fig 4
+//! walkthrough trace, verify the AOT artifacts through PJRT, and serve
+//! workloads through the L3 coordinator. Argument parsing is hand-rolled
+//! (clap is not in the offline vendored crate set).
+
+use std::io::Write as _;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use dip_core::analytical::Arch;
+use dip_core::arch::{dip::DipArray, ws::WsArray, SystolicArray};
+use dip_core::bench_harness::{fig5, fig6, report::Json, table1, table2, table4};
+use dip_core::coordinator::{Coordinator, CoordinatorConfig, DeviceConfig};
+use dip_core::matrix::{random_i8, Mat};
+use dip_core::runtime::Runtime;
+use dip_core::workloads::models::{model_by_name, MODELS};
+
+const USAGE: &str = "\
+dip — DiP systolic array reproduction (cycle-accurate sims + PJRT runtime)
+
+USAGE:
+    dip <COMMAND> [OPTIONS]
+
+COMMANDS:
+    fig5                Fig 5 (a-d): analytical comparison + sim cross-check
+                          [--s <1|2>]
+    table1              Table I: area/power model vs paper (22nm, 1GHz)
+    table2              Table II: DiP-over-WS improvement factors
+    fig6                Fig 6: transformer workloads, DiP vs TPU-like 64x64
+                          [--max-seq <64..2048>] [--json <path>]
+    table4              Table IV: accelerator comparison (22nm-normalized)
+    trace               Fig 4 cycle-by-cycle walkthrough
+                          [--n <size>] [--arch <dip|ws>]
+    verify-artifacts    Execute AOT artifacts via PJRT; check dip==ref
+                          [--dir <artifacts>]
+    serve               Serve random matmul workloads on the coordinator
+                          [--requests <n>] [--devices <n>] [--arch <dip|ws>]
+                          [--model <name>] [--seq <len>] [--batch <n>]
+    models              List the nine evaluated transformer models
+    sparsity            Zero-gating energy sweep (paper §V future work)
+                          [--n <size>] [--rows <n>]
+    bandwidth           §II dataflow bandwidth comparison (WS/IS/OS/RS/DiP)
+    meissa              Meissa (§I) latency/area comparator
+    all                 fig5 + table1 + table2 + fig6(max-seq 512) + table4
+
+OPTIONS:
+    -h, --help          Show this help
+";
+
+/// Tiny argv scanner: `--key value` pairs after the subcommand.
+struct Args {
+    rest: Vec<String>,
+}
+
+impl Args {
+    fn get(&self, key: &str) -> Option<&str> {
+        self.rest
+            .iter()
+            .position(|a| a == key)
+            .and_then(|i| self.rest.get(i + 1))
+            .map(String::as_str)
+    }
+
+    fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("bad value for {key}: {v}")),
+        }
+    }
+
+    fn get_arch(&self, default: Arch) -> Result<Arch> {
+        match self.get("--arch") {
+            None => Ok(default),
+            Some("dip") | Some("DiP") => Ok(Arch::Dip),
+            Some("ws") | Some("WS") => Ok(Arch::Ws),
+            Some(other) => bail!("unknown --arch {other} (use dip|ws)"),
+        }
+    }
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() || argv[0] == "-h" || argv[0] == "--help" {
+        print!("{USAGE}");
+        return;
+    }
+    let cmd = argv[0].clone();
+    let args = Args { rest: argv[1..].to_vec() };
+    if let Err(e) = dispatch(&cmd, &args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(cmd: &str, args: &Args) -> Result<()> {
+    match cmd {
+        "fig5" => cmd_fig5(args),
+        "table1" => cmd_table1(),
+        "table2" => cmd_table2(),
+        "fig6" => cmd_fig6(args),
+        "table4" => cmd_table4(),
+        "trace" => cmd_trace(args),
+        "verify-artifacts" => cmd_verify(args),
+        "serve" => cmd_serve(args),
+        "models" => cmd_models(),
+        "sparsity" => cmd_sparsity(args),
+        "bandwidth" => cmd_bandwidth(),
+        "meissa" => cmd_meissa(),
+        "all" => cmd_all(),
+        other => {
+            print!("{USAGE}");
+            Err(anyhow!("unknown command `{other}`"))
+        }
+    }
+}
+
+fn cmd_fig5(args: &Args) -> Result<()> {
+    let s = args.get_u64("--s", 2)?;
+    anyhow::ensure!((1..=2).contains(&s), "--s must be 1 or 2");
+    let rows = fig5::run(s);
+    print!("{}", fig5::render(&rows));
+    Ok(())
+}
+
+fn cmd_table1() -> Result<()> {
+    print!("{}", table1::render(&table1::run()));
+    Ok(())
+}
+
+fn cmd_table2() -> Result<()> {
+    print!("{}", table2::render(&table2::run()));
+    Ok(())
+}
+
+fn cmd_fig6(args: &Args) -> Result<()> {
+    let max_seq = args.get_u64("--max-seq", 2048)?;
+    eprintln!("running cycle-accurate Fig 6 sweep (max seq {max_seq})...");
+    let points = fig6::run(max_seq);
+    print!("{}", fig6::render(&points));
+    if let Some(path) = args.get("--json") {
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(fig6::to_json(&points).render().as_bytes())?;
+        eprintln!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_table4() -> Result<()> {
+    print!("{}", table4::render());
+    Ok(())
+}
+
+fn cmd_trace(args: &Args) -> Result<()> {
+    let n = args.get_u64("--n", 3)? as usize;
+    anyhow::ensure!((2..=8).contains(&n), "--n must be 2..8 for readable traces");
+    let arch = args.get_arch(Arch::Dip)?;
+    // The Fig. 4 matrices for n=3; sequential values otherwise.
+    let w = Mat::from_fn(n, n, |r, c| (c * n + r + 1) as i8); // column-major letters
+    let x = Mat::from_fn(n, n, |r, c| (r * n + c + 1) as i8);
+    println!("X = {x:?}");
+    println!("W = {w:?}  (loaded {}permutated)", if arch == Arch::Dip { "" } else { "un" });
+    let (run, trace) = match arch {
+        Arch::Dip => {
+            let mut a = DipArray::new(n, 1);
+            a.load_weights(&w);
+            a.run_tile_traced(&x)
+        }
+        Arch::Ws => {
+            let mut a = WsArray::new(n, 1);
+            a.load_weights(&w);
+            a.run_tile_traced(&x)
+        }
+    };
+    print!("{}", trace.render());
+    println!(
+        "latency: {} cycles (analytical: {})",
+        run.stats.cycles,
+        match arch {
+            Arch::Dip => 2 * n as u64 - 1,
+            Arch::Ws => 3 * n as u64 - 2,
+        }
+    );
+    println!("output = {:?}", run.outputs);
+    println!("reference = {:?}", x.widen().matmul(&w.widen()));
+    assert_eq!(run.outputs, x.widen().matmul(&w.widen()));
+    println!("trace OK (output == X @ W)");
+    Ok(())
+}
+
+fn cmd_verify(args: &Args) -> Result<()> {
+    let dir = args.get("--dir").unwrap_or("artifacts").to_string();
+    let mut rt = Runtime::new(&dir)?;
+    println!("PJRT platform: {}", rt.platform());
+    println!("artifacts: {:?}", rt.manifest().names());
+    // Single-tile primitive against the plain matmul (weights
+    // permutated host-side, as the coordinator would).
+    let x = dip_core::runtime::random_f32(64 * 64, 1, 1.0);
+    let w = dip_core::runtime::random_f32(64 * 64, 2, 1.0);
+    let mut wp = vec![0f32; 64 * 64];
+    for j in 0..64 {
+        for i in 0..64 {
+            wp[j * 64 + i] = w[((j + i) % 64) * 64 + i];
+        }
+    }
+    let got = rt.run_f32("dip_tile_matmul", &[x.clone(), wp])?;
+    let want = rt.run_f32("matmul_ref_64", &[x, w])?;
+    let max = got.iter().zip(&want).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+    println!("dip_tile_matmul vs matmul_ref_64: max |diff| = {max:.2e}");
+    anyhow::ensure!(max < 1e-3, "tile matmul numerics diverged");
+
+    for (dip, ref_) in [
+        ("matmul_dip_256", "matmul_ref_256"),
+        ("mha_dip", "mha_ref"),
+        ("ffn_dip", "ffn_ref"),
+        ("layer_dip", "layer_ref"),
+    ] {
+        let (out, _, max) = rt.verify_pair(dip, ref_, 42)?;
+        println!("{dip} vs {ref_}: {} outputs, max |diff| = {max:.2e}", out.len());
+        anyhow::ensure!(max < 5e-3, "{dip} numerics diverged");
+    }
+    println!("verify-artifacts OK — permutated dataflow == reference through PJRT");
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let requests = args.get_u64("--requests", 32)? as usize;
+    let devices = args.get_u64("--devices", 4)? as usize;
+    let batch = args.get_u64("--batch", 1)? as usize;
+    let arch = args.get_arch(Arch::Dip)?;
+    let (n_dim, k_dim, rows) = if let Some(name) = args.get("--model") {
+        let m = model_by_name(name).ok_or_else(|| anyhow!("unknown model {name}"))?;
+        let seq = args.get_u64("--seq", 128)? as usize;
+        (m.d_model as usize, m.d_model as usize, seq)
+    } else {
+        (256, 256, 128)
+    };
+
+    let cfg = CoordinatorConfig {
+        devices,
+        device: DeviceConfig { arch, tile: 64, mac_stages: 2 },
+        queue_depth: 128,
+    };
+    println!(
+        "serving {requests} matmul requests ({rows}x{n_dim} @ {n_dim}x{k_dim}) on {devices} {} devices, batch={batch}",
+        arch.name()
+    );
+    let coord = Coordinator::new(cfg);
+    let w = random_i8(n_dim, k_dim, 7);
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::new();
+    let mut i = 0usize;
+    while i < requests {
+        let chunk = batch.min(requests - i);
+        let xs: Vec<Mat<i8>> =
+            (0..chunk).map(|j| random_i8(rows, n_dim, 100 + (i + j) as u64)).collect();
+        handles.extend(coord.submit_batched(xs, w.clone()));
+        i += chunk;
+    }
+    let mut total_cycles = 0u64;
+    for h in handles {
+        total_cycles += h.wait().stats.cycles;
+    }
+    let wall = t0.elapsed();
+    let m = coord.shutdown();
+    println!(
+        "completed {} requests in {:.1} ms wall",
+        m.requests_completed,
+        wall.as_secs_f64() * 1e3
+    );
+    println!(
+        "  jobs: {}  rows streamed: {}  simulated cycles: {}  backpressure events: {}",
+        m.jobs_executed, m.rows_streamed, m.sim_cycles, m.backpressure_events
+    );
+    println!(
+        "  simulated time @1GHz: {:.1} us  device-busy wall: {:.1} ms  MACs/cycle: {:.1}",
+        total_cycles as f64 / 1e3,
+        m.busy_ns as f64 / 1e6,
+        m.macs_per_cycle()
+    );
+    Ok(())
+}
+
+fn cmd_models() -> Result<()> {
+    println!(
+        "{:<16} {:<16} {:>8} {:>6} {:>5} {:>6}",
+        "model", "type", "d_model", "heads", "d_k", "d_ffn"
+    );
+    for m in MODELS {
+        println!(
+            "{:<16} {:<16} {:>8} {:>6} {:>5} {:>6}",
+            m.name,
+            format!("{:?}", m.model_type),
+            m.d_model,
+            m.num_heads,
+            m.d_k,
+            m.d_ffn
+        );
+    }
+    Ok(())
+}
+
+fn cmd_sparsity(args: &Args) -> Result<()> {
+    use dip_core::arch::sparsity::{random_sparse_i8, run_tile_zero_gated};
+    let n = args.get_u64("--n", 64)? as usize;
+    let rows = args.get_u64("--rows", 512)? as usize;
+    println!("zero-gating sweep ({n}x{n} DiP, {rows}-row stream); outputs stay bit-exact");
+    println!("{:>9} {:>12} {:>10}", "density", "gated MACs", "energy x");
+    let w = random_i8(n, n, 1);
+    for density in [1.0, 0.9, 0.7, 0.5, 0.3, 0.1] {
+        let x = random_sparse_i8(rows, n, density, 2);
+        let s = run_tile_zero_gated(Arch::Dip, &w, &x, 2);
+        anyhow::ensure!(s.run.outputs == x.widen().matmul(&w.widen()), "outputs diverged");
+        println!("{:>9.2} {:>12} {:>10.3}", s.density, s.gated_macs, s.energy_improvement());
+    }
+    Ok(())
+}
+
+fn cmd_bandwidth() -> Result<()> {
+    use dip_core::power::bandwidth::{bandwidth, Dataflow};
+    println!("boundary bandwidth, N=64, R=1024 rows/pass (bytes/cycle)");
+    println!("{:>5} {:>10} {:>10} {:>10} {:>10} {:>12}", "flow", "operand", "output", "refill", "total", "MACs/byte");
+    for df in [Dataflow::Ws, Dataflow::Is, Dataflow::Os, Dataflow::Rs, Dataflow::Dip] {
+        let b = bandwidth(df, 64, 1024);
+        println!(
+            "{:>5} {:>10.1} {:>10.1} {:>10.1} {:>10.1} {:>12.1}",
+            df.name(), b.operand_bpc, b.output_bpc, b.refill_bpc, b.total_bpc(), b.macs_per_byte(64)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_meissa() -> Result<()> {
+    use dip_core::analytical::meissa;
+    use dip_core::power::area::area_um2;
+    println!("{:>5} {:>9} {:>11} {:>9} {:>14} {:>12}", "N", "WS lat", "Meissa lat", "DiP lat", "Meissa um2", "DiP um2");
+    for n in [8u64, 16, 32, 64, 128] {
+        println!(
+            "{:>5} {:>9} {:>11} {:>9} {:>14.0} {:>12.0}",
+            n,
+            dip_core::analytical::latency_cycles(Arch::Ws, n, 2),
+            meissa::latency_meissa(n),
+            dip_core::analytical::latency_cycles(Arch::Dip, n, 2),
+            meissa::area_meissa_um2(n),
+            area_um2(Arch::Dip, n),
+        );
+    }
+    Ok(())
+}
+
+fn cmd_all() -> Result<()> {
+    cmd_fig5(&Args { rest: vec![] })?;
+    println!();
+    cmd_table1()?;
+    println!();
+    cmd_table2()?;
+    println!();
+    cmd_fig6(&Args { rest: vec!["--max-seq".into(), "512".into()] })?;
+    println!();
+    cmd_table4()?;
+    // Machine-readable dump for EXPERIMENTS.md provenance.
+    std::fs::create_dir_all("results").ok();
+    let out = Json::obj(vec![
+        ("fig5", fig5::to_json(&fig5::run(2))),
+        ("table1", table1::to_json(&table1::run())),
+        ("table2", table2::to_json(&table2::run())),
+        ("table4", table4::to_json()),
+    ]);
+    std::fs::write("results/summary.json", out.render())?;
+    println!("\nwrote results/summary.json");
+    Ok(())
+}

@@ -1,0 +1,224 @@
+//! Minimal row-major matrix used across the simulators and the tiling
+//! layer. Deliberately tiny: the hot paths index the flat buffer
+//! directly, so this stays a plain `Vec` with shape metadata.
+
+use std::fmt;
+
+/// Row-major 2-D matrix.
+#[derive(Clone, PartialEq, Eq)]
+pub struct Mat<T> {
+    rows: usize,
+    cols: usize,
+    data: Vec<T>,
+}
+
+impl<T: Copy + Default> Mat<T> {
+    /// All-default (zero for numeric types) matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![T::default(); rows * cols] }
+    }
+
+    /// Build from a row-major vector; `data.len()` must equal `rows*cols`.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<T>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape mismatch");
+        Self { rows, cols, data }
+    }
+
+    /// Build from a closure over (row, col).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> T) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        Self { rows, cols, data }
+    }
+
+    #[inline(always)]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline(always)]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline(always)]
+    pub fn get(&self, r: usize, c: usize) -> T {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline(always)]
+    pub fn set(&mut self, r: usize, c: usize, v: T) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// Row slice (row-major layout makes this contiguous).
+    #[inline(always)]
+    pub fn row(&self, r: usize) -> &[T] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn as_slice(&self) -> &[T] {
+        &self.data
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [T] {
+        &mut self.data
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Self {
+        Mat::from_fn(self.cols, self.rows, |r, c| self.get(c, r))
+    }
+
+    /// Copy a sub-block starting at (r0, c0) with shape (h, w), padding
+    /// out-of-range elements with `T::default()` (used by ragged tiling).
+    pub fn block(&self, r0: usize, c0: usize, h: usize, w: usize) -> Self {
+        Mat::from_fn(h, w, |r, c| {
+            let (rr, cc) = (r0 + r, c0 + c);
+            if rr < self.rows && cc < self.cols {
+                self.get(rr, cc)
+            } else {
+                T::default()
+            }
+        })
+    }
+
+    /// Write `src` into self at offset (r0, c0), clipping at the edges.
+    pub fn set_block(&mut self, r0: usize, c0: usize, src: &Mat<T>) {
+        for r in 0..src.rows {
+            for c in 0..src.cols {
+                let (rr, cc) = (r0 + r, c0 + c);
+                if rr < self.rows && cc < self.cols {
+                    self.set(rr, cc, src.get(r, c));
+                }
+            }
+        }
+    }
+}
+
+impl Mat<i32> {
+    /// Reference i32 matmul (exact; the oracle for both simulators).
+    pub fn matmul(&self, rhs: &Mat<i32>) -> Mat<i32> {
+        assert_eq!(self.cols, rhs.rows, "contraction mismatch");
+        let mut out = Mat::zeros(self.rows, rhs.cols);
+        for r in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self.get(r, k);
+                if a == 0 {
+                    continue;
+                }
+                for c in 0..rhs.cols {
+                    out.data[r * rhs.cols + c] += a * rhs.get(k, c);
+                }
+            }
+        }
+        out
+    }
+
+    /// Element-wise accumulate: `self += rhs`.
+    pub fn accumulate(&mut self, rhs: &Mat<i32>) {
+        assert_eq!((self.rows, self.cols), (rhs.rows, rhs.cols));
+        for (a, b) in self.data.iter_mut().zip(rhs.data.iter()) {
+            *a += *b;
+        }
+    }
+}
+
+impl Mat<i8> {
+    /// Widen to i32 (inputs/weights are INT8 in the paper; psums i32).
+    pub fn widen(&self) -> Mat<i32> {
+        Mat::from_vec(self.rows, self.cols, self.data.iter().map(|&v| v as i32).collect())
+    }
+}
+
+impl<T: Copy + Default + fmt::Debug> fmt::Debug for Mat<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Mat<{}x{}> [", self.rows, self.cols)?;
+        for r in 0..self.rows.min(8) {
+            writeln!(f, "  {:?}", self.row(r))?;
+        }
+        if self.rows > 8 {
+            writeln!(f, "  ...")?;
+        }
+        write!(f, "]")
+    }
+}
+
+/// Deterministic pseudo-random i8 matrix (tests/benches/workload gen).
+pub fn random_i8(rows: usize, cols: usize, seed: u64) -> Mat<i8> {
+    // xorshift64*: reproducible without pulling rand into the hot crate path.
+    let mut s = seed.wrapping_mul(0x9E3779B97F4A7C15).max(1);
+    Mat::from_fn(rows, cols, |_, _| {
+        s ^= s >> 12;
+        s ^= s << 25;
+        s ^= s >> 27;
+        (s.wrapping_mul(0x2545F4914F6CDD1D) >> 56) as i8
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_fn_and_get() {
+        let m = Mat::from_fn(2, 3, |r, c| (r * 10 + c) as i32);
+        assert_eq!(m.get(1, 2), 12);
+        assert_eq!(m.row(1), &[10, 11, 12]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let m = random_i8(5, 7, 42).widen();
+        let t = m.transpose().transpose();
+        assert_eq!(m, t);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let m = random_i8(4, 4, 1).widen();
+        let eye = Mat::from_fn(4, 4, |r, c| (r == c) as i32);
+        assert_eq!(m.matmul(&eye), m);
+    }
+
+    #[test]
+    fn matmul_small_known() {
+        let a = Mat::from_vec(2, 2, vec![1, 2, 3, 4]);
+        let b = Mat::from_vec(2, 2, vec![5, 6, 7, 8]);
+        assert_eq!(a.matmul(&b), Mat::from_vec(2, 2, vec![19, 22, 43, 50]));
+    }
+
+    #[test]
+    fn block_pads_with_zero() {
+        let m = Mat::from_vec(2, 2, vec![1i32, 2, 3, 4]);
+        let b = m.block(1, 1, 2, 2);
+        assert_eq!(b, Mat::from_vec(2, 2, vec![4, 0, 0, 0]));
+    }
+
+    #[test]
+    fn set_block_clips() {
+        let mut m = Mat::<i32>::zeros(2, 2);
+        let src = Mat::from_vec(2, 2, vec![1, 2, 3, 4]);
+        m.set_block(1, 1, &src);
+        assert_eq!(m, Mat::from_vec(2, 2, vec![0, 0, 0, 1]));
+    }
+
+    #[test]
+    fn random_is_deterministic() {
+        assert_eq!(random_i8(3, 3, 7).as_slice(), random_i8(3, 3, 7).as_slice());
+        assert_ne!(random_i8(3, 3, 7).as_slice(), random_i8(3, 3, 8).as_slice());
+    }
+
+    #[test]
+    fn accumulate_adds() {
+        let mut a = Mat::from_vec(1, 3, vec![1, 2, 3]);
+        a.accumulate(&Mat::from_vec(1, 3, vec![10, 20, 30]));
+        assert_eq!(a, Mat::from_vec(1, 3, vec![11, 22, 33]));
+    }
+}

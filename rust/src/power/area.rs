@@ -1,0 +1,81 @@
+//! Area model (22 nm, µm²) for both arrays, built on the calibrated
+//! component constants. Regenerates the area columns of Table I and the
+//! area-improvement column of Table II.
+
+use super::calibration::calibration;
+#[cfg(test)]
+use super::calibration::{TABLE1_DIP, TABLE1_WS};
+use crate::analytical::{sync_register_overhead_8bit, Arch};
+
+/// Modeled silicon area in µm² for an `N x N` array.
+///
+/// DiP: `N² A_pe + N A_edge + A_fixed`; WS adds the two synchronization
+/// FIFO groups (`1.5 N (N-1)` 8-bit-normalized registers).
+pub fn area_um2(arch: Arch, n: u64) -> f64 {
+    let c = calibration();
+    let base = (n * n) as f64 * c.a_pe_um2 + n as f64 * c.a_edge_um2 + c.a_fixed_um2;
+    base + sync_register_overhead_8bit(arch, n) as f64 * c.a_fifo_reg_um2
+}
+
+/// Area in mm².
+pub fn area_mm2(arch: Arch, n: u64) -> f64 {
+    area_um2(arch, n) / 1e6
+}
+
+/// WS-over-DiP area improvement factor (Table II column 4).
+pub fn area_improvement(n: u64) -> f64 {
+    area_um2(Arch::Ws, n) / area_um2(Arch::Dip, n)
+}
+
+/// Saved-area percentage, Table I column 4: `(WS - DiP) / WS * 100`.
+pub fn saved_area_pct(n: u64) -> f64 {
+    (1.0 - area_um2(Arch::Dip, n) / area_um2(Arch::Ws, n)) * 100.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model_matches_table1_dip_within_5pct() {
+        for p in TABLE1_DIP {
+            let got = area_um2(Arch::Dip, p.n);
+            let err = (got - p.area_um2).abs() / p.area_um2;
+            assert!(err < 0.05, "N={} model={} paper={} err={:.3}", p.n, got, p.area_um2, err);
+        }
+    }
+
+    #[test]
+    fn model_matches_table1_ws_within_5pct() {
+        for p in TABLE1_WS {
+            let got = area_um2(Arch::Ws, p.n);
+            let err = (got - p.area_um2).abs() / p.area_um2;
+            assert!(err < 0.05, "N={} model={} paper={} err={:.3}", p.n, got, p.area_um2, err);
+        }
+    }
+
+    #[test]
+    fn saved_area_in_paper_band() {
+        // Table I: saved area 5.91% (4x4) .. 8.12% (16x16), >=5% everywhere.
+        for n in [4u64, 8, 16, 32, 64] {
+            let s = saved_area_pct(n);
+            assert!(s > 4.0 && s < 10.0, "N={n} saved={s}");
+        }
+    }
+
+    #[test]
+    fn improvement_factor_in_paper_band() {
+        // Table II: 1.06x .. 1.09x.
+        for n in [4u64, 8, 16, 32, 64] {
+            let f = area_improvement(n);
+            assert!(f > 1.04 && f < 1.11, "N={n} factor={f}");
+        }
+    }
+
+    #[test]
+    fn dip_64_is_about_one_mm2() {
+        // Table IV: DiP area ~1 mm².
+        let a = area_mm2(Arch::Dip, 64);
+        assert!((a - 1.012).abs() < 0.05, "area={a}");
+    }
+}

@@ -1,0 +1,6 @@
+//! Area/power/energy models (calibrated to the paper's 22nm results).
+pub mod area;
+pub mod bandwidth;
+pub mod calibration;
+pub mod energy;
+pub mod scaling;

@@ -1,0 +1,204 @@
+//! DeepScaleTool-style technology normalization (paper Table IV).
+//!
+//! The paper normalizes competitor accelerators (Google TPU v1 @28 nm,
+//! Groq TSP @14 nm, Alibaba Hanguang 800 @12 nm) to 22 nm using
+//! DeepScaleTool [40]. The tool itself is not redistributable, so this
+//! module stores the *effective* area/power factors implied by the
+//! paper's own normalized rows (documented per accelerator below) and
+//! reproduces Table IV from the raw published specs.
+
+use crate::analytical::Arch;
+use crate::power::{area::area_mm2, energy};
+
+/// Technology node in nm.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Node {
+    Nm12,
+    Nm14,
+    Nm22,
+    Nm28,
+}
+
+impl Node {
+    pub fn nm(self) -> u32 {
+        match self {
+            Node::Nm12 => 12,
+            Node::Nm14 => 14,
+            Node::Nm22 => 22,
+            Node::Nm28 => 28,
+        }
+    }
+
+    /// Area multiplier to express a design at 22 nm.
+    ///
+    /// * 14 nm and 12 nm → 22 nm: x2.75 (Table IV implies
+    ///   725→~1995 mm² for Groq and 709→~1950 mm² for Hanguang; 12 nm is
+    ///   a 14 nm half-node with marginal density gain, hence the same
+    ///   factor — consistent with DeepScaleTool's published curves).
+    /// * 28 nm → 22 nm: the paper leaves the TPU's die area unscaled in
+    ///   its TOPS/mm² row (92/200 = 0.46), so the factor is 1.0.
+    pub fn area_factor_to_22nm(self) -> f64 {
+        match self {
+            Node::Nm12 | Node::Nm14 => 2.75,
+            Node::Nm22 => 1.0,
+            Node::Nm28 => 1.0,
+        }
+    }
+
+    /// Power multiplier to express a design at 22 nm.
+    ///
+    /// * 28 nm → 22 nm: x0.951 (TPU: 92 TOPS / (45 W x 0.951) = 2.15
+    ///   TOPS/W, the paper's normalized value).
+    /// * 14/12 nm → 22 nm: the paper's TOPS/W rows equal the raw specs
+    ///   (820/300 = 2.73, 825/275.9 = 2.99), i.e. factor 1.0.
+    pub fn power_factor_to_22nm(self) -> f64 {
+        match self {
+            Node::Nm28 => 0.951,
+            _ => 1.0,
+        }
+    }
+}
+
+/// Raw published specs of one accelerator (Table IV upper rows).
+#[derive(Debug, Clone, Copy)]
+pub struct Accelerator {
+    pub name: &'static str,
+    pub architecture: &'static str,
+    pub freq_mhz: u32,
+    pub precision: &'static str,
+    pub node: Node,
+    pub power_w: f64,
+    pub area_mm2: f64,
+    pub peak_tops: f64,
+    /// MAC count if the architecture is a systolic array (for the
+    /// size-normalized performance row).
+    pub macs: Option<u64>,
+}
+
+/// Derived, 22 nm-normalized metrics (Table IV lower rows).
+#[derive(Debug, Clone, Copy)]
+pub struct NormalizedMetrics {
+    /// Peak performance scaled to a 64x64 array (only for systolic
+    /// architectures with a known MAC count).
+    pub perf_at_64x64_tops: Option<f64>,
+    /// TOPS per mm² of 22 nm-normalized die area.
+    pub tops_per_mm2: f64,
+    /// TOPS per W of 22 nm-normalized power.
+    pub tops_per_w: f64,
+}
+
+impl Accelerator {
+    pub fn normalized(&self) -> NormalizedMetrics {
+        let area22 = self.area_mm2 * self.node.area_factor_to_22nm();
+        let power22 = self.power_w * self.node.power_factor_to_22nm();
+        NormalizedMetrics {
+            perf_at_64x64_tops: self.macs.map(|m| self.peak_tops * 4096.0 / m as f64),
+            tops_per_mm2: self.peak_tops / area22,
+            tops_per_w: self.peak_tops / power22,
+        }
+    }
+}
+
+/// The DiP row of Table IV, derived from our calibrated model.
+pub fn dip_accelerator() -> Accelerator {
+    Accelerator {
+        name: "DiP (this work)",
+        architecture: "64x64, 4,096 MACs",
+        freq_mhz: 1000,
+        precision: "INT8",
+        node: Node::Nm22,
+        power_w: energy::power_mw(Arch::Dip, 64) / 1_000.0,
+        area_mm2: area_mm2(Arch::Dip, 64),
+        peak_tops: energy::peak_tops(64),
+        macs: Some(4096),
+    }
+}
+
+/// Competitor rows (raw published specs, paper Table IV).
+pub const COMPETITORS: [Accelerator; 3] = [
+    Accelerator {
+        name: "Google TPU v1",
+        architecture: "256x256, 65,536 MACs",
+        freq_mhz: 700,
+        precision: "INT8",
+        node: Node::Nm28,
+        power_w: 45.0, // paper lists 40-50 W; midpoint
+        area_mm2: 200.0,
+        peak_tops: 92.0,
+        macs: Some(65_536),
+    },
+    Accelerator {
+        name: "Groq ThinkFast TSP",
+        architecture: "Tensor Stream Processor",
+        freq_mhz: 900,
+        precision: "INT8, FP16",
+        node: Node::Nm14,
+        power_w: 300.0,
+        area_mm2: 725.0,
+        peak_tops: 820.0,
+        macs: None,
+    },
+    Accelerator {
+        name: "Alibaba Hanguang 800",
+        architecture: "Tensor Cores",
+        freq_mhz: 700,
+        precision: "INT8, INT16, FP24",
+        node: Node::Nm12,
+        power_w: 275.9,
+        area_mm2: 709.0,
+        peak_tops: 825.0,
+        macs: None,
+    },
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tpu_row_matches_paper() {
+        let tpu = COMPETITORS[0];
+        let n = tpu.normalized();
+        // Norm. perf at 64x64: 92 / 16 = 5.75 TOPS.
+        assert!((n.perf_at_64x64_tops.unwrap() - 5.75).abs() < 0.01);
+        // Area-normalized: 0.46 TOPS/mm².
+        assert!((n.tops_per_mm2 - 0.46).abs() < 0.01);
+        // Energy efficiency: 2.15 TOPS/W.
+        assert!((n.tops_per_w - 2.15).abs() < 0.03);
+    }
+
+    #[test]
+    fn groq_row_matches_paper() {
+        let n = COMPETITORS[1].normalized();
+        assert!((n.tops_per_mm2 - 0.411).abs() < 0.01);
+        assert!((n.tops_per_w - 2.73).abs() < 0.01);
+        assert!(n.perf_at_64x64_tops.is_none());
+    }
+
+    #[test]
+    fn hanguang_row_matches_paper() {
+        let n = COMPETITORS[2].normalized();
+        assert!((n.tops_per_mm2 - 0.423).abs() < 0.01);
+        assert!((n.tops_per_w - 2.99).abs() < 0.01);
+    }
+
+    #[test]
+    fn dip_row_matches_paper() {
+        let dip = dip_accelerator();
+        let n = dip.normalized();
+        assert!((dip.peak_tops - 8.192).abs() < 0.01);
+        assert!((dip.power_w - 0.858).abs() < 0.06, "power={}", dip.power_w);
+        assert!((n.tops_per_mm2 - 8.2).abs() < 0.5, "tops/mm2={}", n.tops_per_mm2);
+        assert!((n.tops_per_w - 9.55).abs() < 0.5, "tops/W={}", n.tops_per_w);
+    }
+
+    #[test]
+    fn dip_beats_every_competitor_on_efficiency() {
+        let dip = dip_accelerator().normalized();
+        for acc in COMPETITORS {
+            let n = acc.normalized();
+            assert!(dip.tops_per_w > 3.0 * n.tops_per_w, "{}", acc.name);
+            assert!(dip.tops_per_mm2 > 10.0 * n.tops_per_mm2, "{}", acc.name);
+        }
+    }
+}

@@ -1,0 +1,218 @@
+//! PJRT execution of the AOT-compiled artifacts.
+//!
+//! Wraps the `xla` crate: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! HLO *text* is the interchange format (serialized protos from jax
+//! ≥0.5 carry 64-bit instruction ids that xla_extension 0.5.1 rejects).
+//!
+//! Python runs only at build time; this module is the entire inference
+//! hot path.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::manifest::{ArtifactEntry, Manifest};
+
+/// A loaded-and-compiled artifact, ready to execute.
+pub struct CompiledArtifact {
+    entry: ArtifactEntry,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl CompiledArtifact {
+    /// Execute with f32 inputs (row-major, shapes per the manifest).
+    /// Returns the flattened f32 output.
+    pub fn run_f32(&self, inputs: &[Vec<f32>]) -> Result<Vec<f32>> {
+        anyhow::ensure!(
+            inputs.len() == self.entry.inputs.len(),
+            "artifact {} wants {} inputs, got {}",
+            self.entry.name,
+            self.entry.inputs.len(),
+            inputs.len()
+        );
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, shape) in inputs.iter().zip(&self.entry.inputs) {
+            let numel: usize = shape.iter().product();
+            anyhow::ensure!(
+                data.len() == numel,
+                "artifact {}: input length {} != shape {:?}",
+                self.entry.name,
+                data.len(),
+                shape
+            );
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            literals.push(
+                xla::Literal::vec1(data)
+                    .reshape(&dims)
+                    .with_context(|| format!("reshaping input for {}", self.entry.name))?,
+            );
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {}", self.entry.name))?[0][0]
+            .to_literal_sync()?;
+        let out = if self.entry.returns_tuple1 { result.to_tuple1()? } else { result };
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    pub fn input_shapes(&self) -> &[Vec<usize>] {
+        &self.entry.inputs
+    }
+
+    pub fn name(&self) -> &str {
+        &self.entry.name
+    }
+}
+
+/// PJRT CPU runtime holding compiled artifacts.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<String, CompiledArtifact>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and load the manifest.
+    pub fn new(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Self { client, manifest, cache: HashMap::new() })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (and cache) an artifact by name.
+    pub fn load(&mut self, name: &str) -> Result<&CompiledArtifact> {
+        if !self.cache.contains_key(name) {
+            let entry = self.manifest.entry(name)?.clone();
+            let path = self.manifest.path_of(&entry);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("parsing HLO text {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+            self.cache.insert(name.to_string(), CompiledArtifact { entry, exe });
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Convenience: load + run.
+    pub fn run_f32(&mut self, name: &str, inputs: &[Vec<f32>]) -> Result<Vec<f32>> {
+        self.load(name)?;
+        self.cache[name].run_f32(inputs)
+    }
+
+    /// Execute a dip/ref artifact pair on identical random inputs and
+    /// return `(dip_out, ref_out, max_abs_diff)` — the end-to-end
+    /// numerics check that the permutated-dataflow HLO equals the plain
+    /// reference, through the exact path a production deployment uses.
+    pub fn verify_pair(&mut self, dip: &str, ref_: &str, seed: u64) -> Result<(Vec<f32>, Vec<f32>, f64)> {
+        let shapes = self.manifest.entry(dip)?.inputs.clone();
+        anyhow::ensure!(
+            shapes == self.manifest.entry(ref_)?.inputs,
+            "{dip} and {ref_} have different signatures"
+        );
+        let inputs: Vec<Vec<f32>> = shapes
+            .iter()
+            .enumerate()
+            .map(|(i, shape)| {
+                let numel: usize = shape.iter().product();
+                let scale = 1.0 / (*shape.last().unwrap_or(&1) as f32).sqrt();
+                random_f32(numel, seed + i as u64, scale)
+            })
+            .collect();
+        let a = self.run_f32(dip, &inputs)?;
+        let b = self.run_f32(ref_, &inputs)?;
+        anyhow::ensure!(a.len() == b.len(), "output length mismatch");
+        let max_diff = a
+            .iter()
+            .zip(&b)
+            .map(|(x, y)| (x - y).abs() as f64)
+            .fold(0.0, f64::max);
+        Ok((a, b, max_diff))
+    }
+}
+
+/// Deterministic pseudo-random f32s in [-scale, scale] (xorshift64*).
+pub fn random_f32(len: usize, seed: u64, scale: f32) -> Vec<f32> {
+    let mut s = seed.wrapping_mul(0x9E3779B97F4A7C15).max(1);
+    (0..len)
+        .map(|_| {
+            s ^= s >> 12;
+            s ^= s << 25;
+            s ^= s >> 27;
+            let u = (s.wrapping_mul(0x2545F4914F6CDD1D) >> 40) as f32 / (1u64 << 24) as f32;
+            (2.0 * u - 1.0) * scale
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> std::path::PathBuf {
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn random_f32_is_deterministic_and_bounded() {
+        let a = random_f32(64, 7, 0.5);
+        let b = random_f32(64, 7, 0.5);
+        assert_eq!(a, b);
+        assert!(a.iter().all(|v| v.abs() <= 0.5));
+        assert!(a.iter().any(|v| v.abs() > 0.01));
+    }
+
+    #[test]
+    fn tile_matmul_artifact_matches_reference() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let mut rt = Runtime::new(artifacts_dir()).unwrap();
+        // dip_tile_matmul takes PERMUTATED weights; verify against the
+        // plain matmul by permutating on the Rust side.
+        let x = random_f32(64 * 64, 1, 1.0);
+        let w = random_f32(64 * 64, 2, 1.0);
+        let mut wp = vec![0f32; 64 * 64];
+        for j in 0..64 {
+            for i in 0..64 {
+                wp[j * 64 + i] = w[((j + i) % 64) * 64 + i];
+            }
+        }
+        let got = rt.run_f32("dip_tile_matmul", &[x.clone(), wp]).unwrap();
+        let want = rt.run_f32("matmul_ref_64", &[x, w]).unwrap();
+        let max = got.iter().zip(&want).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+        assert!(max < 1e-3, "max diff {max}");
+    }
+
+    #[test]
+    fn model_pairs_agree_end_to_end() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let mut rt = Runtime::new(artifacts_dir()).unwrap();
+        for (dip, ref_) in [("mha_dip", "mha_ref"), ("ffn_dip", "ffn_ref"), ("layer_dip", "layer_ref")] {
+            let (_, _, max) = rt.verify_pair(dip, ref_, 42).unwrap();
+            assert!(max < 5e-3, "{dip} vs {ref_}: max diff {max}");
+        }
+    }
+}

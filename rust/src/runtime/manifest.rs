@@ -1,0 +1,170 @@
+//! Reader for `artifacts/manifest.json`, written once at build time by
+//! `python/compile/aot.py`. Describes every AOT-compiled HLO artifact:
+//! file name, input shapes, and the serving config they were lowered
+//! with. The Rust side never regenerates artifacts — `make artifacts`
+//! is the only producer.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::jsonio::Json;
+
+/// One artifact entry.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    /// Path of the HLO text file, relative to the artifacts dir.
+    pub file: PathBuf,
+    /// Input shapes (f32, row-major).
+    pub inputs: Vec<Vec<usize>>,
+    /// jax.export lowers with return_tuple=True: output is a 1-tuple.
+    pub returns_tuple1: bool,
+}
+
+/// The serving config the model artifacts were lowered with.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ArtifactConfig {
+    pub seq_len: usize,
+    pub d_model: usize,
+    pub num_heads: usize,
+    pub d_ff: usize,
+    pub tile: usize,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub config: ArtifactConfig,
+    pub artifacts: BTreeMap<String, ArtifactEntry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", path.display()))?;
+        let v = Json::parse(&text).map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+
+        let cfg = v.get("config").ok_or_else(|| anyhow!("manifest missing `config`"))?;
+        let get_usize = |key: &str| -> Result<usize> {
+            cfg.get(key)
+                .and_then(Json::as_u64)
+                .map(|v| v as usize)
+                .ok_or_else(|| anyhow!("config missing `{key}`"))
+        };
+        let config = ArtifactConfig {
+            seq_len: get_usize("seq_len")?,
+            d_model: get_usize("d_model")?,
+            num_heads: get_usize("num_heads")?,
+            d_ff: get_usize("d_ff")?,
+            tile: get_usize("tile")?,
+        };
+
+        let raw = v
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing `artifacts`"))?;
+        let mut artifacts = BTreeMap::new();
+        for (name, meta) in raw {
+            let file = meta
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("artifact {name} missing `file`"))?;
+            let inputs = meta
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("artifact {name} missing `inputs`"))?
+                .iter()
+                .map(|shape| {
+                    shape
+                        .as_arr()
+                        .map(|dims| dims.iter().filter_map(Json::as_u64).map(|d| d as usize).collect())
+                        .ok_or_else(|| anyhow!("artifact {name}: bad shape"))
+                })
+                .collect::<Result<Vec<Vec<usize>>>>()?;
+            let returns_tuple1 = meta
+                .get("returns_tuple1")
+                .map(|j| matches!(j, Json::Bool(true)))
+                .unwrap_or(true);
+            artifacts.insert(
+                name.clone(),
+                ArtifactEntry { name: name.clone(), file: PathBuf::from(file), inputs, returns_tuple1 },
+            );
+        }
+        Ok(Manifest { dir, config, artifacts })
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&ArtifactEntry> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact `{name}` not in manifest ({:?})", self.names()))
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.artifacts.keys().map(String::as_str).collect()
+    }
+
+    /// Absolute path of an artifact's HLO text.
+    pub fn path_of(&self, entry: &ArtifactEntry) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        let mut f = std::fs::File::create(dir.join("manifest.json")).unwrap();
+        f.write_all(body.as_bytes()).unwrap();
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("dip-manifest-test-{tag}-{}", std::process::id()));
+        let _ = std::fs::create_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn loads_minimal_manifest() {
+        let dir = tmpdir("ok");
+        write_manifest(
+            &dir,
+            r#"{"config":{"seq_len":128,"d_model":256,"num_heads":4,"d_ff":1024,"tile":64},
+                "artifacts":{"m":{"file":"m.hlo.txt","inputs":[[64,64],[64,64]],"returns_tuple1":true}}}"#,
+        );
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.config.tile, 64);
+        let e = m.entry("m").unwrap();
+        assert_eq!(e.inputs, vec![vec![64, 64], vec![64, 64]]);
+        assert!(m.path_of(e).ends_with("m.hlo.txt"));
+        assert!(m.entry("nope").is_err());
+    }
+
+    #[test]
+    fn missing_file_is_helpful() {
+        let dir = tmpdir("missing");
+        let _ = std::fs::remove_file(dir.join("manifest.json"));
+        let err = Manifest::load(&dir).unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn real_manifest_if_present() {
+        // Integration check against the actual build artifacts.
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            for name in ["dip_tile_matmul", "mha_dip", "mha_ref", "ffn_dip", "layer_dip"] {
+                let e = m.entry(name).unwrap();
+                assert!(m.path_of(e).exists(), "{name}");
+            }
+        }
+    }
+}

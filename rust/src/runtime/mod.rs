@@ -1,0 +1,9 @@
+//! PJRT runtime: loads the AOT-compiled HLO text artifacts produced by
+//! `make artifacts` and executes them on the CPU PJRT client from the
+//! Rust hot path. Python never runs at request time.
+
+pub mod client;
+pub mod manifest;
+
+pub use client::{random_f32, CompiledArtifact, Runtime};
+pub use manifest::{ArtifactConfig, ArtifactEntry, Manifest};

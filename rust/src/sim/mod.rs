@@ -1,0 +1,5 @@
+//! Shared cycle-simulation plumbing: event/statistics accounting and
+//! human-readable trace capture (used by the Fig. 4 walkthrough).
+
+pub mod stats;
+pub mod trace;

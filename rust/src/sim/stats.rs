@@ -1,0 +1,159 @@
+//! Event counters and per-run statistics emitted by the cycle-accurate
+//! simulators. Every energy number in the evaluation is derived from
+//! these counts via `power::energy` — the simulator counts *events*, the
+//! power model prices them.
+
+/// Raw switching-event counts accumulated over a simulation run.
+///
+/// Register widths follow the paper's PE (§III.A): weight and input
+/// registers are 8-bit, multiplier and adder registers are 16-bit. WS
+/// skew FIFOs hold 8-bit inputs on the input side and 16-bit psums on
+/// the output side (the basis of the paper's "registers normalized to
+/// 8-bit" accounting in Fig. 5c).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct EventCounts {
+    /// INT8 multiply-accumulate operations performed (one per PE per
+    /// active cycle).
+    pub mac_ops: u64,
+    /// 8-bit register writes (PE input registers; weight registers
+    /// during the load phase).
+    pub reg8_writes: u64,
+    /// 16-bit register writes (PE multiplier + adder pipeline registers).
+    pub reg16_writes: u64,
+    /// 8-bit skew-FIFO register writes (WS input synchronization group).
+    pub fifo8_writes: u64,
+    /// 16-bit skew-FIFO register writes (WS output synchronization group).
+    pub fifo16_writes: u64,
+    /// PE-cycles spent computing (pe_en && mul_en && adder_en asserted).
+    pub pe_active_cycles: u64,
+    /// PE-cycles spent idle but powered (clock-gated by the row-shared
+    /// enables; costed at gated-clock + leakage rates).
+    pub pe_idle_cycles: u64,
+}
+
+impl EventCounts {
+    /// Merge another run's counts into this one.
+    pub fn merge(&mut self, o: &EventCounts) {
+        self.mac_ops += o.mac_ops;
+        self.reg8_writes += o.reg8_writes;
+        self.reg16_writes += o.reg16_writes;
+        self.fifo8_writes += o.fifo8_writes;
+        self.fifo16_writes += o.fifo16_writes;
+        self.pe_active_cycles += o.pe_active_cycles;
+        self.pe_idle_cycles += o.pe_idle_cycles;
+    }
+
+    /// Scale all counts by an integer factor (tiling composition: K
+    /// identical tile passes produce exactly K-fold events).
+    pub fn scaled(&self, k: u64) -> EventCounts {
+        EventCounts {
+            mac_ops: self.mac_ops * k,
+            reg8_writes: self.reg8_writes * k,
+            reg16_writes: self.reg16_writes * k,
+            fifo8_writes: self.fifo8_writes * k,
+            fifo16_writes: self.fifo16_writes * k,
+            pe_active_cycles: self.pe_active_cycles * k,
+            pe_idle_cycles: self.pe_idle_cycles * k,
+        }
+    }
+}
+
+/// Statistics of one simulator run (a tile pass or a composed workload).
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
+pub struct RunStats {
+    /// Total cycles from first input presentation to last output
+    /// emission (the paper's latency definition, eqs (1)/(5)).
+    pub cycles: u64,
+    /// Cycles spent in the dedicated weight-load phase (reported
+    /// separately; eqs (1)/(5) exclude it, our schedules account for it
+    /// explicitly via the weight-load policy).
+    pub weight_load_cycles: u64,
+    /// Cycle (1-based) at which all N*N PEs were simultaneously active
+    /// for the first time — the paper's TFPU metric, eqs (4)/(7).
+    pub tfpu_cycles: u64,
+    /// Arithmetic ops completed: 2 ops (mul+add) per MAC.
+    pub total_ops: u64,
+    /// Switching events for the energy model.
+    pub events: EventCounts,
+}
+
+impl RunStats {
+    /// Throughput in operations per cycle (the paper's Fig 5b metric).
+    pub fn ops_per_cycle(&self) -> f64 {
+        if self.cycles == 0 {
+            0.0
+        } else {
+            self.total_ops as f64 / self.cycles as f64
+        }
+    }
+
+    /// Mean PE utilization over the run: active PE-cycles / (PEs*cycles).
+    pub fn utilization(&self, n_pes: u64) -> f64 {
+        let denom = (n_pes * self.cycles) as f64;
+        if denom == 0.0 {
+            0.0
+        } else {
+            self.events.pe_active_cycles as f64 / denom
+        }
+    }
+
+    /// Merge a subsequent run executed back-to-back (cycles add; TFPU
+    /// keeps the first run's value).
+    pub fn chain(&mut self, o: &RunStats) {
+        self.cycles += o.cycles;
+        self.weight_load_cycles += o.weight_load_cycles;
+        if self.tfpu_cycles == 0 {
+            self.tfpu_cycles = o.tfpu_cycles;
+        }
+        self.total_ops += o.total_ops;
+        self.events.merge(&o.events);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_adds_counts() {
+        let mut a = EventCounts { mac_ops: 5, ..Default::default() };
+        a.merge(&EventCounts { mac_ops: 7, reg8_writes: 2, ..Default::default() });
+        assert_eq!(a.mac_ops, 12);
+        assert_eq!(a.reg8_writes, 2);
+    }
+
+    #[test]
+    fn scaled_multiplies() {
+        let a = EventCounts { mac_ops: 3, fifo8_writes: 4, ..Default::default() };
+        let s = a.scaled(5);
+        assert_eq!(s.mac_ops, 15);
+        assert_eq!(s.fifo8_writes, 20);
+    }
+
+    #[test]
+    fn ops_per_cycle() {
+        let s = RunStats { cycles: 10, total_ops: 200, ..Default::default() };
+        assert_eq!(s.ops_per_cycle(), 20.0);
+        assert_eq!(RunStats::default().ops_per_cycle(), 0.0);
+    }
+
+    #[test]
+    fn utilization_bounds() {
+        let s = RunStats {
+            cycles: 10,
+            events: EventCounts { pe_active_cycles: 40, ..Default::default() },
+            ..Default::default()
+        };
+        assert_eq!(s.utilization(4), 1.0);
+        assert_eq!(s.utilization(8), 0.5);
+    }
+
+    #[test]
+    fn chain_accumulates_and_keeps_first_tfpu() {
+        let mut a = RunStats { cycles: 10, tfpu_cycles: 3, total_ops: 100, ..Default::default() };
+        a.chain(&RunStats { cycles: 5, tfpu_cycles: 9, total_ops: 50, ..Default::default() });
+        assert_eq!(a.cycles, 15);
+        assert_eq!(a.tfpu_cycles, 3);
+        assert_eq!(a.total_ops, 150);
+    }
+}

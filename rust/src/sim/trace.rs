@@ -1,0 +1,75 @@
+//! Cycle-by-cycle trace capture for small arrays — regenerates the
+//! paper's Fig. 4 walkthrough (`dip trace --n 3`) and is used by the
+//! walkthrough unit tests.
+
+use std::fmt::Write as _;
+
+/// Snapshot of one array register file at the end of a cycle.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CycleSnapshot {
+    /// Cycle index (0 = first input row presented).
+    pub cycle: u64,
+    /// Input registers, row-major (N*N).
+    pub x_regs: Vec<i32>,
+    /// Psum registers, row-major (N*N).
+    pub psum_regs: Vec<i32>,
+    /// Output row emitted this cycle, if any.
+    pub output_row: Option<Vec<i32>>,
+}
+
+/// Accumulates [`CycleSnapshot`]s during a traced run.
+#[derive(Debug, Default)]
+pub struct Trace {
+    pub n: usize,
+    pub snapshots: Vec<CycleSnapshot>,
+}
+
+impl Trace {
+    pub fn new(n: usize) -> Self {
+        Self { n, snapshots: Vec::new() }
+    }
+
+    pub fn record(&mut self, snap: CycleSnapshot) {
+        self.snapshots.push(snap);
+    }
+
+    /// Render the trace as the Fig. 4-style cycle table.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        let n = self.n;
+        for snap in &self.snapshots {
+            let _ = writeln!(s, "Cycle {}:", snap.cycle);
+            for r in 0..n {
+                let xs: Vec<String> =
+                    snap.x_regs[r * n..(r + 1) * n].iter().map(|v| format!("{v:>5}")).collect();
+                let ps: Vec<String> =
+                    snap.psum_regs[r * n..(r + 1) * n].iter().map(|v| format!("{v:>7}")).collect();
+                let _ = writeln!(s, "  row {r}: x=[{}] psum=[{}]", xs.join(" "), ps.join(" "));
+            }
+            if let Some(out) = &snap.output_row {
+                let _ = writeln!(s, "  => output row: {out:?}");
+            }
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_contains_cycles_and_outputs() {
+        let mut t = Trace::new(2);
+        t.record(CycleSnapshot {
+            cycle: 0,
+            x_regs: vec![1, 2, 3, 4],
+            psum_regs: vec![5, 6, 7, 8],
+            output_row: Some(vec![9, 10]),
+        });
+        let s = t.render();
+        assert!(s.contains("Cycle 0"));
+        assert!(s.contains("output row: [9, 10]"));
+        assert!(s.contains("row 1"));
+    }
+}

@@ -1,0 +1,2 @@
+//! The paper's §IV.C tiling methodology.
+pub mod schedule;

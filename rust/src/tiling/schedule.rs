@@ -1,0 +1,363 @@
+//! The paper's §IV.C tiling methodology.
+//!
+//! "Matrix tiling is used to process matrix multiplication workloads on
+//! DiP and TPU-like architectures by dividing the input matrices M1 and
+//! M2 into sub-matrices (tiles) of 64x64. ... every tile of M2 is loaded
+//! once and remains stationary throughout the computation for the
+//! corresponding output tile. For each tile of M2, respective tiles from
+//! M1 are iteratively loaded, multiplied, and saved as output partial
+//! summation (psum) tiles. After processing all tiles, the final output
+//! matrix O is constructed by accumulating the associated psum tiles."
+//!
+//! Two entry points:
+//!
+//! * [`run_tiled_matmul`] — *functional*: actually streams every tile
+//!   through a cycle-accurate array and accumulates psums; the
+//!   correctness witness for the whole methodology (tested against the
+//!   plain i32 matmul for divisible and ragged shapes alike).
+//! * [`workload_cost`] — *metrics*: composes per-tile cycle counts and
+//!   switching events (from one simulated representative tile pass)
+//!   across the full schedule; this is what drives the Fig. 6
+//!   energy/latency evaluation. Equality of the two paths' event totals
+//!   on small workloads is covered by tests.
+
+use crate::analytical::Arch;
+use crate::arch::{dip::DipArray, ws::WsArray, SystolicArray};
+use crate::matrix::{random_i8, Mat};
+use crate::sim::stats::RunStats;
+use crate::workloads::dims::MatMulDims;
+
+/// Whether the per-M2-tile weight load is hidden behind the previous
+/// tile's compute (double-buffered weight staging, the paper's Fig. 6
+/// operating point) or serializes with it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum WeightLoadPolicy {
+    /// Weight loads overlap compute (default; reproduces the paper's
+    /// 1.49x..1.03x latency improvement band).
+    #[default]
+    Overlapped,
+    /// Weight loads serialize with compute (ablation).
+    Blocking,
+}
+
+/// Tiling configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct TilingConfig {
+    /// Array edge (the paper evaluates 64).
+    pub tile: usize,
+    /// Architecture to schedule on.
+    pub arch: Arch,
+    /// MAC pipeline stages.
+    pub mac_stages: u64,
+    pub weight_load: WeightLoadPolicy,
+}
+
+impl TilingConfig {
+    pub fn dip64() -> Self {
+        Self { tile: 64, arch: Arch::Dip, mac_stages: 2, weight_load: WeightLoadPolicy::default() }
+    }
+
+    pub fn ws64() -> Self {
+        Self { tile: 64, arch: Arch::Ws, mac_stages: 2, weight_load: WeightLoadPolicy::default() }
+    }
+
+    fn make_array(&self) -> Box<dyn SystolicArray> {
+        match self.arch {
+            Arch::Ws => Box::new(WsArray::new(self.tile, self.mac_stages)),
+            Arch::Dip => Box::new(DipArray::new(self.tile, self.mac_stages)),
+        }
+    }
+}
+
+/// Cost summary of one workload on one architecture.
+#[derive(Debug, Clone, Copy)]
+pub struct WorkloadCost {
+    pub dims: MatMulDims,
+    pub arch: Arch,
+    /// End-to-end cycles under the schedule (weight-load policy applied).
+    pub cycles: u64,
+    /// Cycles spent in (non-hidden) weight loading.
+    pub weight_load_cycles: u64,
+    /// Energy in µJ, paper accounting: synthesized full-utilization
+    /// power x measured latency (the paper's Fig. 6 "actual energy" —
+    /// its improvement bands factor exactly as latency x power ratios).
+    pub energy_uj: f64,
+    /// Energy in µJ from the calibrated *event* model (prices each
+    /// switching event the cycle-accurate sim counted; charges
+    /// partially-occupied FIFOs and idle PEs honestly). Reported as an
+    /// ablation — it shows the paper's accounting slightly overstates
+    /// WS energy during fill/drain.
+    pub energy_event_uj: f64,
+    /// M2 (stationary) tiles = contraction-tiles x output-col-tiles.
+    pub m2_tiles: u64,
+    /// M1 (streamed) tiles per M2 tile.
+    pub m1_tiles_per_m2: u64,
+    /// Aggregate switching events.
+    pub stats: RunStats,
+}
+
+impl WorkloadCost {
+    /// Wall-clock at the paper's 1 GHz, in µs.
+    pub fn latency_us(&self) -> f64 {
+        self.cycles as f64 / 1_000.0 / crate::power::energy::FREQ_GHZ
+    }
+}
+
+/// Functional tiled matmul: `X (MxN) @ W (NxK)` on the configured array,
+/// returning the exact product (psum-accumulated across contraction
+/// tiles) together with composed statistics.
+///
+/// Ragged dimensions are zero-padded to the tile size — zero rows/cols
+/// contribute nothing to the psums, so the unpadded region equals the
+/// reference product exactly.
+pub fn run_tiled_matmul(x: &Mat<i8>, w: &Mat<i8>, cfg: &TilingConfig) -> (Mat<i32>, WorkloadCost) {
+    let (m, n_dim) = (x.rows(), x.cols());
+    let k_dim = w.cols();
+    assert_eq!(w.rows(), n_dim, "contraction mismatch");
+    let t = cfg.tile;
+    let (tm, tn, tk) = (m.div_ceil(t), n_dim.div_ceil(t), k_dim.div_ceil(t));
+
+    let mut array = cfg.make_array();
+    let mut out = Mat::<i32>::zeros(m, k_dim);
+    let mut agg = RunStats::default();
+    let mut total_cycles = 0u64;
+    let mut total_wl_cycles = 0u64;
+
+    // M2 tile (kn: contraction block, ko: output-column block) stays
+    // stationary; all M1 row-tiles stream through it back-to-back
+    // ("iteratively loaded" with no pipeline drain in between).
+    for kn in 0..tn {
+        for ko in 0..tk {
+            let w_tile = w.block(kn * t, ko * t, t, t);
+            let load_cycles = array.load_weights(&w_tile);
+            // Overlapped: every load (including the first) is hidden
+            // behind compute — the array is continuously busy in the
+            // paper's Fig. 6 operating point, matching its 1.49x
+            // small-workload latency ratio (= eq(1)/eq(5), no load term).
+            if matches!(cfg.weight_load, WeightLoadPolicy::Blocking) {
+                total_cycles += load_cycles;
+                total_wl_cycles += load_cycles;
+            }
+            // One contiguous row stream covering every M1 tile (rows
+            // zero-padded up to the tile multiple).
+            let x_strip = x.block(0, kn * t, tm * t, t);
+            let run = array.run_tile(&x_strip);
+            // Psum accumulation into the output column strip (§IV.C).
+            let mut strip = out.block(0, ko * t, tm * t, t);
+            strip.accumulate(&run.outputs);
+            out.set_block(0, ko * t, &strip);
+            total_cycles += run.stats.cycles;
+            agg.chain(&run.stats);
+        }
+    }
+    agg.cycles = total_cycles;
+    agg.weight_load_cycles = total_wl_cycles;
+    let energy_event = crate::power::energy::energy_pj(t as u64, &agg).total_uj();
+    let energy = paper_energy_uj(cfg.arch, t as u64, total_cycles + total_wl_cycles);
+    let dims = MatMulDims::new(m as u64, n_dim as u64, k_dim as u64);
+    (
+        out,
+        WorkloadCost {
+            dims,
+            arch: cfg.arch,
+            cycles: total_cycles,
+            weight_load_cycles: total_wl_cycles,
+            energy_uj: energy,
+            energy_event_uj: energy_event,
+            m2_tiles: (tn * tk) as u64,
+            m1_tiles_per_m2: tm as u64,
+            stats: agg,
+        },
+    )
+}
+
+/// Metrics-only cost of a workload: simulates ONE representative M2-tile
+/// pass (streaming all `M` rows back-to-back) and composes it across the
+/// `tn x tk` stationary tiles — exact because every M2-tile pass is
+/// cycle- and event-identical under the schedule.
+pub fn workload_cost(dims: MatMulDims, cfg: &TilingConfig) -> WorkloadCost {
+    let t = cfg.tile as u64;
+    let (tm, tn, tk) = dims.tiles(t);
+    let rows_per_pass = (tm * t) as usize; // zero-padded row stream
+
+    let mut array = cfg.make_array();
+    let w = random_i8(cfg.tile, cfg.tile, 0xD1F);
+    let load_cycles = array.load_weights(&w);
+    let x = random_i8(rows_per_pass, cfg.tile, 0xD1F + 1);
+    let pass = array.run_tile(&x);
+
+    let m2_tiles = tn * tk;
+    let mut stats = RunStats {
+        cycles: pass.stats.cycles * m2_tiles,
+        weight_load_cycles: 0,
+        tfpu_cycles: pass.stats.tfpu_cycles,
+        total_ops: pass.stats.total_ops * m2_tiles,
+        events: pass.stats.events.scaled(m2_tiles),
+    };
+    // Weight-load policy: Overlapped hides every load behind compute
+    // (double-buffered staging); Blocking pays one load per M2 tile.
+    let wl_cycles = match cfg.weight_load {
+        WeightLoadPolicy::Overlapped => 0,
+        WeightLoadPolicy::Blocking => load_cycles * m2_tiles,
+    };
+    stats.weight_load_cycles = wl_cycles;
+    let cycles = stats.cycles + wl_cycles;
+    let energy_event = crate::power::energy::energy_pj(t, &stats).total_uj();
+    WorkloadCost {
+        dims,
+        arch: cfg.arch,
+        cycles,
+        weight_load_cycles: wl_cycles,
+        energy_uj: paper_energy_uj(cfg.arch, t, cycles),
+        energy_event_uj: energy_event,
+        m2_tiles,
+        m1_tiles_per_m2: tm,
+        stats,
+    }
+}
+
+/// Paper-accounting energy: full-utilization power (Table I model) x
+/// latency. `1 mW x 1 ns = 1 pJ`.
+fn paper_energy_uj(arch: Arch, n: u64, cycles: u64) -> f64 {
+    let p_mw = crate::power::energy::power_mw(arch, n);
+    let t_ns = cycles as f64 / crate::power::energy::FREQ_GHZ;
+    p_mw * t_ns / 1e6
+}
+
+/// DiP-vs-WS comparison for one workload (the Fig. 6 data points).
+#[derive(Debug, Clone, Copy)]
+pub struct WorkloadComparison {
+    pub dims: MatMulDims,
+    pub ws: WorkloadCost,
+    pub dip: WorkloadCost,
+}
+
+impl WorkloadComparison {
+    pub fn energy_improvement(&self) -> f64 {
+        self.ws.energy_uj / self.dip.energy_uj
+    }
+
+    pub fn latency_improvement(&self) -> f64 {
+        self.ws.cycles as f64 / self.dip.cycles as f64
+    }
+
+    /// Improvement under the event-based ablation accounting.
+    pub fn energy_improvement_event(&self) -> f64 {
+        self.ws.energy_event_uj / self.dip.energy_event_uj
+    }
+}
+
+/// Evaluate one workload on both 64x64 architectures (paper Fig. 6).
+pub fn compare_workload(dims: MatMulDims) -> WorkloadComparison {
+    WorkloadComparison {
+        dims,
+        ws: workload_cost(dims, &TilingConfig::ws64()),
+        dip: workload_cost(dims, &TilingConfig::dip64()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg(arch: Arch) -> TilingConfig {
+        TilingConfig { tile: 8, arch, mac_stages: 2, weight_load: WeightLoadPolicy::Overlapped }
+    }
+
+    #[test]
+    fn tiled_matmul_exact_divisible() {
+        for arch in [Arch::Ws, Arch::Dip] {
+            let x = random_i8(16, 24, 1);
+            let w = random_i8(24, 16, 2);
+            let (got, _) = run_tiled_matmul(&x, &w, &small_cfg(arch));
+            assert_eq!(got, x.widen().matmul(&w.widen()), "{arch:?}");
+        }
+    }
+
+    #[test]
+    fn tiled_matmul_exact_ragged() {
+        for arch in [Arch::Ws, Arch::Dip] {
+            let x = random_i8(13, 19, 3);
+            let w = random_i8(19, 10, 4);
+            let (got, _) = run_tiled_matmul(&x, &w, &small_cfg(arch));
+            assert_eq!(got, x.widen().matmul(&w.widen()), "{arch:?}");
+        }
+    }
+
+    #[test]
+    fn cost_composition_matches_functional_run() {
+        // workload_cost's composed cycles/events == the functional
+        // path's (same schedule, divisible dims).
+        for arch in [Arch::Ws, Arch::Dip] {
+            let dims = MatMulDims::new(24, 16, 16);
+            let cfg = small_cfg(arch);
+            let x = random_i8(24, 16, 5);
+            let w = random_i8(16, 16, 6);
+            let (_, functional) = run_tiled_matmul(&x, &w, &cfg);
+            let composed = workload_cost(dims, &cfg);
+            assert_eq!(composed.cycles, functional.cycles);
+            assert_eq!(composed.weight_load_cycles, functional.weight_load_cycles);
+            assert_eq!(composed.stats.events.mac_ops, functional.stats.events.mac_ops);
+            assert_eq!(
+                composed.stats.events.fifo8_writes,
+                functional.stats.events.fifo8_writes
+            );
+        }
+    }
+
+    #[test]
+    fn latency_improvement_band_matches_fig6() {
+        // 64x64, S=2: small workloads ~1.49x, large ~1.03x.
+        let small = compare_workload(MatMulDims::new(64, 64, 64));
+        assert!(
+            (small.latency_improvement() - 1.49).abs() < 0.02,
+            "small={}",
+            small.latency_improvement()
+        );
+        let large = compare_workload(MatMulDims::new(2048, 5120, 5120));
+        assert!(
+            (large.latency_improvement() - 1.03).abs() < 0.02,
+            "large={}",
+            large.latency_improvement()
+        );
+    }
+
+    #[test]
+    fn energy_improvement_band_matches_fig6() {
+        // Fig 6: 1.81x (small) .. 1.25x (large).
+        let small = compare_workload(MatMulDims::new(64, 64, 64));
+        assert!(
+            small.energy_improvement() > 1.6 && small.energy_improvement() < 2.0,
+            "small={}",
+            small.energy_improvement()
+        );
+        let large = compare_workload(MatMulDims::new(2048, 5120, 5120));
+        assert!(
+            large.energy_improvement() > 1.15 && large.energy_improvement() < 1.35,
+            "large={}",
+            large.energy_improvement()
+        );
+    }
+
+    #[test]
+    fn blocking_weight_load_costs_more() {
+        let dims = MatMulDims::new(256, 256, 256);
+        let over = workload_cost(dims, &TilingConfig::dip64());
+        let block = workload_cost(
+            dims,
+            &TilingConfig {
+                weight_load: WeightLoadPolicy::Blocking,
+                ..TilingConfig::dip64()
+            },
+        );
+        assert!(block.cycles > over.cycles);
+        assert_eq!(block.stats.events.mac_ops, over.stats.events.mac_ops);
+    }
+
+    #[test]
+    fn m2_stationary_tile_counts() {
+        let c = workload_cost(MatMulDims::new(128, 256, 512), &TilingConfig::dip64());
+        assert_eq!(c.m2_tiles, 4 * 8);
+        assert_eq!(c.m1_tiles_per_m2, 2);
+    }
+}

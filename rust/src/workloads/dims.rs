@@ -1,0 +1,176 @@
+//! Matrix-multiplication workload dimensions, paper Table III
+//! convention: the input matrices are `M x N` and `N x K` (N is the
+//! contraction dim), the output is `M x K`. Fig. 6 labels workloads as
+//! `M-N-K`.
+
+use std::fmt;
+
+/// One matmul workload `M x N @ N x K` (paper naming).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct MatMulDims {
+    pub m: u64,
+    pub n: u64,
+    pub k: u64,
+}
+
+impl MatMulDims {
+    pub fn new(m: u64, n: u64, k: u64) -> Self {
+        Self { m, n, k }
+    }
+
+    /// Total scalar operations: 2 M N K (mul + add).
+    pub fn total_ops(&self) -> u64 {
+        2 * self.m * self.n * self.k
+    }
+
+    /// MAC count (= M N K).
+    pub fn macs(&self) -> u64 {
+        self.m * self.n * self.k
+    }
+
+    /// Tile counts when processed on a `t x t` array with zero-padding
+    /// of ragged edges: (input-row tiles, contraction tiles, output-col
+    /// tiles).
+    pub fn tiles(&self, t: u64) -> (u64, u64, u64) {
+        (self.m.div_ceil(t), self.n.div_ceil(t), self.k.div_ceil(t))
+    }
+}
+
+impl fmt::Display for MatMulDims {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}-{}-{}", self.m, self.n, self.k)
+    }
+}
+
+/// Which transformer stage a workload comes from (Table III rows).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Stage {
+    /// `Q_i = X W_i^Q` etc.: `l x d_model x d_k` per head.
+    QkvProjection,
+    /// `Q_i K_i^T`: `l x d_k x l` per head.
+    AttentionScores,
+    /// `S_i V_i`: `l x l x d_k` per head.
+    AttentionOutput,
+    /// `Attn_concat W^O`: `l x d_model x d_model`.
+    OutputProjection,
+    /// FFN `W_1`: `l x d_model x d_ffn`.
+    FfnW1,
+    /// FFN `W_2`: `l x d_ffn x d_model`.
+    FfnW2,
+}
+
+impl Stage {
+    pub fn is_mha(self) -> bool {
+        !matches!(self, Stage::FfnW1 | Stage::FfnW2)
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::QkvProjection => "QKV projection",
+            Stage::AttentionScores => "attention scores",
+            Stage::AttentionOutput => "attention output",
+            Stage::OutputProjection => "output projection",
+            Stage::FfnW1 => "FFN W1",
+            Stage::FfnW2 => "FFN W2",
+        }
+    }
+}
+
+/// A workload annotated with its provenance.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Workload {
+    pub dims: MatMulDims,
+    pub stage: Stage,
+    /// How many times this matmul runs per layer (e.g. per-head stages
+    /// run `h` times; QKV projections additionally x3 for Q, K, V).
+    pub repeats: u64,
+}
+
+/// Expand one transformer layer (Table III) into its matmul workloads.
+///
+/// `l` = sequence length, `d_model` = hidden, `h` = heads,
+/// `d_k` = head size, `d_ffn` = FFN size.
+pub fn layer_workloads(l: u64, d_model: u64, h: u64, d_k: u64, d_ffn: u64) -> Vec<Workload> {
+    vec![
+        Workload {
+            dims: MatMulDims::new(l, d_model, d_k),
+            stage: Stage::QkvProjection,
+            repeats: 3 * h,
+        },
+        Workload {
+            dims: MatMulDims::new(l, d_k, l),
+            stage: Stage::AttentionScores,
+            repeats: h,
+        },
+        Workload {
+            dims: MatMulDims::new(l, l, d_k),
+            stage: Stage::AttentionOutput,
+            repeats: h,
+        },
+        Workload {
+            dims: MatMulDims::new(l, d_model, d_model),
+            stage: Stage::OutputProjection,
+            repeats: 1,
+        },
+        Workload { dims: MatMulDims::new(l, d_model, d_ffn), stage: Stage::FfnW1, repeats: 1 },
+        Workload { dims: MatMulDims::new(l, d_ffn, d_model), stage: Stage::FfnW2, repeats: 1 },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ops_and_macs() {
+        let d = MatMulDims::new(2, 3, 4);
+        assert_eq!(d.macs(), 24);
+        assert_eq!(d.total_ops(), 48);
+    }
+
+    #[test]
+    fn tiles_round_up() {
+        let d = MatMulDims::new(100, 64, 129);
+        assert_eq!(d.tiles(64), (2, 1, 3));
+    }
+
+    #[test]
+    fn display_is_m_n_k() {
+        assert_eq!(MatMulDims::new(64, 768, 64).to_string(), "64-768-64");
+    }
+
+    #[test]
+    fn bert_base_layer_workloads() {
+        // BERT-base: d_model=768, h=12, d_k=64, d_ffn=3072, l=128.
+        let ws = layer_workloads(128, 768, 12, 64, 3072);
+        assert_eq!(ws.len(), 6);
+        let qkv = &ws[0];
+        assert_eq!(qkv.dims, MatMulDims::new(128, 768, 64));
+        assert_eq!(qkv.repeats, 36);
+        let scores = &ws[1];
+        assert_eq!(scores.dims, MatMulDims::new(128, 64, 128));
+        assert_eq!(scores.repeats, 12);
+        let ffn1 = &ws[4];
+        assert_eq!(ffn1.dims, MatMulDims::new(128, 768, 3072));
+    }
+
+    #[test]
+    fn mha_ffn_split() {
+        let ws = layer_workloads(64, 512, 8, 64, 2048);
+        let mha: Vec<_> = ws.iter().filter(|w| w.stage.is_mha()).collect();
+        let ffn: Vec<_> = ws.iter().filter(|w| !w.stage.is_mha()).collect();
+        assert_eq!(mha.len(), 4);
+        assert_eq!(ffn.len(), 2);
+    }
+
+    #[test]
+    fn total_layer_macs_sanity() {
+        // Total MHA+FFN MACs for one layer must match the closed form:
+        // 3*l*d*d (QKV over all heads) + 2*l*l*d + l*d*d + 2*l*d*dffn.
+        let (l, d, h, dk, dff) = (128u64, 768, 12, 64, 3072);
+        let total: u64 =
+            layer_workloads(l, d, h, dk, dff).iter().map(|w| w.dims.macs() * w.repeats).sum();
+        let closed = 3 * l * d * d + 2 * l * l * d + l * d * d + 2 * l * d * dff;
+        assert_eq!(total, closed);
+    }
+}

@@ -1,0 +1,3 @@
+//! Transformer workload generation (paper Table III / §IV.C).
+pub mod dims;
+pub mod models;

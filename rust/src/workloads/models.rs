@@ -1,0 +1,172 @@
+//! The nine transformer models of the paper's evaluation (§IV.C):
+//! Encoder-Decoder (Vanilla Transformer, T5, BART), Encoder-only (BERT,
+//! ALBERT, Transformer-XL) and Decoder-only (GPT-2, GPT-3, LLaMA).
+//!
+//! Hyper-parameters are constrained to the ranges the paper states:
+//! `d_model in {512, 768, 1024, 1280, 5120}`, `d_k in {64, 128}`,
+//! `d_ffn in {2048, 3072, 4096, 5120}`, `l in {64..2048}` — so the
+//! large decoder models use their 1280/5120-hidden variants (GPT-2
+//! large, GPT-3/LLaMA 13B-class).
+
+use super::dims::{layer_workloads, Workload};
+
+/// Model family (paper groups results by these).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModelType {
+    EncoderDecoder,
+    EncoderOnly,
+    DecoderOnly,
+}
+
+/// One transformer model's layer hyper-parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct TransformerModel {
+    pub name: &'static str,
+    pub model_type: ModelType,
+    pub d_model: u64,
+    pub num_heads: u64,
+    pub d_k: u64,
+    pub d_ffn: u64,
+}
+
+impl TransformerModel {
+    /// All matmul workloads of one layer at sequence length `l`.
+    pub fn layer_workloads(&self, l: u64) -> Vec<Workload> {
+        layer_workloads(l, self.d_model, self.num_heads, self.d_k, self.d_ffn)
+    }
+}
+
+/// Paper sequence lengths (§IV.C).
+pub const SEQ_LENS: [u64; 6] = [64, 128, 256, 512, 1024, 2048];
+
+/// The nine models of the paper's evaluation.
+pub const MODELS: [TransformerModel; 9] = [
+    TransformerModel {
+        name: "Transformer",
+        model_type: ModelType::EncoderDecoder,
+        d_model: 512,
+        num_heads: 8,
+        d_k: 64,
+        d_ffn: 2048,
+    },
+    TransformerModel {
+        name: "T5",
+        model_type: ModelType::EncoderDecoder,
+        d_model: 768,
+        num_heads: 12,
+        d_k: 64,
+        d_ffn: 3072,
+    },
+    TransformerModel {
+        name: "BART",
+        model_type: ModelType::EncoderDecoder,
+        d_model: 1024,
+        num_heads: 16,
+        d_k: 64,
+        d_ffn: 4096,
+    },
+    TransformerModel {
+        name: "BERT",
+        model_type: ModelType::EncoderOnly,
+        d_model: 768,
+        num_heads: 12,
+        d_k: 64,
+        d_ffn: 3072,
+    },
+    TransformerModel {
+        name: "ALBERT",
+        model_type: ModelType::EncoderOnly,
+        d_model: 768,
+        num_heads: 12,
+        d_k: 64,
+        d_ffn: 3072,
+    },
+    TransformerModel {
+        name: "Transformer-XL",
+        model_type: ModelType::EncoderOnly,
+        d_model: 1024,
+        num_heads: 16,
+        d_k: 64,
+        d_ffn: 4096,
+    },
+    TransformerModel {
+        name: "GPT-2",
+        model_type: ModelType::DecoderOnly,
+        d_model: 1280,
+        num_heads: 20,
+        d_k: 64,
+        d_ffn: 5120,
+    },
+    TransformerModel {
+        name: "GPT-3",
+        model_type: ModelType::DecoderOnly,
+        d_model: 5120,
+        num_heads: 40,
+        d_k: 128,
+        d_ffn: 5120,
+    },
+    TransformerModel {
+        name: "LLaMA",
+        model_type: ModelType::DecoderOnly,
+        d_model: 5120,
+        num_heads: 40,
+        d_k: 128,
+        d_ffn: 5120,
+    },
+];
+
+/// Look a model up by (case-insensitive) name.
+pub fn model_by_name(name: &str) -> Option<&'static TransformerModel> {
+    MODELS.iter().find(|m| m.name.eq_ignore_ascii_case(name))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nine_models_three_per_type() {
+        assert_eq!(MODELS.len(), 9);
+        for ty in [ModelType::EncoderDecoder, ModelType::EncoderOnly, ModelType::DecoderOnly] {
+            assert_eq!(MODELS.iter().filter(|m| m.model_type == ty).count(), 3, "{ty:?}");
+        }
+    }
+
+    #[test]
+    fn hyper_params_within_paper_ranges() {
+        for m in MODELS {
+            assert!([512, 768, 1024, 1280, 5120].contains(&m.d_model), "{}", m.name);
+            assert!([64, 128].contains(&m.d_k), "{}", m.name);
+            assert!([2048, 3072, 4096, 5120].contains(&m.d_ffn), "{}", m.name);
+            assert_eq!(m.num_heads * m.d_k, m.d_model, "{}: heads*d_k == d_model", m.name);
+        }
+    }
+
+    #[test]
+    fn all_dims_divisible_by_64() {
+        // The paper: "the majority of MHA and FFN workload dimensions
+        // are divisible by 64" — with these hyper-params, all are.
+        for m in MODELS {
+            for l in SEQ_LENS {
+                for w in m.layer_workloads(l) {
+                    assert_eq!(w.dims.m % 64, 0);
+                    assert_eq!(w.dims.n % 64, 0);
+                    assert_eq!(w.dims.k % 64, 0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert!(model_by_name("bert").is_some());
+        assert!(model_by_name("LLaMA").is_some());
+        assert!(model_by_name("resnet").is_none());
+    }
+
+    #[test]
+    fn bert_matches_published_config() {
+        let bert = model_by_name("BERT").unwrap();
+        assert_eq!((bert.d_model, bert.num_heads, bert.d_ffn), (768, 12, 3072));
+    }
+}

@@ -1,0 +1,113 @@
+//! End-to-end tests over the PJRT runtime: the AOT HLO artifacts
+//! (JAX + Pallas compile path) executed from Rust, cross-checked against
+//! the cycle-accurate simulators and the reference artifacts.
+//!
+//! These tests are skipped (with a notice) when `make artifacts` has not
+//! been run — CI runs them after the artifact build.
+
+use dip_core::coordinator::{Coordinator, CoordinatorConfig, DeviceConfig};
+use dip_core::matrix::Mat;
+use dip_core::runtime::{random_f32, Runtime};
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn runtime_or_skip() -> Option<Runtime> {
+    if !artifacts_dir().join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts missing; run `make artifacts`");
+        return None;
+    }
+    Some(Runtime::new(artifacts_dir()).expect("runtime"))
+}
+
+#[test]
+fn all_artifacts_compile_and_execute() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let names: Vec<String> = rt.manifest().names().iter().map(|s| s.to_string()).collect();
+    assert!(names.len() >= 10, "{names:?}");
+    for name in names {
+        let shapes = rt.manifest().entry(&name).unwrap().inputs.clone();
+        let inputs: Vec<Vec<f32>> = shapes
+            .iter()
+            .map(|s| random_f32(s.iter().product(), 1, 0.1))
+            .collect();
+        let out = rt.run_f32(&name, &inputs).unwrap();
+        assert!(!out.is_empty(), "{name}");
+        assert!(out.iter().all(|v| v.is_finite()), "{name} produced non-finite values");
+    }
+}
+
+#[test]
+fn dip_pairs_match_references_through_xla() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    for (dip, ref_, tol) in [
+        ("matmul_dip_256", "matmul_ref_256", 1e-3),
+        ("mha_dip", "mha_ref", 5e-3),
+        ("ffn_dip", "ffn_ref", 5e-3),
+        ("layer_dip", "layer_ref", 5e-3),
+    ] {
+        for seed in [1u64, 2, 3] {
+            let (_, _, max) = rt.verify_pair(dip, ref_, seed).unwrap();
+            assert!(max < tol, "{dip} seed {seed}: max diff {max}");
+        }
+    }
+}
+
+#[test]
+fn pjrt_tile_matmul_matches_cycle_accurate_simulator() {
+    // The same INT8 tile through (a) the Pallas dataflow artifact via
+    // PJRT and (b) the Rust cycle-accurate DiP array must agree: the
+    // two implementations of the paper's dataflow are equivalent.
+    let Some(mut rt) = runtime_or_skip() else { return };
+    use dip_core::arch::permute::permute;
+    use dip_core::arch::SystolicArray;
+    use dip_core::matrix::random_i8;
+
+    let xi = random_i8(64, 64, 10);
+    let wi = random_i8(64, 64, 11);
+
+    let mut sim = dip_core::arch::dip::DipArray::new(64, 2);
+    sim.load_weights(&wi);
+    let sim_out = sim.run_tile(&xi).outputs;
+
+    let x: Vec<f32> = xi.as_slice().iter().map(|&v| v as f32).collect();
+    let wp = permute(&wi);
+    let wpf: Vec<f32> = wp.as_slice().iter().map(|&v| v as f32).collect();
+    let got = rt.run_f32("dip_tile_matmul", &[x, wpf]).unwrap();
+
+    for (i, (g, s)) in got.iter().zip(sim_out.as_slice()).enumerate() {
+        assert!(
+            (g - *s as f32).abs() < 0.5,
+            "element {i}: pjrt {g} vs sim {s}"
+        );
+    }
+}
+
+#[test]
+fn coordinator_serving_cross_checked_against_pjrt() {
+    // Serve a request through the coordinator (simulated arrays) and
+    // compare against the PJRT reference matmul artifact.
+    let Some(mut rt) = runtime_or_skip() else { return };
+    use dip_core::analytical::Arch;
+    use dip_core::matrix::random_i8;
+
+    let xi = random_i8(64, 64, 20);
+    let wi = random_i8(64, 64, 21);
+
+    let coord = Coordinator::new(CoordinatorConfig {
+        devices: 2,
+        device: DeviceConfig { arch: Arch::Dip, tile: 64, mac_stages: 2 },
+        queue_depth: 8,
+    });
+    let served: Mat<i32> = coord.submit(xi.clone(), wi.clone()).wait().out;
+    coord.shutdown();
+
+    let x: Vec<f32> = xi.as_slice().iter().map(|&v| v as f32).collect();
+    let w: Vec<f32> = wi.as_slice().iter().map(|&v| v as f32).collect();
+    let pjrt = rt.run_f32("matmul_ref_64", &[x, w]).unwrap();
+
+    for (i, (p, s)) in pjrt.iter().zip(served.as_slice()).enumerate() {
+        assert!((p - *s as f32).abs() < 0.5, "element {i}: pjrt {p} vs served {s}");
+    }
+}

@@ -1,0 +1,233 @@
+//! Property-based invariant sweeps (seeded randomized testing; the
+//! offline crate set has no proptest, so cases are generated with a
+//! deterministic xorshift generator — every failure is reproducible
+//! from the printed seed).
+//!
+//! Invariants covered (DESIGN.md §8):
+//!  * permutation is a bijection and self-inverting,
+//!  * DiP sim == WS sim == i32 reference matmul, bit-exact, for random
+//!    sizes / row counts / pipeline depths,
+//!  * per-tile cycle counts equal eqs (1)/(5) and TFPU eqs (4)/(7),
+//!  * tiling reassembly equals the whole-matrix reference for ragged
+//!    shapes,
+//!  * coordinator responses are exact and order-independent.
+
+use dip_core::analytical::{latency_cycles, Arch};
+use dip_core::arch::permute::{permute, unpermute};
+use dip_core::arch::{dip::DipArray, ws::WsArray, SystolicArray};
+use dip_core::coordinator::{Coordinator, CoordinatorConfig, DeviceConfig};
+use dip_core::matrix::{random_i8, Mat};
+use dip_core::tiling::schedule::{run_tiled_matmul, TilingConfig, WeightLoadPolicy};
+
+/// Deterministic case generator.
+struct Gen(u64);
+
+impl Gen {
+    fn next(&mut self) -> u64 {
+        let mut s = self.0;
+        s ^= s >> 12;
+        s ^= s << 25;
+        s ^= s >> 27;
+        self.0 = s;
+        s.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        lo + self.next() % (hi - lo + 1)
+    }
+}
+
+#[test]
+fn prop_permutation_bijective_and_inverse() {
+    let mut g = Gen(0xBEEF);
+    for case in 0..200 {
+        let n = g.range(1, 33) as usize;
+        let cols = g.range(1, 33) as usize;
+        let seed = g.next();
+        let w = random_i8(n, cols, seed);
+        let wp = permute(&w);
+        assert_eq!(unpermute(&wp).as_slice(), w.as_slice(), "case {case} n={n} cols={cols} seed={seed}");
+        // Bijection: multiset of elements preserved per column.
+        for c in 0..cols {
+            let mut a: Vec<i8> = (0..n).map(|r| w.get(r, c)).collect();
+            let mut b: Vec<i8> = (0..n).map(|r| wp.get(r, c)).collect();
+            a.sort_unstable();
+            b.sort_unstable();
+            assert_eq!(a, b, "case {case} column {c}");
+        }
+    }
+}
+
+#[test]
+fn prop_sims_equal_reference_matmul() {
+    let mut g = Gen(0xC0FFEE);
+    for case in 0..60 {
+        let n = g.range(1, 24) as usize;
+        let rows = g.range(1, 40) as usize;
+        let s = g.range(1, 3);
+        let seed = g.next();
+        let w = random_i8(n, n, seed);
+        let x = random_i8(rows, n, seed + 1);
+        let expect = x.widen().matmul(&w.widen());
+
+        let mut dip = DipArray::new(n, s);
+        dip.load_weights(&w);
+        assert_eq!(dip.run_tile(&x).outputs, expect, "DiP case {case} n={n} rows={rows} s={s} seed={seed}");
+
+        let mut ws = WsArray::new(n, s);
+        ws.load_weights(&w);
+        assert_eq!(ws.run_tile(&x).outputs, expect, "WS case {case} n={n} rows={rows} s={s} seed={seed}");
+    }
+}
+
+#[test]
+fn prop_single_tile_latency_matches_equations() {
+    let mut g = Gen(0xA11CE);
+    for case in 0..40 {
+        let n = g.range(2, 48) as usize;
+        let s = g.range(1, 3);
+        let seed = g.next();
+        let w = random_i8(n, n, seed);
+        let x = random_i8(n, n, seed + 1);
+
+        let mut dip = DipArray::new(n, s);
+        dip.load_weights(&w);
+        assert_eq!(
+            dip.run_tile(&x).stats.cycles,
+            latency_cycles(Arch::Dip, n as u64, s),
+            "DiP case {case} n={n} s={s}"
+        );
+
+        let mut ws = WsArray::new(n, s);
+        ws.load_weights(&w);
+        assert_eq!(
+            ws.run_tile(&x).stats.cycles,
+            latency_cycles(Arch::Ws, n as u64, s),
+            "WS case {case} n={n} s={s}"
+        );
+    }
+}
+
+#[test]
+fn prop_tfpu_matches_equations_under_streaming() {
+    let mut g = Gen(0x7F9);
+    for _ in 0..25 {
+        let n = g.range(2, 24) as usize;
+        let seed = g.next();
+        let w = random_i8(n, n, seed);
+        let x = random_i8(4 * n, n, seed + 1);
+
+        let mut dip = DipArray::new(n, 2);
+        dip.load_weights(&w);
+        assert_eq!(dip.run_tile(&x).stats.tfpu_cycles, n as u64);
+
+        let mut ws = WsArray::new(n, 2);
+        ws.load_weights(&w);
+        assert_eq!(ws.run_tile(&x).stats.tfpu_cycles, (2 * n - 1) as u64);
+    }
+}
+
+#[test]
+fn prop_tiled_matmul_ragged_shapes_exact() {
+    let mut g = Gen(0xD1CE);
+    for case in 0..30 {
+        let m = g.range(1, 70) as usize;
+        let nd = g.range(1, 70) as usize;
+        let k = g.range(1, 70) as usize;
+        let tile = [4usize, 8, 16][g.range(0, 2) as usize];
+        let arch = if g.next() % 2 == 0 { Arch::Dip } else { Arch::Ws };
+        let policy = if g.next() % 2 == 0 {
+            WeightLoadPolicy::Overlapped
+        } else {
+            WeightLoadPolicy::Blocking
+        };
+        let seed = g.next();
+        let x = random_i8(m, nd, seed);
+        let w = random_i8(nd, k, seed + 1);
+        let cfg = TilingConfig { tile, arch, mac_stages: 2, weight_load: policy };
+        let (got, cost) = run_tiled_matmul(&x, &w, &cfg);
+        assert_eq!(
+            got,
+            x.widen().matmul(&w.widen()),
+            "case {case} m={m} n={nd} k={k} tile={tile} arch={arch:?} seed={seed}"
+        );
+        assert_eq!(cost.m2_tiles as usize, nd.div_ceil(tile) * k.div_ceil(tile));
+    }
+}
+
+#[test]
+fn prop_coordinator_exact_under_concurrency() {
+    let mut g = Gen(0x5EED);
+    for round in 0..6 {
+        let cfg = CoordinatorConfig {
+            devices: g.range(1, 6) as usize,
+            device: DeviceConfig { arch: Arch::Dip, tile: 8, mac_stages: 2 },
+            queue_depth: g.range(1, 16) as usize,
+        };
+        let coord = Coordinator::new(cfg);
+        let nd = g.range(1, 4) as usize * 8;
+        let k = g.range(1, 4) as usize * 8;
+        let w = random_i8(nd, k, g.next());
+        let cases: Vec<(Mat<i8>, _)> = (0..12)
+            .map(|_| {
+                let m = g.range(1, 30) as usize;
+                let x = random_i8(m, nd, g.next());
+                let h = coord.submit(x.clone(), w.clone());
+                (x, h)
+            })
+            .collect();
+        for (x, h) in cases {
+            assert_eq!(
+                h.wait().out,
+                x.widen().matmul(&w.widen()),
+                "round {round} devices={} q={}",
+                cfg.devices,
+                cfg.queue_depth
+            );
+        }
+        let m = coord.shutdown();
+        assert_eq!(m.requests_completed, 12);
+    }
+}
+
+#[test]
+fn prop_psum_accumulation_order_independent() {
+    // The same workload through 1 device (deterministic job order) and
+    // many devices (racy order) must agree bit-exactly.
+    let mut g = Gen(0xACC);
+    for _ in 0..5 {
+        let nd = 24usize;
+        let k = 16usize;
+        let x = random_i8(20, nd, g.next());
+        let w = random_i8(nd, k, g.next());
+        let run = |devices: usize| {
+            let coord = Coordinator::new(CoordinatorConfig {
+                devices,
+                device: DeviceConfig { arch: Arch::Dip, tile: 8, mac_stages: 2 },
+                queue_depth: 4,
+            });
+            let out = coord.submit(x.clone(), w.clone()).wait().out;
+            coord.shutdown();
+            out
+        };
+        assert_eq!(run(1), run(5));
+    }
+}
+
+#[test]
+fn prop_event_counts_scale_linearly_with_rows() {
+    // MAC events must be exactly rows * N^2; active-PE cycles likewise.
+    let mut g = Gen(0xE7);
+    for _ in 0..20 {
+        let n = g.range(2, 16) as usize;
+        let rows = g.range(1, 50) as usize;
+        let w = random_i8(n, n, g.next());
+        let x = random_i8(rows, n, g.next());
+        let mut dip = DipArray::new(n, 2);
+        dip.load_weights(&w);
+        let st = dip.run_tile(&x).stats;
+        assert_eq!(st.events.mac_ops, (rows * n * n) as u64);
+        assert_eq!(st.events.pe_active_cycles, (rows * n * n) as u64);
+        assert_eq!(st.total_ops, 2 * (rows * n * n) as u64);
+    }
+}
