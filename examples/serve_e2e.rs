@@ -61,6 +61,7 @@ fn main() -> anyhow::Result<()> {
         devices,
         device: DeviceConfig { arch: Arch::Dip, tile: 64, mac_stages: 2 },
         queue_depth: 256,
+        work_stealing: true,
     });
 
     // Fixed layer weights (the serving scenario: one model, many reqs).
@@ -116,6 +117,15 @@ fn main() -> anyhow::Result<()> {
         "simulated array time @1GHz: {:.1} us | device MACs/cycle {:.0}",
         sim_cycles_total as f64 / 1e3,
         metrics.macs_per_cycle()
+    );
+    println!(
+        "weight-affinity reuse: {} loads, {} skipped ({:.0}%), {} prepared-cache hits, {} steals, {} load cycles saved",
+        metrics.weight_loads,
+        metrics.weight_loads_skipped,
+        metrics.weight_reuse_rate() * 100.0,
+        metrics.cache_hits,
+        metrics.steals,
+        metrics.weight_load_cycles_saved,
     );
 
     // Full-layer DiP-vs-WS headline (every Table III stage).

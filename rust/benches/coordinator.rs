@@ -1,18 +1,23 @@
 //! Bench: L3 coordinator serving throughput — requests/s, batched vs
-//! unbatched, DiP vs WS device pools. `cargo bench --bench coordinator`.
+//! unbatched, repeated-weight affinity reuse, DiP vs WS device pools.
+//! `cargo bench --bench coordinator`.
 
 use dip_core::analytical::Arch;
 use dip_core::bench_harness::timing::{bench, report_throughput};
-use dip_core::coordinator::{Coordinator, CoordinatorConfig, DeviceConfig};
+use dip_core::coordinator::{Coordinator, CoordinatorConfig, DeviceConfig, MetricsSnapshot};
 use dip_core::matrix::{random_i8, Mat};
 
-fn serve(arch: Arch, devices: usize, requests: usize, batch: usize) -> u64 {
-    let cfg = CoordinatorConfig {
+fn config(arch: Arch, devices: usize) -> CoordinatorConfig {
+    CoordinatorConfig {
         devices,
         device: DeviceConfig { arch, tile: 64, mac_stages: 2 },
         queue_depth: 256,
-    };
-    let coord = Coordinator::new(cfg);
+        work_stealing: true,
+    }
+}
+
+fn serve(arch: Arch, devices: usize, requests: usize, batch: usize, verify: bool) -> MetricsSnapshot {
+    let coord = Coordinator::new(config(arch, devices));
     let w = random_i8(256, 256, 7);
     let mut handles = Vec::new();
     let mut i = 0;
@@ -22,10 +27,19 @@ fn serve(arch: Arch, devices: usize, requests: usize, batch: usize) -> u64 {
         handles.extend(coord.submit_batched(xs, w.clone()));
         i += chunk;
     }
-    for h in handles {
-        h.wait();
+    if verify {
+        // Acceptance check: every served output bit-exact vs Mat::matmul.
+        let ww = w.widen();
+        for (i, h) in handles.into_iter().enumerate() {
+            let x = random_i8(64, 256, i as u64);
+            assert_eq!(h.wait().out, x.widen().matmul(&ww), "request {i} diverged");
+        }
+    } else {
+        for h in handles {
+            h.wait();
+        }
     }
-    coord.shutdown().sim_cycles
+    coord.shutdown()
 }
 
 fn main() {
@@ -34,21 +48,43 @@ fn main() {
 
     for devices in [1usize, 4, 8] {
         let r = bench(&format!("dip/devices{devices}/unbatched"), 1, 5, || {
-            serve(Arch::Dip, devices, requests, 1)
+            serve(Arch::Dip, devices, requests, 1, false).sim_cycles
         });
         report_throughput("requests", r.throughput(requests as f64), "/s");
     }
 
     for batch in [4usize, 16] {
         let r = bench(&format!("dip/devices4/batch{batch}"), 1, 5, || {
-            serve(Arch::Dip, 4, requests, batch)
+            serve(Arch::Dip, 4, requests, batch, false).sim_cycles
         });
         report_throughput("requests", r.throughput(requests as f64), "/s");
     }
 
+    // Repeated-weight serving: the same 256x256 W across all requests
+    // (one model layer under traffic). Affinity routing must turn the
+    // repeats into skipped stationary reloads — and the outputs are
+    // verified bit-exact against the i32 reference inside serve().
+    println!("\n=== Repeated-weight affinity reuse (same W, {requests} requests) ===");
+    let m = serve(Arch::Dip, 4, requests, 1, true);
+    println!(
+        "jobs {}  weight loads {}  skipped {} ({:.0}% reuse)  prepared-cache hits {}  steals {}  load cycles saved {}",
+        m.jobs_executed,
+        m.weight_loads,
+        m.weight_loads_skipped,
+        m.weight_reuse_rate() * 100.0,
+        m.cache_hits,
+        m.steals,
+        m.weight_load_cycles_saved,
+    );
+    assert_eq!(m.weight_loads + m.weight_loads_skipped, m.jobs_executed);
+    assert!(
+        m.weight_loads_skipped > 0,
+        "affinity scheduler must skip stationary reloads when serving one W repeatedly"
+    );
+
     // DiP vs WS device pools: same requests, simulated cycle advantage.
-    let dip_cycles = serve(Arch::Dip, 4, requests, 4);
-    let ws_cycles = serve(Arch::Ws, 4, requests, 4);
+    let dip_cycles = serve(Arch::Dip, 4, requests, 4, false).sim_cycles;
+    let ws_cycles = serve(Arch::Ws, 4, requests, 4, false).sim_cycles;
     println!(
         "\nsimulated cycles: DiP {dip_cycles}, WS {ws_cycles} -> DiP {:.2}x fewer",
         ws_cycles as f64 / dip_cycles as f64

@@ -18,7 +18,7 @@
 
 use super::fifo::ShiftFifo;
 use super::permute::permute;
-use super::{weight_load_reg8_writes, SystolicArray, TileRun};
+use super::{weight_load_reg8_writes, PreparedWeights, SystolicArray, TileRun};
 use crate::matrix::Mat;
 use crate::sim::stats::{EventCounts, RunStats};
 use crate::sim::trace::{CycleSnapshot, Trace};
@@ -84,6 +84,9 @@ impl DipArray {
     fn run_fast(&mut self, x: &Mat<i8>) -> TileRun {
         assert!(self.weights_loaded, "load_weights before run_tile");
         assert_eq!(x.cols(), self.n, "input tile must be R x N");
+        // The trait contract is R >= 1; without this guard `rows - 1`
+        // below underflows on an empty tile.
+        assert!(x.rows() >= 1, "input tile must have at least one row");
         let n = self.n;
         let rows = x.rows();
         let s = self.mac_stages;
@@ -162,6 +165,7 @@ impl DipArray {
     fn run_inner(&mut self, x: &Mat<i8>, mut trace: Option<&mut Trace>) -> TileRun {
         assert!(self.weights_loaded, "load_weights before run_tile");
         assert_eq!(x.cols(), self.n, "input tile must be R x N");
+        assert!(x.rows() >= 1, "input tile must have at least one row");
         let n = self.n;
         let rows = x.rows();
         let s_extra = (self.mac_stages - 1) as usize;
@@ -291,13 +295,19 @@ impl SystolicArray for DipArray {
     /// overlaps the first input row (paper Fig. 4, Cycle 0), so the
     /// dedicated load phase is `N - 1` cycles.
     fn load_weights(&mut self, w: &Mat<i8>) -> u64 {
+        let p = self.prepare_weights(w);
+        self.load_prepared(&p)
+    }
+
+    /// Host-side half of the load: the Fig. 3 permutation + widening.
+    fn prepare_weights(&self, w: &Mat<i8>) -> PreparedWeights {
         assert_eq!((w.rows(), w.cols()), (self.n, self.n), "weight tile must be N x N");
-        let wp = permute(w);
-        for r in 0..self.n {
-            for c in 0..self.n {
-                self.weights[r * self.n + c] = wp.get(r, c) as i32;
-            }
-        }
+        PreparedWeights::widen(self.n, &permute(w))
+    }
+
+    fn load_prepared(&mut self, p: &PreparedWeights) -> u64 {
+        assert_eq!(p.n, self.n, "weights prepared for a different array edge");
+        self.weights.copy_from_slice(&p.data);
         self.weights_loaded = true;
         (self.n as u64).saturating_sub(1)
     }
@@ -475,6 +485,42 @@ mod tests {
     #[should_panic(expected = "load_weights")]
     fn run_without_weights_panics() {
         DipArray::new(2, 1).run_tile(&random_i8(2, 2, 1));
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one row")]
+    fn zero_row_tile_panics_cleanly() {
+        // Regression: this used to underflow `rows - 1` in run_fast.
+        let mut arr = DipArray::new(4, 2);
+        arr.load_weights(&random_i8(4, 4, 1));
+        arr.run_tile(&random_i8(0, 4, 2));
+    }
+
+    #[test]
+    fn one_row_tile_exact() {
+        let (got, stats, want) = run(8, 2, 1, 31);
+        assert_eq!(got, want);
+        assert_eq!(stats.cycles, 8 + 2 - 1); // rows + N + S - 2
+    }
+
+    #[test]
+    fn prepared_weights_equal_direct_load() {
+        let w = random_i8(8, 8, 41);
+        let x = random_i8(12, 8, 42);
+        let mut direct = DipArray::new(8, 2);
+        direct.load_weights(&w);
+        let mut via_cache = DipArray::new(8, 2);
+        let p = via_cache.prepare_weights(&w);
+        assert_eq!(via_cache.load_prepared(&p), direct.load_weights(&w));
+        assert_eq!(via_cache.run_tile(&x).outputs, direct.run_tile(&x).outputs);
+    }
+
+    #[test]
+    #[should_panic(expected = "different array edge")]
+    fn prepared_for_wrong_edge_panics() {
+        let small = DipArray::new(4, 2);
+        let p = small.prepare_weights(&random_i8(4, 4, 1));
+        DipArray::new(8, 2).load_prepared(&p);
     }
 
     #[test]

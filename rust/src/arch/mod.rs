@@ -10,6 +10,8 @@ pub mod permute;
 pub mod sparsity;
 pub mod ws;
 
+use std::sync::Arc;
+
 use crate::matrix::Mat;
 use crate::sim::stats::RunStats;
 use crate::sim::trace::Trace;
@@ -21,6 +23,30 @@ pub struct TileRun {
     pub outputs: Mat<i32>,
     /// Cycle counts + switching events for this pass.
     pub stats: RunStats,
+}
+
+/// A stationary weight tile in the array-internal form (widened to i32;
+/// for DiP additionally permutated per Fig. 3). Producing this is pure
+/// host-side work, so the coordinator's per-device weight caches hold
+/// `PreparedWeights` and re-install them without repeating the
+/// permutation. The buffer is `Arc`-shared: cloning a cache entry never
+/// copies the `N x N` payload.
+#[derive(Debug, Clone)]
+pub struct PreparedWeights {
+    /// Array edge the tile was prepared for.
+    pub n: usize,
+    /// Row-major internal weight image, length `n * n`.
+    pub data: Arc<Vec<i32>>,
+}
+
+impl PreparedWeights {
+    /// Widen a tile already in the array's internal layout (WS/OS use
+    /// the tile verbatim; DiP permutes first, then calls this).
+    pub fn widen(n: usize, w: &Mat<i8>) -> Self {
+        assert_eq!((w.rows(), w.cols()), (n, n), "weight tile must be N x N");
+        let data: Vec<i32> = w.as_slice().iter().map(|&v| v as i32).collect();
+        Self { n, data: Arc::new(data) }
+    }
 }
 
 /// Common interface of the two cycle-accurate simulators.
@@ -39,6 +65,17 @@ pub trait SystolicArray {
     /// Load (and for DiP, permute) a stationary N x N weight tile.
     /// Returns the number of weight-load cycles consumed.
     fn load_weights(&mut self, w: &Mat<i8>) -> u64;
+
+    /// Transform a weight tile into the array-internal stationary form
+    /// without touching array state — the host-side half of
+    /// [`load_weights`](Self::load_weights) (widening, and for DiP the
+    /// Fig. 3 permutation), split out so schedulers can cache it.
+    fn prepare_weights(&self, w: &Mat<i8>) -> PreparedWeights;
+
+    /// Install previously prepared weights. Same cycle-count contract
+    /// as [`load_weights`](Self::load_weights); panics if `p` was
+    /// prepared for a different array edge.
+    fn load_prepared(&mut self, p: &PreparedWeights) -> u64;
 
     /// Stream an R x N input tile through the loaded weights, returning
     /// outputs and cycle/event statistics. `R` is arbitrary (>= 1).

@@ -17,7 +17,7 @@
 //!   need triangular skew FIFOs (input side) and the drain adds `n`
 //!   shift-out cycles.
 
-use super::{SystolicArray, TileRun};
+use super::{PreparedWeights, SystolicArray, TileRun};
 use crate::matrix::Mat;
 use crate::sim::stats::{EventCounts, RunStats};
 use crate::sim::trace::{CycleSnapshot, Trace};
@@ -118,12 +118,18 @@ impl SystolicArray for OsArray {
     /// Stage the streaming weight tile (no load cycles: weights stream
     /// with the computation in OS).
     fn load_weights(&mut self, w: &Mat<i8>) -> u64 {
-        assert_eq!((w.rows(), w.cols()), (self.n, self.n));
-        for r in 0..self.n {
-            for c in 0..self.n {
-                self.weights[r * self.n + c] = w.get(r, c) as i32;
-            }
-        }
+        let p = self.prepare_weights(w);
+        self.load_prepared(&p)
+    }
+
+    /// OS weights stream untransformed; preparing is just widening.
+    fn prepare_weights(&self, w: &Mat<i8>) -> PreparedWeights {
+        PreparedWeights::widen(self.n, w)
+    }
+
+    fn load_prepared(&mut self, p: &PreparedWeights) -> u64 {
+        assert_eq!(p.n, self.n, "weights prepared for a different array edge");
+        self.weights.copy_from_slice(&p.data);
         self.weights_loaded = true;
         0
     }

@@ -15,7 +15,7 @@
 //! register overhead is `N(N-1)` (eq (3)).
 
 use super::fifo::{FifoGroup, ShiftFifo};
-use super::{weight_load_reg8_writes, SystolicArray, TileRun};
+use super::{weight_load_reg8_writes, PreparedWeights, SystolicArray, TileRun};
 use crate::matrix::Mat;
 use crate::sim::stats::{EventCounts, RunStats};
 use crate::sim::trace::{CycleSnapshot, Trace};
@@ -80,6 +80,10 @@ impl WsArray {
     fn run_fast(&mut self, x: &Mat<i8>) -> TileRun {
         assert!(self.weights_loaded, "load_weights before run_tile");
         assert_eq!(x.cols(), self.n, "input tile must be R x N");
+        // Same R >= 1 contract as the register-transfer path (DiP's
+        // fast path underflows without it; assert here too for a clear
+        // message instead of garbage stats on an empty tile).
+        assert!(x.rows() >= 1, "input tile must have at least one row");
         let n = self.n;
         let rows = x.rows();
         let s = self.mac_stages;
@@ -154,6 +158,7 @@ impl WsArray {
     fn run_inner(&mut self, x: &Mat<i8>, mut trace: Option<&mut Trace>) -> TileRun {
         assert!(self.weights_loaded, "load_weights before run_tile");
         assert_eq!(x.cols(), self.n, "input tile must be R x N");
+        assert!(x.rows() >= 1, "input tile must have at least one row");
         let n = self.n;
         let rows = x.rows();
         let s_extra = (self.mac_stages - 1) as usize;
@@ -299,12 +304,18 @@ impl SystolicArray for WsArray {
     /// WS loads weights verbatim (no permutation), shifting row-by-row:
     /// N cycles, `N^2 (N+1) / 2` weight-register writes.
     fn load_weights(&mut self, w: &Mat<i8>) -> u64 {
-        assert_eq!((w.rows(), w.cols()), (self.n, self.n), "weight tile must be N x N");
-        for r in 0..self.n {
-            for c in 0..self.n {
-                self.weights[r * self.n + c] = w.get(r, c) as i32;
-            }
-        }
+        let p = self.prepare_weights(w);
+        self.load_prepared(&p)
+    }
+
+    /// WS has no permutation; preparing is just widening.
+    fn prepare_weights(&self, w: &Mat<i8>) -> PreparedWeights {
+        PreparedWeights::widen(self.n, w)
+    }
+
+    fn load_prepared(&mut self, p: &PreparedWeights) -> u64 {
+        assert_eq!(p.n, self.n, "weights prepared for a different array edge");
+        self.weights.copy_from_slice(&p.data);
         self.weights_loaded = true;
         self.n as u64
     }
@@ -442,6 +453,33 @@ mod tests {
     #[should_panic(expected = "load_weights")]
     fn run_without_weights_panics() {
         WsArray::new(2, 1).run_tile(&random_i8(2, 2, 1));
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one row")]
+    fn zero_row_tile_panics_cleanly() {
+        let mut arr = WsArray::new(4, 2);
+        arr.load_weights(&random_i8(4, 4, 1));
+        arr.run_tile(&random_i8(0, 4, 2));
+    }
+
+    #[test]
+    fn one_row_tile_exact() {
+        let (got, stats, want) = run(8, 2, 1, 31);
+        assert_eq!(got, want);
+        assert_eq!(stats.cycles, 1 + 2 * 8 + 2 - 3); // rows + 2N + S - 3
+    }
+
+    #[test]
+    fn prepared_weights_equal_direct_load() {
+        let w = random_i8(8, 8, 61);
+        let x = random_i8(5, 8, 62);
+        let mut direct = WsArray::new(8, 2);
+        direct.load_weights(&w);
+        let mut via_cache = WsArray::new(8, 2);
+        let p = via_cache.prepare_weights(&w);
+        assert_eq!(via_cache.load_prepared(&p), direct.load_weights(&w));
+        assert_eq!(via_cache.run_tile(&x).outputs, direct.run_tile(&x).outputs);
     }
 
     #[test]

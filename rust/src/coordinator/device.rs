@@ -1,24 +1,39 @@
 //! A worker device: one simulated systolic array executing
-//! weight-stationary jobs pulled from the shared queue.
+//! weight-stationary jobs from its affinity queue (plus stolen work).
+//!
+//! The device is where affinity routing pays off: it remembers which
+//! weight tile is stationary on its array and skips the whole load
+//! phase when the next job carries the same tile (crediting the saved
+//! `N-1` / `N` load cycles), and it keeps a small LRU cache of
+//! *prepared* tiles (permutated + widened) so re-installing a recently
+//! evicted tile skips the host-side permutation work.
 
+use std::collections::VecDeque;
 use std::sync::Arc;
 use std::time::Instant;
 
 use crate::analytical::Arch;
-use crate::arch::{dip::DipArray, ws::WsArray, SystolicArray};
+use crate::arch::{
+    dip::DipArray, weight_load_reg8_writes, ws::WsArray, PreparedWeights, SystolicArray,
+};
 use crate::matrix::Mat;
 
 use super::metrics::Metrics;
 use super::state::ReqState;
 
-/// One weight-stationary unit of work: load `w_tile` once, stream the
-/// full `x_strip` (all M1 tiles back-to-back), fold the psum strip into
-/// the request at column offset `c0`.
+/// One weight-stationary unit of work: make `w_tile` stationary (a
+/// no-op when it already is), stream the full `x_strip` (all M1 tiles
+/// back-to-back), fold the psum strip into the request at column
+/// offset `c0`. Both matrices are `Arc`-shared with every other job of
+/// the fan-out — submitting never deep-copies operand data per job.
 pub struct Job {
     pub req: Arc<ReqState>,
-    pub w_tile: Mat<i8>,
-    pub x_strip: Mat<i8>,
+    pub w_tile: Arc<Mat<i8>>,
+    pub x_strip: Arc<Mat<i8>>,
     pub c0: usize,
+    /// Content identity of `w_tile` ([`Mat::content_hash`]); the router
+    /// uses it for affinity, the device for resident/cached checks.
+    pub tile_id: u64,
 }
 
 /// Device configuration.
@@ -35,10 +50,26 @@ impl Default for DeviceConfig {
     }
 }
 
-/// A worker's array + metrics hook.
+/// Prepared-weight cache capacity, in tiles. Sized for a handful of
+/// layers' worth of tiles per device; at the paper's N=64 a prepared
+/// tile is 16 KiB, so the cache stays well under typical L2.
+const WEIGHT_CACHE_TILES: usize = 8;
+
+/// A worker's array + weight caches + metrics hook.
 pub struct Device {
     array: Box<dyn SystolicArray>,
     metrics: Arc<Metrics>,
+    /// Identity and content of the tile currently stationary on the
+    /// array. Content is kept so a hash collision degrades to a reload,
+    /// never to wrong numerics.
+    loaded: Option<(u64, Arc<Mat<i8>>)>,
+    /// LRU of prepared tiles, most recent first.
+    cache: VecDeque<(u64, Arc<Mat<i8>>, PreparedWeights)>,
+    /// Dedicated load-phase cycles of the last install (`N-1` DiP, `N`
+    /// WS, straight from `load_prepared`) — what a skipped load credits
+    /// to `weight_load_cycles_saved`. A skip can only follow an
+    /// install, so this is always set when it is read.
+    load_cycles: u64,
 }
 
 impl Device {
@@ -47,15 +78,39 @@ impl Device {
             Arch::Ws => Box::new(WsArray::new(cfg.tile, cfg.mac_stages)),
             Arch::Dip => Box::new(DipArray::new(cfg.tile, cfg.mac_stages)),
         };
-        Self { array, metrics }
+        Self { array, metrics, loaded: None, cache: VecDeque::new(), load_cycles: 0 }
+    }
+
+    /// Identity of the tile currently stationary on the array (the
+    /// scheduler's tile-preference key).
+    pub fn loaded_tile_id(&self) -> Option<u64> {
+        self.loaded.as_ref().map(|(id, _)| *id)
     }
 
     /// Execute one job; returns true if it completed its request.
     pub fn execute(&mut self, job: Job) -> bool {
         use std::sync::atomic::Ordering::Relaxed;
         let t0 = Instant::now();
-        self.array.load_weights(&job.w_tile);
-        let run = self.array.run_tile(&job.x_strip);
+        let resident = matches!(
+            &self.loaded,
+            Some((id, w)) if *id == job.tile_id && **w == *job.w_tile
+        );
+        if resident {
+            self.metrics.weight_loads_skipped.fetch_add(1, Relaxed);
+            self.metrics.weight_load_cycles_saved.fetch_add(self.load_cycles, Relaxed);
+        } else {
+            let prepared = self.prepared_for(&job);
+            self.load_cycles = self.array.load_prepared(&prepared);
+            self.metrics.weight_loads.fetch_add(1, Relaxed);
+            self.loaded = Some((job.tile_id, Arc::clone(&job.w_tile)));
+        }
+        let mut run = self.array.run_tile(&job.x_strip);
+        if resident {
+            // run_tile bakes one load phase into its per-run stats;
+            // this job skipped it — account honestly.
+            run.stats.weight_load_cycles = 0;
+            run.stats.events.reg8_writes -= weight_load_reg8_writes(self.array.n() as u64);
+        }
         self.metrics.jobs_executed.fetch_add(1, Relaxed);
         self.metrics.rows_streamed.fetch_add(job.x_strip.rows() as u64, Relaxed);
         self.metrics.sim_cycles.fetch_add(run.stats.cycles, Relaxed);
@@ -68,14 +123,50 @@ impl Device {
         self.metrics.add_busy(t0.elapsed());
         last
     }
+
+    /// Look the tile up in the prepared-weight LRU, preparing (and
+    /// inserting) on miss.
+    fn prepared_for(&mut self, job: &Job) -> PreparedWeights {
+        use std::sync::atomic::Ordering::Relaxed;
+        if let Some(pos) = self
+            .cache
+            .iter()
+            .position(|(id, w, _)| *id == job.tile_id && **w == *job.w_tile)
+        {
+            self.metrics.cache_hits.fetch_add(1, Relaxed);
+            let entry = self.cache.remove(pos).unwrap();
+            let prepared = entry.2.clone();
+            self.cache.push_front(entry);
+            return prepared;
+        }
+        self.metrics.cache_misses.fetch_add(1, Relaxed);
+        let prepared = self.array.prepare_weights(&job.w_tile);
+        self.cache.truncate(WEIGHT_CACHE_TILES - 1);
+        self.cache.push_front((job.tile_id, Arc::clone(&job.w_tile), prepared.clone()));
+        prepared
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::state::SubRequest;
+    use crate::coordinator::state::{MatmulResponse, SubRequest};
     use crate::matrix::random_i8;
     use std::sync::mpsc::channel;
+
+    fn job_for(x: &Mat<i8>, w: &Mat<i8>) -> (Job, std::sync::mpsc::Receiver<MatmulResponse>) {
+        let (tx, rx) = channel();
+        let req = Arc::new(ReqState::new(
+            x.rows(),
+            w.cols(),
+            w.cols(),
+            1,
+            vec![SubRequest { id: 0, row0: 0, rows: x.rows(), tx }],
+        ));
+        let w_tile = Arc::new(w.clone());
+        let tile_id = w_tile.content_hash();
+        (Job { req, w_tile, x_strip: Arc::new(x.clone()), c0: 0, tile_id }, rx)
+    }
 
     #[test]
     fn device_executes_job_and_completes_request() {
@@ -84,25 +175,88 @@ mod tests {
             DeviceConfig { arch: Arch::Dip, tile: 8, mac_stages: 2 },
             metrics.clone(),
         );
-        let (tx, rx) = channel();
         let x = random_i8(8, 8, 1);
         let w = random_i8(8, 8, 2);
-        let req = Arc::new(ReqState::new(
-            8,
-            8,
-            8,
-            1,
-            vec![SubRequest { id: 1, row0: 0, rows: 8, tx }],
-        ));
-        let last = dev.execute(Job { req, w_tile: w.clone(), x_strip: x.clone(), c0: 0 });
+        let (job, rx) = job_for(&x, &w);
+        let last = dev.execute(job);
         assert!(last);
         let resp = rx.try_recv().unwrap();
         assert_eq!(resp.out, x.widen().matmul(&w.widen()));
         let m = metrics.snapshot();
         assert_eq!(m.jobs_executed, 1);
         assert_eq!(m.requests_completed, 1);
+        assert_eq!(m.weight_loads, 1);
+        assert_eq!(m.weight_loads_skipped, 0);
         assert!(m.sim_cycles > 0);
         assert!(m.busy_ns > 0);
+    }
+
+    #[test]
+    fn resident_tile_skips_reload_and_credits_cycles() {
+        let metrics = Arc::new(Metrics::default());
+        let mut dev = Device::new(
+            DeviceConfig { arch: Arch::Dip, tile: 8, mac_stages: 2 },
+            metrics.clone(),
+        );
+        let w = random_i8(8, 8, 5);
+        for seed in [10u64, 11, 12] {
+            let x = random_i8(8, 8, seed);
+            let (job, rx) = job_for(&x, &w);
+            dev.execute(job);
+            assert_eq!(rx.try_recv().unwrap().out, x.widen().matmul(&w.widen()));
+        }
+        let m = metrics.snapshot();
+        assert_eq!(m.weight_loads, 1);
+        assert_eq!(m.weight_loads_skipped, 2);
+        assert_eq!(m.weight_load_cycles_saved, 2 * 7); // N-1 per skip
+        assert_eq!(dev.loaded_tile_id(), Some(w.content_hash()));
+    }
+
+    #[test]
+    fn prepared_cache_hits_on_tile_swap() {
+        let metrics = Arc::new(Metrics::default());
+        let mut dev = Device::new(
+            DeviceConfig { arch: Arch::Dip, tile: 8, mac_stages: 2 },
+            metrics.clone(),
+        );
+        let wa = random_i8(8, 8, 1);
+        let wb = random_i8(8, 8, 2);
+        let x = random_i8(8, 8, 3);
+        // A, B, A, B: every install after the first two finds the
+        // prepared tile cached (permutation skipped), none is resident.
+        for w in [&wa, &wb, &wa, &wb] {
+            let (job, rx) = job_for(&x, w);
+            dev.execute(job);
+            assert_eq!(rx.try_recv().unwrap().out, x.widen().matmul(&w.widen()));
+        }
+        let m = metrics.snapshot();
+        assert_eq!(m.weight_loads, 4);
+        assert_eq!(m.weight_loads_skipped, 0);
+        assert_eq!(m.cache_misses, 2);
+        assert_eq!(m.cache_hits, 2);
+    }
+
+    #[test]
+    fn forged_tile_id_collision_still_exact() {
+        // Two different tiles carrying the same id: the content check
+        // must force a reload (a hash collision can never corrupt
+        // results).
+        let metrics = Arc::new(Metrics::default());
+        let mut dev = Device::new(
+            DeviceConfig { arch: Arch::Dip, tile: 8, mac_stages: 2 },
+            metrics.clone(),
+        );
+        let x = random_i8(8, 8, 1);
+        for seed in [7u64, 8] {
+            let w = random_i8(8, 8, seed);
+            let (mut job, rx) = job_for(&x, &w);
+            job.tile_id = 42; // forged collision
+            dev.execute(job);
+            assert_eq!(rx.try_recv().unwrap().out, x.widen().matmul(&w.widen()));
+        }
+        let m = metrics.snapshot();
+        assert_eq!(m.weight_loads, 2);
+        assert_eq!(m.weight_loads_skipped, 0);
     }
 
     #[test]
@@ -113,9 +267,8 @@ mod tests {
         let x = random_i8(16, 8, 3);
         let w = random_i8(8, 8, 4);
         let run = |dev: &mut Device| {
-            let (tx, rx) = channel();
-            let req = Arc::new(ReqState::new(16, 8, 8, 1, vec![SubRequest { id: 0, row0: 0, rows: 16, tx }]));
-            dev.execute(Job { req, w_tile: w.clone(), x_strip: x.clone(), c0: 0 });
+            let (job, rx) = job_for(&x, &w);
+            dev.execute(job);
             rx.try_recv().unwrap().out
         };
         assert_eq!(run(&mut dip), run(&mut ws));

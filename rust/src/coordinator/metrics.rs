@@ -18,8 +18,26 @@ pub struct Metrics {
     pub mac_ops: AtomicU64,
     /// Wall-clock nanoseconds workers spent busy.
     pub busy_ns: AtomicU64,
-    /// Times a submit had to wait on the bounded queue (backpressure).
+    /// Times a submit had to wait on a full per-device queue
+    /// (backpressure; work is never dropped).
     pub backpressure_events: AtomicU64,
+    /// Stationary weight-tile installs actually performed by devices.
+    pub weight_loads: AtomicU64,
+    /// Jobs whose weight tile was already resident on the executing
+    /// device, so the entire load phase was skipped — the payoff of
+    /// affinity routing.
+    pub weight_loads_skipped: AtomicU64,
+    /// Simulated cycles credited by skipped loads (`N-1` per skip on
+    /// DiP, `N` on WS).
+    pub weight_load_cycles_saved: AtomicU64,
+    /// Loads served from the device's prepared-weight cache (the Fig. 3
+    /// permutation + widening was skipped; the install still ran).
+    pub cache_hits: AtomicU64,
+    /// Loads that had to prepare the tile from scratch.
+    pub cache_misses: AtomicU64,
+    /// Jobs a device stole from another device's queue (affinity broken
+    /// to avoid starvation).
+    pub steals: AtomicU64,
 }
 
 /// Point-in-time copy of the counters.
@@ -33,6 +51,12 @@ pub struct MetricsSnapshot {
     pub mac_ops: u64,
     pub busy_ns: u64,
     pub backpressure_events: u64,
+    pub weight_loads: u64,
+    pub weight_loads_skipped: u64,
+    pub weight_load_cycles_saved: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub steals: u64,
 }
 
 impl Metrics {
@@ -46,6 +70,12 @@ impl Metrics {
             mac_ops: self.mac_ops.load(Ordering::Relaxed),
             busy_ns: self.busy_ns.load(Ordering::Relaxed),
             backpressure_events: self.backpressure_events.load(Ordering::Relaxed),
+            weight_loads: self.weight_loads.load(Ordering::Relaxed),
+            weight_loads_skipped: self.weight_loads_skipped.load(Ordering::Relaxed),
+            weight_load_cycles_saved: self.weight_load_cycles_saved.load(Ordering::Relaxed),
+            cache_hits: self.cache_hits.load(Ordering::Relaxed),
+            cache_misses: self.cache_misses.load(Ordering::Relaxed),
+            steals: self.steals.load(Ordering::Relaxed),
         }
     }
 
@@ -63,6 +93,16 @@ impl MetricsSnapshot {
             self.mac_ops as f64 / self.sim_cycles as f64
         }
     }
+
+    /// Fraction of jobs that found their weight tile already stationary
+    /// on the executing device (0.0 when no jobs ran).
+    pub fn weight_reuse_rate(&self) -> f64 {
+        if self.jobs_executed == 0 {
+            0.0
+        } else {
+            self.weight_loads_skipped as f64 / self.jobs_executed as f64
+        }
+    }
 }
 
 #[cfg(test)]
@@ -75,9 +115,15 @@ mod tests {
         m.requests_submitted.fetch_add(3, Ordering::Relaxed);
         m.mac_ops.fetch_add(100, Ordering::Relaxed);
         m.sim_cycles.fetch_add(10, Ordering::Relaxed);
+        m.weight_loads_skipped.fetch_add(2, Ordering::Relaxed);
+        m.jobs_executed.fetch_add(4, Ordering::Relaxed);
+        m.steals.fetch_add(1, Ordering::Relaxed);
         let s = m.snapshot();
         assert_eq!(s.requests_submitted, 3);
         assert_eq!(s.macs_per_cycle(), 10.0);
+        assert_eq!(s.weight_loads_skipped, 2);
+        assert_eq!(s.steals, 1);
+        assert!((s.weight_reuse_rate() - 0.5).abs() < 1e-12);
     }
 
     #[test]
@@ -85,5 +131,6 @@ mod tests {
         let s = Metrics::default().snapshot();
         assert_eq!(s, MetricsSnapshot::default());
         assert_eq!(s.macs_per_cycle(), 0.0);
+        assert_eq!(s.weight_reuse_rate(), 0.0);
     }
 }

@@ -2,19 +2,29 @@
 //! requests on a pool of (simulated) DiP or WS arrays.
 //!
 //! Shape: a request router (`router`) decomposes each request into
-//! weight-stationary jobs per the paper's §IV.C tiling, dispatches them
-//! to worker devices (`device`) over a bounded queue (backpressure,
-//! never drops), accumulates psums per request (`state`), and exposes
-//! counters (`metrics`). Batched submission loads each stationary
-//! weight tile once per batch — the coordinator-level payoff of the
-//! weight-stationary dataflow the paper optimizes.
+//! weight-stationary jobs per the paper's §IV.C tiling and routes each
+//! job to the device its weight tile hashes to, over per-device bounded
+//! queues (`queue`; backpressure, never drops, work stealing for
+//! stragglers). Worker devices (`device`) skip the stationary-weight
+//! reload when a job's tile is already resident and keep a small LRU of
+//! prepared (permutated) tiles; psums accumulate per request (`state`);
+//! counters (`metrics`) expose the reuse: `weight_loads_skipped`,
+//! `cache_hits`, `steals`, `weight_load_cycles_saved`.
+//!
+//! This makes weight-stationary reuse a *serving-level* property — the
+//! paper's single-array dataflow claim, lifted to the device pool:
+//! repeated layers and batches hit the device that already holds their
+//! tile stationary, and batched submission loads each tile at most once
+//! per batch.
 
 pub mod device;
 pub mod metrics;
+pub mod queue;
 pub mod router;
 pub mod state;
 
 pub use device::{Device, DeviceConfig, Job};
 pub use metrics::{Metrics, MetricsSnapshot};
+pub use queue::{Pop, ShardedQueue};
 pub use router::{Coordinator, CoordinatorConfig, RequestHandle};
 pub use state::{MatmulResponse, ReqState, SubRequest};

@@ -1,14 +1,17 @@
 //! The request router: decomposes matmul requests into weight-stationary
-//! jobs (one per M2 tile, per the paper's §IV.C schedule), fans them out
-//! to a pool of array devices over a bounded queue (backpressure), and
-//! reassembles psum-accumulated responses.
+//! jobs (one per M2 tile, per the paper's §IV.C schedule) and routes
+//! each job to the device its weight tile hashes to — so repeated
+//! layers and batches land on the device that already holds that tile
+//! stationary — over per-device bounded queues (backpressure) with
+//! work stealing. Psum-accumulated responses are reassembled per
+//! request; all operand matrices are `Arc`-shared across the fan-out.
 //!
-//! Built on std threads + mpsc (tokio is not in the offline vendored
-//! crate set); the workload is CPU-bound simulation, so a thread pool is
-//! the right shape anyway.
+//! Built on std threads + the in-tree [`ShardedQueue`] (tokio and
+//! crossbeam are not in the offline vendored crate set); the workload
+//! is CPU-bound simulation, so a thread pool is the right shape anyway.
 
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, SyncSender};
-use std::sync::{mpsc, Arc};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Duration;
 
@@ -16,6 +19,7 @@ use crate::matrix::Mat;
 
 use super::device::{Device, DeviceConfig, Job};
 use super::metrics::{Metrics, MetricsSnapshot};
+use super::queue::{Pop, ShardedQueue};
 use super::state::{MatmulResponse, ReqState, SubRequest};
 
 /// Coordinator configuration.
@@ -24,14 +28,22 @@ pub struct CoordinatorConfig {
     /// Worker devices (each owns one simulated array).
     pub devices: usize,
     pub device: DeviceConfig,
-    /// Bounded job-queue depth; submits block when full (backpressure,
-    /// never drops work).
+    /// Bounded *per-device* job-queue depth; submits block when the
+    /// target device's queue is full (backpressure, never drops work).
     pub queue_depth: usize,
+    /// Let idle devices take backlog from other devices' queues. On by
+    /// default; disable for strict-affinity experiments.
+    pub work_stealing: bool,
 }
 
 impl Default for CoordinatorConfig {
     fn default() -> Self {
-        Self { devices: 4, device: DeviceConfig::default(), queue_depth: 64 }
+        Self {
+            devices: 4,
+            device: DeviceConfig::default(),
+            queue_depth: 64,
+            work_stealing: true,
+        }
     }
 }
 
@@ -60,7 +72,7 @@ impl RequestHandle {
 
 /// The L3 coordinator.
 pub struct Coordinator {
-    tx: Option<SyncSender<Job>>,
+    pool: Arc<ShardedQueue<Job>>,
     workers: Vec<JoinHandle<()>>,
     metrics: Arc<Metrics>,
     cfg: CoordinatorConfig,
@@ -69,23 +81,36 @@ pub struct Coordinator {
 
 impl Coordinator {
     pub fn new(cfg: CoordinatorConfig) -> Self {
-        let (tx, rx) = mpsc::sync_channel::<Job>(cfg.queue_depth);
-        let rx = Arc::new(std::sync::Mutex::new(rx));
+        use std::sync::atomic::Ordering::Relaxed;
+        let devices = cfg.devices.max(1);
+        let pool = Arc::new(ShardedQueue::<Job>::new(
+            devices,
+            cfg.queue_depth.max(1),
+            cfg.work_stealing,
+        ));
         let metrics = Arc::new(Metrics::default());
-        let workers = (0..cfg.devices.max(1))
+        let workers = (0..devices)
             .map(|i| {
-                let rx = Arc::clone(&rx);
+                let pool = Arc::clone(&pool);
                 let metrics = Arc::clone(&metrics);
                 let dcfg = cfg.device;
                 std::thread::Builder::new()
                     .name(format!("dip-worker-{i}"))
                     .spawn(move || {
-                        let mut dev = Device::new(dcfg, metrics);
+                        let mut dev = Device::new(dcfg, Arc::clone(&metrics));
                         loop {
-                            // Hold the lock only while pulling one job.
-                            let job = match rx.lock().unwrap().recv() {
-                                Ok(j) => j,
-                                Err(_) => break, // queue closed: drain done
+                            // Prefer queued jobs whose tile is already
+                            // stationary here (no reload), else FIFO,
+                            // else steal backlog from a busy device.
+                            let resident = dev.loaded_tile_id();
+                            let prefer = |j: &Job| Some(j.tile_id) == resident;
+                            let job = match pool.pop(i, prefer) {
+                                Some(Pop::Local(j)) => j,
+                                Some(Pop::Stolen(j)) => {
+                                    metrics.steals.fetch_add(1, Relaxed);
+                                    j
+                                }
+                                None => break, // closed and drained
                             };
                             dev.execute(job);
                         }
@@ -94,7 +119,7 @@ impl Coordinator {
             })
             .collect();
         Self {
-            tx: Some(tx),
+            pool,
             workers,
             metrics,
             cfg,
@@ -119,8 +144,9 @@ impl Coordinator {
     /// Submit a *batch* of inputs sharing the same weight matrix (the
     /// serving case: many sequences through one layer). The inputs are
     /// stacked so every stationary weight tile is loaded **once per
-    /// batch** instead of once per request — the coordinator-level
-    /// expression of weight-stationary reuse.
+    /// batch** at most — and with affinity routing, a tile that is
+    /// already stationary on its device from an earlier batch is not
+    /// reloaded at all.
     pub fn submit_batched(&self, xs: Vec<Mat<i8>>, w: Mat<i8>) -> Vec<RequestHandle> {
         use std::sync::atomic::Ordering::Relaxed;
         assert!(!xs.is_empty(), "empty batch");
@@ -149,35 +175,49 @@ impl Coordinator {
             self.metrics.requests_submitted.fetch_add(1, Relaxed);
         }
 
+        // A degenerate request produces no jobs: an all-empty batch
+        // (nothing to stream; the arrays reject 0-row tiles), a 0-column
+        // weight (empty output), or a 0-length contraction (all-zero
+        // output — the empty sum). Answer directly instead of dropping
+        // the response senders and panicking every waiter.
         let jobs = tn * tk;
+        if total_rows == 0 || jobs == 0 {
+            let req = ReqState::new(0, k_dim, tk * t, 0, subs);
+            let completed = req.finish();
+            self.metrics.requests_completed.fetch_add(completed, Relaxed);
+            return handles;
+        }
         let req = Arc::new(ReqState::new(padded_rows, k_dim, tk * t, jobs, subs));
 
-        let tx = self.tx.as_ref().expect("coordinator already shut down");
+        let devices = self.pool.shards() as u64;
         for kn in 0..tn {
             // The x strip for this contraction block is shared by all
-            // ko jobs; clone per job (workers own their inputs).
-            let x_strip = stacked.block(0, kn * t, padded_rows, t);
+            // ko jobs through one Arc — no per-job deep copies.
+            let x_strip = Arc::new(stacked.block(0, kn * t, padded_rows, t));
             for ko in 0..tk {
-                let w_tile = w.block(kn * t, ko * t, t, t);
+                let w_tile = Arc::new(w.block(kn * t, ko * t, t, t));
+                let tile_id = w_tile.content_hash();
                 let job = Job {
                     req: Arc::clone(&req),
                     w_tile,
-                    x_strip: x_strip.clone(),
+                    x_strip: Arc::clone(&x_strip),
                     c0: ko * t,
+                    tile_id,
                 };
-                if let Err(mpsc::TrySendError::Full(job)) = tx.try_send(job) {
-                    // Backpressure: block until a worker frees a slot.
+                // Affinity: the same tile always routes to the same
+                // device, which then skips the stationary reload.
+                let shard = (tile_id % devices) as usize;
+                if self.pool.push(shard, job) {
                     self.metrics.backpressure_events.fetch_add(1, Relaxed);
-                    tx.send(job).expect("workers gone");
                 }
             }
         }
         handles
     }
 
-    /// Drain the queue, stop the workers, and return final metrics.
+    /// Drain the queues, stop the workers, and return final metrics.
     pub fn shutdown(mut self) -> MetricsSnapshot {
-        self.tx.take(); // close the queue; workers exit after draining
+        self.pool.close(); // workers exit after draining
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
@@ -187,7 +227,7 @@ impl Coordinator {
 
 impl Drop for Coordinator {
     fn drop(&mut self) {
-        self.tx.take();
+        self.pool.close();
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
@@ -205,6 +245,7 @@ mod tests {
             devices: 3,
             device: DeviceConfig { arch: Arch::Dip, tile: 8, mac_stages: 2 },
             queue_depth: 4,
+            work_stealing: true,
         }
     }
 
@@ -272,6 +313,106 @@ mod tests {
         assert_eq!(batched.jobs_executed, 4);
         assert_eq!(unbatched.jobs_executed, 4 * 6);
         assert!(batched.sim_cycles < unbatched.sim_cycles);
+        // Every job either installed its tile or found it resident.
+        assert_eq!(unbatched.weight_loads + unbatched.weight_loads_skipped, 24);
+    }
+
+    #[test]
+    fn affinity_skips_reloads_across_sequential_requests() {
+        // One 8x8 weight = a single tile, so every request's job routes
+        // to the same device; after the first, the tile is resident.
+        let c = Coordinator::new(small());
+        let w = random_i8(8, 8, 21);
+        for i in 0..5 {
+            let x = random_i8(8, 8, 30 + i);
+            assert_eq!(
+                c.submit(x.clone(), w.clone()).wait().out,
+                x.widen().matmul(&w.widen())
+            );
+        }
+        let m = c.shutdown();
+        assert_eq!(m.jobs_executed, 5);
+        assert_eq!(m.weight_loads, 1);
+        assert_eq!(m.weight_loads_skipped, 4);
+        assert_eq!(m.weight_load_cycles_saved, 4 * 7); // N-1 = 7 per skip
+    }
+
+    #[test]
+    fn strict_affinity_without_stealing_even_under_concurrency() {
+        let cfg = CoordinatorConfig { work_stealing: false, queue_depth: 32, ..small() };
+        let c = Coordinator::new(cfg);
+        let w = random_i8(8, 8, 40);
+        let handles: Vec<_> = (0..12)
+            .map(|i| {
+                let x = random_i8(8, 8, 50 + i);
+                (x.clone(), c.submit(x, w.clone()))
+            })
+            .collect();
+        for (x, h) in handles {
+            assert_eq!(h.wait().out, x.widen().matmul(&w.widen()));
+        }
+        let m = c.shutdown();
+        // All 12 single-tile jobs ran on the one affinity device, in
+        // order: exactly one load, eleven skips, zero steals.
+        assert_eq!(m.weight_loads, 1);
+        assert_eq!(m.weight_loads_skipped, 11);
+        assert_eq!(m.steals, 0);
+    }
+
+    #[test]
+    fn stealing_keeps_results_exact_under_skewed_load() {
+        // Single-tile weights funnel everything onto one affinity
+        // device; with stealing enabled the others may help. Whatever
+        // the interleaving, results must be exact and nothing lost.
+        let cfg = CoordinatorConfig { queue_depth: 64, ..small() };
+        let c = Coordinator::new(cfg);
+        let w = random_i8(8, 8, 60);
+        let handles: Vec<_> = (0..32)
+            .map(|i| {
+                let x = random_i8(16, 8, 70 + i);
+                (x.clone(), c.submit(x, w.clone()))
+            })
+            .collect();
+        for (x, h) in handles {
+            assert_eq!(h.wait().out, x.widen().matmul(&w.widen()));
+        }
+        let m = c.shutdown();
+        assert_eq!(m.requests_completed, 32);
+        assert_eq!(m.weight_loads + m.weight_loads_skipped, 32);
+    }
+
+    #[test]
+    fn zero_row_request_serves_empty_output() {
+        // Regression: a 0-row input used to underflow in the DiP fast
+        // path; it now serves an empty (0 x K) result without fanning
+        // out any simulation jobs.
+        let c = Coordinator::new(small());
+        let x = Mat::<i8>::zeros(0, 16);
+        let w = random_i8(16, 12, 3);
+        let resp = c.submit(x.clone(), w.clone()).wait();
+        assert_eq!(resp.out.rows(), 0);
+        assert_eq!(resp.out.cols(), 12);
+        assert_eq!(resp.out, x.widen().matmul(&w.widen()));
+        let m = c.shutdown();
+        assert_eq!(m.requests_completed, 1);
+        assert_eq!(m.jobs_executed, 0);
+    }
+
+    #[test]
+    fn degenerate_weight_dims_serve_without_panicking() {
+        let c = Coordinator::new(small());
+        // K = 0: empty output columns.
+        let x = random_i8(4, 8, 1);
+        let w = Mat::<i8>::zeros(8, 0);
+        let resp = c.submit(x.clone(), w.clone()).wait();
+        assert_eq!((resp.out.rows(), resp.out.cols()), (4, 0));
+        assert_eq!(resp.out, x.widen().matmul(&w.widen()));
+        // N = 0: empty contraction, so the product is all zeros.
+        let x = Mat::<i8>::zeros(3, 0);
+        let w = Mat::<i8>::zeros(0, 5);
+        let resp = c.submit(x.clone(), w.clone()).wait();
+        assert_eq!(resp.out, x.widen().matmul(&w.widen()));
+        assert_eq!(resp.out, Mat::<i32>::zeros(3, 5));
     }
 
     #[test]
@@ -280,6 +421,7 @@ mod tests {
             devices: 1,
             device: DeviceConfig { arch: Arch::Dip, tile: 8, mac_stages: 2 },
             queue_depth: 1,
+            work_stealing: true,
         };
         let c = Coordinator::new(cfg);
         let w = random_i8(32, 32, 6);
@@ -290,7 +432,7 @@ mod tests {
         }
         let m = c.shutdown();
         assert_eq!(m.requests_completed, 8);
-        // With queue depth 1 and 4 jobs per request, backpressure fired.
+        // With queue depth 1 and 16 jobs per request, backpressure fired.
         assert!(m.backpressure_events > 0);
     }
 

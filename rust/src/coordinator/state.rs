@@ -1,7 +1,9 @@
 //! Per-request state: psum accumulation across M2-tile jobs and
 //! completion signalling. Jobs for one request may finish on any worker
-//! in any order; accumulation is commutative so the result is
-//! order-independent (covered by property tests).
+//! in any order — the affinity scheduler reorders within a device by
+//! stationary tile and work stealing moves jobs across devices — but
+//! accumulation is commutative so the result is order-independent
+//! (covered by property tests).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::Sender;

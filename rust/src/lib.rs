@@ -20,11 +20,22 @@
 //! * [`tiling`] — the paper’s §IV.C tiling methodology: stationary M2
 //!   tiles, streamed M1 tiles, psum accumulation — with cycle/energy
 //!   composition validated against the PE-level simulators.
-//! * [`coordinator`] — the L3 runtime: an async matmul/transformer-layer
-//!   request router with tile batching, a device pool of simulated
-//!   arrays, backpressure, and metrics.
-//! * [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas
+//! * [`coordinator`] — the L3 runtime: a matmul/transformer-layer
+//!   request router with **weight-tile-affinity scheduling**: per-device
+//!   bounded queues (backpressure, never drops), jobs routed by weight
+//!   tile content hash so repeated layers/batches hit the device that
+//!   already holds the tile stationary (the reload is skipped and its
+//!   `N-1` cycles credited), per-device LRU caches of prepared
+//!   (permutated) tiles, and work stealing so affinity never starves a
+//!   device. Reuse is observable in the metrics snapshot:
+//!   `weight_loads_skipped`, `weight_load_cycles_saved`, `cache_hits` /
+//!   `cache_misses`, and `steals`.
+//! * `runtime` — PJRT execution of the AOT-compiled JAX/Pallas
 //!   artifacts (`artifacts/*.hlo.txt`); Python is never on this path.
+//!   Compiled only with the non-default `pjrt` cargo feature (the `xla`
+//!   bindings cannot be vendored offline), which also gates the
+//!   `pjrt_e2e` test, the `serve_e2e` example, and the CLI's
+//!   `verify-artifacts` command; the default build/test is hermetic.
 //! * [`bench_harness`] — regenerates every table and figure of the
 //!   paper’s evaluation section (Fig 5, Tables I/II/IV, Fig 6).
 
@@ -35,11 +46,12 @@ pub mod coordinator;
 pub mod jsonio;
 pub mod matrix;
 pub mod power;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod sim;
 pub mod tiling;
 pub mod workloads;
 
-pub use arch::{dip::DipArray, ws::WsArray, SystolicArray, TileRun};
+pub use arch::{dip::DipArray, ws::WsArray, PreparedWeights, SystolicArray, TileRun};
 pub use matrix::Mat;
 pub use sim::stats::{EventCounts, RunStats};

@@ -14,7 +14,6 @@ use dip_core::arch::{dip::DipArray, ws::WsArray, SystolicArray};
 use dip_core::bench_harness::{fig5, fig6, report::Json, table1, table2, table4};
 use dip_core::coordinator::{Coordinator, CoordinatorConfig, DeviceConfig};
 use dip_core::matrix::{random_i8, Mat};
-use dip_core::runtime::Runtime;
 use dip_core::workloads::models::{model_by_name, MODELS};
 
 const USAGE: &str = "\
@@ -34,7 +33,7 @@ COMMANDS:
     trace               Fig 4 cycle-by-cycle walkthrough
                           [--n <size>] [--arch <dip|ws>]
     verify-artifacts    Execute AOT artifacts via PJRT; check dip==ref
-                          [--dir <artifacts>]
+                          [--dir <artifacts>]  (needs --features pjrt)
     serve               Serve random matmul workloads on the coordinator
                           [--requests <n>] [--devices <n>] [--arch <dip|ws>]
                           [--model <name>] [--seq <len>] [--batch <n>]
@@ -189,7 +188,18 @@ fn cmd_trace(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_verify(_args: &Args) -> Result<()> {
+    bail!(
+        "verify-artifacts needs the PJRT runtime; rebuild with \
+         `cargo run --features pjrt -- verify-artifacts` (see rust/Cargo.toml \
+         for how to provide the xla crate)"
+    )
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_verify(args: &Args) -> Result<()> {
+    use dip_core::runtime::Runtime;
     let dir = args.get("--dir").unwrap_or("artifacts").to_string();
     let mut rt = Runtime::new(&dir)?;
     println!("PJRT platform: {}", rt.platform());
@@ -241,6 +251,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         devices,
         device: DeviceConfig { arch, tile: 64, mac_stages: 2 },
         queue_depth: 128,
+        work_stealing: true,
     };
     println!(
         "serving {requests} matmul requests ({rows}x{n_dim} @ {n_dim}x{k_dim}) on {devices} {} devices, batch={batch}",
@@ -278,6 +289,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
         total_cycles as f64 / 1e3,
         m.busy_ns as f64 / 1e6,
         m.macs_per_cycle()
+    );
+    println!(
+        "  weight loads: {}  skipped (affinity): {}  reuse: {:.0}%  cycles saved: {}  steals: {}",
+        m.weight_loads,
+        m.weight_loads_skipped,
+        m.weight_reuse_rate() * 100.0,
+        m.weight_load_cycles_saved,
+        m.steals
     );
     Ok(())
 }

@@ -135,6 +135,27 @@ impl Mat<i8> {
     pub fn widen(&self) -> Mat<i32> {
         Mat::from_vec(self.rows, self.cols, self.data.iter().map(|&v| v as i32).collect())
     }
+
+    /// Cheap content identity: FNV-1a over shape + bytes. The
+    /// coordinator routes weight-stationary jobs by this hash so
+    /// repeated tiles land on the device that already holds them
+    /// (affinity scheduling); equal matrices always hash equal, and the
+    /// scheduler re-checks full equality before skipping a load, so a
+    /// collision can never change numerics.
+    pub fn content_hash(&self) -> u64 {
+        const OFFSET: u64 = 0xcbf29ce484222325;
+        const PRIME: u64 = 0x100000001b3;
+        let mut h = OFFSET;
+        for v in [self.rows as u64, self.cols as u64] {
+            for b in v.to_le_bytes() {
+                h = (h ^ b as u64).wrapping_mul(PRIME);
+            }
+        }
+        for &v in &self.data {
+            h = (h ^ (v as u8) as u64).wrapping_mul(PRIME);
+        }
+        h
+    }
 }
 
 impl<T: Copy + Default + fmt::Debug> fmt::Debug for Mat<T> {
@@ -213,6 +234,18 @@ mod tests {
     fn random_is_deterministic() {
         assert_eq!(random_i8(3, 3, 7).as_slice(), random_i8(3, 3, 7).as_slice());
         assert_ne!(random_i8(3, 3, 7).as_slice(), random_i8(3, 3, 8).as_slice());
+    }
+
+    #[test]
+    fn content_hash_identity() {
+        let a = random_i8(9, 13, 3);
+        let b = random_i8(9, 13, 3);
+        assert_eq!(a.content_hash(), b.content_hash());
+        assert_ne!(a.content_hash(), random_i8(9, 13, 4).content_hash());
+        // Shape participates: same bytes, different shape, different id.
+        let flat = Mat::from_vec(1, 4, vec![1i8, 2, 3, 4]);
+        let tall = Mat::from_vec(4, 1, vec![1i8, 2, 3, 4]);
+        assert_ne!(flat.content_hash(), tall.content_hash());
     }
 
     #[test]

@@ -98,12 +98,46 @@ fn coordinator_and_tiling_agree_numerically() {
         devices: 3,
         device: DeviceConfig { arch: Arch::Dip, tile: 8, mac_stages: 2 },
         queue_depth: 16,
+        work_stealing: true,
     });
     let served = coord.submit(x.clone(), w.clone()).wait().out;
     coord.shutdown();
 
     assert_eq!(tiled, served);
     assert_eq!(tiled, x.widen().matmul(&w.widen()));
+}
+
+#[test]
+fn serving_reuses_stationary_weights_across_requests() {
+    // The ROADMAP serving scenario: one model layer, many requests. A
+    // single-tile weight pins every job to one affinity device, so the
+    // scheduler must install the tile exactly once and skip the load on
+    // every later request — while staying bit-exact — on both archs.
+    for arch in [Arch::Dip, Arch::Ws] {
+        let coord = Coordinator::new(CoordinatorConfig {
+            devices: 2,
+            device: DeviceConfig { arch, tile: 8, mac_stages: 2 },
+            queue_depth: 16,
+            work_stealing: false, // strict affinity: reuse is deterministic
+        });
+        let w = random_i8(8, 8, 77);
+        for i in 0..6 {
+            let x = random_i8(10, 8, 200 + i);
+            assert_eq!(
+                coord.submit(x.clone(), w.clone()).wait().out,
+                x.widen().matmul(&w.widen())
+            );
+        }
+        let m = coord.shutdown();
+        assert_eq!(m.jobs_executed, 6);
+        assert_eq!(m.weight_loads, 1, "{arch:?}");
+        assert_eq!(m.weight_loads_skipped, 5, "{arch:?}");
+        let per_load = match arch {
+            Arch::Dip => 7, // N-1: the last row overlaps the first input
+            Arch::Ws => 8,  // N
+        };
+        assert_eq!(m.weight_load_cycles_saved, 5 * per_load, "{arch:?}");
+    }
 }
 
 #[test]

@@ -4,6 +4,11 @@
 //!
 //! These tests are skipped (with a notice) when `make artifacts` has not
 //! been run — CI runs them after the artifact build.
+//!
+//! The whole target is gated behind the non-default `pjrt` cargo
+//! feature (`required-features` in Cargo.toml): the `xla` bindings are
+//! not in the offline vendored crate set, so the default tier-1
+//! `cargo test` never tries to compile this file.
 
 use dip_core::coordinator::{Coordinator, CoordinatorConfig, DeviceConfig};
 use dip_core::matrix::Mat;
@@ -99,6 +104,7 @@ fn coordinator_serving_cross_checked_against_pjrt() {
         devices: 2,
         device: DeviceConfig { arch: Arch::Dip, tile: 64, mac_stages: 2 },
         queue_depth: 8,
+        work_stealing: true,
     });
     let served: Mat<i32> = coord.submit(xi.clone(), wi.clone()).wait().out;
     coord.shutdown();

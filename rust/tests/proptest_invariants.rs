@@ -10,7 +10,10 @@
 //!  * per-tile cycle counts equal eqs (1)/(5) and TFPU eqs (4)/(7),
 //!  * tiling reassembly equals the whole-matrix reference for ragged
 //!    shapes,
-//!  * coordinator responses are exact and order-independent.
+//!  * coordinator responses are exact and order-independent,
+//!  * `submit_batched` ≡ per-request `submit` ≡ the i32 reference
+//!    matmul for ragged shapes, across device counts, architectures,
+//!    queue depths, and work-stealing on/off.
 
 use dip_core::analytical::{latency_cycles, Arch};
 use dip_core::arch::permute::{permute, unpermute};
@@ -163,6 +166,7 @@ fn prop_coordinator_exact_under_concurrency() {
             devices: g.range(1, 6) as usize,
             device: DeviceConfig { arch: Arch::Dip, tile: 8, mac_stages: 2 },
             queue_depth: g.range(1, 16) as usize,
+            work_stealing: g.next() % 2 == 0,
         };
         let coord = Coordinator::new(cfg);
         let nd = g.range(1, 4) as usize * 8;
@@ -191,6 +195,52 @@ fn prop_coordinator_exact_under_concurrency() {
 }
 
 #[test]
+fn prop_submit_batched_equals_submit_equals_reference() {
+    // The three serving paths must agree bit-exactly for ragged shapes
+    // (M, N, K deliberately not multiples of the tile): batched
+    // stacking exercises `Mat::block` edge zero-padding in the strip
+    // slicing, per-request submit exercises affinity reuse, and the
+    // widened i32 matmul is the oracle.
+    let mut g = Gen(0xBA7C4);
+    for round in 0..8 {
+        let tile = [4usize, 8][g.range(0, 1) as usize];
+        let arch = if g.next() % 2 == 0 { Arch::Dip } else { Arch::Ws };
+        let cfg = CoordinatorConfig {
+            devices: g.range(1, 4) as usize,
+            device: DeviceConfig { arch, tile, mac_stages: 2 },
+            queue_depth: g.range(2, 16) as usize,
+            work_stealing: g.next() % 2 == 0,
+        };
+        let nd = g.range(1, 40) as usize;
+        let k = g.range(1, 40) as usize;
+        let w = random_i8(nd, k, g.next());
+        let batch = g.range(1, 6) as usize;
+        let xs: Vec<Mat<i8>> = (0..batch)
+            .map(|_| random_i8(g.range(1, 30) as usize, nd, g.next()))
+            .collect();
+
+        let c = Coordinator::new(cfg);
+        let batched: Vec<Mat<i32>> = c
+            .submit_batched(xs.clone(), w.clone())
+            .into_iter()
+            .map(|h| h.wait().out)
+            .collect();
+        c.shutdown();
+
+        let c = Coordinator::new(cfg);
+        let handles: Vec<_> = xs.iter().map(|x| c.submit(x.clone(), w.clone())).collect();
+        let single: Vec<Mat<i32>> = handles.into_iter().map(|h| h.wait().out).collect();
+        c.shutdown();
+
+        for (i, ((x, b), s)) in xs.iter().zip(&batched).zip(&single).enumerate() {
+            let want = x.widen().matmul(&w.widen());
+            assert_eq!(*b, want, "batched round {round} req {i} nd={nd} k={k} tile={tile} arch={arch:?}");
+            assert_eq!(*s, want, "single round {round} req {i} nd={nd} k={k} tile={tile} arch={arch:?}");
+        }
+    }
+}
+
+#[test]
 fn prop_psum_accumulation_order_independent() {
     // The same workload through 1 device (deterministic job order) and
     // many devices (racy order) must agree bit-exactly.
@@ -205,6 +255,7 @@ fn prop_psum_accumulation_order_independent() {
                 devices,
                 device: DeviceConfig { arch: Arch::Dip, tile: 8, mac_stages: 2 },
                 queue_depth: 4,
+                work_stealing: true,
             });
             let out = coord.submit(x.clone(), w.clone()).wait().out;
             coord.shutdown();
