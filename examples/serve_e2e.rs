@@ -59,9 +59,9 @@ fn main() -> anyhow::Result<()> {
 
     let coord = Coordinator::new(CoordinatorConfig {
         devices,
-        device: DeviceConfig { arch: Arch::Dip, tile: 64, mac_stages: 2 },
+        device: DeviceConfig { arch: Arch::Dip, tile: 64, mac_stages: 2, ..Default::default() },
         queue_depth: 256,
-        work_stealing: true,
+        ..Default::default()
     });
 
     // Fixed layer weights (the serving scenario: one model, many reqs).

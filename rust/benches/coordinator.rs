@@ -1,18 +1,31 @@
 //! Bench: L3 coordinator serving throughput — requests/s, batched vs
-//! unbatched, repeated-weight affinity reuse, DiP vs WS device pools.
+//! unbatched, repeated-weight affinity reuse, heat-aware vs hash-mod
+//! placement, multi-tenant fairness, DiP vs WS device pools.
 //! `cargo bench --bench coordinator`.
+//!
+//! Set `DIP_BENCH_SMOKE=1` to run reduced sizes (CI smoke: the same
+//! scenarios and assertions, a fraction of the wall time).
 
 use dip_core::analytical::Arch;
+use dip_core::bench_harness::scenarios::{
+    cold_share_with_growing_plug, serve_two_model_bursts, FloodScenario, TwoModelBurst,
+};
 use dip_core::bench_harness::timing::{bench, report_throughput};
-use dip_core::coordinator::{Coordinator, CoordinatorConfig, DeviceConfig, MetricsSnapshot};
+use dip_core::coordinator::{
+    Coordinator, CoordinatorConfig, DeviceConfig, MetricsSnapshot, PlacementPolicy,
+};
 use dip_core::matrix::{random_i8, Mat};
+
+fn smoke() -> bool {
+    std::env::var("DIP_BENCH_SMOKE").map(|v| !v.is_empty() && v != "0").unwrap_or(false)
+}
 
 fn config(arch: Arch, devices: usize) -> CoordinatorConfig {
     CoordinatorConfig {
         devices,
-        device: DeviceConfig { arch, tile: 64, mac_stages: 2 },
+        device: DeviceConfig { arch, tile: 64, mac_stages: 2, ..Default::default() },
         queue_depth: 256,
-        work_stealing: true,
+        ..Default::default()
     }
 }
 
@@ -42,19 +55,95 @@ fn serve(arch: Arch, devices: usize, requests: usize, batch: usize, verify: bool
     coord.shutdown()
 }
 
+fn placement_scenario(burst: usize) {
+    println!(
+        "\n=== Heat-aware placement vs `hash % devices` (2 models x 8 tiles, 4 devices, burst {burst}) ==="
+    );
+    // Deterministic A/B: sequential submit+wait, stealing off, outputs
+    // verified bit-exact inside the shared scenario.
+    let cfg = TwoModelBurst { tile: 16, seed_a: 2700, seed_b: 2750, burst };
+    let hash = serve_two_model_bursts(&cfg, PlacementPolicy::HashMod);
+    let heat = serve_two_model_bursts(&cfg, PlacementPolicy::HeatAware);
+    println!(
+        "hash-mod : jobs/device {:?}  max/min {:.2}  reuse {:.0}%",
+        hash.device_jobs,
+        hash.job_ratio(),
+        hash.metrics.weight_reuse_rate() * 100.0
+    );
+    println!(
+        "heat-aware: jobs/device {:?}  max/min {:.2}  reuse {:.0}%",
+        heat.device_jobs,
+        heat.job_ratio(),
+        heat.metrics.weight_reuse_rate() * 100.0
+    );
+    // Acceptance: strictly higher reuse AND strictly lower per-device
+    // job skew.
+    assert!(
+        heat.metrics.weight_reuse_rate() > hash.metrics.weight_reuse_rate(),
+        "heat-aware reuse {:.3} must strictly beat hash {:.3}",
+        heat.metrics.weight_reuse_rate(),
+        hash.metrics.weight_reuse_rate()
+    );
+    assert!(
+        heat.job_ratio() < hash.job_ratio(),
+        "heat-aware job skew {:?} must be strictly tighter than {:?}",
+        heat.device_jobs,
+        hash.device_jobs
+    );
+    assert!(heat.job_spread() < hash.job_spread());
+}
+
+fn fairness_scenario(hot_requests: usize, cold_requests: usize, plug_rows: usize) {
+    println!(
+        "\n=== Two-tenant fairness (hot floods {hot_requests}, cold submits {cold_requests}, 1 device) ==="
+    );
+    let cfg = FloodScenario { tile: 16, hot_requests, cold_requests, plug_rows };
+    let Some(out) = cold_share_with_growing_plug(cfg, 4) else {
+        // Timing-inconclusive on this machine: the share measurement
+        // needs a held backlog (exactness was still verified; the DRR
+        // guarantee is covered by the queue-level unit tests).
+        println!("fairness share inconclusive (backlog never held); skipping the floor check");
+        return;
+    };
+    let share = out.cold_share.unwrap();
+    println!(
+        "at cold completion: hot served {}, cold served {} -> cold share {:.0}%",
+        out.hot_served_at_cold_done,
+        out.cold_served,
+        share * 100.0
+    );
+    for t in &out.final_tenants {
+        println!(
+            "tenant {}: submitted {}  served {}  mean wait {:.2} ms",
+            t.tenant,
+            t.requests_submitted,
+            t.jobs_served,
+            t.mean_wait().as_secs_f64() * 1e3
+        );
+    }
+    assert!(
+        share >= 0.25,
+        "DRR must bound the cold tenant's share at >= 25% while the hot tenant floods (got {share:.2})"
+    );
+}
+
 fn main() {
+    let smoke = smoke();
+    let requests = if smoke { 8 } else { 64 };
+    if smoke {
+        println!("[smoke mode: reduced sizes]");
+    }
     println!("=== Coordinator serving throughput (64x256 @ 256x256 requests) ===");
-    let requests = 64;
 
     for devices in [1usize, 4, 8] {
-        let r = bench(&format!("dip/devices{devices}/unbatched"), 1, 5, || {
+        let r = bench(&format!("dip/devices{devices}/unbatched"), 1, if smoke { 2 } else { 5 }, || {
             serve(Arch::Dip, devices, requests, 1, false).sim_cycles
         });
         report_throughput("requests", r.throughput(requests as f64), "/s");
     }
 
     for batch in [4usize, 16] {
-        let r = bench(&format!("dip/devices4/batch{batch}"), 1, 5, || {
+        let r = bench(&format!("dip/devices4/batch{batch}"), 1, if smoke { 2 } else { 5 }, || {
             serve(Arch::Dip, 4, requests, batch, false).sim_cycles
         });
         report_throughput("requests", r.throughput(requests as f64), "/s");
@@ -80,6 +169,15 @@ fn main() {
     assert!(
         m.weight_loads_skipped > 0,
         "affinity scheduler must skip stationary reloads when serving one W repeatedly"
+    );
+
+    // Heat-aware placement A/B and multi-tenant fairness (the PR 2
+    // scheduler-layer scenarios; deterministic placement asserts).
+    placement_scenario(if smoke { 4 } else { 8 });
+    fairness_scenario(
+        if smoke { 120 } else { 240 },
+        if smoke { 30 } else { 60 },
+        if smoke { 1 << 14 } else { 1 << 16 },
     );
 
     // DiP vs WS device pools: same requests, simulated cycle advantage.

@@ -8,6 +8,7 @@
 pub mod fig5;
 pub mod fig6;
 pub mod report;
+pub mod scenarios;
 pub mod table1;
 pub mod table2;
 pub mod table4;

@@ -7,6 +7,12 @@
 //! `N-1` / `N` load cycles), and it keeps a small LRU cache of
 //! *prepared* tiles (permutated + widened) so re-installing a recently
 //! evicted tile skips the host-side permutation work.
+//!
+//! Cycle ledger: an actual install **charges** its load cycles into the
+//! job's stats (and thus `sim_cycles`); a resident skip charges nothing
+//! and credits the same amount to `weight_load_cycles_saved` — so the
+//! savings metric is measured against a ledger that really paid the
+//! cost (the PR 1 version credited savings it never charged).
 
 use std::collections::VecDeque;
 use std::sync::Arc;
@@ -19,6 +25,7 @@ use crate::arch::{
 use crate::matrix::Mat;
 
 use super::metrics::Metrics;
+use super::queue::TenantId;
 use super::state::ReqState;
 
 /// One weight-stationary unit of work: make `w_tile` stationary (a
@@ -34,6 +41,12 @@ pub struct Job {
     /// Content identity of `w_tile` ([`Mat::content_hash`]); the router
     /// uses it for affinity, the device for resident/cached checks.
     pub tile_id: u64,
+    /// Tenant the job serves (selects its DRR lane; per-tenant metrics).
+    pub tenant: TenantId,
+    /// When the router created the job, stamped before the (possibly
+    /// backpressure-blocked) push — per-tenant wait accounting covers
+    /// the full submit→execute latency.
+    pub enqueued_at: Instant,
 }
 
 /// Device configuration.
@@ -42,22 +55,24 @@ pub struct DeviceConfig {
     pub arch: Arch,
     pub tile: usize,
     pub mac_stages: u64,
+    /// Prepared-weight LRU capacity, in tiles. Sized for a handful of
+    /// layers' worth of tiles per device by default; at the paper's
+    /// N=64 a prepared tile is 16 KiB, so the default stays well under
+    /// typical L2. Exposed for DSE sweeps and the coordinator bench.
+    pub weight_cache_tiles: usize,
 }
 
 impl Default for DeviceConfig {
     fn default() -> Self {
-        Self { arch: Arch::Dip, tile: 64, mac_stages: 2 }
+        Self { arch: Arch::Dip, tile: 64, mac_stages: 2, weight_cache_tiles: 8 }
     }
 }
-
-/// Prepared-weight cache capacity, in tiles. Sized for a handful of
-/// layers' worth of tiles per device; at the paper's N=64 a prepared
-/// tile is 16 KiB, so the cache stays well under typical L2.
-const WEIGHT_CACHE_TILES: usize = 8;
 
 /// A worker's array + weight caches + metrics hook.
 pub struct Device {
     array: Box<dyn SystolicArray>,
+    /// Worker index in the pool (per-device job accounting).
+    index: usize,
     metrics: Arc<Metrics>,
     /// Identity and content of the tile currently stationary on the
     /// array. Content is kept so a hash collision degrades to a reload,
@@ -65,6 +80,7 @@ pub struct Device {
     loaded: Option<(u64, Arc<Mat<i8>>)>,
     /// LRU of prepared tiles, most recent first.
     cache: VecDeque<(u64, Arc<Mat<i8>>, PreparedWeights)>,
+    cache_capacity: usize,
     /// Dedicated load-phase cycles of the last install (`N-1` DiP, `N`
     /// WS, straight from `load_prepared`) — what a skipped load credits
     /// to `weight_load_cycles_saved`. A skip can only follow an
@@ -73,12 +89,21 @@ pub struct Device {
 }
 
 impl Device {
-    pub fn new(cfg: DeviceConfig, metrics: Arc<Metrics>) -> Self {
+    pub fn new(cfg: DeviceConfig, index: usize, metrics: Arc<Metrics>) -> Self {
+        assert!(cfg.weight_cache_tiles >= 1, "prepared-weight cache needs capacity");
         let array: Box<dyn SystolicArray> = match cfg.arch {
             Arch::Ws => Box::new(WsArray::new(cfg.tile, cfg.mac_stages)),
             Arch::Dip => Box::new(DipArray::new(cfg.tile, cfg.mac_stages)),
         };
-        Self { array, metrics, loaded: None, cache: VecDeque::new(), load_cycles: 0 }
+        Self {
+            array,
+            index,
+            metrics,
+            loaded: None,
+            cache: VecDeque::new(),
+            cache_capacity: cfg.weight_cache_tiles,
+            load_cycles: 0,
+        }
     }
 
     /// Identity of the tile currently stationary on the array (the
@@ -87,10 +112,17 @@ impl Device {
         self.loaded.as_ref().map(|(id, _)| *id)
     }
 
+    /// Tile ids in the prepared-weight LRU, most recent first (tests
+    /// assert eviction order through this).
+    pub fn cached_tile_ids(&self) -> Vec<u64> {
+        self.cache.iter().map(|(id, _, _)| *id).collect()
+    }
+
     /// Execute one job; returns true if it completed its request.
     pub fn execute(&mut self, job: Job) -> bool {
         use std::sync::atomic::Ordering::Relaxed;
         let t0 = Instant::now();
+        let wait = t0.saturating_duration_since(job.enqueued_at);
         let resident = matches!(
             &self.loaded,
             Some((id, w)) if *id == job.tile_id && **w == *job.w_tile
@@ -110,11 +142,23 @@ impl Device {
             // this job skipped it — account honestly.
             run.stats.weight_load_cycles = 0;
             run.stats.events.reg8_writes -= weight_load_reg8_writes(self.array.n() as u64);
+        } else {
+            // ... and this job really performed it: charge the install
+            // into the cycle ledger the savings are credited against
+            // (run_tile's `cycles` covers only the streaming phase).
+            // PEs sit powered-but-idle through the load phase, so the
+            // event counts grow in lockstep and utilization/energy
+            // accounting stays consistent (active + idle == PEs*cycles).
+            let n = self.array.n() as u64;
+            run.stats.cycles += self.load_cycles;
+            run.stats.events.pe_idle_cycles += self.load_cycles * n * n;
         }
         self.metrics.jobs_executed.fetch_add(1, Relaxed);
         self.metrics.rows_streamed.fetch_add(job.x_strip.rows() as u64, Relaxed);
         self.metrics.sim_cycles.fetch_add(run.stats.cycles, Relaxed);
         self.metrics.mac_ops.fetch_add(run.stats.events.mac_ops, Relaxed);
+        self.metrics.tenant_served(job.tenant, wait);
+        self.metrics.device_job(self.index);
         let last = job.req.complete_job(job.c0, &run.outputs, &run.stats);
         if last {
             let completed = job.req.finish();
@@ -141,7 +185,7 @@ impl Device {
         }
         self.metrics.cache_misses.fetch_add(1, Relaxed);
         let prepared = self.array.prepare_weights(&job.w_tile);
-        self.cache.truncate(WEIGHT_CACHE_TILES - 1);
+        self.cache.truncate(self.cache_capacity - 1);
         self.cache.push_front((job.tile_id, Arc::clone(&job.w_tile), prepared.clone()));
         prepared
     }
@@ -150,6 +194,7 @@ impl Device {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::queue::DEFAULT_TENANT;
     use crate::coordinator::state::{MatmulResponse, SubRequest};
     use crate::matrix::random_i8;
     use std::sync::mpsc::channel;
@@ -165,16 +210,28 @@ mod tests {
         ));
         let w_tile = Arc::new(w.clone());
         let tile_id = w_tile.content_hash();
-        (Job { req, w_tile, x_strip: Arc::new(x.clone()), c0: 0, tile_id }, rx)
+        (
+            Job {
+                req,
+                w_tile,
+                x_strip: Arc::new(x.clone()),
+                c0: 0,
+                tile_id,
+                tenant: DEFAULT_TENANT,
+                enqueued_at: Instant::now(),
+            },
+            rx,
+        )
+    }
+
+    fn dip8() -> DeviceConfig {
+        DeviceConfig { arch: Arch::Dip, tile: 8, mac_stages: 2, ..Default::default() }
     }
 
     #[test]
     fn device_executes_job_and_completes_request() {
         let metrics = Arc::new(Metrics::default());
-        let mut dev = Device::new(
-            DeviceConfig { arch: Arch::Dip, tile: 8, mac_stages: 2 },
-            metrics.clone(),
-        );
+        let mut dev = Device::new(dip8(), 0, metrics.clone());
         let x = random_i8(8, 8, 1);
         let w = random_i8(8, 8, 2);
         let (job, rx) = job_for(&x, &w);
@@ -189,15 +246,13 @@ mod tests {
         assert_eq!(m.weight_loads_skipped, 0);
         assert!(m.sim_cycles > 0);
         assert!(m.busy_ns > 0);
+        assert_eq!(metrics.device_jobs(), vec![1]);
     }
 
     #[test]
     fn resident_tile_skips_reload_and_credits_cycles() {
         let metrics = Arc::new(Metrics::default());
-        let mut dev = Device::new(
-            DeviceConfig { arch: Arch::Dip, tile: 8, mac_stages: 2 },
-            metrics.clone(),
-        );
+        let mut dev = Device::new(dip8(), 0, metrics.clone());
         let w = random_i8(8, 8, 5);
         for seed in [10u64, 11, 12] {
             let x = random_i8(8, 8, seed);
@@ -213,12 +268,56 @@ mod tests {
     }
 
     #[test]
+    fn install_charges_exactly_what_a_skip_saves() {
+        // Regression (cycle-ledger bugfix): identical jobs, first
+        // installs the tile, second finds it resident. The sim_cycles
+        // charged must differ by exactly the dedicated load phase —
+        // N-1 on DiP, N on WS — the same amount the skip credits to
+        // weight_load_cycles_saved.
+        for (arch, per_load) in [(Arch::Dip, 7u64), (Arch::Ws, 8)] {
+            let metrics = Arc::new(Metrics::default());
+            let cfg = DeviceConfig { arch, tile: 8, mac_stages: 2, ..Default::default() };
+            let mut dev = Device::new(cfg, 0, metrics.clone());
+            let x = random_i8(8, 8, 1);
+            let w = random_i8(8, 8, 2);
+
+            let (job, _rx1) = job_for(&x, &w);
+            dev.execute(job);
+            let loaded = metrics.snapshot().sim_cycles;
+
+            let (job, _rx2) = job_for(&x, &w);
+            dev.execute(job);
+            let skipped = metrics.snapshot().sim_cycles - loaded;
+
+            assert_eq!(loaded - skipped, per_load, "{arch:?}");
+            assert_eq!(metrics.snapshot().weight_load_cycles_saved, per_load, "{arch:?}");
+        }
+    }
+
+    #[test]
+    fn install_charge_lands_in_request_stats() {
+        // The per-request RunStats must pay the install too: the same
+        // request served cold (install) reports more cycles than served
+        // hot (resident skip) by exactly the load phase.
+        let metrics = Arc::new(Metrics::default());
+        let mut dev = Device::new(dip8(), 0, metrics);
+        let x = random_i8(8, 8, 3);
+        let w = random_i8(8, 8, 4);
+        let (job, rx) = job_for(&x, &w);
+        dev.execute(job);
+        let cold = rx.try_recv().unwrap().stats;
+        let (job, rx) = job_for(&x, &w);
+        dev.execute(job);
+        let hot = rx.try_recv().unwrap().stats;
+        assert_eq!(cold.cycles - hot.cycles, 7); // N-1 = 7
+        assert_eq!(cold.weight_load_cycles, 7);
+        assert_eq!(hot.weight_load_cycles, 0);
+    }
+
+    #[test]
     fn prepared_cache_hits_on_tile_swap() {
         let metrics = Arc::new(Metrics::default());
-        let mut dev = Device::new(
-            DeviceConfig { arch: Arch::Dip, tile: 8, mac_stages: 2 },
-            metrics.clone(),
-        );
+        let mut dev = Device::new(dip8(), 0, metrics.clone());
         let wa = random_i8(8, 8, 1);
         let wb = random_i8(8, 8, 2);
         let x = random_i8(8, 8, 3);
@@ -237,15 +336,46 @@ mod tests {
     }
 
     #[test]
+    fn cache_capacity_is_configurable_and_evicts_lru() {
+        // Capacity 2: installing A, B, C must evict A (least recently
+        // used), keep [C, B], and a later A re-prepares (miss) while
+        // B still hits.
+        let metrics = Arc::new(Metrics::default());
+        let cfg = DeviceConfig { weight_cache_tiles: 2, ..dip8() };
+        let mut dev = Device::new(cfg, 0, metrics.clone());
+        let x = random_i8(8, 8, 9);
+        let wa = random_i8(8, 8, 1);
+        let wb = random_i8(8, 8, 2);
+        let wc = random_i8(8, 8, 3);
+        for w in [&wa, &wb, &wc] {
+            let (job, _rx) = job_for(&x, w);
+            dev.execute(job);
+        }
+        assert_eq!(
+            dev.cached_tile_ids(),
+            vec![wc.content_hash(), wb.content_hash()],
+            "LRU keeps the two most recent tiles, most recent first"
+        );
+        assert_eq!(metrics.snapshot().cache_misses, 3);
+
+        // B hits (and moves to front); A was evicted, so it misses.
+        let (job, _rx) = job_for(&x, &wb);
+        dev.execute(job);
+        assert_eq!(metrics.snapshot().cache_hits, 1);
+        let (job, _rx) = job_for(&x, &wa);
+        dev.execute(job);
+        let m = metrics.snapshot();
+        assert_eq!(m.cache_misses, 4, "evicted tile must re-prepare");
+        assert_eq!(dev.cached_tile_ids(), vec![wa.content_hash(), wb.content_hash()]);
+    }
+
+    #[test]
     fn forged_tile_id_collision_still_exact() {
         // Two different tiles carrying the same id: the content check
         // must force a reload (a hash collision can never corrupt
         // results).
         let metrics = Arc::new(Metrics::default());
-        let mut dev = Device::new(
-            DeviceConfig { arch: Arch::Dip, tile: 8, mac_stages: 2 },
-            metrics.clone(),
-        );
+        let mut dev = Device::new(dip8(), 0, metrics.clone());
         let x = random_i8(8, 8, 1);
         for seed in [7u64, 8] {
             let w = random_i8(8, 8, seed);
@@ -260,10 +390,27 @@ mod tests {
     }
 
     #[test]
+    fn tenant_and_wait_accounting_per_job() {
+        let metrics = Arc::new(Metrics::default());
+        let mut dev = Device::new(dip8(), 3, metrics.clone());
+        let x = random_i8(8, 8, 1);
+        let w = random_i8(8, 8, 2);
+        let (mut job, _rx) = job_for(&x, &w);
+        job.tenant = 9;
+        dev.execute(job);
+        let ts = metrics.tenants();
+        assert_eq!(ts.len(), 1);
+        assert_eq!(ts[0].tenant, 9);
+        assert_eq!(ts[0].jobs_served, 1);
+        assert_eq!(metrics.device_jobs(), vec![0, 0, 0, 1]);
+    }
+
+    #[test]
     fn ws_device_gives_same_numerics() {
         let metrics = Arc::new(Metrics::default());
-        let mut dip = Device::new(DeviceConfig { arch: Arch::Dip, tile: 8, mac_stages: 2 }, metrics.clone());
-        let mut ws = Device::new(DeviceConfig { arch: Arch::Ws, tile: 8, mac_stages: 2 }, metrics);
+        let ws_cfg = DeviceConfig { arch: Arch::Ws, tile: 8, mac_stages: 2, ..Default::default() };
+        let mut dip = Device::new(dip8(), 0, metrics.clone());
+        let mut ws = Device::new(ws_cfg, 1, metrics);
         let x = random_i8(16, 8, 3);
         let w = random_i8(8, 8, 4);
         let run = |dev: &mut Device| {

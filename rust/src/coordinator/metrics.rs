@@ -1,7 +1,23 @@
-//! Lock-free coordinator metrics (atomics; snapshot on demand).
+//! Coordinator metrics: lock-free global counters (atomics; snapshot on
+//! demand), plus small mutex-guarded maps for the per-tenant and
+//! per-device breakdowns (touched once per job, far off the simulated
+//! hot path).
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 use std::time::Duration;
+
+use super::queue::TenantId;
+
+/// Per-tenant service accounting (fairness observability: who got the
+/// devices, and how long their jobs queued).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+struct TenantCounters {
+    requests_submitted: u64,
+    jobs_served: u64,
+    wait_ns: u64,
+}
 
 /// Shared counters updated by the router and every worker.
 #[derive(Debug, Default)]
@@ -12,7 +28,10 @@ pub struct Metrics {
     pub jobs_executed: AtomicU64,
     /// Input rows streamed through arrays.
     pub rows_streamed: AtomicU64,
-    /// Simulated array cycles consumed.
+    /// Simulated array cycles consumed — includes the weight-load
+    /// cycles of every install actually performed (skipped loads charge
+    /// nothing, which is exactly what `weight_load_cycles_saved`
+    /// credits against).
     pub sim_cycles: AtomicU64,
     /// Simulated MAC operations.
     pub mac_ops: AtomicU64,
@@ -38,9 +57,14 @@ pub struct Metrics {
     /// Jobs a device stole from another device's queue (affinity broken
     /// to avoid starvation).
     pub steals: AtomicU64,
+    /// Per-tenant service breakdown (DRR fairness observability).
+    tenants: Mutex<HashMap<TenantId, TenantCounters>>,
+    /// Jobs executed per worker device (placement skew observability;
+    /// index = device, grown on demand).
+    device_jobs: Mutex<Vec<u64>>,
 }
 
-/// Point-in-time copy of the counters.
+/// Point-in-time copy of the global counters.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct MetricsSnapshot {
     pub requests_submitted: u64,
@@ -57,6 +81,31 @@ pub struct MetricsSnapshot {
     pub cache_hits: u64,
     pub cache_misses: u64,
     pub steals: u64,
+}
+
+/// Point-in-time copy of one tenant's counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TenantSnapshot {
+    pub tenant: TenantId,
+    /// Sub-requests this tenant submitted.
+    pub requests_submitted: u64,
+    /// Weight-stationary jobs executed on this tenant's behalf.
+    pub jobs_served: u64,
+    /// Total wait from submission to execute start across served jobs
+    /// (includes any time the submit spent blocked on backpressure —
+    /// the full latency the tenant experienced before its job ran).
+    pub wait_ns: u64,
+}
+
+impl TenantSnapshot {
+    /// Mean queue wait per served job.
+    pub fn mean_wait(&self) -> Duration {
+        if self.jobs_served == 0 {
+            Duration::ZERO
+        } else {
+            Duration::from_nanos(self.wait_ns / self.jobs_served)
+        }
+    }
 }
 
 impl Metrics {
@@ -81,6 +130,50 @@ impl Metrics {
 
     pub fn add_busy(&self, d: Duration) {
         self.busy_ns.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    /// Record one sub-request submitted by `tenant`.
+    pub fn tenant_submitted(&self, tenant: TenantId) {
+        self.tenants.lock().unwrap().entry(tenant).or_default().requests_submitted += 1;
+    }
+
+    /// Record one job served for `tenant` after `wait` in the queue.
+    pub fn tenant_served(&self, tenant: TenantId, wait: Duration) {
+        let mut map = self.tenants.lock().unwrap();
+        let c = map.entry(tenant).or_default();
+        c.jobs_served += 1;
+        c.wait_ns += wait.as_nanos() as u64;
+    }
+
+    /// Per-tenant counters, sorted by tenant id.
+    pub fn tenants(&self) -> Vec<TenantSnapshot> {
+        let map = self.tenants.lock().unwrap();
+        let mut v: Vec<TenantSnapshot> = map
+            .iter()
+            .map(|(&tenant, c)| TenantSnapshot {
+                tenant,
+                requests_submitted: c.requests_submitted,
+                jobs_served: c.jobs_served,
+                wait_ns: c.wait_ns,
+            })
+            .collect();
+        v.sort_by_key(|t| t.tenant);
+        v
+    }
+
+    /// Record one job executed by worker device `idx`.
+    pub fn device_job(&self, idx: usize) {
+        let mut v = self.device_jobs.lock().unwrap();
+        if v.len() <= idx {
+            v.resize(idx + 1, 0);
+        }
+        v[idx] += 1;
+    }
+
+    /// Jobs executed per device (placement/stealing skew; indexes past
+    /// the last active device are absent).
+    pub fn device_jobs(&self) -> Vec<u64> {
+        self.device_jobs.lock().unwrap().clone()
     }
 }
 
@@ -132,5 +225,32 @@ mod tests {
         assert_eq!(s, MetricsSnapshot::default());
         assert_eq!(s.macs_per_cycle(), 0.0);
         assert_eq!(s.weight_reuse_rate(), 0.0);
+    }
+
+    #[test]
+    fn tenant_counters_accumulate_and_sort() {
+        let m = Metrics::default();
+        m.tenant_submitted(7);
+        m.tenant_served(7, Duration::from_nanos(100));
+        m.tenant_served(7, Duration::from_nanos(300));
+        m.tenant_served(3, Duration::from_nanos(50));
+        let ts = m.tenants();
+        assert_eq!(ts.len(), 2);
+        assert_eq!(ts[0].tenant, 3);
+        assert_eq!(ts[0].jobs_served, 1);
+        assert_eq!(ts[1].tenant, 7);
+        assert_eq!(ts[1].requests_submitted, 1);
+        assert_eq!(ts[1].jobs_served, 2);
+        assert_eq!(ts[1].wait_ns, 400);
+        assert_eq!(ts[1].mean_wait(), Duration::from_nanos(200));
+    }
+
+    #[test]
+    fn device_jobs_grow_on_demand() {
+        let m = Metrics::default();
+        m.device_job(2);
+        m.device_job(0);
+        m.device_job(2);
+        assert_eq!(m.device_jobs(), vec![1, 0, 2]);
     }
 }

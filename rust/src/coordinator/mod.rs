@@ -3,28 +3,42 @@
 //!
 //! Shape: a request router (`router`) decomposes each request into
 //! weight-stationary jobs per the paper's §IV.C tiling and routes each
-//! job to the device its weight tile hashes to, over per-device bounded
-//! queues (`queue`; backpressure, never drops, work stealing for
-//! stragglers). Worker devices (`device`) skip the stationary-weight
-//! reload when a job's tile is already resident and keep a small LRU of
-//! prepared (permutated) tiles; psums accumulate per request (`state`);
-//! counters (`metrics`) expose the reuse: `weight_loads_skipped`,
-//! `cache_hits`, `steals`, `weight_load_cycles_saved`.
+//! job to the device the shared placement map (`placement`) assigns its
+//! weight tile: unseen tiles are placed by **heat-aware
+//! power-of-two-choices** (colder of two candidate devices, decayed
+//! per-tile heat, bounded rebalancing), placed tiles keep **strict
+//! affinity**. Jobs travel over per-device bounded queues (`queue`;
+//! backpressure, never drops) segregated into **per-tenant lanes
+//! drained by deficit round-robin**, so one hot tenant cannot
+//! monopolize a device; tile preference reorders within a lane and
+//! work stealing absorbs stragglers. Worker devices (`device`) skip
+//! the stationary-weight reload when a job's tile is already resident
+//! — charging the load cycles they do perform and crediting the ones
+//! they skip — and keep a configurable LRU of prepared (permutated)
+//! tiles; psums accumulate per request (`state`) under strict shape
+//! assertions; counters (`metrics`) expose the reuse and the fairness:
+//! `weight_loads_skipped`, `cache_hits`, `steals`,
+//! `weight_load_cycles_saved`, per-tenant served/wait counters, and
+//! per-device job counts, with placement stats (placements,
+//! rebalances, heat) in [`PlacementSnapshot`].
 //!
 //! This makes weight-stationary reuse a *serving-level* property — the
 //! paper's single-array dataflow claim, lifted to the device pool:
 //! repeated layers and batches hit the device that already holds their
-//! tile stationary, and batched submission loads each tile at most once
-//! per batch.
+//! tile stationary, batched submission loads each tile at most once per
+//! batch, and multi-layer models spread across the pool by measured
+//! load instead of hash accident.
 
 pub mod device;
 pub mod metrics;
+pub mod placement;
 pub mod queue;
 pub mod router;
 pub mod state;
 
 pub use device::{Device, DeviceConfig, Job};
-pub use metrics::{Metrics, MetricsSnapshot};
-pub use queue::{Pop, ShardedQueue};
+pub use metrics::{Metrics, MetricsSnapshot, TenantSnapshot};
+pub use placement::{PlacementMap, PlacementPolicy, PlacementSnapshot};
+pub use queue::{Pop, ShardedQueue, TenantId, DEFAULT_TENANT, MAX_FRONT_SKIPS};
 pub use router::{Coordinator, CoordinatorConfig, RequestHandle};
 pub use state::{MatmulResponse, ReqState, SubRequest};

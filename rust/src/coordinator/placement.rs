@@ -1,0 +1,417 @@
+//! Heat-aware tile→device placement — the router's answer to "which
+//! device should own this stationary weight tile?".
+//!
+//! PR 1 routed by `tile_id % devices`: correct, but multi-layer models
+//! clump hot tiles onto a few devices by hash accident. This module
+//! replaces the modulus with a shared [`PlacementMap`]:
+//!
+//! * **Strict affinity for placed tiles** — once a tile has a home
+//!   device, every later job for it routes there (the resident-tile
+//!   skip and the prepared-weight cache both depend on this), until an
+//!   explicit rebalance moves it.
+//! * **Power-of-two-choices for unseen tiles** — two candidate devices
+//!   are derived from the tile id; the tile is placed on the one with
+//!   less accumulated *heat*, so repeated layers spread by load instead
+//!   of by hash accident.
+//! * **Tile heat, decayed** — every routed job adds its streamed work
+//!   (M1-tile count) to its tile's heat and its device's aggregate, so
+//!   a long-strip job heats its device proportionally more than a
+//!   single-tile pass; all heats halve every [`DECAY_INTERVAL`] routed
+//!   jobs, so placement reacts to the recent traffic mix, not
+//!   all-time totals.
+//! * **Bounded rebalancing** — when the hottest device carries more
+//!   than [`REBALANCE_RATIO`]× the coldest's heat (plus slack), the
+//!   hottest *movable* tile is re-homed to the coldest device. A tile
+//!   is movable only if the hot device keeps at least one tile and the
+//!   move does not invert the imbalance, so the dominant tile of a
+//!   skewed workload stays put (its residency is the reuse win).
+//!
+//! The map is routing state, not correctness state: any device can
+//! execute any job (it just pays a weight reload), which is why work
+//! stealing and mid-flight rebalances never affect numerics.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// How the router maps an *unseen* weight tile to a device. Already
+/// placed tiles always keep their device under either policy that
+/// tracks state (and `HashMod` is pure, so it is trivially sticky).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PlacementPolicy {
+    /// The PR 1 baseline: `tile_id % devices`. Kept for A/B comparison
+    /// in the coordinator bench and for strict-hash experiments.
+    HashMod,
+    /// Power-of-two-choices onto the colder candidate device, with
+    /// decayed tile heat and bounded rebalancing.
+    #[default]
+    HeatAware,
+}
+
+/// All tile/device heats halve once this many jobs have been routed
+/// since the last decay (recency window of the heat signal).
+pub const DECAY_INTERVAL: u64 = 256;
+
+/// Rebalance triggers when `hottest > RATIO * coldest + SLACK`.
+const REBALANCE_RATIO: u64 = 2;
+const REBALANCE_SLACK: u64 = 8;
+
+/// Imbalance is re-checked on every placement, and every this many
+/// routed jobs (placements are rare at steady state; touches are not).
+const REBALANCE_CHECK_EVERY: u64 = 64;
+
+struct TileEntry {
+    device: usize,
+    heat: u64,
+}
+
+struct PlacementInner {
+    tiles: HashMap<u64, TileEntry>,
+    /// Per-device aggregate heat (sum of the heats of its tiles).
+    device_heat: Vec<u64>,
+    /// Jobs routed since construction (drives decay + rebalance checks).
+    touches: u64,
+}
+
+/// Shared tile→device placement map with per-device heat tracking.
+/// One instance is shared by all submitters of a [`Coordinator`]
+/// (placement decisions are serialized under one mutex — routing is
+/// cheap next to the simulated work it dispatches).
+///
+/// [`Coordinator`]: super::Coordinator
+pub struct PlacementMap {
+    policy: PlacementPolicy,
+    /// Immutable after construction; kept outside the mutex so the
+    /// stateless `HashMod` path never takes the lock.
+    devices: usize,
+    inner: Mutex<PlacementInner>,
+    placements: AtomicU64,
+    rebalances: AtomicU64,
+}
+
+/// Point-in-time view of the placement state (the "placement stats"
+/// companion of [`MetricsSnapshot`](super::MetricsSnapshot)).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PlacementSnapshot {
+    /// Unseen tiles assigned a home device so far.
+    pub placements: u64,
+    /// Tiles re-homed by imbalance-triggered rebalancing.
+    pub rebalances: u64,
+    /// Distinct tiles currently placed.
+    pub tiles: usize,
+    /// Decayed heat per device (recent streamed work routed to its
+    /// tiles, in M1-tile units).
+    pub device_heat: Vec<u64>,
+    /// Distinct placed tiles per device.
+    pub device_tiles: Vec<usize>,
+}
+
+impl PlacementSnapshot {
+    /// Max/min spread of the per-device heat (0 when balanced).
+    pub fn heat_spread(&self) -> u64 {
+        let max = self.device_heat.iter().copied().max().unwrap_or(0);
+        let min = self.device_heat.iter().copied().min().unwrap_or(0);
+        max - min
+    }
+}
+
+/// SplitMix64 finalizer: the second, independent candidate derivation
+/// for power-of-two-choices (the first is the plain modulus).
+fn splitmix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl PlacementMap {
+    pub fn new(devices: usize, policy: PlacementPolicy) -> Self {
+        assert!(devices >= 1, "placement needs at least one device");
+        Self {
+            policy,
+            devices,
+            inner: Mutex::new(PlacementInner {
+                tiles: HashMap::new(),
+                device_heat: vec![0; devices],
+                touches: 0,
+            }),
+            placements: AtomicU64::new(0),
+            rebalances: AtomicU64::new(0),
+        }
+    }
+
+    pub fn policy(&self) -> PlacementPolicy {
+        self.policy
+    }
+
+    pub fn devices(&self) -> usize {
+        self.devices
+    }
+
+    /// Route one job for `tile_id`, carrying `work` units of streamed
+    /// load (the router passes the job's M1-tile count, i.e. padded
+    /// rows / tile, so a 100x-longer strip heats its device 100x more
+    /// than a single-tile pass — placement balances actual work, not
+    /// job count). Returns the tile's home device, assigning one first
+    /// if the tile is unseen. Under `HashMod` this is the stateless
+    /// PR 1 modulus (lock-free, no heat is tracked).
+    pub fn place(&self, tile_id: u64, work: u64) -> usize {
+        let devices = self.devices as u64;
+        if self.policy == PlacementPolicy::HashMod {
+            return (tile_id % devices) as usize;
+        }
+        let work = work.max(1);
+        let mut inner = self.inner.lock().unwrap();
+
+        inner.touches += 1;
+        if inner.touches % DECAY_INTERVAL == 0 {
+            Self::decay(&mut inner);
+        }
+
+        // Strict affinity: a placed tile keeps its home (the map-borrow
+        // ends before the insert path below needs the map again).
+        let existing = inner.tiles.get_mut(&tile_id).map(|e| {
+            e.heat += work;
+            e.device
+        });
+        if let Some(d) = existing {
+            inner.device_heat[d] += work;
+        } else {
+            // Power-of-two-choices: modulus candidate vs an independent
+            // hash candidate (forced distinct when devices > 1), colder
+            // aggregate heat wins, first candidate wins ties.
+            let c1 = (tile_id % devices) as usize;
+            let mut c2 = (splitmix64(tile_id) % devices) as usize;
+            if c2 == c1 {
+                c2 = (c1 + 1) % devices as usize;
+            }
+            let d = if inner.device_heat[c2] < inner.device_heat[c1] { c2 } else { c1 };
+            inner.tiles.insert(tile_id, TileEntry { device: d, heat: work });
+            inner.device_heat[d] += work;
+            self.placements.fetch_add(1, Ordering::Relaxed);
+            self.rebalance_locked(&mut inner);
+        }
+        if inner.touches % REBALANCE_CHECK_EVERY == 0 {
+            self.rebalance_locked(&mut inner);
+        }
+        // Either rebalance trigger may have re-homed this very tile;
+        // route to the *current* home so affinity is never stale (the
+        // entry always exists: rebalancing moves tiles, never drops
+        // them).
+        inner.tiles[&tile_id].device
+    }
+
+    /// Current home device of a tile, if placed (`HashMod` places
+    /// implicitly, so this reports only heat-aware state).
+    pub fn device_of(&self, tile_id: u64) -> Option<usize> {
+        self.inner.lock().unwrap().tiles.get(&tile_id).map(|e| e.device)
+    }
+
+    /// Run one imbalance check, moving at most one tile. Returns true
+    /// if a tile was re-homed. Called automatically from [`place`]
+    /// (every placement, and every [`REBALANCE_CHECK_EVERY`] jobs);
+    /// public so schedulers and tests can force a check.
+    ///
+    /// [`place`]: Self::place
+    pub fn rebalance(&self) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        self.rebalance_locked(&mut inner)
+    }
+
+    pub fn snapshot(&self) -> PlacementSnapshot {
+        let inner = self.inner.lock().unwrap();
+        let mut device_tiles = vec![0usize; inner.device_heat.len()];
+        for e in inner.tiles.values() {
+            device_tiles[e.device] += 1;
+        }
+        PlacementSnapshot {
+            placements: self.placements.load(Ordering::Relaxed),
+            rebalances: self.rebalances.load(Ordering::Relaxed),
+            tiles: inner.tiles.len(),
+            device_heat: inner.device_heat.clone(),
+            device_tiles,
+        }
+    }
+
+    /// Halve every tile heat and rebuild the device aggregates exactly
+    /// (recomputed from the tiles so integer halving never drifts the
+    /// sums out of agreement).
+    fn decay(inner: &mut PlacementInner) {
+        inner.device_heat.fill(0);
+        for e in inner.tiles.values_mut() {
+            e.heat /= 2;
+            inner.device_heat[e.device] += e.heat;
+        }
+    }
+
+    fn rebalance_locked(&self, inner: &mut PlacementInner) -> bool {
+        let (mut hot, mut cold) = (0usize, 0usize);
+        for (d, &h) in inner.device_heat.iter().enumerate() {
+            if h > inner.device_heat[hot] {
+                hot = d;
+            }
+            if h < inner.device_heat[cold] {
+                cold = d;
+            }
+        }
+        let (hot_heat, cold_heat) = (inner.device_heat[hot], inner.device_heat[cold]);
+        if hot == cold || hot_heat <= REBALANCE_RATIO * cold_heat + REBALANCE_SLACK {
+            return false;
+        }
+        // Move the hottest tile that (a) leaves at least one tile on the
+        // hot device and (b) shifts no more than half the gap, so the
+        // move narrows the imbalance instead of ping-ponging it. A
+        // single dominant tile therefore never moves: its residency is
+        // the whole reuse win, and moving it would not balance anything.
+        let gap = hot_heat - cold_heat;
+        let hot_tiles = inner.tiles.values().filter(|e| e.device == hot).count();
+        if hot_tiles < 2 {
+            return false;
+        }
+        let candidate = inner
+            .tiles
+            .iter()
+            .filter(|(_, e)| e.device == hot && e.heat <= gap / 2)
+            .max_by_key(|(id, e)| (e.heat, **id)) // id tiebreak: deterministic
+            .map(|(id, _)| *id);
+        let Some(id) = candidate else { return false };
+        let e = inner.tiles.get_mut(&id).unwrap();
+        e.device = cold;
+        let heat = e.heat;
+        inner.device_heat[hot] -= heat;
+        inner.device_heat[cold] += heat;
+        self.rebalances.fetch_add(1, Ordering::Relaxed);
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hash_mod_is_the_pr1_modulus() {
+        let p = PlacementMap::new(4, PlacementPolicy::HashMod);
+        for id in [0u64, 1, 5, 7, 42, u64::MAX] {
+            assert_eq!(p.place(id, 1), (id % 4) as usize);
+        }
+        // Stateless: nothing placed, nothing counted.
+        let s = p.snapshot();
+        assert_eq!(s.placements, 0);
+        assert_eq!(s.tiles, 0);
+        assert_eq!(s.device_heat, vec![0; 4]);
+    }
+
+    #[test]
+    fn placed_tiles_keep_strict_affinity() {
+        let p = PlacementMap::new(4, PlacementPolicy::HeatAware);
+        let first = p.place(12345, 1);
+        for _ in 0..100 {
+            assert_eq!(p.place(12345, 1), first);
+        }
+        let s = p.snapshot();
+        assert_eq!(s.placements, 1);
+        assert_eq!(s.tiles, 1);
+        assert_eq!(s.device_heat.iter().sum::<u64>(), 101);
+    }
+
+    #[test]
+    fn round_robin_ids_spread_perfectly() {
+        // Sequential ids 0..16 on 4 devices: the modulus candidate walks
+        // the devices and heat ties break toward it, so power-of-two-
+        // choices reproduces the perfect 4/4/4/4 spread.
+        let p = PlacementMap::new(4, PlacementPolicy::HeatAware);
+        for id in 0u64..16 {
+            p.place(id, 1);
+        }
+        let s = p.snapshot();
+        assert_eq!(s.device_tiles, vec![4, 4, 4, 4]);
+        assert_eq!(s.placements, 16);
+    }
+
+    #[test]
+    fn adversarial_ids_still_spread_by_heat() {
+        // Every id congruent mod 4: the PR 1 modulus would stack all 16
+        // tiles on device 1; the heat-aware map must use the second
+        // candidate to spread the load.
+        let p = PlacementMap::new(4, PlacementPolicy::HeatAware);
+        for k in 0u64..16 {
+            p.place(4 * k + 1, 1);
+        }
+        let s = p.snapshot();
+        let max = *s.device_tiles.iter().max().unwrap();
+        assert!(max <= 10, "device_tiles {:?}", s.device_tiles);
+        assert!(s.device_tiles.iter().filter(|&&t| t > 0).count() >= 2);
+    }
+
+    #[test]
+    fn heat_decays_toward_recent_traffic() {
+        let p = PlacementMap::new(2, PlacementPolicy::HeatAware);
+        p.place(0, 1); // -> some device, heat 1
+        for _ in 0..(4 * DECAY_INTERVAL) {
+            p.place(0, 1);
+        }
+        let s = p.snapshot();
+        let total: u64 = s.device_heat.iter().sum();
+        // Without decay this would be 4*DECAY_INTERVAL + 1; with halving
+        // every DECAY_INTERVAL jobs it stays bounded near the window.
+        assert!(total <= 2 * DECAY_INTERVAL, "heat {total} did not decay");
+        assert!(total > 0);
+    }
+
+    #[test]
+    fn rebalance_moves_a_cool_tile_off_the_hot_device() {
+        let p = PlacementMap::new(2, PlacementPolicy::HeatAware);
+        // Tile A -> device 0 (modulus candidate, all heats zero).
+        assert_eq!(p.place(0, 1), 0);
+        // Tile B -> device 1 (colder).
+        let b = p.place(1, 1);
+        assert_eq!(b, 1);
+        // Tile C: heats tied at 1 -> modulus candidate, device 0.
+        assert_eq!(p.place(2, 1), 0);
+        // Heat A far past the trigger; C is the movable cool tile.
+        for _ in 0..50 {
+            p.place(0, 1);
+        }
+        assert!(p.rebalance(), "imbalance must trigger a move");
+        let s = p.snapshot();
+        assert_eq!(s.rebalances, 1);
+        assert_eq!(p.device_of(2), Some(1), "cool tile re-homed");
+        assert_eq!(p.device_of(0), Some(0), "dominant tile stays put");
+        // Re-homed tile keeps strict affinity to its new device.
+        assert_eq!(p.place(2, 1), 1);
+    }
+
+    #[test]
+    fn dominant_single_tile_never_moves() {
+        let p = PlacementMap::new(2, PlacementPolicy::HeatAware);
+        assert_eq!(p.place(0, 1), 0);
+        for _ in 0..100 {
+            p.place(0, 1);
+        }
+        assert!(!p.rebalance(), "sole hot tile is not movable");
+        assert_eq!(p.snapshot().rebalances, 0);
+    }
+
+    #[test]
+    fn heat_weighs_streamed_work_not_job_count() {
+        // One heavyweight job (100 M1 tiles) on tile A vs many light
+        // jobs elsewhere: the next unseen tile must avoid A's device
+        // even though A's device served fewer *jobs*.
+        let p = PlacementMap::new(2, PlacementPolicy::HeatAware);
+        assert_eq!(p.place(0, 100), 0); // heavy tile -> device 0
+        // Unseen tile with candidates {0, 1}: device 1 is far colder.
+        assert_eq!(p.place(2, 1), 1);
+        let s = p.snapshot();
+        assert_eq!(s.device_heat, vec![100, 1]);
+    }
+
+    #[test]
+    fn single_device_degenerates_cleanly() {
+        let p = PlacementMap::new(1, PlacementPolicy::HeatAware);
+        for id in 0u64..10 {
+            assert_eq!(p.place(id, 1), 0);
+        }
+        assert!(!p.rebalance());
+    }
+}

@@ -1,33 +1,55 @@
-//! Per-device bounded work queues with weight-tile-aware dispatch and
-//! work stealing — the scheduling substrate of the L3 coordinator.
+//! Per-device bounded work queues with tenant-fair, weight-tile-aware
+//! dispatch and work stealing — the scheduling substrate of the L3
+//! coordinator.
 //!
-//! Replaces the seed's single `sync_channel` + `Mutex<Receiver>`: each
-//! device owns one bounded FIFO shard, the router pushes a job to the
-//! shard its stationary weight tile hashes to (affinity), and workers
-//! pull with three rules:
+//! Each device owns one bounded shard; the router pushes a job to the
+//! shard the placement map assigns its stationary weight tile to
+//! (affinity). Inside a shard, jobs are segregated into **per-tenant
+//! lanes** drained by **deficit round-robin** (quantum
+//! [`DRR_QUANTUM`] jobs per lane per round), so one hot tenant's
+//! backlog cannot monopolize a device while another tenant waits.
+//! Workers pull with three rules:
 //!
-//! 1. **Tile preference** — a worker first takes a queued job whose
-//!    tile is already stationary on its array (skipping the reload
-//!    entirely). A bounded pass counter forces the front job through
-//!    after [`MAX_FRONT_SKIPS`] deferrals, so preference can reorder
-//!    but never starve.
-//! 2. **FIFO otherwise** — oldest job first.
+//! 1. **Tenant fairness first** — DRR picks the lane; a lane with
+//!    queued jobs is served at most its deficit before the ring moves
+//!    on, so service alternates between backlogged tenants.
+//! 2. **Tile preference within the lane** — from the chosen lane the
+//!    worker first takes a job whose tile is already stationary on its
+//!    array (skipping the reload entirely). A per-lane pass counter
+//!    forces the lane's front job through after [`MAX_FRONT_SKIPS`]
+//!    deferrals, so preference can reorder but never starve; FIFO
+//!    otherwise.
 //! 3. **Stealing** — an idle worker takes from the *back* of another
-//!    shard, and only when that shard has at least two queued jobs:
-//!    the last job is left for its affinity owner, so stealing absorbs
-//!    backlog without thrashing a lightly-loaded device's stationary
-//!    tile.
+//!    shard's longest lane, and only when that shard has at least two
+//!    queued jobs: the last job is left for its affinity owner, so
+//!    stealing absorbs backlog without thrashing a lightly-loaded
+//!    device's stationary tile.
 //!
-//! Pushes block while the target shard is full (backpressure, never
-//! drops), exactly like the seed's bounded channel.
+//! Pushes block while the target shard is full (capacity counts jobs
+//! across all of the shard's lanes — backpressure, never drops),
+//! exactly like the seed's bounded channel.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Condvar, Mutex};
 
-/// Forced-FIFO bound: a shard's front job is popped at the latest after
+/// Tenant identity attached to every submitted request; jobs from
+/// different tenants are queued in separate DRR lanes per device.
+pub type TenantId = u64;
+
+/// The tenant assigned to requests submitted through the tenant-less
+/// `submit` / `submit_batched` API.
+pub const DEFAULT_TENANT: TenantId = 0;
+
+/// Forced-FIFO bound: a lane's front job is popped at the latest after
 /// this many preferred (out-of-order) pops passed over it.
-const MAX_FRONT_SKIPS: u32 = 32;
+pub const MAX_FRONT_SKIPS: u32 = 32;
+
+/// DRR quantum, in jobs: how many jobs one tenant's lane may be served
+/// before the ring advances past it. Jobs are near-uniform (one tile
+/// pass), so a quantum of 1 gives per-job round-robin between
+/// backlogged tenants — the tightest fairness bound.
+pub const DRR_QUANTUM: u32 = 1;
 
 /// How a job left the queue (workers count steals).
 pub enum Pop<T> {
@@ -45,10 +67,34 @@ impl<T> Pop<T> {
     }
 }
 
-struct ShardInner<T> {
+/// One tenant's FIFO within a shard. Lanes are created on first push
+/// and persist (a tenant set is small and stable; keeping empty lanes
+/// preserves the DRR ring order and the per-lane skip counters).
+struct Lane<T> {
+    tenant: TenantId,
     queue: VecDeque<T>,
+    /// DRR deficit: jobs this lane may still be served this round.
+    deficit: u32,
     /// Times the current front job was passed over by tile preference.
     front_skips: u32,
+}
+
+struct ShardInner<T> {
+    lanes: Vec<Lane<T>>,
+    /// DRR ring position: index of the lane currently being served.
+    cur: usize,
+    /// Total queued jobs across lanes (capacity accounting).
+    len: usize,
+}
+
+impl<T> ShardInner<T> {
+    fn lane_mut(&mut self, tenant: TenantId) -> &mut Lane<T> {
+        if let Some(pos) = self.lanes.iter().position(|l| l.tenant == tenant) {
+            return &mut self.lanes[pos];
+        }
+        self.lanes.push(Lane { tenant, queue: VecDeque::new(), deficit: 0, front_skips: 0 });
+        self.lanes.last_mut().unwrap()
+    }
 }
 
 struct Shard<T> {
@@ -56,9 +102,9 @@ struct Shard<T> {
     not_full: Condvar,
 }
 
-/// Bounded multi-queue with affinity shards. `close()` ends the stream:
-/// pops drain whatever remains, then return `None`. Pushing after
-/// `close()` is a caller bug (asserted).
+/// Bounded multi-queue with affinity shards and per-tenant DRR lanes.
+/// `close()` ends the stream: pops drain whatever remains, then return
+/// `None`. Pushing after `close()` is a caller bug (asserted).
 pub struct ShardedQueue<T> {
     shards: Vec<Shard<T>>,
     capacity: usize,
@@ -77,7 +123,7 @@ impl<T> ShardedQueue<T> {
         Self {
             shards: (0..shards)
                 .map(|_| Shard {
-                    inner: Mutex::new(ShardInner { queue: VecDeque::new(), front_skips: 0 }),
+                    inner: Mutex::new(ShardInner { lanes: Vec::new(), cur: 0, len: 0 }),
                     not_full: Condvar::new(),
                 })
                 .collect(),
@@ -93,29 +139,31 @@ impl<T> ShardedQueue<T> {
         self.shards.len()
     }
 
-    /// Push onto shard `idx`, blocking while it is full. Returns true
-    /// if it had to wait (a backpressure event).
+    /// Push onto shard `idx` in `tenant`'s lane, blocking while the
+    /// shard is full. Returns true if it had to wait (a backpressure
+    /// event).
     ///
     /// Panics if the queue was closed: `close()` is only correct after
     /// all pushes have returned, and a push racing it must fail loudly
     /// — a quiet success could land an item after the workers' final
     /// drain scan and strand it (and its waiter) forever.
-    pub fn push(&self, idx: usize, item: T) -> bool {
+    pub fn push(&self, idx: usize, tenant: TenantId, item: T) -> bool {
         let shard = &self.shards[idx];
         let mut inner = shard.inner.lock().unwrap();
         // Checked under the shard lock: a close() that any drain scan
         // has already observed happened before this lock acquisition,
         // so the assert fires before the item can be stranded.
         assert!(!self.closed.load(Ordering::Acquire), "push after close");
-        let waited = inner.queue.len() >= self.capacity;
-        while inner.queue.len() >= self.capacity {
+        let waited = inner.len >= self.capacity;
+        while inner.len >= self.capacity {
             inner = shard.not_full.wait(inner).unwrap();
             assert!(
                 !self.closed.load(Ordering::Acquire),
                 "queue closed while a push was blocked on backpressure"
             );
         }
-        inner.queue.push_back(item);
+        inner.lane_mut(tenant).queue.push_back(item);
+        inner.len += 1;
         drop(inner);
         self.bump();
         waited
@@ -123,7 +171,7 @@ impl<T> ShardedQueue<T> {
 
     /// Pop for worker `me`. `prefer` marks jobs the worker can run
     /// without a weight reload; such a job is taken out of order from
-    /// the worker's own shard (bounded by [`MAX_FRONT_SKIPS`]).
+    /// the lane DRR selects (bounded by [`MAX_FRONT_SKIPS`] per lane).
     /// Blocks until work arrives; returns `None` only after `close()`
     /// with nothing left this worker may take.
     pub fn pop(&self, me: usize, prefer: impl Fn(&T) -> bool) -> Option<Pop<T>> {
@@ -188,31 +236,76 @@ impl<T> ShardedQueue<T> {
         None
     }
 
+    /// DRR pop: serve the current lane while it has deficit and jobs,
+    /// else advance the ring (resetting the deficit of lanes it leaves
+    /// behind). Within the served lane, tile preference may reorder,
+    /// bounded per lane by [`MAX_FRONT_SKIPS`].
     fn pop_own(&self, me: usize, prefer: &impl Fn(&T) -> bool) -> Option<T> {
         let shard = &self.shards[me];
         let mut inner = shard.inner.lock().unwrap();
-        let pos = if inner.front_skips < MAX_FRONT_SKIPS {
-            inner.queue.iter().position(prefer).unwrap_or(0)
-        } else {
-            0 // anti-starvation: the front job has waited long enough
-        };
-        let item = if pos == 0 { inner.queue.pop_front() } else { inner.queue.remove(pos) };
-        if item.is_some() {
-            inner.front_skips = if pos == 0 { 0 } else { inner.front_skips + 1 };
-            shard.not_full.notify_one();
+        if inner.len == 0 {
+            return None;
         }
-        item
+        let n_lanes = inner.lanes.len();
+        let start = inner.cur.min(n_lanes.saturating_sub(1));
+        for k in 0..n_lanes {
+            let li = (start + k) % n_lanes;
+            if inner.lanes[li].queue.is_empty() {
+                // An empty lane forfeits any leftover deficit (classic
+                // DRR: deficit never accrues while idle).
+                inner.lanes[li].deficit = 0;
+                continue;
+            }
+            inner.cur = li;
+            if inner.lanes[li].deficit == 0 {
+                inner.lanes[li].deficit = DRR_QUANTUM;
+            }
+            let pos = if inner.lanes[li].front_skips < MAX_FRONT_SKIPS {
+                inner.lanes[li].queue.iter().position(prefer).unwrap_or(0)
+            } else {
+                0 // anti-starvation: the front job has waited long enough
+            };
+            let item = if pos == 0 {
+                inner.lanes[li].queue.pop_front()
+            } else {
+                inner.lanes[li].queue.remove(pos)
+            };
+            debug_assert!(item.is_some(), "non-empty lane must yield a job");
+            inner.lanes[li].front_skips =
+                if pos == 0 { 0 } else { inner.lanes[li].front_skips + 1 };
+            inner.lanes[li].deficit -= 1;
+            if inner.lanes[li].deficit == 0 || inner.lanes[li].queue.is_empty() {
+                // Round spent (or lane drained): ring moves on.
+                inner.lanes[li].deficit = 0;
+                inner.cur = (li + 1) % n_lanes;
+            }
+            inner.len -= 1;
+            shard.not_full.notify_one();
+            return item;
+        }
+        unreachable!("len > 0 but no lane had a job");
     }
 
+    /// Steal from the back of the victim's longest lane (the tenant
+    /// with the deepest backlog benefits most), leaving the shard's
+    /// last queued job for its affinity owner.
     fn steal_from(&self, victim: usize) -> Option<T> {
         let shard = &self.shards[victim];
         let mut inner = shard.inner.lock().unwrap();
-        // Leave the last queued job for its affinity owner.
-        if inner.queue.len() < 2 {
+        if inner.len < 2 {
             return None;
         }
-        let item = inner.queue.pop_back();
-        shard.not_full.notify_one();
+        let li = inner
+            .lanes
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, l)| l.queue.len())
+            .map(|(i, _)| i)?;
+        let item = inner.lanes[li].queue.pop_back();
+        if item.is_some() {
+            inner.len -= 1;
+            shard.not_full.notify_one();
+        }
         item
     }
 }
@@ -226,11 +319,13 @@ mod tests {
         false
     }
 
+    const T0: TenantId = 0;
+
     #[test]
     fn drains_in_fifo_order_then_none_after_close() {
         let q = ShardedQueue::new(1, 8, true);
         for v in [1u32, 2, 3] {
-            q.push(0, v);
+            q.push(0, T0, v);
         }
         q.close();
         let mut got = Vec::new();
@@ -245,7 +340,7 @@ mod tests {
     fn preference_reorders_within_shard() {
         let q = ShardedQueue::new(1, 8, false);
         for v in [10u32, 11, 20, 12] {
-            q.push(0, v);
+            q.push(0, T0, v);
         }
         q.close();
         // Prefer the 2x-decade jobs: 20 jumps the queue, rest FIFO.
@@ -259,9 +354,9 @@ mod tests {
     #[test]
     fn front_job_cannot_starve() {
         let q = ShardedQueue::new(1, MAX_FRONT_SKIPS as usize + 8, false);
-        q.push(0, 1u32); // never preferred
+        q.push(0, T0, 1u32); // never preferred
         for _ in 0..MAX_FRONT_SKIPS + 4 {
-            q.push(0, 2u32); // always preferred
+            q.push(0, T0, 2u32); // always preferred
         }
         q.close();
         let mut popped_front_at = None;
@@ -277,11 +372,67 @@ mod tests {
     }
 
     #[test]
+    fn drr_alternates_between_backlogged_tenants() {
+        // Tenant 1 floods 6 jobs before tenant 2's 3 arrive; DRR with
+        // quantum 1 must alternate service while both lanes are
+        // non-empty instead of draining the flood first.
+        let q = ShardedQueue::new(1, 16, false);
+        for v in [10u32, 11, 12, 13, 14, 15] {
+            q.push(0, 1, v);
+        }
+        for v in [20u32, 21, 22] {
+            q.push(0, 2, v);
+        }
+        q.close();
+        let mut got = Vec::new();
+        while let Some(p) = q.pop(0, no_pref) {
+            got.push(p.into_inner());
+        }
+        assert_eq!(got, vec![10, 20, 11, 21, 12, 22, 13, 14, 15]);
+    }
+
+    #[test]
+    fn drr_fair_share_under_many_tenants() {
+        // Three tenants with unequal backlogs: after 3k pops every
+        // still-backlogged tenant has been served exactly k times.
+        let q = ShardedQueue::new(1, 64, false);
+        for i in 0..12u32 {
+            q.push(0, 1, 100 + i);
+        }
+        for i in 0..6u32 {
+            q.push(0, 2, 200 + i);
+        }
+        for i in 0..6u32 {
+            q.push(0, 3, 300 + i);
+        }
+        q.close();
+        let mut served = [0u32; 3];
+        for _ in 0..9 {
+            let v = q.pop(0, no_pref).unwrap().into_inner();
+            served[(v / 100 - 1) as usize] += 1;
+        }
+        assert_eq!(served, [3, 3, 3], "equal service while all backlogged");
+    }
+
+    #[test]
+    fn tile_preference_stays_within_the_drr_lane() {
+        // Tenant 2's lane holds the preferred job, but DRR serves
+        // tenant 1 first: preference must not cross lanes.
+        let q = ShardedQueue::new(1, 8, false);
+        q.push(0, 1, 10u32);
+        q.push(0, 2, 20u32); // preferred, but in the later lane
+        q.close();
+        let first = q.pop(0, |v| *v == 20).unwrap().into_inner();
+        assert_eq!(first, 10, "fairness outranks tile preference");
+        assert_eq!(q.pop(0, |v| *v == 20).unwrap().into_inner(), 20);
+    }
+
+    #[test]
     fn steals_backlog_but_leaves_last_job() {
         let q = ShardedQueue::new(2, 8, true);
-        q.push(0, 1u32);
-        q.push(0, 2);
-        q.push(0, 3);
+        q.push(0, T0, 1u32);
+        q.push(0, T0, 2);
+        q.push(0, T0, 3);
         q.close();
         // Worker 1 steals from the back while shard 0 has a backlog.
         assert!(matches!(q.pop(1, no_pref), Some(Pop::Stolen(3))));
@@ -292,10 +443,24 @@ mod tests {
     }
 
     #[test]
+    fn steals_from_the_longest_lane() {
+        let q = ShardedQueue::new(2, 16, true);
+        q.push(0, 1, 10u32);
+        q.push(0, 2, 20u32);
+        q.push(0, 2, 21);
+        q.push(0, 2, 22);
+        q.close();
+        // Tenant 2 has the deepest backlog: the thief relieves it from
+        // the back.
+        assert!(matches!(q.pop(1, no_pref), Some(Pop::Stolen(22))));
+        assert!(matches!(q.pop(1, no_pref), Some(Pop::Stolen(21))));
+    }
+
+    #[test]
     fn stealing_disabled_never_crosses_shards() {
         let q = ShardedQueue::new(2, 8, false);
-        q.push(0, 1u32);
-        q.push(0, 2);
+        q.push(0, T0, 1u32);
+        q.push(0, T0, 2);
         q.close();
         assert!(q.pop(1, no_pref).is_none());
         assert!(q.pop(0, no_pref).is_some());
@@ -319,7 +484,7 @@ mod tests {
             })
             .collect();
         for v in 0..total {
-            q.push((v % 2) as usize, v);
+            q.push((v % 2) as usize, (v % 3) as TenantId, v);
         }
         q.close();
         let consumed: u32 = consumers.into_iter().map(|c| c.join().unwrap()).sum();
@@ -329,10 +494,10 @@ mod tests {
     #[test]
     fn backpressure_push_blocks_until_pop() {
         let q = Arc::new(ShardedQueue::new(1, 1, false));
-        assert!(!q.push(0, 1u32)); // fits
+        assert!(!q.push(0, T0, 1u32)); // fits
         let producer = {
             let q = Arc::clone(&q);
-            std::thread::spawn(move || q.push(0, 2u32)) // must wait
+            std::thread::spawn(move || q.push(0, T0, 2u32)) // must wait
         };
         // Give the producer a moment to hit the full queue, then drain.
         std::thread::sleep(std::time::Duration::from_millis(20));
@@ -344,10 +509,30 @@ mod tests {
     }
 
     #[test]
+    fn capacity_counts_jobs_across_lanes() {
+        // Two tenants share the shard's capacity: the bound is on total
+        // queued jobs, not per lane.
+        let q = Arc::new(ShardedQueue::new(1, 2, false));
+        assert!(!q.push(0, 1, 1u32));
+        assert!(!q.push(0, 2, 2u32));
+        let producer = {
+            let q = Arc::clone(&q);
+            std::thread::spawn(move || q.push(0, 3, 3u32)) // must wait
+        };
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert!(q.pop(0, no_pref).is_some());
+        assert!(producer.join().unwrap());
+        q.close();
+        assert!(q.pop(0, no_pref).is_some());
+        assert!(q.pop(0, no_pref).is_some());
+        assert!(q.pop(0, no_pref).is_none());
+    }
+
+    #[test]
     #[should_panic(expected = "push after close")]
     fn push_after_close_is_a_bug() {
         let q = ShardedQueue::new(1, 1, false);
         q.close();
-        q.push(0, 1u32);
+        q.push(0, T0, 1u32);
     }
 }

@@ -1,10 +1,14 @@
 //! The request router: decomposes matmul requests into weight-stationary
 //! jobs (one per M2 tile, per the paper's §IV.C schedule) and routes
-//! each job to the device its weight tile hashes to — so repeated
-//! layers and batches land on the device that already holds that tile
-//! stationary — over per-device bounded queues (backpressure) with
-//! work stealing. Psum-accumulated responses are reassembled per
-//! request; all operand matrices are `Arc`-shared across the fan-out.
+//! each job to the device the placement map assigns its weight tile —
+//! heat-aware power-of-two-choices for unseen tiles, strict affinity
+//! afterwards — so repeated layers and batches land on the device that
+//! already holds that tile stationary, and multi-layer models spread by
+//! load instead of by hash accident. Jobs queue in per-device,
+//! per-tenant lanes (deficit round-robin; one hot tenant cannot
+//! monopolize a device) with bounded depth (backpressure) and work
+//! stealing. Psum-accumulated responses are reassembled per request;
+//! all operand matrices are `Arc`-shared across the fan-out.
 //!
 //! Built on std threads + the in-tree [`ShardedQueue`] (tokio and
 //! crossbeam are not in the offline vendored crate set); the workload
@@ -13,13 +17,14 @@
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::matrix::Mat;
 
 use super::device::{Device, DeviceConfig, Job};
-use super::metrics::{Metrics, MetricsSnapshot};
-use super::queue::{Pop, ShardedQueue};
+use super::metrics::{Metrics, MetricsSnapshot, TenantSnapshot};
+use super::placement::{PlacementMap, PlacementPolicy, PlacementSnapshot};
+use super::queue::{Pop, ShardedQueue, TenantId, DEFAULT_TENANT};
 use super::state::{MatmulResponse, ReqState, SubRequest};
 
 /// Coordinator configuration.
@@ -34,6 +39,10 @@ pub struct CoordinatorConfig {
     /// Let idle devices take backlog from other devices' queues. On by
     /// default; disable for strict-affinity experiments.
     pub work_stealing: bool,
+    /// How unseen weight tiles are assigned a home device. Heat-aware
+    /// power-of-two-choices by default; `HashMod` keeps the PR 1
+    /// modulus for A/B comparison.
+    pub placement: PlacementPolicy,
 }
 
 impl Default for CoordinatorConfig {
@@ -43,6 +52,7 @@ impl Default for CoordinatorConfig {
             device: DeviceConfig::default(),
             queue_depth: 64,
             work_stealing: true,
+            placement: PlacementPolicy::default(),
         }
     }
 }
@@ -75,6 +85,7 @@ pub struct Coordinator {
     pool: Arc<ShardedQueue<Job>>,
     workers: Vec<JoinHandle<()>>,
     metrics: Arc<Metrics>,
+    placement: Arc<PlacementMap>,
     cfg: CoordinatorConfig,
     next_id: std::sync::atomic::AtomicU64,
 }
@@ -82,6 +93,13 @@ pub struct Coordinator {
 impl Coordinator {
     pub fn new(cfg: CoordinatorConfig) -> Self {
         use std::sync::atomic::Ordering::Relaxed;
+        // Validate device config on the caller thread: workers are
+        // spawned threads whose startup panics would otherwise be
+        // swallowed, leaving the first submit blocked forever.
+        assert!(
+            cfg.device.weight_cache_tiles >= 1,
+            "prepared-weight cache needs capacity for at least one tile"
+        );
         let devices = cfg.devices.max(1);
         let pool = Arc::new(ShardedQueue::<Job>::new(
             devices,
@@ -89,6 +107,7 @@ impl Coordinator {
             cfg.work_stealing,
         ));
         let metrics = Arc::new(Metrics::default());
+        let placement = Arc::new(PlacementMap::new(devices, cfg.placement));
         let workers = (0..devices)
             .map(|i| {
                 let pool = Arc::clone(&pool);
@@ -97,11 +116,12 @@ impl Coordinator {
                 std::thread::Builder::new()
                     .name(format!("dip-worker-{i}"))
                     .spawn(move || {
-                        let mut dev = Device::new(dcfg, Arc::clone(&metrics));
+                        let mut dev = Device::new(dcfg, i, Arc::clone(&metrics));
                         loop {
                             // Prefer queued jobs whose tile is already
-                            // stationary here (no reload), else FIFO,
-                            // else steal backlog from a busy device.
+                            // stationary here (no reload), else the
+                            // DRR lane's FIFO, else steal backlog from
+                            // a busy device.
                             let resident = dev.loaded_tile_id();
                             let prefer = |j: &Job| Some(j.tile_id) == resident;
                             let job = match pool.pop(i, prefer) {
@@ -122,6 +142,7 @@ impl Coordinator {
             pool,
             workers,
             metrics,
+            placement,
             cfg,
             next_id: std::sync::atomic::AtomicU64::new(0),
         }
@@ -131,23 +152,59 @@ impl Coordinator {
         self.metrics.snapshot()
     }
 
+    /// Per-tenant service counters (DRR fairness observability).
+    pub fn tenant_metrics(&self) -> Vec<TenantSnapshot> {
+        self.metrics.tenants()
+    }
+
+    /// Jobs executed per worker device (placement/stealing skew),
+    /// padded to the pool size so idle devices report an explicit 0.
+    pub fn device_job_counts(&self) -> Vec<u64> {
+        let mut v = self.metrics.device_jobs();
+        v.resize(self.cfg.devices.max(1), 0);
+        v
+    }
+
+    /// Placement-map state: placements, rebalances, per-device heat.
+    pub fn placement_snapshot(&self) -> PlacementSnapshot {
+        self.placement.snapshot()
+    }
+
     pub fn config(&self) -> &CoordinatorConfig {
         &self.cfg
     }
 
-    /// Submit one matmul `X (MxN) @ W (NxK)`. Ragged shapes are
-    /// zero-padded to the tile size. Blocks only under backpressure.
+    /// Submit one matmul `X (MxN) @ W (NxK)` for the default tenant.
+    /// Ragged shapes are zero-padded to the tile size. Blocks only
+    /// under backpressure.
     pub fn submit(&self, x: Mat<i8>, w: Mat<i8>) -> RequestHandle {
-        self.submit_batched(vec![x], w).pop().unwrap()
+        self.submit_as(DEFAULT_TENANT, x, w)
+    }
+
+    /// [`submit`](Self::submit) on behalf of `tenant`: the request's
+    /// jobs queue in that tenant's per-device DRR lanes, so a flood
+    /// from another tenant cannot starve it.
+    pub fn submit_as(&self, tenant: TenantId, x: Mat<i8>, w: Mat<i8>) -> RequestHandle {
+        self.submit_batched_as(tenant, vec![x], w).pop().unwrap()
     }
 
     /// Submit a *batch* of inputs sharing the same weight matrix (the
-    /// serving case: many sequences through one layer). The inputs are
-    /// stacked so every stationary weight tile is loaded **once per
-    /// batch** at most — and with affinity routing, a tile that is
-    /// already stationary on its device from an earlier batch is not
-    /// reloaded at all.
+    /// serving case: many sequences through one layer) for the default
+    /// tenant. The inputs are stacked so every stationary weight tile
+    /// is loaded **once per batch** at most — and with affinity
+    /// routing, a tile that is already stationary on its device from an
+    /// earlier batch is not reloaded at all.
     pub fn submit_batched(&self, xs: Vec<Mat<i8>>, w: Mat<i8>) -> Vec<RequestHandle> {
+        self.submit_batched_as(DEFAULT_TENANT, xs, w)
+    }
+
+    /// [`submit_batched`](Self::submit_batched) on behalf of `tenant`.
+    pub fn submit_batched_as(
+        &self,
+        tenant: TenantId,
+        xs: Vec<Mat<i8>>,
+        w: Mat<i8>,
+    ) -> Vec<RequestHandle> {
         use std::sync::atomic::Ordering::Relaxed;
         assert!(!xs.is_empty(), "empty batch");
         let n_dim = w.rows();
@@ -173,6 +230,7 @@ impl Coordinator {
             handles.push(RequestHandle { rx });
             row0 += x.rows();
             self.metrics.requests_submitted.fetch_add(1, Relaxed);
+            self.metrics.tenant_submitted(tenant);
         }
 
         // A degenerate request produces no jobs: an all-empty batch
@@ -189,7 +247,6 @@ impl Coordinator {
         }
         let req = Arc::new(ReqState::new(padded_rows, k_dim, tk * t, jobs, subs));
 
-        let devices = self.pool.shards() as u64;
         for kn in 0..tn {
             // The x strip for this contraction block is shared by all
             // ko jobs through one Arc — no per-job deep copies.
@@ -203,11 +260,17 @@ impl Coordinator {
                     x_strip: Arc::clone(&x_strip),
                     c0: ko * t,
                     tile_id,
+                    tenant,
+                    enqueued_at: Instant::now(),
                 };
-                // Affinity: the same tile always routes to the same
-                // device, which then skips the stationary reload.
-                let shard = (tile_id % devices) as usize;
-                if self.pool.push(shard, job) {
+                // Affinity: the same tile always routes to its home
+                // device (which then skips the stationary reload);
+                // unseen tiles are placed onto the colder of two
+                // candidate devices, with heat weighted by the job's
+                // streamed M1-tile count so placement balances work,
+                // not request count.
+                let shard = self.placement.place(tile_id, (padded_rows / t) as u64);
+                if self.pool.push(shard, tenant, job) {
                     self.metrics.backpressure_events.fetch_add(1, Relaxed);
                 }
             }
@@ -243,9 +306,10 @@ mod tests {
     fn small() -> CoordinatorConfig {
         CoordinatorConfig {
             devices: 3,
-            device: DeviceConfig { arch: Arch::Dip, tile: 8, mac_stages: 2 },
+            device: DeviceConfig { arch: Arch::Dip, tile: 8, mac_stages: 2, ..Default::default() },
             queue_depth: 4,
             work_stealing: true,
+            placement: PlacementPolicy::HeatAware,
         }
     }
 
@@ -320,7 +384,8 @@ mod tests {
     #[test]
     fn affinity_skips_reloads_across_sequential_requests() {
         // One 8x8 weight = a single tile, so every request's job routes
-        // to the same device; after the first, the tile is resident.
+        // to the same (placed) device; after the first, the tile is
+        // resident.
         let c = Coordinator::new(small());
         let w = random_i8(8, 8, 21);
         for i in 0..5 {
@@ -382,6 +447,53 @@ mod tests {
     }
 
     #[test]
+    fn hash_mod_policy_matches_pr1_routing() {
+        // The A/B baseline still routes by `tile_id % devices` and
+        // keeps the same reuse behavior for a single-tile weight.
+        let cfg = CoordinatorConfig { placement: PlacementPolicy::HashMod, ..small() };
+        let c = Coordinator::new(cfg);
+        let w = random_i8(8, 8, 21);
+        for i in 0..5 {
+            let x = random_i8(8, 8, 30 + i);
+            assert_eq!(
+                c.submit(x.clone(), w.clone()).wait().out,
+                x.widen().matmul(&w.widen())
+            );
+        }
+        let p = c.placement_snapshot();
+        assert_eq!(p.placements, 0, "HashMod is stateless");
+        let m = c.shutdown();
+        assert_eq!(m.weight_loads, 1);
+        assert_eq!(m.weight_loads_skipped, 4);
+    }
+
+    #[test]
+    fn tenants_share_devices_and_stay_exact() {
+        // Two tenants interleaved through the same coordinator: exact
+        // results, and per-tenant counters see both.
+        let c = Coordinator::new(CoordinatorConfig { queue_depth: 32, ..small() });
+        let w = random_i8(16, 16, 8);
+        let handles: Vec<_> = (0..12)
+            .map(|i| {
+                let tenant = (i % 2 + 1) as TenantId;
+                let x = random_i8(8, 16, 300 + i as u64);
+                (x.clone(), c.submit_as(tenant, x, w.clone()))
+            })
+            .collect();
+        for (x, h) in handles {
+            assert_eq!(h.wait().out, x.widen().matmul(&w.widen()));
+        }
+        let ts = c.tenant_metrics();
+        assert_eq!(ts.len(), 2);
+        for t in &ts {
+            assert_eq!(t.requests_submitted, 6);
+            assert_eq!(t.jobs_served, 6 * 4, "tenant {}", t.tenant);
+        }
+        let m = c.shutdown();
+        assert_eq!(m.requests_completed, 12);
+    }
+
+    #[test]
     fn zero_row_request_serves_empty_output() {
         // Regression: a 0-row input used to underflow in the DiP fast
         // path; it now serves an empty (0 x K) result without fanning
@@ -419,9 +531,10 @@ mod tests {
     fn backpressure_blocks_but_loses_nothing() {
         let cfg = CoordinatorConfig {
             devices: 1,
-            device: DeviceConfig { arch: Arch::Dip, tile: 8, mac_stages: 2 },
+            device: DeviceConfig { arch: Arch::Dip, tile: 8, mac_stages: 2, ..Default::default() },
             queue_depth: 1,
             work_stealing: true,
+            placement: PlacementPolicy::HeatAware,
         };
         let c = Coordinator::new(cfg);
         let w = random_i8(32, 32, 6);

@@ -56,17 +56,34 @@ impl ReqState {
     /// Fold one job's partial result (an M-row column strip at column
     /// offset `c0`) into the accumulator; returns true when this was the
     /// last outstanding job.
+    ///
+    /// Shape contract (asserted, not clamped): the accumulator spans the
+    /// *padded* row/column range, so every job strip must fit exactly —
+    /// a strip that does not is a routing/tiling bug upstream, and
+    /// silently dropping its overhang would corrupt results. The only
+    /// intentional padding is the accumulator's trailing columns
+    /// (`out_cols..padded_cols`), which [`finish`](Self::finish) trims
+    /// when slicing each sub-request's block.
     pub fn complete_job(&self, c0: usize, strip: &Mat<i32>, stats: &RunStats) -> bool {
         {
             let mut out = self.out.lock().unwrap();
+            assert_eq!(
+                strip.rows(),
+                out.rows(),
+                "job strip rows must equal the padded accumulator rows"
+            );
+            assert!(
+                c0 + strip.cols() <= out.cols(),
+                "job strip (c0 {c0} + {} cols) overruns the padded accumulator ({} cols)",
+                strip.cols(),
+                out.cols()
+            );
             // Accumulate (psum semantics) — strips from different
             // contraction blocks target the same columns.
-            for r in 0..strip.rows().min(out.rows()) {
+            for r in 0..strip.rows() {
                 for c in 0..strip.cols() {
-                    if c0 + c < out.cols() {
-                        let v = out.get(r, c0 + c) + strip.get(r, c);
-                        out.set(r, c0 + c, v);
-                    }
+                    let v = out.get(r, c0 + c) + strip.get(r, c);
+                    out.set(r, c0 + c, v);
                 }
             }
         }
@@ -142,6 +159,26 @@ mod tests {
         assert!(st.complete_job(2, &strip, &RunStats::default()));
         st.finish();
         assert_eq!(rx.try_recv().unwrap().out, Mat::from_vec(1, 4, vec![0, 0, 9, 9]));
+    }
+
+    #[test]
+    #[should_panic(expected = "strip rows must equal")]
+    fn short_strip_is_a_bug_not_a_silent_drop() {
+        // Regression: a mis-shaped strip used to be clamped away
+        // (masking routing/tiling bugs as dropped partial sums).
+        let (tx, _rx) = channel();
+        let st = ReqState::new(4, 2, 2, 1, vec![SubRequest { id: 0, row0: 0, rows: 4, tx }]);
+        let strip = Mat::from_vec(2, 2, vec![1, 2, 3, 4]); // 2 rows != 4
+        st.complete_job(0, &strip, &RunStats::default());
+    }
+
+    #[test]
+    #[should_panic(expected = "overruns the padded accumulator")]
+    fn column_overrun_is_a_bug_not_a_silent_drop() {
+        let (tx, _rx) = channel();
+        let st = ReqState::new(1, 2, 2, 1, vec![SubRequest { id: 0, row0: 0, rows: 1, tx }]);
+        let strip = Mat::from_vec(1, 2, vec![1, 2]);
+        st.complete_job(1, &strip, &RunStats::default()); // c0 1 + 2 > 2
     }
 
     #[test]

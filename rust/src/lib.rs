@@ -21,15 +21,20 @@
 //!   tiles, streamed M1 tiles, psum accumulation — with cycle/energy
 //!   composition validated against the PE-level simulators.
 //! * [`coordinator`] — the L3 runtime: a matmul/transformer-layer
-//!   request router with **weight-tile-affinity scheduling**: per-device
-//!   bounded queues (backpressure, never drops), jobs routed by weight
-//!   tile content hash so repeated layers/batches hit the device that
-//!   already holds the tile stationary (the reload is skipped and its
-//!   `N-1` cycles credited), per-device LRU caches of prepared
-//!   (permutated) tiles, and work stealing so affinity never starves a
-//!   device. Reuse is observable in the metrics snapshot:
-//!   `weight_loads_skipped`, `weight_load_cycles_saved`, `cache_hits` /
-//!   `cache_misses`, and `steals`.
+//!   request router with **weight-tile-affinity scheduling**: unseen
+//!   weight tiles are placed on devices by heat-aware
+//!   power-of-two-choices (decayed tile heat, bounded rebalancing) and
+//!   keep strict affinity afterwards, so repeated layers/batches hit
+//!   the device that already holds the tile stationary (the reload is
+//!   skipped, its `N-1` cycles credited against a ledger that charged
+//!   the installs it did perform) while multi-layer models spread by
+//!   load. Per-device bounded queues (backpressure, never drops) hold
+//!   per-tenant lanes drained by deficit round-robin — multi-tenant
+//!   fairness — with per-device LRU caches of prepared (permutated)
+//!   tiles and work stealing so affinity never starves a device.
+//!   Observability: `weight_loads_skipped`, `weight_load_cycles_saved`,
+//!   `cache_hits` / `cache_misses`, `steals`, per-tenant served/wait
+//!   counters, per-device job counts, and placement stats.
 //! * `runtime` — PJRT execution of the AOT-compiled JAX/Pallas
 //!   artifacts (`artifacts/*.hlo.txt`); Python is never on this path.
 //!   Compiled only with the non-default `pjrt` cargo feature (the `xla`

@@ -249,9 +249,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
     let cfg = CoordinatorConfig {
         devices,
-        device: DeviceConfig { arch, tile: 64, mac_stages: 2 },
+        device: DeviceConfig { arch, tile: 64, mac_stages: 2, ..Default::default() },
         queue_depth: 128,
-        work_stealing: true,
+        ..Default::default()
     };
     println!(
         "serving {requests} matmul requests ({rows}x{n_dim} @ {n_dim}x{k_dim}) on {devices} {} devices, batch={batch}",

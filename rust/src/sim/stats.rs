@@ -62,7 +62,11 @@ impl EventCounts {
 #[derive(Debug, Default, Clone, Copy, PartialEq)]
 pub struct RunStats {
     /// Total cycles from first input presentation to last output
-    /// emission (the paper's latency definition, eqs (1)/(5)).
+    /// emission (the paper's latency definition, eqs (1)/(5)). Note:
+    /// schedule-level accounting (tiling composition, the coordinator's
+    /// per-request stats) additionally charges performed weight-load
+    /// phases into this field — with matching `pe_idle_cycles` events —
+    /// while a bare `run_tile` reports the streaming phase only.
     pub cycles: u64,
     /// Cycles spent in the dedicated weight-load phase (reported
     /// separately; eqs (1)/(5) exclude it, our schedules account for it

@@ -4,9 +4,12 @@
 
 use dip_core::analytical::{compare::compare_at, Arch};
 use dip_core::arch::{dip::DipArray, ws::WsArray, SystolicArray};
+use dip_core::bench_harness::scenarios::{
+    cold_share_with_growing_plug, serve_two_model_bursts, FloodScenario, TwoModelBurst,
+};
 use dip_core::bench_harness::{fig5, fig6, table1, table2, table4};
-use dip_core::coordinator::{Coordinator, CoordinatorConfig, DeviceConfig};
-use dip_core::matrix::random_i8;
+use dip_core::coordinator::{Coordinator, CoordinatorConfig, DeviceConfig, PlacementPolicy};
+use dip_core::matrix::{random_i8, Mat};
 use dip_core::power::energy;
 use dip_core::tiling::schedule::{compare_workload, workload_cost, TilingConfig};
 use dip_core::workloads::dims::{layer_workloads, MatMulDims};
@@ -96,9 +99,9 @@ fn coordinator_and_tiling_agree_numerically() {
 
     let coord = Coordinator::new(CoordinatorConfig {
         devices: 3,
-        device: DeviceConfig { arch: Arch::Dip, tile: 8, mac_stages: 2 },
+        device: DeviceConfig { arch: Arch::Dip, tile: 8, mac_stages: 2, ..Default::default() },
         queue_depth: 16,
-        work_stealing: true,
+        ..Default::default()
     });
     let served = coord.submit(x.clone(), w.clone()).wait().out;
     coord.shutdown();
@@ -116,9 +119,10 @@ fn serving_reuses_stationary_weights_across_requests() {
     for arch in [Arch::Dip, Arch::Ws] {
         let coord = Coordinator::new(CoordinatorConfig {
             devices: 2,
-            device: DeviceConfig { arch, tile: 8, mac_stages: 2 },
+            device: DeviceConfig { arch, tile: 8, mac_stages: 2, ..Default::default() },
             queue_depth: 16,
             work_stealing: false, // strict affinity: reuse is deterministic
+            ..Default::default()
         });
         let w = random_i8(8, 8, 77);
         for i in 0..6 {
@@ -138,6 +142,95 @@ fn serving_reuses_stationary_weights_across_requests() {
         };
         assert_eq!(m.weight_load_cycles_saved, 5 * per_load, "{arch:?}");
     }
+}
+
+#[test]
+fn heat_aware_placement_beats_hash_on_two_model_serving() {
+    // The ROADMAP "smarter placement than hash % devices" scenario: with
+    // these models the PR 1 modulus co-locates 5 of the 8 layer pairs
+    // (and stacks half the work on one device); power-of-two-choices
+    // spreads them. Both serve bit-exact outputs (asserted inside the
+    // shared scenario); heat-aware must win strictly on reuse *and*
+    // balance. Deterministic: sequential submit+wait, stealing off.
+    let cfg = TwoModelBurst { tile: 8, seed_a: 8100, seed_b: 8150, burst: 3 };
+    let hash = serve_two_model_bursts(&cfg, PlacementPolicy::HashMod);
+    let heat = serve_two_model_bursts(&cfg, PlacementPolicy::HeatAware);
+    let total = (2 * 8 * cfg.burst) as u64;
+    assert_eq!(hash.metrics.jobs_executed, total);
+    assert_eq!(heat.metrics.jobs_executed, total);
+    assert_eq!(hash.device_jobs.iter().sum::<u64>(), total);
+    assert_eq!(heat.device_jobs.iter().sum::<u64>(), total);
+
+    assert!(
+        heat.metrics.weight_reuse_rate() > hash.metrics.weight_reuse_rate(),
+        "heat-aware reuse {:.2} must beat hash reuse {:.2}",
+        heat.metrics.weight_reuse_rate(),
+        hash.metrics.weight_reuse_rate()
+    );
+    // Deterministic margins (validated against an exact model of the
+    // placement + residency state machine): hash ~25%, heat ~67%.
+    assert!(hash.metrics.weight_reuse_rate() < 0.45, "{}", hash.metrics.weight_reuse_rate());
+    assert!(heat.metrics.weight_reuse_rate() > 0.55, "{}", heat.metrics.weight_reuse_rate());
+
+    assert!(
+        heat.job_spread() < hash.job_spread(),
+        "heat skew {:?} must be tighter than hash skew {:?}",
+        heat.device_jobs,
+        hash.device_jobs
+    );
+}
+
+#[test]
+fn placement_map_is_strictly_affine_across_requests() {
+    // Repeated traffic never re-homes tiles absent imbalance: every
+    // distinct tile is placed exactly once however often it recurs.
+    let coord = Coordinator::new(CoordinatorConfig {
+        devices: 4,
+        device: DeviceConfig { arch: Arch::Dip, tile: 8, mac_stages: 2, ..Default::default() },
+        queue_depth: 16,
+        work_stealing: false,
+        placement: PlacementPolicy::HeatAware,
+    });
+    let weights: Vec<Mat<i8>> = (0..6).map(|i| random_i8(8, 8, 500 + i)).collect();
+    for round in 0..5 {
+        for w in &weights {
+            let x = random_i8(8, 8, 700 + round);
+            coord.submit(x, w.clone()).wait();
+        }
+    }
+    let p = coord.placement_snapshot();
+    assert_eq!(p.placements, 6);
+    assert_eq!(p.tiles, 6);
+    assert_eq!(p.rebalances, 0, "balanced traffic must not re-home tiles");
+    assert_eq!(p.device_tiles.iter().sum::<usize>(), 6);
+    assert_eq!(p.device_heat.iter().sum::<u64>(), 6 * 5);
+    coord.shutdown();
+}
+
+#[test]
+fn cold_tenant_keeps_its_share_while_hot_tenant_floods() {
+    // With the backlog held by the plug, DRR lanes alternate service,
+    // so the cold tenant's share at its completion is ~50% and the 25%
+    // fairness floor holds with a wide margin. The shared scenario
+    // gates on the contention precondition and grows the plug 4x when
+    // a slow machine let the backlog drain early (every response is
+    // verified bit-exact inside it).
+    let cfg = FloodScenario { tile: 8, hot_requests: 160, cold_requests: 40, plug_rows: 1 << 15 };
+    let Some(out) = cold_share_with_growing_plug(cfg, 4) else {
+        // The backlog never held: this machine drained faster than it
+        // submitted on every attempt, so the end-to-end share says
+        // nothing. Exactness was still verified on every attempt, and
+        // the DRR fairness guarantee itself is covered deterministically
+        // by the queue-level tests — skip rather than fail on timing.
+        eprintln!("fairness share inconclusive on this machine (backlog never held); skipping");
+        return;
+    };
+    let share = out.cold_share.unwrap();
+    assert!(
+        share >= 0.25,
+        "cold tenant got {share:.2} of served jobs under flood (hot {} at cold completion)",
+        out.hot_served_at_cold_done
+    );
 }
 
 #[test]

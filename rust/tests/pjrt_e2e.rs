@@ -102,9 +102,9 @@ fn coordinator_serving_cross_checked_against_pjrt() {
 
     let coord = Coordinator::new(CoordinatorConfig {
         devices: 2,
-        device: DeviceConfig { arch: Arch::Dip, tile: 64, mac_stages: 2 },
+        device: DeviceConfig { arch: Arch::Dip, tile: 64, mac_stages: 2, ..Default::default() },
         queue_depth: 8,
-        work_stealing: true,
+        ..Default::default()
     });
     let served: Mat<i32> = coord.submit(xi.clone(), wi.clone()).wait().out;
     coord.shutdown();

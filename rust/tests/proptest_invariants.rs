@@ -13,12 +13,20 @@
 //!  * coordinator responses are exact and order-independent,
 //!  * `submit_batched` ≡ per-request `submit` ≡ the i32 reference
 //!    matmul for ragged shapes, across device counts, architectures,
-//!    queue depths, and work-stealing on/off.
+//!    queue depths, placement policies, tenants, and work-stealing
+//!    on/off,
+//!  * `ShardedQueue` loses and duplicates nothing under randomized
+//!    concurrent push/pop/steal/close interleavings, and the
+//!    `MAX_FRONT_SKIPS` anti-starvation bound holds with stealing
+//!    enabled.
 
 use dip_core::analytical::{latency_cycles, Arch};
 use dip_core::arch::permute::{permute, unpermute};
 use dip_core::arch::{dip::DipArray, ws::WsArray, SystolicArray};
-use dip_core::coordinator::{Coordinator, CoordinatorConfig, DeviceConfig};
+use dip_core::coordinator::{
+    Coordinator, CoordinatorConfig, DeviceConfig, PlacementPolicy, ShardedQueue, TenantId,
+    MAX_FRONT_SKIPS,
+};
 use dip_core::matrix::{random_i8, Mat};
 use dip_core::tiling::schedule::{run_tiled_matmul, TilingConfig, WeightLoadPolicy};
 
@@ -164,9 +172,14 @@ fn prop_coordinator_exact_under_concurrency() {
     for round in 0..6 {
         let cfg = CoordinatorConfig {
             devices: g.range(1, 6) as usize,
-            device: DeviceConfig { arch: Arch::Dip, tile: 8, mac_stages: 2 },
+            device: DeviceConfig { arch: Arch::Dip, tile: 8, mac_stages: 2, ..Default::default() },
             queue_depth: g.range(1, 16) as usize,
             work_stealing: g.next() % 2 == 0,
+            placement: if g.next() % 2 == 0 {
+                PlacementPolicy::HeatAware
+            } else {
+                PlacementPolicy::HashMod
+            },
         };
         let coord = Coordinator::new(cfg);
         let nd = g.range(1, 4) as usize * 8;
@@ -176,7 +189,9 @@ fn prop_coordinator_exact_under_concurrency() {
             .map(|_| {
                 let m = g.range(1, 30) as usize;
                 let x = random_i8(m, nd, g.next());
-                let h = coord.submit(x.clone(), w.clone());
+                // Random tenants: fairness lanes must never affect
+                // results, only ordering.
+                let h = coord.submit_as(g.range(0, 3) as TenantId, x.clone(), w.clone());
                 (x, h)
             })
             .collect();
@@ -207,9 +222,14 @@ fn prop_submit_batched_equals_submit_equals_reference() {
         let arch = if g.next() % 2 == 0 { Arch::Dip } else { Arch::Ws };
         let cfg = CoordinatorConfig {
             devices: g.range(1, 4) as usize,
-            device: DeviceConfig { arch, tile, mac_stages: 2 },
+            device: DeviceConfig { arch, tile, mac_stages: 2, ..Default::default() },
             queue_depth: g.range(2, 16) as usize,
             work_stealing: g.next() % 2 == 0,
+            placement: if g.next() % 2 == 0 {
+                PlacementPolicy::HeatAware
+            } else {
+                PlacementPolicy::HashMod
+            },
         };
         let nd = g.range(1, 40) as usize;
         let k = g.range(1, 40) as usize;
@@ -253,9 +273,9 @@ fn prop_psum_accumulation_order_independent() {
         let run = |devices: usize| {
             let coord = Coordinator::new(CoordinatorConfig {
                 devices,
-                device: DeviceConfig { arch: Arch::Dip, tile: 8, mac_stages: 2 },
+                device: DeviceConfig { arch: Arch::Dip, tile: 8, mac_stages: 2, ..Default::default() },
                 queue_depth: 4,
-                work_stealing: true,
+                ..Default::default()
             });
             let out = coord.submit(x.clone(), w.clone()).wait().out;
             coord.shutdown();
@@ -263,6 +283,100 @@ fn prop_psum_accumulation_order_independent() {
         };
         assert_eq!(run(1), run(5));
     }
+}
+
+#[test]
+fn prop_sharded_queue_loses_and_duplicates_nothing_under_interleaving() {
+    // Randomized concurrent push/pop/steal/close interleavings across
+    // shards, tenants, capacities, and stealing on/off: every pushed
+    // job is popped exactly once, the queue drains fully, and nothing
+    // hangs. One consumer per shard (as in the coordinator, where
+    // workers == devices) plus extras sharing shards.
+    use std::collections::HashSet;
+    use std::sync::Arc;
+
+    let mut g = Gen(0x97E55);
+    for trial in 0..12 {
+        let shards = g.range(1, 5) as usize;
+        let capacity = g.range(1, 8) as usize;
+        let steal = g.next() % 2 == 0;
+        let producers = g.range(1, 4) as usize;
+        let per_producer = g.range(20, 120) as usize;
+        let consumers = shards + g.range(0, 3) as usize;
+        let q = Arc::new(ShardedQueue::<u64>::new(shards, capacity, steal));
+
+        let producer_handles: Vec<_> = (0..producers)
+            .map(|p| {
+                let q = Arc::clone(&q);
+                let mut pg = Gen(0x1000 + trial * 31 + p as u64);
+                std::thread::spawn(move || {
+                    for j in 0..per_producer {
+                        let item = (p * 1_000_000 + j) as u64;
+                        let shard = pg.range(0, shards as u64 - 1) as usize;
+                        let tenant = pg.range(0, 3);
+                        q.push(shard, tenant, item);
+                    }
+                })
+            })
+            .collect();
+        let consumer_handles: Vec<_> = (0..consumers)
+            .map(|c| {
+                let q = Arc::clone(&q);
+                let mut cg = Gen(0x2000 + trial * 17 + c as u64);
+                let me = c % shards;
+                std::thread::spawn(move || {
+                    let mut mine = Vec::new();
+                    loop {
+                        // Shifting "resident tile" preference exercises
+                        // the out-of-order path and the skip bound.
+                        let residue = cg.range(0, 6);
+                        match q.pop(me, |v| v % 7 == residue) {
+                            Some(p) => mine.push(p.into_inner()),
+                            None => break,
+                        }
+                    }
+                    mine
+                })
+            })
+            .collect();
+        for h in producer_handles {
+            h.join().unwrap();
+        }
+        q.close();
+        let mut all = Vec::new();
+        for h in consumer_handles {
+            all.extend(h.join().unwrap());
+        }
+        let total = producers * per_producer;
+        assert_eq!(all.len(), total, "trial {trial}: lost or extra jobs");
+        let unique: HashSet<u64> = all.iter().copied().collect();
+        assert_eq!(unique.len(), total, "trial {trial}: duplicated jobs");
+    }
+}
+
+#[test]
+fn prop_front_skip_bound_holds_with_stealing_enabled() {
+    // The MAX_FRONT_SKIPS anti-starvation bound is a per-lane property
+    // of the owning shard and must survive stealing being enabled (a
+    // second, empty-shard worker configuration steals nothing here but
+    // compiles the same code path the coordinator runs).
+    let q = ShardedQueue::<u32>::new(2, MAX_FRONT_SKIPS as usize + 16, true);
+    q.push(0, 0, 1); // never preferred
+    for _ in 0..MAX_FRONT_SKIPS + 8 {
+        q.push(0, 0, 2); // always preferred
+    }
+    q.close();
+    let mut popped_front_at = None;
+    let mut i = 0u32;
+    while let Some(p) = q.pop(0, |v| *v == 2) {
+        if p.into_inner() == 1 {
+            popped_front_at = Some(i);
+        }
+        i += 1;
+    }
+    assert_eq!(popped_front_at, Some(MAX_FRONT_SKIPS));
+    // The other worker sees a drained queue, not a hang.
+    assert!(q.pop(1, |_| false).is_none());
 }
 
 #[test]
