@@ -3,10 +3,14 @@
 //! placement, multi-tenant fairness, DiP vs WS device pools.
 //! `cargo bench --bench coordinator`.
 //!
+//! Emits `BENCH_coordinator.json` (throughput, cycles, reuse rates) so
+//! future PRs can track scheduler-path regressions.
+//!
 //! Set `DIP_BENCH_SMOKE=1` to run reduced sizes (CI smoke: the same
 //! scenarios and assertions, a fraction of the wall time).
 
 use dip_core::analytical::Arch;
+use dip_core::bench_harness::report::Json;
 use dip_core::bench_harness::scenarios::{
     cold_share_with_growing_plug, serve_two_model_bursts, FloodScenario, TwoModelBurst,
 };
@@ -135,11 +139,13 @@ fn main() {
     }
     println!("=== Coordinator serving throughput (64x256 @ 256x256 requests) ===");
 
+    let mut throughputs: Vec<(String, f64)> = Vec::new();
     for devices in [1usize, 4, 8] {
         let r = bench(&format!("dip/devices{devices}/unbatched"), 1, if smoke { 2 } else { 5 }, || {
             serve(Arch::Dip, devices, requests, 1, false).sim_cycles
         });
         report_throughput("requests", r.throughput(requests as f64), "/s");
+        throughputs.push((format!("devices{devices}_unbatched"), r.throughput(requests as f64)));
     }
 
     for batch in [4usize, 16] {
@@ -147,6 +153,7 @@ fn main() {
             serve(Arch::Dip, 4, requests, batch, false).sim_cycles
         });
         report_throughput("requests", r.throughput(requests as f64), "/s");
+        throughputs.push((format!("devices4_batch{batch}"), r.throughput(requests as f64)));
     }
 
     // Repeated-weight serving: the same 256x256 W across all requests
@@ -188,4 +195,25 @@ fn main() {
         ws_cycles as f64 / dip_cycles as f64
     );
     assert!(ws_cycles > dip_cycles, "DiP must win on simulated cycles");
+
+    // Machine-readable trajectory for future PRs.
+    let json = Json::obj(vec![
+        ("smoke", Json::Bool(smoke)),
+        ("requests", Json::num(requests as f64)),
+        (
+            "throughput_req_per_s",
+            Json::obj(throughputs.iter().map(|(k, v)| (k.as_str(), Json::num(*v))).collect()),
+        ),
+        ("repeated_weight_jobs", Json::num(m.jobs_executed as f64)),
+        ("repeated_weight_loads_skipped", Json::num(m.weight_loads_skipped as f64)),
+        ("repeated_weight_reuse_rate", Json::num(m.weight_reuse_rate())),
+        ("repeated_weight_cycles_saved", Json::num(m.weight_load_cycles_saved as f64)),
+        ("steals", Json::num(m.steals as f64)),
+        ("steals_warm", Json::num(m.steals_warm as f64)),
+        ("dip_cycles", Json::num(dip_cycles as f64)),
+        ("ws_cycles", Json::num(ws_cycles as f64)),
+        ("ws_over_dip_cycles", Json::num(ws_cycles as f64 / dip_cycles as f64)),
+    ]);
+    std::fs::write("BENCH_coordinator.json", json.render()).expect("write BENCH_coordinator.json");
+    println!("wrote BENCH_coordinator.json");
 }

@@ -1,0 +1,134 @@
+//! Bench: autoregressive serving — multi-session decode mix with
+//! activation caching on vs off (KV-style row reuse + strip cache),
+//! per-step latency/cycles/hit-rate reporting, and the acceptance
+//! assertions (bit-exact outputs, strictly fewer streamed rows and
+//! simulated cycles). `cargo bench --bench serving`.
+//!
+//! Emits `BENCH_serving.json` (machine-readable trajectory: cycles,
+//! rows, reuse and hit rates, improvement ratios) so future PRs can
+//! track serving-path regressions.
+//!
+//! Set `DIP_BENCH_SMOKE=1` for reduced sizes (CI smoke: same scenario,
+//! same assertions, fraction of the wall time).
+
+use dip_core::bench_harness::report::Json;
+use dip_core::bench_harness::scenarios::{
+    assert_cached_strictly_cheaper, run_decode_mix, DecodeMix, DecodeOutcome,
+};
+use dip_core::bench_harness::timing::{bench, report_throughput};
+use dip_core::serving::LayerDims;
+
+fn smoke() -> bool {
+    std::env::var("DIP_BENCH_SMOKE").map(|v| !v.is_empty() && v != "0").unwrap_or(false)
+}
+
+fn outcome_json(o: &DecodeOutcome) -> Json {
+    let m = &o.metrics;
+    Json::obj(vec![
+        ("sim_cycles", Json::num(m.sim_cycles as f64)),
+        ("rows_streamed", Json::num(m.rows_streamed as f64)),
+        ("jobs_executed", Json::num(m.jobs_executed as f64)),
+        ("weight_loads", Json::num(m.weight_loads as f64)),
+        ("weight_loads_skipped", Json::num(m.weight_loads_skipped as f64)),
+        ("weight_reuse_rate", Json::num(m.weight_reuse_rate())),
+        ("act_strip_hits", Json::num(m.act_strip_hits as f64)),
+        ("act_strip_misses", Json::num(m.act_strip_misses as f64)),
+        ("act_strip_hit_rate", Json::num(m.act_strip_hit_rate())),
+        ("act_bytes_saved", Json::num(m.act_bytes_saved as f64)),
+        ("act_rows_reused", Json::num(m.act_rows_reused as f64)),
+        ("steals", Json::num(m.steals as f64)),
+        ("steals_warm", Json::num(m.steals_warm as f64)),
+    ])
+}
+
+fn main() {
+    let smoke = smoke();
+    if smoke {
+        println!("[smoke mode: reduced sizes]");
+    }
+    let cfg = DecodeMix {
+        tile: if smoke { 8 } else { 16 },
+        layers: 2,
+        dims: if smoke {
+            LayerDims { d_model: 16, d_k: 8, d_ffn: 24 }
+        } else {
+            LayerDims { d_model: 32, d_k: 16, d_ffn: 48 }
+        },
+        sessions: if smoke { 3 } else { 4 },
+        prefill_rows: if smoke { 12 } else { 24 },
+        shared_prefix_rows: if smoke { 8 } else { 16 },
+        steps: if smoke { 4 } else { 8 },
+        devices: 2,
+        seed: 7100,
+        strip_cache_capacity: 512,
+    };
+    let total_steps = (cfg.sessions * (cfg.steps + 1)) as f64;
+
+    println!(
+        "=== Serving decode mix ({} sessions x ({} prefill rows + {} steps), {} layers, d_model {}) ===",
+        cfg.sessions, cfg.prefill_rows, cfg.steps, cfg.layers, cfg.dims.d_model
+    );
+    let r_cached = bench("serving/decode-mix/cached", 1, if smoke { 2 } else { 3 }, || {
+        run_decode_mix(&cfg, true).metrics.sim_cycles
+    });
+    report_throughput("steps", r_cached.throughput(total_steps), "/s");
+    let r_uncached = bench("serving/decode-mix/uncached", 1, if smoke { 2 } else { 3 }, || {
+        run_decode_mix(&cfg, false).metrics.sim_cycles
+    });
+    report_throughput("steps", r_uncached.throughput(total_steps), "/s");
+
+    // The measured A/B pair: acceptance criteria asserted (bit-exact
+    // outputs; strictly fewer streamed rows and simulated cycles).
+    let cached = run_decode_mix(&cfg, true);
+    let uncached = run_decode_mix(&cfg, false);
+    let ab = assert_cached_strictly_cheaper(&cached, &uncached);
+
+    println!("\nper-step (cached run; session, rows streamed/total, cycles, strip hits, energy):");
+    for r in &cached.per_step {
+        println!(
+            "  s{} rows {:>2}/{:<3} cycles {:>6}  strips {}/{}  reused rows {:>3}  {:>7.2} uJ  {:>8.1?}",
+            r.session,
+            r.rows_processed,
+            r.total_rows,
+            r.sim_cycles,
+            r.strip_hits,
+            r.strip_hits + r.strip_misses,
+            r.rows_reused,
+            r.energy_uj,
+            r.wall,
+        );
+    }
+    println!(
+        "\ncached:   cycles {:>9}  rows {:>7}  strip hit rate {:>5.1}%  bytes saved {}",
+        cached.metrics.sim_cycles,
+        cached.metrics.rows_streamed,
+        ab.strip_hit_rate * 100.0,
+        ab.bytes_saved,
+    );
+    println!(
+        "uncached: cycles {:>9}  rows {:>7}",
+        uncached.metrics.sim_cycles, uncached.metrics.rows_streamed
+    );
+    println!(
+        "-> activation caching: {:.2}x fewer simulated cycles, {:.2}x fewer streamed rows",
+        ab.cycles_ratio, ab.rows_ratio
+    );
+
+    let json = Json::obj(vec![
+        ("scenario", Json::str("decode_mix")),
+        ("smoke", Json::Bool(smoke)),
+        ("sessions", Json::num(cfg.sessions as f64)),
+        ("prefill_rows", Json::num(cfg.prefill_rows as f64)),
+        ("steps", Json::num(cfg.steps as f64)),
+        ("layers", Json::num(cfg.layers as f64)),
+        ("tile", Json::num(cfg.tile as f64)),
+        ("steps_per_s_cached", Json::num(r_cached.throughput(total_steps))),
+        ("steps_per_s_uncached", Json::num(r_uncached.throughput(total_steps))),
+        ("cycles_ratio", Json::num(ab.cycles_ratio)),
+        ("rows_ratio", Json::num(ab.rows_ratio)),
+        ("cached", outcome_json(&cached)),
+        ("uncached", outcome_json(&uncached)),
+    ]);
+    std::fs::write("BENCH_serving.json", json.render()).expect("write BENCH_serving.json");
+    println!("\nwrote BENCH_serving.json");
+}

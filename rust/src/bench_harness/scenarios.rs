@@ -19,6 +19,14 @@
 //!   floor. The contention precondition is gated, not assumed: if the
 //!   backlog drained before submission finished, the outcome reports
 //!   it and [`cold_share_with_growing_plug`] retries with a 4x plug.
+//! * [`run_decode_mix`] — the serving A/B: a multi-session
+//!   autoregressive decode mix (shared prompt prefix, per-session
+//!   tails, prefill + N steps each) served with activation caching on
+//!   vs off. [`assert_cached_strictly_cheaper`] pins the acceptance
+//!   criteria: bit-exact generated rows and layer state, strictly
+//!   fewer streamed rows (deterministic — a function of the job set)
+//!   and strictly fewer simulated cycles, with the strip cache
+//!   actually hit and its LRU bound respected.
 
 use crate::analytical::Arch;
 use crate::coordinator::{
@@ -26,6 +34,7 @@ use crate::coordinator::{
     TenantSnapshot,
 };
 use crate::matrix::{random_i8, Mat};
+use crate::serving::{LayerDims, LayerState, ServeModel, ServingEngine, Session, StepReport};
 
 /// Parameters of the two-model alternating-burst serving scenario.
 pub struct TwoModelBurst {
@@ -182,6 +191,141 @@ pub fn cold_share_under_flood(cfg: &FloodScenario) -> FloodOutcome {
         hot_served_at_cold_done: hot_served,
         cold_served,
         final_tenants,
+    }
+}
+
+/// Parameters of the multi-session autoregressive decode mix.
+pub struct DecodeMix {
+    /// Array edge / M1 strip height.
+    pub tile: usize,
+    /// Transformer layers per model.
+    pub layers: usize,
+    pub dims: LayerDims,
+    /// Concurrent sessions (tenants `1..=sessions`, one shared model).
+    pub sessions: usize,
+    /// Prompt rows per session; the first `shared_prefix_rows` are
+    /// identical across sessions (a common system prompt), the rest are
+    /// per-session.
+    pub prefill_rows: usize,
+    pub shared_prefix_rows: usize,
+    /// Autoregressive steps per session after prefill.
+    pub steps: usize,
+    pub devices: usize,
+    pub seed: u64,
+    /// Strip-cache budget when caching is on.
+    pub strip_cache_capacity: usize,
+}
+
+/// What one decode-mix run produced.
+pub struct DecodeOutcome {
+    pub metrics: MetricsSnapshot,
+    /// Per-step reports, prefills first, then steps in round-robin
+    /// session order.
+    pub per_step: Vec<StepReport>,
+    /// Final token activations per session (prompt + generated rows).
+    pub acts: Vec<Mat<i8>>,
+    /// Final per-layer K/V/output state per session.
+    pub layers: Vec<Vec<LayerState>>,
+    pub strip_cache_len: usize,
+    pub strip_cache_capacity: usize,
+}
+
+/// Serve the decode mix once, with activation caching (session row
+/// reuse + strip cache) on or off. Sessions advance in lockstep so the
+/// strip cache sees the cross-session prefix overlap.
+pub fn run_decode_mix(cfg: &DecodeMix, cached: bool) -> DecodeOutcome {
+    assert!(cfg.shared_prefix_rows <= cfg.prefill_rows, "shared prefix exceeds the prompt");
+    let model = ServeModel::synthetic(cfg.dims, cfg.layers, cfg.seed);
+    let engine = ServingEngine::new(
+        CoordinatorConfig {
+            devices: cfg.devices,
+            device: DeviceConfig {
+                arch: Arch::Dip,
+                tile: cfg.tile,
+                mac_stages: 2,
+                ..Default::default()
+            },
+            queue_depth: 256,
+            work_stealing: true,
+            placement: PlacementPolicy::HeatAware,
+        },
+        model,
+        if cached { cfg.strip_cache_capacity } else { 0 },
+    );
+    let shared = random_i8(cfg.shared_prefix_rows, cfg.dims.d_model, cfg.seed + 7);
+    let mut sessions: Vec<Session> = (0..cfg.sessions)
+        .map(|i| {
+            let unique = random_i8(
+                cfg.prefill_rows - cfg.shared_prefix_rows,
+                cfg.dims.d_model,
+                cfg.seed + 1000 * (i as u64 + 1),
+            );
+            engine.open_session(i as u64, i as TenantId + 1, shared.vconcat(&unique), cached)
+        })
+        .collect();
+    let mut per_step = Vec::new();
+    for s in &mut sessions {
+        per_step.push(engine.prefill(s));
+    }
+    for _ in 0..cfg.steps {
+        for s in &mut sessions {
+            per_step.push(engine.decode_step(s));
+        }
+    }
+    let (strip_cache_len, strip_cache_capacity) =
+        engine.strip_cache().map_or((0, 0), |c| (c.len(), c.capacity()));
+    let acts = sessions.iter().map(|s| s.acts.clone()).collect();
+    let layers = sessions.into_iter().map(|s| s.layers).collect();
+    let metrics = engine.shutdown();
+    DecodeOutcome { metrics, per_step, acts, layers, strip_cache_len, strip_cache_capacity }
+}
+
+/// Improvement factors of the cached run over the uncached baseline.
+#[derive(Debug, Clone, Copy)]
+pub struct AbSummary {
+    pub cycles_ratio: f64,
+    pub rows_ratio: f64,
+    pub strip_hit_rate: f64,
+    pub bytes_saved: u64,
+}
+
+/// The serving acceptance criteria, asserted: bit-exact outputs, and
+/// the activation cache strictly reducing streamed rows/bytes and
+/// total simulated cycles on the mix, with the LRU bound respected.
+pub fn assert_cached_strictly_cheaper(
+    cached: &DecodeOutcome,
+    uncached: &DecodeOutcome,
+) -> AbSummary {
+    assert_eq!(cached.acts, uncached.acts, "generated token rows diverged");
+    assert_eq!(cached.layers, uncached.layers, "per-layer K/V/output state diverged");
+    assert!(
+        cached.metrics.rows_streamed < uncached.metrics.rows_streamed,
+        "caching must strictly reduce streamed rows ({} vs {})",
+        cached.metrics.rows_streamed,
+        uncached.metrics.rows_streamed
+    );
+    assert!(
+        cached.metrics.sim_cycles < uncached.metrics.sim_cycles,
+        "caching must strictly reduce simulated cycles ({} vs {})",
+        cached.metrics.sim_cycles,
+        uncached.metrics.sim_cycles
+    );
+    assert!(cached.metrics.act_strip_hits > 0, "the strip cache was never hit");
+    assert!(cached.metrics.act_rows_reused > 0, "no KV-style row reuse happened");
+    assert_eq!(
+        uncached.metrics.act_strip_hits + uncached.metrics.act_strip_misses,
+        0,
+        "the baseline must not touch the strip cache"
+    );
+    assert!(
+        cached.strip_cache_len <= cached.strip_cache_capacity,
+        "strip LRU exceeded its capacity bound"
+    );
+    AbSummary {
+        cycles_ratio: uncached.metrics.sim_cycles as f64 / cached.metrics.sim_cycles as f64,
+        rows_ratio: uncached.metrics.rows_streamed as f64 / cached.metrics.rows_streamed as f64,
+        strip_hit_rate: cached.metrics.act_strip_hit_rate(),
+        bytes_saved: cached.metrics.act_bytes_saved,
     }
 }
 

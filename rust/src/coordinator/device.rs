@@ -37,6 +37,10 @@ pub struct Job {
     pub req: Arc<ReqState>,
     pub w_tile: Arc<Mat<i8>>,
     pub x_strip: Arc<Mat<i8>>,
+    /// Row offset of this job's strip in the request's padded
+    /// accumulator: 0 for the batched fan-out's full-height column
+    /// strips, `m1 * tile` for the serving fan-out's M1 row blocks.
+    pub r0: usize,
     pub c0: usize,
     /// Content identity of `w_tile` ([`Mat::content_hash`]); the router
     /// uses it for affinity, the device for resident/cached checks.
@@ -118,6 +122,14 @@ impl Device {
         self.cache.iter().map(|(id, _, _)| *id).collect()
     }
 
+    /// Whether `tile_id` is in the prepared-weight LRU — the
+    /// scheduler's *warm* test for pop/steal preference (id-only: a
+    /// forged collision degrades to an ordinary cache miss on execute,
+    /// never to wrong numerics).
+    pub fn has_prepared(&self, tile_id: u64) -> bool {
+        self.cache.iter().any(|(id, _, _)| *id == tile_id)
+    }
+
     /// Execute one job; returns true if it completed its request.
     pub fn execute(&mut self, job: Job) -> bool {
         use std::sync::atomic::Ordering::Relaxed;
@@ -159,7 +171,7 @@ impl Device {
         self.metrics.mac_ops.fetch_add(run.stats.events.mac_ops, Relaxed);
         self.metrics.tenant_served(job.tenant, wait);
         self.metrics.device_job(self.index);
-        let last = job.req.complete_job(job.c0, &run.outputs, &run.stats);
+        let last = job.req.complete_job(job.r0, job.c0, &run.outputs, &run.stats);
         if last {
             let completed = job.req.finish();
             self.metrics.requests_completed.fetch_add(completed, Relaxed);
@@ -215,6 +227,7 @@ mod tests {
                 req,
                 w_tile,
                 x_strip: Arc::new(x.clone()),
+                r0: 0,
                 c0: 0,
                 tile_id,
                 tenant: DEFAULT_TENANT,

@@ -57,6 +57,22 @@ pub struct Metrics {
     /// Jobs a device stole from another device's queue (affinity broken
     /// to avoid starvation).
     pub steals: AtomicU64,
+    /// Steals whose weight tile the thief already held resident or
+    /// prepared-cached — placement-aware stealing makes these cheaper
+    /// than a cold install (the reload, or at least the permutation, is
+    /// skipped).
+    pub steals_warm: AtomicU64,
+    /// Activation strips served `Arc`-shared from the serving layer's
+    /// strip cache (a re-streamed prefix block was not re-materialized).
+    pub act_strip_hits: AtomicU64,
+    /// Activation strips the cache had to build and insert.
+    pub act_strip_misses: AtomicU64,
+    /// Bytes of strip construction avoided by strip-cache hits.
+    pub act_bytes_saved: AtomicU64,
+    /// Activation rows whose per-layer stage outputs were reused from
+    /// session state instead of re-streamed through the arrays — the
+    /// KV-style decode reuse, summed over layers.
+    pub act_rows_reused: AtomicU64,
     /// Per-tenant service breakdown (DRR fairness observability).
     tenants: Mutex<HashMap<TenantId, TenantCounters>>,
     /// Jobs executed per worker device (placement skew observability;
@@ -81,6 +97,11 @@ pub struct MetricsSnapshot {
     pub cache_hits: u64,
     pub cache_misses: u64,
     pub steals: u64,
+    pub steals_warm: u64,
+    pub act_strip_hits: u64,
+    pub act_strip_misses: u64,
+    pub act_bytes_saved: u64,
+    pub act_rows_reused: u64,
 }
 
 /// Point-in-time copy of one tenant's counters.
@@ -125,6 +146,11 @@ impl Metrics {
             cache_hits: self.cache_hits.load(Ordering::Relaxed),
             cache_misses: self.cache_misses.load(Ordering::Relaxed),
             steals: self.steals.load(Ordering::Relaxed),
+            steals_warm: self.steals_warm.load(Ordering::Relaxed),
+            act_strip_hits: self.act_strip_hits.load(Ordering::Relaxed),
+            act_strip_misses: self.act_strip_misses.load(Ordering::Relaxed),
+            act_bytes_saved: self.act_bytes_saved.load(Ordering::Relaxed),
+            act_rows_reused: self.act_rows_reused.load(Ordering::Relaxed),
         }
     }
 
@@ -196,6 +222,17 @@ impl MetricsSnapshot {
             self.weight_loads_skipped as f64 / self.jobs_executed as f64
         }
     }
+
+    /// Fraction of activation-strip lookups served from the strip cache
+    /// (0.0 when the serving layer made no lookups).
+    pub fn act_strip_hit_rate(&self) -> f64 {
+        let total = self.act_strip_hits + self.act_strip_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.act_strip_hits as f64 / total as f64
+        }
+    }
 }
 
 #[cfg(test)]
@@ -217,6 +254,24 @@ mod tests {
         assert_eq!(s.weight_loads_skipped, 2);
         assert_eq!(s.steals, 1);
         assert!((s.weight_reuse_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn serving_counters_snapshot_and_hit_rate() {
+        let m = Metrics::default();
+        m.act_strip_hits.fetch_add(3, Ordering::Relaxed);
+        m.act_strip_misses.fetch_add(1, Ordering::Relaxed);
+        m.act_bytes_saved.fetch_add(512, Ordering::Relaxed);
+        m.act_rows_reused.fetch_add(7, Ordering::Relaxed);
+        m.steals_warm.fetch_add(2, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.act_strip_hits, 3);
+        assert_eq!(s.act_strip_misses, 1);
+        assert_eq!(s.act_bytes_saved, 512);
+        assert_eq!(s.act_rows_reused, 7);
+        assert_eq!(s.steals_warm, 2);
+        assert!((s.act_strip_hit_rate() - 0.75).abs() < 1e-12);
+        assert_eq!(MetricsSnapshot::default().act_strip_hit_rate(), 0.0);
     }
 
     #[test]

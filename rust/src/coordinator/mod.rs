@@ -27,7 +27,22 @@
 //! repeated layers and batches hit the device that already holds their
 //! tile stationary, batched submission loads each tile at most once per
 //! batch, and multi-layer models spread across the pool by measured
-//! load instead of hash accident.
+//! load instead of hash accident. Work stealing is placement-aware:
+//! the thief's warm predicate (tile resident or prepared-cached) picks
+//! a job it can run without a reload over the longest-lane-tail
+//! fallback (`steals_warm` counts the wins).
+//!
+//! Above the router sits the [`serving`](crate::serving) layer — the
+//! autoregressive serving subsystem. It lowers transformer layers into
+//! Table-III GEMM stage graphs, executes them session by session under
+//! tenant ids, and feeds this module through
+//! [`Coordinator::submit_strips_as`]: pre-built, `Arc`-shared M1
+//! row-block strips (deduplicated by the activation-strip cache, keyed
+//! by content hash) fan out as (row-block × weight-tile) jobs with row
+//! offsets, so a decode step that reuses its prefix submits — and
+//! pays for — only its new rows. Serving observability lives in the
+//! same [`Metrics`]: `act_strip_hits` / `act_strip_misses` /
+//! `act_bytes_saved` / `act_rows_reused`.
 
 pub mod device;
 pub mod metrics;
@@ -39,6 +54,8 @@ pub mod state;
 pub use device::{Device, DeviceConfig, Job};
 pub use metrics::{Metrics, MetricsSnapshot, TenantSnapshot};
 pub use placement::{PlacementMap, PlacementPolicy, PlacementSnapshot};
-pub use queue::{Pop, ShardedQueue, TenantId, DEFAULT_TENANT, MAX_FRONT_SKIPS};
+pub use queue::{
+    Pop, ShardedQueue, TenantId, DEFAULT_TENANT, MAX_FRONT_SKIPS, STEAL_SCAN_WINDOW,
+};
 pub use router::{Coordinator, CoordinatorConfig, RequestHandle};
 pub use state::{MatmulResponse, ReqState, SubRequest};

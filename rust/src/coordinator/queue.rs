@@ -19,11 +19,18 @@
 //!    forces the lane's front job through after [`MAX_FRONT_SKIPS`]
 //!    deferrals, so preference can reorder but never starve; FIFO
 //!    otherwise.
-//! 3. **Stealing** — an idle worker takes from the *back* of another
-//!    shard's longest lane, and only when that shard has at least two
-//!    queued jobs: the last job is left for its affinity owner, so
-//!    stealing absorbs backlog without thrashing a lightly-loaded
-//!    device's stationary tile.
+//! 3. **Stealing, placement-aware** — an idle worker steals from
+//!    another shard only when that shard has at least two queued jobs
+//!    (the last job is left for its affinity owner, so stealing absorbs
+//!    backlog without thrashing a lightly-loaded device's stationary
+//!    tile). The thief's `prefer` predicate is consulted first: a job
+//!    whose weight tile the thief already holds resident or
+//!    prepared-cached is taken (searched from the back of each lane,
+//!    at most [`STEAL_SCAN_WINDOW`] jobs deep, so deep backlogs never
+//!    stretch the victim's lock hold time) in preference to the plain
+//!    back-of-the-longest-lane fallback, making the steal *warm* — it
+//!    skips the reload, or at least the host-side permutation, that a
+//!    cold steal would pay.
 //!
 //! Pushes block while the target shard is full (capacity counts jobs
 //! across all of the shard's lanes — backpressure, never drops),
@@ -50,6 +57,13 @@ pub const MAX_FRONT_SKIPS: u32 = 32;
 /// pass), so a quantum of 1 gives per-job round-robin between
 /// backlogged tenants — the tightest fairness bound.
 pub const DRR_QUANTUM: u32 = 1;
+
+/// How many jobs from the back of each victim lane a thief inspects
+/// for a warm match before falling back to the longest-lane tail.
+/// Bounds the steal path's hold time on the victim's shard lock: a
+/// deep backlog is exactly when that lock is hottest, so the warm
+/// search must not scan it end to end.
+pub const STEAL_SCAN_WINDOW: usize = 8;
 
 /// How a job left the queue (workers count steals).
 pub enum Pop<T> {
@@ -170,8 +184,11 @@ impl<T> ShardedQueue<T> {
     }
 
     /// Pop for worker `me`. `prefer` marks jobs the worker can run
-    /// without a weight reload; such a job is taken out of order from
-    /// the lane DRR selects (bounded by [`MAX_FRONT_SKIPS`] per lane).
+    /// warm (tile resident or prepared-cached — no reload, or at least
+    /// no re-permutation); such a job is taken out of order from the
+    /// lane DRR selects (bounded by [`MAX_FRONT_SKIPS`] per lane), and
+    /// when the worker has to steal, a preferred job in the victim's
+    /// backlog is taken over the longest-lane-tail fallback.
     /// Blocks until work arrives; returns `None` only after `close()`
     /// with nothing left this worker may take.
     pub fn pop(&self, me: usize, prefer: impl Fn(&T) -> bool) -> Option<Pop<T>> {
@@ -228,7 +245,7 @@ impl<T> ShardedQueue<T> {
         if self.steal {
             for k in 1..self.shards.len() {
                 let victim = (me + k) % self.shards.len();
-                if let Some(item) = self.steal_from(victim) {
+                if let Some(item) = self.steal_from(victim, prefer) {
                     return Some(Pop::Stolen(item));
                 }
             }
@@ -286,14 +303,31 @@ impl<T> ShardedQueue<T> {
         unreachable!("len > 0 but no lane had a job");
     }
 
-    /// Steal from the back of the victim's longest lane (the tenant
-    /// with the deepest backlog benefits most), leaving the shard's
-    /// last queued job for its affinity owner.
-    fn steal_from(&self, victim: usize) -> Option<T> {
+    /// Steal from `victim`, leaving the shard's last queued job for its
+    /// affinity owner. Placement-aware: a job matching the thief's
+    /// `prefer` predicate (its tile is resident or prepared-cached on
+    /// the thief — a *warm* steal that skips the reload) is taken
+    /// first, searched from the back of each lane — at most
+    /// [`STEAL_SCAN_WINDOW`] jobs deep, so the victim's lock is never
+    /// held for a full-backlog scan — so the affinity owner's next
+    /// jobs are disturbed least; otherwise the back of the longest
+    /// lane (the tenant with the deepest backlog benefits most).
+    fn steal_from(&self, victim: usize, prefer: &impl Fn(&T) -> bool) -> Option<T> {
         let shard = &self.shards[victim];
         let mut inner = shard.inner.lock().unwrap();
         if inner.len < 2 {
             return None;
+        }
+        let warm = inner.lanes.iter().enumerate().find_map(|(li, l)| {
+            let skip = l.queue.len().saturating_sub(STEAL_SCAN_WINDOW);
+            l.queue.iter().skip(skip).rposition(prefer).map(|pos| (li, skip + pos))
+        });
+        if let Some((li, pos)) = warm {
+            let item = inner.lanes[li].queue.remove(pos);
+            debug_assert!(item.is_some(), "rposition must index a job");
+            inner.len -= 1;
+            shard.not_full.notify_one();
+            return item;
         }
         let li = inner
             .lanes
@@ -440,6 +474,53 @@ mod tests {
         // One job left: reserved for the affinity owner.
         assert!(q.pop(1, no_pref).is_none());
         assert!(matches!(q.pop(0, no_pref), Some(Pop::Local(1))));
+    }
+
+    #[test]
+    fn steals_prefer_warm_jobs_over_lane_tail() {
+        // Victim backlog [10, 7, 11]: a cold thief takes the tail (11),
+        // but a thief warm for 7 must take 7 even though it sits
+        // mid-lane — that steal skips the reload.
+        let q = ShardedQueue::new(2, 8, true);
+        for v in [10u32, 7, 11] {
+            q.push(0, T0, v);
+        }
+        q.close();
+        assert!(matches!(q.pop(1, |v| *v == 7), Some(Pop::Stolen(7))));
+        // Fallback unchanged: nothing preferred -> back of the lane.
+        assert!(matches!(q.pop(1, |_| false), Some(Pop::Stolen(11))));
+        // One job left: reserved for the affinity owner even if warm.
+        assert!(q.pop(1, |v| *v == 10).is_none());
+        assert!(matches!(q.pop(0, no_pref), Some(Pop::Local(10))));
+    }
+
+    #[test]
+    fn warm_search_is_bounded_to_the_lane_tail() {
+        // A warm job buried deeper than the scan window must NOT be
+        // dug out — the bound caps the victim-lock hold time — so the
+        // steal falls back to the lane tail.
+        let q = ShardedQueue::new(2, 64, true);
+        q.push(0, T0, 7u32); // warm, but at the very front
+        for v in 0..(STEAL_SCAN_WINDOW as u32 + 2) {
+            q.push(0, T0, 100 + v);
+        }
+        q.close();
+        let got = q.pop(1, |v| *v == 7).map(Pop::into_inner);
+        assert_eq!(got, Some(100 + STEAL_SCAN_WINDOW as u32 + 1), "tail fallback expected");
+    }
+
+    #[test]
+    fn warm_steal_searches_every_lane() {
+        // The preferred job lives in a short lane, not the longest one:
+        // preference must still find it before the longest-lane tail.
+        let q = ShardedQueue::new(2, 16, true);
+        q.push(0, 1, 10u32);
+        q.push(0, 1, 11);
+        q.push(0, 1, 12);
+        q.push(0, 2, 20u32); // warm, in the shorter lane
+        q.close();
+        assert!(matches!(q.pop(1, |v| *v == 20), Some(Pop::Stolen(20))));
+        assert!(matches!(q.pop(1, no_pref), Some(Pop::Stolen(12))));
     }
 
     #[test]

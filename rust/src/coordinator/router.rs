@@ -118,16 +118,23 @@ impl Coordinator {
                     .spawn(move || {
                         let mut dev = Device::new(dcfg, i, Arc::clone(&metrics));
                         loop {
-                            // Prefer queued jobs whose tile is already
-                            // stationary here (no reload), else the
-                            // DRR lane's FIFO, else steal backlog from
-                            // a busy device.
+                            // Prefer queued jobs this device can run
+                            // warm — tile stationary (no reload) or
+                            // prepared-cached (no re-permutation) —
+                            // else the DRR lane's FIFO, else steal
+                            // backlog from a busy device (again warm
+                            // first: placement-aware stealing).
                             let resident = dev.loaded_tile_id();
-                            let prefer = |j: &Job| Some(j.tile_id) == resident;
-                            let job = match pool.pop(i, prefer) {
+                            let job = match pool.pop(i, |j: &Job| {
+                                Some(j.tile_id) == resident || dev.has_prepared(j.tile_id)
+                            }) {
                                 Some(Pop::Local(j)) => j,
                                 Some(Pop::Stolen(j)) => {
                                     metrics.steals.fetch_add(1, Relaxed);
+                                    if Some(j.tile_id) == resident || dev.has_prepared(j.tile_id)
+                                    {
+                                        metrics.steals_warm.fetch_add(1, Relaxed);
+                                    }
                                     j
                                 }
                                 None => break, // closed and drained
@@ -258,6 +265,7 @@ impl Coordinator {
                     req: Arc::clone(&req),
                     w_tile,
                     x_strip: Arc::clone(&x_strip),
+                    r0: 0,
                     c0: ko * t,
                     tile_id,
                     tenant,
@@ -276,6 +284,101 @@ impl Coordinator {
             }
         }
         handles
+    }
+
+    /// Submit one matmul whose input rows arrive as pre-built M1
+    /// row-block strips — the serving layer's entry point, split out of
+    /// the batched path's monolithic stack-then-slice construction so
+    /// the activation-strip cache can hand back `Arc`-shared strips for
+    /// re-streamed prefixes without re-materializing them. Jobs are
+    /// (row-block × weight-tile) grained: each strip streams through
+    /// the array once per weight tile and folds into the accumulator at
+    /// its row offset, so a decode step that submits only its new rows
+    /// pays only for those rows.
+    ///
+    /// Contract (asserted): every strip is exactly `tile` rows tall and
+    /// `w.rows()` columns wide, and `strips.len() == rows.div_ceil(tile)`.
+    /// Rows past `rows` in the last strip are padding; output rows are
+    /// independent, so their values never reach the response — zero
+    /// keeps the streamed-row accounting honest.
+    pub fn submit_strips_as(
+        &self,
+        tenant: TenantId,
+        strips: Vec<Arc<Mat<i8>>>,
+        rows: usize,
+        w: &Mat<i8>,
+    ) -> RequestHandle {
+        use std::sync::atomic::Ordering::Relaxed;
+        let t = self.cfg.device.tile;
+        let n_dim = w.rows();
+        let k_dim = w.cols();
+        assert_eq!(strips.len(), rows.div_ceil(t), "strip count must cover the row range");
+        for s in &strips {
+            assert_eq!(s.rows(), t, "every strip is exactly one M1 tile tall");
+            assert_eq!(s.cols(), n_dim, "strip/contraction mismatch");
+        }
+        let (tn, tk) = (n_dim.div_ceil(t), k_dim.div_ceil(t));
+        let (tx, rx) = channel();
+        let id = self.next_id.fetch_add(1, Relaxed);
+        let subs = vec![SubRequest { id, row0: 0, rows, tx }];
+        self.metrics.requests_submitted.fetch_add(1, Relaxed);
+        self.metrics.tenant_submitted(tenant);
+
+        // Degenerate request (no rows, empty contraction, or empty
+        // output): answer directly, as the batched path does.
+        let jobs = strips.len() * tn * tk;
+        if rows == 0 || jobs == 0 {
+            let req = ReqState::new(0, k_dim, tk * t, 0, subs);
+            let completed = req.finish();
+            self.metrics.requests_completed.fetch_add(completed, Relaxed);
+            return RequestHandle { rx };
+        }
+        let req = Arc::new(ReqState::new(strips.len() * t, k_dim, tk * t, jobs, subs));
+
+        for kn in 0..tn {
+            // One weight tile per (kn, ko), shared by every row block.
+            let w_tiles: Vec<(Arc<Mat<i8>>, u64)> = (0..tk)
+                .map(|ko| {
+                    let wt = Arc::new(w.block(kn * t, ko * t, t, t));
+                    let tile_id = wt.content_hash();
+                    (wt, tile_id)
+                })
+                .collect();
+            for (m1, strip) in strips.iter().enumerate() {
+                // Single-contraction-tile strips pass through untouched
+                // (the common serving shape — this is where the cache's
+                // Arc sharing survives all the way to the device);
+                // wider strips are column-sliced per contraction block.
+                let x_piece = if tn == 1 && n_dim == t {
+                    Arc::clone(strip)
+                } else {
+                    Arc::new(strip.block(0, kn * t, t, t))
+                };
+                for (ko, (wt, tile_id)) in w_tiles.iter().enumerate() {
+                    let job = Job {
+                        req: Arc::clone(&req),
+                        w_tile: Arc::clone(wt),
+                        x_strip: Arc::clone(&x_piece),
+                        r0: m1 * t,
+                        c0: ko * t,
+                        tile_id: *tile_id,
+                        tenant,
+                        enqueued_at: Instant::now(),
+                    };
+                    let shard = self.placement.place(*tile_id, 1);
+                    if self.pool.push(shard, tenant, job) {
+                        self.metrics.backpressure_events.fetch_add(1, Relaxed);
+                    }
+                }
+            }
+        }
+        RequestHandle { rx }
+    }
+
+    /// Shared metrics handle for the in-crate serving layer (strip
+    /// cache and decode-reuse counters live next to the scheduler's).
+    pub(crate) fn metrics_arc(&self) -> Arc<Metrics> {
+        Arc::clone(&self.metrics)
     }
 
     /// Drain the queues, stop the workers, and return final metrics.
@@ -491,6 +594,46 @@ mod tests {
         }
         let m = c.shutdown();
         assert_eq!(m.requests_completed, 12);
+    }
+
+    fn strips_of(x: &Mat<i8>, t: usize) -> Vec<Arc<Mat<i8>>> {
+        (0..x.rows().div_ceil(t)).map(|m1| Arc::new(x.block(m1 * t, 0, t, x.cols()))).collect()
+    }
+
+    #[test]
+    fn strip_submission_matches_submit_and_reference() {
+        // The serving fan-out (row-block jobs with row offsets) must
+        // agree bit-exactly with the batched column-strip fan-out and
+        // the i32 oracle, including ragged shapes.
+        let c = Coordinator::new(small());
+        for (m, n, k, seed) in [(19usize, 20usize, 13usize, 8u64), (8, 8, 8, 20), (3, 30, 9, 40)] {
+            let x = random_i8(m, n, seed);
+            let w = random_i8(n, k, seed + 1);
+            let t = c.config().device.tile;
+            let via_strips =
+                c.submit_strips_as(DEFAULT_TENANT, strips_of(&x, t), x.rows(), &w).wait();
+            let via_submit = c.submit(x.clone(), w.clone()).wait();
+            assert_eq!(via_strips.out, x.widen().matmul(&w.widen()), "{m}x{n}x{k}");
+            assert_eq!(via_strips.out, via_submit.out, "{m}x{n}x{k}");
+        }
+        c.shutdown();
+    }
+
+    #[test]
+    fn strip_submission_handles_degenerate_shapes() {
+        let c = Coordinator::new(small());
+        // Zero rows: empty strip list, empty output.
+        let w = random_i8(16, 12, 3);
+        let resp = c.submit_strips_as(DEFAULT_TENANT, vec![], 0, &w).wait();
+        assert_eq!((resp.out.rows(), resp.out.cols()), (0, 12));
+        // Zero output columns.
+        let x = random_i8(4, 16, 4);
+        let t = c.config().device.tile;
+        let resp = c
+            .submit_strips_as(DEFAULT_TENANT, strips_of(&x, t), 4, &Mat::<i8>::zeros(16, 0))
+            .wait();
+        assert_eq!((resp.out.rows(), resp.out.cols()), (4, 0));
+        c.shutdown();
     }
 
     #[test]

@@ -53,24 +53,28 @@ impl ReqState {
         }
     }
 
-    /// Fold one job's partial result (an M-row column strip at column
-    /// offset `c0`) into the accumulator; returns true when this was the
-    /// last outstanding job.
+    /// Fold one job's partial result (a strip at row offset `r0`,
+    /// column offset `c0`) into the accumulator; returns true when this
+    /// was the last outstanding job. The batched fan-out submits
+    /// full-height column strips (`r0 == 0`, strip rows == accumulator
+    /// rows); the serving strip fan-out submits one M1 row block per
+    /// job, so a strip may cover any aligned row range.
     ///
-    /// Shape contract (asserted, not clamped): the accumulator spans the
-    /// *padded* row/column range, so every job strip must fit exactly —
-    /// a strip that does not is a routing/tiling bug upstream, and
-    /// silently dropping its overhang would corrupt results. The only
-    /// intentional padding is the accumulator's trailing columns
-    /// (`out_cols..padded_cols`), which [`finish`](Self::finish) trims
-    /// when slicing each sub-request's block.
-    pub fn complete_job(&self, c0: usize, strip: &Mat<i32>, stats: &RunStats) -> bool {
+    /// Shape contract (asserted, not clamped): every strip must fit
+    /// inside the *padded* accumulator on both axes — an overrunning
+    /// strip is a routing/tiling bug upstream, and silently dropping
+    /// its overhang would corrupt results. The only intentional padding
+    /// is the accumulator's trailing rows/columns, which
+    /// [`finish`](Self::finish) trims when slicing each sub-request's
+    /// block.
+    pub fn complete_job(&self, r0: usize, c0: usize, strip: &Mat<i32>, stats: &RunStats) -> bool {
         {
             let mut out = self.out.lock().unwrap();
-            assert_eq!(
+            assert!(
+                r0 + strip.rows() <= out.rows(),
+                "job strip (r0 {r0} + {} rows) overruns the padded accumulator ({} rows)",
                 strip.rows(),
-                out.rows(),
-                "job strip rows must equal the padded accumulator rows"
+                out.rows()
             );
             assert!(
                 c0 + strip.cols() <= out.cols(),
@@ -79,11 +83,11 @@ impl ReqState {
                 out.cols()
             );
             // Accumulate (psum semantics) — strips from different
-            // contraction blocks target the same columns.
+            // contraction blocks target the same rows/columns.
             for r in 0..strip.rows() {
                 for c in 0..strip.cols() {
-                    let v = out.get(r, c0 + c) + strip.get(r, c);
-                    out.set(r, c0 + c, v);
+                    let v = out.get(r0 + r, c0 + c) + strip.get(r, c);
+                    out.set(r0 + r, c0 + c, v);
                 }
             }
         }
@@ -121,8 +125,8 @@ mod tests {
         let st = ReqState::new(2, 2, 2, 2, vec![SubRequest { id: 7, row0: 0, rows: 2, tx }]);
         let strip = Mat::from_vec(2, 2, vec![1, 2, 3, 4]);
         let stats = RunStats { cycles: 5, ..Default::default() };
-        assert!(!st.complete_job(0, &strip, &stats));
-        assert!(st.complete_job(0, &strip, &stats));
+        assert!(!st.complete_job(0, 0, &strip, &stats));
+        assert!(st.complete_job(0, 0, &strip, &stats));
         st.finish();
         let resp = rx.try_recv().unwrap();
         assert_eq!(resp.id, 7);
@@ -145,7 +149,7 @@ mod tests {
             ],
         );
         let strip = Mat::from_vec(4, 2, vec![1, 2, 3, 4, 5, 6, 7, 8]);
-        assert!(st.complete_job(0, &strip, &RunStats::default()));
+        assert!(st.complete_job(0, 0, &strip, &RunStats::default()));
         st.finish();
         assert_eq!(rx1.try_recv().unwrap().out, Mat::from_vec(2, 2, vec![1, 2, 3, 4]));
         assert_eq!(rx2.try_recv().unwrap().out, Mat::from_vec(2, 2, vec![5, 6, 7, 8]));
@@ -156,20 +160,35 @@ mod tests {
         let (tx, rx) = channel();
         let st = ReqState::new(1, 4, 4, 1, vec![SubRequest { id: 0, row0: 0, rows: 1, tx }]);
         let strip = Mat::from_vec(1, 2, vec![9, 9]);
-        assert!(st.complete_job(2, &strip, &RunStats::default()));
+        assert!(st.complete_job(0, 2, &strip, &RunStats::default()));
         st.finish();
         assert_eq!(rx.try_recv().unwrap().out, Mat::from_vec(1, 4, vec![0, 0, 9, 9]));
     }
 
     #[test]
-    #[should_panic(expected = "strip rows must equal")]
-    fn short_strip_is_a_bug_not_a_silent_drop() {
-        // Regression: a mis-shaped strip used to be clamped away
+    fn row_offset_targets_block() {
+        // The serving strip fan-out: one M1 row block lands at its row
+        // offset; other rows stay untouched.
+        let (tx, rx) = channel();
+        let st = ReqState::new(4, 2, 2, 1, vec![SubRequest { id: 0, row0: 0, rows: 4, tx }]);
+        let strip = Mat::from_vec(2, 2, vec![5, 6, 7, 8]);
+        assert!(st.complete_job(2, 0, &strip, &RunStats::default()));
+        st.finish();
+        assert_eq!(
+            rx.try_recv().unwrap().out,
+            Mat::from_vec(4, 2, vec![0, 0, 0, 0, 5, 6, 7, 8])
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "overruns the padded accumulator (4 rows)")]
+    fn row_overrun_is_a_bug_not_a_silent_drop() {
+        // Regression: a mis-placed strip used to be clamped away
         // (masking routing/tiling bugs as dropped partial sums).
         let (tx, _rx) = channel();
         let st = ReqState::new(4, 2, 2, 1, vec![SubRequest { id: 0, row0: 0, rows: 4, tx }]);
-        let strip = Mat::from_vec(2, 2, vec![1, 2, 3, 4]); // 2 rows != 4
-        st.complete_job(0, &strip, &RunStats::default());
+        let strip = Mat::from_vec(2, 2, vec![1, 2, 3, 4]);
+        st.complete_job(3, 0, &strip, &RunStats::default()); // r0 3 + 2 > 4
     }
 
     #[test]
@@ -178,7 +197,7 @@ mod tests {
         let (tx, _rx) = channel();
         let st = ReqState::new(1, 2, 2, 1, vec![SubRequest { id: 0, row0: 0, rows: 1, tx }]);
         let strip = Mat::from_vec(1, 2, vec![1, 2]);
-        st.complete_job(1, &strip, &RunStats::default()); // c0 1 + 2 > 2
+        st.complete_job(0, 1, &strip, &RunStats::default()); // c0 1 + 2 > 2
     }
 
     #[test]
@@ -186,7 +205,7 @@ mod tests {
         let (tx, rx) = channel();
         drop(rx);
         let st = ReqState::new(1, 1, 1, 1, vec![SubRequest { id: 0, row0: 0, rows: 1, tx }]);
-        assert!(st.complete_job(0, &Mat::from_vec(1, 1, vec![1]), &RunStats::default()));
+        assert!(st.complete_job(0, 0, &Mat::from_vec(1, 1, vec![1]), &RunStats::default()));
         st.finish(); // must not panic
     }
 }

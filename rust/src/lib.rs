@@ -35,6 +35,16 @@
 //!   Observability: `weight_loads_skipped`, `weight_load_cycles_saved`,
 //!   `cache_hits` / `cache_misses`, `steals`, per-tenant served/wait
 //!   counters, per-device job counts, and placement stats.
+//! * [`serving`] — the autoregressive serving subsystem: a
+//!   session-scoped model-graph executor that lowers transformer layers
+//!   into their Table-III GEMM stages (explicit dependencies, QKV
+//!   submitted as one concurrent wave) and runs them through the
+//!   coordinator step by step, with **KV-style activation caching**:
+//!   causal attention makes per-row stage outputs step-invariant, so a
+//!   decode step streams only its new rows, and a sharded LRU of
+//!   content-hashed activation strips hands re-streamed prefix blocks
+//!   back `Arc`-shared. Per-step reports cover rows reused, strip-cache
+//!   hits, simulated cycles, wall latency, and energy.
 //! * `runtime` — PJRT execution of the AOT-compiled JAX/Pallas
 //!   artifacts (`artifacts/*.hlo.txt`); Python is never on this path.
 //!   Compiled only with the non-default `pjrt` cargo feature (the `xla`
@@ -53,6 +63,7 @@ pub mod matrix;
 pub mod power;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
+pub mod serving;
 pub mod sim;
 pub mod tiling;
 pub mod workloads;

@@ -100,6 +100,16 @@ impl<T: Copy + Default> Mat<T> {
             }
         }
     }
+
+    /// Stack `below` under `self` (column counts must match). Used by
+    /// the serving layer to grow activations one decode row at a time.
+    pub fn vconcat(&self, below: &Mat<T>) -> Mat<T> {
+        assert_eq!(self.cols, below.cols, "vconcat column mismatch");
+        let mut out = Mat::zeros(self.rows + below.rows, self.cols);
+        out.set_block(0, 0, self);
+        out.set_block(self.rows, 0, below);
+        out
+    }
 }
 
 impl Mat<i32> {
@@ -155,6 +165,35 @@ impl Mat<i8> {
             h = (h ^ (v as u8) as u64).wrapping_mul(PRIME);
         }
         h
+    }
+
+    /// Content hash of the `h x cols` row block starting at row `r0`,
+    /// rows past the end zero-padded — bit-identical to
+    /// `self.block(r0, 0, h, self.cols()).content_hash()` without
+    /// materializing the block. The activation-strip cache keys lookups
+    /// by this, so a cache hit never allocates the strip it deduplicates.
+    pub fn row_block_hash(&self, r0: usize, h: usize) -> u64 {
+        const OFFSET: u64 = 0xcbf29ce484222325;
+        const PRIME: u64 = 0x100000001b3;
+        let mut acc = OFFSET;
+        for v in [h as u64, self.cols as u64] {
+            for b in v.to_le_bytes() {
+                acc = (acc ^ b as u64).wrapping_mul(PRIME);
+            }
+        }
+        for r in 0..h {
+            if r0 + r < self.rows {
+                for &v in self.row(r0 + r) {
+                    acc = (acc ^ (v as u8) as u64).wrapping_mul(PRIME);
+                }
+            } else {
+                // Zero-padded row: hash `cols` zero bytes.
+                for _ in 0..self.cols {
+                    acc = acc.wrapping_mul(PRIME);
+                }
+            }
+        }
+        acc
     }
 }
 
@@ -246,6 +285,29 @@ mod tests {
         let flat = Mat::from_vec(1, 4, vec![1i8, 2, 3, 4]);
         let tall = Mat::from_vec(4, 1, vec![1i8, 2, 3, 4]);
         assert_ne!(flat.content_hash(), tall.content_hash());
+    }
+
+    #[test]
+    fn vconcat_stacks_rows() {
+        let a = Mat::from_vec(1, 2, vec![1i8, 2]);
+        let b = Mat::from_vec(2, 2, vec![3i8, 4, 5, 6]);
+        assert_eq!(a.vconcat(&b), Mat::from_vec(3, 2, vec![1, 2, 3, 4, 5, 6]));
+        let empty = Mat::<i8>::zeros(0, 2);
+        assert_eq!(empty.vconcat(&a), a);
+    }
+
+    #[test]
+    fn row_block_hash_matches_materialized_block() {
+        let m = random_i8(13, 5, 11);
+        for (r0, h) in [(0usize, 8usize), (8, 8), (0, 13), (5, 16), (13, 4)] {
+            assert_eq!(
+                m.row_block_hash(r0, h),
+                m.block(r0, 0, h, m.cols()).content_hash(),
+                "r0={r0} h={h}"
+            );
+        }
+        // Different blocks hash differently.
+        assert_ne!(m.row_block_hash(0, 8), m.row_block_hash(5, 8));
     }
 
     #[test]

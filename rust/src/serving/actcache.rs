@@ -1,0 +1,206 @@
+//! The activation-strip cache: a sharded, capacity-bounded LRU of
+//! padded M1 row-block strips, keyed by [`Mat::content_hash`] /
+//! [`Mat::row_block_hash`] (identical values for identical content).
+//!
+//! Decode re-streams overlapping prefixes: step `s` presents rows
+//! `0..s` of an activation whose rows `0..s-1` were presented at step
+//! `s-1`, sessions sharing a prompt prefix present identical leading
+//! blocks, and the Q/K/V projections of one layer pass slice the same
+//! input three times. The cache collapses all of that: a hit returns
+//! the *same* `Arc` every previous caller got — no re-slice, no
+//! allocation, no copy — and counts the avoided bytes in
+//! `act_bytes_saved`.
+//!
+//! Collision posture: keys are 64-bit FNV-1a over shape + bytes, the
+//! same identity the scheduler routes weight tiles by. Debug builds
+//! verify content equality on every hit (so the test suite — which
+//! runs unoptimized — would catch a 64-bit collision), while the
+//! release hot path trusts the hash: verifying there would cost the
+//! exact slice the cache exists to avoid.
+
+use std::collections::VecDeque;
+use std::sync::atomic::Ordering::Relaxed;
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::Metrics;
+use crate::matrix::Mat;
+
+/// One cached strip.
+struct StripEntry {
+    key: u64,
+    strip: Arc<Mat<i8>>,
+}
+
+/// Sharded LRU of `Arc`-shared activation strips. Shards are selected
+/// by key, so concurrent sessions contend only when they touch the
+/// same hash neighborhood; each shard holds at most
+/// `capacity / shards` (rounded up, min 1) strips, most recent first.
+pub struct ActStripCache {
+    shards: Vec<Mutex<VecDeque<StripEntry>>>,
+    per_shard: usize,
+    metrics: Arc<Metrics>,
+}
+
+impl ActStripCache {
+    /// `capacity` is the total strip budget across `shards` shards
+    /// (both clamped to at least 1).
+    pub fn new(shards: usize, capacity: usize, metrics: Arc<Metrics>) -> Self {
+        let shards = shards.max(1);
+        let per_shard = capacity.div_ceil(shards).max(1);
+        Self {
+            shards: (0..shards).map(|_| Mutex::new(VecDeque::new())).collect(),
+            per_shard,
+            metrics,
+        }
+    }
+
+    /// Total strip capacity (the LRU bound tests assert against).
+    pub fn capacity(&self) -> usize {
+        self.shards.len() * self.per_shard
+    }
+
+    /// Strips currently cached, summed across shards.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Look up the strip for `key`, building and inserting on miss. A
+    /// hit returns the cached `Arc` — pointer-identical to what every
+    /// previous caller got — and never invokes `build` in release
+    /// builds (debug builds build-and-compare to surface collisions).
+    pub fn get_or_build(&self, key: u64, build: impl FnOnce() -> Mat<i8>) -> Arc<Mat<i8>> {
+        let shard_idx = (key % self.shards.len() as u64) as usize;
+        let mut shard = self.shards[shard_idx].lock().unwrap();
+        if let Some(pos) = shard.iter().position(|e| e.key == key) {
+            let entry = shard.remove(pos).unwrap();
+            #[cfg(debug_assertions)]
+            {
+                let fresh = build();
+                assert_eq!(
+                    *entry.strip, fresh,
+                    "activation-strip cache hash collision on key {key:#x}"
+                );
+            }
+            let strip = Arc::clone(&entry.strip);
+            shard.push_front(entry);
+            self.metrics.act_strip_hits.fetch_add(1, Relaxed);
+            self.metrics
+                .act_bytes_saved
+                .fetch_add((strip.rows() * strip.cols()) as u64, Relaxed);
+            return strip;
+        }
+        self.metrics.act_strip_misses.fetch_add(1, Relaxed);
+        let strip = Arc::new(build());
+        shard.truncate(self.per_shard - 1);
+        shard.push_front(StripEntry { key, strip: Arc::clone(&strip) });
+        strip
+    }
+}
+
+/// Slice `x` into `tile`-row M1 strips (rows past the end zero-padded),
+/// through `cache` when given: re-streamed blocks come back
+/// `Arc`-shared without re-materializing. The result feeds
+/// [`Coordinator::submit_strips_as`].
+///
+/// [`Coordinator::submit_strips_as`]: crate::coordinator::Coordinator::submit_strips_as
+pub fn build_strips(x: &Mat<i8>, tile: usize, cache: Option<&ActStripCache>) -> Vec<Arc<Mat<i8>>> {
+    (0..x.rows().div_ceil(tile))
+        .map(|m1| {
+            let r0 = m1 * tile;
+            match cache {
+                Some(c) => c.get_or_build(x.row_block_hash(r0, tile), || {
+                    x.block(r0, 0, tile, x.cols())
+                }),
+                None => Arc::new(x.block(r0, 0, tile, x.cols())),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::random_i8;
+
+    fn cache(shards: usize, capacity: usize) -> (ActStripCache, Arc<Metrics>) {
+        let m = Arc::new(Metrics::default());
+        (ActStripCache::new(shards, capacity, Arc::clone(&m)), m)
+    }
+
+    #[test]
+    fn hit_returns_the_same_arc_and_counts_bytes() {
+        let (c, m) = cache(2, 8);
+        let x = random_i8(8, 4, 1);
+        let a = c.get_or_build(x.content_hash(), || x.clone());
+        let b = c.get_or_build(x.content_hash(), || x.clone());
+        assert!(Arc::ptr_eq(&a, &b), "hit must be pointer-shared, not a copy");
+        let s = m.snapshot();
+        assert_eq!((s.act_strip_hits, s.act_strip_misses), (1, 1));
+        assert_eq!(s.act_bytes_saved, 8 * 4);
+    }
+
+    #[test]
+    fn prefix_extension_hits_the_unchanged_block() {
+        // The decode shape: one more row arrives; the full leading
+        // block is untouched and must come back as the same allocation,
+        // while the tail block (whose padding now holds the new row)
+        // re-materializes.
+        let (c, _m) = cache(2, 8);
+        let x1 = random_i8(12, 4, 9);
+        let s1 = build_strips(&x1, 8, Some(&c));
+        let x2 = x1.vconcat(&random_i8(1, 4, 10));
+        let s2 = build_strips(&x2, 8, Some(&c));
+        assert_eq!((s1.len(), s2.len()), (2, 2));
+        assert!(Arc::ptr_eq(&s1[0], &s2[0]), "prefix block must be the same Arc");
+        assert!(!Arc::ptr_eq(&s1[1], &s2[1]), "extended tail block must rebuild");
+        // Contents are the zero-padded blocks either way.
+        assert_eq!(*s2[1], x2.block(8, 0, 8, 4));
+    }
+
+    #[test]
+    fn capacity_bounds_hold_under_eviction() {
+        let (c, m) = cache(2, 4);
+        assert_eq!(c.capacity(), 4);
+        for seed in 0..20u64 {
+            let x = random_i8(8, 4, 100 + seed);
+            c.get_or_build(x.content_hash(), || x.clone());
+            assert!(c.len() <= c.capacity(), "LRU exceeded its bound at seed {seed}");
+        }
+        assert_eq!(m.snapshot().act_strip_misses, 20);
+    }
+
+    #[test]
+    fn lru_keeps_recent_entries_per_shard() {
+        // Single shard, capacity 2: A, B, touch A, insert C -> B (least
+        // recently used) evicted, A still hits.
+        let (c, m) = cache(1, 2);
+        let a = random_i8(8, 4, 1);
+        let b = random_i8(8, 4, 2);
+        let d = random_i8(8, 4, 3);
+        c.get_or_build(a.content_hash(), || a.clone());
+        c.get_or_build(b.content_hash(), || b.clone());
+        c.get_or_build(a.content_hash(), || a.clone()); // A to front
+        c.get_or_build(d.content_hash(), || d.clone()); // evicts B
+        c.get_or_build(a.content_hash(), || a.clone()); // hit
+        c.get_or_build(b.content_hash(), || b.clone()); // miss: was evicted
+        let s = m.snapshot();
+        assert_eq!(s.act_strip_hits, 2);
+        assert_eq!(s.act_strip_misses, 4);
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn build_strips_without_cache_pads_and_slices() {
+        let x = random_i8(11, 3, 5);
+        let strips = build_strips(&x, 4, None);
+        assert_eq!(strips.len(), 3);
+        for (m1, s) in strips.iter().enumerate() {
+            assert_eq!((s.rows(), s.cols()), (4, 3));
+            assert_eq!(**s, x.block(m1 * 4, 0, 4, 3));
+        }
+    }
+}

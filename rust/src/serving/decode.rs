@@ -1,0 +1,254 @@
+//! The decode-loop driver: prefill + N autoregressive steps per
+//! session through the [`ServingEngine`], with per-step reports of
+//! rows processed vs reused, strip-cache hits, simulated cycles, wall
+//! latency, and energy.
+//!
+//! Each step the engine runs every model layer over the session's
+//! pending rows (the prompt at prefill, the single fed-back row
+//! afterwards), then appends the newest output row to the activation —
+//! true autoregression: the generated row is the next step's input.
+//! With session reuse on, a step submits only its pending rows and the
+//! prefix comes from session state; with it off, the step resubmits
+//! the whole activation (the A/B baseline the benches compare
+//! against).
+
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{Coordinator, CoordinatorConfig, MetricsSnapshot, TenantId};
+use crate::matrix::Mat;
+use crate::power::energy;
+
+use super::actcache::ActStripCache;
+use super::graph::{run_layer, LayerCtx, LayerInput, ServeModel};
+use super::session::{LayerState, Session};
+
+/// What one prefill/decode step cost and reused.
+#[derive(Debug, Clone, Copy)]
+pub struct StepReport {
+    pub session: u64,
+    /// Activation rows streamed through the arrays this step (per
+    /// layer; the pending rows).
+    pub rows_processed: usize,
+    /// Total activation rows after the step (prefix + generated).
+    pub total_rows: usize,
+    /// Prefix rows served from session state instead of re-streamed,
+    /// summed over layers.
+    pub rows_reused: u64,
+    /// Simulated array cycles summed over every stage GEMM.
+    pub sim_cycles: u64,
+    /// Wall-clock latency of the step (submission to last response).
+    pub wall: Duration,
+    /// Strip-cache hits/misses attributed to this step.
+    pub strip_hits: u64,
+    pub strip_misses: u64,
+    /// Paper-accounting energy of the step at 1 GHz:
+    /// `power_mw(arch, tile) * sim_cycles`.
+    pub energy_uj: f64,
+}
+
+/// The serving engine: one coordinator pool, one model, one optional
+/// activation-strip cache shared by every session.
+pub struct ServingEngine {
+    coord: Coordinator,
+    cache: Option<ActStripCache>,
+    model: ServeModel,
+    cfg: CoordinatorConfig,
+}
+
+impl ServingEngine {
+    /// `strip_cache_capacity` of 0 disables the strip cache (the
+    /// uncached A/B baseline); otherwise the cache is sharded one shard
+    /// per device.
+    pub fn new(cfg: CoordinatorConfig, model: ServeModel, strip_cache_capacity: usize) -> Self {
+        let coord = Coordinator::new(cfg);
+        let cache = (strip_cache_capacity > 0).then(|| {
+            ActStripCache::new(cfg.devices.max(1), strip_cache_capacity, coord.metrics_arc())
+        });
+        Self { coord, cache, model, cfg }
+    }
+
+    pub fn coordinator(&self) -> &Coordinator {
+        &self.coord
+    }
+
+    pub fn strip_cache(&self) -> Option<&ActStripCache> {
+        self.cache.as_ref()
+    }
+
+    pub fn model(&self) -> &ServeModel {
+        &self.model
+    }
+
+    /// Open a session against the engine's model. `reuse` should match
+    /// the engine's cache mode for the A/B comparisons (row reuse and
+    /// the strip cache are the two halves of "caching on").
+    pub fn open_session(&self, id: u64, tenant: TenantId, prompt: Mat<i8>, reuse: bool) -> Session {
+        Session::new(id, tenant, prompt, &self.model.dims, self.model.layers.len(), reuse)
+    }
+
+    /// Prefill: run the whole prompt through every layer and append the
+    /// first generated row.
+    pub fn prefill(&self, s: &mut Session) -> StepReport {
+        assert_eq!(s.done_rows, 0, "prefill runs once, before any decode step");
+        self.advance(s)
+    }
+
+    /// One autoregressive step: process the pending (fed-back) row —
+    /// or, without reuse, recompute everything — and append the next
+    /// generated row.
+    pub fn decode_step(&self, s: &mut Session) -> StepReport {
+        assert!(s.done_rows > 0, "prefill the session before decoding");
+        self.advance(s)
+    }
+
+    fn advance(&self, s: &mut Session) -> StepReport {
+        let before = self.coord.metrics();
+        let t0 = Instant::now();
+        let n = s.acts.rows();
+        let d_model = self.model.dims.d_model;
+        // With reuse, only the pending rows stream; without, everything
+        // recomputes (and the layer state is rewritten wholesale, which
+        // keeps the final-state A/B comparison honest).
+        let row0 = if s.reuse { s.done_rows } else { 0 };
+        let mut x = s.acts.block(row0, 0, n - row0, d_model);
+        let mut cycles = 0u64;
+        let ctx = LayerCtx { coord: &self.coord, cache: self.cache.as_ref(), tenant: s.tenant };
+        for (l, weights) in self.model.layers.iter().enumerate() {
+            let run = {
+                let state = &s.layers[l];
+                let (prior_k, prior_v) =
+                    if row0 > 0 { (Some(&state.k), Some(&state.v)) } else { (None, None) };
+                run_layer(&ctx, weights, LayerInput { x: &x, prior_k, prior_v, row0 })
+            };
+            cycles += run.sim_cycles;
+            if row0 > 0 {
+                let state = &mut s.layers[l];
+                state.k = state.k.vconcat(&run.k_rows);
+                state.v = state.v.vconcat(&run.v_rows);
+                state.y = state.y.vconcat(&run.y_rows);
+            } else {
+                s.layers[l] = LayerState { k: run.k_rows, v: run.v_rows, y: run.y_rows.clone() };
+            }
+            x = run.y_rows;
+        }
+        let reused = (row0 * self.model.layers.len()) as u64;
+        if reused > 0 {
+            use std::sync::atomic::Ordering::Relaxed;
+            self.coord.metrics_arc().act_rows_reused.fetch_add(reused, Relaxed);
+        }
+        s.done_rows = n;
+        // Feed the newest generated row back as the next input token.
+        let y_new = x.block(x.rows() - 1, 0, 1, d_model);
+        s.acts = s.acts.vconcat(&y_new);
+        let after = self.coord.metrics();
+        StepReport {
+            session: s.id,
+            rows_processed: n - row0,
+            total_rows: s.acts.rows(),
+            rows_reused: reused,
+            sim_cycles: cycles,
+            wall: t0.elapsed(),
+            strip_hits: after.act_strip_hits - before.act_strip_hits,
+            strip_misses: after.act_strip_misses - before.act_strip_misses,
+            energy_uj: energy::power_mw(self.cfg.device.arch, self.cfg.device.tile as u64)
+                * cycles as f64
+                / 1e6,
+        }
+    }
+
+    /// Drain and stop the device pool; final metrics.
+    pub fn shutdown(self) -> MetricsSnapshot {
+        self.coord.shutdown()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analytical::Arch;
+    use crate::coordinator::{DeviceConfig, PlacementPolicy};
+    use crate::matrix::random_i8;
+    use crate::serving::graph::LayerDims;
+
+    fn engine(cache: usize) -> ServingEngine {
+        let dims = LayerDims { d_model: 16, d_k: 8, d_ffn: 24 };
+        let model = ServeModel::synthetic(dims, 2, 900);
+        ServingEngine::new(
+            CoordinatorConfig {
+                devices: 2,
+                device: DeviceConfig { arch: Arch::Dip, tile: 8, mac_stages: 2, ..Default::default() },
+                queue_depth: 64,
+                work_stealing: true,
+                placement: PlacementPolicy::HeatAware,
+            },
+            model,
+            cache,
+        )
+    }
+
+    #[test]
+    fn prefill_then_steps_grow_the_session() {
+        let e = engine(128);
+        let mut s = e.open_session(1, 1, random_i8(10, 16, 5), true);
+        let p = e.prefill(&mut s);
+        assert_eq!(p.rows_processed, 10);
+        assert_eq!(p.total_rows, 11);
+        assert_eq!(p.rows_reused, 0);
+        assert!(p.sim_cycles > 0);
+        for step in 0..3 {
+            let r = e.decode_step(&mut s);
+            assert_eq!(r.rows_processed, 1, "step {step} streams only the fed-back row");
+            assert_eq!(r.total_rows, 12 + step);
+            assert_eq!(r.rows_reused, ((10 + step) * 2) as u64);
+        }
+        assert_eq!(s.acts.rows(), 14);
+        assert_eq!(s.layers[0].k.rows(), 13);
+        assert_eq!(s.layers[1].y.rows(), 13);
+        e.shutdown();
+    }
+
+    #[test]
+    fn qkv_strips_hit_within_a_single_pass() {
+        // Q, K and V stream the same input: with the strip cache on,
+        // K's and V's strips must come back shared after Q built them.
+        let e = engine(128);
+        let mut s = e.open_session(1, 1, random_i8(8, 16, 6), true);
+        let p = e.prefill(&mut s);
+        assert!(p.strip_hits > 0, "K/V must reuse Q's strips");
+        e.shutdown();
+    }
+
+    #[test]
+    fn cached_and_uncached_sessions_agree_bit_exactly() {
+        let ec = engine(128);
+        let eu = engine(0);
+        let prompt = random_i8(9, 16, 7);
+        let mut sc = ec.open_session(1, 1, prompt.clone(), true);
+        let mut su = eu.open_session(1, 1, prompt, false);
+        ec.prefill(&mut sc);
+        eu.prefill(&mut su);
+        for _ in 0..3 {
+            ec.decode_step(&mut sc);
+            eu.decode_step(&mut su);
+        }
+        assert_eq!(sc.acts, su.acts, "fed-back token rows diverged");
+        for (lc, lu) in sc.layers.iter().zip(&su.layers) {
+            assert_eq!(lc.k, lu.k);
+            assert_eq!(lc.v, lu.v);
+            assert_eq!(lc.y, lu.y);
+        }
+        let mc = ec.shutdown();
+        let mu = eu.shutdown();
+        assert!(mc.rows_streamed < mu.rows_streamed, "reuse must stream fewer rows");
+        assert!(mc.sim_cycles < mu.sim_cycles, "reuse must cost fewer cycles");
+        assert_eq!(mu.act_strip_hits, 0, "the baseline must not touch the cache");
+    }
+
+    #[test]
+    #[should_panic(expected = "prefill the session")]
+    fn decode_before_prefill_is_a_bug() {
+        let e = engine(0);
+        let mut s = e.open_session(0, 0, random_i8(4, 16, 1), false);
+        e.decode_step(&mut s);
+    }
+}

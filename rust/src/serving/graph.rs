@@ -1,0 +1,400 @@
+//! The model-graph executor: lowers one transformer layer into its
+//! Table-III GEMM stages with explicit dependencies and runs them
+//! through the coordinator.
+//!
+//! The graph is the paper's layer decomposition (§IV.C / Table III)
+//! made executable: Q/K/V projections (no mutual deps — submitted as
+//! one concurrent wave), attention scores `Q K^T` (deps Q, K),
+//! attention context `S V` (deps S, V), output projection, FFN up and
+//! FFN down (each depending on its predecessor). Stage outputs are
+//! requantized i32→i8 by [`narrow`] before feeding the next stage —
+//! a fixed, deterministic rescale, so cached and uncached executions
+//! stay bit-exact.
+//!
+//! Attention is **causal** ([`StageNode::causal`] masks scores where
+//! the key index exceeds the query's global row before requantization).
+//! Causality is what makes KV-style reuse exact: row `i` of every
+//! stage output depends only on rows `0..=i`, so a row computed at
+//! decode step `i` never changes at later steps and the session can
+//! serve it from state instead of re-streaming it.
+
+use std::collections::HashMap;
+
+use crate::coordinator::{Coordinator, RequestHandle, TenantId};
+use crate::matrix::{random_i8, Mat};
+use crate::workloads::dims::Stage;
+use crate::workloads::models::TransformerModel;
+
+use super::actcache::{build_strips, ActStripCache};
+
+/// Right shift applied when requantizing i32 psums back to i8
+/// activations between stages (wrapping truncation after the shift —
+/// a fixed-point rescale, deterministic by construction).
+pub const NARROW_SHIFT: u32 = 8;
+
+/// Requantize one i32 psum to an i8 activation.
+pub fn narrow(v: i32) -> i8 {
+    (v >> NARROW_SHIFT) as i8
+}
+
+/// Elementwise [`narrow`].
+pub fn narrow_mat(m: &Mat<i32>) -> Mat<i8> {
+    Mat::from_fn(m.rows(), m.cols(), |r, c| narrow(m.get(r, c)))
+}
+
+/// The GEMM stages of one transformer layer (single head-group form).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum StageId {
+    Q,
+    K,
+    V,
+    Scores,
+    Context,
+    OutProj,
+    FfnUp,
+    FfnDown,
+}
+
+/// Where a stage's streamed (X) operand comes from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Operand {
+    /// The layer input rows being processed this pass.
+    Input,
+    /// The narrowed output of another stage (this pass's rows).
+    Out(StageId),
+}
+
+/// Where a stage's stationary (W) operand comes from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WSource {
+    /// A static per-layer weight matrix.
+    Weight(WeightId),
+    /// The session-accumulated output of another stage, transposed —
+    /// attention scores contract Q against K^T.
+    StageT(StageId),
+    /// The session-accumulated output of another stage as-is —
+    /// attention context contracts S against V.
+    Stage(StageId),
+}
+
+/// The six static weight matrices of a layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WeightId {
+    Wq,
+    Wk,
+    Wv,
+    Wo,
+    W1,
+    W2,
+}
+
+/// One GEMM stage of the layer graph.
+#[derive(Debug, Clone, Copy)]
+pub struct StageNode {
+    pub id: StageId,
+    pub x: Operand,
+    pub w: WSource,
+    /// Zero scores whose key index exceeds the query's global row
+    /// before requantization (causal attention).
+    pub causal: bool,
+    /// The Table III stage this GEMM realizes (provenance/reporting).
+    pub table3: Stage,
+}
+
+impl StageNode {
+    /// Stages that must complete before this one (derived from the
+    /// operand sources — the dependency structure is the data flow).
+    pub fn deps(&self) -> Vec<StageId> {
+        let mut d = Vec::new();
+        if let Operand::Out(s) = self.x {
+            d.push(s);
+        }
+        match self.w {
+            WSource::Stage(s) | WSource::StageT(s) => d.push(s),
+            WSource::Weight(_) => {}
+        }
+        d
+    }
+}
+
+/// The layer graph, in an order that happens to be topological (the
+/// executor schedules by [`StageNode::deps`], not by position).
+pub fn layer_graph() -> [StageNode; 8] {
+    use crate::workloads::dims::Stage as T3;
+    use Operand::{Input, Out};
+    use StageId::*;
+    use WSource::Weight as W;
+    let node = |id, x, w, causal, table3| StageNode { id, x, w, causal, table3 };
+    [
+        node(Q, Input, W(WeightId::Wq), false, T3::QkvProjection),
+        node(K, Input, W(WeightId::Wk), false, T3::QkvProjection),
+        node(V, Input, W(WeightId::Wv), false, T3::QkvProjection),
+        node(Scores, Out(Q), WSource::StageT(K), true, T3::AttentionScores),
+        node(Context, Out(Scores), WSource::Stage(V), false, T3::AttentionOutput),
+        node(OutProj, Out(Context), W(WeightId::Wo), false, T3::OutputProjection),
+        node(FfnUp, Out(OutProj), W(WeightId::W1), false, T3::FfnW1),
+        node(FfnDown, Out(FfnUp), W(WeightId::W2), false, T3::FfnW2),
+    ]
+}
+
+/// Layer hyper-parameters of a served model (single head-group form:
+/// one `d_k`-wide attention path, the Table III per-head shape).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LayerDims {
+    pub d_model: usize,
+    pub d_k: usize,
+    pub d_ffn: usize,
+}
+
+impl LayerDims {
+    /// Scale a paper model's dims down by `div` (clamped to at least
+    /// `floor`) — the serving demos simulate real model *shapes* at
+    /// tractable sizes.
+    pub fn scaled_from(m: &TransformerModel, div: usize, floor: usize) -> Self {
+        let scale = |v: u64| ((v as usize) / div.max(1)).max(floor);
+        Self { d_model: scale(m.d_model), d_k: scale(m.d_k), d_ffn: scale(m.d_ffn) }
+    }
+}
+
+/// The six weight matrices of one layer.
+#[derive(Debug, Clone)]
+pub struct LayerWeights {
+    pub wq: Mat<i8>,
+    pub wk: Mat<i8>,
+    pub wv: Mat<i8>,
+    pub wo: Mat<i8>,
+    pub w1: Mat<i8>,
+    pub w2: Mat<i8>,
+}
+
+impl LayerWeights {
+    pub fn get(&self, id: WeightId) -> &Mat<i8> {
+        match id {
+            WeightId::Wq => &self.wq,
+            WeightId::Wk => &self.wk,
+            WeightId::Wv => &self.wv,
+            WeightId::Wo => &self.wo,
+            WeightId::W1 => &self.w1,
+            WeightId::W2 => &self.w2,
+        }
+    }
+}
+
+/// A served model: shared layer dims plus per-layer weights.
+#[derive(Debug, Clone)]
+pub struct ServeModel {
+    pub dims: LayerDims,
+    pub layers: Vec<LayerWeights>,
+}
+
+impl ServeModel {
+    /// Deterministic synthetic weights (seeded; one model is shared by
+    /// every session of a mix, so layer tiles stay stationary across
+    /// sessions and steps).
+    pub fn synthetic(dims: LayerDims, layers: usize, seed: u64) -> Self {
+        let layers = (0..layers)
+            .map(|l| {
+                let s = seed + 97 * l as u64;
+                LayerWeights {
+                    wq: random_i8(dims.d_model, dims.d_k, s),
+                    wk: random_i8(dims.d_model, dims.d_k, s + 1),
+                    wv: random_i8(dims.d_model, dims.d_k, s + 2),
+                    wo: random_i8(dims.d_k, dims.d_model, s + 3),
+                    w1: random_i8(dims.d_model, dims.d_ffn, s + 4),
+                    w2: random_i8(dims.d_ffn, dims.d_model, s + 5),
+                }
+            })
+            .collect();
+        Self { dims, layers }
+    }
+}
+
+/// Execution context shared by every stage submission of one pass.
+pub struct LayerCtx<'a> {
+    pub coord: &'a Coordinator,
+    pub cache: Option<&'a ActStripCache>,
+    pub tenant: TenantId,
+}
+
+/// The rows to process this pass, plus the session's accumulated K/V
+/// prefix (empty/`None` for a full recompute or prefill pass).
+pub struct LayerInput<'a> {
+    /// Input activation rows to run (all rows for a full pass, the new
+    /// rows for a cached decode step).
+    pub x: &'a Mat<i8>,
+    /// K rows already accumulated for this layer (narrowed), if any.
+    pub prior_k: Option<&'a Mat<i8>>,
+    /// V rows already accumulated for this layer (narrowed), if any.
+    pub prior_v: Option<&'a Mat<i8>>,
+    /// Global row index of `x`'s first row (drives the causal mask).
+    pub row0: usize,
+}
+
+/// What one layer pass produced for the processed rows.
+pub struct LayerRun {
+    /// Narrowed K rows for `x` (the session appends these).
+    pub k_rows: Mat<i8>,
+    /// Narrowed V rows for `x`.
+    pub v_rows: Mat<i8>,
+    /// Narrowed layer output rows (the next layer's input).
+    pub y_rows: Mat<i8>,
+    /// Simulated cycles summed over every stage GEMM of the pass.
+    pub sim_cycles: u64,
+}
+
+/// Zero scores whose key index exceeds the query's global row: entry
+/// `(r, j)` survives iff `j <= row0 + r`.
+fn mask_causal(s: &mut Mat<i32>, row0: usize) {
+    for r in 0..s.rows() {
+        for j in (row0 + r + 1)..s.cols() {
+            s.set(r, j, 0);
+        }
+    }
+}
+
+/// A stage-output stationary operand, extended by the session's
+/// accumulated prefix rows when present.
+fn with_prior(prior: Option<&Mat<i8>>, new: &Mat<i8>) -> Mat<i8> {
+    match prior {
+        Some(p) => p.vconcat(new),
+        None => new.clone(),
+    }
+}
+
+/// Run one layer pass: walk the stage graph in dependency waves
+/// (stages whose deps are all resolved are submitted concurrently —
+/// Q/K/V go out as one wave), threading narrowed outputs forward.
+pub fn run_layer(ctx: &LayerCtx, weights: &LayerWeights, input: LayerInput) -> LayerRun {
+    let tile = ctx.coord.config().device.tile;
+    let rows = input.x.rows();
+    assert!(rows > 0, "a layer pass needs at least one input row");
+    let nodes = layer_graph();
+    let mut env: HashMap<StageId, Mat<i8>> = HashMap::new();
+    let mut cycles = 0u64;
+
+    let mut remaining: Vec<StageNode> = nodes.to_vec();
+    while !remaining.is_empty() {
+        let (ready, rest): (Vec<StageNode>, Vec<StageNode>) = remaining
+            .into_iter()
+            .partition(|n| n.deps().iter().all(|d| env.contains_key(d)));
+        assert!(!ready.is_empty(), "stage graph has a cycle");
+        remaining = rest;
+
+        // Submit the whole wave before waiting on any of it.
+        let handles: Vec<(StageNode, RequestHandle)> = ready
+            .into_iter()
+            .map(|node| {
+                let x: &Mat<i8> = match node.x {
+                    Operand::Input => input.x,
+                    Operand::Out(s) => &env[&s],
+                };
+                // Static weights are borrowed (no per-pass clone; the
+                // decode hot loop resubmits them every step); the
+                // session-grown attention operands are computed fresh.
+                let computed: Mat<i8>;
+                let w: &Mat<i8> = match node.w {
+                    WSource::Weight(id) => weights.get(id),
+                    WSource::StageT(s) => {
+                        computed = with_prior(input.prior_k.filter(|_| s == StageId::K), &env[&s])
+                            .transpose();
+                        &computed
+                    }
+                    WSource::Stage(s) => {
+                        computed =
+                            with_prior(input.prior_v.filter(|_| s == StageId::V), &env[&s]);
+                        &computed
+                    }
+                };
+                let strips = build_strips(x, tile, ctx.cache);
+                let h = ctx.coord.submit_strips_as(ctx.tenant, strips, x.rows(), w);
+                (node, h)
+            })
+            .collect();
+        for (node, h) in handles {
+            let resp = h.wait();
+            cycles += resp.stats.cycles;
+            let mut out = resp.out;
+            if node.causal {
+                mask_causal(&mut out, input.row0);
+            }
+            env.insert(node.id, narrow_mat(&out));
+        }
+    }
+
+    LayerRun {
+        k_rows: env.remove(&StageId::K).expect("K stage ran"),
+        v_rows: env.remove(&StageId::V).expect("V stage ran"),
+        y_rows: env.remove(&StageId::FfnDown).expect("FfnDown stage ran"),
+        sim_cycles: cycles,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn graph_dependencies_are_explicit_and_acyclic() {
+        let nodes = layer_graph();
+        assert_eq!(nodes.len(), 8);
+        // Q/K/V have no deps (one concurrent wave); everything else
+        // depends only on earlier stages (topological in array order).
+        let pos = |id: StageId| nodes.iter().position(|n| n.id == id).unwrap();
+        for n in &nodes {
+            for d in n.deps() {
+                assert!(pos(d) < pos(n.id), "{:?} must precede {:?}", d, n.id);
+            }
+        }
+        assert!(nodes[0].deps().is_empty());
+        assert_eq!(
+            nodes.iter().filter(|n| n.deps().is_empty()).count(),
+            3,
+            "the QKV projections form the parallel wave"
+        );
+        // Scores joins Q and K; Context joins Scores and V.
+        assert_eq!(nodes[pos(StageId::Scores)].deps(), vec![StageId::Q, StageId::K]);
+        assert_eq!(nodes[pos(StageId::Context)].deps(), vec![StageId::Scores, StageId::V]);
+    }
+
+    #[test]
+    fn graph_covers_all_table3_stages() {
+        let stages: Vec<Stage> = layer_graph().iter().map(|n| n.table3).collect();
+        for want in [
+            Stage::QkvProjection,
+            Stage::AttentionScores,
+            Stage::AttentionOutput,
+            Stage::OutputProjection,
+            Stage::FfnW1,
+            Stage::FfnW2,
+        ] {
+            assert!(stages.contains(&want), "{want:?} missing from the layer graph");
+        }
+    }
+
+    #[test]
+    fn narrow_is_a_deterministic_arithmetic_shift() {
+        assert_eq!(narrow(0), 0);
+        assert_eq!(narrow(256), 1);
+        assert_eq!(narrow(-256), -1);
+        assert_eq!(narrow(255), 0);
+        assert_eq!(narrow(-1), -1); // arithmetic shift rounds toward -inf
+        assert_eq!(narrow(i32::MAX), ((i32::MAX >> 8) & 0xff) as u8 as i8);
+    }
+
+    #[test]
+    fn causal_mask_zeroes_future_keys_only() {
+        let mut s = Mat::from_fn(2, 4, |_, _| 7i32);
+        mask_causal(&mut s, 1); // global rows 1 and 2
+        assert_eq!(s, Mat::from_vec(2, 4, vec![7, 7, 0, 0, 7, 7, 7, 0]));
+        let mut t = Mat::from_fn(1, 3, |_, _| 7i32);
+        mask_causal(&mut t, 2); // last global row: nothing masked
+        assert_eq!(t, Mat::from_vec(1, 3, vec![7, 7, 7]));
+    }
+
+    #[test]
+    fn scaled_dims_clamp_to_floor() {
+        let m = crate::workloads::models::model_by_name("BERT").unwrap();
+        let d = LayerDims::scaled_from(m, 64, 8);
+        assert_eq!(d, LayerDims { d_model: 12, d_k: 8, d_ffn: 48 });
+    }
+}

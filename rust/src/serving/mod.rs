@@ -1,0 +1,59 @@
+//! Autoregressive serving — session-scoped transformer-layer execution
+//! on top of the L3 coordinator, with KV-style activation reuse.
+//!
+//! The coordinator serves independent `submit(x, w)` GEMMs; this layer
+//! turns those into *model serving*: a [`ServingEngine`] executes whole
+//! transformer layers — lowered by [`graph`] into their Table-III GEMM
+//! stages with explicit dependencies (QKV projections fan out in
+//! parallel; scores → context → output projection → FFN chain behind
+//! them) — per [`Session`], step by step, under the session's tenant
+//! id, threading each stage's narrowed output into the next stage's
+//! activations.
+//!
+//! # How decode-step reuse maps onto the paper's §IV.C tiling
+//!
+//! The §IV.C schedule keeps M2 (weight) tiles stationary and streams M1
+//! (activation row) tiles through the array. Autoregressive decode
+//! re-presents *almost the same* M1 stream every step: step `s` wants
+//! rows `0..s` of a prefix of which rows `0..s-1` were already streamed
+//! at step `s-1`. That redundancy is attacked at two levels:
+//!
+//! * **Strip cache** ([`actcache`]) — padded M1 row-block strips are
+//!   keyed by content hash in a sharded, capacity-bounded LRU, so a
+//!   re-streamed prefix block (same session last step, or another
+//!   session sharing a prompt prefix, or the K/V projections of the
+//!   same layer pass re-slicing the same input) comes back `Arc`-shared
+//!   instead of being re-sliced and re-materialized. The router's
+//!   [`submit_strips_as`] entry point accepts these pre-built strips
+//!   and fans them out at (row-block × weight-tile) granularity.
+//! * **Session row reuse** ([`session`], [`decode`]) — attention is
+//!   causal, so row `i` of every stage output is invariant once
+//!   computed (it depends only on rows `0..=i`). A decode step
+//!   therefore submits *only its new rows* through each stage,
+//!   re-using the session's accumulated K/V/output rows for the prefix
+//!   — the KV cache of real transformer serving, here realized as
+//!   "M1 tiles that never re-stream". Together with weight-tile
+//!   affinity (the same layer weights stay stationary across steps and
+//!   sessions) a decode step touches the array for one M1 tile per
+//!   stage instead of the whole prefix.
+//!
+//! Observability: `act_strip_hits` / `act_strip_misses` /
+//! `act_bytes_saved` / `act_rows_reused` in the coordinator
+//! [`Metrics`](crate::coordinator::Metrics), and per-step
+//! [`StepReport`]s (rows processed vs reused, simulated cycles, wall
+//! latency, strip hit counts, energy).
+//!
+//! [`submit_strips_as`]: crate::coordinator::Coordinator::submit_strips_as
+
+pub mod actcache;
+pub mod decode;
+pub mod graph;
+pub mod session;
+
+pub use actcache::{build_strips, ActStripCache};
+pub use decode::{ServingEngine, StepReport};
+pub use graph::{
+    layer_graph, narrow, narrow_mat, run_layer, LayerCtx, LayerDims, LayerInput, LayerRun,
+    LayerWeights, Operand, ServeModel, StageId, StageNode, WSource, WeightId, NARROW_SHIFT,
+};
+pub use session::{LayerState, Session};

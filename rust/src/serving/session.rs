@@ -1,0 +1,104 @@
+//! Session state for autoregressive serving: the growing token
+//! activation, and per-layer accumulated K/V/output rows — the KV
+//! cache, at activation-row granularity.
+//!
+//! A session is one "user conversation" against one model: a prompt is
+//! prefilled, then decode steps each append one generated row. With
+//! `reuse` on, the per-layer state is what lets a step submit only its
+//! new rows (causality makes prefix rows step-invariant — see the
+//! [`graph`](super::graph) module doc); with `reuse` off the session
+//! recomputes every row each step and serves as the A/B baseline.
+
+use crate::coordinator::TenantId;
+use crate::matrix::Mat;
+
+use super::graph::LayerDims;
+
+/// Per-layer accumulated rows (narrowed i8 activations).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LayerState {
+    /// K projection rows, `done_rows x d_k` (the attention-scores
+    /// stationary operand, transposed at submission).
+    pub k: Mat<i8>,
+    /// V projection rows, `done_rows x d_k`.
+    pub v: Mat<i8>,
+    /// Layer output rows, `done_rows x d_model` (kept for the A/B
+    /// bit-exactness assertions; the decode loop itself only threads
+    /// the newest row forward).
+    pub y: Mat<i8>,
+}
+
+impl LayerState {
+    fn empty(dims: &LayerDims) -> Self {
+        Self {
+            k: Mat::zeros(0, dims.d_k),
+            v: Mat::zeros(0, dims.d_k),
+            y: Mat::zeros(0, dims.d_model),
+        }
+    }
+}
+
+/// One serving session.
+pub struct Session {
+    pub id: u64,
+    /// Tenant the session's stage GEMMs are submitted under (DRR
+    /// fairness lanes + per-tenant counters).
+    pub tenant: TenantId,
+    /// Token-level input activation: prompt rows plus one fed-back row
+    /// per completed step, `n x d_model`.
+    pub acts: Mat<i8>,
+    /// Per-layer accumulated state.
+    pub layers: Vec<LayerState>,
+    /// Rows already processed through every layer.
+    pub done_rows: usize,
+    /// KV-style row reuse on/off (off = full recompute every step, the
+    /// A/B baseline).
+    pub reuse: bool,
+}
+
+impl Session {
+    pub fn new(id: u64, tenant: TenantId, prompt: Mat<i8>, dims: &LayerDims, layers: usize, reuse: bool) -> Self {
+        assert_eq!(prompt.cols(), dims.d_model, "prompt width must equal d_model");
+        assert!(prompt.rows() > 0, "a session needs a non-empty prompt");
+        Self {
+            id,
+            tenant,
+            acts: prompt,
+            layers: (0..layers).map(|_| LayerState::empty(dims)).collect(),
+            done_rows: 0,
+            reuse,
+        }
+    }
+
+    /// Rows awaiting processing (the prompt before prefill; exactly the
+    /// fed-back row between decode steps).
+    pub fn pending_rows(&self) -> usize {
+        self.acts.rows() - self.done_rows
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::random_i8;
+
+    #[test]
+    fn new_session_has_empty_layer_state() {
+        let dims = LayerDims { d_model: 8, d_k: 4, d_ffn: 16 };
+        let s = Session::new(1, 2, random_i8(5, 8, 3), &dims, 3, true);
+        assert_eq!(s.pending_rows(), 5);
+        assert_eq!(s.layers.len(), 3);
+        for l in &s.layers {
+            assert_eq!((l.k.rows(), l.k.cols()), (0, 4));
+            assert_eq!((l.v.rows(), l.v.cols()), (0, 4));
+            assert_eq!((l.y.rows(), l.y.cols()), (0, 8));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "prompt width")]
+    fn prompt_width_must_match_dims() {
+        let dims = LayerDims { d_model: 8, d_k: 4, d_ffn: 16 };
+        Session::new(0, 0, random_i8(2, 7, 1), &dims, 1, true);
+    }
+}

@@ -18,16 +18,28 @@
 //!  * `ShardedQueue` loses and duplicates nothing under randomized
 //!    concurrent push/pop/steal/close interleavings, and the
 //!    `MAX_FRONT_SKIPS` anti-starvation bound holds with stealing
-//!    enabled.
+//!    enabled,
+//!  * the serving strip fan-out (`submit_strips_as`) ≡ `submit` ≡ the
+//!    reference for ragged shapes,
+//!  * a randomized autoregressive decode trace is bit-exact with the
+//!    activation cache on vs off (and strictly cheaper with it on),
+//!  * the activation-strip LRU never exceeds its capacity bound and
+//!    hits are pointer-shared.
+
+use std::sync::Arc;
 
 use dip_core::analytical::{latency_cycles, Arch};
 use dip_core::arch::permute::{permute, unpermute};
 use dip_core::arch::{dip::DipArray, ws::WsArray, SystolicArray};
+use dip_core::bench_harness::scenarios::{
+    assert_cached_strictly_cheaper, run_decode_mix, DecodeMix,
+};
 use dip_core::coordinator::{
-    Coordinator, CoordinatorConfig, DeviceConfig, PlacementPolicy, ShardedQueue, TenantId,
-    MAX_FRONT_SKIPS,
+    Coordinator, CoordinatorConfig, DeviceConfig, Metrics, PlacementPolicy, ShardedQueue,
+    TenantId, MAX_FRONT_SKIPS,
 };
 use dip_core::matrix::{random_i8, Mat};
+use dip_core::serving::{ActStripCache, LayerDims};
 use dip_core::tiling::schedule::{run_tiled_matmul, TilingConfig, WeightLoadPolicy};
 
 /// Deterministic case generator.
@@ -377,6 +389,113 @@ fn prop_front_skip_bound_holds_with_stealing_enabled() {
     assert_eq!(popped_front_at, Some(MAX_FRONT_SKIPS));
     // The other worker sees a drained queue, not a hang.
     assert!(q.pop(1, |_| false).is_none());
+}
+
+#[test]
+fn prop_strip_submission_equals_submit_equals_reference() {
+    // The serving fan-out (pre-built M1 row-block strips, row-offset
+    // jobs) must agree with the batched column-strip fan-out and the
+    // i32 oracle for ragged shapes across device counts and archs.
+    let mut g = Gen(0x57A1B5);
+    for round in 0..8 {
+        let tile = [4usize, 8][g.range(0, 1) as usize];
+        let arch = if g.next() % 2 == 0 { Arch::Dip } else { Arch::Ws };
+        let cfg = CoordinatorConfig {
+            devices: g.range(1, 4) as usize,
+            device: DeviceConfig { arch, tile, mac_stages: 2, ..Default::default() },
+            queue_depth: g.range(2, 16) as usize,
+            work_stealing: g.next() % 2 == 0,
+            placement: PlacementPolicy::HeatAware,
+        };
+        let m = g.range(1, 30) as usize;
+        let nd = g.range(1, 30) as usize;
+        let k = g.range(1, 30) as usize;
+        let x = random_i8(m, nd, g.next());
+        let w = random_i8(nd, k, g.next());
+        let strips: Vec<Arc<Mat<i8>>> = (0..m.div_ceil(tile))
+            .map(|m1| Arc::new(x.block(m1 * tile, 0, tile, nd)))
+            .collect();
+        let c = Coordinator::new(cfg);
+        let via_strips = c.submit_strips_as(7, strips, m, &w).wait().out;
+        let via_submit = c.submit(x.clone(), w.clone()).wait().out;
+        c.shutdown();
+        let want = x.widen().matmul(&w.widen());
+        assert_eq!(via_strips, want, "round {round} m={m} nd={nd} k={k} tile={tile} {arch:?}");
+        assert_eq!(via_submit, want, "round {round}");
+    }
+}
+
+#[test]
+fn prop_decode_trace_bit_exact_with_cache_on_vs_off() {
+    // Randomized autoregressive traces: layer counts, dims, session
+    // counts, prompt lengths and step counts vary; the cached run must
+    // be bit-exact with the uncached baseline and strictly cheaper,
+    // and the strip LRU must respect its bound (asserted inside
+    // assert_cached_strictly_cheaper). Prompts are kept longer than
+    // one tile so the strict row reduction is structural, not lucky.
+    let mut g = Gen(0xDECDE);
+    for trial in 0..4 {
+        let tile = [4usize, 8][g.range(0, 1) as usize];
+        let cfg = DecodeMix {
+            tile,
+            layers: g.range(1, 2) as usize,
+            dims: LayerDims {
+                d_model: 4 * g.range(2, 4) as usize,
+                d_k: 4 * g.range(1, 2) as usize,
+                d_ffn: 4 * g.range(2, 5) as usize,
+            },
+            sessions: g.range(1, 2) as usize,
+            prefill_rows: tile + g.range(1, 6) as usize,
+            shared_prefix_rows: g.range(0, tile as u64) as usize,
+            steps: g.range(2, 3) as usize,
+            devices: g.range(1, 3) as usize,
+            seed: g.next(),
+            strip_cache_capacity: g.range(4, 64) as usize,
+        };
+        let cached = run_decode_mix(&cfg, true);
+        let uncached = run_decode_mix(&cfg, false);
+        let ab = assert_cached_strictly_cheaper(&cached, &uncached);
+        assert!(
+            ab.rows_ratio > 1.0,
+            "trial {trial}: tile={tile} prefill={} steps={}",
+            cfg.prefill_rows,
+            cfg.steps
+        );
+    }
+}
+
+#[test]
+fn prop_act_strip_lru_bound_and_pointer_sharing() {
+    // Random key traffic with a small working set: the cache never
+    // exceeds its capacity, and a hit always returns the identical
+    // allocation inserted on the miss.
+    let mut g = Gen(0xACCA);
+    for trial in 0..10 {
+        let shards = g.range(1, 4) as usize;
+        let capacity = g.range(1, 12) as usize;
+        let metrics = Arc::new(Metrics::default());
+        let cache = ActStripCache::new(shards, capacity, Arc::clone(&metrics));
+        for op in 0..200 {
+            let seed = g.range(1, 24); // small key space forces reuse + eviction
+            let strip = random_i8(4, 3, seed);
+            let key = strip.content_hash();
+            let got = cache.get_or_build(key, || strip.clone());
+            assert_eq!(*got, strip, "trial {trial} op {op}: wrong strip content");
+            assert!(
+                cache.len() <= cache.capacity(),
+                "trial {trial} op {op}: LRU bound exceeded ({} > {})",
+                cache.len(),
+                cache.capacity()
+            );
+            // An immediate second lookup is a hit and must be the same
+            // allocation, never a copy.
+            let again = cache.get_or_build(key, || strip.clone());
+            assert!(Arc::ptr_eq(&got, &again), "trial {trial} op {op}: hit copied the strip");
+        }
+        let s = metrics.snapshot();
+        assert_eq!(s.act_strip_hits + s.act_strip_misses, 400);
+        assert!(s.act_strip_hits >= 200, "trial {trial}: immediate re-lookups must hit");
+    }
 }
 
 #[test]
