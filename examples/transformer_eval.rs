@@ -10,11 +10,17 @@
 //! the serving subsystem at scaled-down dims, A/B-ing activation
 //! caching (KV-style row reuse + strip cache) against full recompute
 //! with bit-exact outputs.
+//!
+//! Continuous batching: `--serve --batch <n>` drives the wave
+//! scheduler over `n` concurrent sessions (staggered joins and leave
+//! times) and A/Bs it against per-session decode — bit-exact outputs,
+//! strictly fewer weight loads/rows/cycles, per-wave reports.
 
 use dip_core::bench_harness::scenarios::{
-    assert_cached_strictly_cheaper, run_decode_mix, DecodeMix,
+    assert_cached_strictly_cheaper, assert_waved_strictly_cheaper, run_decode_mix, run_wave_mix,
+    run_wave_mix_per_session, DecodeMix, WaveMix, WaveSessionSpec,
 };
-use dip_core::serving::LayerDims;
+use dip_core::serving::{LayerDims, WavePolicy};
 use dip_core::tiling::schedule::{workload_cost, TilingConfig};
 use dip_core::workloads::models::{model_by_name, TransformerModel, MODELS, SEQ_LENS};
 
@@ -76,6 +82,63 @@ fn serve_mode(model: &TransformerModel, steps: usize, sessions: usize) {
     );
 }
 
+fn batch_mode(model: &TransformerModel, steps: usize, batch: usize) {
+    let dims = LayerDims::scaled_from(model, 64, 8);
+    let cfg = WaveMix {
+        tile: 8,
+        layers: 2,
+        dims,
+        // Most sessions present from the start; the tail joins
+        // mid-flight so admission and join/leave paths are exercised.
+        sessions: (0..batch)
+            .map(|i| WaveSessionSpec {
+                join_after: if 3 * i < 2 * batch { 0 } else { 2 },
+                prompt_rows: 9 + (i % 4),
+                steps: steps + (i % 3),
+            })
+            .collect(),
+        devices: 2,
+        seed: 62,
+        strip_cache_capacity: 512,
+        policy: WavePolicy { max_wave_rows: 48, max_sessions: 16, ..Default::default() },
+    };
+    println!(
+        "continuous batching {} (scaled dims: d_model {}, d_k {}, d_ffn {}): {} sessions, staggered joins, ~{} steps",
+        model.name, dims.d_model, dims.d_k, dims.d_ffn, batch, steps
+    );
+    let waved = run_wave_mix(&cfg);
+    let solo = run_wave_mix_per_session(&cfg);
+    let ab = assert_waved_strictly_cheaper(&waved, &solo);
+    println!(
+        "{:>4} {:>5} {:>5} {:>5} {:>6} {:>9} {:>10}",
+        "wave", "sess", "rows", "join", "leave", "cycles", "energy uJ"
+    );
+    for r in &waved.reports {
+        println!(
+            "{:>4} {:>5} {:>5} {:>5} {:>6} {:>9} {:>10.3}",
+            r.wave,
+            r.sessions,
+            r.stacked_rows,
+            r.joined,
+            r.completed.len(),
+            r.sim_cycles,
+            r.energy_uj,
+        );
+    }
+    println!(
+        "\nwave batching vs per-session decode (bit-exact): {:.2}x fewer weight loads ({} vs {}), {:.2}x fewer streamed rows, {:.2}x fewer cycles",
+        ab.weight_loads_ratio,
+        waved.metrics.weight_loads,
+        solo.metrics.weight_loads,
+        ab.rows_ratio,
+        ab.cycles_ratio,
+    );
+    println!(
+        "{} waves, {:.1} stacked rows/wave, {:.1} weight loads/wave",
+        waved.metrics.waves, ab.mean_wave_rows, ab.weight_loads_per_wave
+    );
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let positional: Vec<&String> =
@@ -89,6 +152,10 @@ fn main() {
             None => model_by_name("BERT").unwrap(),
         };
         let steps = flag_value(&args, "--steps").unwrap_or(4) as usize;
+        if let Some(batch) = flag_value(&args, "--batch") {
+            batch_mode(model, steps.max(1), (batch as usize).max(2));
+            return;
+        }
         let sessions = flag_value(&args, "--sessions").unwrap_or(3) as usize;
         serve_mode(model, steps.max(1), sessions.max(1));
         return;

@@ -2,21 +2,27 @@
 //! activation caching on vs off (KV-style row reuse + strip cache),
 //! per-step latency/cycles/hit-rate reporting, and the acceptance
 //! assertions (bit-exact outputs, strictly fewer streamed rows and
-//! simulated cycles). `cargo bench --bench serving`.
+//! simulated cycles) — plus the continuous-batching A/B: the same
+//! staggered join/leave session mix through the wave scheduler vs
+//! per-session decode, asserting bit-exact outputs with **strictly
+//! fewer weight-tile installs**, streamed rows, and simulated cycles.
+//! `cargo bench --bench serving`.
 //!
 //! Emits `BENCH_serving.json` (machine-readable trajectory: cycles,
-//! rows, reuse and hit rates, improvement ratios) so future PRs can
-//! track serving-path regressions.
+//! rows, reuse and hit rates, improvement ratios, wave metrics) so
+//! future PRs can track serving-path regressions.
 //!
 //! Set `DIP_BENCH_SMOKE=1` for reduced sizes (CI smoke: same scenario,
-//! same assertions, fraction of the wall time).
+//! same assertions — including the strict weight-load drop under
+//! batching — at a fraction of the wall time).
 
 use dip_core::bench_harness::report::Json;
 use dip_core::bench_harness::scenarios::{
-    assert_cached_strictly_cheaper, run_decode_mix, DecodeMix, DecodeOutcome,
+    assert_cached_strictly_cheaper, assert_waved_strictly_cheaper, run_decode_mix, run_wave_mix,
+    run_wave_mix_per_session, DecodeMix, DecodeOutcome, WaveMix, WaveOutcome, WaveSessionSpec,
 };
 use dip_core::bench_harness::timing::{bench, report_throughput};
-use dip_core::serving::LayerDims;
+use dip_core::serving::{LayerDims, WavePolicy};
 
 fn smoke() -> bool {
     std::env::var("DIP_BENCH_SMOKE").map(|v| !v.is_empty() && v != "0").unwrap_or(false)
@@ -114,6 +120,96 @@ fn main() {
         ab.cycles_ratio, ab.rows_ratio
     );
 
+    // === Continuous batching: wave scheduler vs per-session decode ===
+    // A staggered mix — most sessions present from the start, two
+    // joining mid-flight, lengths spread so sessions leave at
+    // different waves — served both ways. The assertion set is the
+    // acceptance criterion: bit-exact outputs, strictly fewer weight
+    // loads, streamed rows, and simulated cycles.
+    let wave_cfg = WaveMix {
+        tile: cfg.tile,
+        layers: cfg.layers,
+        dims: cfg.dims,
+        sessions: (0..if smoke { 4 } else { 6 })
+            .map(|i| WaveSessionSpec {
+                join_after: if i < 3 { 0 } else { 2 + (i - 3) * 2 },
+                prompt_rows: cfg.prefill_rows - (i % 3),
+                steps: cfg.steps + (i % 4),
+            })
+            .collect(),
+        devices: cfg.devices,
+        seed: cfg.seed + 1,
+        strip_cache_capacity: cfg.strip_cache_capacity,
+        policy: WavePolicy {
+            max_wave_rows: 4 * cfg.prefill_rows,
+            max_sessions: 8,
+            ..Default::default()
+        },
+    };
+    println!(
+        "\n=== Continuous batching ({} sessions, staggered joins/leaves, budget {} rows) ===",
+        wave_cfg.sessions.len(),
+        wave_cfg.policy.max_wave_rows
+    );
+    let sessions_n = wave_cfg.sessions.len() as f64;
+    let r_waved = bench("serving/wave-mix/batched", 1, if smoke { 2 } else { 3 }, || {
+        run_wave_mix(&wave_cfg).metrics.sim_cycles
+    });
+    report_throughput("sessions", r_waved.throughput(sessions_n), "/s");
+    let r_solo = bench("serving/wave-mix/per-session", 1, if smoke { 2 } else { 3 }, || {
+        run_wave_mix_per_session(&wave_cfg).metrics.sim_cycles
+    });
+    report_throughput("sessions", r_solo.throughput(sessions_n), "/s");
+
+    let waved = run_wave_mix(&wave_cfg);
+    let solo = run_wave_mix_per_session(&wave_cfg);
+    let wab = assert_waved_strictly_cheaper(&waved, &solo);
+
+    println!("\nper-wave (sessions, stacked rows, joins, leaves, cycles):");
+    for r in &waved.reports {
+        println!(
+            "  w{:<2} sess {:>2}  rows {:>3}  +{} -{}  cycles {:>7}  {:>7.2} uJ  {:>8.1?}",
+            r.wave,
+            r.sessions,
+            r.stacked_rows,
+            r.joined,
+            r.completed.len(),
+            r.sim_cycles,
+            r.energy_uj,
+            r.wall,
+        );
+    }
+    println!(
+        "\nwaved:       loads {:>5}  rows {:>7}  cycles {:>9}  ({} waves, {:.1} rows/wave, {:.1} loads/wave)",
+        waved.metrics.weight_loads,
+        waved.metrics.rows_streamed,
+        waved.metrics.sim_cycles,
+        waved.metrics.waves,
+        wab.mean_wave_rows,
+        wab.weight_loads_per_wave,
+    );
+    println!(
+        "per-session: loads {:>5}  rows {:>7}  cycles {:>9}",
+        solo.metrics.weight_loads, solo.metrics.rows_streamed, solo.metrics.sim_cycles
+    );
+    println!(
+        "-> continuous batching: {:.2}x fewer weight loads, {:.2}x fewer streamed rows, {:.2}x fewer cycles",
+        wab.weight_loads_ratio, wab.rows_ratio, wab.cycles_ratio
+    );
+
+    let wave_json = |o: &WaveOutcome| {
+        Json::obj(vec![
+            ("sim_cycles", Json::num(o.metrics.sim_cycles as f64)),
+            ("rows_streamed", Json::num(o.metrics.rows_streamed as f64)),
+            ("jobs_executed", Json::num(o.metrics.jobs_executed as f64)),
+            ("weight_loads", Json::num(o.metrics.weight_loads as f64)),
+            ("weight_loads_skipped", Json::num(o.metrics.weight_loads_skipped as f64)),
+            ("waves", Json::num(o.metrics.waves as f64)),
+            ("wave_stacked_rows", Json::num(o.metrics.wave_stacked_rows as f64)),
+            ("weight_loads_per_wave", Json::num(o.metrics.weight_loads_per_wave())),
+            ("mean_wave_rows", Json::num(o.metrics.mean_wave_rows())),
+        ])
+    };
     let json = Json::obj(vec![
         ("scenario", Json::str("decode_mix")),
         ("smoke", Json::Bool(smoke)),
@@ -128,6 +224,20 @@ fn main() {
         ("rows_ratio", Json::num(ab.rows_ratio)),
         ("cached", outcome_json(&cached)),
         ("uncached", outcome_json(&uncached)),
+        (
+            "wave_mix",
+            Json::obj(vec![
+                ("sessions", Json::num(sessions_n)),
+                ("max_wave_rows", Json::num(wave_cfg.policy.max_wave_rows as f64)),
+                ("weight_loads_ratio", Json::num(wab.weight_loads_ratio)),
+                ("cycles_ratio", Json::num(wab.cycles_ratio)),
+                ("rows_ratio", Json::num(wab.rows_ratio)),
+                ("sessions_per_s_batched", Json::num(r_waved.throughput(sessions_n))),
+                ("sessions_per_s_per_session", Json::num(r_solo.throughput(sessions_n))),
+                ("batched", wave_json(&waved)),
+                ("per_session", wave_json(&solo)),
+            ]),
+        ),
     ]);
     std::fs::write("BENCH_serving.json", json.render()).expect("write BENCH_serving.json");
     println!("\nwrote BENCH_serving.json");

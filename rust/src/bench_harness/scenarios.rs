@@ -27,6 +27,14 @@
 //!   fewer streamed rows (deterministic — a function of the job set)
 //!   and strictly fewer simulated cycles, with the strip cache
 //!   actually hit and its LRU bound respected.
+//! * [`run_wave_mix`] / [`run_wave_mix_per_session`] — the
+//!   continuous-batching A/B: the same session mix (staggered joins,
+//!   lengths and leave times) through the lockstep wave scheduler vs
+//!   one session at a time on the engine.
+//!   [`assert_waved_strictly_cheaper`] pins the acceptance criteria:
+//!   bit-exact outputs and strictly fewer weight-tile installs,
+//!   streamed rows, and simulated cycles. Stealing is off so load
+//!   counts follow from the job sets, not thread timing.
 
 use crate::analytical::Arch;
 use crate::coordinator::{
@@ -34,7 +42,10 @@ use crate::coordinator::{
     TenantSnapshot,
 };
 use crate::matrix::{random_i8, Mat};
-use crate::serving::{LayerDims, LayerState, ServeModel, ServingEngine, Session, StepReport};
+use crate::serving::{
+    LayerDims, LayerState, ServeModel, ServingEngine, Session, StepReport, WavePolicy, WaveReport,
+    WaveScheduler,
+};
 
 /// Parameters of the two-model alternating-burst serving scenario.
 pub struct TwoModelBurst {
@@ -326,6 +337,191 @@ pub fn assert_cached_strictly_cheaper(
         rows_ratio: uncached.metrics.rows_streamed as f64 / cached.metrics.rows_streamed as f64,
         strip_hit_rate: cached.metrics.act_strip_hit_rate(),
         bytes_saved: cached.metrics.act_bytes_saved,
+    }
+}
+
+/// One session of a wave-mix: when it joins, how big its prompt is,
+/// how many decode steps it runs.
+#[derive(Debug, Clone, Copy)]
+pub struct WaveSessionSpec {
+    /// Waves the scheduler has run before this session is submitted
+    /// (0 = present from the start; mid-flight joins use > 0).
+    pub join_after: usize,
+    pub prompt_rows: usize,
+    pub steps: usize,
+}
+
+/// Parameters of the continuous-batching A/B: the same session mix
+/// served by the [`WaveScheduler`] vs one session at a time on the
+/// per-session [`ServingEngine`]. Work stealing is off so the
+/// weight-load comparison is a property of the job sets, not thread
+/// timing.
+pub struct WaveMix {
+    pub tile: usize,
+    pub layers: usize,
+    pub dims: LayerDims,
+    /// Session mix; index is the session id, tenant is `id + 1`.
+    pub sessions: Vec<WaveSessionSpec>,
+    pub devices: usize,
+    pub seed: u64,
+    pub strip_cache_capacity: usize,
+    pub policy: WavePolicy,
+}
+
+impl WaveMix {
+    fn engine(&self) -> ServingEngine {
+        ServingEngine::new(
+            CoordinatorConfig {
+                devices: self.devices,
+                device: DeviceConfig {
+                    arch: Arch::Dip,
+                    tile: self.tile,
+                    mac_stages: 2,
+                    ..Default::default()
+                },
+                queue_depth: 256,
+                work_stealing: false,
+                placement: PlacementPolicy::HeatAware,
+            },
+            ServeModel::synthetic(self.dims, self.layers, self.seed),
+            self.strip_cache_capacity,
+        )
+    }
+
+    fn prompt(&self, i: usize) -> Mat<i8> {
+        random_i8(self.sessions[i].prompt_rows, self.dims.d_model, self.seed + 1000 * (i as u64 + 1))
+    }
+}
+
+/// What one side of the continuous-batching A/B produced. Session
+/// state is indexed by session id (same order for both sides).
+pub struct WaveOutcome {
+    pub metrics: MetricsSnapshot,
+    /// Per-wave reports (empty on the per-session baseline).
+    pub reports: Vec<WaveReport>,
+    pub acts: Vec<Mat<i8>>,
+    pub layers: Vec<Vec<LayerState>>,
+}
+
+fn collect_sessions(mut sessions: Vec<Session>) -> (Vec<Mat<i8>>, Vec<Vec<LayerState>>) {
+    sessions.sort_by_key(|s| s.id);
+    let acts = sessions.iter().map(|s| s.acts.clone()).collect();
+    let layers = sessions.into_iter().map(|s| s.layers).collect();
+    (acts, layers)
+}
+
+/// Serve the mix through the wave scheduler: sessions are submitted at
+/// their `join_after` wave (an idle scheduler fast-forwards to the
+/// next joiner), waves run until every session finished.
+pub fn run_wave_mix(cfg: &WaveMix) -> WaveOutcome {
+    let mut ws = WaveScheduler::new(cfg.engine(), cfg.policy);
+    let mut submitted = vec![false; cfg.sessions.len()];
+    let mut waves_done = 0usize;
+    let mut reports = Vec::new();
+    loop {
+        for (i, spec) in cfg.sessions.iter().enumerate() {
+            if !submitted[i] && spec.join_after <= waves_done {
+                ws.submit(i as u64, i as TenantId + 1, cfg.prompt(i), spec.steps);
+                submitted[i] = true;
+            }
+        }
+        match ws.run_wave() {
+            Some(r) => {
+                waves_done += 1;
+                reports.push(r);
+            }
+            None => match cfg
+                .sessions
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| !submitted[*i])
+                .map(|(_, s)| s.join_after)
+                .min()
+            {
+                // Idle gap before the next join: fast-forward to it.
+                Some(next_join) => waves_done = waves_done.max(next_join),
+                None => break,
+            },
+        }
+    }
+    let (acts, layers) = collect_sessions(ws.take_finished());
+    let metrics = ws.shutdown();
+    WaveOutcome { metrics, reports, acts, layers }
+}
+
+/// The baseline: the same sessions served one at a time on the
+/// per-session engine (prefill + steps each, KV reuse and strip cache
+/// on — everything PR 3 gave us, minus cross-session batching).
+pub fn run_wave_mix_per_session(cfg: &WaveMix) -> WaveOutcome {
+    let engine = cfg.engine();
+    let sessions: Vec<Session> = cfg
+        .sessions
+        .iter()
+        .enumerate()
+        .map(|(i, spec)| {
+            let mut s = engine.open_session(i as u64, i as TenantId + 1, cfg.prompt(i), true);
+            engine.prefill(&mut s);
+            for _ in 0..spec.steps {
+                engine.decode_step(&mut s);
+            }
+            s
+        })
+        .collect();
+    let (acts, layers) = collect_sessions(sessions);
+    let metrics = engine.shutdown();
+    WaveOutcome { metrics, reports: Vec::new(), acts, layers }
+}
+
+/// Improvement factors of the waved run over the per-session baseline.
+#[derive(Debug, Clone, Copy)]
+pub struct WaveAb {
+    pub weight_loads_ratio: f64,
+    pub cycles_ratio: f64,
+    pub rows_ratio: f64,
+    pub weight_loads_per_wave: f64,
+    pub mean_wave_rows: f64,
+}
+
+/// The continuous-batching acceptance criteria, asserted: bit-exact
+/// session outputs and K/V/Y state, **strictly fewer weight-tile
+/// installs** (the wave loads each stage weight once per wave, the
+/// baseline once per session), strictly fewer streamed rows (stacking
+/// amortizes the M1 padding — deterministic, a function of the job
+/// sets) and strictly fewer simulated cycles.
+pub fn assert_waved_strictly_cheaper(waved: &WaveOutcome, per_session: &WaveOutcome) -> WaveAb {
+    assert_eq!(waved.acts, per_session.acts, "generated token rows diverged");
+    assert_eq!(waved.layers, per_session.layers, "per-layer K/V/output state diverged");
+    assert!(
+        waved.metrics.weight_loads < per_session.metrics.weight_loads,
+        "batching must strictly reduce weight loads ({} vs {})",
+        waved.metrics.weight_loads,
+        per_session.metrics.weight_loads
+    );
+    assert!(
+        waved.metrics.rows_streamed < per_session.metrics.rows_streamed,
+        "batching must strictly reduce streamed rows ({} vs {})",
+        waved.metrics.rows_streamed,
+        per_session.metrics.rows_streamed
+    );
+    assert!(
+        waved.metrics.sim_cycles < per_session.metrics.sim_cycles,
+        "batching must strictly reduce simulated cycles ({} vs {})",
+        waved.metrics.sim_cycles,
+        per_session.metrics.sim_cycles
+    );
+    assert_eq!(waved.metrics.waves, waved.reports.len() as u64);
+    assert!(waved.metrics.waves > 0, "no waves ran");
+    assert_eq!(per_session.metrics.waves, 0, "the baseline must not touch the wave path");
+    let stacked: u64 = waved.reports.iter().map(|r| r.stacked_rows as u64).sum();
+    assert_eq!(waved.metrics.wave_stacked_rows, stacked, "stacked-row ledger out of sync");
+    WaveAb {
+        weight_loads_ratio: per_session.metrics.weight_loads as f64
+            / waved.metrics.weight_loads as f64,
+        cycles_ratio: per_session.metrics.sim_cycles as f64 / waved.metrics.sim_cycles as f64,
+        rows_ratio: per_session.metrics.rows_streamed as f64
+            / waved.metrics.rows_streamed as f64,
+        weight_loads_per_wave: waved.metrics.weight_loads_per_wave(),
+        mean_wave_rows: waved.metrics.mean_wave_rows(),
     }
 }
 

@@ -73,6 +73,14 @@ pub struct Metrics {
     /// session state instead of re-streamed through the arrays — the
     /// KV-style decode reuse, summed over layers.
     pub act_rows_reused: AtomicU64,
+    /// Lockstep waves executed by the continuous-batching scheduler
+    /// (one wave = one pass of a session cohort through every layer).
+    pub waves: AtomicU64,
+    /// Activation rows stacked across sessions into wave submissions,
+    /// counted once per wave — `wave_stacked_rows / waves` is the mean
+    /// cohort size in rows (how much weight residency each wave
+    /// amortized).
+    pub wave_stacked_rows: AtomicU64,
     /// Per-tenant service breakdown (DRR fairness observability).
     tenants: Mutex<HashMap<TenantId, TenantCounters>>,
     /// Jobs executed per worker device (placement skew observability;
@@ -102,6 +110,8 @@ pub struct MetricsSnapshot {
     pub act_strip_misses: u64,
     pub act_bytes_saved: u64,
     pub act_rows_reused: u64,
+    pub waves: u64,
+    pub wave_stacked_rows: u64,
 }
 
 /// Point-in-time copy of one tenant's counters.
@@ -151,6 +161,8 @@ impl Metrics {
             act_strip_misses: self.act_strip_misses.load(Ordering::Relaxed),
             act_bytes_saved: self.act_bytes_saved.load(Ordering::Relaxed),
             act_rows_reused: self.act_rows_reused.load(Ordering::Relaxed),
+            waves: self.waves.load(Ordering::Relaxed),
+            wave_stacked_rows: self.wave_stacked_rows.load(Ordering::Relaxed),
         }
     }
 
@@ -233,6 +245,27 @@ impl MetricsSnapshot {
             self.act_strip_hits as f64 / total as f64
         }
     }
+
+    /// Weight-tile installs per executed wave (0.0 when no waves ran) —
+    /// the headline continuous-batching metric: batching the same
+    /// decode stage across sessions should drive this toward one load
+    /// per distinct stage tile per wave, independent of cohort size.
+    pub fn weight_loads_per_wave(&self) -> f64 {
+        if self.waves == 0 {
+            0.0
+        } else {
+            self.weight_loads as f64 / self.waves as f64
+        }
+    }
+
+    /// Mean activation rows stacked per wave (0.0 when no waves ran).
+    pub fn mean_wave_rows(&self) -> f64 {
+        if self.waves == 0 {
+            0.0
+        } else {
+            self.wave_stacked_rows as f64 / self.waves as f64
+        }
+    }
 }
 
 #[cfg(test)]
@@ -272,6 +305,22 @@ mod tests {
         assert_eq!(s.steals_warm, 2);
         assert!((s.act_strip_hit_rate() - 0.75).abs() < 1e-12);
         assert_eq!(MetricsSnapshot::default().act_strip_hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn wave_counters_snapshot_and_derived_rates() {
+        let m = Metrics::default();
+        m.waves.fetch_add(4, Ordering::Relaxed);
+        m.wave_stacked_rows.fetch_add(26, Ordering::Relaxed);
+        m.weight_loads.fetch_add(10, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.waves, 4);
+        assert_eq!(s.wave_stacked_rows, 26);
+        assert!((s.weight_loads_per_wave() - 2.5).abs() < 1e-12);
+        assert!((s.mean_wave_rows() - 6.5).abs() < 1e-12);
+        let empty = MetricsSnapshot::default();
+        assert_eq!(empty.weight_loads_per_wave(), 0.0);
+        assert_eq!(empty.mean_wave_rows(), 0.0);
     }
 
     #[test]

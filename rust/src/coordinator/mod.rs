@@ -40,9 +40,18 @@
 //! row-block strips (deduplicated by the activation-strip cache, keyed
 //! by content hash) fan out as (row-block × weight-tile) jobs with row
 //! offsets, so a decode step that reuses its prefix submits — and
-//! pays for — only its new rows. Serving observability lives in the
-//! same [`Metrics`]: `act_strip_hits` / `act_strip_misses` /
-//! `act_bytes_saved` / `act_rows_reused`.
+//! pays for — only its new rows. Its continuous-batching scheduler
+//! goes one further through [`Coordinator::submit_wave_as`]: one
+//! *wave* stacks many sessions' pending rows against a
+//! [`PreTiledWeights`] handle (Arc'd tiles + cached ids, sliced and
+//! hashed once, the submit-side analogue of the prepared-weight
+//! cache) with one [`SubRequest`] per [`WaveSub`], so each stage
+//! weight tile is touched once per wave instead of once per session
+//! and each session's output slice routes straight back to its own
+//! handle. Serving observability lives in the same [`Metrics`]:
+//! `act_strip_hits` / `act_strip_misses` / `act_bytes_saved` /
+//! `act_rows_reused`, plus `waves` / `wave_stacked_rows` (and the
+//! derived `weight_loads_per_wave` / `mean_wave_rows`).
 
 pub mod device;
 pub mod metrics;
@@ -57,5 +66,5 @@ pub use placement::{PlacementMap, PlacementPolicy, PlacementSnapshot};
 pub use queue::{
     Pop, ShardedQueue, TenantId, DEFAULT_TENANT, MAX_FRONT_SKIPS, STEAL_SCAN_WINDOW,
 };
-pub use router::{Coordinator, CoordinatorConfig, RequestHandle};
+pub use router::{Coordinator, CoordinatorConfig, PreTiledWeights, RequestHandle, WaveSub};
 pub use state::{MatmulResponse, ReqState, SubRequest};

@@ -57,6 +57,82 @@ impl Default for CoordinatorConfig {
     }
 }
 
+/// A weight matrix pre-sliced into its `tile x tile` M2 tiles, each
+/// `Arc`-shared with its content hash cached — built **once** per
+/// served layer weight instead of re-slicing and re-hashing on every
+/// submission. This is the submit-side analogue of the device's
+/// prepared-weight cache: the host work of tiling the stationary
+/// operand leaves the decode hot loop entirely.
+///
+/// Tiles are indexed `(kn, ko)`: contraction block `kn` (rows
+/// `kn*t..`), output block `ko` (columns `ko*t..`), both zero-padded at
+/// the ragged edges exactly as [`Mat::block`] pads — a pre-tiled
+/// submission is bit-identical to the re-slicing one.
+pub struct PreTiledWeights {
+    rows: usize,
+    cols: usize,
+    tile: usize,
+    /// `tiles[kn * tk + ko]` — row-major over (kn, ko).
+    tiles: Vec<(Arc<Mat<i8>>, u64)>,
+}
+
+impl PreTiledWeights {
+    /// Slice and hash every tile of `w` once.
+    pub fn new(w: &Mat<i8>, tile: usize) -> Self {
+        assert!(tile > 0, "tile must be positive");
+        let (tn, tk) = (w.rows().div_ceil(tile), w.cols().div_ceil(tile));
+        let mut tiles = Vec::with_capacity(tn * tk);
+        for kn in 0..tn {
+            for ko in 0..tk {
+                let t = Arc::new(w.block(kn * tile, ko * tile, tile, tile));
+                let id = t.content_hash();
+                tiles.push((t, id));
+            }
+        }
+        Self { rows: w.rows(), cols: w.cols(), tile, tiles }
+    }
+
+    /// Contraction dimension of the original matrix (`w.rows()`).
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Output dimension of the original matrix (`w.cols()`).
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn tile(&self) -> usize {
+        self.tile
+    }
+
+    /// Contraction-block count.
+    pub fn tn(&self) -> usize {
+        self.rows.div_ceil(self.tile)
+    }
+
+    /// Output-block count.
+    pub fn tk(&self) -> usize {
+        self.cols.div_ceil(self.tile)
+    }
+
+    /// The `(kn, ko)` tile and its cached content id.
+    pub fn tile_at(&self, kn: usize, ko: usize) -> (&Arc<Mat<i8>>, u64) {
+        let (t, id) = &self.tiles[kn * self.tk() + ko];
+        (t, *id)
+    }
+}
+
+/// One sub-request of a wave submission: `rows` stacked input rows
+/// belonging to one requester (a serving session), accounted to
+/// `tenant`. Row offsets are implicit — subs partition the stacked
+/// block in order.
+#[derive(Debug, Clone, Copy)]
+pub struct WaveSub {
+    pub tenant: TenantId,
+    pub rows: usize,
+}
+
 /// Handle to one submitted request.
 pub struct RequestHandle {
     rx: Receiver<MatmulResponse>,
@@ -308,42 +384,96 @@ impl Coordinator {
         rows: usize,
         w: &Mat<i8>,
     ) -> RequestHandle {
+        // A no-row request fans out no jobs: answer directly without
+        // paying the weight pre-tiling below.
+        if rows == 0 {
+            use std::sync::atomic::Ordering::Relaxed;
+            assert!(strips.is_empty(), "strip count must cover the row range");
+            let t = self.cfg.device.tile;
+            let k_dim = w.cols();
+            let (tx, rx) = channel();
+            let id = self.next_id.fetch_add(1, Relaxed);
+            self.metrics.requests_submitted.fetch_add(1, Relaxed);
+            self.metrics.tenant_submitted(tenant);
+            let req = ReqState::new(
+                0,
+                k_dim,
+                k_dim.div_ceil(t) * t,
+                0,
+                vec![SubRequest { id, row0: 0, rows: 0, tx }],
+            );
+            let completed = req.finish();
+            self.metrics.requests_completed.fetch_add(completed, Relaxed);
+            return RequestHandle { rx };
+        }
+        // Per-call pre-tiling costs exactly what the old inline
+        // slice-and-hash did; hot callers (the serving layer) build the
+        // handle once and use `submit_wave_as` directly.
+        let pretiled = PreTiledWeights::new(w, self.cfg.device.tile);
+        let subs = [WaveSub { tenant, rows }];
+        self.submit_wave_as(tenant, &subs, strips, &pretiled).pop().unwrap()
+    }
+
+    /// Submit one *wave*: the stacked pending rows of many serving
+    /// sessions against one pre-tiled weight, fanned out as (row-block
+    /// × weight-tile) jobs exactly like [`submit_strips_as`] — but with
+    /// one [`SubRequest`] per [`WaveSub`], so each session's slice of
+    /// the stacked output routes straight back to its own handle. This
+    /// is the continuous-batching entry point: each stage weight tile
+    /// is touched once per wave instead of once per session.
+    ///
+    /// `subs` partition the stacked rows in order (`sub[i]` owns rows
+    /// `Σ rows[..i] .. Σ rows[..=i]`); `strips` cover the stacked block
+    /// at `tile` granularity with zero padding past the end. Jobs queue
+    /// in `lane`'s DRR lane (a wave is one cooperative batch — tenant
+    /// fairness applies at wave admission, not at the device queue),
+    /// while each sub's own tenant is credited in the per-tenant
+    /// submission counters.
+    pub fn submit_wave_as(
+        &self,
+        lane: TenantId,
+        subs: &[WaveSub],
+        strips: Vec<Arc<Mat<i8>>>,
+        w: &PreTiledWeights,
+    ) -> Vec<RequestHandle> {
         use std::sync::atomic::Ordering::Relaxed;
         let t = self.cfg.device.tile;
+        assert_eq!(w.tile(), t, "weights were pre-tiled for a different array size");
+        assert!(!subs.is_empty(), "a wave needs at least one sub-request");
         let n_dim = w.rows();
         let k_dim = w.cols();
+        let rows: usize = subs.iter().map(|s| s.rows).sum();
         assert_eq!(strips.len(), rows.div_ceil(t), "strip count must cover the row range");
         for s in &strips {
             assert_eq!(s.rows(), t, "every strip is exactly one M1 tile tall");
             assert_eq!(s.cols(), n_dim, "strip/contraction mismatch");
         }
-        let (tn, tk) = (n_dim.div_ceil(t), k_dim.div_ceil(t));
-        let (tx, rx) = channel();
-        let id = self.next_id.fetch_add(1, Relaxed);
-        let subs = vec![SubRequest { id, row0: 0, rows, tx }];
-        self.metrics.requests_submitted.fetch_add(1, Relaxed);
-        self.metrics.tenant_submitted(tenant);
+        let (tn, tk) = (w.tn(), w.tk());
+        let mut sub_reqs = Vec::with_capacity(subs.len());
+        let mut handles = Vec::with_capacity(subs.len());
+        let mut row0 = 0usize;
+        for sub in subs {
+            let (tx, rx) = channel();
+            let id = self.next_id.fetch_add(1, Relaxed);
+            sub_reqs.push(SubRequest { id, row0, rows: sub.rows, tx });
+            handles.push(RequestHandle { rx });
+            row0 += sub.rows;
+            self.metrics.requests_submitted.fetch_add(1, Relaxed);
+            self.metrics.tenant_submitted(sub.tenant);
+        }
 
         // Degenerate request (no rows, empty contraction, or empty
         // output): answer directly, as the batched path does.
         let jobs = strips.len() * tn * tk;
         if rows == 0 || jobs == 0 {
-            let req = ReqState::new(0, k_dim, tk * t, 0, subs);
+            let req = ReqState::new(0, k_dim, tk * t, 0, sub_reqs);
             let completed = req.finish();
             self.metrics.requests_completed.fetch_add(completed, Relaxed);
-            return RequestHandle { rx };
+            return handles;
         }
-        let req = Arc::new(ReqState::new(strips.len() * t, k_dim, tk * t, jobs, subs));
+        let req = Arc::new(ReqState::new(strips.len() * t, k_dim, tk * t, jobs, sub_reqs));
 
         for kn in 0..tn {
-            // One weight tile per (kn, ko), shared by every row block.
-            let w_tiles: Vec<(Arc<Mat<i8>>, u64)> = (0..tk)
-                .map(|ko| {
-                    let wt = Arc::new(w.block(kn * t, ko * t, t, t));
-                    let tile_id = wt.content_hash();
-                    (wt, tile_id)
-                })
-                .collect();
             for (m1, strip) in strips.iter().enumerate() {
                 // Single-contraction-tile strips pass through untouched
                 // (the common serving shape — this is where the cache's
@@ -354,25 +484,26 @@ impl Coordinator {
                 } else {
                     Arc::new(strip.block(0, kn * t, t, t))
                 };
-                for (ko, (wt, tile_id)) in w_tiles.iter().enumerate() {
+                for ko in 0..tk {
+                    let (wt, tile_id) = w.tile_at(kn, ko);
                     let job = Job {
                         req: Arc::clone(&req),
                         w_tile: Arc::clone(wt),
                         x_strip: Arc::clone(&x_piece),
                         r0: m1 * t,
                         c0: ko * t,
-                        tile_id: *tile_id,
-                        tenant,
+                        tile_id,
+                        tenant: lane,
                         enqueued_at: Instant::now(),
                     };
-                    let shard = self.placement.place(*tile_id, 1);
-                    if self.pool.push(shard, tenant, job) {
+                    let shard = self.placement.place(tile_id, 1);
+                    if self.pool.push(shard, lane, job) {
                         self.metrics.backpressure_events.fetch_add(1, Relaxed);
                     }
                 }
             }
         }
-        RequestHandle { rx }
+        handles
     }
 
     /// Shared metrics handle for the in-crate serving layer (strip
@@ -617,6 +748,91 @@ mod tests {
             assert_eq!(via_strips.out, via_submit.out, "{m}x{n}x{k}");
         }
         c.shutdown();
+    }
+
+    #[test]
+    fn pretiled_weights_match_inline_slicing() {
+        // Every tile and id of the pre-tiled handle must equal what the
+        // old per-submission slice-and-hash produced, ragged edges
+        // included (zero padding participates in the content hash).
+        for (n, k, t) in [(24usize, 16usize, 8usize), (13, 10, 8), (8, 8, 8), (3, 30, 4)] {
+            let w = random_i8(n, k, (n * 31 + k) as u64);
+            let p = PreTiledWeights::new(&w, t);
+            assert_eq!((p.rows(), p.cols(), p.tile()), (n, k, t));
+            assert_eq!((p.tn(), p.tk()), (n.div_ceil(t), k.div_ceil(t)));
+            for kn in 0..p.tn() {
+                for ko in 0..p.tk() {
+                    let want = w.block(kn * t, ko * t, t, t);
+                    let (tile, id) = p.tile_at(kn, ko);
+                    assert_eq!(**tile, want, "tile ({kn},{ko}) of {n}x{k}/{t}");
+                    assert_eq!(id, want.content_hash());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn wave_submission_routes_each_subs_slice_back() {
+        // Three "sessions" with different row counts stacked into one
+        // wave: each handle must receive exactly its own rows of the
+        // stacked product, bit-exact with per-session submits.
+        let c = Coordinator::new(small());
+        let t = c.config().device.tile;
+        let nd = 16usize;
+        let w = random_i8(nd, 12, 91);
+        let pre = PreTiledWeights::new(&w, t);
+        let xs: Vec<Mat<i8>> = [5usize, 1, 9]
+            .iter()
+            .enumerate()
+            .map(|(i, &m)| random_i8(m, nd, 900 + i as u64))
+            .collect();
+        let mut stacked = xs[0].clone();
+        for x in &xs[1..] {
+            stacked = stacked.vconcat(x);
+        }
+        let subs: Vec<WaveSub> =
+            xs.iter().enumerate().map(|(i, x)| WaveSub { tenant: i as TenantId + 1, rows: x.rows() }).collect();
+        let handles = c.submit_wave_as(DEFAULT_TENANT, &subs, strips_of(&stacked, t), &pre);
+        assert_eq!(handles.len(), xs.len());
+        for (x, h) in xs.iter().zip(handles) {
+            assert_eq!(h.wait().out, x.widen().matmul(&w.widen()));
+        }
+        // Per-sub accounting: each session tenant credited one
+        // submission; the wave's jobs ran on the shared lane.
+        let ts = c.tenant_metrics();
+        for tenant in 1..=3 {
+            let t = ts.iter().find(|t| t.tenant == tenant).unwrap();
+            assert_eq!(t.requests_submitted, 1);
+            assert_eq!(t.jobs_served, 0, "wave jobs ride the lane tenant");
+        }
+        c.shutdown();
+    }
+
+    #[test]
+    fn wave_submission_loads_each_tile_once_not_once_per_sub() {
+        // The point of waving: a 4-sub wave over a single-tile weight
+        // fans out one job per strip, and the tile installs once.
+        let c = Coordinator::new(CoordinatorConfig { work_stealing: false, ..small() });
+        let w = random_i8(8, 8, 17);
+        let pre = PreTiledWeights::new(&w, 8);
+        let xs: Vec<Mat<i8>> = (0..4).map(|i| random_i8(8, 8, 40 + i)).collect();
+        let mut stacked = xs[0].clone();
+        for x in &xs[1..] {
+            stacked = stacked.vconcat(x);
+        }
+        let subs: Vec<WaveSub> =
+            xs.iter().map(|x| WaveSub { tenant: DEFAULT_TENANT, rows: x.rows() }).collect();
+        for (x, h) in xs
+            .iter()
+            .zip(c.submit_wave_as(DEFAULT_TENANT, &subs, strips_of(&stacked, 8), &pre))
+        {
+            assert_eq!(h.wait().out, x.widen().matmul(&w.widen()));
+        }
+        let m = c.shutdown();
+        assert_eq!(m.jobs_executed, 4); // one per strip
+        assert_eq!(m.weight_loads, 1, "the shared tile installs once per wave");
+        assert_eq!(m.weight_loads_skipped, 3);
+        assert_eq!(m.requests_completed, 4, "every sub got its response");
     }
 
     #[test]

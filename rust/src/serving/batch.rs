@@ -1,0 +1,486 @@
+//! The continuous-batching wave scheduler: many concurrent sessions
+//! advance through the Table-III stage graph in lockstep *waves*, so
+//! each stage's stationary weight is touched once per wave instead of
+//! once per session.
+//!
+//! # The wave model
+//!
+//! The per-session [`ServingEngine`](super::ServingEngine) advances one
+//! session at a time: every stage GEMM of every layer re-requests the
+//! same static weight tiles once per session per step — the exact
+//! redundancy DiP's weight residency exists to avoid, re-created at the
+//! serving layer. A [`WaveScheduler`] instead runs a *cohort* of ready
+//! sessions through one layer pass together: for each stage that
+//! contracts against a static layer weight (Q/K/V projections, the
+//! output projection, both FFN stages), the new rows of every cohort
+//! session are stacked into one row block and issued as a single
+//! [`submit_wave_as`] fan-out against the shared pre-tiled weight —
+//! one touch per weight tile per wave. Per-session
+//! [`WaveSub`](crate::coordinator::WaveSub) row offsets route each
+//! slice of the stacked output straight back into the right session's
+//! K/V/Y state, so results are bit-exact with per-session decode (row
+//! `i` of a stage output depends only on row `i` of the streamed
+//! operand). The attention stages (scores, context) contract against
+//! each session's *own* accumulated K/V — there is no shared
+//! stationary operand to amortize — so they fan out per session,
+//! concurrently across the cohort, exactly as the per-session engine
+//! submits them.
+//!
+//! # Continuous batching
+//!
+//! Sessions join and leave mid-flight without stalling the wave:
+//!
+//! * **Join** — [`submit`](WaveScheduler::submit) queues a session; it
+//!   is admitted between waves while the active set has room
+//!   ([`WavePolicy::max_sessions`]). A freshly admitted session's
+//!   pending rows are its whole prompt, so its *prefill rides the same
+//!   wave* as other sessions' single decode rows — no separate prefill
+//!   phase.
+//! * **Leave** — a session that has generated its requested rows is
+//!   removed from the active set at the end of the wave and parked in
+//!   [`take_finished`](WaveScheduler::take_finished); the next wave
+//!   simply stacks fewer rows.
+//! * **Budget** — each wave serves a greedy prefix of the active set
+//!   bounded by [`WavePolicy::max_wave_rows`] stacked rows and
+//!   [`WavePolicy::max_sessions`] sessions (always at least one
+//!   session, so an oversized prefill still makes progress). Served
+//!   sessions rotate to the back of the active set, so a row budget
+//!   that splits the set round-robins it instead of starving the tail.
+//!
+//! Observability: `waves` / `wave_stacked_rows` in the coordinator
+//! [`Metrics`](crate::coordinator::Metrics) (with
+//! `weight_loads_per_wave` / `mean_wave_rows` derived on the
+//! snapshot), plus a per-wave [`WaveReport`].
+//!
+//! [`submit_wave_as`]: crate::coordinator::Coordinator::submit_wave_as
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{MetricsSnapshot, TenantId, DEFAULT_TENANT};
+use crate::matrix::Mat;
+use crate::power::energy;
+
+use super::decode::ServingEngine;
+use super::graph::{run_layer_wave, LayerCtx, LayerInput};
+use super::session::Session;
+
+/// Admission/budget policy of a [`WaveScheduler`]: how much work one
+/// wave may stack. Both bounds cap per-wave latency — a wave is one
+/// synchronous pass, so everything stacked into it finishes together.
+#[derive(Debug, Clone, Copy)]
+pub struct WavePolicy {
+    /// Max activation rows stacked into one wave (greedy prefix;
+    /// always at least one session, so a prompt larger than the budget
+    /// still runs — alone).
+    pub max_wave_rows: usize,
+    /// Max sessions admitted to the active set (and thus per cohort).
+    pub max_sessions: usize,
+    /// DRR lane the batched stage jobs queue in (a wave is one
+    /// cooperative batch; tenant fairness applies at admission, and
+    /// per-session attention jobs still ride each session's own lane).
+    pub lane: TenantId,
+}
+
+impl Default for WavePolicy {
+    fn default() -> Self {
+        Self { max_wave_rows: 64, max_sessions: 16, lane: DEFAULT_TENANT }
+    }
+}
+
+/// What one wave did: cohort shape, flow (joins/leaves), and cost.
+#[derive(Debug, Clone)]
+pub struct WaveReport {
+    /// 1-based wave sequence number.
+    pub wave: u64,
+    /// Sessions served by this wave.
+    pub sessions: usize,
+    /// Activation rows stacked across the cohort (pending rows summed;
+    /// what every batched stage streamed once).
+    pub stacked_rows: usize,
+    /// Sessions admitted from the queue just before this wave.
+    pub joined: usize,
+    /// Ids of sessions that finished with this wave (left the set).
+    pub completed: Vec<u64>,
+    /// Simulated array cycles of the wave, summed over every stage
+    /// GEMM of every layer (batched stages counted once, not per
+    /// session).
+    pub sim_cycles: u64,
+    /// Wall-clock latency of the wave.
+    pub wall: Duration,
+    /// Paper-accounting energy at 1 GHz.
+    pub energy_uj: f64,
+}
+
+/// One admitted session plus its remaining work: `passes_left` counts
+/// the prefill pass and every decode step still owed.
+struct ActiveSession {
+    s: Session,
+    passes_left: usize,
+}
+
+/// The continuous-batching scheduler (see the module doc). Owns a
+/// [`ServingEngine`] for its device pool, model, pre-tiled weights and
+/// strip cache; sessions submitted here always run with KV-style row
+/// reuse on (the wave path *is* the cached path).
+pub struct WaveScheduler {
+    engine: ServingEngine,
+    policy: WavePolicy,
+    /// Admitted sessions, in rotation order (cohorts are prefixes).
+    active: VecDeque<ActiveSession>,
+    /// Submitted, not yet admitted.
+    waiting: VecDeque<ActiveSession>,
+    finished: Vec<Session>,
+    waves_run: u64,
+}
+
+impl WaveScheduler {
+    pub fn new(engine: ServingEngine, policy: WavePolicy) -> Self {
+        assert!(policy.max_wave_rows >= 1, "a wave must fit at least one row");
+        assert!(policy.max_sessions >= 1, "a wave must fit at least one session");
+        Self {
+            engine,
+            policy,
+            active: VecDeque::new(),
+            waiting: VecDeque::new(),
+            finished: Vec::new(),
+            waves_run: 0,
+        }
+    }
+
+    pub fn engine(&self) -> &ServingEngine {
+        &self.engine
+    }
+
+    pub fn policy(&self) -> WavePolicy {
+        self.policy
+    }
+
+    /// Queue a session: one prefill pass over `prompt`, then `steps`
+    /// decode steps (so `steps + 1` generated rows in total, matching
+    /// `prefill` + `steps ×` `decode_step` on the per-session engine).
+    /// The session joins the active set between waves, bounded by the
+    /// admission policy.
+    pub fn submit(&mut self, id: u64, tenant: TenantId, prompt: Mat<i8>, steps: usize) {
+        let s = self.engine.open_session(id, tenant, prompt, true);
+        self.waiting.push_back(ActiveSession { s, passes_left: steps + 1 });
+    }
+
+    /// Sessions admitted and still decoding.
+    pub fn active_sessions(&self) -> usize {
+        self.active.len()
+    }
+
+    /// Sessions submitted but not yet admitted.
+    pub fn queued_sessions(&self) -> usize {
+        self.waiting.len()
+    }
+
+    /// Take the sessions that have completed all their passes (final
+    /// activations and K/V/Y state intact, for inspection or A/B
+    /// comparison).
+    pub fn take_finished(&mut self) -> Vec<Session> {
+        std::mem::take(&mut self.finished)
+    }
+
+    /// Run one wave. Returns `None` when nothing is active or queued.
+    pub fn run_wave(&mut self) -> Option<WaveReport> {
+        use std::sync::atomic::Ordering::Relaxed;
+        // Admission: fill the active set from the queue (continuous
+        // batching — joiners prefill inside the next wave).
+        let mut joined = 0;
+        while self.active.len() < self.policy.max_sessions {
+            match self.waiting.pop_front() {
+                Some(w) => {
+                    self.active.push_back(w);
+                    joined += 1;
+                }
+                None => break,
+            }
+        }
+        if self.active.is_empty() {
+            return None;
+        }
+
+        // Cohort: the greedy prefix within the row budget (at least one
+        // session so an oversized prompt cannot wedge the queue).
+        let mut take = 0;
+        let mut stacked_rows = 0;
+        for a in &self.active {
+            let rows = a.s.pending_rows();
+            if take > 0 && stacked_rows + rows > self.policy.max_wave_rows {
+                break;
+            }
+            take += 1;
+            stacked_rows += rows;
+        }
+        let mut cohort: Vec<ActiveSession> = self.active.drain(..take).collect();
+
+        let t0 = Instant::now();
+        let metrics = self.engine.coordinator().metrics_arc();
+        let model = self.engine.model();
+        let d_model = model.dims.d_model;
+        let layers = model.layers.len();
+        let ctx = LayerCtx {
+            coord: self.engine.coordinator(),
+            cache: self.engine.strip_cache(),
+            lane: self.policy.lane,
+        };
+
+        // The per-session activation threaded layer to layer (pending
+        // rows of the token activation at layer 0, the previous layer's
+        // narrowed output afterwards).
+        let mut xs: Vec<Mat<i8>> = cohort
+            .iter()
+            .map(|a| {
+                let n = a.s.acts.rows();
+                a.s.acts.block(a.s.done_rows, 0, n - a.s.done_rows, d_model)
+            })
+            .collect();
+        let mut cycles = 0u64;
+        for l in 0..layers {
+            let (runs, c) = {
+                let inputs: Vec<LayerInput> = cohort
+                    .iter()
+                    .zip(&xs)
+                    .map(|(a, x)| {
+                        let row0 = a.s.done_rows;
+                        let state = &a.s.layers[l];
+                        LayerInput {
+                            x,
+                            prior_k: (row0 > 0).then_some(&state.k),
+                            prior_v: (row0 > 0).then_some(&state.v),
+                            row0,
+                            tenant: a.s.tenant,
+                        }
+                    })
+                    .collect();
+                run_layer_wave(&ctx, &self.engine.pretiled()[l], &inputs)
+            };
+            cycles += c;
+            for ((a, x), run) in cohort.iter_mut().zip(&mut xs).zip(runs) {
+                a.s.append_layer_rows(l, &run);
+                *x = run.y_rows;
+            }
+        }
+
+        // Close every cohort session's pass: KV-reuse accounting, mark
+        // rows done, feed the generated row back.
+        let mut reused = 0u64;
+        let mut completed = Vec::new();
+        for (a, x) in cohort.iter_mut().zip(&xs) {
+            reused += (a.s.done_rows * layers) as u64;
+            a.s.finish_pass(x);
+            a.passes_left -= 1;
+        }
+        if reused > 0 {
+            metrics.act_rows_reused.fetch_add(reused, Relaxed);
+        }
+        self.waves_run += 1;
+        metrics.waves.fetch_add(1, Relaxed);
+        metrics.wave_stacked_rows.fetch_add(stacked_rows as u64, Relaxed);
+
+        // Leave/rotate: finished sessions park, survivors go to the
+        // back of the rotation so a splitting row budget round-robins.
+        for a in cohort {
+            if a.passes_left == 0 {
+                completed.push(a.s.id);
+                self.finished.push(a.s);
+            } else {
+                self.active.push_back(a);
+            }
+        }
+
+        let cfg = self.engine.coordinator().config();
+        Some(WaveReport {
+            wave: self.waves_run,
+            sessions: take,
+            stacked_rows,
+            joined,
+            completed,
+            sim_cycles: cycles,
+            wall: t0.elapsed(),
+            energy_uj: energy::power_mw(cfg.device.arch, cfg.device.tile as u64) * cycles as f64
+                / 1e6,
+        })
+    }
+
+    /// Run waves until every submitted session has finished.
+    pub fn run_to_completion(&mut self) -> Vec<WaveReport> {
+        let mut reports = Vec::new();
+        while let Some(r) = self.run_wave() {
+            reports.push(r);
+        }
+        reports
+    }
+
+    /// Drain and stop the device pool; final metrics.
+    pub fn shutdown(self) -> MetricsSnapshot {
+        assert!(
+            self.active.is_empty() && self.waiting.is_empty(),
+            "shutdown with sessions still in flight"
+        );
+        self.engine.shutdown()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analytical::Arch;
+    use crate::coordinator::{CoordinatorConfig, DeviceConfig, PlacementPolicy};
+    use crate::matrix::random_i8;
+    use crate::serving::graph::{LayerDims, ServeModel};
+
+    fn engine(cache: usize) -> ServingEngine {
+        let dims = LayerDims { d_model: 16, d_k: 8, d_ffn: 24 };
+        let model = ServeModel::synthetic(dims, 2, 900);
+        ServingEngine::new(
+            CoordinatorConfig {
+                devices: 2,
+                device: DeviceConfig { arch: Arch::Dip, tile: 8, mac_stages: 2, ..Default::default() },
+                queue_depth: 64,
+                work_stealing: true,
+                placement: PlacementPolicy::HeatAware,
+            },
+            model,
+            cache,
+        )
+    }
+
+    /// Per-session reference: the same prompts/steps through the
+    /// engine one session at a time.
+    fn per_session_reference(prompts: &[(u64, Mat<i8>, usize)]) -> Vec<Session> {
+        let e = engine(128);
+        let out = prompts
+            .iter()
+            .map(|(id, prompt, steps)| {
+                let mut s = e.open_session(*id, *id as TenantId + 1, prompt.clone(), true);
+                e.prefill(&mut s);
+                for _ in 0..*steps {
+                    e.decode_step(&mut s);
+                }
+                s
+            })
+            .collect();
+        e.shutdown();
+        out
+    }
+
+    fn assert_sessions_match(got: &Session, want: &Session) {
+        assert_eq!(got.acts, want.acts, "session {} token rows diverged", got.id);
+        for (l, (g, w)) in got.layers.iter().zip(&want.layers).enumerate() {
+            assert_eq!(g.k, w.k, "session {} layer {l} K diverged", got.id);
+            assert_eq!(g.v, w.v, "session {} layer {l} V diverged", got.id);
+            assert_eq!(g.y, w.y, "session {} layer {l} Y diverged", got.id);
+        }
+    }
+
+    #[test]
+    fn lockstep_waves_match_per_session_decode_bit_exactly() {
+        let prompts: Vec<(u64, Mat<i8>, usize)> = (0..3)
+            .map(|i| (i, random_i8(6 + i as usize * 3, 16, 70 + i), 2 + i as usize))
+            .collect();
+        let mut ws = WaveScheduler::new(engine(128), WavePolicy::default());
+        for (id, p, steps) in &prompts {
+            ws.submit(*id, *id as TenantId + 1, p.clone(), *steps);
+        }
+        let reports = ws.run_to_completion();
+        // Staggered step counts: the longest session (id 2, 4 steps + 1
+        // prefill) bounds the wave count; earlier sessions leave early.
+        assert_eq!(reports.len(), 5);
+        assert_eq!(reports[0].sessions, 3);
+        assert_eq!(reports[0].joined, 3);
+        assert_eq!(reports[0].stacked_rows, 6 + 9 + 12);
+        assert_eq!(reports[2].completed, vec![0], "shortest session leaves first");
+        assert_eq!(reports[3].sessions, 2, "the wave shrinks as sessions leave");
+        assert_eq!(reports[4].sessions, 1);
+        let mut finished = ws.take_finished();
+        finished.sort_by_key(|s| s.id);
+        let m = ws.shutdown();
+        assert_eq!(m.waves, 5);
+        assert_eq!(m.wave_stacked_rows, 27 + 3 + 3 + 2 + 1);
+        for (got, want) in finished.iter().zip(&per_session_reference(&prompts)) {
+            assert_sessions_match(got, want);
+        }
+    }
+
+    #[test]
+    fn row_budget_splits_the_cohort_and_rotates_fairly() {
+        // Budget of one prompt: prefills serialize (one session per
+        // wave), then decode rows (1 each) batch three at a time.
+        let prompts: Vec<(u64, Mat<i8>, usize)> =
+            (0..3).map(|i| (i, random_i8(8, 16, 20 + i), 2)).collect();
+        let policy = WavePolicy { max_wave_rows: 8, ..Default::default() };
+        let mut ws = WaveScheduler::new(engine(128), policy);
+        for (id, p, steps) in &prompts {
+            ws.submit(*id, *id as TenantId + 1, p.clone(), *steps);
+        }
+        let reports = ws.run_to_completion();
+        // 3 prefill waves (8 rows each fill the budget), then the three
+        // 1-row decode streams batch under the budget: 2 steps x 1 wave.
+        assert_eq!(reports.len(), 5);
+        for r in &reports[..3] {
+            assert_eq!((r.sessions, r.stacked_rows), (1, 8), "prefills must serialize");
+        }
+        for r in &reports[3..] {
+            assert_eq!((r.sessions, r.stacked_rows), (3, 3), "decode rows must batch");
+        }
+        let mut finished = ws.take_finished();
+        finished.sort_by_key(|s| s.id);
+        ws.shutdown();
+        for (got, want) in finished.iter().zip(&per_session_reference(&prompts)) {
+            assert_sessions_match(got, want);
+        }
+    }
+
+    #[test]
+    fn sessions_join_mid_flight_without_stalling_the_wave() {
+        let a = (0u64, random_i8(6, 16, 31), 4usize);
+        let b = (1u64, random_i8(9, 16, 32), 2usize);
+        let mut ws = WaveScheduler::new(engine(128), WavePolicy::default());
+        ws.submit(a.0, 1, a.1.clone(), a.2);
+        // Two waves alone (prefill + first step)...
+        assert_eq!(ws.run_wave().unwrap().sessions, 1);
+        assert_eq!(ws.run_wave().unwrap().sessions, 1);
+        // ...then b joins: its 9-row prefill stacks with a's decode row.
+        ws.submit(b.0, 2, b.1.clone(), b.2);
+        let r = ws.run_wave().unwrap();
+        assert_eq!((r.joined, r.sessions, r.stacked_rows), (1, 2, 10));
+        let reports = ws.run_to_completion();
+        // a owes 2 more passes, b owes 2: two joint waves, then a's own.
+        assert_eq!(reports.len(), 2);
+        assert_eq!(reports[0].sessions, 2);
+        assert!(reports[0].completed.is_empty());
+        assert_eq!(reports[1].completed, vec![0, 1], "both finish on the last joint wave");
+        let mut finished = ws.take_finished();
+        finished.sort_by_key(|s| s.id);
+        ws.shutdown();
+        for (got, want) in finished.iter().zip(&per_session_reference(&[a, b])) {
+            assert_sessions_match(got, want);
+        }
+    }
+
+    #[test]
+    fn max_sessions_bounds_admission() {
+        let mut ws =
+            WaveScheduler::new(engine(0), WavePolicy { max_sessions: 2, ..Default::default() });
+        for i in 0..4u64 {
+            ws.submit(i, 1, random_i8(4, 16, 50 + i), 1);
+        }
+        let r = ws.run_wave().unwrap();
+        assert_eq!((r.joined, r.sessions), (2, 2));
+        assert_eq!(ws.queued_sessions(), 2, "admission must hold the rest back");
+        ws.run_to_completion();
+        assert_eq!(ws.take_finished().len(), 4);
+        ws.shutdown();
+    }
+
+    #[test]
+    #[should_panic(expected = "sessions still in flight")]
+    fn shutdown_with_work_queued_is_a_bug() {
+        let mut ws = WaveScheduler::new(engine(0), WavePolicy::default());
+        ws.submit(0, 1, random_i8(4, 16, 9), 1);
+        ws.shutdown();
+    }
+}

@@ -19,8 +19,8 @@ use crate::matrix::Mat;
 use crate::power::energy;
 
 use super::actcache::ActStripCache;
-use super::graph::{run_layer, LayerCtx, LayerInput, ServeModel};
-use super::session::{LayerState, Session};
+use super::graph::{run_layer, LayerCtx, LayerInput, PreTiledLayer, ServeModel};
+use super::session::Session;
 
 /// What one prefill/decode step cost and reused.
 #[derive(Debug, Clone, Copy)]
@@ -52,6 +52,11 @@ pub struct ServingEngine {
     coord: Coordinator,
     cache: Option<ActStripCache>,
     model: ServeModel,
+    /// Per-layer pre-tiled static weights (Arc'd tiles + cached ids),
+    /// built once here so no submission ever re-slices or re-hashes a
+    /// layer weight — the submit-side analogue of the device's
+    /// prepared-weight cache.
+    pretiled: Vec<PreTiledLayer>,
     cfg: CoordinatorConfig,
 }
 
@@ -64,7 +69,9 @@ impl ServingEngine {
         let cache = (strip_cache_capacity > 0).then(|| {
             ActStripCache::new(cfg.devices.max(1), strip_cache_capacity, coord.metrics_arc())
         });
-        Self { coord, cache, model, cfg }
+        let pretiled =
+            model.layers.iter().map(|w| PreTiledLayer::new(w, cfg.device.tile)).collect();
+        Self { coord, cache, model, pretiled, cfg }
     }
 
     pub fn coordinator(&self) -> &Coordinator {
@@ -77,6 +84,11 @@ impl ServingEngine {
 
     pub fn model(&self) -> &ServeModel {
         &self.model
+    }
+
+    /// The per-layer pre-tiled weights (shared with the wave scheduler).
+    pub fn pretiled(&self) -> &[PreTiledLayer] {
+        &self.pretiled
     }
 
     /// Open a session against the engine's model. `reuse` should match
@@ -112,34 +124,35 @@ impl ServingEngine {
         let row0 = if s.reuse { s.done_rows } else { 0 };
         let mut x = s.acts.block(row0, 0, n - row0, d_model);
         let mut cycles = 0u64;
-        let ctx = LayerCtx { coord: &self.coord, cache: self.cache.as_ref(), tenant: s.tenant };
-        for (l, weights) in self.model.layers.iter().enumerate() {
-            let run = {
+        let ctx = LayerCtx { coord: &self.coord, cache: self.cache.as_ref(), lane: s.tenant };
+        for l in 0..self.model.layers.len() {
+            let (run, c) = {
                 let state = &s.layers[l];
                 let (prior_k, prior_v) =
                     if row0 > 0 { (Some(&state.k), Some(&state.v)) } else { (None, None) };
-                run_layer(&ctx, weights, LayerInput { x: &x, prior_k, prior_v, row0 })
+                run_layer(
+                    &ctx,
+                    &self.pretiled[l],
+                    LayerInput { x: &x, prior_k, prior_v, row0, tenant: s.tenant },
+                )
             };
-            cycles += run.sim_cycles;
+            cycles += c;
             if row0 > 0 {
-                let state = &mut s.layers[l];
-                state.k = state.k.vconcat(&run.k_rows);
-                state.v = state.v.vconcat(&run.v_rows);
-                state.y = state.y.vconcat(&run.y_rows);
+                s.append_layer_rows(l, &run);
+                x = run.y_rows;
             } else {
-                s.layers[l] = LayerState { k: run.k_rows, v: run.v_rows, y: run.y_rows.clone() };
+                x = run.y_rows.clone();
+                s.replace_layer_rows(l, run);
             }
-            x = run.y_rows;
         }
         let reused = (row0 * self.model.layers.len()) as u64;
         if reused > 0 {
             use std::sync::atomic::Ordering::Relaxed;
             self.coord.metrics_arc().act_rows_reused.fetch_add(reused, Relaxed);
         }
-        s.done_rows = n;
-        // Feed the newest generated row back as the next input token.
-        let y_new = x.block(x.rows() - 1, 0, 1, d_model);
-        s.acts = s.acts.vconcat(&y_new);
+        // Mark the pass done and feed the newest generated row back as
+        // the next input token.
+        s.finish_pass(&x);
         let after = self.coord.metrics();
         StepReport {
             session: s.id,

@@ -19,8 +19,9 @@
 //! serve it from state instead of re-streaming it.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
-use crate::coordinator::{Coordinator, RequestHandle, TenantId};
+use crate::coordinator::{Coordinator, PreTiledWeights, RequestHandle, TenantId, WaveSub};
 use crate::matrix::{random_i8, Mat};
 use crate::workloads::dims::Stage;
 use crate::workloads::models::TransformerModel;
@@ -180,6 +181,45 @@ impl LayerWeights {
     }
 }
 
+/// One layer's six static weights, pre-sliced into `Arc`'d M2 tiles
+/// with cached content ids ([`PreTiledWeights`]) — built once per
+/// engine layer so the decode hot loop never re-slices or re-hashes a
+/// stationary weight again. The attention operands (session K/V) grow
+/// every step and are tiled fresh per pass; only the static weights
+/// are worth caching.
+pub struct PreTiledLayer {
+    wq: PreTiledWeights,
+    wk: PreTiledWeights,
+    wv: PreTiledWeights,
+    wo: PreTiledWeights,
+    w1: PreTiledWeights,
+    w2: PreTiledWeights,
+}
+
+impl PreTiledLayer {
+    pub fn new(w: &LayerWeights, tile: usize) -> Self {
+        Self {
+            wq: PreTiledWeights::new(&w.wq, tile),
+            wk: PreTiledWeights::new(&w.wk, tile),
+            wv: PreTiledWeights::new(&w.wv, tile),
+            wo: PreTiledWeights::new(&w.wo, tile),
+            w1: PreTiledWeights::new(&w.w1, tile),
+            w2: PreTiledWeights::new(&w.w2, tile),
+        }
+    }
+
+    pub fn get(&self, id: WeightId) -> &PreTiledWeights {
+        match id {
+            WeightId::Wq => &self.wq,
+            WeightId::Wk => &self.wk,
+            WeightId::Wv => &self.wv,
+            WeightId::Wo => &self.wo,
+            WeightId::W1 => &self.w1,
+            WeightId::W2 => &self.w2,
+        }
+    }
+}
+
 /// A served model: shared layer dims plus per-layer weights.
 #[derive(Debug, Clone)]
 pub struct ServeModel {
@@ -213,11 +253,16 @@ impl ServeModel {
 pub struct LayerCtx<'a> {
     pub coord: &'a Coordinator,
     pub cache: Option<&'a ActStripCache>,
-    pub tenant: TenantId,
+    /// DRR lane the *batched* (shared-weight) stage jobs queue in. A
+    /// wave is one cooperative batch, so its jobs ride one lane;
+    /// per-session attention stages still queue under each session's
+    /// own tenant (each [`LayerInput::tenant`]).
+    pub lane: TenantId,
 }
 
-/// The rows to process this pass, plus the session's accumulated K/V
-/// prefix (empty/`None` for a full recompute or prefill pass).
+/// One session's contribution to a layer pass: the rows to process,
+/// plus the session's accumulated K/V prefix (empty/`None` for a full
+/// recompute or prefill pass).
 pub struct LayerInput<'a> {
     /// Input activation rows to run (all rows for a full pass, the new
     /// rows for a cached decode step).
@@ -228,9 +273,14 @@ pub struct LayerInput<'a> {
     pub prior_v: Option<&'a Mat<i8>>,
     /// Global row index of `x`'s first row (drives the causal mask).
     pub row0: usize,
+    /// Tenant this session's work is accounted to.
+    pub tenant: TenantId,
 }
 
-/// What one layer pass produced for the processed rows.
+/// What one layer pass produced for one session's processed rows.
+/// Simulated cycles are reported per *pass*, not per session — a wave
+/// shares its batched-stage GEMMs across the cohort, so per-session
+/// attribution would double-count them.
 pub struct LayerRun {
     /// Narrowed K rows for `x` (the session appends these).
     pub k_rows: Mat<i8>,
@@ -238,8 +288,6 @@ pub struct LayerRun {
     pub v_rows: Mat<i8>,
     /// Narrowed layer output rows (the next layer's input).
     pub y_rows: Mat<i8>,
-    /// Simulated cycles summed over every stage GEMM of the pass.
-    pub sim_cycles: u64,
 }
 
 /// Zero scores whose key index exceeds the query's global row: entry
@@ -261,72 +309,210 @@ fn with_prior(prior: Option<&Mat<i8>>, new: &Mat<i8>) -> Mat<i8> {
     }
 }
 
-/// Run one layer pass: walk the stage graph in dependency waves
-/// (stages whose deps are all resolved are submitted concurrently —
-/// Q/K/V go out as one wave), threading narrowed outputs forward.
-pub fn run_layer(ctx: &LayerCtx, weights: &LayerWeights, input: LayerInput) -> LayerRun {
+/// Run one layer pass for a single session — the cohort-of-one case of
+/// [`run_layer_wave`]. Returns the session's rows plus the pass's
+/// simulated cycles.
+pub fn run_layer(ctx: &LayerCtx, weights: &PreTiledLayer, input: LayerInput) -> (LayerRun, u64) {
+    let (mut runs, cycles) = run_layer_wave(ctx, weights, &[input]);
+    (runs.pop().expect("one input, one run"), cycles)
+}
+
+/// How a stage wave's in-flight submissions come back.
+enum Pending {
+    /// One batched wave request; one handle per session, all carrying
+    /// the request's aggregate stats.
+    Batched(Vec<RequestHandle>),
+    /// Independent per-session requests (the attention stages, whose
+    /// stationary operand is session state).
+    PerSession(Vec<RequestHandle>),
+}
+
+/// One stacked streamed operand, memoized for the duration of a stage
+/// wave: Q, K and V all read the layer input, so the cohort's stack
+/// copy happens once per wave, not once per stage.
+struct StackedOperand {
+    op: Operand,
+    stacked: Arc<Mat<i8>>,
+    /// Strips shared across the stages reading `op` — only built here
+    /// when there is *no* strip cache (with a cache, each stage runs
+    /// its own lookup so cross-stage Arc-sharing stays visible in the
+    /// cache's hit accounting, as PR 3 documented and tests pin).
+    strips: Option<Vec<Arc<Mat<i8>>>>,
+}
+
+/// Run one layer pass for a *cohort* of sessions in lockstep: walk the
+/// stage graph in dependency waves, and at each stage either
+///
+/// * **batch** — a stage contracting against a static layer weight
+///   (Q/K/V, the output projection, both FFN stages) stacks every
+///   session's rows into one row block and goes out as a single
+///   [`submit_wave_as`] fan-out, so the stage's weight tiles are
+///   touched once per wave instead of once per session, or
+/// * **fan out per session** — the attention stages (scores, context)
+///   contract against each session's own accumulated K/V, so there is
+///   no shared stationary operand to amortize; they submit per session
+///   (concurrently across the cohort) under each session's tenant.
+///
+/// Per-session [`WaveSub`] row offsets route each stacked output slice
+/// back to its session, so results are bit-exact with running each
+/// session alone — row `i` of a stage output depends only on row `i`
+/// of the streamed operand.
+///
+/// Returns one [`LayerRun`] per input (same order) and the pass's
+/// simulated cycles (batched-stage cycles counted once, not per
+/// session).
+///
+/// [`submit_wave_as`]: crate::coordinator::Coordinator::submit_wave_as
+pub fn run_layer_wave(
+    ctx: &LayerCtx,
+    weights: &PreTiledLayer,
+    inputs: &[LayerInput],
+) -> (Vec<LayerRun>, u64) {
     let tile = ctx.coord.config().device.tile;
-    let rows = input.x.rows();
-    assert!(rows > 0, "a layer pass needs at least one input row");
+    assert!(!inputs.is_empty(), "a wave needs at least one session");
+    for (i, input) in inputs.iter().enumerate() {
+        assert!(input.x.rows() > 0, "session {i} contributed an empty row block");
+    }
+    let subs: Vec<WaveSub> =
+        inputs.iter().map(|i| WaveSub { tenant: i.tenant, rows: i.x.rows() }).collect();
+    let total_rows: usize = subs.iter().map(|s| s.rows).sum();
     let nodes = layer_graph();
-    let mut env: HashMap<StageId, Mat<i8>> = HashMap::new();
+    // Per-session stage outputs; every env progresses in lockstep, so
+    // envs[0] decides stage readiness for the whole cohort.
+    let mut envs: Vec<HashMap<StageId, Mat<i8>>> = inputs.iter().map(|_| HashMap::new()).collect();
     let mut cycles = 0u64;
 
     let mut remaining: Vec<StageNode> = nodes.to_vec();
     while !remaining.is_empty() {
         let (ready, rest): (Vec<StageNode>, Vec<StageNode>) = remaining
             .into_iter()
-            .partition(|n| n.deps().iter().all(|d| env.contains_key(d)));
+            .partition(|n| n.deps().iter().all(|d| envs[0].contains_key(d)));
         assert!(!ready.is_empty(), "stage graph has a cycle");
         remaining = rest;
 
-        // Submit the whole wave before waiting on any of it.
-        let handles: Vec<(StageNode, RequestHandle)> = ready
-            .into_iter()
-            .map(|node| {
-                let x: &Mat<i8> = match node.x {
-                    Operand::Input => input.x,
-                    Operand::Out(s) => &env[&s],
-                };
-                // Static weights are borrowed (no per-pass clone; the
-                // decode hot loop resubmits them every step); the
-                // session-grown attention operands are computed fresh.
-                let computed: Mat<i8>;
-                let w: &Mat<i8> = match node.w {
-                    WSource::Weight(id) => weights.get(id),
-                    WSource::StageT(s) => {
-                        computed = with_prior(input.prior_k.filter(|_| s == StageId::K), &env[&s])
+        // Submit the whole stage wave before waiting on any of it.
+        let mut stack_memo: Vec<StackedOperand> = Vec::new();
+        let mut pending: Vec<(StageNode, Pending)> = Vec::with_capacity(ready.len());
+        for node in ready {
+            let xs: Vec<&Mat<i8>> = (0..inputs.len())
+                .map(|i| match node.x {
+                    Operand::Input => inputs[i].x,
+                    Operand::Out(s) => &envs[i][&s],
+                })
+                .collect();
+            let p = match node.w {
+                WSource::Weight(id) => {
+                    // Shared static weight: stack the cohort into one
+                    // row block and submit once. A cohort of one skips
+                    // the stacking copy entirely; larger cohorts build
+                    // each distinct operand's stack (and, uncached,
+                    // its strips) once per stage wave via the memo.
+                    let strips = if xs.len() == 1 {
+                        build_strips(xs[0], tile, ctx.cache)
+                    } else {
+                        let idx = match stack_memo.iter().position(|e| e.op == node.x) {
+                            Some(idx) => idx,
+                            None => {
+                                let cols = xs[0].cols();
+                                let mut m = Mat::<i8>::zeros(total_rows, cols);
+                                let mut r0 = 0;
+                                for &x in &xs {
+                                    debug_assert_eq!(x.cols(), cols, "stage width mismatch");
+                                    m.set_block(r0, 0, x);
+                                    r0 += x.rows();
+                                }
+                                let stacked = Arc::new(m);
+                                let strips = ctx
+                                    .cache
+                                    .is_none()
+                                    .then(|| build_strips(&stacked, tile, None));
+                                stack_memo.push(StackedOperand { op: node.x, stacked, strips });
+                                stack_memo.len() - 1
+                            }
+                        };
+                        match &stack_memo[idx].strips {
+                            Some(shared) => shared.clone(),
+                            None => build_strips(&stack_memo[idx].stacked, tile, ctx.cache),
+                        }
+                    };
+                    Pending::Batched(ctx.coord.submit_wave_as(
+                        ctx.lane,
+                        &subs,
+                        strips,
+                        weights.get(id),
+                    ))
+                }
+                // Session-grown attention operands: computed fresh,
+                // one request per session.
+                WSource::StageT(s) => Pending::PerSession(
+                    xs.iter()
+                        .enumerate()
+                        .map(|(i, &x)| {
+                            let w = with_prior(
+                                inputs[i].prior_k.filter(|_| s == StageId::K),
+                                &envs[i][&s],
+                            )
                             .transpose();
-                        &computed
+                            let strips = build_strips(x, tile, ctx.cache);
+                            ctx.coord.submit_strips_as(inputs[i].tenant, strips, x.rows(), &w)
+                        })
+                        .collect(),
+                ),
+                WSource::Stage(s) => Pending::PerSession(
+                    xs.iter()
+                        .enumerate()
+                        .map(|(i, &x)| {
+                            let w = with_prior(
+                                inputs[i].prior_v.filter(|_| s == StageId::V),
+                                &envs[i][&s],
+                            );
+                            let strips = build_strips(x, tile, ctx.cache);
+                            ctx.coord.submit_strips_as(inputs[i].tenant, strips, x.rows(), &w)
+                        })
+                        .collect(),
+                ),
+            };
+            pending.push((node, p));
+        }
+
+        for (node, p) in pending {
+            match p {
+                Pending::Batched(handles) => {
+                    assert!(!node.causal, "batched stages are attention-free");
+                    for (i, h) in handles.into_iter().enumerate() {
+                        let resp = h.wait();
+                        if i == 0 {
+                            // Every sub of a wave carries the request's
+                            // aggregate stats: count them once.
+                            cycles += resp.stats.cycles;
+                        }
+                        envs[i].insert(node.id, narrow_mat(&resp.out));
                     }
-                    WSource::Stage(s) => {
-                        computed =
-                            with_prior(input.prior_v.filter(|_| s == StageId::V), &env[&s]);
-                        &computed
+                }
+                Pending::PerSession(handles) => {
+                    for (i, h) in handles.into_iter().enumerate() {
+                        let resp = h.wait();
+                        cycles += resp.stats.cycles;
+                        let mut out = resp.out;
+                        if node.causal {
+                            mask_causal(&mut out, inputs[i].row0);
+                        }
+                        envs[i].insert(node.id, narrow_mat(&out));
                     }
-                };
-                let strips = build_strips(x, tile, ctx.cache);
-                let h = ctx.coord.submit_strips_as(ctx.tenant, strips, x.rows(), w);
-                (node, h)
-            })
-            .collect();
-        for (node, h) in handles {
-            let resp = h.wait();
-            cycles += resp.stats.cycles;
-            let mut out = resp.out;
-            if node.causal {
-                mask_causal(&mut out, input.row0);
+                }
             }
-            env.insert(node.id, narrow_mat(&out));
         }
     }
 
-    LayerRun {
-        k_rows: env.remove(&StageId::K).expect("K stage ran"),
-        v_rows: env.remove(&StageId::V).expect("V stage ran"),
-        y_rows: env.remove(&StageId::FfnDown).expect("FfnDown stage ran"),
-        sim_cycles: cycles,
-    }
+    let runs = envs
+        .into_iter()
+        .map(|mut env| LayerRun {
+            k_rows: env.remove(&StageId::K).expect("K stage ran"),
+            v_rows: env.remove(&StageId::V).expect("V stage ran"),
+            y_rows: env.remove(&StageId::FfnDown).expect("FfnDown stage ran"),
+        })
+        .collect();
+    (runs, cycles)
 }
 
 #[cfg(test)]
@@ -389,6 +575,71 @@ mod tests {
         let mut t = Mat::from_fn(1, 3, |_, _| 7i32);
         mask_causal(&mut t, 2); // last global row: nothing masked
         assert_eq!(t, Mat::from_vec(1, 3, vec![7, 7, 7]));
+    }
+
+    #[test]
+    fn pretiled_layer_covers_all_six_weights() {
+        let dims = LayerDims { d_model: 16, d_k: 8, d_ffn: 24 };
+        let model = ServeModel::synthetic(dims, 1, 33);
+        let w = &model.layers[0];
+        let p = PreTiledLayer::new(w, 8);
+        for id in [WeightId::Wq, WeightId::Wk, WeightId::Wv, WeightId::Wo, WeightId::W1, WeightId::W2] {
+            let m = w.get(id);
+            let t = p.get(id);
+            assert_eq!((t.rows(), t.cols()), (m.rows(), m.cols()), "{id:?}");
+            let (tile0, id0) = t.tile_at(0, 0);
+            assert_eq!(**tile0, m.block(0, 0, 8, 8), "{id:?}");
+            assert_eq!(id0, m.block(0, 0, 8, 8).content_hash());
+        }
+    }
+
+    #[test]
+    fn wave_cohort_is_bit_exact_with_per_session_passes() {
+        // The tentpole invariant at layer granularity: a 3-session wave
+        // pass must produce exactly the K/V/Y rows each session gets
+        // alone — the batched stages are row-independent and the
+        // attention stages never left the session.
+        use crate::analytical::Arch;
+        use crate::coordinator::{CoordinatorConfig, DeviceConfig, PlacementPolicy};
+
+        let dims = LayerDims { d_model: 16, d_k: 8, d_ffn: 24 };
+        let model = ServeModel::synthetic(dims, 1, 501);
+        let pretiled = PreTiledLayer::new(&model.layers[0], 8);
+        let coord = Coordinator::new(CoordinatorConfig {
+            devices: 2,
+            device: DeviceConfig { arch: Arch::Dip, tile: 8, mac_stages: 2, ..Default::default() },
+            queue_depth: 64,
+            work_stealing: true,
+            placement: PlacementPolicy::HeatAware,
+        });
+        let ctx = LayerCtx { coord: &coord, cache: None, lane: 0 };
+        // Mixed shapes: a prefill-size block, a single decode row with
+        // prior K/V, and a mid-size block.
+        let xs = [random_i8(10, 16, 1), random_i8(1, 16, 2), random_i8(5, 16, 3)];
+        let prior_k = random_i8(4, 8, 4);
+        let prior_v = random_i8(4, 8, 5);
+        let input = |i: usize| LayerInput {
+            x: &xs[i],
+            prior_k: (i == 1).then_some(&prior_k),
+            prior_v: (i == 1).then_some(&prior_v),
+            row0: if i == 1 { 4 } else { 0 },
+            tenant: i as TenantId + 1,
+        };
+        let (wave_runs, wave_cycles) =
+            run_layer_wave(&ctx, &pretiled, &[input(0), input(1), input(2)]);
+        let mut solo_cycles = 0;
+        for (i, wave) in wave_runs.iter().enumerate() {
+            let (solo, c) = run_layer(&ctx, &pretiled, input(i));
+            solo_cycles += c;
+            assert_eq!(wave.k_rows, solo.k_rows, "session {i} K diverged");
+            assert_eq!(wave.v_rows, solo.v_rows, "session {i} V diverged");
+            assert_eq!(wave.y_rows, solo.y_rows, "session {i} Y diverged");
+        }
+        assert!(
+            wave_cycles < solo_cycles,
+            "one wave ({wave_cycles} cycles) must beat three solo passes ({solo_cycles})"
+        );
+        coord.shutdown();
     }
 
     #[test]

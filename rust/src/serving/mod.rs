@@ -37,23 +37,49 @@
 //!   sessions) a decode step touches the array for one M1 tile per
 //!   stage instead of the whole prefix.
 //!
+//! # Continuous batching: the wave scheduler
+//!
+//! Per-session decode still re-requests every *weight* tile once per
+//! session per step — the third redundancy, attacked by [`batch`]'s
+//! [`WaveScheduler`]: concurrent sessions advance through the stage
+//! graph in lockstep **waves**. Each stage that contracts against a
+//! static layer weight stacks the new rows of every ready session into
+//! one row block and goes out as a single
+//! [`submit_wave_as`](crate::coordinator::Coordinator::submit_wave_as)
+//! fan-out against the layer's [`PreTiledLayer`] (Arc'd tiles + cached
+//! ids, built once per engine), so each stage weight is touched once
+//! per wave instead of once per session; per-session sub-request row
+//! offsets route each output slice back into the right session's
+//! K/V/Y state, preserving the per-session activation reuse above.
+//! The attention stages contract against session-private K/V and stay
+//! per-session. Sessions **join mid-flight** (a joiner's prefill rides
+//! the same wave as others' decode rows), **leave without stalling**
+//! the wave, and a per-wave admission/budget policy ([`WavePolicy`]:
+//! max stacked rows, max sessions, with cohort rotation) keeps
+//! per-wave latency bounded.
+//!
 //! Observability: `act_strip_hits` / `act_strip_misses` /
-//! `act_bytes_saved` / `act_rows_reused` in the coordinator
-//! [`Metrics`](crate::coordinator::Metrics), and per-step
-//! [`StepReport`]s (rows processed vs reused, simulated cycles, wall
-//! latency, strip hit counts, energy).
+//! `act_bytes_saved` / `act_rows_reused` and `waves` /
+//! `wave_stacked_rows` (plus the derived `weight_loads_per_wave` /
+//! `mean_wave_rows`) in the coordinator
+//! [`Metrics`](crate::coordinator::Metrics), per-step [`StepReport`]s
+//! on the per-session engine, and per-wave [`WaveReport`]s on the
+//! scheduler.
 //!
 //! [`submit_strips_as`]: crate::coordinator::Coordinator::submit_strips_as
 
 pub mod actcache;
+pub mod batch;
 pub mod decode;
 pub mod graph;
 pub mod session;
 
 pub use actcache::{build_strips, ActStripCache};
+pub use batch::{WavePolicy, WaveReport, WaveScheduler};
 pub use decode::{ServingEngine, StepReport};
 pub use graph::{
-    layer_graph, narrow, narrow_mat, run_layer, LayerCtx, LayerDims, LayerInput, LayerRun,
-    LayerWeights, Operand, ServeModel, StageId, StageNode, WSource, WeightId, NARROW_SHIFT,
+    layer_graph, narrow, narrow_mat, run_layer, run_layer_wave, LayerCtx, LayerDims, LayerInput,
+    LayerRun, LayerWeights, Operand, PreTiledLayer, ServeModel, StageId, StageNode, WSource,
+    WeightId, NARROW_SHIFT,
 };
 pub use session::{LayerState, Session};

@@ -12,7 +12,7 @@
 use crate::coordinator::TenantId;
 use crate::matrix::Mat;
 
-use super::graph::LayerDims;
+use super::graph::{LayerDims, LayerRun};
 
 /// Per-layer accumulated rows (narrowed i8 activations).
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -74,6 +74,32 @@ impl Session {
     /// fed-back row between decode steps).
     pub fn pending_rows(&self) -> usize {
         self.acts.rows() - self.done_rows
+    }
+
+    /// Append one pass's new rows to layer `l`'s accumulated state (the
+    /// reuse path: prior rows stay; appending to an empty state is the
+    /// prefill case).
+    pub fn append_layer_rows(&mut self, l: usize, run: &LayerRun) {
+        let state = &mut self.layers[l];
+        state.k = state.k.vconcat(&run.k_rows);
+        state.v = state.v.vconcat(&run.v_rows);
+        state.y = state.y.vconcat(&run.y_rows);
+    }
+
+    /// Replace layer `l`'s state wholesale (the full-recompute baseline
+    /// rewrites every row each step, which keeps the final-state A/B
+    /// comparison honest).
+    pub fn replace_layer_rows(&mut self, l: usize, run: LayerRun) {
+        self.layers[l] = LayerState { k: run.k_rows, v: run.v_rows, y: run.y_rows };
+    }
+
+    /// Close one pass: mark every current row processed and feed the
+    /// newest generated row back as the next input token. `final_y` is
+    /// the last layer's output rows for this pass.
+    pub fn finish_pass(&mut self, final_y: &Mat<i8>) {
+        self.done_rows = self.acts.rows();
+        let y_new = final_y.block(final_y.rows() - 1, 0, 1, final_y.cols());
+        self.acts = self.acts.vconcat(&y_new);
     }
 }
 

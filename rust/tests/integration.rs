@@ -5,14 +5,15 @@
 use dip_core::analytical::{compare::compare_at, Arch};
 use dip_core::arch::{dip::DipArray, ws::WsArray, SystolicArray};
 use dip_core::bench_harness::scenarios::{
-    assert_cached_strictly_cheaper, cold_share_with_growing_plug, run_decode_mix,
-    serve_two_model_bursts, DecodeMix, FloodScenario, TwoModelBurst,
+    assert_cached_strictly_cheaper, assert_waved_strictly_cheaper, cold_share_with_growing_plug,
+    run_decode_mix, run_wave_mix, run_wave_mix_per_session, serve_two_model_bursts, DecodeMix,
+    FloodScenario, TwoModelBurst, WaveMix, WaveSessionSpec,
 };
 use dip_core::bench_harness::{fig5, fig6, table1, table2, table4};
 use dip_core::coordinator::{Coordinator, CoordinatorConfig, DeviceConfig, PlacementPolicy};
 use dip_core::matrix::{random_i8, Mat};
 use dip_core::power::energy;
-use dip_core::serving::LayerDims;
+use dip_core::serving::{LayerDims, WavePolicy};
 use dip_core::tiling::schedule::{compare_workload, workload_cost, TilingConfig};
 use dip_core::workloads::dims::{layer_workloads, MatMulDims};
 use dip_core::workloads::models::model_by_name;
@@ -270,6 +271,70 @@ fn serving_activation_cache_ab_bit_exact_and_strictly_cheaper() {
     // prefix blocks of earlier ones.
     let prefill_hits: u64 = cached.per_step.iter().take(cfg.sessions).map(|r| r.strip_hits).sum();
     assert!(prefill_hits > 0, "prefill must hit the strip cache");
+}
+
+#[test]
+fn wave_batched_decode_with_joins_and_leaves_is_bit_exact_and_cheaper() {
+    // The continuous-batching acceptance scenario: five sessions with
+    // staggered lengths, three present from the start, two joining
+    // mid-flight (waves 2 and 4), all leaving at different waves. The
+    // wave scheduler must reproduce per-session decode bit-exactly
+    // (acts and all K/V/Y layer state) while performing strictly fewer
+    // weight-tile installs, streaming strictly fewer rows, and costing
+    // strictly fewer simulated cycles — each stage weight is loaded
+    // once per wave instead of once per session.
+    let cfg = WaveMix {
+        tile: 8,
+        layers: 2,
+        dims: LayerDims { d_model: 16, d_k: 8, d_ffn: 24 },
+        sessions: vec![
+            WaveSessionSpec { join_after: 0, prompt_rows: 12, steps: 6 },
+            WaveSessionSpec { join_after: 0, prompt_rows: 9, steps: 4 },
+            WaveSessionSpec { join_after: 0, prompt_rows: 11, steps: 8 },
+            WaveSessionSpec { join_after: 2, prompt_rows: 10, steps: 5 },
+            WaveSessionSpec { join_after: 4, prompt_rows: 8, steps: 3 },
+        ],
+        devices: 2,
+        seed: 7300,
+        strip_cache_capacity: 512,
+        policy: WavePolicy { max_wave_rows: 48, max_sessions: 8, ..Default::default() },
+    };
+    let waved = run_wave_mix(&cfg);
+    let solo = run_wave_mix_per_session(&cfg);
+    let ab = assert_waved_strictly_cheaper(&waved, &solo);
+    assert!(ab.weight_loads_ratio > 1.0 && ab.cycles_ratio > 1.0 && ab.rows_ratio > 1.0);
+
+    // The join/leave trace is deterministic: joins land exactly where
+    // the specs say, the cohort never exceeds the policy, and every
+    // session leaves exactly once.
+    let joins: usize = waved.reports.iter().map(|r| r.joined).sum();
+    assert_eq!(joins, cfg.sessions.len());
+    assert_eq!(waved.reports[0].joined, 3, "three sessions present from the start");
+    assert_eq!(waved.reports[2].joined, 1, "session 3 joins at wave 2");
+    assert_eq!(waved.reports[4].joined, 1, "session 4 joins at wave 4");
+    let left: Vec<u64> =
+        waved.reports.iter().flat_map(|r| r.completed.iter().copied()).collect();
+    let mut sorted = left.clone();
+    sorted.sort_unstable();
+    assert_eq!(sorted, vec![0, 1, 2, 3, 4], "every session leaves exactly once");
+    for r in &waved.reports {
+        assert!(r.sessions >= 1 && r.sessions <= cfg.policy.max_sessions);
+        assert!(
+            r.sessions == 1 || r.stacked_rows <= cfg.policy.max_wave_rows,
+            "wave {} stacked {} rows over budget with a multi-session cohort",
+            r.wave,
+            r.stacked_rows
+        );
+    }
+    // Session 1 (prefill + 4 steps, present from wave 0) leaves at
+    // wave 5; the longest session (id 2, 9 passes) bounds the trace.
+    assert_eq!(waved.reports.len(), 9);
+    assert!(waved.reports[4].completed.contains(&1));
+    assert_eq!(waved.reports[8].completed, vec![2]);
+    // Mid-flight joins ride a shared wave: wave 2 stacks session 3's
+    // 10-row prefill with the three 1-row decode streams.
+    assert_eq!(waved.reports[2].sessions, 4);
+    assert_eq!(waved.reports[2].stacked_rows, 13);
 }
 
 #[test]

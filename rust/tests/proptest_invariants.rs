@@ -23,6 +23,10 @@
 //!    reference for ragged shapes,
 //!  * a randomized autoregressive decode trace is bit-exact with the
 //!    activation cache on vs off (and strictly cheaper with it on),
+//!  * a randomized multi-session trace through the continuous-batching
+//!    wave scheduler (mid-flight joins, staggered leaves, row budgets)
+//!    is bit-exact with per-session decode while performing strictly
+//!    fewer weight-tile installs and streaming strictly fewer rows,
 //!  * the activation-strip LRU never exceeds its capacity bound and
 //!    hits are pointer-shared.
 
@@ -32,14 +36,15 @@ use dip_core::analytical::{latency_cycles, Arch};
 use dip_core::arch::permute::{permute, unpermute};
 use dip_core::arch::{dip::DipArray, ws::WsArray, SystolicArray};
 use dip_core::bench_harness::scenarios::{
-    assert_cached_strictly_cheaper, run_decode_mix, DecodeMix,
+    assert_cached_strictly_cheaper, assert_waved_strictly_cheaper, run_decode_mix, run_wave_mix,
+    run_wave_mix_per_session, DecodeMix, WaveMix, WaveSessionSpec,
 };
 use dip_core::coordinator::{
     Coordinator, CoordinatorConfig, DeviceConfig, Metrics, PlacementPolicy, ShardedQueue,
     TenantId, MAX_FRONT_SKIPS,
 };
 use dip_core::matrix::{random_i8, Mat};
-use dip_core::serving::{ActStripCache, LayerDims};
+use dip_core::serving::{ActStripCache, LayerDims, WavePolicy};
 use dip_core::tiling::schedule::{run_tiled_matmul, TilingConfig, WeightLoadPolicy};
 
 /// Deterministic case generator.
@@ -461,6 +466,71 @@ fn prop_decode_trace_bit_exact_with_cache_on_vs_off() {
             cfg.prefill_rows,
             cfg.steps
         );
+    }
+}
+
+#[test]
+fn prop_wave_decode_bit_exact_with_strictly_fewer_weight_loads() {
+    // Randomized continuous-batching traces: session counts, prompt
+    // lengths, step counts, mid-flight joins, wave budgets, layer
+    // counts, dims and device counts all vary. The wave scheduler must
+    // reproduce per-session decode bit-exactly (acts and all K/V/Y
+    // state, asserted inside assert_waved_strictly_cheaper) while
+    // performing strictly fewer weight-tile installs, streaming
+    // strictly fewer rows, and costing strictly fewer cycles. The
+    // strictness is structural, not lucky: at least two sessions are
+    // present from wave 0 and the row budget (>= 16) always fits one
+    // decode cohort, so a multi-session wave exists; and each layer
+    // has at least 6 distinct stage tiles against at most 2 devices,
+    // so per-session passes must re-install tiles a wave touches once.
+    let mut g = Gen(0x3A7E5);
+    for trial in 0..4 {
+        let sessions = g.range(2, 4) as usize;
+        let specs: Vec<WaveSessionSpec> = (0..sessions)
+            .map(|i| WaveSessionSpec {
+                join_after: if i < 2 { 0 } else { g.range(0, 3) as usize },
+                prompt_rows: 4 + g.range(0, 8) as usize,
+                steps: g.range(1, 3) as usize,
+            })
+            .collect();
+        let cfg = WaveMix {
+            tile: 8,
+            layers: g.range(1, 2) as usize,
+            dims: LayerDims {
+                d_model: 8 * g.range(1, 2) as usize,
+                d_k: 8,
+                d_ffn: 8 * g.range(1, 3) as usize,
+            },
+            sessions: specs,
+            devices: g.range(1, 2) as usize,
+            seed: g.next(),
+            strip_cache_capacity: g.range(8, 64) as usize,
+            policy: WavePolicy {
+                max_wave_rows: 16 + g.range(0, 48) as usize,
+                max_sessions: g.range(2, 8) as usize,
+                ..Default::default()
+            },
+        };
+        let waved = run_wave_mix(&cfg);
+        let solo = run_wave_mix_per_session(&cfg);
+        let ab = assert_waved_strictly_cheaper(&waved, &solo);
+        assert!(
+            ab.weight_loads_ratio > 1.0 && ab.rows_ratio > 1.0,
+            "trial {trial}: sessions={} devices={} budget={}",
+            cfg.sessions.len(),
+            cfg.devices,
+            cfg.policy.max_wave_rows
+        );
+        // Sessions joining, leaving, and splitting over the budget must
+        // never stack a multi-session wave past the row budget.
+        for r in &waved.reports {
+            assert!(
+                r.sessions == 1 || r.stacked_rows <= cfg.policy.max_wave_rows,
+                "trial {trial}: wave {} overfilled ({} rows)",
+                r.wave,
+                r.stacked_rows
+            );
+        }
     }
 }
 
