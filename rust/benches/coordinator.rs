@@ -14,15 +14,11 @@ use dip_core::bench_harness::report::Json;
 use dip_core::bench_harness::scenarios::{
     cold_share_with_growing_plug, serve_two_model_bursts, FloodScenario, TwoModelBurst,
 };
-use dip_core::bench_harness::timing::{bench, report_throughput};
+use dip_core::bench_harness::timing::{bench, report_throughput, smoke_mode};
 use dip_core::coordinator::{
     Coordinator, CoordinatorConfig, DeviceConfig, MetricsSnapshot, PlacementPolicy,
 };
 use dip_core::matrix::{random_i8, Mat};
-
-fn smoke() -> bool {
-    std::env::var("DIP_BENCH_SMOKE").map(|v| !v.is_empty() && v != "0").unwrap_or(false)
-}
 
 fn config(arch: Arch, devices: usize) -> CoordinatorConfig {
     CoordinatorConfig {
@@ -132,7 +128,7 @@ fn fairness_scenario(hot_requests: usize, cold_requests: usize, plug_rows: usize
 }
 
 fn main() {
-    let smoke = smoke();
+    let smoke = smoke_mode();
     let requests = if smoke { 8 } else { 64 };
     if smoke {
         println!("[smoke mode: reduced sizes]");
@@ -163,11 +159,13 @@ fn main() {
     println!("\n=== Repeated-weight affinity reuse (same W, {requests} requests) ===");
     let m = serve(Arch::Dip, 4, requests, 1, true);
     println!(
-        "jobs {}  weight loads {}  skipped {} ({:.0}% reuse)  prepared-cache hits {}  steals {}  load cycles saved {}",
+        "jobs {}  weight loads {}  skipped {} ({:.0}% reuse)  coalesced {} ({:.0}%)  prepared-cache hits {}  steals {}  load cycles saved {}",
         m.jobs_executed,
         m.weight_loads,
         m.weight_loads_skipped,
         m.weight_reuse_rate() * 100.0,
+        m.jobs_coalesced,
+        m.coalesce_rate() * 100.0,
         m.cache_hits,
         m.steals,
         m.weight_load_cycles_saved,
@@ -206,6 +204,8 @@ fn main() {
         ),
         ("repeated_weight_jobs", Json::num(m.jobs_executed as f64)),
         ("repeated_weight_loads_skipped", Json::num(m.weight_loads_skipped as f64)),
+        ("repeated_weight_jobs_coalesced", Json::num(m.jobs_coalesced as f64)),
+        ("repeated_weight_coalesce_rate", Json::num(m.coalesce_rate())),
         ("repeated_weight_reuse_rate", Json::num(m.weight_reuse_rate())),
         ("repeated_weight_cycles_saved", Json::num(m.weight_load_cycles_saved as f64)),
         ("steals", Json::num(m.steals as f64)),

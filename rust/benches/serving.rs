@@ -21,12 +21,8 @@ use dip_core::bench_harness::scenarios::{
     assert_cached_strictly_cheaper, assert_waved_strictly_cheaper, run_decode_mix, run_wave_mix,
     run_wave_mix_per_session, DecodeMix, DecodeOutcome, WaveMix, WaveOutcome, WaveSessionSpec,
 };
-use dip_core::bench_harness::timing::{bench, report_throughput};
+use dip_core::bench_harness::timing::{bench, report_throughput, smoke_mode};
 use dip_core::serving::{LayerDims, WavePolicy};
-
-fn smoke() -> bool {
-    std::env::var("DIP_BENCH_SMOKE").map(|v| !v.is_empty() && v != "0").unwrap_or(false)
-}
 
 fn outcome_json(o: &DecodeOutcome) -> Json {
     let m = &o.metrics;
@@ -34,6 +30,8 @@ fn outcome_json(o: &DecodeOutcome) -> Json {
         ("sim_cycles", Json::num(m.sim_cycles as f64)),
         ("rows_streamed", Json::num(m.rows_streamed as f64)),
         ("jobs_executed", Json::num(m.jobs_executed as f64)),
+        ("jobs_coalesced", Json::num(m.jobs_coalesced as f64)),
+        ("coalesce_rate", Json::num(m.coalesce_rate())),
         ("weight_loads", Json::num(m.weight_loads as f64)),
         ("weight_loads_skipped", Json::num(m.weight_loads_skipped as f64)),
         ("weight_reuse_rate", Json::num(m.weight_reuse_rate())),
@@ -48,7 +46,7 @@ fn outcome_json(o: &DecodeOutcome) -> Json {
 }
 
 fn main() {
-    let smoke = smoke();
+    let smoke = smoke_mode();
     if smoke {
         println!("[smoke mode: reduced sizes]");
     }
@@ -202,6 +200,8 @@ fn main() {
             ("sim_cycles", Json::num(o.metrics.sim_cycles as f64)),
             ("rows_streamed", Json::num(o.metrics.rows_streamed as f64)),
             ("jobs_executed", Json::num(o.metrics.jobs_executed as f64)),
+            ("jobs_coalesced", Json::num(o.metrics.jobs_coalesced as f64)),
+            ("coalesce_rate", Json::num(o.metrics.coalesce_rate())),
             ("weight_loads", Json::num(o.metrics.weight_loads as f64)),
             ("weight_loads_skipped", Json::num(o.metrics.weight_loads_skipped as f64)),
             ("waves", Json::num(o.metrics.waves as f64)),

@@ -15,9 +15,18 @@
 //! Timing contract (validated by tests + proptest against eqs (5)–(7)):
 //! a single `N x N` tile completes in `2N + S - 2` cycles and TFPU under
 //! streaming is `N` cycles. Synchronization register overhead: zero.
+//!
+//! Execution follows the two-path contract of [`arch`](crate::arch):
+//! `run_tile` goes through the derotated-GEMM kernel
+//! ([`kernel`](super::kernel)) with closed-form statistics, while
+//! `run_inner` keeps the register-transfer reference (and the traced
+//! walkthrough) alive; [`DipArray::run_tile_legacy`] preserves the
+//! pre-kernel wavefront fast path as the bench's A/B baseline.
+
+use std::sync::Arc;
 
 use super::fifo::ShiftFifo;
-use super::permute::permute;
+use super::kernel;
 use super::{weight_load_reg8_writes, PreparedWeights, SystolicArray, TileRun};
 use crate::matrix::Mat;
 use crate::sim::stats::{EventCounts, RunStats};
@@ -29,13 +38,29 @@ const INVALID: i32 = -1;
 pub struct DipArray {
     n: usize,
     mac_stages: u64,
-    /// Stationary *permutated* weights, row-major.
+    /// Stationary *permutated* weights, row-major (the register image
+    /// the register-transfer path reads).
     weights: Vec<i32>,
+    /// Derotated K-major layout for the kernel path (`Arc`-shared with
+    /// the installed [`PreparedWeights`] — installing copies nothing).
+    derotated: Arc<Vec<i32>>,
     x_val: Vec<i32>,
     x_row: Vec<i32>,
     ps_val: Vec<i32>,
     ps_row: Vec<i32>,
     weights_loaded: bool,
+    // --- reusable per-run scratch (hoisted out of the hot loop so a
+    // --- tile run allocates nothing but its output) ---
+    /// Legacy wavefront path's pre-widened rotated input row.
+    xrot: Vec<i32>,
+    /// Register-transfer path's (S-1)-stage MAC drain, one per column.
+    drain: Vec<ShiftFifo<(i32, i32)>>,
+    /// Row id last pushed into each column's drain.
+    pushed_row: Vec<i32>,
+    /// Previous row's input registers (pre-update), register-transfer
+    /// path.
+    prev_x_val: Vec<i32>,
+    prev_x_row: Vec<i32>,
 }
 
 impl DipArray {
@@ -43,15 +68,22 @@ impl DipArray {
     pub fn new(n: usize, mac_stages: u64) -> Self {
         assert!(n >= 1, "array must be at least 1x1");
         assert!(mac_stages >= 1, "MAC needs at least one stage");
+        let s_extra = (mac_stages - 1) as usize;
         Self {
             n,
             mac_stages,
             weights: vec![0; n * n],
+            derotated: Arc::new(Vec::new()),
             x_val: vec![0; n * n],
             x_row: vec![INVALID; n * n],
             ps_val: vec![0; n * n],
             ps_row: vec![INVALID; n * n],
             weights_loaded: false,
+            xrot: vec![0; n],
+            drain: (0..n).map(|_| ShiftFifo::new(s_extra)).collect(),
+            pushed_row: vec![INVALID; n],
+            prev_x_val: vec![0; n],
+            prev_x_row: vec![INVALID; n],
         }
     }
 
@@ -67,37 +99,73 @@ impl DipArray {
         self.ps_val.fill(0);
     }
 
-    /// Fast path: identical cycle/event/output semantics to
-    /// [`run_inner`](Self::run_inner), derived from the wavefront
-    /// structure instead of simulating registers:
-    ///
-    /// * input of `PE(r, c)` at cycle `t` is `X[t-r][(c+r) mod N]`
-    ///   (row `t-r` entered row 0 at cycle `t-r` and has been rotated
-    ///   left `r` times by the diagonal interconnect),
-    /// * so each cycle updates a contiguous band of PE rows with one
-    ///   rotated input row each — two `copy_from_slice` + one
-    ///   multiply-accumulate loop per row, no per-PE branching.
+    /// Closed-form cycle/TFPU/event accounting — exactly what the
+    /// register-transfer path counts (see its unit tests): shared by
+    /// the kernel path and the legacy wavefront path.
+    fn closed_form_stats(&self, rows: usize) -> RunStats {
+        let n = self.n;
+        let s = self.mac_stages;
+        let cycles = rows as u64 + n as u64 + s - 2;
+        let active = (rows * n * n) as u64;
+        let ev = EventCounts {
+            mac_ops: active,
+            reg8_writes: active,
+            reg16_writes: 2 * active + (rows * n) as u64 * (s - 1),
+            fifo8_writes: 0,
+            fifo16_writes: 0,
+            pe_active_cycles: active,
+            pe_idle_cycles: cycles * (n * n) as u64 - active,
+        };
+        RunStats {
+            cycles,
+            weight_load_cycles: 0,
+            tfpu_cycles: if rows >= n { n as u64 } else { 0 },
+            total_ops: 2 * active,
+            events: ev,
+        }
+    }
+
+    /// Hot path: identical cycle/event/output semantics to
+    /// [`run_inner`](Self::run_inner), executed as a dense derotated
+    /// GEMM instead of simulating registers. The diagonal interconnect
+    /// means `Y[m][c] = Σ_r Wp[r][c] · X[m][(c+r) mod n]`, which over
+    /// the derotated layout precomputed at `prepare_weights` time is a
+    /// plain `X @ W` contraction — one register-blocked kernel sweep
+    /// over all input rows, no per-cycle band loop, no rotation copies,
+    /// no per-call scratch (see [`kernel`](super::kernel)). Statistics
+    /// come from the closed forms the wavefront reduces to.
     ///
     /// Equivalence with the register-transfer path is asserted by the
-    /// `fast_matches_register_transfer_path` test (outputs, cycles,
-    /// TFPU, and every event counter, bit-exact).
+    /// `fast_matches_register_transfer_path` test and the proptest
+    /// sweep (outputs, cycles, TFPU, and every event counter,
+    /// bit-exact).
     fn run_fast(&mut self, x: &Mat<i8>) -> TileRun {
         assert!(self.weights_loaded, "load_weights before run_tile");
         assert_eq!(x.cols(), self.n, "input tile must be R x N");
-        // The trait contract is R >= 1; without this guard `rows - 1`
-        // below underflows on an empty tile.
+        // The trait contract is R >= 1 (an empty tile has no wavefront).
+        assert!(x.rows() >= 1, "input tile must have at least one row");
+        let rows = x.rows();
+        let mut outputs = Mat::<i32>::zeros(rows, self.n);
+        kernel::gemm(x, &self.derotated, self.n, outputs.as_mut_slice());
+        TileRun { outputs, stats: self.closed_form_stats(rows) }
+    }
+
+    /// The pre-kernel wavefront fast path, kept as the `sim_hotpath`
+    /// bench's legacy A/B baseline (and a third equivalence witness):
+    /// walks cycles `t = 0 .. rows+n-2`, updating the contiguous band
+    /// of active PE rows with one rotated input row each — two
+    /// contiguous widening copies + one multiply-accumulate loop per
+    /// (cycle, PE-row) pair.
+    fn run_wavefront(&mut self, x: &Mat<i8>) -> TileRun {
+        assert!(self.weights_loaded, "load_weights before run_tile");
+        assert_eq!(x.cols(), self.n, "input tile must be R x N");
         assert!(x.rows() >= 1, "input tile must have at least one row");
         let n = self.n;
         let rows = x.rows();
-        let s = self.mac_stages;
 
         let mut outputs = Mat::<i32>::zeros(rows, n);
         // psum registers, updated bottom-up so row r-1 is previous-cycle.
         self.ps_val.fill(0);
-        // Pre-widened rotated input row: keeping the widening (i8->i32)
-        // in a separate pass lets the MAC loop autovectorize over pure
-        // i32 lanes — measured ~10% faster at n=64 than widening inline.
-        let mut xrot: Vec<i32> = vec![0; n];
 
         // Active compute happens on cycles t = 0 .. rows+n-2 (row m is
         // in PE row r at cycle m+r); the S-1 drain only delays output.
@@ -113,21 +181,21 @@ impl DipArray {
                 // two contiguous widening copies.
                 let k = r % n;
                 for c in 0..n - k {
-                    xrot[c] = xs[c + k] as i32;
+                    self.xrot[c] = xs[c + k] as i32;
                 }
                 for c in n - k..n {
-                    xrot[c] = xs[c + k - n] as i32;
+                    self.xrot[c] = xs[c + k - n] as i32;
                 }
                 let base = r * n;
                 if r == 0 {
                     for c in 0..n {
-                        self.ps_val[c] = self.weights[c] * xrot[c];
+                        self.ps_val[c] = self.weights[c] * self.xrot[c];
                     }
                 } else {
                     let (above, cur) = self.ps_val.split_at_mut(base);
                     let above = &above[base - n..];
                     for c in 0..n {
-                        cur[c] = above[c] + self.weights[base + c] * xrot[c];
+                        cur[c] = above[c] + self.weights[base + c] * self.xrot[c];
                     }
                 }
                 if r == n - 1 {
@@ -139,27 +207,19 @@ impl DipArray {
             }
         }
 
-        // Closed-form cycle/TFPU/event accounting — exactly what the
-        // register-transfer path counts (see its unit tests).
-        let cycles = rows as u64 + n as u64 + s - 2;
-        let active = (rows * n * n) as u64;
-        let ev = EventCounts {
-            mac_ops: active,
-            reg8_writes: active,
-            reg16_writes: 2 * active + (rows * n) as u64 * (s - 1),
-            fifo8_writes: 0,
-            fifo16_writes: 0,
-            pe_active_cycles: active,
-            pe_idle_cycles: cycles * (n * n) as u64 - active,
-        };
-        let stats = RunStats {
-            cycles,
-            weight_load_cycles: 0,
-            tfpu_cycles: if rows >= n { n as u64 } else { 0 },
-            total_ops: 2 * active,
-            events: ev,
-        };
-        TileRun { outputs, stats }
+        TileRun { outputs, stats: self.closed_form_stats(rows) }
+    }
+
+    /// [`run_tile`](SystolicArray::run_tile) through the legacy
+    /// wavefront path: same contract, outputs and stats bit-identical
+    /// to the kernel path (asserted by tests and the `sim_hotpath`
+    /// smoke). Exists so the bench can measure kernel-vs-legacy
+    /// speedup on every build.
+    pub fn run_tile_legacy(&mut self, x: &Mat<i8>) -> TileRun {
+        let mut run = self.run_wavefront(x);
+        run.stats.events.reg8_writes += weight_load_reg8_writes(self.n as u64);
+        run.stats.weight_load_cycles = (self.n as u64).saturating_sub(1);
+        run
     }
 
     fn run_inner(&mut self, x: &Mat<i8>, mut trace: Option<&mut Trace>) -> TileRun {
@@ -168,7 +228,6 @@ impl DipArray {
         assert!(x.rows() >= 1, "input tile must have at least one row");
         let n = self.n;
         let rows = x.rows();
-        let s_extra = (self.mac_stages - 1) as usize;
 
         let mut ev = EventCounts::default();
         let mut outputs = Mat::<i32>::zeros(rows, n);
@@ -176,12 +235,10 @@ impl DipArray {
         let total_outputs = rows * n;
 
         self.reset_state();
-        let mut drain: Vec<ShiftFifo<(i32, i32)>> =
-            (0..n).map(|_| ShiftFifo::new(s_extra)).collect();
-        let mut pushed_row: Vec<i32> = vec![INVALID; n];
-        // Scratch for the previous row's input registers (pre-update).
-        let mut prev_x_val: Vec<i32> = vec![0; n];
-        let mut prev_x_row: Vec<i32> = vec![INVALID; n];
+        for d in &mut self.drain {
+            d.reset();
+        }
+        self.pushed_row.fill(INVALID);
 
         let mut tfpu: u64 = 0;
         let mut cycle: u64 = 0;
@@ -197,8 +254,8 @@ impl DipArray {
             for r in (0..n).rev() {
                 if r > 0 {
                     let base = (r - 1) * n;
-                    prev_x_val.copy_from_slice(&self.x_val[base..base + n]);
-                    prev_x_row.copy_from_slice(&self.x_row[base..base + n]);
+                    self.prev_x_val.copy_from_slice(&self.x_val[base..base + n]);
+                    self.prev_x_row.copy_from_slice(&self.x_row[base..base + n]);
                 }
                 for c in 0..n {
                     let idx = r * n + c;
@@ -211,7 +268,7 @@ impl DipArray {
                     } else {
                         // Diagonal: PE(r,c) <- PE(r-1, (c+1) mod N).
                         let src = (c + 1) % n;
-                        (prev_x_val[src], prev_x_row[src])
+                        (self.prev_x_val[src], self.prev_x_row[src])
                     };
                     if nx_row != INVALID {
                         let psum_above = if r == 0 { 0 } else { self.ps_val[idx - n] };
@@ -239,12 +296,15 @@ impl DipArray {
             let mut emitted: Option<Vec<i32>> = None;
             for c in 0..n {
                 let idx = (n - 1) * n + c;
-                let fresh = self.ps_row[idx] != INVALID && self.ps_row[idx] != pushed_row[c];
-                let entrant = fresh.then(|| {
-                    pushed_row[c] = self.ps_row[idx];
-                    (self.ps_val[idx], self.ps_row[idx])
-                });
-                if let Some((v, m)) = drain[c].shift(entrant) {
+                let fresh =
+                    self.ps_row[idx] != INVALID && self.ps_row[idx] != self.pushed_row[c];
+                let entrant = if fresh {
+                    self.pushed_row[c] = self.ps_row[idx];
+                    Some((self.ps_val[idx], self.ps_row[idx]))
+                } else {
+                    None
+                };
+                if let Some((v, m)) = self.drain[c].shift(entrant) {
                     outputs.set(m as usize, c, v);
                     collected += 1;
                     if trace.is_some() {
@@ -269,7 +329,7 @@ impl DipArray {
             cycle += 1;
         }
 
-        ev.reg16_writes += drain.iter().map(|d| d.writes()).sum::<u64>();
+        ev.reg16_writes += self.drain.iter().map(|d| d.writes()).sum::<u64>();
 
         let stats = RunStats {
             cycles: cycle,
@@ -299,15 +359,17 @@ impl SystolicArray for DipArray {
         self.load_prepared(&p)
     }
 
-    /// Host-side half of the load: the Fig. 3 permutation + widening.
+    /// Host-side half of the load: the Fig. 3 permutation + widening,
+    /// plus the kernel path's derotated layout.
     fn prepare_weights(&self, w: &Mat<i8>) -> PreparedWeights {
         assert_eq!((w.rows(), w.cols()), (self.n, self.n), "weight tile must be N x N");
-        PreparedWeights::widen(self.n, &permute(w))
+        PreparedWeights::widen_permuted(self.n, w)
     }
 
     fn load_prepared(&mut self, p: &PreparedWeights) -> u64 {
         assert_eq!(p.n, self.n, "weights prepared for a different array edge");
         self.weights.copy_from_slice(&p.data);
+        self.derotated = Arc::clone(&p.derotated);
         self.weights_loaded = true;
         (self.n as u64).saturating_sub(1)
     }
@@ -490,7 +552,8 @@ mod tests {
     #[test]
     #[should_panic(expected = "at least one row")]
     fn zero_row_tile_panics_cleanly() {
-        // Regression: this used to underflow `rows - 1` in run_fast.
+        // Regression: the pre-kernel fast path used to underflow on an
+        // empty tile; the contract stays R >= 1 on every path.
         let mut arr = DipArray::new(4, 2);
         arr.load_weights(&random_i8(4, 4, 1));
         arr.run_tile(&random_i8(0, 4, 2));
@@ -525,9 +588,10 @@ mod tests {
 
     #[test]
     fn fast_matches_register_transfer_path() {
-        // The optimized wavefront path must be bit-identical to the
-        // register-transfer simulation in every observable: outputs,
-        // cycles, TFPU, and each event counter.
+        // The kernel path must be bit-identical to the register-transfer
+        // simulation in every observable — outputs, cycles, TFPU, and
+        // each event counter — and the legacy wavefront path must match
+        // both. Cases cover rows < n, rows = n, rows >> n up to n = 64.
         for (n, s, rows, seed) in [
             (1usize, 1u64, 1usize, 1u64),
             (2, 1, 5, 2),
@@ -536,15 +600,44 @@ mod tests {
             (8, 1, 20, 5),
             (16, 2, 7, 6),
             (16, 2, 64, 7),
+            (64, 2, 16, 8),
+            (64, 1, 64, 9),
+            (64, 2, 200, 10),
         ] {
             let w = random_i8(n, n, seed);
             let x = random_i8(rows, n, seed + 100);
             let mut arr = DipArray::new(n, s);
             arr.load_weights(&w);
             let fast = arr.run_tile(&x);
+            let legacy = arr.run_tile_legacy(&x);
             let (slow, _) = arr.run_tile_traced(&x);
             assert_eq!(fast.outputs, slow.outputs, "n={n} s={s} rows={rows}");
             assert_eq!(fast.stats, slow.stats, "n={n} s={s} rows={rows}");
+            assert_eq!(legacy.outputs, slow.outputs, "legacy n={n} s={s} rows={rows}");
+            assert_eq!(legacy.stats, slow.stats, "legacy n={n} s={s} rows={rows}");
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_keeps_back_to_back_runs_exact() {
+        // The hoisted run_inner scratch (drain FIFOs, pushed-row ids)
+        // must reset between runs: interleave traced and fast runs of
+        // different shapes on one array and compare each against a
+        // fresh array.
+        let mut arr = DipArray::new(8, 2);
+        for (rows, seed) in [(3usize, 1u64), (8, 2), (20, 3), (1, 4), (8, 5)] {
+            let w = random_i8(8, 8, seed + 50);
+            let x = random_i8(rows, 8, seed);
+            arr.load_weights(&w);
+            let (traced, _) = arr.run_tile_traced(&x);
+            let fast = arr.run_tile(&x);
+            let mut fresh = DipArray::new(8, 2);
+            fresh.load_weights(&w);
+            let (want, _) = fresh.run_tile_traced(&x);
+            assert_eq!(traced.outputs, want.outputs, "rows={rows}");
+            assert_eq!(traced.stats, want.stats, "rows={rows}");
+            assert_eq!(fast.outputs, want.outputs, "rows={rows}");
+            assert_eq!(fast.stats, want.stats, "rows={rows}");
         }
     }
 }

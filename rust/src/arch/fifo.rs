@@ -57,6 +57,14 @@ impl<T: Copy> ShiftFifo<T> {
         self.writes
     }
 
+    /// Clear in-flight contents and the write counter — per-run reuse
+    /// of a FIFO owned by an array (scratch hoisted out of the hot
+    /// loop), so each run's `writes()` counts that run alone.
+    pub fn reset(&mut self) {
+        self.slots.fill(None);
+        self.writes = 0;
+    }
+
     /// True if no valid element is in flight.
     pub fn is_empty(&self) -> bool {
         self.slots.iter().all(|s| s.is_none())
@@ -104,6 +112,13 @@ impl<T: Copy> FifoGroup<T> {
     pub fn is_empty(&self) -> bool {
         self.lanes.iter().all(|l| l.is_empty())
     }
+
+    /// Reset every lane (see [`ShiftFifo::reset`]).
+    pub fn reset(&mut self) {
+        for lane in &mut self.lanes {
+            lane.reset();
+        }
+    }
 }
 
 #[cfg(test)]
@@ -135,6 +150,28 @@ mod tests {
         f.shift(Some(2)); // entrant + 1 shift = 2
         f.shift(Some(3)); // entrant + 2 shifts = 3
         assert_eq!(f.writes(), 6);
+    }
+
+    #[test]
+    fn reset_clears_contents_and_write_counter() {
+        let mut f = ShiftFifo::new(2);
+        f.shift(Some(1));
+        f.shift(Some(2));
+        assert!(!f.is_empty());
+        assert!(f.writes() > 0);
+        f.reset();
+        assert!(f.is_empty());
+        assert_eq!(f.writes(), 0);
+        // A reused FIFO behaves exactly like a fresh one.
+        assert_eq!(f.shift(Some(9)), None);
+        assert_eq!(f.shift(None), None);
+        assert_eq!(f.shift(None), Some(9));
+        let mut g: FifoGroup<i32> = FifoGroup::input_skew(4);
+        let mut out = Vec::new();
+        g.shift_all(&[Some(1), Some(2), Some(3), Some(4)], &mut out);
+        g.reset();
+        assert!(g.is_empty());
+        assert_eq!(g.total_writes(), 0);
     }
 
     #[test]

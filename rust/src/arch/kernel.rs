@@ -1,0 +1,226 @@
+//! The functional **derotated-GEMM microkernel** — the compute engine of
+//! the simulator hot path.
+//!
+//! Both cycle-accurate arrays ultimately compute `Y = X @ W`; their
+//! per-cycle wavefront structure only decides *when* each MAC happens,
+//! and the closed-form cycle/event accounting (proven bit-exact against
+//! the register-transfer paths by `fast_matches_register_transfer_path`
+//! and the proptest sweeps) captures that timing without replaying it.
+//! What remains of a tile run is pure dense arithmetic, executed here as
+//! a blocked i8→i32 GEMM with no per-cycle band loop, no rotation
+//! copies, and no per-call scratch allocation:
+//!
+//! * **Derotated weights.** DiP's diagonal interconnect hands PE row
+//!   `r` the input row rotated left by `r`, so with the Fig. 3 permuted
+//!   image `Wp` the array realizes
+//!   `Y[m][c] = Σ_r Wp[r][c] · X[m][(c + r) mod n]`. Substituting
+//!   `k = (c + r) mod n` turns that into a plain contraction
+//!   `Σ_k X[m][k] · Wd[k][c]` against the **derotated** layout
+//!   `Wd[k][c] = Wp[(k - c) mod n][c]` — which is exactly the original
+//!   weight matrix: the load-time permutation and the in-flight
+//!   rotation cancel (pinned by [`derotate`]'s tests). WS and OS keep
+//!   their weights unpermuted, so their derotated layout is the
+//!   identity. Either way the layout is K-major (row `k` holds the
+//!   weights the contraction index `k` meets), precomputed **once** at
+//!   `prepare_weights` time and carried by
+//!   [`PreparedWeights::derotated`](super::PreparedWeights::derotated),
+//!   so the coordinator's prepared-tile LRU caches it alongside the
+//!   register-transfer image.
+//! * **Register blocking.** [`gemm`] sweeps all input rows in
+//!   [`MR`]` x `[`NR`] output blocks whose partial sums live in a
+//!   fixed-size stack accumulator across the whole contraction — each
+//!   `X` element is loaded once per `NR` outputs, each `Wd` row slice
+//!   streams contiguously, and the inner loop is a pure i32
+//!   multiply-add over [`NR`] lanes that autovectorizes.
+//!
+//! The kernel computes outputs only; each array derives its own
+//! `RunStats`/`EventCounts` from the closed forms its wavefront reduces
+//! to, keeping the two-path contract of [`arch`](crate::arch) intact.
+
+use crate::matrix::Mat;
+
+/// Register-block height: input rows processed together, sharing each
+/// streamed `Wd` row slice.
+pub const MR: usize = 4;
+
+/// Register-block width: output columns accumulated together in one
+/// stack block (i32 lanes; a multiple of every SIMD width that
+/// matters).
+pub const NR: usize = 16;
+
+/// Undo the Fig. 3 permutation on an array-internal (permuted, widened)
+/// weight image: `Wd[k][c] = Wp[(k - c) mod n][c]`. The result equals
+/// the original (unpermuted) weight matrix — the identity the DiP
+/// kernel path rests on — so production code widens the original
+/// directly and this helper exists to *pin* that identity in tests.
+pub fn derotate(wp: &[i32], n: usize) -> Vec<i32> {
+    assert_eq!(wp.len(), n * n, "permuted image must be N x N");
+    let mut wd = vec![0i32; n * n];
+    for k in 0..n {
+        for c in 0..n {
+            wd[k * n + c] = wp[((k + n - c) % n) * n + c];
+        }
+    }
+    wd
+}
+
+/// Dense functional GEMM: `out[m][c] = Σ_k x[m][k] · wd[k*n + c]` for
+/// every input row, exact i32 accumulation. `wd` is the K-major
+/// derotated layout (length `n*n`); `out` is row-major `rows x n` and
+/// fully overwritten. Allocation-free: the only scratch is the
+/// `MR x NR` stack accumulator.
+pub fn gemm(x: &Mat<i8>, wd: &[i32], n: usize, out: &mut [i32]) {
+    let rows = x.rows();
+    assert_eq!(x.cols(), n, "input tile must be R x N");
+    assert_eq!(wd.len(), n * n, "derotated layout must be N x N");
+    assert_eq!(out.len(), rows * n, "output buffer must be R x N");
+    let mut m0 = 0;
+    while m0 < rows {
+        let mr = MR.min(rows - m0);
+        let mut c0 = 0;
+        while c0 < n {
+            let nr = NR.min(n - c0);
+            if mr == MR && nr == NR {
+                full_block(x, wd, n, m0, c0, out);
+            } else {
+                edge_block(x, wd, n, m0, mr, c0, nr, out);
+            }
+            c0 += nr;
+        }
+        m0 += mr;
+    }
+}
+
+/// One full `MR x NR` register block: the accumulator never leaves the
+/// stack, each cycle of the contraction broadcasts `MR` input scalars
+/// against one contiguous `NR`-wide `Wd` slice.
+#[inline]
+fn full_block(x: &Mat<i8>, wd: &[i32], n: usize, m0: usize, c0: usize, out: &mut [i32]) {
+    let mut acc = [[0i32; NR]; MR];
+    let xr: [&[i8]; MR] = std::array::from_fn(|i| x.row(m0 + i));
+    for k in 0..n {
+        let w = &wd[k * n + c0..k * n + c0 + NR];
+        for (acc_i, xr_i) in acc.iter_mut().zip(&xr) {
+            let a = xr_i[k] as i32;
+            for (s, &wv) in acc_i.iter_mut().zip(w) {
+                *s += a * wv;
+            }
+        }
+    }
+    for (i, acc_i) in acc.iter().enumerate() {
+        out[(m0 + i) * n + c0..(m0 + i) * n + c0 + NR].copy_from_slice(acc_i);
+    }
+}
+
+/// Ragged edge of the blocking grid (`mr < MR` and/or `nr < NR`): same
+/// contraction, accumulator bounded by the live extent.
+#[inline]
+#[allow(clippy::too_many_arguments)] // private kernel plumbing, mirrors full_block + extents
+fn edge_block(
+    x: &Mat<i8>,
+    wd: &[i32],
+    n: usize,
+    m0: usize,
+    mr: usize,
+    c0: usize,
+    nr: usize,
+    out: &mut [i32],
+) {
+    for i in 0..mr {
+        let xr = x.row(m0 + i);
+        let mut acc = [0i32; NR];
+        for k in 0..n {
+            let a = xr[k] as i32;
+            let w = &wd[k * n + c0..k * n + c0 + nr];
+            for (s, &wv) in acc[..nr].iter_mut().zip(w) {
+                *s += a * wv;
+            }
+        }
+        out[(m0 + i) * n + c0..(m0 + i) * n + c0 + nr].copy_from_slice(&acc[..nr]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::permute::permute;
+    use crate::matrix::random_i8;
+
+    fn gemm_to_mat(x: &Mat<i8>, wd: &[i32], n: usize) -> Mat<i32> {
+        let mut out = Mat::<i32>::zeros(x.rows(), n);
+        gemm(x, wd, n, out.as_mut_slice());
+        out
+    }
+
+    #[test]
+    fn matches_reference_matmul_across_blocking_regimes() {
+        // Shapes straddling every MR/NR boundary: single row, row tail,
+        // column tail, exact multiples, and n smaller than one block.
+        for (n, rows, seed) in [
+            (1usize, 1usize, 1u64),
+            (3, 2, 2),
+            (4, 4, 3),
+            (5, 7, 4),
+            (8, 1, 5),
+            (16, 4, 6),
+            (16, 5, 7),
+            (17, 9, 8),
+            (31, 13, 9),
+            (32, 32, 10),
+            (48, 3, 11),
+            (64, 64, 12),
+            (64, 100, 13),
+        ] {
+            let w = random_i8(n, n, seed);
+            let x = random_i8(rows, n, seed + 100);
+            let wd: Vec<i32> = w.as_slice().iter().map(|&v| v as i32).collect();
+            assert_eq!(
+                gemm_to_mat(&x, &wd, n),
+                x.widen().matmul(&w.widen()),
+                "n={n} rows={rows}"
+            );
+        }
+    }
+
+    #[test]
+    fn derotation_inverts_the_fig3_permutation() {
+        // The identity the DiP path rests on: derotating the permuted,
+        // widened image recovers the original weights exactly.
+        for n in [1usize, 2, 3, 4, 8, 16, 64] {
+            let w = random_i8(n, n, 7 + n as u64);
+            let wp: Vec<i32> = permute(&w).as_slice().iter().map(|&v| v as i32).collect();
+            let plain: Vec<i32> = w.as_slice().iter().map(|&v| v as i32).collect();
+            assert_eq!(derotate(&wp, n), plain, "n={n}");
+        }
+    }
+
+    #[test]
+    fn derotated_permuted_weights_reproduce_the_dip_contraction() {
+        // Y[m][c] = Σ_r Wp[r][c] · X[m][(c+r) mod n] computed the
+        // wavefront way must equal the kernel over the derotated layout.
+        let n = 12;
+        let w = random_i8(n, n, 41);
+        let x = random_i8(9, n, 42);
+        let wp = permute(&w);
+        let mut wavefront = Mat::<i32>::zeros(x.rows(), n);
+        for m in 0..x.rows() {
+            for c in 0..n {
+                let mut s = 0i32;
+                for r in 0..n {
+                    s += wp.get(r, c) as i32 * x.get(m, (c + r) % n) as i32;
+                }
+                wavefront.set(m, c, s);
+            }
+        }
+        let wd: Vec<i32> = w.as_slice().iter().map(|&v| v as i32).collect();
+        assert_eq!(gemm_to_mat(&x, &wd, n), wavefront);
+    }
+
+    #[test]
+    #[should_panic(expected = "R x N")]
+    fn shape_mismatch_is_loud() {
+        let x = random_i8(2, 3, 1);
+        let mut out = vec![0i32; 8];
+        gemm(&x, &[0; 16], 4, &mut out);
+    }
+}

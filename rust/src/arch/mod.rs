@@ -1,9 +1,44 @@
 //! Architectural substrate: the PE micro-model, the skew-FIFO model, the
-//! weight permutation, and the two cycle-accurate arrays (conventional
-//! weight-stationary `ws` and the proposed `dip`).
+//! weight permutation, the functional GEMM microkernel, and the three
+//! cycle-accurate arrays (conventional weight-stationary `ws`, the
+//! proposed `dip`, and the output-stationary `os` comparator).
+//!
+//! # The two-path contract
+//!
+//! Every array exposes **two execution paths with identical observable
+//! semantics** — outputs, cycles, TFPU, and every `EventCounts` field,
+//! bit-exact:
+//!
+//! 1. **Register-transfer reference** (`run_inner`, reachable through
+//!    [`SystolicArray::run_tile_traced`]): simulates the PE registers,
+//!    skew FIFOs, and drain pipelines cycle by cycle. It is the
+//!    behavioral ground truth — the Fig. 4 walkthrough and every
+//!    timing/event claim are pinned against it — and the only path that
+//!    can produce a per-cycle [`Trace`].
+//! 2. **Derotated-GEMM kernel** (`run_fast`, the [`run_tile`] hot
+//!    path): executes the tile as a dense blocked i8→i32 GEMM over the
+//!    precomputed derotated weight layout
+//!    ([`kernel`], [`PreparedWeights::derotated`]) and derives the
+//!    statistics from the closed forms the wavefront reduces to — no
+//!    per-cycle band loop, no rotation copies, no per-call scratch
+//!    allocation (a tile run allocates nothing but its output).
+//!
+//! The equivalence is pinned in three places: each array's
+//! `fast_matches_register_transfer_path` unit test, the randomized
+//! `prop_kernel_matches_register_transfer_path` sweep in
+//! `tests/proptest_invariants.rs` (n ∈ 4..=64; rows below, at, and far
+//! above n), and the `sim_hotpath` bench, which additionally keeps the
+//! pre-kernel wavefront implementation alive as `run_tile_legacy` and
+//! asserts the kernel path is bit-identical and no slower. Schedulers
+//! and benches must treat `run_tile` and `run_tile_traced` as
+//! interchangeable up to the trace.
+//!
+//! [`run_tile`]: SystolicArray::run_tile
+//! [`Trace`]: crate::sim::trace::Trace
 
 pub mod dip;
 pub mod fifo;
+pub mod kernel;
 pub mod os;
 pub mod pe;
 pub mod permute;
@@ -25,31 +60,54 @@ pub struct TileRun {
     pub stats: RunStats,
 }
 
-/// A stationary weight tile in the array-internal form (widened to i32;
-/// for DiP additionally permutated per Fig. 3). Producing this is pure
-/// host-side work, so the coordinator's per-device weight caches hold
-/// `PreparedWeights` and re-install them without repeating the
-/// permutation. The buffer is `Arc`-shared: cloning a cache entry never
-/// copies the `N x N` payload.
+/// A stationary weight tile in both array forms: the array-internal
+/// register image (widened to i32; for DiP additionally permutated per
+/// Fig. 3) consumed by the register-transfer path, and the derotated
+/// K-major layout consumed by the GEMM kernel path. Producing either is
+/// pure host-side work, so the coordinator's per-device weight caches
+/// hold `PreparedWeights` and re-install them without repeating the
+/// permutation *or* the derotation. Both buffers are `Arc`-shared:
+/// cloning a cache entry never copies an `N x N` payload, and for
+/// WS/OS (whose internal form is already derotated) the two handles
+/// alias one buffer.
 #[derive(Debug, Clone)]
 pub struct PreparedWeights {
     /// Array edge the tile was prepared for.
     pub n: usize,
     /// Row-major internal weight image, length `n * n`.
     pub data: Arc<Vec<i32>>,
+    /// K-major derotated layout for the kernel path, length `n * n`:
+    /// the original (unpermuted) weights — identical to `data` for
+    /// WS/OS, the Fig. 3 rotation undone for DiP (see
+    /// [`kernel::derotate`]).
+    pub derotated: Arc<Vec<i32>>,
 }
 
 impl PreparedWeights {
-    /// Widen a tile already in the array's internal layout (WS/OS use
-    /// the tile verbatim; DiP permutes first, then calls this).
+    /// Widen a tile whose array-internal layout *is* the derotated
+    /// layout (WS/OS: the tile verbatim). Both handles share one
+    /// buffer.
     pub fn widen(n: usize, w: &Mat<i8>) -> Self {
         assert_eq!((w.rows(), w.cols()), (n, n), "weight tile must be N x N");
         let data: Vec<i32> = w.as_slice().iter().map(|&v| v as i32).collect();
-        Self { n, data: Arc::new(data) }
+        let data = Arc::new(data);
+        Self { n, derotated: Arc::clone(&data), data }
+    }
+
+    /// Prepare a DiP tile: the internal image is the Fig. 3 permutation
+    /// of `w`, the derotated layout is `w` itself (permutation and
+    /// in-flight rotation cancel — pinned by [`kernel::derotate`]'s
+    /// tests), each widened once.
+    pub fn widen_permuted(n: usize, w: &Mat<i8>) -> Self {
+        assert_eq!((w.rows(), w.cols()), (n, n), "weight tile must be N x N");
+        let data: Vec<i32> =
+            permute::permute(w).as_slice().iter().map(|&v| v as i32).collect();
+        let derotated: Vec<i32> = w.as_slice().iter().map(|&v| v as i32).collect();
+        Self { n, data: Arc::new(data), derotated: Arc::new(derotated) }
     }
 }
 
-/// Common interface of the two cycle-accurate simulators.
+/// Common interface of the cycle-accurate simulators.
 ///
 /// Usage: `load_weights` once per stationary tile, then `run_tile` for
 /// each streamed input tile (the paper's §IV.C methodology: "every tile
@@ -68,8 +126,9 @@ pub trait SystolicArray {
 
     /// Transform a weight tile into the array-internal stationary form
     /// without touching array state — the host-side half of
-    /// [`load_weights`](Self::load_weights) (widening, and for DiP the
-    /// Fig. 3 permutation), split out so schedulers can cache it.
+    /// [`load_weights`](Self::load_weights) (widening, for DiP the
+    /// Fig. 3 permutation, and the kernel path's derotated layout),
+    /// split out so schedulers can cache it.
     fn prepare_weights(&self, w: &Mat<i8>) -> PreparedWeights;
 
     /// Install previously prepared weights. Same cycle-count contract
@@ -81,8 +140,20 @@ pub trait SystolicArray {
     /// outputs and cycle/event statistics. `R` is arbitrary (>= 1).
     fn run_tile(&mut self, x: &Mat<i8>) -> TileRun;
 
+    /// Stream a batch of input tiles back-to-back through the loaded
+    /// weights — the device-level tile-coalescing entry point. Exactly
+    /// equivalent to calling [`run_tile`](Self::run_tile) once per
+    /// tile, in order (each run's stats still bake in one weight-load
+    /// phase; the caller's resident-skip fixup owns the ledger), but a
+    /// single dispatch keeps the derotated weights and the array's
+    /// accumulator state hot across the whole batch.
+    fn run_tile_batch(&mut self, xs: &[Arc<Mat<i8>>]) -> Vec<TileRun> {
+        xs.iter().map(|x| self.run_tile(x)).collect()
+    }
+
     /// Like [`run_tile`](Self::run_tile) but capturing a per-cycle trace
-    /// (small arrays only; used by the Fig. 4 walkthrough).
+    /// through the register-transfer reference path (small arrays only;
+    /// used by the Fig. 4 walkthrough and the kernel-equivalence tests).
     fn run_tile_traced(&mut self, x: &Mat<i8>) -> (TileRun, Trace);
 
     /// Architecture name for reports ("WS" / "DiP").
@@ -99,10 +170,53 @@ pub fn weight_load_reg8_writes(n: u64) -> u64 {
 
 #[cfg(test)]
 mod tests {
+    use super::*;
+    use crate::matrix::random_i8;
+
     #[test]
     fn weight_load_writes_formula() {
         // N=3: rows traverse 1+2+3 rows, x3 elements per row = 18.
         assert_eq!(super::weight_load_reg8_writes(3), 18);
         assert_eq!(super::weight_load_reg8_writes(64), 64 * 64 * 65 / 2);
+    }
+
+    #[test]
+    fn widen_aliases_the_derotated_buffer() {
+        let w = random_i8(8, 8, 3);
+        let p = PreparedWeights::widen(8, &w);
+        assert!(Arc::ptr_eq(&p.data, &p.derotated), "identity layouts share one buffer");
+        assert_eq!(*p.data, w.as_slice().iter().map(|&v| v as i32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn widen_permuted_splits_the_layouts() {
+        let w = random_i8(8, 8, 5);
+        let p = PreparedWeights::widen_permuted(8, &w);
+        let plain: Vec<i32> = w.as_slice().iter().map(|&v| v as i32).collect();
+        let permuted: Vec<i32> =
+            permute::permute(&w).as_slice().iter().map(|&v| v as i32).collect();
+        assert_eq!(*p.derotated, plain, "derotated layout is the original weights");
+        assert_eq!(*p.data, permuted, "internal image is the Fig. 3 permutation");
+        // And undoing the rotation on the image recovers the layout.
+        assert_eq!(kernel::derotate(&p.data, 8), *p.derotated);
+    }
+
+    #[test]
+    fn run_tile_batch_defaults_to_sequential_runs() {
+        use crate::arch::dip::DipArray;
+        let w = random_i8(8, 8, 11);
+        let xs: Vec<Arc<Mat<i8>>> =
+            (0..4).map(|i| Arc::new(random_i8(3 + i, 8, 20 + i as u64))).collect();
+        let mut batched = DipArray::new(8, 2);
+        batched.load_weights(&w);
+        let runs = batched.run_tile_batch(&xs);
+        let mut sequential = DipArray::new(8, 2);
+        sequential.load_weights(&w);
+        assert_eq!(runs.len(), xs.len());
+        for (x, run) in xs.iter().zip(runs) {
+            let solo = sequential.run_tile(x);
+            assert_eq!(run.outputs, solo.outputs);
+            assert_eq!(run.stats, solo.stats);
+        }
     }
 }

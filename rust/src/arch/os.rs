@@ -17,7 +17,7 @@
 //!   need triangular skew FIFOs (input side) and the drain adds `n`
 //!   shift-out cycles.
 
-use super::{PreparedWeights, SystolicArray, TileRun};
+use super::{kernel, PreparedWeights, SystolicArray, TileRun};
 use crate::matrix::Mat;
 use crate::sim::stats::{EventCounts, RunStats};
 use crate::sim::trace::{CycleSnapshot, Trace};
@@ -65,18 +65,10 @@ impl OsArray {
 
         // out[i][j] = sum_k x[i][k] * w[k][j]: PE(i, j) consumes the
         // operand pair at wavefront cycle t = k + i + j and accumulates
-        // in place.
-        self.ps_val.fill(0);
-        for i in 0..n {
-            let xi = x.row(i);
-            for j in 0..n {
-                let mut acc = 0i32;
-                for k in 0..depth {
-                    acc += xi[k] as i32 * self.weights[k * n + j];
-                }
-                self.ps_val[i * n + j] = acc;
-            }
-        }
+        // in place — a plain contraction over the verbatim (identity-
+        // derotated) weights, executed through the shared GEMM kernel
+        // into the accumulator plane.
+        kernel::gemm(x, &self.weights, n, &mut self.ps_val);
         let outputs = Mat::from_vec(n, n, self.ps_val.clone());
 
         // Cycle accounting from the wavefront: last MAC at

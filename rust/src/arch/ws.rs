@@ -13,8 +13,16 @@
 //! a single `N x N` input tile completes in `3N + S - 3` cycles, TFPU
 //! under continuous streaming is `2N - 1`, and the synchronization
 //! register overhead is `N(N-1)` (eq (3)).
+//!
+//! Execution follows the two-path contract of [`arch`](crate::arch):
+//! `run_tile` goes through the GEMM kernel (WS weights are unpermuted,
+//! so the derotated layout is the identity) with closed-form
+//! statistics; `run_inner` keeps the register-transfer reference alive,
+//! and [`WsArray::run_tile_legacy`] preserves the pre-kernel trapezoid
+//! fast path as the bench's A/B baseline.
 
 use super::fifo::{FifoGroup, ShiftFifo};
+use super::kernel;
 use super::{weight_load_reg8_writes, PreparedWeights, SystolicArray, TileRun};
 use crate::matrix::Mat;
 use crate::sim::stats::{EventCounts, RunStats};
@@ -27,7 +35,8 @@ const INVALID: i32 = -1;
 pub struct WsArray {
     n: usize,
     mac_stages: u64,
-    /// Stationary weights, row-major (contraction index k = PE row).
+    /// Stationary weights, row-major (contraction index k = PE row) —
+    /// already the K-major derotated layout the kernel consumes.
     weights: Vec<i32>,
     // --- per-run register state (flat, reused across runs) ---
     x_val: Vec<i32>,
@@ -35,6 +44,21 @@ pub struct WsArray {
     ps_val: Vec<i32>,
     ps_row: Vec<i32>,
     weights_loaded: bool,
+    // --- reusable per-run scratch (hoisted out of the hot loop so a
+    // --- tile run allocates nothing but its output) ---
+    /// Legacy trapezoid path's column-major input copy (`n * rows`,
+    /// regrown in place when a taller tile arrives).
+    xt_buf: Vec<i8>,
+    /// Register-transfer path: input skew group, (S-1)-stage MAC
+    /// drain, output de-skew group, and their per-cycle lane buffers.
+    in_fifos: FifoGroup<(i32, i32)>,
+    drain: Vec<ShiftFifo<(i32, i32)>>,
+    out_fifos: FifoGroup<(i32, i32)>,
+    pushed_row: Vec<i32>,
+    fifo_in: Vec<Option<(i32, i32)>>,
+    fifo_out: Vec<Option<(i32, i32)>>,
+    out_in: Vec<Option<(i32, i32)>>,
+    out_out: Vec<Option<(i32, i32)>>,
 }
 
 impl WsArray {
@@ -43,6 +67,7 @@ impl WsArray {
     pub fn new(n: usize, mac_stages: u64) -> Self {
         assert!(n >= 1, "array must be at least 1x1");
         assert!(mac_stages >= 1, "MAC needs at least one stage");
+        let s_extra = (mac_stages - 1) as usize;
         Self {
             n,
             mac_stages,
@@ -52,6 +77,15 @@ impl WsArray {
             ps_val: vec![0; n * n],
             ps_row: vec![INVALID; n * n],
             weights_loaded: false,
+            xt_buf: Vec::new(),
+            in_fifos: FifoGroup::input_skew(n),
+            drain: (0..n).map(|_| ShiftFifo::new(s_extra)).collect(),
+            out_fifos: FifoGroup::output_deskew(n),
+            pushed_row: vec![INVALID; n],
+            fifo_in: vec![None; n],
+            fifo_out: Vec::with_capacity(n),
+            out_in: vec![None; n],
+            out_out: Vec::with_capacity(n),
         }
     }
 
@@ -68,33 +102,80 @@ impl WsArray {
         self.ps_val.fill(0);
     }
 
-    /// Fast path: identical semantics to the register-transfer
-    /// [`run_inner`](Self::run_inner), derived from the WS wavefront
-    /// structure: the input of `PE(k, c)` at cycle `t` is `X[t-k-c][k]`
-    /// (skewed by the input FIFO of depth `k`, then `c` horizontal
-    /// hops), so each cycle updates a trapezoidal band of PEs whose
-    /// active column range per row is contiguous — no FIFO objects, no
-    /// per-PE branching. Event totals use the closed forms the
-    /// shift-register models reduce to (validated bit-exact by
-    /// `fast_matches_register_transfer_path`).
+    /// Closed-form cycle/TFPU/event accounting — exactly what the
+    /// register-transfer shift-register models reduce to (validated
+    /// bit-exact by `fast_matches_register_transfer_path`): shared by
+    /// the kernel path and the legacy trapezoid path.
+    fn closed_form_stats(&self, rows: usize) -> RunStats {
+        let n = self.n;
+        let s = self.mac_stages;
+        let cycles = rows as u64 + 2 * (n as u64) + s - 3;
+        let active = (rows * n * n) as u64;
+        let tri = (n * (n - 1) / 2) as u64; // per-row FIFO slot writes
+        let ev = EventCounts {
+            mac_ops: active,
+            reg8_writes: active,
+            reg16_writes: 2 * active + (rows * n) as u64 * (s - 1),
+            fifo8_writes: rows as u64 * tri,
+            fifo16_writes: rows as u64 * tri,
+            pe_active_cycles: active,
+            pe_idle_cycles: cycles * (n * n) as u64 - active,
+        };
+        RunStats {
+            cycles,
+            weight_load_cycles: 0,
+            tfpu_cycles: if rows >= 2 * n - 1 { 2 * n as u64 - 1 } else { 0 },
+            total_ops: 2 * active,
+            events: ev,
+        }
+    }
+
+    /// Hot path: identical semantics to the register-transfer
+    /// [`run_inner`](Self::run_inner), executed as a dense GEMM. The WS
+    /// skew only staggers *when* `X[m][k]` meets `W[k][c]` — the value
+    /// flow is the plain contraction `Y[m][c] = Σ_k X[m][k] · W[k][c]`
+    /// over the verbatim (identity-derotated) weights, so one
+    /// register-blocked kernel sweep replaces the per-cycle trapezoid
+    /// walk (see [`kernel`](super::kernel)); statistics come from the
+    /// closed forms the shift-register models reduce to.
     fn run_fast(&mut self, x: &Mat<i8>) -> TileRun {
         assert!(self.weights_loaded, "load_weights before run_tile");
         assert_eq!(x.cols(), self.n, "input tile must be R x N");
-        // Same R >= 1 contract as the register-transfer path (DiP's
-        // fast path underflows without it; assert here too for a clear
-        // message instead of garbage stats on an empty tile).
+        // Same R >= 1 contract as the register-transfer path.
+        assert!(x.rows() >= 1, "input tile must have at least one row");
+        let rows = x.rows();
+        let mut outputs = Mat::<i32>::zeros(rows, self.n);
+        kernel::gemm(x, &self.weights, self.n, outputs.as_mut_slice());
+        TileRun { outputs, stats: self.closed_form_stats(rows) }
+    }
+
+    /// The pre-kernel trapezoid fast path, kept as the `sim_hotpath`
+    /// bench's legacy A/B baseline (and a third equivalence witness):
+    /// the input of `PE(k, c)` at cycle `t` is `X[t-k-c][k]` (skewed by
+    /// the depth-`k` input FIFO, then `c` horizontal hops), so each
+    /// cycle updates a trapezoidal band of PEs whose active column
+    /// range per row is contiguous.
+    fn run_wavefront(&mut self, x: &Mat<i8>) -> TileRun {
+        assert!(self.weights_loaded, "load_weights before run_tile");
+        assert_eq!(x.cols(), self.n, "input tile must be R x N");
         assert!(x.rows() >= 1, "input tile must have at least one row");
         let n = self.n;
         let rows = x.rows();
-        let s = self.mac_stages;
 
         let mut outputs = Mat::<i32>::zeros(rows, n);
         self.ps_val.fill(0);
         // Column-major copy of X so the inner loop reads X[.][k]
-        // contiguously. (A pre-widened i32 transpose + per-cycle
-        // reversed window was tried and measured ~40% slower at n=64:
-        // the extra copies dominate the reversed-index MAC.)
-        let xt = x.transpose();
+        // contiguously (reusable scratch; the tried alternative of a
+        // pre-widened i32 transpose + per-cycle reversed window measured
+        // ~40% slower at n=64).
+        self.xt_buf.clear();
+        self.xt_buf.resize(n * rows, 0);
+        for m in 0..rows {
+            let xr = x.row(m);
+            for k in 0..n {
+                self.xt_buf[k * rows + m] = xr[k];
+            }
+        }
 
         for t in 0..rows + 2 * n - 2 {
             // Row k active iff some c in [0, n) has 0 <= t-k-c < rows.
@@ -110,7 +191,7 @@ impl WsArray {
                     continue;
                 }
                 let base = k * n;
-                let xk = xt.row(k);
+                let xk = &self.xt_buf[k * rows..(k + 1) * rows];
                 if k == 0 {
                     for c in c_lo..=c_hi {
                         self.ps_val[c] = self.weights[c] * xk[rem - c] as i32;
@@ -132,27 +213,19 @@ impl WsArray {
             }
         }
 
-        // Closed-form accounting, matching the register-transfer path.
-        let cycles = rows as u64 + 2 * (n as u64) + s - 3;
-        let active = (rows * n * n) as u64;
-        let tri = (n * (n - 1) / 2) as u64; // per-row FIFO slot writes
-        let ev = EventCounts {
-            mac_ops: active,
-            reg8_writes: active,
-            reg16_writes: 2 * active + (rows * n) as u64 * (s - 1),
-            fifo8_writes: rows as u64 * tri,
-            fifo16_writes: rows as u64 * tri,
-            pe_active_cycles: active,
-            pe_idle_cycles: cycles * (n * n) as u64 - active,
-        };
-        let stats = RunStats {
-            cycles,
-            weight_load_cycles: 0,
-            tfpu_cycles: if rows >= 2 * n - 1 { 2 * n as u64 - 1 } else { 0 },
-            total_ops: 2 * active,
-            events: ev,
-        };
-        TileRun { outputs, stats }
+        TileRun { outputs, stats: self.closed_form_stats(rows) }
+    }
+
+    /// [`run_tile`](SystolicArray::run_tile) through the legacy
+    /// trapezoid path: same contract, outputs and stats bit-identical
+    /// to the kernel path (asserted by tests and the `sim_hotpath`
+    /// smoke). Exists so the bench can measure kernel-vs-legacy
+    /// speedup on every build.
+    pub fn run_tile_legacy(&mut self, x: &Mat<i8>) -> TileRun {
+        let mut run = self.run_wavefront(x);
+        run.stats.events.reg8_writes += weight_load_reg8_writes(self.n as u64);
+        run.stats.weight_load_cycles = self.n as u64;
+        run
     }
 
     fn run_inner(&mut self, x: &Mat<i8>, mut trace: Option<&mut Trace>) -> TileRun {
@@ -161,7 +234,6 @@ impl WsArray {
         assert!(x.rows() >= 1, "input tile must have at least one row");
         let n = self.n;
         let rows = x.rows();
-        let s_extra = (self.mac_stages - 1) as usize;
 
         let mut ev = EventCounts::default();
         let mut outputs = Mat::<i32>::zeros(rows, n);
@@ -169,18 +241,12 @@ impl WsArray {
         let total_outputs = rows * n;
 
         self.reset_state();
-        let mut in_fifos: FifoGroup<(i32, i32)> = FifoGroup::input_skew(n);
-        let mut drain: Vec<ShiftFifo<(i32, i32)>> =
-            (0..n).map(|_| ShiftFifo::new(s_extra)).collect();
-        let mut out_fifos: FifoGroup<(i32, i32)> = FifoGroup::output_deskew(n);
-        // Row id of the last psum pushed into each column's drain, so each
-        // result enters the output path exactly once.
-        let mut pushed_row: Vec<i32> = vec![INVALID; n];
-
-        let mut fifo_in: Vec<Option<(i32, i32)>> = vec![None; n];
-        let mut fifo_out: Vec<Option<(i32, i32)>> = Vec::with_capacity(n);
-        let mut out_in: Vec<Option<(i32, i32)>> = vec![None; n];
-        let mut out_out: Vec<Option<(i32, i32)>> = Vec::with_capacity(n);
+        self.in_fifos.reset();
+        self.out_fifos.reset();
+        for d in &mut self.drain {
+            d.reset();
+        }
+        self.pushed_row.fill(INVALID);
 
         let mut tfpu: u64 = 0;
         let mut cycle: u64 = 0;
@@ -193,10 +259,10 @@ impl WsArray {
 
             // 1. Present input row t (element k to skew lane k).
             for k in 0..n {
-                fifo_in[k] =
+                self.fifo_in[k] =
                     (t < rows).then(|| (x.get(t, k) as i32, t as i32));
             }
-            in_fifos.shift_all(&fifo_in, &mut fifo_out);
+            self.in_fifos.shift_all(&self.fifo_in, &mut self.fifo_out);
 
             // 2. Two-phase PE update: rows bottom-up so the row above is
             //    still "previous cycle"; columns right-to-left so the
@@ -206,7 +272,7 @@ impl WsArray {
                 for c in (0..n).rev() {
                     let idx = k * n + c;
                     let (nx_val, nx_row) = if c == 0 {
-                        match fifo_out[k] {
+                        match self.fifo_out[k] {
                             Some((v, m)) => (v, m),
                             None => (0, INVALID),
                         }
@@ -240,17 +306,19 @@ impl WsArray {
             //    de-skew FIFO -> collection. Fresh results only.
             for c in 0..n {
                 let idx = (n - 1) * n + c;
-                let fresh = self.ps_row[idx] != INVALID && self.ps_row[idx] != pushed_row[c];
-                let entrant = fresh.then(|| {
-                    pushed_row[c] = self.ps_row[idx];
-                    (self.ps_val[idx], self.ps_row[idx])
-                });
-                let drained = drain[c].shift(entrant);
-                out_in[c] = drained;
+                let fresh =
+                    self.ps_row[idx] != INVALID && self.ps_row[idx] != self.pushed_row[c];
+                let entrant = if fresh {
+                    self.pushed_row[c] = self.ps_row[idx];
+                    Some((self.ps_val[idx], self.ps_row[idx]))
+                } else {
+                    None
+                };
+                self.out_in[c] = self.drain[c].shift(entrant);
             }
-            out_fifos.shift_all(&out_in, &mut out_out);
+            self.out_fifos.shift_all(&self.out_in, &mut self.out_out);
             let mut emitted: Option<Vec<i32>> = None;
-            for (c, slot) in out_out.iter().enumerate() {
+            for (c, slot) in self.out_out.iter().enumerate() {
                 if let Some((v, m)) = slot {
                     outputs.set(*m as usize, c, *v);
                     collected += 1;
@@ -277,9 +345,9 @@ impl WsArray {
         }
 
         // (S-1)-stage drain registers are PE pipeline registers.
-        ev.reg16_writes += drain.iter().map(|d| d.writes()).sum::<u64>();
-        ev.fifo8_writes += in_fifos.total_writes();
-        ev.fifo16_writes += out_fifos.total_writes();
+        ev.reg16_writes += self.drain.iter().map(|d| d.writes()).sum::<u64>();
+        ev.fifo8_writes += self.in_fifos.total_writes();
+        ev.fifo16_writes += self.out_fifos.total_writes();
 
         let stats = RunStats {
             cycles: cycle,
@@ -308,7 +376,8 @@ impl SystolicArray for WsArray {
         self.load_prepared(&p)
     }
 
-    /// WS has no permutation; preparing is just widening.
+    /// WS has no permutation; preparing is just widening (the internal
+    /// layout doubles as the kernel's derotated layout).
     fn prepare_weights(&self, w: &Mat<i8>) -> PreparedWeights {
         PreparedWeights::widen(self.n, w)
     }
@@ -484,8 +553,10 @@ mod tests {
 
     #[test]
     fn fast_matches_register_transfer_path() {
-        // Optimized wavefront path == shift-register simulation in
-        // every observable (outputs, cycles, TFPU, event counters).
+        // Kernel path == shift-register simulation in every observable
+        // (outputs, cycles, TFPU, event counters), and the legacy
+        // trapezoid path matches both. Cases cover rows < n, rows = n,
+        // rows >> n up to n = 64.
         for (n, s, rows, seed) in [
             (1usize, 1u64, 1usize, 1u64),
             (2, 1, 5, 2),
@@ -494,15 +565,46 @@ mod tests {
             (8, 1, 20, 5),
             (16, 2, 7, 6),
             (16, 2, 64, 7),
+            (64, 2, 16, 8),
+            (64, 1, 64, 9),
+            (64, 2, 200, 10),
         ] {
             let w = random_i8(n, n, seed);
             let x = random_i8(rows, n, seed + 100);
             let mut arr = WsArray::new(n, s);
             arr.load_weights(&w);
             let fast = arr.run_tile(&x);
+            let legacy = arr.run_tile_legacy(&x);
             let (slow, _) = arr.run_tile_traced(&x);
             assert_eq!(fast.outputs, slow.outputs, "n={n} s={s} rows={rows}");
             assert_eq!(fast.stats, slow.stats, "n={n} s={s} rows={rows}");
+            assert_eq!(legacy.outputs, slow.outputs, "legacy n={n} s={s} rows={rows}");
+            assert_eq!(legacy.stats, slow.stats, "legacy n={n} s={s} rows={rows}");
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_keeps_back_to_back_runs_exact() {
+        // The hoisted scratch (skew/de-skew groups, drain FIFOs,
+        // pushed-row ids, the legacy path's column-major copy) must
+        // reset between runs of different shapes on one array.
+        let mut arr = WsArray::new(8, 2);
+        for (rows, seed) in [(3usize, 1u64), (20, 2), (8, 3), (1, 4), (8, 5)] {
+            let w = random_i8(8, 8, seed + 50);
+            let x = random_i8(rows, 8, seed);
+            arr.load_weights(&w);
+            let (traced, _) = arr.run_tile_traced(&x);
+            let legacy = arr.run_tile_legacy(&x);
+            let fast = arr.run_tile(&x);
+            let mut fresh = WsArray::new(8, 2);
+            fresh.load_weights(&w);
+            let (want, _) = fresh.run_tile_traced(&x);
+            assert_eq!(traced.outputs, want.outputs, "rows={rows}");
+            assert_eq!(traced.stats, want.stats, "rows={rows}");
+            assert_eq!(fast.outputs, want.outputs, "rows={rows}");
+            assert_eq!(fast.stats, want.stats, "rows={rows}");
+            assert_eq!(legacy.outputs, want.outputs, "rows={rows}");
+            assert_eq!(legacy.stats, want.stats, "rows={rows}");
         }
     }
 }

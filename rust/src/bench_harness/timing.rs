@@ -50,6 +50,13 @@ pub fn report_throughput(label: &str, value: f64, unit: &str) {
     println!("  -> {label}: {value:.3e} {unit}");
 }
 
+/// True when `DIP_BENCH_SMOKE` asks benches for reduced CI-smoke
+/// sizes/iterations (any non-empty value other than "0") — one parser
+/// shared by every bench so smoke semantics cannot diverge.
+pub fn smoke_mode() -> bool {
+    std::env::var("DIP_BENCH_SMOKE").map(|v| !v.is_empty() && v != "0").unwrap_or(false)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

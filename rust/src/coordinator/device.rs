@@ -132,9 +132,67 @@ impl Device {
 
     /// Execute one job; returns true if it completed its request.
     pub fn execute(&mut self, job: Job) -> bool {
-        use std::sync::atomic::Ordering::Relaxed;
         let t0 = Instant::now();
-        let wait = t0.saturating_duration_since(job.enqueued_at);
+        let resident = self.install_or_skip(&job);
+        let mut run = self.array.run_tile(&job.x_strip);
+        self.settle_load_phase(&mut run, resident);
+        let last = self.account_run(job, &run, t0);
+        self.metrics.add_busy(t0.elapsed());
+        last
+    }
+
+    /// Execute a run of **same-tile** jobs back-to-back — the
+    /// tile-coalescing fast path. Semantics and the cycle/metric
+    /// ledger are identical to executing the jobs sequentially with
+    /// [`execute`](Self::execute): the head installs the tile (or
+    /// skips, if it is already resident) and every following job is a
+    /// resident skip, but the resident check, prepared-cache lookup,
+    /// and array dispatch happen once for the whole batch instead of
+    /// once per job. Jobs whose weight content diverges from the head's
+    /// (a forged tile-id collision) degrade to the sequential path —
+    /// never to wrong numerics.
+    pub fn execute_batch(&mut self, jobs: Vec<Job>) {
+        use std::sync::atomic::Ordering::Relaxed;
+        let Some(head) = jobs.first() else { return };
+        // Content check with an Arc-identity fast path: a wave fan-out
+        // shares one Arc per tile (PreTiledWeights), so the deep
+        // compare only ever runs under a forged tile-id collision.
+        let coalesced = jobs.len() > 1
+            && jobs[1..].iter().all(|j| {
+                j.tile_id == head.tile_id
+                    && (Arc::ptr_eq(&j.w_tile, &head.w_tile) || *j.w_tile == *head.w_tile)
+            });
+        if !coalesced {
+            for job in jobs {
+                self.execute(job);
+            }
+            return;
+        }
+        let t0 = Instant::now();
+        let resident = self.install_or_skip(head);
+        // Jobs past the head find the tile the head just made (or
+        // found) stationary: each is a resident skip, ledger-identical
+        // to a sequential run of the same sequence.
+        let tail = (jobs.len() - 1) as u64;
+        self.metrics.weight_loads_skipped.fetch_add(tail, Relaxed);
+        self.metrics.weight_load_cycles_saved.fetch_add(tail * self.load_cycles, Relaxed);
+        self.metrics.jobs_coalesced.fetch_add(tail, Relaxed);
+        let strips: Vec<Arc<Mat<i8>>> =
+            jobs.iter().map(|j| Arc::clone(&j.x_strip)).collect();
+        let runs = self.array.run_tile_batch(&strips);
+        debug_assert_eq!(runs.len(), jobs.len());
+        for (i, (job, mut run)) in jobs.into_iter().zip(runs).enumerate() {
+            self.settle_load_phase(&mut run, resident || i > 0);
+            self.account_run(job, &run, t0);
+        }
+        self.metrics.add_busy(t0.elapsed());
+    }
+
+    /// Make `job`'s tile stationary: skip when it already is (crediting
+    /// the saved load cycles), install otherwise. Returns whether the
+    /// tile was resident.
+    fn install_or_skip(&mut self, job: &Job) -> bool {
+        use std::sync::atomic::Ordering::Relaxed;
         let resident = matches!(
             &self.loaded,
             Some((id, w)) if *id == job.tile_id && **w == *job.w_tile
@@ -143,15 +201,19 @@ impl Device {
             self.metrics.weight_loads_skipped.fetch_add(1, Relaxed);
             self.metrics.weight_load_cycles_saved.fetch_add(self.load_cycles, Relaxed);
         } else {
-            let prepared = self.prepared_for(&job);
+            let prepared = self.prepared_for(job);
             self.load_cycles = self.array.load_prepared(&prepared);
             self.metrics.weight_loads.fetch_add(1, Relaxed);
             self.loaded = Some((job.tile_id, Arc::clone(&job.w_tile)));
         }
-        let mut run = self.array.run_tile(&job.x_strip);
-        if resident {
-            // run_tile bakes one load phase into its per-run stats;
-            // this job skipped it — account honestly.
+        resident
+    }
+
+    /// Reconcile one run's stats with the load phase its job actually
+    /// got (`run_tile` bakes exactly one load phase into every run).
+    fn settle_load_phase(&self, run: &mut crate::arch::TileRun, skipped: bool) {
+        if skipped {
+            // The job found the tile resident: account honestly.
             run.stats.weight_load_cycles = 0;
             run.stats.events.reg8_writes -= weight_load_reg8_writes(self.array.n() as u64);
         } else {
@@ -165,6 +227,15 @@ impl Device {
             run.stats.cycles += self.load_cycles;
             run.stats.events.pe_idle_cycles += self.load_cycles * n * n;
         }
+    }
+
+    /// Per-job accounting + psum fold; returns true if the job
+    /// completed its request. `started` is when the (possibly batched)
+    /// execution began — the tail of a coalesced batch waited in the
+    /// queue until then just like its head.
+    fn account_run(&mut self, job: Job, run: &crate::arch::TileRun, started: Instant) -> bool {
+        use std::sync::atomic::Ordering::Relaxed;
+        let wait = started.saturating_duration_since(job.enqueued_at);
         self.metrics.jobs_executed.fetch_add(1, Relaxed);
         self.metrics.rows_streamed.fetch_add(job.x_strip.rows() as u64, Relaxed);
         self.metrics.sim_cycles.fetch_add(run.stats.cycles, Relaxed);
@@ -176,7 +247,6 @@ impl Device {
             let completed = job.req.finish();
             self.metrics.requests_completed.fetch_add(completed, Relaxed);
         }
-        self.metrics.add_busy(t0.elapsed());
         last
     }
 
@@ -416,6 +486,114 @@ mod tests {
         assert_eq!(ts[0].tenant, 9);
         assert_eq!(ts[0].jobs_served, 1);
         assert_eq!(metrics.device_jobs(), vec![0, 0, 0, 1]);
+    }
+
+    #[test]
+    fn coalesced_batch_matches_sequential_ledger_exactly() {
+        // The tile-coalescing invariant: a batch of same-tile jobs must
+        // leave outputs, per-request stats, and every metric counter
+        // (except wall-clock busy time) identical to executing the
+        // same jobs one by one — including the one-install/N-1-skips
+        // cycle ledger, on both architectures.
+        for arch in [Arch::Dip, Arch::Ws] {
+            let cfg = DeviceConfig { arch, tile: 8, mac_stages: 2, ..Default::default() };
+            let w = random_i8(8, 8, 5);
+            let xs: Vec<Mat<i8>> = (0..4).map(|i| random_i8(8 + i, 8, 60 + i as u64)).collect();
+
+            let m_seq = Arc::new(Metrics::default());
+            let mut dev_seq = Device::new(cfg, 0, m_seq.clone());
+            let mut seq_resps = Vec::new();
+            for x in &xs {
+                let (job, rx) = job_for(x, &w);
+                dev_seq.execute(job);
+                seq_resps.push(rx.try_recv().unwrap());
+            }
+
+            let m_bat = Arc::new(Metrics::default());
+            let mut dev_bat = Device::new(cfg, 0, m_bat.clone());
+            let (jobs, rxs): (Vec<_>, Vec<_>) = xs.iter().map(|x| job_for(x, &w)).unzip();
+            dev_bat.execute_batch(jobs);
+
+            for ((x, seq), rx) in xs.iter().zip(&seq_resps).zip(rxs) {
+                let bat = rx.try_recv().unwrap();
+                assert_eq!(bat.out, seq.out, "{arch:?}");
+                assert_eq!(bat.out, x.widen().matmul(&w.widen()), "{arch:?}");
+                assert_eq!(bat.stats, seq.stats, "{arch:?} per-request stats diverged");
+            }
+            let (s, b) = (m_seq.snapshot(), m_bat.snapshot());
+            assert_eq!(b.jobs_executed, s.jobs_executed, "{arch:?}");
+            assert_eq!(b.weight_loads, s.weight_loads, "{arch:?}");
+            assert_eq!(b.weight_loads_skipped, s.weight_loads_skipped, "{arch:?}");
+            assert_eq!(b.weight_load_cycles_saved, s.weight_load_cycles_saved, "{arch:?}");
+            assert_eq!(b.sim_cycles, s.sim_cycles, "{arch:?}");
+            assert_eq!(b.mac_ops, s.mac_ops, "{arch:?}");
+            assert_eq!(b.rows_streamed, s.rows_streamed, "{arch:?}");
+            assert_eq!(b.requests_completed, s.requests_completed, "{arch:?}");
+            assert_eq!(b.weight_loads, 1, "{arch:?} one install for the whole batch");
+            assert_eq!(b.weight_loads_skipped, 3, "{arch:?} N-1 skips");
+            assert_eq!(b.jobs_coalesced, 3, "{arch:?} batch tail counted");
+            assert_eq!(s.jobs_coalesced, 0, "sequential path never coalesces");
+        }
+    }
+
+    #[test]
+    fn batch_on_resident_tile_skips_every_job() {
+        let metrics = Arc::new(Metrics::default());
+        let mut dev = Device::new(dip8(), 0, metrics.clone());
+        let w = random_i8(8, 8, 9);
+        let x0 = random_i8(8, 8, 10);
+        let (warmup, _rx) = job_for(&x0, &w);
+        dev.execute(warmup); // installs the tile
+        let (jobs, rxs): (Vec<_>, Vec<_>) =
+            (0..3).map(|i| job_for(&random_i8(8, 8, 20 + i), &w)).unzip();
+        dev.execute_batch(jobs);
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let x = random_i8(8, 8, 20 + i as u64);
+            assert_eq!(rx.try_recv().unwrap().out, x.widen().matmul(&w.widen()));
+        }
+        let m = metrics.snapshot();
+        assert_eq!(m.weight_loads, 1, "only the warmup installed");
+        assert_eq!(m.weight_loads_skipped, 3);
+        assert_eq!(m.weight_load_cycles_saved, 3 * 7); // N-1 per skip
+    }
+
+    #[test]
+    fn forged_collision_batch_degrades_to_sequential_and_stays_exact() {
+        // Same forged tile id, different contents: the batch must fall
+        // back to per-job execution (reload each time) and never
+        // corrupt results.
+        let metrics = Arc::new(Metrics::default());
+        let mut dev = Device::new(dip8(), 0, metrics.clone());
+        let x = random_i8(8, 8, 1);
+        let (mut jobs, rxs): (Vec<_>, Vec<_>) =
+            (0..2).map(|i| job_for(&x, &random_i8(8, 8, 30 + i))).unzip();
+        for job in &mut jobs {
+            job.tile_id = 42; // forged collision
+        }
+        dev.execute_batch(jobs);
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let w = random_i8(8, 8, 30 + i as u64);
+            assert_eq!(rx.try_recv().unwrap().out, x.widen().matmul(&w.widen()));
+        }
+        let m = metrics.snapshot();
+        assert_eq!(m.weight_loads, 2, "divergent contents force real reloads");
+        assert_eq!(m.weight_loads_skipped, 0);
+        assert_eq!(m.jobs_coalesced, 0, "fallback path is not counted as coalesced");
+    }
+
+    #[test]
+    fn empty_and_singleton_batches_are_wellformed() {
+        let metrics = Arc::new(Metrics::default());
+        let mut dev = Device::new(dip8(), 0, metrics.clone());
+        dev.execute_batch(Vec::new()); // no-op
+        let x = random_i8(8, 8, 3);
+        let w = random_i8(8, 8, 4);
+        let (job, rx) = job_for(&x, &w);
+        dev.execute_batch(vec![job]);
+        assert_eq!(rx.try_recv().unwrap().out, x.widen().matmul(&w.widen()));
+        let m = metrics.snapshot();
+        assert_eq!(m.jobs_executed, 1);
+        assert_eq!(m.jobs_coalesced, 0, "a singleton batch has no tail");
     }
 
     #[test]

@@ -26,6 +26,11 @@ pub struct Metrics {
     pub requests_completed: AtomicU64,
     /// Weight-stationary jobs executed (one per M2 tile per request).
     pub jobs_executed: AtomicU64,
+    /// Jobs executed as the tail of a tile-coalesced batch: the worker
+    /// drained them from its queue together with the batch head, so
+    /// their dispatch/lock/install overhead was amortized into one
+    /// batched array run (they still count in `jobs_executed`).
+    pub jobs_coalesced: AtomicU64,
     /// Input rows streamed through arrays.
     pub rows_streamed: AtomicU64,
     /// Simulated array cycles consumed — includes the weight-load
@@ -94,6 +99,7 @@ pub struct MetricsSnapshot {
     pub requests_submitted: u64,
     pub requests_completed: u64,
     pub jobs_executed: u64,
+    pub jobs_coalesced: u64,
     pub rows_streamed: u64,
     pub sim_cycles: u64,
     pub mac_ops: u64,
@@ -145,6 +151,7 @@ impl Metrics {
             requests_submitted: self.requests_submitted.load(Ordering::Relaxed),
             requests_completed: self.requests_completed.load(Ordering::Relaxed),
             jobs_executed: self.jobs_executed.load(Ordering::Relaxed),
+            jobs_coalesced: self.jobs_coalesced.load(Ordering::Relaxed),
             rows_streamed: self.rows_streamed.load(Ordering::Relaxed),
             sim_cycles: self.sim_cycles.load(Ordering::Relaxed),
             mac_ops: self.mac_ops.load(Ordering::Relaxed),
@@ -235,6 +242,17 @@ impl MetricsSnapshot {
         }
     }
 
+    /// Fraction of executed jobs that rode the tail of a tile-coalesced
+    /// batch (0.0 when no jobs ran) — how much per-job dispatch/lock/
+    /// install overhead the same-tile drain amortized away.
+    pub fn coalesce_rate(&self) -> f64 {
+        if self.jobs_executed == 0 {
+            0.0
+        } else {
+            self.jobs_coalesced as f64 / self.jobs_executed as f64
+        }
+    }
+
     /// Fraction of activation-strip lookups served from the strip cache
     /// (0.0 when the serving layer made no lookups).
     pub fn act_strip_hit_rate(&self) -> f64 {
@@ -280,13 +298,17 @@ mod tests {
         m.sim_cycles.fetch_add(10, Ordering::Relaxed);
         m.weight_loads_skipped.fetch_add(2, Ordering::Relaxed);
         m.jobs_executed.fetch_add(4, Ordering::Relaxed);
+        m.jobs_coalesced.fetch_add(3, Ordering::Relaxed);
         m.steals.fetch_add(1, Ordering::Relaxed);
         let s = m.snapshot();
         assert_eq!(s.requests_submitted, 3);
         assert_eq!(s.macs_per_cycle(), 10.0);
         assert_eq!(s.weight_loads_skipped, 2);
+        assert_eq!(s.jobs_coalesced, 3);
         assert_eq!(s.steals, 1);
         assert!((s.weight_reuse_rate() - 0.5).abs() < 1e-12);
+        assert!((s.coalesce_rate() - 0.75).abs() < 1e-12);
+        assert_eq!(MetricsSnapshot::default().coalesce_rate(), 0.0);
     }
 
     #[test]

@@ -14,8 +14,12 @@
 //! work stealing absorbs stragglers. Worker devices (`device`) skip
 //! the stationary-weight reload when a job's tile is already resident
 //! — charging the load cycles they do perform and crediting the ones
-//! they skip — and keep a configurable LRU of prepared (permutated)
-//! tiles; psums accumulate per request (`state`) under strict shape
+//! they skip — keep a configurable LRU of prepared (permutated)
+//! tiles, and execute **tile-coalesced**: same-tile jobs the scheduler
+//! would serve back-to-back anyway are drained into one batched array
+//! dispatch (`queue::ShardedQueue::try_pop_own_if` preserves the DRR
+//! and anti-starvation bounds per drained job; `jobs_coalesced` counts
+//! the amortized tails); psums accumulate per request (`state`) under strict shape
 //! assertions; counters (`metrics`) expose the reuse and the fairness:
 //! `weight_loads_skipped`, `cache_hits`, `steals`,
 //! `weight_load_cycles_saved`, per-tenant served/wait counters, and
@@ -66,5 +70,7 @@ pub use placement::{PlacementMap, PlacementPolicy, PlacementSnapshot};
 pub use queue::{
     Pop, ShardedQueue, TenantId, DEFAULT_TENANT, MAX_FRONT_SKIPS, STEAL_SCAN_WINDOW,
 };
-pub use router::{Coordinator, CoordinatorConfig, PreTiledWeights, RequestHandle, WaveSub};
+pub use router::{
+    Coordinator, CoordinatorConfig, PreTiledWeights, RequestHandle, WaveSub, COALESCE_LIMIT,
+};
 pub use state::{MatmulResponse, ReqState, SubRequest};

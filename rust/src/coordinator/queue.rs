@@ -109,6 +109,67 @@ impl<T> ShardInner<T> {
         self.lanes.push(Lane { tenant, queue: VecDeque::new(), deficit: 0, front_skips: 0 });
         self.lanes.last_mut().unwrap()
     }
+
+    /// DRR ring position of the start lane for the next serve.
+    fn ring_start(&self) -> usize {
+        self.cur.min(self.lanes.len().saturating_sub(1))
+    }
+
+    /// The lane DRR serves next — the first non-empty lane in ring
+    /// order — as `(lane index, lanes passed to reach it)`. `None`
+    /// when every lane is empty.
+    fn next_lane(&self) -> Option<(usize, usize)> {
+        let n_lanes = self.lanes.len();
+        let start = self.ring_start();
+        (0..n_lanes)
+            .map(|k| ((start + k) % n_lanes, k))
+            .find(|&(li, _)| !self.lanes[li].queue.is_empty())
+    }
+
+    /// Position tile preference selects within `lane`: the first
+    /// preferred job, falling back to (or, past [`MAX_FRONT_SKIPS`]
+    /// deferrals, forced to) the front.
+    fn preferred_pos(lane: &Lane<T>, prefer: &impl Fn(&T) -> bool) -> usize {
+        if lane.front_skips < MAX_FRONT_SKIPS {
+            lane.queue.iter().position(prefer).unwrap_or(0)
+        } else {
+            0 // anti-starvation: the front job has waited long enough
+        }
+    }
+
+    /// Serve `queue[pos]` of lane `li` with DRR's state transitions —
+    /// the single commit path shared by `pop_own` and
+    /// `try_pop_own_if`, so the two can never drift: lanes the ring
+    /// passed over were empty and forfeit their deficit (classic DRR:
+    /// deficit never accrues while idle), the served lane spends one
+    /// deficit (refilled to [`DRR_QUANTUM`] at the start of its
+    /// round), out-of-order serves bump `front_skips`, and a spent (or
+    /// drained) lane advances the ring.
+    fn take(&mut self, li: usize, passed: usize, pos: usize) -> T {
+        let n_lanes = self.lanes.len();
+        let start = self.ring_start();
+        for k in 0..passed {
+            self.lanes[(start + k) % n_lanes].deficit = 0;
+        }
+        self.cur = li;
+        if self.lanes[li].deficit == 0 {
+            self.lanes[li].deficit = DRR_QUANTUM;
+        }
+        let item = if pos == 0 {
+            self.lanes[li].queue.pop_front()
+        } else {
+            self.lanes[li].queue.remove(pos)
+        };
+        self.lanes[li].front_skips = if pos == 0 { 0 } else { self.lanes[li].front_skips + 1 };
+        self.lanes[li].deficit -= 1;
+        if self.lanes[li].deficit == 0 || self.lanes[li].queue.is_empty() {
+            // Round spent (or lane drained): ring moves on.
+            self.lanes[li].deficit = 0;
+            self.cur = (li + 1) % n_lanes;
+        }
+        self.len -= 1;
+        item.expect("non-empty lane must yield a job")
+    }
 }
 
 struct Shard<T> {
@@ -210,6 +271,38 @@ impl<T> ShardedQueue<T> {
         }
     }
 
+    /// Non-blocking conditional pop from worker `me`'s **own** shard —
+    /// the tile-coalescing drain primitive. Takes exactly the job a
+    /// [`pop`](Self::pop) with `prefer = pred` would hand this worker
+    /// next, **iff that job matches `pred`**; otherwise takes nothing
+    /// and leaves the shard untouched. Because every take replays
+    /// `pop`'s own DRR/preference/anti-starvation transitions (lane
+    /// ring order, deficit spending, `front_skips` bumping and the
+    /// [`MAX_FRONT_SKIPS`] forced-front bound), a batch drained through
+    /// this method is precisely a job sequence the scheduler could have
+    /// served one pop at a time: coalescing can group, but never
+    /// reorder service across lanes, starve a front job, or touch
+    /// another device's shard.
+    pub fn try_pop_own_if(&self, me: usize, pred: impl Fn(&T) -> bool) -> Option<T> {
+        let shard = &self.shards[me];
+        let mut inner = shard.inner.lock().unwrap();
+        if inner.len == 0 {
+            return None;
+        }
+        let (li, passed) = inner.next_lane().expect("len > 0 but no lane had a job");
+        // The job DRR + tile preference would select from this lane.
+        let pos = ShardInner::preferred_pos(&inner.lanes[li], &pred);
+        if !pred(&inner.lanes[li].queue[pos]) {
+            // The next-served job is not coalescible: hands-off (the
+            // worker's ordinary pop will serve it), and the shard is
+            // left untouched.
+            return None;
+        }
+        let item = inner.take(li, passed, pos);
+        shard.not_full.notify_one();
+        Some(item)
+    }
+
     /// Close the queue: no more pushes; pops drain the remainder.
     /// Idempotent.
     pub fn close(&self) {
@@ -253,54 +346,23 @@ impl<T> ShardedQueue<T> {
         None
     }
 
-    /// DRR pop: serve the current lane while it has deficit and jobs,
-    /// else advance the ring (resetting the deficit of lanes it leaves
-    /// behind). Within the served lane, tile preference may reorder,
-    /// bounded per lane by [`MAX_FRONT_SKIPS`].
+    /// DRR pop: serve the lane the ring selects (advancing past empty
+    /// lanes, which forfeit their deficit). Within the served lane,
+    /// tile preference may reorder, bounded per lane by
+    /// [`MAX_FRONT_SKIPS`]. Lane selection and the serve transitions
+    /// live in [`ShardInner::next_lane`] / [`ShardInner::take`],
+    /// shared with [`try_pop_own_if`](Self::try_pop_own_if).
     fn pop_own(&self, me: usize, prefer: &impl Fn(&T) -> bool) -> Option<T> {
         let shard = &self.shards[me];
         let mut inner = shard.inner.lock().unwrap();
         if inner.len == 0 {
             return None;
         }
-        let n_lanes = inner.lanes.len();
-        let start = inner.cur.min(n_lanes.saturating_sub(1));
-        for k in 0..n_lanes {
-            let li = (start + k) % n_lanes;
-            if inner.lanes[li].queue.is_empty() {
-                // An empty lane forfeits any leftover deficit (classic
-                // DRR: deficit never accrues while idle).
-                inner.lanes[li].deficit = 0;
-                continue;
-            }
-            inner.cur = li;
-            if inner.lanes[li].deficit == 0 {
-                inner.lanes[li].deficit = DRR_QUANTUM;
-            }
-            let pos = if inner.lanes[li].front_skips < MAX_FRONT_SKIPS {
-                inner.lanes[li].queue.iter().position(prefer).unwrap_or(0)
-            } else {
-                0 // anti-starvation: the front job has waited long enough
-            };
-            let item = if pos == 0 {
-                inner.lanes[li].queue.pop_front()
-            } else {
-                inner.lanes[li].queue.remove(pos)
-            };
-            debug_assert!(item.is_some(), "non-empty lane must yield a job");
-            inner.lanes[li].front_skips =
-                if pos == 0 { 0 } else { inner.lanes[li].front_skips + 1 };
-            inner.lanes[li].deficit -= 1;
-            if inner.lanes[li].deficit == 0 || inner.lanes[li].queue.is_empty() {
-                // Round spent (or lane drained): ring moves on.
-                inner.lanes[li].deficit = 0;
-                inner.cur = (li + 1) % n_lanes;
-            }
-            inner.len -= 1;
-            shard.not_full.notify_one();
-            return item;
-        }
-        unreachable!("len > 0 but no lane had a job");
+        let (li, passed) = inner.next_lane().expect("len > 0 but no lane had a job");
+        let pos = ShardInner::preferred_pos(&inner.lanes[li], prefer);
+        let item = inner.take(li, passed, pos);
+        shard.not_full.notify_one();
+        Some(item)
     }
 
     /// Steal from `victim`, leaving the shard's last queued job for its
@@ -459,6 +521,95 @@ mod tests {
         let first = q.pop(0, |v| *v == 20).unwrap().into_inner();
         assert_eq!(first, 10, "fairness outranks tile preference");
         assert_eq!(q.pop(0, |v| *v == 20).unwrap().into_inner(), 20);
+    }
+
+    #[test]
+    fn try_pop_takes_only_the_next_served_job_when_it_matches() {
+        // [7, 1, 7, 2]: a drain for 7s takes the front 7, then the
+        // mid-lane 7 (a bounded preference reorder), then stops at 1 —
+        // exactly the sequence pop(prefer = is-7) would have served
+        // before handing back a non-7.
+        let q = ShardedQueue::new(1, 8, false);
+        for v in [7u32, 1, 7, 2] {
+            q.push(0, T0, v);
+        }
+        let is7 = |v: &u32| *v == 7;
+        assert_eq!(q.try_pop_own_if(0, is7), Some(7));
+        assert_eq!(q.try_pop_own_if(0, is7), Some(7));
+        assert_eq!(q.try_pop_own_if(0, is7), None, "front job 1 is not coalescible");
+        q.close();
+        // FIFO remainder intact for the ordinary pop path.
+        assert!(matches!(q.pop(0, no_pref), Some(Pop::Local(1))));
+        assert!(matches!(q.pop(0, no_pref), Some(Pop::Local(2))));
+        assert!(q.pop(0, no_pref).is_none());
+    }
+
+    #[test]
+    fn try_pop_respects_the_front_skip_bound() {
+        // A non-matching front job can be passed over at most
+        // MAX_FRONT_SKIPS times before the drain must yield to it.
+        let q = ShardedQueue::new(1, MAX_FRONT_SKIPS as usize + 8, false);
+        q.push(0, T0, 1u32); // never matches
+        for _ in 0..MAX_FRONT_SKIPS + 4 {
+            q.push(0, T0, 2u32);
+        }
+        let mut drained = 0u32;
+        while q.try_pop_own_if(0, |v| *v == 2).is_some() {
+            drained += 1;
+        }
+        assert_eq!(drained, MAX_FRONT_SKIPS, "drain must stop at the starvation bound");
+        q.close();
+        assert!(matches!(q.pop(0, no_pref), Some(Pop::Local(1))), "front job served next");
+    }
+
+    #[test]
+    fn try_pop_respects_drr_lane_order() {
+        // After tenant 1's quantum is spent, the ring points at tenant
+        // 2: a drain for tenant-1 jobs must yield (fairness outranks
+        // coalescing), exactly as a plain pop would serve tenant 2.
+        let q = ShardedQueue::new(1, 8, false);
+        for v in [10u32, 11] {
+            q.push(0, 1, v);
+        }
+        q.push(0, 2, 20u32);
+        let first = q.try_pop_own_if(0, |v| *v / 10 == 1);
+        assert_eq!(first, Some(10));
+        assert_eq!(
+            q.try_pop_own_if(0, |v| *v / 10 == 1),
+            None,
+            "the ring moved to tenant 2; tenant-1 coalescing must not bypass it"
+        );
+        q.close();
+        assert!(matches!(q.pop(0, no_pref), Some(Pop::Local(20))));
+        assert!(matches!(q.pop(0, no_pref), Some(Pop::Local(11))));
+    }
+
+    #[test]
+    fn try_pop_is_shard_local_and_nonblocking() {
+        let q = ShardedQueue::new(2, 8, true);
+        q.push(0, T0, 7u32);
+        q.push(0, T0, 7);
+        // Worker 1's drain never reaches shard 0's backlog (stealing is
+        // the blocking pop's job), and an empty own shard returns None
+        // immediately.
+        assert_eq!(q.try_pop_own_if(1, |v| *v == 7), None);
+        assert_eq!(q.try_pop_own_if(0, |v| *v == 7), Some(7));
+        q.close();
+        // The remaining job is still shard 0's (last job is never
+        // stolen, and the drain above touched nothing of worker 1's).
+        assert!(q.pop(1, no_pref).is_none());
+        assert!(matches!(q.pop(0, no_pref), Some(Pop::Local(7))));
+    }
+
+    #[test]
+    fn try_pop_drains_after_close() {
+        // Coalescing keeps working through the post-close drain phase.
+        let q = ShardedQueue::new(1, 4, false);
+        q.push(0, T0, 7u32);
+        q.close();
+        assert_eq!(q.try_pop_own_if(0, |v| *v == 7), Some(7));
+        assert_eq!(q.try_pop_own_if(0, |v| *v == 7), None);
+        assert!(q.pop(0, no_pref).is_none());
     }
 
     #[test]

@@ -7,7 +7,13 @@
 //! load instead of by hash accident. Jobs queue in per-device,
 //! per-tenant lanes (deficit round-robin; one hot tenant cannot
 //! monopolize a device) with bounded depth (backpressure) and work
-//! stealing. Psum-accumulated responses are reassembled per request;
+//! stealing. Workers execute **tile-coalesced**: after popping a job,
+//! a worker drains the same-tile jobs its scheduler would serve next
+//! (bounded by [`COALESCE_LIMIT`] and the queue's own fairness bounds)
+//! and runs them as one batched device dispatch — one resident check
+//! and at most one install for the whole run, which is exactly the
+//! shape a wave fan-out (many row blocks against one stationary tile)
+//! produces. Psum-accumulated responses are reassembled per request;
 //! all operand matrices are `Arc`-shared across the fan-out.
 //!
 //! Built on std threads + the in-tree [`ShardedQueue`] (tokio and
@@ -56,6 +62,16 @@ impl Default for CoordinatorConfig {
         }
     }
 }
+
+/// Most jobs a worker coalesces into one batched device run (the head
+/// it popped plus up to `COALESCE_LIMIT - 1` same-tile jobs drained
+/// from its own shard). Bounds how long one dispatch holds the device
+/// before the worker re-enters the scheduler — the queue-side fairness
+/// bounds (DRR ring order, [`MAX_FRONT_SKIPS`]) are enforced per
+/// drained job by [`ShardedQueue::try_pop_own_if`] regardless.
+///
+/// [`MAX_FRONT_SKIPS`]: super::queue::MAX_FRONT_SKIPS
+pub const COALESCE_LIMIT: usize = 16;
 
 /// A weight matrix pre-sliced into its `tile x tile` M2 tiles, each
 /// `Arc`-shared with its content hash cached — built **once** per
@@ -215,7 +231,22 @@ impl Coordinator {
                                 }
                                 None => break, // closed and drained
                             };
-                            dev.execute(job);
+                            // Tile-coalesced execution: drain the jobs
+                            // the scheduler would serve next anyway, as
+                            // long as they carry the head's tile (one
+                            // wave fan-out routinely lands many row
+                            // blocks of one tile here), and run them as
+                            // one batch — one resident check, one
+                            // install at most, one array dispatch.
+                            let tile = job.tile_id;
+                            let mut batch = vec![job];
+                            while batch.len() < COALESCE_LIMIT {
+                                match pool.try_pop_own_if(i, |j: &Job| j.tile_id == tile) {
+                                    Some(j) => batch.push(j),
+                                    None => break,
+                                }
+                            }
+                            dev.execute_batch(batch);
                         }
                     })
                     .expect("spawn worker")
@@ -656,6 +687,38 @@ mod tests {
         assert_eq!(m.weight_loads, 1);
         assert_eq!(m.weight_loads_skipped, 11);
         assert_eq!(m.steals, 0);
+    }
+
+    #[test]
+    fn coalescing_keeps_ledger_consistent_under_same_tile_flood() {
+        // A single-tile weight flooded through one device: whatever the
+        // worker coalesces (timing-dependent), outputs stay exact and
+        // the install/skip ledger stays total — every job either
+        // installed or skipped, and coalesced jobs are a subset of the
+        // skips.
+        let cfg = CoordinatorConfig {
+            devices: 1,
+            device: DeviceConfig { arch: Arch::Dip, tile: 8, mac_stages: 2, ..Default::default() },
+            queue_depth: 64,
+            work_stealing: false,
+            placement: PlacementPolicy::HeatAware,
+        };
+        let c = Coordinator::new(cfg);
+        let w = random_i8(8, 8, 80);
+        let handles: Vec<_> = (0..32)
+            .map(|i| {
+                let x = random_i8(8, 8, 90 + i);
+                (x.clone(), c.submit(x, w.clone()))
+            })
+            .collect();
+        for (x, h) in handles {
+            assert_eq!(h.wait().out, x.widen().matmul(&w.widen()));
+        }
+        let m = c.shutdown();
+        assert_eq!(m.jobs_executed, 32);
+        assert_eq!(m.weight_loads, 1);
+        assert_eq!(m.weight_loads_skipped, 31);
+        assert!(m.jobs_coalesced <= m.weight_loads_skipped);
     }
 
     #[test]

@@ -83,11 +83,13 @@ impl ReqState {
                 out.cols()
             );
             // Accumulate (psum semantics) — strips from different
-            // contraction blocks target the same rows/columns.
+            // contraction blocks target the same rows/columns. Whole
+            // contiguous rows at a time: this fold runs once per job on
+            // the device hot path.
             for r in 0..strip.rows() {
-                for c in 0..strip.cols() {
-                    let v = out.get(r0 + r, c0 + c) + strip.get(r, c);
-                    out.set(r0 + r, c0 + c, v);
+                let dst = &mut out.row_mut(r0 + r)[c0..c0 + strip.cols()];
+                for (d, &s) in dst.iter_mut().zip(strip.row(r)) {
+                    *d += s;
                 }
             }
         }

@@ -63,6 +63,14 @@ impl<T: Copy + Default> Mat<T> {
         &self.data[r * self.cols..(r + 1) * self.cols]
     }
 
+    /// Mutable row slice — the hot paths (GEMM kernel output, psum
+    /// strip accumulation) write whole rows instead of per-element
+    /// `set` calls.
+    #[inline(always)]
+    pub fn row_mut(&mut self, r: usize) -> &mut [T] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
     pub fn as_slice(&self) -> &[T] {
         &self.data
     }
@@ -231,6 +239,14 @@ mod tests {
         let m = Mat::from_fn(2, 3, |r, c| (r * 10 + c) as i32);
         assert_eq!(m.get(1, 2), 12);
         assert_eq!(m.row(1), &[10, 11, 12]);
+    }
+
+    #[test]
+    fn row_mut_writes_in_place() {
+        let mut m = Mat::<i32>::zeros(2, 3);
+        m.row_mut(1).copy_from_slice(&[7, 8, 9]);
+        m.row_mut(0)[2] = 5;
+        assert_eq!(m, Mat::from_vec(2, 3, vec![0, 0, 5, 7, 8, 9]));
     }
 
     #[test]

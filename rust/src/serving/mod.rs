@@ -58,6 +58,15 @@
 //! max stacked rows, max sessions, with cohort rotation) keeps
 //! per-wave latency bounded.
 //!
+//! Below the router, a wave's fan-out lands many same-tile row-block
+//! jobs on one device queue; the workers drain those into
+//! **tile-coalesced** batched device runs (one resident check, at most
+//! one install, one array dispatch per run — `jobs_coalesced` counts
+//! the amortized tails) and each run executes through the arrays'
+//! derotated-GEMM kernel path (see [`arch`](crate::arch)), so the
+//! serving hot path pays per-wave, not per-job, overhead all the way
+//! down to the PE model.
+//!
 //! Observability: `act_strip_hits` / `act_strip_misses` /
 //! `act_bytes_saved` / `act_rows_reused` and `waves` /
 //! `wave_stacked_rows` (plus the derived `weight_loads_per_wave` /

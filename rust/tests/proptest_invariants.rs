@@ -41,7 +41,7 @@ use dip_core::bench_harness::scenarios::{
 };
 use dip_core::coordinator::{
     Coordinator, CoordinatorConfig, DeviceConfig, Metrics, PlacementPolicy, ShardedQueue,
-    TenantId, MAX_FRONT_SKIPS,
+    TenantId, DEFAULT_TENANT, MAX_FRONT_SKIPS,
 };
 use dip_core::matrix::{random_i8, Mat};
 use dip_core::serving::{ActStripCache, LayerDims, WavePolicy};
@@ -105,6 +105,171 @@ fn prop_sims_equal_reference_matmul() {
         let mut ws = WsArray::new(n, s);
         ws.load_weights(&w);
         assert_eq!(ws.run_tile(&x).outputs, expect, "WS case {case} n={n} rows={rows} s={s} seed={seed}");
+    }
+}
+
+#[test]
+fn prop_kernel_matches_register_transfer_path() {
+    // The two-path contract of `arch`: the derotated-GEMM kernel path
+    // (`run_tile`) and the legacy wavefront path (`run_tile_legacy`)
+    // must be bit-identical to the register-transfer reference
+    // (`run_tile_traced`) in every observable — outputs, cycles, TFPU,
+    // weight-load cycles, total ops, and each EventCounts field — for
+    // n across 4..=64 and rows below, at, and far above n, on DiP and
+    // WS alike.
+    let mut g = Gen(0xDE07A7ED);
+    for case in 0..24 {
+        let n = g.range(4, 64) as usize;
+        let s = g.range(1, 2);
+        let rows = match case % 3 {
+            0 => g.range(1, n as u64 - 1) as usize, // rows < n
+            1 => n,                                 // rows = n
+            _ => n * g.range(3, 5) as usize,        // rows >> n
+        };
+        let seed = g.next();
+        let w = random_i8(n, n, seed);
+        let x = random_i8(rows, n, seed + 1);
+        let ctx = format!("case {case} n={n} s={s} rows={rows} seed={seed}");
+
+        let mut dip = DipArray::new(n, s);
+        dip.load_weights(&w);
+        let fast = dip.run_tile(&x);
+        let legacy = dip.run_tile_legacy(&x);
+        let (slow, _) = dip.run_tile_traced(&x);
+        assert_eq!(fast.outputs, slow.outputs, "DiP kernel outputs {ctx}");
+        assert_eq!(fast.stats, slow.stats, "DiP kernel stats {ctx}");
+        assert_eq!(legacy.outputs, slow.outputs, "DiP legacy outputs {ctx}");
+        assert_eq!(legacy.stats, slow.stats, "DiP legacy stats {ctx}");
+
+        let mut ws = WsArray::new(n, s);
+        ws.load_weights(&w);
+        let fast = ws.run_tile(&x);
+        let legacy = ws.run_tile_legacy(&x);
+        let (slow, _) = ws.run_tile_traced(&x);
+        assert_eq!(fast.outputs, slow.outputs, "WS kernel outputs {ctx}");
+        assert_eq!(fast.stats, slow.stats, "WS kernel stats {ctx}");
+        assert_eq!(legacy.outputs, slow.outputs, "WS legacy outputs {ctx}");
+        assert_eq!(legacy.stats, slow.stats, "WS legacy stats {ctx}");
+    }
+}
+
+#[test]
+fn prop_run_tile_batch_equals_sequential_runs() {
+    // The batched entry point is defined as exactly sequential
+    // `run_tile`s: same outputs, same per-run stats, for random batch
+    // sizes and strip heights on both architectures.
+    let mut g = Gen(0xBA7C8);
+    for case in 0..20 {
+        let n = g.range(2, 24) as usize;
+        let s = g.range(1, 2);
+        let batch = g.range(1, 6) as usize;
+        let seed = g.next();
+        let w = random_i8(n, n, seed);
+        let xs: Vec<Arc<dip_core::Mat<i8>>> = (0..batch)
+            .map(|i| Arc::new(random_i8(g.range(1, 3 * n as u64) as usize, n, seed + 1 + i as u64)))
+            .collect();
+        for arch in [Arch::Dip, Arch::Ws] {
+            let mut batched: Box<dyn SystolicArray> = match arch {
+                Arch::Dip => Box::new(DipArray::new(n, s)),
+                Arch::Ws => Box::new(WsArray::new(n, s)),
+            };
+            let mut sequential: Box<dyn SystolicArray> = match arch {
+                Arch::Dip => Box::new(DipArray::new(n, s)),
+                Arch::Ws => Box::new(WsArray::new(n, s)),
+            };
+            batched.load_weights(&w);
+            sequential.load_weights(&w);
+            let runs = batched.run_tile_batch(&xs);
+            assert_eq!(runs.len(), xs.len());
+            for (i, (x, run)) in xs.iter().zip(runs).enumerate() {
+                let solo = sequential.run_tile(x);
+                assert_eq!(run.outputs, solo.outputs, "{arch:?} case {case} strip {i}");
+                assert_eq!(run.stats, solo.stats, "{arch:?} case {case} strip {i}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_coalesced_device_batch_matches_sequential_ledger() {
+    // Device-level tile coalescing: for random same-tile batches the
+    // batched execution must reproduce the sequential execution's
+    // outputs, per-request stats, and the full install/skip cycle
+    // ledger (one install charge, N-1 skips) on both architectures.
+    use dip_core::coordinator::{Device, Job};
+    use dip_core::coordinator::{MatmulResponse, ReqState, SubRequest};
+    use std::sync::mpsc::{channel, Receiver};
+    use std::time::Instant;
+
+    let mut g = Gen(0xC0A1E5CE);
+    for case in 0..12 {
+        let tile = [4usize, 8, 16][g.range(0, 2) as usize];
+        let arch = if g.next() % 2 == 0 { Arch::Dip } else { Arch::Ws };
+        let batch = g.range(2, 6) as usize;
+        let seed = g.next();
+        let w = Arc::new(random_i8(tile, tile, seed));
+        let tile_id = w.content_hash();
+        let xs: Vec<dip_core::Mat<i8>> = (0..batch)
+            .map(|i| random_i8(g.range(1, 2 * tile as u64) as usize, tile, seed + 1 + i as u64))
+            .collect();
+        let job_for = |x: &dip_core::Mat<i8>| -> (Job, Receiver<MatmulResponse>) {
+            let (tx, rx) = channel();
+            let req = Arc::new(ReqState::new(
+                x.rows(),
+                tile,
+                tile,
+                1,
+                vec![SubRequest { id: 0, row0: 0, rows: x.rows(), tx }],
+            ));
+            let job = Job {
+                req,
+                w_tile: Arc::clone(&w),
+                x_strip: Arc::new(x.clone()),
+                r0: 0,
+                c0: 0,
+                tile_id,
+                tenant: DEFAULT_TENANT,
+                enqueued_at: Instant::now(),
+            };
+            (job, rx)
+        };
+        let cfg = DeviceConfig { arch, tile, mac_stages: 2, ..Default::default() };
+
+        let m_seq = Arc::new(Metrics::default());
+        let mut dev_seq = Device::new(cfg, 0, m_seq.clone());
+        let seq: Vec<MatmulResponse> = xs
+            .iter()
+            .map(|x| {
+                let (job, rx) = job_for(x);
+                dev_seq.execute(job);
+                rx.try_recv().expect("sequential response")
+            })
+            .collect();
+
+        let m_bat = Arc::new(Metrics::default());
+        let mut dev_bat = Device::new(cfg, 0, m_bat.clone());
+        let (jobs, rxs): (Vec<Job>, Vec<Receiver<MatmulResponse>>) =
+            xs.iter().map(|x| job_for(x)).unzip();
+        dev_bat.execute_batch(jobs);
+
+        let ctx = format!("case {case} arch={arch:?} tile={tile} batch={batch} seed={seed}");
+        for ((x, s_resp), rx) in xs.iter().zip(&seq).zip(rxs) {
+            let b_resp = rx.try_recv().expect("batched response");
+            assert_eq!(b_resp.out, s_resp.out, "{ctx}");
+            assert_eq!(b_resp.out, x.widen().matmul(&w.widen()), "{ctx}");
+            assert_eq!(b_resp.stats, s_resp.stats, "{ctx}");
+        }
+        let (s, b) = (m_seq.snapshot(), m_bat.snapshot());
+        assert_eq!(b.weight_loads, 1, "{ctx}");
+        assert_eq!(b.weight_loads_skipped, batch as u64 - 1, "{ctx}");
+        assert_eq!(b.jobs_coalesced, batch as u64 - 1, "{ctx}");
+        assert_eq!(b.weight_loads, s.weight_loads, "{ctx}");
+        assert_eq!(b.weight_loads_skipped, s.weight_loads_skipped, "{ctx}");
+        assert_eq!(b.weight_load_cycles_saved, s.weight_load_cycles_saved, "{ctx}");
+        assert_eq!(b.sim_cycles, s.sim_cycles, "{ctx}");
+        assert_eq!(b.mac_ops, s.mac_ops, "{ctx}");
+        assert_eq!(b.rows_streamed, s.rows_streamed, "{ctx}");
+        assert_eq!(b.requests_completed, s.requests_completed, "{ctx}");
     }
 }
 
