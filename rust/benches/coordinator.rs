@@ -52,7 +52,11 @@ fn serve(arch: Arch, devices: usize, requests: usize, batch: usize, verify: bool
             h.wait();
         }
     }
-    coord.shutdown()
+    // Every bench drain is also an audit point: the settled ledger must
+    // pass the double-entry identities (check::audit) at full size.
+    let (snap, audit) = coord.shutdown_audited();
+    audit.assert_balanced();
+    snap
 }
 
 fn placement_scenario(burst: usize) {

@@ -33,6 +33,17 @@
 //! and benches must treat `run_tile` and `run_tile_traced` as
 //! interchangeable up to the trace.
 //!
+//! # Correctness tooling
+//!
+//! Beyond the equivalence pins above, [`crate::check`] holds this
+//! layer's closed forms and batching contract from the outside:
+//! [`crate::check::audit`] re-derives the per-job load/stream cycle
+//! constants (`per_load_cycles`, `stream_overhead_cycles`) that the
+//! coordinator ledger charges for both architectures, and
+//! [`crate::check::explore`] proves that every partition of a same-tile
+//! job batch into [`SystolicArray::run_tile_batch`] dispatches yields
+//! outputs and stats identical to the sequential reference.
+//!
 //! [`run_tile`]: SystolicArray::run_tile
 //! [`Trace`]: crate::sim::trace::Trace
 

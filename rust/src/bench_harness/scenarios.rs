@@ -112,7 +112,8 @@ pub fn serve_two_model_bursts(cfg: &TwoModelBurst, policy: PlacementPolicy) -> B
         }
     }
     let device_jobs = coord.device_job_counts();
-    let metrics = coord.shutdown();
+    let (metrics, audit) = coord.shutdown_audited();
+    audit.assert_balanced();
     BurstOutcome { metrics, device_jobs }
 }
 
@@ -195,7 +196,8 @@ pub fn cold_share_under_flood(cfg: &FloodScenario) -> FloodOutcome {
         h.wait();
     }
     let final_tenants = coord.tenant_metrics();
-    let m = coord.shutdown();
+    let (m, audit) = coord.shutdown_audited();
+    audit.assert_balanced();
     assert_eq!(m.requests_completed as usize, cfg.hot_requests + cfg.cold_requests + 1);
     FloodOutcome {
         cold_share: if drained_early { None } else { Some(share) },

@@ -1,0 +1,379 @@
+//! The double-entry ledger auditor: every credit the metrics claim
+//! must have a matching recorded charge, and every drain-point total
+//! must partition exactly.
+//!
+//! The coordinator's counters form a ledger. Some entries are
+//! **pairs** — `weight_load_cycles_saved` (credit) only means anything
+//! against `weight_load_cycles_charged` (the cost installs really
+//! paid); some are **partitions** — every executed job either
+//! installed its tile or skipped the install, every install either hit
+//! or missed the prepared cache; and some are **closed forms** — the
+//! arrays' cycle and MAC accounting reduces to exact per-job formulas
+//! (pinned by `arch`'s closed-form tests), so at a drain point the
+//! global tallies must land on them to the cycle.
+//!
+//! [`audit_coordinator`] checks all of these against one
+//! [`MetricsSnapshot`] plus the per-tenant/per-device breakdowns. It
+//! is meaningful only at a **settled** drain point — after workers have
+//! joined — because mid-flight a worker may have folded a job's psum
+//! but not yet bumped `requests_completed`; that is why the hook is
+//! [`Coordinator::shutdown_audited`], which audits strictly after the
+//! join, and why there is no `audit(&self)` on a live coordinator.
+//!
+//! Mutation smoke: `DeviceDefect::CreditWithoutCharge` re-introduces
+//! the PR 1 charge-without-credit bug behind a test-only shim, and the
+//! tests here prove the auditor flags it (`load-charge`,
+//! `credit-has-charge`, `cycle-ledger` all trip).
+//!
+//! [`Coordinator::shutdown_audited`]: crate::coordinator::Coordinator::shutdown_audited
+
+use std::fmt;
+
+use crate::analytical::Arch;
+use crate::coordinator::{CoordinatorConfig, MetricsSnapshot, TenantSnapshot};
+
+/// One audited identity.
+#[derive(Debug, Clone)]
+pub struct AuditCheck {
+    /// Stable identity name (kebab-case).
+    pub name: &'static str,
+    pub ok: bool,
+    /// The instantiated equation, with both sides evaluated.
+    pub detail: String,
+}
+
+/// The auditor's verdict: every identity, pass or fail.
+#[derive(Debug, Clone)]
+pub struct AuditReport {
+    pub checks: Vec<AuditCheck>,
+}
+
+impl AuditReport {
+    pub fn is_balanced(&self) -> bool {
+        self.checks.iter().all(|c| c.ok)
+    }
+
+    pub fn failures(&self) -> Vec<&AuditCheck> {
+        self.checks.iter().filter(|c| !c.ok).collect()
+    }
+
+    /// Panic with every failed identity (the test-harness hook: serving
+    /// and scenario shutdowns call this so any imbalance fails loudly).
+    pub fn assert_balanced(&self) {
+        assert!(self.is_balanced(), "ledger audit failed:\n{self}");
+    }
+}
+
+impl fmt::Display for AuditReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for c in &self.checks {
+            writeln!(f, "  [{}] {}: {}", if c.ok { "ok " } else { "FAIL" }, c.name, c.detail)?;
+        }
+        Ok(())
+    }
+}
+
+/// Dedicated weight-load cycles per install: `N-1` on DiP (the paper's
+/// §III-B parallel load over the diagonal interconnect), `N` on WS.
+pub fn per_load_cycles(arch: Arch, tile: usize) -> u64 {
+    match arch {
+        Arch::Dip => tile as u64 - 1,
+        Arch::Ws => tile as u64,
+    }
+}
+
+/// Streaming cycles a job pays beyond its row count: `run_tile` on an
+/// `N x N` array with `s` MAC stages costs `rows + N + s - 2` cycles on
+/// DiP and `rows + 2N + s - 3` on WS (the closed forms pinned against
+/// the register-transfer paths by `arch`'s tests), so the per-job
+/// overhead is the formula minus `rows`.
+pub fn stream_overhead_cycles(arch: Arch, tile: usize, mac_stages: u64) -> u64 {
+    let n = tile as u64;
+    match arch {
+        Arch::Dip => (n + mac_stages).saturating_sub(2),
+        Arch::Ws => (2 * n + mac_stages).saturating_sub(3),
+    }
+}
+
+fn eq(name: &'static str, lhs: u64, rhs: u64, formula: &str) -> AuditCheck {
+    AuditCheck { name, ok: lhs == rhs, detail: format!("{formula}: {lhs} vs {rhs}") }
+}
+
+fn le(name: &'static str, lhs: u64, rhs: u64, formula: &str) -> AuditCheck {
+    AuditCheck { name, ok: lhs <= rhs, detail: format!("{formula}: {lhs} vs {rhs}") }
+}
+
+/// Audit a settled coordinator ledger. `tenants` and `device_jobs` are
+/// the per-tenant and per-device breakdowns taken from the same
+/// [`Metrics`](crate::coordinator::Metrics) the snapshot came from;
+/// `cfg` supplies the (uniform) device pool's arch/tile/mac-stages for
+/// the closed-form identities.
+pub fn audit_coordinator(
+    snap: &MetricsSnapshot,
+    tenants: &[TenantSnapshot],
+    device_jobs: &[u64],
+    cfg: &CoordinatorConfig,
+) -> AuditReport {
+    let per_load = per_load_cycles(cfg.device.arch, cfg.device.tile);
+    let overhead = stream_overhead_cycles(cfg.device.arch, cfg.device.tile, cfg.device.mac_stages);
+    let n = cfg.device.tile as u64;
+    let device_sum: u64 = device_jobs.iter().sum();
+    let tenant_sum: u64 = tenants.iter().map(|t| t.jobs_served).sum();
+
+    let checks = vec![
+        // Partitions: each total splits exactly into its parts.
+        eq(
+            "jobs-install-partition",
+            snap.jobs_executed,
+            snap.weight_loads + snap.weight_loads_skipped,
+            "jobs_executed == weight_loads + weight_loads_skipped",
+        ),
+        eq(
+            "install-prepare-partition",
+            snap.weight_loads,
+            snap.cache_hits + snap.cache_misses,
+            "weight_loads == cache_hits + cache_misses",
+        ),
+        le(
+            "coalesce-within-skips",
+            snap.jobs_coalesced,
+            snap.weight_loads_skipped,
+            "jobs_coalesced <= weight_loads_skipped",
+        ),
+        le(
+            "warm-steals-within-steals",
+            snap.steals_warm,
+            snap.steals,
+            "steals_warm <= steals",
+        ),
+        // Drain-point identities: nothing in flight, nothing lost.
+        eq(
+            "device-drain",
+            snap.jobs_executed,
+            device_sum,
+            "jobs_executed == sum(device_jobs)",
+        ),
+        eq(
+            "tenant-drain",
+            tenant_sum,
+            snap.jobs_executed,
+            "sum(tenant jobs_served) == jobs_executed",
+        ),
+        eq(
+            "request-drain",
+            snap.requests_completed,
+            snap.requests_submitted,
+            "requests_completed == requests_submitted",
+        ),
+        // The double-entry weight-load ledger.
+        eq(
+            "load-charge",
+            snap.weight_load_cycles_charged,
+            snap.weight_loads * per_load,
+            "weight_load_cycles_charged == weight_loads * per_load",
+        ),
+        eq(
+            "skip-credit",
+            snap.weight_load_cycles_saved,
+            snap.weight_loads_skipped * per_load,
+            "weight_load_cycles_saved == weight_loads_skipped * per_load",
+        ),
+        AuditCheck {
+            name: "credit-has-charge",
+            ok: snap.weight_load_cycles_saved == 0 || snap.weight_load_cycles_charged > 0,
+            detail: format!(
+                "a nonzero credit needs a paying ledger: saved {} vs charged {}",
+                snap.weight_load_cycles_saved, snap.weight_load_cycles_charged
+            ),
+        },
+        // Closed-form cycle/MAC ledgers (kernel lower bound: cycles
+        // can never undercut rows + per-job overhead + paid installs).
+        eq(
+            "cycle-ledger",
+            snap.sim_cycles,
+            snap.rows_streamed + snap.jobs_executed * overhead + snap.weight_load_cycles_charged,
+            "sim_cycles == rows_streamed + jobs_executed * overhead + charged",
+        ),
+        eq(
+            "mac-ledger",
+            snap.mac_ops,
+            snap.rows_streamed * n * n,
+            "mac_ops == rows_streamed * N^2",
+        ),
+        // Serving-side credits need matching events.
+        AuditCheck {
+            name: "strip-credit",
+            ok: snap.act_bytes_saved == 0 || snap.act_strip_hits > 0,
+            detail: format!(
+                "act_bytes_saved {} needs act_strip_hits > 0 (got {})",
+                snap.act_bytes_saved, snap.act_strip_hits
+            ),
+        },
+        AuditCheck {
+            name: "wave-stacking",
+            ok: if snap.waves == 0 {
+                snap.wave_stacked_rows == 0
+            } else {
+                snap.wave_stacked_rows >= snap.waves
+            },
+            detail: format!(
+                "waves {} vs wave_stacked_rows {} (each wave stacks >= 1 row)",
+                snap.waves, snap.wave_stacked_rows
+            ),
+        },
+    ];
+    AuditReport { checks }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::queue::DEFAULT_TENANT;
+    use crate::coordinator::Coordinator;
+    use crate::coordinator::{device::DeviceDefect, DeviceConfig};
+    use crate::matrix::random_i8;
+
+    /// A hand-balanced ledger: 4 jobs on a DiP-8 pool (overhead 8,
+    /// per-load 7), one install + three skips, 32 rows streamed.
+    fn balanced() -> (MetricsSnapshot, Vec<TenantSnapshot>, Vec<u64>, CoordinatorConfig) {
+        let cfg = CoordinatorConfig {
+            devices: 2,
+            device: DeviceConfig { tile: 8, ..Default::default() },
+            ..Default::default()
+        };
+        let snap = MetricsSnapshot {
+            requests_submitted: 4,
+            requests_completed: 4,
+            jobs_executed: 4,
+            jobs_coalesced: 2,
+            rows_streamed: 32,
+            sim_cycles: 32 + 4 * 8 + 7,
+            mac_ops: 32 * 64,
+            weight_loads: 1,
+            weight_loads_skipped: 3,
+            weight_load_cycles_saved: 3 * 7,
+            weight_load_cycles_charged: 7,
+            cache_hits: 0,
+            cache_misses: 1,
+            ..Default::default()
+        };
+        let tenants = vec![TenantSnapshot {
+            tenant: DEFAULT_TENANT,
+            requests_submitted: 4,
+            jobs_served: 4,
+            wait_ns: 0,
+        }];
+        (snap, tenants, vec![3, 1], cfg)
+    }
+
+    #[test]
+    fn balanced_ledger_passes_every_identity() {
+        let (snap, tenants, devs, cfg) = balanced();
+        let report = audit_coordinator(&snap, &tenants, &devs, &cfg);
+        assert!(report.is_balanced(), "{report}");
+        report.assert_balanced();
+    }
+
+    #[test]
+    fn each_broken_identity_is_flagged_by_name() {
+        let (snap, tenants, devs, cfg) = balanced();
+        let cases: Vec<(&str, Box<dyn Fn(&mut MetricsSnapshot)>)> = vec![
+            ("jobs-install-partition", Box::new(|s| s.weight_loads_skipped -= 1)),
+            ("install-prepare-partition", Box::new(|s| s.cache_misses += 1)),
+            ("coalesce-within-skips", Box::new(|s| s.jobs_coalesced = s.weight_loads_skipped + 1)),
+            ("warm-steals-within-steals", Box::new(|s| s.steals_warm = s.steals + 1)),
+            ("request-drain", Box::new(|s| s.requests_completed -= 1)),
+            ("load-charge", Box::new(|s| s.weight_load_cycles_charged = 0)),
+            ("skip-credit", Box::new(|s| s.weight_load_cycles_saved += 1)),
+            ("cycle-ledger", Box::new(|s| s.sim_cycles += 5)),
+            ("mac-ledger", Box::new(|s| s.mac_ops -= 64)),
+            ("strip-credit", Box::new(|s| s.act_bytes_saved = 512)),
+            ("wave-stacking", Box::new(|s| s.wave_stacked_rows = 9)),
+        ];
+        for (name, brk) in cases {
+            let mut s = snap;
+            brk(&mut s);
+            let report = audit_coordinator(&s, &tenants, &devs, &cfg);
+            assert!(
+                report.failures().iter().any(|c| c.name == name),
+                "breaking `{name}` went unflagged:\n{report}"
+            );
+        }
+    }
+
+    #[test]
+    fn drain_sums_must_cover_the_job_total() {
+        let (snap, tenants, _devs, cfg) = balanced();
+        let report = audit_coordinator(&snap, &tenants, &[1, 1], &cfg);
+        assert!(report.failures().iter().any(|c| c.name == "device-drain"), "{report}");
+        let report = audit_coordinator(&snap, &[], &[3, 1], &cfg);
+        assert!(report.failures().iter().any(|c| c.name == "tenant-drain"), "{report}");
+    }
+
+    #[test]
+    fn per_arch_closed_form_constants() {
+        assert_eq!(per_load_cycles(Arch::Dip, 8), 7);
+        assert_eq!(per_load_cycles(Arch::Ws, 8), 8);
+        assert_eq!(stream_overhead_cycles(Arch::Dip, 8, 2), 8);
+        assert_eq!(stream_overhead_cycles(Arch::Ws, 8, 2), 15);
+    }
+
+    #[test]
+    fn real_coordinator_run_audits_balanced_on_both_archs() {
+        // End-to-end: a mixed workload through the real pool must land
+        // every identity at the settled drain point.
+        for arch in [Arch::Dip, Arch::Ws] {
+            let cfg = CoordinatorConfig {
+                devices: 3,
+                device: DeviceConfig { arch, tile: 8, mac_stages: 2, ..Default::default() },
+                queue_depth: 8,
+                ..Default::default()
+            };
+            let c = Coordinator::new(cfg);
+            let w = random_i8(16, 16, 5);
+            let handles: Vec<_> = (0..6)
+                .map(|i| c.submit_as(i % 2, random_i8(8 + (i as usize % 3) * 8, 16, 40 + i), w.clone()))
+                .collect();
+            for h in handles {
+                h.wait();
+            }
+            let (snap, report) = c.shutdown_audited();
+            assert!(report.is_balanced(), "{arch:?}:\n{report}");
+            assert_eq!(snap.requests_completed, 6, "{arch:?}");
+        }
+    }
+
+    #[test]
+    fn credit_without_charge_mutant_is_flagged() {
+        // Mutation smoke: the PR 1 ledger bug, re-introduced through
+        // the device's test-only defect shim, must trip the auditor at
+        // shutdown — specifically the charge-side identities.
+        let cfg = CoordinatorConfig {
+            devices: 2,
+            device: DeviceConfig {
+                tile: 8,
+                defect: Some(DeviceDefect::CreditWithoutCharge),
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let c = Coordinator::new(cfg);
+        let w = random_i8(8, 8, 9);
+        // Same single-tile weight: affinity lands every job on one
+        // device, so jobs 2.. are resident skips that credit savings
+        // the defective ledger never charged for.
+        for i in 0..4 {
+            c.submit(random_i8(8, 8, 50 + i), w.clone()).wait();
+        }
+        let (snap, report) = c.shutdown_audited();
+        assert!(snap.weight_load_cycles_saved > 0, "mutant must still credit");
+        assert_eq!(snap.weight_load_cycles_charged, 0, "mutant never charges");
+        assert!(!report.is_balanced());
+        for name in ["load-charge", "credit-has-charge", "cycle-ledger"] {
+            assert!(
+                report.failures().iter().any(|c| c.name == name),
+                "expected `{name}` to trip:\n{report}"
+            );
+        }
+    }
+}

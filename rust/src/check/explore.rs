@@ -1,0 +1,818 @@
+//! A hand-rolled deterministic interleaving explorer (a "mini-loom")
+//! for the coordinator's scheduling substrate.
+//!
+//! Threaded tests observe one interleaving per run; the bugs that
+//! matter here — a close that strands a job, a preference pass that
+//! starves a lane, a DRR ring that stops advancing — live in
+//! *specific* interleavings. This module enumerates them: a scenario's
+//! actors (producers, consumers, coalescing drainers, one closer) are
+//! stepped one at a time against a **real** [`ShardedQueue`], and a
+//! bounded depth-first search replays the scenario once per distinct
+//! schedule, backtracking over the choice points. Every step drives
+//! the queue's production code paths through its non-blocking
+//! `#[doc(hidden)]` hooks (`try_pop`, `shard_len`); the explorer never
+//! re-implements the queue.
+//!
+//! What a schedule checks, against an independently maintained shadow
+//! (per-shard mirror lanes, conservation ledgers):
+//!
+//! - **Conservation** — every accepted item is popped exactly once;
+//!   a close never drops queued work; a rejected item never surfaces.
+//! - **Anti-starvation** — tile preference passes over a lane's front
+//!   job at most [`MAX_FRONT_SKIPS`] times.
+//! - **DRR fairness** — with [`DRR_QUANTUM`] `== 1` (compile-time
+//!   guarded below), a shard never serves the same tenant lane twice
+//!   in a row while another lane waits at both serve points (steals
+//!   reset the window: they reshape lanes outside DRR's control).
+//! - **Steal discipline** — steals only cross shards, and only from a
+//!   victim holding at least two jobs.
+//! - **Close correctness** — a consumer that finds nothing while the
+//!   queue is open and visibly non-empty is a missed-work bug; after
+//!   close, every shard drains to empty.
+//!
+//! What this model does **not** cover: the blocking paths themselves
+//! (condvar waits, missed wakeups, lock poisoning). A blocked actor is
+//! modeled as *disabled* rather than parked, so the wait/notify
+//! machinery is exercised only by the real threaded tests
+//! (`queue.rs`'s backpressure and racing-close tests).
+//!
+//! Each invariant is proven to have teeth by mutation smoke: the
+//! [`QueueDefect`] variants re-introduce one bug each, and a test
+//! asserts the explorer reports a violation (with the schedule that
+//! triggers it, replayable by construction).
+//!
+//! The same technique applies one layer down:
+//! [`explore_device_batches`] enumerates every partition of a run of
+//! same-tile jobs into consecutive [`Device::execute_batch`] calls and
+//! asserts outputs, per-request stats, and the full metrics ledger are
+//! identical to the fully sequential execution — the coalescing
+//! equivalence the scheduler's fast path depends on.
+
+use std::collections::{BTreeMap, VecDeque};
+
+use crate::coordinator::queue::{
+    Pop, QueueClosed, QueueDefect, ShardedQueue, TenantId, DRR_QUANTUM, MAX_FRONT_SKIPS,
+};
+
+/// The DRR-alternation invariant asserted below is sound only for a
+/// quantum of one job (with a larger quantum, back-to-back service of
+/// one lane is legitimate). Revisit the invariant together with the
+/// constant.
+const _: () = assert!(DRR_QUANTUM == 1, "DRR-alternation invariant assumes quantum 1");
+
+/// Hard cap on schedule depth — generously above any scenario in the
+/// suite, so hitting it means the enabled-ness model livelocked.
+const MAX_DEPTH: usize = 10_000;
+
+/// Actor predicates are plain `fn` pointers so scenarios stay `'static`
+/// data with no capture lifetimes.
+type Pred = fn(&u32) -> bool;
+
+fn no_pref(_: &u32) -> bool {
+    false
+}
+
+fn ge5(v: &u32) -> bool {
+    *v >= 5
+}
+
+fn ge100(v: &u32) -> bool {
+    *v >= 100
+}
+
+/// A producer actor: pushes `items` in order onto `shard` under
+/// `tenant`'s lane, one item per step.
+struct ProducerSpec {
+    shard: usize,
+    tenant: TenantId,
+    items: Vec<u32>,
+}
+
+/// A consumer actor: worker `worker` running the queue's full scan
+/// (own-shard DRR pop, then steals) with a tile-preference predicate.
+struct ConsumerSpec {
+    worker: usize,
+    prefer: Pred,
+}
+
+/// A coalescing-drain actor: worker `worker` attempting
+/// `try_pop_own_if(pred)` up to `attempts` times (the tile-coalescing
+/// fast path interleaved with everything else).
+struct DrainerSpec {
+    worker: usize,
+    attempts: usize,
+    pred: Pred,
+}
+
+/// One model-checking scenario: a queue shape, a cast of actors, and a
+/// schedule budget.
+pub struct QueueScenario {
+    pub name: &'static str,
+    shards: usize,
+    capacity: usize,
+    steal: bool,
+    producers: Vec<ProducerSpec>,
+    consumers: Vec<ConsumerSpec>,
+    drainers: Vec<DrainerSpec>,
+    defect: Option<QueueDefect>,
+    /// Stop after this many schedules even if the space is larger
+    /// (`Exploration::exhausted` reports which case happened).
+    budget: usize,
+}
+
+/// A failed schedule: what broke, and the exact choice sequence that
+/// reproduces it (replay is deterministic by construction).
+#[derive(Debug)]
+pub struct Violation {
+    pub detail: String,
+    pub schedule: Vec<usize>,
+}
+
+/// Outcome of exploring one scenario.
+#[derive(Debug)]
+pub struct Exploration {
+    /// Distinct schedules executed.
+    pub schedules: usize,
+    /// True when the full schedule space was enumerated within budget.
+    pub exhausted: bool,
+    pub violation: Option<Violation>,
+}
+
+#[derive(Clone, Copy)]
+enum Actor {
+    Producer(usize),
+    Consumer(usize),
+    Drainer(usize),
+    Closer,
+}
+
+/// Shadow of one tenant lane: the items the queue must still hold, and
+/// how many times the current front has been passed over.
+struct MirrorLane {
+    items: VecDeque<u32>,
+    front_skips: u32,
+}
+
+/// One replay of a scenario under a fixed schedule: the real queue plus
+/// the shadow state the invariants are checked against.
+struct Run<'a> {
+    cfg: &'a QueueScenario,
+    queue: ShardedQueue<u32>,
+    next_item: Vec<usize>,
+    producer_done: Vec<bool>,
+    consumer_done: Vec<bool>,
+    drains_left: Vec<usize>,
+    closed: bool,
+    /// Per-shard mirror of the queue's lanes (tenant -> FIFO).
+    mirrors: Vec<BTreeMap<TenantId, MirrorLane>>,
+    pushed: Vec<u32>,
+    popped: Vec<u32>,
+    rejected: Vec<u32>,
+    /// Per shard: the lane the last local pop served, and whether
+    /// another lane was non-empty right after it (the DRR-alternation
+    /// window).
+    last_local: Vec<Option<(TenantId, bool)>>,
+    /// Per shard: a steal touched this shard since its last local pop,
+    /// so the next alternation check is skipped (steals reshape lanes
+    /// outside DRR's control).
+    steal_touched: Vec<bool>,
+}
+
+impl<'a> Run<'a> {
+    fn new(cfg: &'a QueueScenario) -> Self {
+        Self {
+            queue: ShardedQueue::with_defect(cfg.shards, cfg.capacity, cfg.steal, cfg.defect),
+            next_item: vec![0; cfg.producers.len()],
+            producer_done: vec![false; cfg.producers.len()],
+            consumer_done: vec![false; cfg.consumers.len()],
+            drains_left: cfg.drainers.iter().map(|d| d.attempts).collect(),
+            closed: false,
+            mirrors: (0..cfg.shards).map(|_| BTreeMap::new()).collect(),
+            pushed: Vec::new(),
+            popped: Vec::new(),
+            rejected: Vec::new(),
+            last_local: vec![None; cfg.shards],
+            steal_touched: vec![false; cfg.shards],
+            cfg,
+        }
+    }
+
+    /// Actors that can take a step right now without blocking. A
+    /// producer facing a full shard and a consumer facing an empty
+    /// (open) queue would park on a condvar in production; here they
+    /// are simply not schedulable until the state changes.
+    fn enabled(&self) -> Vec<Actor> {
+        let mut out = Vec::new();
+        for (i, p) in self.cfg.producers.iter().enumerate() {
+            let can_push = self.closed || self.queue.shard_len(p.shard) < self.capacity();
+            if !self.producer_done[i] && can_push {
+                out.push(Actor::Producer(i));
+            }
+        }
+        for (i, c) in self.cfg.consumers.iter().enumerate() {
+            if self.consumer_done[i] {
+                continue;
+            }
+            let own = self.queue.shard_len(c.worker) > 0;
+            let stealable = self.cfg.steal
+                && (0..self.cfg.shards)
+                    .any(|s| s != c.worker && self.queue.shard_len(s) >= 2);
+            if self.closed || own || stealable {
+                out.push(Actor::Consumer(i));
+            }
+        }
+        for (i, _) in self.cfg.drainers.iter().enumerate() {
+            if self.drains_left[i] > 0 {
+                out.push(Actor::Drainer(i));
+            }
+        }
+        if !self.closed {
+            out.push(Actor::Closer);
+        }
+        out
+    }
+
+    fn capacity(&self) -> usize {
+        self.cfg.capacity
+    }
+
+    fn step(&mut self, actor: Actor) -> Result<(), String> {
+        match actor {
+            Actor::Producer(i) => self.step_producer(i),
+            Actor::Consumer(i) => self.step_consumer(i),
+            Actor::Drainer(i) => self.step_drainer(i),
+            Actor::Closer => {
+                self.queue.close();
+                self.closed = true;
+                Ok(())
+            }
+        }
+    }
+
+    fn step_producer(&mut self, i: usize) -> Result<(), String> {
+        let spec = &self.cfg.producers[i];
+        let item = spec.items[self.next_item[i]];
+        match self.queue.push(spec.shard, spec.tenant, item) {
+            Err(QueueClosed) => {
+                // The producer observes the close and disposes of its
+                // remaining items; none may ever surface from a pop.
+                self.rejected.extend_from_slice(&spec.items[self.next_item[i]..]);
+                self.producer_done[i] = true;
+            }
+            Ok(waited) => {
+                if waited {
+                    return Err(format!(
+                        "push of {item} blocked although shard {} had room when scheduled",
+                        spec.shard
+                    ));
+                }
+                self.mirrors[spec.shard]
+                    .entry(spec.tenant)
+                    .or_insert_with(|| MirrorLane { items: VecDeque::new(), front_skips: 0 })
+                    .items
+                    .push_back(item);
+                self.pushed.push(item);
+                self.next_item[i] += 1;
+                self.producer_done[i] = self.next_item[i] == spec.items.len();
+            }
+        }
+        Ok(())
+    }
+
+    fn step_consumer(&mut self, i: usize) -> Result<(), String> {
+        let spec = &self.cfg.consumers[i];
+        match self.queue.try_pop(spec.worker, spec.prefer) {
+            Some(Pop::Local(v)) => self.shadow_local_pop(spec.worker, v),
+            Some(Pop::Stolen(v)) => self.shadow_steal(spec.worker, v),
+            None => {
+                if self.closed {
+                    self.consumer_done[i] = true;
+                    Ok(())
+                } else {
+                    Err(format!(
+                        "worker {} found nothing although the open queue held work",
+                        spec.worker
+                    ))
+                }
+            }
+        }
+    }
+
+    fn step_drainer(&mut self, i: usize) -> Result<(), String> {
+        let spec = &self.cfg.drainers[i];
+        self.drains_left[i] -= 1;
+        match self.queue.try_pop_own_if(spec.worker, spec.pred) {
+            None => Ok(()),
+            Some(v) => {
+                if !(spec.pred)(&v) {
+                    return Err(format!(
+                        "coalescing drain on worker {} returned non-matching job {v}",
+                        spec.worker
+                    ));
+                }
+                self.shadow_local_pop(spec.worker, v)
+            }
+        }
+    }
+
+    /// Validate and mirror a local (own-shard) pop: conservation, the
+    /// front-skip bound, and quantum-1 DRR alternation.
+    fn shadow_local_pop(&mut self, shard: usize, v: u32) -> Result<(), String> {
+        let found = self.mirrors[shard].iter().find_map(|(&t, lane)| {
+            lane.items.iter().position(|&x| x == v).map(|pos| (t, pos))
+        });
+        let Some((tenant, pos)) = found else {
+            return Err(format!(
+                "shard {shard} popped {v}, which it should not hold (lost, duplicated, or cross-shard)"
+            ));
+        };
+        // DRR fairness (quantum 1): the same lane served twice in a row
+        // while another lane waited at both serve points means the ring
+        // did not advance. Steals in between void the window.
+        let others_waiting: Vec<TenantId> = self.mirrors[shard]
+            .iter()
+            .filter(|(&t, lane)| t != tenant && !lane.items.is_empty())
+            .map(|(&t, _)| t)
+            .collect();
+        if !self.steal_touched[shard] {
+            if let Some((last_tenant, true)) = self.last_local[shard] {
+                if last_tenant == tenant && !others_waiting.is_empty() {
+                    return Err(format!(
+                        "DRR ring stuck on shard {shard}: tenant {tenant} served twice while lanes {others_waiting:?} waited"
+                    ));
+                }
+            }
+        }
+        let lane = self.mirrors[shard].get_mut(&tenant).expect("lane located above");
+        if pos == 0 {
+            lane.front_skips = 0;
+        } else {
+            lane.front_skips += 1;
+            if lane.front_skips > MAX_FRONT_SKIPS {
+                return Err(format!(
+                    "front-skip bound exceeded on shard {shard} lane {tenant}: front job passed over {} > {MAX_FRONT_SKIPS} times",
+                    lane.front_skips
+                ));
+            }
+        }
+        lane.items.remove(pos);
+        let others_nonempty_after = self.mirrors[shard]
+            .iter()
+            .any(|(&t, lane)| t != tenant && !lane.items.is_empty());
+        self.last_local[shard] = Some((tenant, others_nonempty_after));
+        self.steal_touched[shard] = false;
+        self.popped.push(v);
+        Ok(())
+    }
+
+    /// Validate and mirror a steal: cross-shard only, victim must hold
+    /// at least two jobs (the last one belongs to its affinity owner).
+    fn shadow_steal(&mut self, thief: usize, v: u32) -> Result<(), String> {
+        let victim = (0..self.cfg.shards).find(|&s| {
+            self.mirrors[s].values().any(|lane| lane.items.contains(&v))
+        });
+        let Some(victim) = victim else {
+            return Err(format!("worker {thief} stole {v}, which no shard should hold"));
+        };
+        if victim == thief {
+            return Err(format!("worker {thief} 'stole' {v} from its own shard"));
+        }
+        let total: usize = self.mirrors[victim].values().map(|l| l.items.len()).sum();
+        if total < 2 {
+            return Err(format!(
+                "steal of {v} emptied shard {victim}: victim held only {total} job(s)"
+            ));
+        }
+        for lane in self.mirrors[victim].values_mut() {
+            if let Some(pos) = lane.items.iter().position(|&x| x == v) {
+                lane.items.remove(pos);
+                break;
+            }
+        }
+        self.steal_touched[victim] = true;
+        self.popped.push(v);
+        Ok(())
+    }
+
+    /// End-of-schedule invariants, once no actor is enabled.
+    fn finish(&self) -> Result<(), String> {
+        for (s, mirror) in self.mirrors.iter().enumerate() {
+            let leftover: Vec<u32> =
+                mirror.values().flat_map(|l| l.items.iter().copied()).collect();
+            if !leftover.is_empty() {
+                return Err(format!(
+                    "jobs lost: shard {s} still owed {leftover:?} after every worker drained"
+                ));
+            }
+        }
+        let mut accepted = self.pushed.clone();
+        let mut served = self.popped.clone();
+        accepted.sort_unstable();
+        served.sort_unstable();
+        if accepted != served {
+            return Err(format!(
+                "conservation broken: accepted {accepted:?} but served {served:?}"
+            ));
+        }
+        if let Some(v) = self.rejected.iter().find(|&v| self.popped.contains(v)) {
+            return Err(format!("rejected item {v} surfaced from a pop"));
+        }
+        Ok(())
+    }
+}
+
+/// Replay one schedule. The schedule is extended in place (choice 0 at
+/// every fresh depth); `counts` records how many actors were enabled at
+/// each depth, which is what backtracking increments against.
+fn run_schedule(
+    cfg: &QueueScenario,
+    schedule: &mut Vec<usize>,
+    counts: &mut Vec<usize>,
+) -> Option<String> {
+    counts.clear();
+    let mut run = Run::new(cfg);
+    for depth in 0..=MAX_DEPTH {
+        let enabled = run.enabled();
+        if enabled.is_empty() {
+            return run.finish().err();
+        }
+        counts.push(enabled.len());
+        let choice = if depth < schedule.len() {
+            schedule[depth]
+        } else {
+            schedule.push(0);
+            0
+        };
+        if let Err(detail) = run.step(enabled[choice]) {
+            return Some(detail);
+        }
+    }
+    panic!("scenario `{}` exceeded the {MAX_DEPTH}-step depth cap: enabled-ness livelocked", cfg.name);
+}
+
+/// Bounded-DFS exploration of every distinct schedule of `cfg`.
+///
+/// Replay determinism makes backtracking trivial: the choice sequence
+/// *is* the state. After a clean schedule, the deepest choice that can
+/// still be incremented (per the recorded enabled counts) is bumped and
+/// everything after it is regrown with zeros.
+pub fn explore(cfg: &QueueScenario) -> Exploration {
+    let mut schedule: Vec<usize> = Vec::new();
+    let mut counts: Vec<usize> = Vec::new();
+    let mut schedules = 0usize;
+    loop {
+        let violation = run_schedule(cfg, &mut schedule, &mut counts);
+        schedules += 1;
+        if let Some(detail) = violation {
+            return Exploration {
+                schedules,
+                exhausted: false,
+                violation: Some(Violation { detail, schedule }),
+            };
+        }
+        if schedules >= cfg.budget {
+            return Exploration { schedules, exhausted: false, violation: None };
+        }
+        loop {
+            match schedule.pop() {
+                None => return Exploration { schedules, exhausted: true, violation: None },
+                Some(c) => {
+                    if c + 1 < counts[schedule.len()] {
+                        schedule.push(c + 1);
+                        break;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The clean-queue scenario suite the smoke run explores. Budgets are
+/// sized so the whole suite crosses 10k schedules: the two-tenant,
+/// backpressure, steal, and preference scenarios exhaust their spaces
+/// (hundreds to low thousands each), and the three-tenant scenario —
+/// whose full space is ~112k schedules — contributes its budget.
+pub fn queue_suite() -> Vec<QueueScenario> {
+    vec![
+        QueueScenario {
+            name: "fairness-two-tenants",
+            shards: 1,
+            capacity: 8,
+            steal: false,
+            producers: vec![
+                ProducerSpec { shard: 0, tenant: 1, items: vec![10, 11] },
+                ProducerSpec { shard: 0, tenant: 2, items: vec![20, 21] },
+            ],
+            consumers: vec![ConsumerSpec { worker: 0, prefer: no_pref }],
+            drainers: vec![],
+            defect: None,
+            budget: 2_000,
+        },
+        QueueScenario {
+            name: "fairness-three-tenants",
+            shards: 1,
+            capacity: 8,
+            steal: false,
+            producers: vec![
+                ProducerSpec { shard: 0, tenant: 1, items: vec![10, 11] },
+                ProducerSpec { shard: 0, tenant: 2, items: vec![20, 21] },
+                ProducerSpec { shard: 0, tenant: 3, items: vec![30, 31] },
+            ],
+            consumers: vec![ConsumerSpec { worker: 0, prefer: no_pref }],
+            drainers: vec![],
+            defect: None,
+            budget: 9_000,
+        },
+        QueueScenario {
+            name: "backpressure-capacity-one",
+            shards: 1,
+            capacity: 1,
+            steal: false,
+            producers: vec![ProducerSpec { shard: 0, tenant: 0, items: vec![1, 2, 3] }],
+            consumers: vec![ConsumerSpec { worker: 0, prefer: no_pref }],
+            drainers: vec![],
+            defect: None,
+            budget: 2_000,
+        },
+        QueueScenario {
+            name: "two-shards-stealing",
+            shards: 2,
+            capacity: 4,
+            steal: true,
+            producers: vec![ProducerSpec { shard: 0, tenant: 0, items: vec![1, 2, 3, 4] }],
+            consumers: vec![
+                ConsumerSpec { worker: 0, prefer: no_pref },
+                ConsumerSpec { worker: 1, prefer: no_pref },
+            ],
+            drainers: vec![],
+            defect: None,
+            budget: 2_000,
+        },
+        QueueScenario {
+            name: "preference-with-coalescing-drain",
+            shards: 1,
+            capacity: 8,
+            steal: false,
+            producers: vec![ProducerSpec { shard: 0, tenant: 0, items: vec![5, 1, 6] }],
+            consumers: vec![ConsumerSpec { worker: 0, prefer: ge5 }],
+            drainers: vec![DrainerSpec { worker: 0, attempts: 2, pred: ge5 }],
+            defect: None,
+            budget: 2_000,
+        },
+    ]
+}
+
+/// Mutation-smoke scenario for one [`QueueDefect`].
+pub fn defect_scenario(defect: QueueDefect) -> QueueScenario {
+    match defect {
+        QueueDefect::LossyClose => QueueScenario {
+            name: "mutant-lossy-close",
+            shards: 1,
+            capacity: 8,
+            steal: false,
+            producers: vec![
+                ProducerSpec { shard: 0, tenant: 1, items: vec![10, 11] },
+                ProducerSpec { shard: 0, tenant: 2, items: vec![20, 21] },
+            ],
+            consumers: vec![ConsumerSpec { worker: 0, prefer: no_pref }],
+            drainers: vec![],
+            defect: Some(defect),
+            budget: 2_000,
+        },
+        QueueDefect::UnboundedFrontSkips => QueueScenario {
+            name: "mutant-unbounded-front-skips",
+            shards: 1,
+            capacity: 64,
+            steal: false,
+            // One never-preferred front job, then enough preferred jobs
+            // to sail past the starvation bound.
+            producers: vec![ProducerSpec {
+                shard: 0,
+                tenant: 0,
+                items: std::iter::once(1).chain(100..100 + MAX_FRONT_SKIPS + 4).collect(),
+            }],
+            consumers: vec![ConsumerSpec { worker: 0, prefer: ge100 }],
+            drainers: vec![],
+            defect: Some(defect),
+            budget: 2_000,
+        },
+        QueueDefect::StuckDrrRing => QueueScenario {
+            name: "mutant-stuck-drr-ring",
+            shards: 1,
+            capacity: 8,
+            steal: false,
+            producers: vec![
+                ProducerSpec { shard: 0, tenant: 1, items: vec![10, 11] },
+                ProducerSpec { shard: 0, tenant: 2, items: vec![20, 21] },
+            ],
+            consumers: vec![ConsumerSpec { worker: 0, prefer: no_pref }],
+            drainers: vec![],
+            defect: Some(defect),
+            budget: 2_000,
+        },
+    }
+}
+
+/// Enumerate every partition of a run of same-tile jobs into
+/// consecutive [`Device::execute_batch`] calls and assert each one is
+/// observationally identical — outputs, per-request stats, and the full
+/// metrics ledger — to fully sequential execution. `jobs_coalesced` and
+/// wall-clock `busy_ns` are the only legitimate divergences, and the
+/// coalesce count must be exactly the sum of batch tails. Returns the
+/// number of compositions checked (both architectures).
+///
+/// [`Device::execute_batch`]: crate::coordinator::Device::execute_batch
+pub fn explore_device_batches() -> usize {
+    use std::sync::mpsc::{channel, Receiver};
+    use std::sync::Arc;
+    use std::time::Instant;
+
+    use crate::analytical::Arch;
+    use crate::coordinator::queue::DEFAULT_TENANT;
+    use crate::coordinator::{
+        Device, DeviceConfig, Job, MatmulResponse, Metrics, MetricsSnapshot, ReqState, SubRequest,
+    };
+    use crate::matrix::{random_i8, Mat};
+
+    fn job_for(x: &Mat<i8>, w: &Arc<Mat<i8>>) -> (Job, Receiver<MatmulResponse>) {
+        let (tx, rx) = channel();
+        let req = Arc::new(ReqState::new(
+            x.rows(),
+            w.cols(),
+            w.cols(),
+            1,
+            vec![SubRequest { id: 0, row0: 0, rows: x.rows(), tx }],
+        ));
+        let job = Job {
+            req,
+            w_tile: Arc::clone(w),
+            x_strip: Arc::new(x.clone()),
+            r0: 0,
+            c0: 0,
+            tile_id: w.content_hash(),
+            tenant: DEFAULT_TENANT,
+            enqueued_at: Instant::now(),
+        };
+        (job, rx)
+    }
+
+    /// Ledger view with the two legitimately divergent counters zeroed.
+    fn normalized(mut s: MetricsSnapshot) -> MetricsSnapshot {
+        s.busy_ns = 0;
+        s.jobs_coalesced = 0;
+        s
+    }
+
+    let mut compositions = 0usize;
+    for arch in [Arch::Dip, Arch::Ws] {
+        let cfg = DeviceConfig { arch, tile: 8, mac_stages: 2, ..Default::default() };
+        let w = Arc::new(random_i8(8, 8, 5));
+        let xs: Vec<Mat<i8>> = (0..4).map(|i| random_i8(8 + i, 8, 60 + i as u64)).collect();
+
+        // Fully sequential reference.
+        let m_ref = Arc::new(Metrics::default());
+        let mut dev = Device::new(cfg, 0, Arc::clone(&m_ref));
+        let refs: Vec<MatmulResponse> = xs
+            .iter()
+            .map(|x| {
+                let (job, rx) = job_for(x, &w);
+                dev.execute(job);
+                rx.try_recv().expect("sequential job must respond")
+            })
+            .collect();
+        let ref_snap = normalized(m_ref.snapshot());
+
+        // Every composition: bit i of the mask cuts between job i and
+        // i+1, so masks enumerate all 2^(k-1) consecutive partitions.
+        for mask in 0u32..1 << (xs.len() - 1) {
+            let m = Arc::new(Metrics::default());
+            let mut dev = Device::new(cfg, 0, Arc::clone(&m));
+            let (jobs, rxs): (Vec<_>, Vec<_>) = xs.iter().map(|x| job_for(x, &w)).unzip();
+            let mut batches: Vec<Vec<Job>> = vec![Vec::new()];
+            for (i, job) in jobs.into_iter().enumerate() {
+                if i > 0 && mask & (1 << (i - 1)) != 0 {
+                    batches.push(Vec::new());
+                }
+                batches.last_mut().expect("non-empty by construction").push(job);
+            }
+            let expected_tails: u64 = batches.iter().map(|b| b.len() as u64 - 1).sum();
+            for batch in batches {
+                dev.execute_batch(batch);
+            }
+            for (i, rx) in rxs.into_iter().enumerate() {
+                let got = rx.try_recv().expect("batched job must respond");
+                assert_eq!(got.out, refs[i].out, "{arch:?} mask {mask:#b}: output diverged");
+                assert_eq!(
+                    got.stats, refs[i].stats,
+                    "{arch:?} mask {mask:#b}: per-request stats diverged"
+                );
+            }
+            let snap = m.snapshot();
+            assert_eq!(
+                snap.jobs_coalesced, expected_tails,
+                "{arch:?} mask {mask:#b}: coalesce count must equal the sum of batch tails"
+            );
+            assert_eq!(
+                normalized(snap),
+                ref_snap,
+                "{arch:?} mask {mask:#b}: metrics ledger diverged from sequential"
+            );
+            compositions += 1;
+        }
+    }
+    compositions
+}
+
+/// Totals from one full smoke run ([`run_smoke`]).
+#[derive(Debug)]
+pub struct SmokeReport {
+    /// Schedules explored across the clean queue suite.
+    pub schedules: usize,
+    /// Scenarios whose full schedule space was enumerated.
+    pub exhausted: usize,
+    /// Device-batch compositions checked against sequential execution.
+    pub compositions: usize,
+}
+
+/// Run the full clean-model smoke: every suite scenario must explore
+/// violation-free, and every device-batch composition must match
+/// sequential execution. Panics on any violation; the `dip check`
+/// subcommand and the tier-1 smoke test both land here.
+pub fn run_smoke() -> SmokeReport {
+    let mut schedules = 0usize;
+    let mut exhausted = 0usize;
+    for cfg in queue_suite() {
+        let result = explore(&cfg);
+        if let Some(v) = result.violation {
+            panic!(
+                "scenario `{}` violated after {} schedules: {}\n  schedule: {:?}",
+                cfg.name, result.schedules, v.detail, v.schedule
+            );
+        }
+        schedules += result.schedules;
+        exhausted += usize::from(result.exhausted);
+    }
+    let compositions = explore_device_batches();
+    SmokeReport { schedules, exhausted, compositions }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoke_explores_ten_thousand_schedules_clean() {
+        let report = run_smoke();
+        assert!(
+            report.schedules >= 10_000,
+            "smoke must cross 10k schedules, got {}",
+            report.schedules
+        );
+        assert_eq!(report.compositions, 16, "8 compositions x 2 architectures");
+        assert!(report.exhausted >= 4, "the four small scenarios must exhaust their spaces");
+    }
+
+    #[test]
+    fn two_tenant_fairness_space_exhausts() {
+        let suite = queue_suite();
+        let result = explore(&suite[0]);
+        assert!(result.violation.is_none());
+        assert!(result.exhausted, "the two-tenant scenario fits its budget");
+        assert!(result.schedules > 100, "non-trivial space, got {}", result.schedules);
+    }
+
+    #[test]
+    fn lossy_close_mutant_is_caught() {
+        let result = explore(&defect_scenario(QueueDefect::LossyClose));
+        let v = result.violation.expect("lossy close must be caught");
+        assert!(v.detail.contains("lost") || v.detail.contains("conservation"), "{}", v.detail);
+        assert!(!v.schedule.is_empty(), "violating schedule must be reported for replay");
+    }
+
+    #[test]
+    fn unbounded_front_skips_mutant_is_caught() {
+        let result = explore(&defect_scenario(QueueDefect::UnboundedFrontSkips));
+        let v = result.violation.expect("starvation must be caught");
+        assert!(v.detail.contains("front-skip bound exceeded"), "{}", v.detail);
+    }
+
+    #[test]
+    fn stuck_drr_ring_mutant_is_caught() {
+        let result = explore(&defect_scenario(QueueDefect::StuckDrrRing));
+        let v = result.violation.expect("fairness loss must be caught");
+        assert!(v.detail.contains("DRR ring stuck"), "{}", v.detail);
+    }
+
+    #[test]
+    fn violating_schedule_replays_to_the_same_violation() {
+        // The reported schedule is a replayable witness: feeding it back
+        // through a fresh run must reproduce the identical violation.
+        let cfg = defect_scenario(QueueDefect::StuckDrrRing);
+        let v = explore(&cfg).violation.expect("mutant must violate");
+        let mut schedule = v.schedule.clone();
+        let mut counts = Vec::new();
+        let replayed = run_schedule(&cfg, &mut schedule, &mut counts);
+        assert_eq!(replayed.as_deref(), Some(v.detail.as_str()));
+        assert_eq!(schedule, v.schedule, "replay must not extend the witness");
+    }
+}

@@ -1,0 +1,523 @@
+//! `dip lint` — a token-level source scanner enforcing the crate's
+//! concurrency and hot-path conventions, with no parser dependency
+//! (`syn` is not in the offline crate set; a comment/string-aware
+//! stripper plus substring rules is enough for every rule here, and
+//! the fixtures in the test module pin each rule against a known-bad
+//! mutant so the gate provably has teeth).
+//!
+//! Rules:
+//!
+//! 1. **`bare-lock-unwrap`** — `.lock().unwrap()` is banned outside
+//!    `sync.rs`: the crate-wide poison policy (tolerate poison, keep
+//!    the data — see [`crate::sync`]) must be decided in exactly one
+//!    place, not re-decided ad hoc at every lock site.
+//! 2. **`metrics-snapshot-complete`** — every `pub ... : AtomicU64`
+//!    field of `coordinator/metrics.rs` must be loaded somewhere in
+//!    the file (`self.<field>.load(`), i.e. appear in `snapshot()`.
+//!    A counter that never reaches the snapshot is invisible to the
+//!    ledger auditor and to every drain-point assertion.
+//! 3. **`no-seqcst`** — `SeqCst` is banned crate-wide: the stats
+//!    counters are monotonic tallies read at drain points (Relaxed),
+//!    and the queue's closed flag uses Acquire/Release; a SeqCst that
+//!    sneaks in suggests someone is leaning on ordering the design
+//!    does not need (and paying fences for it on weak targets).
+//! 4. **`no-hot-path-alloc`** — the region of `arch/kernel.rs` from
+//!    `pub fn gemm` to its `#[cfg(test)]` module (the GEMM microkernel
+//!    and its register-block helpers) must stay allocation-free: no
+//!    `vec!`, `Vec::new`, `.collect()`, `Box::new`, etc. The kernel's
+//!    whole point is that per-call scratch lives on the stack.
+//!
+//! The whole-tree scan runs as an ordinary `#[test]`
+//! (`shipped_tree_is_lint_clean`), so tier-1 `cargo test` gates on it;
+//! `dip lint` runs the same scan from the CLI.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// One rule violation at a source location.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LintFinding {
+    /// Rule identifier (kebab-case, stable for CI grepping).
+    pub rule: &'static str,
+    /// File label (repo-relative path for tree scans).
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    pub detail: String,
+}
+
+impl std::fmt::Display for LintFinding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.detail)
+    }
+}
+
+const RULE_BARE_LOCK: &str = "bare-lock-unwrap";
+const RULE_SNAPSHOT: &str = "metrics-snapshot-complete";
+const RULE_SEQCST: &str = "no-seqcst";
+const RULE_HOT_ALLOC: &str = "no-hot-path-alloc";
+
+/// Allocation markers banned inside the kernel hot region.
+const ALLOC_MARKERS: &[&str] = &[
+    "vec!",
+    "Vec::new",
+    ".to_vec()",
+    ".collect()",
+    "Box::new",
+    ".to_owned()",
+    "String::from",
+    ".to_string()",
+];
+
+/// Replace comments and string/char-literal contents with blanks,
+/// preserving newlines (line numbers survive) and the surrounding
+/// code structure. Handles line comments, *nested* block comments,
+/// ordinary strings with escapes, byte strings, raw strings
+/// (`r"…"` / `r#"…"#`, any hash depth), char literals (including
+/// `'"'` and escapes like `'\''`), and lifetimes (`'a` is left alone).
+fn strip_source(src: &str) -> String {
+    let b: Vec<char> = src.chars().collect();
+    let mut out = String::with_capacity(src.len());
+    let mut i = 0usize;
+    let blank = |out: &mut String, c: char| out.push(if c == '\n' { '\n' } else { ' ' });
+    let is_ident = |c: char| c.is_ascii_alphanumeric() || c == '_';
+    while i < b.len() {
+        let c = b[i];
+        // Line comment.
+        if c == '/' && b.get(i + 1) == Some(&'/') {
+            while i < b.len() && b[i] != '\n' {
+                out.push(' ');
+                i += 1;
+            }
+            continue;
+        }
+        // Block comment (Rust block comments nest).
+        if c == '/' && b.get(i + 1) == Some(&'*') {
+            let mut depth = 1usize;
+            out.push_str("  ");
+            i += 2;
+            while i < b.len() && depth > 0 {
+                if b[i] == '/' && b.get(i + 1) == Some(&'*') {
+                    depth += 1;
+                    out.push_str("  ");
+                    i += 2;
+                } else if b[i] == '*' && b.get(i + 1) == Some(&'/') {
+                    depth -= 1;
+                    out.push_str("  ");
+                    i += 2;
+                } else {
+                    blank(&mut out, b[i]);
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // Raw (and raw-byte) strings: r"…", r#"…"#, br"…", …
+        if (c == 'r' || c == 'b') && (i == 0 || !is_ident(b[i - 1])) {
+            let mut j = i;
+            if b[j] == 'b' && b.get(j + 1) == Some(&'r') {
+                j += 1;
+            }
+            if b[j] == 'r' {
+                let mut hashes = 0usize;
+                let mut k = j + 1;
+                while b.get(k) == Some(&'#') {
+                    hashes += 1;
+                    k += 1;
+                }
+                if b.get(k) == Some(&'"') {
+                    // Blank the prefix + opening quote, then the body
+                    // until `"` followed by `hashes` hashes.
+                    for &p in &b[i..=k] {
+                        blank(&mut out, p);
+                    }
+                    i = k + 1;
+                    'body: while i < b.len() {
+                        if b[i] == '"' {
+                            let close = (1..=hashes).all(|h| b.get(i + h) == Some(&'#'));
+                            if close {
+                                for _ in 0..=hashes {
+                                    out.push(' ');
+                                    i += 1;
+                                }
+                                break 'body;
+                            }
+                        }
+                        blank(&mut out, b[i]);
+                        i += 1;
+                    }
+                    continue;
+                }
+            }
+        }
+        // Ordinary (or byte) string with escapes.
+        if c == '"' || (c == 'b' && b.get(i + 1) == Some(&'"') && (i == 0 || !is_ident(b[i - 1]))) {
+            if c == 'b' {
+                out.push(' ');
+                i += 1;
+            }
+            out.push(' ');
+            i += 1; // opening quote
+            while i < b.len() {
+                if b[i] == '\\' {
+                    out.push(' ');
+                    i += 1;
+                    if i < b.len() {
+                        blank(&mut out, b[i]);
+                        i += 1;
+                    }
+                    continue;
+                }
+                if b[i] == '"' {
+                    out.push(' ');
+                    i += 1;
+                    break;
+                }
+                blank(&mut out, b[i]);
+                i += 1;
+            }
+            continue;
+        }
+        // Char literal vs lifetime.
+        if c == '\'' {
+            if b.get(i + 1) == Some(&'\\') {
+                // Escaped char literal: consume the escape, then scan
+                // to the closing quote ('\x41', '\u{1F600}', '\'', …).
+                out.push(' ');
+                i += 1; // '
+                out.push(' ');
+                i += 1; // backslash
+                if i < b.len() {
+                    blank(&mut out, b[i]);
+                    i += 1; // escape head (n, t, ', x, u, …)
+                }
+                while i < b.len() && b[i] != '\'' {
+                    blank(&mut out, b[i]);
+                    i += 1;
+                }
+                if i < b.len() {
+                    out.push(' ');
+                    i += 1; // closing quote
+                }
+                continue;
+            }
+            if b.get(i + 2) == Some(&'\'') {
+                // Plain char literal — including '"', which must not
+                // open a string.
+                out.push_str("   ");
+                i += 3;
+                continue;
+            }
+            // Lifetime: keep as-is.
+            out.push('\'');
+            i += 1;
+            continue;
+        }
+        out.push(c);
+        i += 1;
+    }
+    out
+}
+
+/// Whitespace-collapsed view of stripped source with a per-character
+/// line map, so multi-token patterns match across line breaks yet
+/// findings still point at a real line. Non-ASCII survivors are
+/// replaced with `\u{1}` to keep byte offsets == char offsets.
+fn collapse_with_lines(stripped: &str) -> (String, Vec<usize>) {
+    let mut text = String::with_capacity(stripped.len());
+    let mut lines = Vec::with_capacity(stripped.len());
+    let mut line = 1usize;
+    for c in stripped.chars() {
+        if c == '\n' {
+            line += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            continue;
+        }
+        text.push(if c.is_ascii() { c } else { '\u{1}' });
+        lines.push(line);
+    }
+    (text, lines)
+}
+
+fn find_all(hay: &str, needle: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut from = 0usize;
+    while let Some(p) = hay[from..].find(needle) {
+        out.push(from + p);
+        from += p + 1;
+    }
+    out
+}
+
+/// Names and lines of `pub <name>: AtomicU64` fields in stripped lines.
+fn atomic_u64_fields(lines: &[&str]) -> Vec<(usize, String)> {
+    let mut out = Vec::new();
+    for (i, l) in lines.iter().enumerate() {
+        let t = l.trim();
+        let Some(rest) = t.strip_prefix("pub ") else { continue };
+        let Some((name, ty)) = rest.split_once(':') else { continue };
+        let name = name.trim();
+        if ty.trim().trim_end_matches(',') == "AtomicU64"
+            && !name.is_empty()
+            && name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_')
+        {
+            out.push((i + 1, name.to_string()));
+        }
+    }
+    out
+}
+
+/// Lint one source file. `label` selects the file-scoped rules
+/// (suffix-matched so both repo-relative paths and test fixtures work).
+pub fn lint_source(label: &str, source: &str) -> Vec<LintFinding> {
+    let stripped = strip_source(source);
+    let lines: Vec<&str> = stripped.lines().collect();
+    let (collapsed, linemap) = collapse_with_lines(&stripped);
+    let mut findings = Vec::new();
+
+    // Rule 1: bare .lock().unwrap() outside the poison-policy module.
+    if !label.ends_with("sync.rs") {
+        let needle = [".lock()", ".unwrap()"].concat();
+        for pos in find_all(&collapsed, &needle) {
+            findings.push(LintFinding {
+                rule: RULE_BARE_LOCK,
+                file: label.to_string(),
+                line: linemap[pos],
+                detail: "bare Mutex::lock().unwrap(); use crate::sync::lock_unpoisoned \
+                         (the poison policy is decided in sync.rs, nowhere else)"
+                    .to_string(),
+            });
+        }
+    }
+
+    // Rule 2: every Metrics atomic counter must reach snapshot().
+    if label.ends_with("coordinator/metrics.rs") {
+        for (line, name) in atomic_u64_fields(&lines) {
+            let load = format!("self.{name}.load(");
+            if !collapsed.contains(&load) {
+                findings.push(LintFinding {
+                    rule: RULE_SNAPSHOT,
+                    file: label.to_string(),
+                    line,
+                    detail: format!(
+                        "Metrics counter `{name}` is never loaded — add it to snapshot() \
+                         or the auditor and drain-point checks cannot see it"
+                    ),
+                });
+            }
+        }
+    }
+
+    // Rule 3: no SeqCst anywhere.
+    let seqcst = ["Seq", "Cst"].concat();
+    for pos in find_all(&collapsed, &seqcst) {
+        findings.push(LintFinding {
+            rule: RULE_SEQCST,
+            file: label.to_string(),
+            line: linemap[pos],
+            detail: "Ordering::SeqCst on a stats counter or flag; the crate's counters \
+                     are Relaxed tallies and its flags Acquire/Release — sequential \
+                     consistency is never needed here"
+                .to_string(),
+        });
+    }
+
+    // Rule 4: the GEMM microkernel region stays allocation-free.
+    if label.ends_with("arch/kernel.rs") {
+        if let Some(start) = lines.iter().position(|l| l.contains("pub fn gemm")) {
+            let end = lines[start..]
+                .iter()
+                .position(|l| l.contains("#[cfg(test)]"))
+                .map_or(lines.len(), |e| start + e);
+            for (off, l) in lines[start..end].iter().enumerate() {
+                for marker in ALLOC_MARKERS {
+                    if l.contains(marker) {
+                        findings.push(LintFinding {
+                            rule: RULE_HOT_ALLOC,
+                            file: label.to_string(),
+                            line: start + off + 1,
+                            detail: format!(
+                                "`{marker}` in the gemm hot region; per-call scratch \
+                                 must stay on the stack (see arch/kernel.rs module docs)"
+                            ),
+                        });
+                    }
+                }
+            }
+        }
+    }
+
+    findings
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) {
+    let entries = fs::read_dir(dir)
+        .unwrap_or_else(|e| panic!("lint: cannot read {}: {e}", dir.display()));
+    for entry in entries {
+        let path = entry.expect("lint: dir entry").path();
+        if path.is_dir() {
+            collect_rs_files(&path, out);
+        } else if path.extension().is_some_and(|x| x == "rs") {
+            out.push(path);
+        }
+    }
+}
+
+/// Lint every `.rs` file under this crate's `src/` tree. Labels are
+/// `src/…`-relative so the file-scoped rules bind to the right files.
+pub fn lint_tree() -> Vec<LintFinding> {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let mut files = Vec::new();
+    collect_rs_files(&root, &mut files);
+    files.sort();
+    let mut findings = Vec::new();
+    for f in &files {
+        let src = fs::read_to_string(f)
+            .unwrap_or_else(|e| panic!("lint: cannot read {}: {e}", f.display()));
+        let label = f
+            .strip_prefix(root.parent().expect("src has a parent"))
+            .unwrap_or(f)
+            .to_string_lossy()
+            .replace('\\', "/");
+        findings.extend(lint_source(&label, &src));
+    }
+    findings
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shipped_tree_is_lint_clean() {
+        let findings = lint_tree();
+        assert!(
+            findings.is_empty(),
+            "lint gate failed:\n{}",
+            findings.iter().map(|f| format!("  {f}\n")).collect::<String>()
+        );
+    }
+
+    #[test]
+    fn stripper_removes_comments_strings_and_char_literals() {
+        let src = r##"
+// line .lock().unwrap()
+/* block /* nested .lock().unwrap() */ still */
+let a = ".lock().unwrap()";
+let b = r#".lock().unwrap()"#;
+let c = '"'; let d = '\''; let e = b"bytes .lock().unwrap()";
+let real = m.lock().unwrap();
+"##;
+        let stripped = strip_source(src);
+        // Exactly one survivor: the real call on the last code line.
+        assert_eq!(find_all(&stripped, ".lock().unwrap()").len(), 1);
+        assert!(stripped.contains("let real = m.lock().unwrap();"));
+        // Newlines preserved for line attribution.
+        assert_eq!(stripped.lines().count(), src.lines().count());
+    }
+
+    #[test]
+    fn stripper_keeps_lifetimes_intact() {
+        let src = "fn f<'a>(x: &'a str) -> &'a str { x }";
+        assert_eq!(strip_source(src), src);
+    }
+
+    #[test]
+    fn bare_lock_unwrap_is_flagged_with_line() {
+        let src = "fn f() {\n    let g = self.state.lock().unwrap();\n}\n";
+        let f = lint_source("src/coordinator/fake.rs", src);
+        assert_eq!(f.len(), 1);
+        assert_eq!((f[0].rule, f[0].line), (RULE_BARE_LOCK, 2));
+    }
+
+    #[test]
+    fn bare_lock_unwrap_matches_across_line_breaks() {
+        // Formatting must not launder the pattern.
+        let src = "let g = self.state\n    .lock()\n    .unwrap();\n";
+        let f = lint_source("src/x.rs", src);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, RULE_BARE_LOCK);
+    }
+
+    #[test]
+    fn sync_rs_is_the_one_allowed_lock_site() {
+        let src = "let g = m.lock().unwrap();\n";
+        assert!(lint_source("src/sync.rs", src).is_empty());
+        assert_eq!(lint_source("src/other.rs", src).len(), 1);
+    }
+
+    #[test]
+    fn lock_unpoisoned_call_sites_pass() {
+        let src = "let g = lock_unpoisoned(&self.state);\nlet h = m.lock().unwrap_or_else(PoisonError::into_inner);\n";
+        assert!(lint_source("src/coordinator/fake.rs", src).is_empty());
+    }
+
+    #[test]
+    fn snapshot_mutant_missing_field_is_caught() {
+        // A Metrics struct whose `steals` counter never reaches
+        // snapshot() — the silent-counter mutant the rule exists for.
+        let src = r#"
+pub struct Metrics {
+    pub jobs_executed: AtomicU64,
+    pub steals: AtomicU64,
+}
+impl Metrics {
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot { jobs_executed: self.jobs_executed.load(Ordering::Relaxed) }
+    }
+}
+"#;
+        let f = lint_source("src/coordinator/metrics.rs", src);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, RULE_SNAPSHOT);
+        assert!(f[0].detail.contains("steals"), "{}", f[0].detail);
+        // The same source under another label is out of the rule's scope.
+        assert!(lint_source("src/coordinator/device.rs", src).is_empty());
+    }
+
+    #[test]
+    fn seqcst_mutant_is_caught_anywhere() {
+        let src = "x.fetch_add(1, Ordering::SeqCst);\n";
+        let f = lint_source("src/arch/anything.rs", src);
+        assert_eq!(f.len(), 1);
+        assert_eq!((f[0].rule, f[0].line), (RULE_SEQCST, 1));
+    }
+
+    #[test]
+    fn hot_path_alloc_mutant_is_caught_only_inside_the_region() {
+        let src = "\
+fn derotate() { let v = vec![0i32; 4]; }
+pub fn gemm() {
+    let scratch = vec![0i32; 64];
+}
+#[cfg(test)]
+mod tests {
+    fn t() { let v: Vec<i32> = (0..4).collect(); }
+}
+";
+        let f = lint_source("src/arch/kernel.rs", src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!((f[0].rule, f[0].line), (RULE_HOT_ALLOC, 3));
+        // Other files never trigger the kernel rule.
+        assert!(lint_source("src/arch/dip.rs", src).is_empty());
+    }
+
+    #[test]
+    fn atomic_field_parser_sees_all_metrics_counters() {
+        // Pin the parser against the real Metrics layout: every pub
+        // AtomicU64 field in the shipped file must be discovered (23
+        // as of this PR), or the snapshot rule silently checks nothing.
+        let src = std::fs::read_to_string(
+            Path::new(env!("CARGO_MANIFEST_DIR")).join("src/coordinator/metrics.rs"),
+        )
+        .expect("metrics.rs readable");
+        let stripped = strip_source(&src);
+        let lines: Vec<&str> = stripped.lines().collect();
+        let fields = atomic_u64_fields(&lines);
+        assert!(fields.len() >= 23, "found only {}: {fields:?}", fields.len());
+        assert!(fields.iter().any(|(_, n)| n == "weight_load_cycles_charged"));
+        assert!(fields.iter().any(|(_, n)| n == "wave_stacked_rows"));
+    }
+}

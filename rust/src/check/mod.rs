@@ -1,0 +1,43 @@
+//! In-tree correctness tooling: a deterministic interleaving explorer
+//! for the scheduling substrate, a double-entry auditor for the
+//! metrics ledger, and a repo lint gate — all runnable as ordinary
+//! tests (so tier-1 gates on them) and as `dip` subcommands.
+//!
+//! Three checkers, three failure classes:
+//!
+//! - [`explore`] — a hand-rolled "mini-loom": bounded-DFS schedule
+//!   exploration that steps producers, consumers, coalescing drainers,
+//!   and a closer one at a time against a **real**
+//!   [`ShardedQueue`](crate::coordinator::ShardedQueue), checking
+//!   conservation, DRR fairness, the anti-starvation bound, steal
+//!   discipline, and close correctness on every interleaving — plus an
+//!   exhaustive device-batch partition check
+//!   ([`explore::explore_device_batches`]) proving tile coalescing is
+//!   observationally equal to sequential execution. Scope note: a
+//!   blocked actor is modeled as disabled, so condvar wait/notify
+//!   paths are *not* explored here — the threaded tests in
+//!   `coordinator::queue` cover those.
+//! - [`audit`] — every credit in the coordinator's counters must have
+//!   a matching charge, every drain-point total must partition
+//!   exactly, and the global cycle/MAC tallies must land on the
+//!   arrays' closed forms. Hooked in via
+//!   [`Coordinator::shutdown_audited`](crate::coordinator::Coordinator::shutdown_audited),
+//!   which the serving engine and the benchmark scenarios run under.
+//! - [`lint`] — a token-level source scanner (no external parser)
+//!   enforcing repo-wide rules the type system cannot: no bare
+//!   `lock().unwrap()` outside `sync.rs`, `Metrics::snapshot` covers
+//!   every atomic counter, no sequentially-consistent orderings, no
+//!   allocation in the GEMM hot loop. `dip lint` and the
+//!   `shipped_tree_is_lint_clean` test run the same scanner.
+//!
+//! Every checker class is validated by **mutation smoke**: a
+//! deliberately broken variant (a [`QueueDefect`] queue, a
+//! [`DeviceDefect`] ledger, a lint fixture) must be caught, proving
+//! the checks have teeth.
+//!
+//! [`QueueDefect`]: crate::coordinator::queue::QueueDefect
+//! [`DeviceDefect`]: crate::coordinator::device::DeviceDefect
+
+pub mod audit;
+pub mod explore;
+pub mod lint;

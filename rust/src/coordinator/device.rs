@@ -9,10 +9,14 @@
 //! evicted tile skips the host-side permutation work.
 //!
 //! Cycle ledger: an actual install **charges** its load cycles into the
-//! job's stats (and thus `sim_cycles`); a resident skip charges nothing
-//! and credits the same amount to `weight_load_cycles_saved` — so the
+//! job's stats (and thus `sim_cycles`) and records the charge in
+//! `weight_load_cycles_charged`; a resident skip charges nothing and
+//! credits the same amount to `weight_load_cycles_saved` — so the
 //! savings metric is measured against a ledger that really paid the
-//! cost (the PR 1 version credited savings it never charged).
+//! cost (the PR 1 version credited savings it never charged). The
+//! double-entry auditor ([`crate::check::audit`]) verifies the
+//! charge/credit balance at every drain point, and [`DeviceDefect`]
+//! lets its mutation smoke re-introduce the PR 1 bug on demand.
 
 use std::collections::VecDeque;
 use std::sync::Arc;
@@ -53,6 +57,19 @@ pub struct Job {
     pub enqueued_at: Instant,
 }
 
+/// A deliberately broken device ledger, injectable via
+/// [`DeviceConfig::defect`] so the ledger auditor's mutation smoke
+/// ([`crate::check::audit`]) can prove the double-entry checks have
+/// teeth.
+#[doc(hidden)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeviceDefect {
+    /// Re-introduces the PR 1 ledger bug: resident skips keep crediting
+    /// `weight_load_cycles_saved`, but installs never record their
+    /// matching charge in `weight_load_cycles_charged`.
+    CreditWithoutCharge,
+}
+
 /// Device configuration.
 #[derive(Debug, Clone, Copy)]
 pub struct DeviceConfig {
@@ -64,11 +81,15 @@ pub struct DeviceConfig {
     /// N=64 a prepared tile is 16 KiB, so the default stays well under
     /// typical L2. Exposed for DSE sweeps and the coordinator bench.
     pub weight_cache_tiles: usize,
+    /// Injected ledger misbehavior (None in production; audit-mutation
+    /// smoke only).
+    #[doc(hidden)]
+    pub defect: Option<DeviceDefect>,
 }
 
 impl Default for DeviceConfig {
     fn default() -> Self {
-        Self { arch: Arch::Dip, tile: 64, mac_stages: 2, weight_cache_tiles: 8 }
+        Self { arch: Arch::Dip, tile: 64, mac_stages: 2, weight_cache_tiles: 8, defect: None }
     }
 }
 
@@ -90,6 +111,8 @@ pub struct Device {
     /// to `weight_load_cycles_saved`. A skip can only follow an
     /// install, so this is always set when it is read.
     load_cycles: u64,
+    /// Injected ledger misbehavior (see [`DeviceDefect`]).
+    defect: Option<DeviceDefect>,
 }
 
 impl Device {
@@ -107,6 +130,7 @@ impl Device {
             cache: VecDeque::new(),
             cache_capacity: cfg.weight_cache_tiles,
             load_cycles: 0,
+            defect: cfg.defect,
         }
     }
 
@@ -204,6 +228,11 @@ impl Device {
             let prepared = self.prepared_for(job);
             self.load_cycles = self.array.load_prepared(&prepared);
             self.metrics.weight_loads.fetch_add(1, Relaxed);
+            // Double-entry: record what this install really charged, so
+            // the auditor can hold every later skip credit against it.
+            if self.defect != Some(DeviceDefect::CreditWithoutCharge) {
+                self.metrics.weight_load_cycles_charged.fetch_add(self.load_cycles, Relaxed);
+            }
             self.loaded = Some((job.tile_id, Arc::clone(&job.w_tile)));
         }
         resident
@@ -373,8 +402,31 @@ mod tests {
             let skipped = metrics.snapshot().sim_cycles - loaded;
 
             assert_eq!(loaded - skipped, per_load, "{arch:?}");
-            assert_eq!(metrics.snapshot().weight_load_cycles_saved, per_load, "{arch:?}");
+            let m = metrics.snapshot();
+            assert_eq!(m.weight_load_cycles_saved, per_load, "{arch:?}");
+            // Double-entry: the one install recorded its charge, and it
+            // equals what the one skip credited.
+            assert_eq!(m.weight_load_cycles_charged, per_load, "{arch:?}");
         }
+    }
+
+    #[test]
+    fn credit_without_charge_defect_breaks_the_ledger() {
+        // Mutation smoke for the double-entry ledger: with the injected
+        // PR 1 bug, skips still credit savings but installs record no
+        // charge — exactly the imbalance the auditor must flag.
+        let metrics = Arc::new(Metrics::default());
+        let cfg = DeviceConfig { defect: Some(DeviceDefect::CreditWithoutCharge), ..dip8() };
+        let mut dev = Device::new(cfg, 0, metrics.clone());
+        let w = random_i8(8, 8, 5);
+        for seed in [1u64, 2] {
+            let (job, _rx) = job_for(&random_i8(8, 8, seed), &w);
+            dev.execute(job);
+        }
+        let m = metrics.snapshot();
+        assert_eq!(m.weight_loads, 1);
+        assert_eq!(m.weight_load_cycles_saved, 7, "credit still flows");
+        assert_eq!(m.weight_load_cycles_charged, 0, "matching charge never recorded");
     }
 
     #[test]
@@ -525,6 +577,7 @@ mod tests {
             assert_eq!(b.weight_loads, s.weight_loads, "{arch:?}");
             assert_eq!(b.weight_loads_skipped, s.weight_loads_skipped, "{arch:?}");
             assert_eq!(b.weight_load_cycles_saved, s.weight_load_cycles_saved, "{arch:?}");
+            assert_eq!(b.weight_load_cycles_charged, s.weight_load_cycles_charged, "{arch:?}");
             assert_eq!(b.sim_cycles, s.sim_cycles, "{arch:?}");
             assert_eq!(b.mac_ops, s.mac_ops, "{arch:?}");
             assert_eq!(b.rows_streamed, s.rows_streamed, "{arch:?}");

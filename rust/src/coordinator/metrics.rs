@@ -9,6 +9,7 @@ use std::sync::Mutex;
 use std::time::Duration;
 
 use super::queue::TenantId;
+use crate::sync::lock_unpoisoned;
 
 /// Per-tenant service accounting (fairness observability: who got the
 /// devices, and how long their jobs queued).
@@ -54,6 +55,12 @@ pub struct Metrics {
     /// Simulated cycles credited by skipped loads (`N-1` per skip on
     /// DiP, `N` on WS).
     pub weight_load_cycles_saved: AtomicU64,
+    /// Simulated cycles charged by installs actually performed — the
+    /// double-entry counterpart of `weight_load_cycles_saved`: every
+    /// credit must be measured against a ledger that really paid, and
+    /// the auditor ([`crate::check::audit`]) pins this to
+    /// `weight_loads x per-load cycles` at every drain point.
+    pub weight_load_cycles_charged: AtomicU64,
     /// Loads served from the device's prepared-weight cache (the Fig. 3
     /// permutation + widening was skipped; the install still ran).
     pub cache_hits: AtomicU64,
@@ -108,6 +115,7 @@ pub struct MetricsSnapshot {
     pub weight_loads: u64,
     pub weight_loads_skipped: u64,
     pub weight_load_cycles_saved: u64,
+    pub weight_load_cycles_charged: u64,
     pub cache_hits: u64,
     pub cache_misses: u64,
     pub steals: u64,
@@ -160,6 +168,7 @@ impl Metrics {
             weight_loads: self.weight_loads.load(Ordering::Relaxed),
             weight_loads_skipped: self.weight_loads_skipped.load(Ordering::Relaxed),
             weight_load_cycles_saved: self.weight_load_cycles_saved.load(Ordering::Relaxed),
+            weight_load_cycles_charged: self.weight_load_cycles_charged.load(Ordering::Relaxed),
             cache_hits: self.cache_hits.load(Ordering::Relaxed),
             cache_misses: self.cache_misses.load(Ordering::Relaxed),
             steals: self.steals.load(Ordering::Relaxed),
@@ -179,12 +188,12 @@ impl Metrics {
 
     /// Record one sub-request submitted by `tenant`.
     pub fn tenant_submitted(&self, tenant: TenantId) {
-        self.tenants.lock().unwrap().entry(tenant).or_default().requests_submitted += 1;
+        lock_unpoisoned(&self.tenants).entry(tenant).or_default().requests_submitted += 1;
     }
 
     /// Record one job served for `tenant` after `wait` in the queue.
     pub fn tenant_served(&self, tenant: TenantId, wait: Duration) {
-        let mut map = self.tenants.lock().unwrap();
+        let mut map = lock_unpoisoned(&self.tenants);
         let c = map.entry(tenant).or_default();
         c.jobs_served += 1;
         c.wait_ns += wait.as_nanos() as u64;
@@ -192,7 +201,7 @@ impl Metrics {
 
     /// Per-tenant counters, sorted by tenant id.
     pub fn tenants(&self) -> Vec<TenantSnapshot> {
-        let map = self.tenants.lock().unwrap();
+        let map = lock_unpoisoned(&self.tenants);
         let mut v: Vec<TenantSnapshot> = map
             .iter()
             .map(|(&tenant, c)| TenantSnapshot {
@@ -208,7 +217,7 @@ impl Metrics {
 
     /// Record one job executed by worker device `idx`.
     pub fn device_job(&self, idx: usize) {
-        let mut v = self.device_jobs.lock().unwrap();
+        let mut v = lock_unpoisoned(&self.device_jobs);
         if v.len() <= idx {
             v.resize(idx + 1, 0);
         }
@@ -218,7 +227,7 @@ impl Metrics {
     /// Jobs executed per device (placement/stealing skew; indexes past
     /// the last active device are absent).
     pub fn device_jobs(&self) -> Vec<u64> {
-        self.device_jobs.lock().unwrap().clone()
+        lock_unpoisoned(&self.device_jobs).clone()
     }
 }
 
@@ -343,6 +352,19 @@ mod tests {
         let empty = MetricsSnapshot::default();
         assert_eq!(empty.weight_loads_per_wave(), 0.0);
         assert_eq!(empty.mean_wave_rows(), 0.0);
+    }
+
+    #[test]
+    fn ledger_counters_snapshot_both_sides() {
+        // Both columns of the weight-load double-entry ledger must
+        // round-trip through snapshot() (the lint gate separately
+        // proves no Metrics field can be left out of snapshot()).
+        let m = Metrics::default();
+        m.weight_load_cycles_charged.fetch_add(21, Ordering::Relaxed);
+        m.weight_load_cycles_saved.fetch_add(14, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.weight_load_cycles_charged, 21);
+        assert_eq!(s.weight_load_cycles_saved, 14);
     }
 
     #[test]

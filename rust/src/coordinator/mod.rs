@@ -56,6 +56,19 @@
 //! `act_strip_hits` / `act_strip_misses` / `act_bytes_saved` /
 //! `act_rows_reused`, plus `waves` / `wave_stacked_rows` (and the
 //! derived `weight_loads_per_wave` / `mean_wave_rows`).
+//!
+//! # Correctness tooling
+//!
+//! Two in-tree checkers ([`crate::check`]) hold this module to its
+//! contracts beyond what the threaded unit tests can reach:
+//! [`crate::check::explore`] drives the real [`ShardedQueue`] through
+//! exhaustive bounded interleaving exploration (fairness, front-skip
+//! bounds, steal discipline, lossless close — each invariant proven
+//! live by a seeded [`queue::QueueDefect`] mutant), and
+//! [`crate::check::audit`] re-derives the settled [`Metrics`] ledger
+//! from double-entry identities at every drain point
+//! ([`Coordinator::shutdown_audited`]), with
+//! [`device::DeviceDefect`] as its mutation smoke.
 
 pub mod device;
 pub mod metrics;
@@ -68,7 +81,7 @@ pub use device::{Device, DeviceConfig, Job};
 pub use metrics::{Metrics, MetricsSnapshot, TenantSnapshot};
 pub use placement::{PlacementMap, PlacementPolicy, PlacementSnapshot};
 pub use queue::{
-    Pop, ShardedQueue, TenantId, DEFAULT_TENANT, MAX_FRONT_SKIPS, STEAL_SCAN_WINDOW,
+    Pop, QueueClosed, ShardedQueue, TenantId, DEFAULT_TENANT, MAX_FRONT_SKIPS, STEAL_SCAN_WINDOW,
 };
 pub use router::{
     Coordinator, CoordinatorConfig, PreTiledWeights, RequestHandle, WaveSub, COALESCE_LIMIT,

@@ -34,6 +34,8 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
+use crate::sync::lock_unpoisoned;
+
 /// How the router maps an *unseen* weight tile to a device. Already
 /// placed tiles always keep their device under either policy that
 /// tracks state (and `HashMod` is pure, so it is trivially sticky).
@@ -161,7 +163,7 @@ impl PlacementMap {
             return (tile_id % devices) as usize;
         }
         let work = work.max(1);
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = lock_unpoisoned(&self.inner);
 
         inner.touches += 1;
         if inner.touches % DECAY_INTERVAL == 0 {
@@ -204,7 +206,7 @@ impl PlacementMap {
     /// Current home device of a tile, if placed (`HashMod` places
     /// implicitly, so this reports only heat-aware state).
     pub fn device_of(&self, tile_id: u64) -> Option<usize> {
-        self.inner.lock().unwrap().tiles.get(&tile_id).map(|e| e.device)
+        lock_unpoisoned(&self.inner).tiles.get(&tile_id).map(|e| e.device)
     }
 
     /// Run one imbalance check, moving at most one tile. Returns true
@@ -214,12 +216,12 @@ impl PlacementMap {
     ///
     /// [`place`]: Self::place
     pub fn rebalance(&self) -> bool {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = lock_unpoisoned(&self.inner);
         self.rebalance_locked(&mut inner)
     }
 
     pub fn snapshot(&self) -> PlacementSnapshot {
-        let inner = self.inner.lock().unwrap();
+        let inner = lock_unpoisoned(&self.inner);
         let mut device_tiles = vec![0usize; inner.device_heat.len()];
         for e in inner.tiles.values() {
             device_tiles[e.device] += 1;

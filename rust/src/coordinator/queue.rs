@@ -35,10 +35,20 @@
 //! Pushes block while the target shard is full (capacity counts jobs
 //! across all of the shard's lanes — backpressure, never drops),
 //! exactly like the seed's bounded channel.
+//!
+//! The push/pop/steal/`try_pop_own_if`/close state machine is model
+//! checked: [`crate::check::explore`] drives a real `ShardedQueue`
+//! through bounded-DFS schedule exploration via the `#[doc(hidden)]`
+//! non-blocking hooks ([`try_pop`](ShardedQueue::try_pop),
+//! [`shard_len`](ShardedQueue::shard_len)) and proves its mutants
+//! ([`QueueDefect`]) are caught.
 
 use std::collections::VecDeque;
+use std::fmt;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Condvar, Mutex};
+
+use crate::sync::{lock_unpoisoned, wait_unpoisoned};
 
 /// Tenant identity attached to every submitted request; jobs from
 /// different tenants are queued in separate DRR lanes per device.
@@ -56,6 +66,10 @@ pub const MAX_FRONT_SKIPS: u32 = 32;
 /// before the ring advances past it. Jobs are near-uniform (one tile
 /// pass), so a quantum of 1 gives per-job round-robin between
 /// backlogged tenants — the tightest fairness bound.
+///
+/// The model checker's DRR-alternation invariant
+/// ([`crate::check::explore`]) assumes this quantum; it has a
+/// compile-time guard and must be revisited together with this value.
 pub const DRR_QUANTUM: u32 = 1;
 
 /// How many jobs from the back of each victim lane a thief inspects
@@ -64,6 +78,40 @@ pub const DRR_QUANTUM: u32 = 1;
 /// deep backlog is exactly when that lock is hottest, so the warm
 /// search must not scan it end to end.
 pub const STEAL_SCAN_WINDOW: usize = 8;
+
+/// Error returned by [`ShardedQueue::push`]: the queue was closed, the
+/// item was **not** enqueued, and the caller must dispose of it (a
+/// quiet success could land an item after the workers' final drain
+/// scan and strand it — and its waiter — forever).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QueueClosed;
+
+impl fmt::Display for QueueClosed {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str("queue closed: the item was rejected, not enqueued")
+    }
+}
+
+impl std::error::Error for QueueClosed {}
+
+/// Deliberately broken queue behaviors, injectable via
+/// [`ShardedQueue::with_defect`]. They exist so the model checker's
+/// mutation smoke ([`crate::check::explore`]) can prove each invariant
+/// it asserts actually has teeth — a checker that never fails on a
+/// known-bad queue checks nothing.
+#[doc(hidden)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QueueDefect {
+    /// `close()` silently drops one queued job per shard — the classic
+    /// lost-wakeup/lost-item close bug. Violates conservation.
+    LossyClose,
+    /// Tile preference ignores the [`MAX_FRONT_SKIPS`] bound, so a
+    /// non-preferred front job can starve forever.
+    UnboundedFrontSkips,
+    /// The DRR ring never advances after a lane spends its quantum, so
+    /// one backlogged tenant monopolizes the shard.
+    StuckDrrRing,
+}
 
 /// How a job left the queue (workers count steals).
 pub enum Pop<T> {
@@ -99,6 +147,8 @@ struct ShardInner<T> {
     cur: usize,
     /// Total queued jobs across lanes (capacity accounting).
     len: usize,
+    /// Injected misbehavior (None in production; see [`QueueDefect`]).
+    defect: Option<QueueDefect>,
 }
 
 impl<T> ShardInner<T> {
@@ -126,11 +176,13 @@ impl<T> ShardInner<T> {
             .find(|&(li, _)| !self.lanes[li].queue.is_empty())
     }
 
-    /// Position tile preference selects within `lane`: the first
+    /// Position tile preference selects within lane `li`: the first
     /// preferred job, falling back to (or, past [`MAX_FRONT_SKIPS`]
     /// deferrals, forced to) the front.
-    fn preferred_pos(lane: &Lane<T>, prefer: &impl Fn(&T) -> bool) -> usize {
-        if lane.front_skips < MAX_FRONT_SKIPS {
+    fn preferred_pos(&self, li: usize, prefer: &impl Fn(&T) -> bool) -> usize {
+        let lane = &self.lanes[li];
+        let bound_ignored = self.defect == Some(QueueDefect::UnboundedFrontSkips);
+        if lane.front_skips < MAX_FRONT_SKIPS || bound_ignored {
             lane.queue.iter().position(prefer).unwrap_or(0)
         } else {
             0 // anti-starvation: the front job has waited long enough
@@ -165,7 +217,9 @@ impl<T> ShardInner<T> {
         if self.lanes[li].deficit == 0 || self.lanes[li].queue.is_empty() {
             // Round spent (or lane drained): ring moves on.
             self.lanes[li].deficit = 0;
-            self.cur = (li + 1) % n_lanes;
+            if self.defect != Some(QueueDefect::StuckDrrRing) {
+                self.cur = (li + 1) % n_lanes;
+            }
         }
         self.len -= 1;
         item.expect("non-empty lane must yield a job")
@@ -179,7 +233,7 @@ struct Shard<T> {
 
 /// Bounded multi-queue with affinity shards and per-tenant DRR lanes.
 /// `close()` ends the stream: pops drain whatever remains, then return
-/// `None`. Pushing after `close()` is a caller bug (asserted).
+/// `None`. Pushing after `close()` is rejected with [`QueueClosed`].
 pub struct ShardedQueue<T> {
     shards: Vec<Shard<T>>,
     capacity: usize,
@@ -193,12 +247,24 @@ pub struct ShardedQueue<T> {
 
 impl<T> ShardedQueue<T> {
     pub fn new(shards: usize, capacity: usize, steal: bool) -> Self {
+        Self::with_defect(shards, capacity, steal, None)
+    }
+
+    /// Construct a queue with an injected [`QueueDefect`] — model
+    /// checker mutation smoke only; production code uses [`new`](Self::new).
+    #[doc(hidden)]
+    pub fn with_defect(
+        shards: usize,
+        capacity: usize,
+        steal: bool,
+        defect: Option<QueueDefect>,
+    ) -> Self {
         assert!(shards >= 1, "need at least one shard");
         assert!(capacity >= 1, "need capacity for at least one job");
         Self {
             shards: (0..shards)
                 .map(|_| Shard {
-                    inner: Mutex::new(ShardInner { lanes: Vec::new(), cur: 0, len: 0 }),
+                    inner: Mutex::new(ShardInner { lanes: Vec::new(), cur: 0, len: 0, defect }),
                     not_full: Condvar::new(),
                 })
                 .collect(),
@@ -215,33 +281,34 @@ impl<T> ShardedQueue<T> {
     }
 
     /// Push onto shard `idx` in `tenant`'s lane, blocking while the
-    /// shard is full. Returns true if it had to wait (a backpressure
-    /// event).
+    /// shard is full. Returns `Ok(true)` if it had to wait (a
+    /// backpressure event), `Ok(false)` if the shard had room.
     ///
-    /// Panics if the queue was closed: `close()` is only correct after
-    /// all pushes have returned, and a push racing it must fail loudly
-    /// — a quiet success could land an item after the workers' final
-    /// drain scan and strand it (and its waiter) forever.
-    pub fn push(&self, idx: usize, tenant: TenantId, item: T) -> bool {
+    /// Returns [`QueueClosed`] — without enqueuing — if the queue was
+    /// closed, including when `close()` lands while this push is
+    /// blocked on backpressure: the blocked pusher is woken and hands
+    /// the item back instead of planting it in a drained shard.
+    pub fn push(&self, idx: usize, tenant: TenantId, item: T) -> Result<bool, QueueClosed> {
         let shard = &self.shards[idx];
-        let mut inner = shard.inner.lock().unwrap();
+        let mut inner = lock_unpoisoned(&shard.inner);
         // Checked under the shard lock: a close() that any drain scan
         // has already observed happened before this lock acquisition,
-        // so the assert fires before the item can be stranded.
-        assert!(!self.closed.load(Ordering::Acquire), "push after close");
+        // so the rejection lands before the item can be stranded.
+        if self.closed.load(Ordering::Acquire) {
+            return Err(QueueClosed);
+        }
         let waited = inner.len >= self.capacity;
         while inner.len >= self.capacity {
-            inner = shard.not_full.wait(inner).unwrap();
-            assert!(
-                !self.closed.load(Ordering::Acquire),
-                "queue closed while a push was blocked on backpressure"
-            );
+            inner = wait_unpoisoned(&shard.not_full, inner);
+            if self.closed.load(Ordering::Acquire) {
+                return Err(QueueClosed);
+            }
         }
         inner.lane_mut(tenant).queue.push_back(item);
         inner.len += 1;
         drop(inner);
         self.bump();
-        waited
+        Ok(waited)
     }
 
     /// Pop for worker `me`. `prefer` marks jobs the worker can run
@@ -254,7 +321,7 @@ impl<T> ShardedQueue<T> {
     /// with nothing left this worker may take.
     pub fn pop(&self, me: usize, prefer: impl Fn(&T) -> bool) -> Option<Pop<T>> {
         loop {
-            let gen0 = *self.generation.lock().unwrap();
+            let gen0 = *lock_unpoisoned(&self.generation);
             if let Some(p) = self.scan(me, &prefer) {
                 return Some(p);
             }
@@ -264,11 +331,29 @@ impl<T> ShardedQueue<T> {
                 // scan is authoritative.
                 return self.scan(me, &prefer);
             }
-            let mut gen = self.generation.lock().unwrap();
+            let mut gen = lock_unpoisoned(&self.generation);
             while *gen == gen0 && !self.closed.load(Ordering::Acquire) {
-                gen = self.work.wait(gen).unwrap();
+                gen = wait_unpoisoned(&self.work, gen);
             }
         }
+    }
+
+    /// One non-blocking scan for worker `me` — exactly the candidate
+    /// search [`pop`](Self::pop) runs between waits, without the wait.
+    /// Model-checker hook: [`crate::check::explore`] replays schedules
+    /// single-threaded, so a blocked consumer is modeled as a disabled
+    /// actor rather than a parked thread. Not part of the worker API.
+    #[doc(hidden)]
+    pub fn try_pop(&self, me: usize, prefer: impl Fn(&T) -> bool) -> Option<Pop<T>> {
+        self.scan(me, &prefer)
+    }
+
+    /// Queued jobs currently in shard `idx` (all lanes). Model-checker
+    /// hook for computing actor enabled-ness; racy as a scheduling
+    /// signal under real concurrency, so not part of the worker API.
+    #[doc(hidden)]
+    pub fn shard_len(&self, idx: usize) -> usize {
+        lock_unpoisoned(&self.shards[idx].inner).len
     }
 
     /// Non-blocking conditional pop from worker `me`'s **own** shard —
@@ -285,13 +370,13 @@ impl<T> ShardedQueue<T> {
     /// another device's shard.
     pub fn try_pop_own_if(&self, me: usize, pred: impl Fn(&T) -> bool) -> Option<T> {
         let shard = &self.shards[me];
-        let mut inner = shard.inner.lock().unwrap();
+        let mut inner = lock_unpoisoned(&shard.inner);
         if inner.len == 0 {
             return None;
         }
         let (li, passed) = inner.next_lane().expect("len > 0 but no lane had a job");
         // The job DRR + tile preference would select from this lane.
-        let pos = ShardInner::preferred_pos(&inner.lanes[li], &pred);
+        let pos = inner.preferred_pos(li, &pred);
         if !pred(&inner.lanes[li].queue[pos]) {
             // The next-served job is not coalescible: hands-off (the
             // worker's ordinary pop will serve it), and the shard is
@@ -307,15 +392,22 @@ impl<T> ShardedQueue<T> {
     /// Idempotent.
     pub fn close(&self) {
         self.closed.store(true, Ordering::Release);
-        // Wake pushers blocked on full shards so they fail loudly (see
-        // `push`) instead of sleeping forever.
+        // Wake pushers blocked on full shards so they get their
+        // QueueClosed rejection (see `push`) instead of sleeping
+        // forever.
         for shard in &self.shards {
-            let _inner = shard.inner.lock().unwrap();
+            let mut inner = lock_unpoisoned(&shard.inner);
+            if inner.defect == Some(QueueDefect::LossyClose) {
+                if let Some(li) = inner.lanes.iter().position(|l| !l.queue.is_empty()) {
+                    inner.lanes[li].queue.pop_front();
+                    inner.len -= 1;
+                }
+            }
             shard.not_full.notify_all();
         }
         // Take the generation lock so every sleeping worker observes
         // `closed` on wake (no missed-notify window).
-        let _gen = self.generation.lock().unwrap();
+        let _gen = lock_unpoisoned(&self.generation);
         self.work.notify_all();
     }
 
@@ -326,7 +418,7 @@ impl<T> ShardedQueue<T> {
         // makes the missed-wakeup reasoning simple (one generation
         // counter guards every scan). Revisit if device counts grow
         // past tens.
-        let mut gen = self.generation.lock().unwrap();
+        let mut gen = lock_unpoisoned(&self.generation);
         *gen = gen.wrapping_add(1);
         self.work.notify_all();
     }
@@ -354,12 +446,12 @@ impl<T> ShardedQueue<T> {
     /// shared with [`try_pop_own_if`](Self::try_pop_own_if).
     fn pop_own(&self, me: usize, prefer: &impl Fn(&T) -> bool) -> Option<T> {
         let shard = &self.shards[me];
-        let mut inner = shard.inner.lock().unwrap();
+        let mut inner = lock_unpoisoned(&shard.inner);
         if inner.len == 0 {
             return None;
         }
         let (li, passed) = inner.next_lane().expect("len > 0 but no lane had a job");
-        let pos = ShardInner::preferred_pos(&inner.lanes[li], prefer);
+        let pos = inner.preferred_pos(li, prefer);
         let item = inner.take(li, passed, pos);
         shard.not_full.notify_one();
         Some(item)
@@ -376,7 +468,7 @@ impl<T> ShardedQueue<T> {
     /// lane (the tenant with the deepest backlog benefits most).
     fn steal_from(&self, victim: usize, prefer: &impl Fn(&T) -> bool) -> Option<T> {
         let shard = &self.shards[victim];
-        let mut inner = shard.inner.lock().unwrap();
+        let mut inner = lock_unpoisoned(&shard.inner);
         if inner.len < 2 {
             return None;
         }
@@ -421,7 +513,7 @@ mod tests {
     fn drains_in_fifo_order_then_none_after_close() {
         let q = ShardedQueue::new(1, 8, true);
         for v in [1u32, 2, 3] {
-            q.push(0, T0, v);
+            q.push(0, T0, v).unwrap();
         }
         q.close();
         let mut got = Vec::new();
@@ -436,7 +528,7 @@ mod tests {
     fn preference_reorders_within_shard() {
         let q = ShardedQueue::new(1, 8, false);
         for v in [10u32, 11, 20, 12] {
-            q.push(0, T0, v);
+            q.push(0, T0, v).unwrap();
         }
         q.close();
         // Prefer the 2x-decade jobs: 20 jumps the queue, rest FIFO.
@@ -450,9 +542,9 @@ mod tests {
     #[test]
     fn front_job_cannot_starve() {
         let q = ShardedQueue::new(1, MAX_FRONT_SKIPS as usize + 8, false);
-        q.push(0, T0, 1u32); // never preferred
+        q.push(0, T0, 1u32).unwrap(); // never preferred
         for _ in 0..MAX_FRONT_SKIPS + 4 {
-            q.push(0, T0, 2u32); // always preferred
+            q.push(0, T0, 2u32).unwrap(); // always preferred
         }
         q.close();
         let mut popped_front_at = None;
@@ -474,10 +566,10 @@ mod tests {
         // non-empty instead of draining the flood first.
         let q = ShardedQueue::new(1, 16, false);
         for v in [10u32, 11, 12, 13, 14, 15] {
-            q.push(0, 1, v);
+            q.push(0, 1, v).unwrap();
         }
         for v in [20u32, 21, 22] {
-            q.push(0, 2, v);
+            q.push(0, 2, v).unwrap();
         }
         q.close();
         let mut got = Vec::new();
@@ -493,13 +585,13 @@ mod tests {
         // still-backlogged tenant has been served exactly k times.
         let q = ShardedQueue::new(1, 64, false);
         for i in 0..12u32 {
-            q.push(0, 1, 100 + i);
+            q.push(0, 1, 100 + i).unwrap();
         }
         for i in 0..6u32 {
-            q.push(0, 2, 200 + i);
+            q.push(0, 2, 200 + i).unwrap();
         }
         for i in 0..6u32 {
-            q.push(0, 3, 300 + i);
+            q.push(0, 3, 300 + i).unwrap();
         }
         q.close();
         let mut served = [0u32; 3];
@@ -515,8 +607,8 @@ mod tests {
         // Tenant 2's lane holds the preferred job, but DRR serves
         // tenant 1 first: preference must not cross lanes.
         let q = ShardedQueue::new(1, 8, false);
-        q.push(0, 1, 10u32);
-        q.push(0, 2, 20u32); // preferred, but in the later lane
+        q.push(0, 1, 10u32).unwrap();
+        q.push(0, 2, 20u32).unwrap(); // preferred, but in the later lane
         q.close();
         let first = q.pop(0, |v| *v == 20).unwrap().into_inner();
         assert_eq!(first, 10, "fairness outranks tile preference");
@@ -531,7 +623,7 @@ mod tests {
         // before handing back a non-7.
         let q = ShardedQueue::new(1, 8, false);
         for v in [7u32, 1, 7, 2] {
-            q.push(0, T0, v);
+            q.push(0, T0, v).unwrap();
         }
         let is7 = |v: &u32| *v == 7;
         assert_eq!(q.try_pop_own_if(0, is7), Some(7));
@@ -549,9 +641,9 @@ mod tests {
         // A non-matching front job can be passed over at most
         // MAX_FRONT_SKIPS times before the drain must yield to it.
         let q = ShardedQueue::new(1, MAX_FRONT_SKIPS as usize + 8, false);
-        q.push(0, T0, 1u32); // never matches
+        q.push(0, T0, 1u32).unwrap(); // never matches
         for _ in 0..MAX_FRONT_SKIPS + 4 {
-            q.push(0, T0, 2u32);
+            q.push(0, T0, 2u32).unwrap();
         }
         let mut drained = 0u32;
         while q.try_pop_own_if(0, |v| *v == 2).is_some() {
@@ -569,9 +661,9 @@ mod tests {
         // coalescing), exactly as a plain pop would serve tenant 2.
         let q = ShardedQueue::new(1, 8, false);
         for v in [10u32, 11] {
-            q.push(0, 1, v);
+            q.push(0, 1, v).unwrap();
         }
-        q.push(0, 2, 20u32);
+        q.push(0, 2, 20u32).unwrap();
         let first = q.try_pop_own_if(0, |v| *v / 10 == 1);
         assert_eq!(first, Some(10));
         assert_eq!(
@@ -587,8 +679,8 @@ mod tests {
     #[test]
     fn try_pop_is_shard_local_and_nonblocking() {
         let q = ShardedQueue::new(2, 8, true);
-        q.push(0, T0, 7u32);
-        q.push(0, T0, 7);
+        q.push(0, T0, 7u32).unwrap();
+        q.push(0, T0, 7).unwrap();
         // Worker 1's drain never reaches shard 0's backlog (stealing is
         // the blocking pop's job), and an empty own shard returns None
         // immediately.
@@ -605,7 +697,7 @@ mod tests {
     fn try_pop_drains_after_close() {
         // Coalescing keeps working through the post-close drain phase.
         let q = ShardedQueue::new(1, 4, false);
-        q.push(0, T0, 7u32);
+        q.push(0, T0, 7u32).unwrap();
         q.close();
         assert_eq!(q.try_pop_own_if(0, |v| *v == 7), Some(7));
         assert_eq!(q.try_pop_own_if(0, |v| *v == 7), None);
@@ -615,9 +707,9 @@ mod tests {
     #[test]
     fn steals_backlog_but_leaves_last_job() {
         let q = ShardedQueue::new(2, 8, true);
-        q.push(0, T0, 1u32);
-        q.push(0, T0, 2);
-        q.push(0, T0, 3);
+        q.push(0, T0, 1u32).unwrap();
+        q.push(0, T0, 2).unwrap();
+        q.push(0, T0, 3).unwrap();
         q.close();
         // Worker 1 steals from the back while shard 0 has a backlog.
         assert!(matches!(q.pop(1, no_pref), Some(Pop::Stolen(3))));
@@ -634,7 +726,7 @@ mod tests {
         // mid-lane — that steal skips the reload.
         let q = ShardedQueue::new(2, 8, true);
         for v in [10u32, 7, 11] {
-            q.push(0, T0, v);
+            q.push(0, T0, v).unwrap();
         }
         q.close();
         assert!(matches!(q.pop(1, |v| *v == 7), Some(Pop::Stolen(7))));
@@ -651,9 +743,9 @@ mod tests {
         // dug out — the bound caps the victim-lock hold time — so the
         // steal falls back to the lane tail.
         let q = ShardedQueue::new(2, 64, true);
-        q.push(0, T0, 7u32); // warm, but at the very front
+        q.push(0, T0, 7u32).unwrap(); // warm, but at the very front
         for v in 0..(STEAL_SCAN_WINDOW as u32 + 2) {
-            q.push(0, T0, 100 + v);
+            q.push(0, T0, 100 + v).unwrap();
         }
         q.close();
         let got = q.pop(1, |v| *v == 7).map(Pop::into_inner);
@@ -665,10 +757,10 @@ mod tests {
         // The preferred job lives in a short lane, not the longest one:
         // preference must still find it before the longest-lane tail.
         let q = ShardedQueue::new(2, 16, true);
-        q.push(0, 1, 10u32);
-        q.push(0, 1, 11);
-        q.push(0, 1, 12);
-        q.push(0, 2, 20u32); // warm, in the shorter lane
+        q.push(0, 1, 10u32).unwrap();
+        q.push(0, 1, 11).unwrap();
+        q.push(0, 1, 12).unwrap();
+        q.push(0, 2, 20u32).unwrap(); // warm, in the shorter lane
         q.close();
         assert!(matches!(q.pop(1, |v| *v == 20), Some(Pop::Stolen(20))));
         assert!(matches!(q.pop(1, no_pref), Some(Pop::Stolen(12))));
@@ -677,10 +769,10 @@ mod tests {
     #[test]
     fn steals_from_the_longest_lane() {
         let q = ShardedQueue::new(2, 16, true);
-        q.push(0, 1, 10u32);
-        q.push(0, 2, 20u32);
-        q.push(0, 2, 21);
-        q.push(0, 2, 22);
+        q.push(0, 1, 10u32).unwrap();
+        q.push(0, 2, 20u32).unwrap();
+        q.push(0, 2, 21).unwrap();
+        q.push(0, 2, 22).unwrap();
         q.close();
         // Tenant 2 has the deepest backlog: the thief relieves it from
         // the back.
@@ -691,8 +783,8 @@ mod tests {
     #[test]
     fn stealing_disabled_never_crosses_shards() {
         let q = ShardedQueue::new(2, 8, false);
-        q.push(0, T0, 1u32);
-        q.push(0, T0, 2);
+        q.push(0, T0, 1u32).unwrap();
+        q.push(0, T0, 2).unwrap();
         q.close();
         assert!(q.pop(1, no_pref).is_none());
         assert!(q.pop(0, no_pref).is_some());
@@ -716,7 +808,7 @@ mod tests {
             })
             .collect();
         for v in 0..total {
-            q.push((v % 2) as usize, (v % 3) as TenantId, v);
+            q.push((v % 2) as usize, (v % 3) as TenantId, v).unwrap();
         }
         q.close();
         let consumed: u32 = consumers.into_iter().map(|c| c.join().unwrap()).sum();
@@ -726,7 +818,7 @@ mod tests {
     #[test]
     fn backpressure_push_blocks_until_pop() {
         let q = Arc::new(ShardedQueue::new(1, 1, false));
-        assert!(!q.push(0, T0, 1u32)); // fits
+        assert!(!q.push(0, T0, 1u32).unwrap()); // fits
         let producer = {
             let q = Arc::clone(&q);
             std::thread::spawn(move || q.push(0, T0, 2u32)) // must wait
@@ -734,7 +826,10 @@ mod tests {
         // Give the producer a moment to hit the full queue, then drain.
         std::thread::sleep(std::time::Duration::from_millis(20));
         assert!(matches!(q.pop(0, no_pref), Some(Pop::Local(1))));
-        assert!(producer.join().unwrap(), "second push must report waiting");
+        assert!(
+            producer.join().unwrap().unwrap(),
+            "second push must report waiting"
+        );
         q.close();
         assert!(matches!(q.pop(0, no_pref), Some(Pop::Local(2))));
         assert!(q.pop(0, no_pref).is_none());
@@ -745,15 +840,15 @@ mod tests {
         // Two tenants share the shard's capacity: the bound is on total
         // queued jobs, not per lane.
         let q = Arc::new(ShardedQueue::new(1, 2, false));
-        assert!(!q.push(0, 1, 1u32));
-        assert!(!q.push(0, 2, 2u32));
+        assert!(!q.push(0, 1, 1u32).unwrap());
+        assert!(!q.push(0, 2, 2u32).unwrap());
         let producer = {
             let q = Arc::clone(&q);
             std::thread::spawn(move || q.push(0, 3, 3u32)) // must wait
         };
         std::thread::sleep(std::time::Duration::from_millis(20));
         assert!(q.pop(0, no_pref).is_some());
-        assert!(producer.join().unwrap());
+        assert!(producer.join().unwrap().unwrap());
         q.close();
         assert!(q.pop(0, no_pref).is_some());
         assert!(q.pop(0, no_pref).is_some());
@@ -761,10 +856,37 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "push after close")]
-    fn push_after_close_is_a_bug() {
-        let q = ShardedQueue::new(1, 1, false);
+    fn push_after_close_is_rejected_without_enqueuing() {
+        let q = ShardedQueue::new(1, 4, false);
+        q.push(0, T0, 1u32).unwrap();
         q.close();
-        q.push(0, T0, 1u32);
+        assert_eq!(q.push(0, T0, 2u32), Err(QueueClosed));
+        // Only the pre-close item drains.
+        assert!(matches!(q.pop(0, no_pref), Some(Pop::Local(1))));
+        assert!(q.pop(0, no_pref).is_none());
+    }
+
+    #[test]
+    fn blocked_push_racing_close_wakes_and_returns_closed() {
+        // A push blocked on backpressure when close() lands must wake,
+        // hand the item back as Err(QueueClosed), and never enqueue it
+        // into the drained shard — not deadlock, not quietly succeed.
+        let q = Arc::new(ShardedQueue::new(1, 1, false));
+        q.push(0, T0, 1u32).unwrap(); // fill the shard
+        let producer = {
+            let q = Arc::clone(&q);
+            std::thread::spawn(move || q.push(0, T0, 2u32))
+        };
+        // Let the producer park on the not_full condvar, then close.
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q.close();
+        assert_eq!(
+            producer.join().unwrap(),
+            Err(QueueClosed),
+            "the blocked push must observe the close, not enqueue"
+        );
+        // The shard drains exactly the pre-close contents.
+        assert!(matches!(q.pop(0, no_pref), Some(Pop::Local(1))));
+        assert!(q.pop(0, no_pref).is_none());
     }
 }

@@ -385,7 +385,12 @@ impl Coordinator {
                 // streamed M1-tile count so placement balances work,
                 // not request count.
                 let shard = self.placement.place(tile_id, (padded_rows / t) as u64);
-                if self.pool.push(shard, tenant, job) {
+                // Closing consumes the coordinator, so a submit can
+                // never race it: a rejection here is a use-after-
+                // shutdown bug, not a recoverable condition.
+                let waited =
+                    self.pool.push(shard, tenant, job).expect("job push raced queue close");
+                if waited {
                     self.metrics.backpressure_events.fetch_add(1, Relaxed);
                 }
             }
@@ -528,7 +533,9 @@ impl Coordinator {
                         enqueued_at: Instant::now(),
                     };
                     let shard = self.placement.place(tile_id, 1);
-                    if self.pool.push(shard, lane, job) {
+                    let waited =
+                        self.pool.push(shard, lane, job).expect("job push raced queue close");
+                    if waited {
                         self.metrics.backpressure_events.fetch_add(1, Relaxed);
                     }
                 }
@@ -550,6 +557,27 @@ impl Coordinator {
             let _ = w.join();
         }
         self.metrics.snapshot()
+    }
+
+    /// [`shutdown`](Self::shutdown), plus a double-entry audit of the
+    /// final ledger ([`crate::check::audit`]). The audit runs strictly
+    /// *after* the workers joined: mid-flight a job can be folded but
+    /// not yet counted complete, so only the settled drain point is
+    /// required to balance. Serving shutdowns and the benchmark
+    /// scenarios call this and assert the report is balanced.
+    pub fn shutdown_audited(mut self) -> (MetricsSnapshot, crate::check::audit::AuditReport) {
+        self.pool.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        let snap = self.metrics.snapshot();
+        let report = crate::check::audit::audit_coordinator(
+            &snap,
+            &self.metrics.tenants(),
+            &self.metrics.device_jobs(),
+            &self.cfg,
+        );
+        (snap, report)
     }
 }
 

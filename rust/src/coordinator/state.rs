@@ -11,6 +11,7 @@ use std::sync::Mutex;
 
 use crate::matrix::Mat;
 use crate::sim::stats::RunStats;
+use crate::sync::lock_unpoisoned;
 
 /// Final response for one submitted matmul.
 #[derive(Debug)]
@@ -69,7 +70,7 @@ impl ReqState {
     /// block.
     pub fn complete_job(&self, r0: usize, c0: usize, strip: &Mat<i32>, stats: &RunStats) -> bool {
         {
-            let mut out = self.out.lock().unwrap();
+            let mut out = lock_unpoisoned(&self.out);
             assert!(
                 r0 + strip.rows() <= out.rows(),
                 "job strip (r0 {r0} + {} rows) overruns the padded accumulator ({} rows)",
@@ -94,7 +95,7 @@ impl ReqState {
             }
         }
         {
-            let mut agg = self.stats.lock().unwrap();
+            let mut agg = lock_unpoisoned(&self.stats);
             agg.chain(stats);
         }
         self.pending_jobs.fetch_sub(1, Ordering::AcqRel) == 1
@@ -103,9 +104,9 @@ impl ReqState {
     /// Deliver responses to every sub-requester (last job just retired).
     /// Returns the number of sub-requests completed.
     pub fn finish(&self) -> u64 {
-        let out = self.out.lock().unwrap();
-        let stats = *self.stats.lock().unwrap();
-        let subs = std::mem::take(&mut *self.subs.lock().unwrap());
+        let out = lock_unpoisoned(&self.out);
+        let stats = *lock_unpoisoned(&self.stats);
+        let subs = std::mem::take(&mut *lock_unpoisoned(&self.subs));
         let n = subs.len() as u64;
         for sub in subs {
             let mine = out.block(sub.row0, 0, sub.rows, self.out_cols);

@@ -53,10 +53,23 @@
 //!   `verify-artifacts` command; the default build/test is hermetic.
 //! * [`bench_harness`] — regenerates every table and figure of the
 //!   paper’s evaluation section (Fig 5, Tables I/II/IV, Fig 6).
+//! * [`check`] — in-tree correctness tooling: a deterministic
+//!   interleaving explorer (mini model checker) for the scheduling
+//!   substrate, a double-entry auditor for the metrics ledger, and the
+//!   repo lint gate — each validated by mutation smoke and run as
+//!   ordinary tests (`dip check` / `dip audit` / `dip lint` expose
+//!   them on the CLI).
+
+// The whole simulator is safe Rust over std; keep it that way, and hold
+// the tree to current-edition idioms (the lint gate rides on top for
+// the rules rustc cannot express).
+#![forbid(unsafe_code)]
+#![deny(rust_2018_idioms)]
 
 pub mod analytical;
 pub mod arch;
 pub mod bench_harness;
+pub mod check;
 pub mod coordinator;
 pub mod jsonio;
 pub mod matrix;
@@ -65,6 +78,7 @@ pub mod power;
 pub mod runtime;
 pub mod serving;
 pub mod sim;
+pub mod sync;
 pub mod tiling;
 pub mod workloads;
 

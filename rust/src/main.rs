@@ -38,6 +38,12 @@ COMMANDS:
                           [--requests <n>] [--devices <n>] [--arch <dip|ws>]
                           [--model <name>] [--seq <len>] [--batch <n>]
     models              List the nine evaluated transformer models
+    check               Model-check queue interleavings + device-batch
+                          partitions against the shadow invariants
+    audit               Serve a multi-tenant workload, then audit the
+                          settled metrics ledger (double-entry checks)
+                          [--requests <n>] [--devices <n>] [--arch <dip|ws>]
+    lint                Repo lint gate over rust/src (exit 1 on findings)
     sparsity            Zero-gating energy sweep (paper §V future work)
                           [--n <size>] [--rows <n>]
     bandwidth           §II dataflow bandwidth comparison (WS/IS/OS/RS/DiP)
@@ -104,6 +110,9 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
         "verify-artifacts" => cmd_verify(args),
         "serve" => cmd_serve(args),
         "models" => cmd_models(),
+        "check" => cmd_check(),
+        "audit" => cmd_audit(args),
+        "lint" => cmd_lint(),
         "sparsity" => cmd_sparsity(args),
         "bandwidth" => cmd_bandwidth(),
         "meissa" => cmd_meissa(),
@@ -274,7 +283,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         total_cycles += h.wait().stats.cycles;
     }
     let wall = t0.elapsed();
-    let m = coord.shutdown();
+    let (m, audit) = coord.shutdown_audited();
+    audit.assert_balanced();
     println!(
         "completed {} requests in {:.1} ms wall",
         m.requests_completed,
@@ -317,6 +327,68 @@ fn cmd_models() -> Result<()> {
             m.d_ffn
         );
     }
+    Ok(())
+}
+
+fn cmd_check() -> Result<()> {
+    println!("exploring the queue scenario suite + device-batch partitions...");
+    let r = dip_core::check::explore::run_smoke();
+    println!(
+        "check OK — {} interleavings explored ({} scenarios exhausted their full \
+         schedule space), {} batch compositions matched sequential execution",
+        r.schedules, r.exhausted, r.compositions
+    );
+    Ok(())
+}
+
+fn cmd_audit(args: &Args) -> Result<()> {
+    let requests = args.get_u64("--requests", 24)?;
+    let devices = args.get_u64("--devices", 3)? as usize;
+    let arch = args.get_arch(Arch::Dip)?;
+    let cfg = CoordinatorConfig {
+        devices,
+        device: DeviceConfig { arch, tile: 16, mac_stages: 2, ..Default::default() },
+        queue_depth: 64,
+        ..Default::default()
+    };
+    println!(
+        "auditing a {requests}-request three-tenant run on {devices} {} devices",
+        arch.name()
+    );
+    let coord = Coordinator::new(cfg);
+    let w = random_i8(32, 32, 7);
+    let handles: Vec<_> = (0..requests)
+        .map(|i| {
+            let rows = 8 + (i as usize % 4) * 8;
+            coord.submit_as(i % 3, random_i8(rows, 32, 100 + i), w.clone())
+        })
+        .collect();
+    for h in handles {
+        h.wait();
+    }
+    let (m, report) = coord.shutdown_audited();
+    print!("{report}");
+    anyhow::ensure!(
+        report.is_balanced(),
+        "ledger audit failed: {} identity(ies) out of balance",
+        report.failures().len()
+    );
+    println!(
+        "audit OK — {} requests, {} jobs, {} sim cycles: every ledger identity balances",
+        m.requests_completed, m.jobs_executed, m.sim_cycles
+    );
+    Ok(())
+}
+
+fn cmd_lint() -> Result<()> {
+    let findings = dip_core::check::lint::lint_tree();
+    if !findings.is_empty() {
+        for f in &findings {
+            println!("{f}");
+        }
+        bail!("{} lint finding(s)", findings.len());
+    }
+    println!("lint OK — rust/src is clean under the repo rules");
     Ok(())
 }
 

@@ -24,6 +24,7 @@ use std::sync::{Arc, Mutex};
 
 use crate::coordinator::Metrics;
 use crate::matrix::Mat;
+use crate::sync::lock_unpoisoned;
 
 /// One cached strip.
 struct StripEntry {
@@ -61,7 +62,7 @@ impl ActStripCache {
 
     /// Strips currently cached, summed across shards.
     pub fn len(&self) -> usize {
-        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+        self.shards.iter().map(|s| lock_unpoisoned(s).len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -74,7 +75,7 @@ impl ActStripCache {
     /// builds (debug builds build-and-compare to surface collisions).
     pub fn get_or_build(&self, key: u64, build: impl FnOnce() -> Mat<i8>) -> Arc<Mat<i8>> {
         let shard_idx = (key % self.shards.len() as u64) as usize;
-        let mut shard = self.shards[shard_idx].lock().unwrap();
+        let mut shard = lock_unpoisoned(&self.shards[shard_idx]);
         if let Some(pos) = shard.iter().position(|e| e.key == key) {
             let entry = shard.remove(pos).unwrap();
             #[cfg(debug_assertions)]

@@ -240,7 +240,7 @@ impl WaveScheduler {
         let mut cycles = 0u64;
         for l in 0..layers {
             let (runs, c) = {
-                let inputs: Vec<LayerInput> = cohort
+                let inputs: Vec<LayerInput<'_>> = cohort
                     .iter()
                     .zip(&xs)
                     .map(|(a, x)| {

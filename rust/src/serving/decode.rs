@@ -169,9 +169,15 @@ impl ServingEngine {
         }
     }
 
-    /// Drain and stop the device pool; final metrics.
+    /// Drain and stop the device pool; final metrics. The settled
+    /// ledger is audited ([`crate::check::audit`]) and any imbalance
+    /// panics — every serving test and scenario shuts down through
+    /// here, so the double-entry checks run on every drain point the
+    /// suite produces.
     pub fn shutdown(self) -> MetricsSnapshot {
-        self.coord.shutdown()
+        let (snap, report) = self.coord.shutdown_audited();
+        report.assert_balanced();
+        snap
     }
 }
 

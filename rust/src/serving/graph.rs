@@ -312,7 +312,11 @@ fn with_prior(prior: Option<&Mat<i8>>, new: &Mat<i8>) -> Mat<i8> {
 /// Run one layer pass for a single session — the cohort-of-one case of
 /// [`run_layer_wave`]. Returns the session's rows plus the pass's
 /// simulated cycles.
-pub fn run_layer(ctx: &LayerCtx, weights: &PreTiledLayer, input: LayerInput) -> (LayerRun, u64) {
+pub fn run_layer(
+    ctx: &LayerCtx<'_>,
+    weights: &PreTiledLayer,
+    input: LayerInput<'_>,
+) -> (LayerRun, u64) {
     let (mut runs, cycles) = run_layer_wave(ctx, weights, &[input]);
     (runs.pop().expect("one input, one run"), cycles)
 }
@@ -364,9 +368,9 @@ struct StackedOperand {
 ///
 /// [`submit_wave_as`]: crate::coordinator::Coordinator::submit_wave_as
 pub fn run_layer_wave(
-    ctx: &LayerCtx,
+    ctx: &LayerCtx<'_>,
     weights: &PreTiledLayer,
-    inputs: &[LayerInput],
+    inputs: &[LayerInput<'_>],
 ) -> (Vec<LayerRun>, u64) {
     let tile = ctx.coord.config().device.tile;
     assert!(!inputs.is_empty(), "a wave needs at least one session");

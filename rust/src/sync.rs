@@ -1,0 +1,97 @@
+//! Poison-policy lock helpers shared across the crate.
+//!
+//! Every `Mutex`/`Condvar` in this crate guards state whose invariants
+//! hold at every unlock point: metrics counters are monotonic and
+//! updated with single `+=` statements, queue shards maintain their
+//! `len`/lane bookkeeping before releasing the lock, and placement maps
+//! are rebuilt atomically under the guard. A panic in one worker (for
+//! example a shape-mismatch assertion inside `ReqState::complete_job`)
+//! therefore leaves the guarded value consistent — the only thing the
+//! poison flag would add is a cascade that takes down metrics readers,
+//! drain paths, and the panicking test's own teardown. The crate-wide
+//! policy is: *ignore the poison flag, keep the data*.
+//!
+//! `dip lint` (see [`crate::check::lint`]) enforces the policy by
+//! rejecting bare `.lock().unwrap()` anywhere outside this module, so
+//! the decision to tolerate poison is made in exactly one place.
+
+use std::sync::{Condvar, Mutex, MutexGuard, PoisonError};
+
+/// Lock `m`, tolerating poison: if a previous holder panicked, recover
+/// the guard (and the data, which our invariants keep consistent)
+/// instead of propagating the poison panic.
+pub fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Block on `cv` releasing `guard`, tolerating poison on wakeup the
+/// same way [`lock_unpoisoned`] does on acquisition.
+pub fn wait_unpoisoned<'a, T>(cv: &Condvar, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(guard).unwrap_or_else(PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Condvar, Mutex};
+    use std::time::Duration;
+
+    #[test]
+    fn lock_unpoisoned_recovers_after_a_holder_panics() {
+        let m = Arc::new(Mutex::new(7u32));
+        let m2 = Arc::clone(&m);
+        let worker = std::thread::spawn(move || {
+            let mut g = lock_unpoisoned(&m2);
+            *g = 8;
+            panic!("worker dies while holding the lock");
+        });
+        assert!(worker.join().is_err(), "worker must have panicked");
+        assert!(m.is_poisoned(), "the std mutex records the poison");
+        // The crate policy: the data is still consistent and readable.
+        assert_eq!(*lock_unpoisoned(&m), 8);
+        // And writable — later workers proceed as if nothing happened.
+        *lock_unpoisoned(&m) = 9;
+        assert_eq!(*lock_unpoisoned(&m), 9);
+    }
+
+    #[test]
+    fn wait_unpoisoned_wakes_on_notify() {
+        let pair = Arc::new((Mutex::new(false), Condvar::new()));
+        let pair2 = Arc::clone(&pair);
+        let waker = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(10));
+            *lock_unpoisoned(&pair2.0) = true;
+            pair2.1.notify_all();
+        });
+        let mut g = lock_unpoisoned(&pair.0);
+        while !*g {
+            g = wait_unpoisoned(&pair.1, g);
+        }
+        drop(g);
+        waker.join().unwrap();
+    }
+
+    #[test]
+    fn wait_unpoisoned_recovers_after_a_peer_panics_mid_wait() {
+        let pair = Arc::new((Mutex::new(0u32), Condvar::new()));
+        let pair2 = Arc::clone(&pair);
+        // Poison the mutex first, then verify a waiter can still use it.
+        let poisoner = std::thread::spawn(move || {
+            let _g = lock_unpoisoned(&pair2.0);
+            panic!("poison the pair");
+        });
+        assert!(poisoner.join().is_err());
+        let pair3 = Arc::clone(&pair);
+        let waker = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(10));
+            *lock_unpoisoned(&pair3.0) = 1;
+            pair3.1.notify_all();
+        });
+        let mut g = lock_unpoisoned(&pair.0);
+        while *g == 0 {
+            g = wait_unpoisoned(&pair.1, g);
+        }
+        drop(g);
+        waker.join().unwrap();
+    }
+}

@@ -387,8 +387,8 @@ fn warm_steals_prefer_resident_tiles_and_skip_the_reload() {
 
     // Victim shard 0 queues [warm job, cold job]; the thief is worker 1.
     let q: ShardedQueue<Job> = ShardedQueue::new(2, 8, true);
-    q.push(0, DEFAULT_TENANT, job_for(&x, &w_warm));
-    q.push(0, DEFAULT_TENANT, job_for(&x, &w_cold));
+    q.push(0, DEFAULT_TENANT, job_for(&x, &w_warm)).unwrap();
+    q.push(0, DEFAULT_TENANT, job_for(&x, &w_cold)).unwrap();
     q.close();
 
     let resident = thief.loaded_tile_id();

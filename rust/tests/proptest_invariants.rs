@@ -266,6 +266,13 @@ fn prop_coalesced_device_batch_matches_sequential_ledger() {
         assert_eq!(b.weight_loads, s.weight_loads, "{ctx}");
         assert_eq!(b.weight_loads_skipped, s.weight_loads_skipped, "{ctx}");
         assert_eq!(b.weight_load_cycles_saved, s.weight_load_cycles_saved, "{ctx}");
+        // Double-entry: the one install charges exactly the closed-form
+        // load cost, and each skip credits the same amount — the
+        // identities check::audit enforces on settled coordinators.
+        let per_load = dip_core::check::audit::per_load_cycles(arch, tile);
+        assert_eq!(b.weight_load_cycles_charged, per_load, "{ctx}");
+        assert_eq!(b.weight_load_cycles_charged, s.weight_load_cycles_charged, "{ctx}");
+        assert_eq!(b.weight_load_cycles_saved, (batch as u64 - 1) * per_load, "{ctx}");
         assert_eq!(b.sim_cycles, s.sim_cycles, "{ctx}");
         assert_eq!(b.mac_ops, s.mac_ops, "{ctx}");
         assert_eq!(b.rows_streamed, s.rows_streamed, "{ctx}");
@@ -386,7 +393,11 @@ fn prop_coordinator_exact_under_concurrency() {
                 cfg.queue_depth
             );
         }
-        let m = coord.shutdown();
+        // Settle, then hold the randomized run to the double-entry
+        // ledger identities: every round, every device/queue/stealing
+        // shape must leave a balanced ledger behind.
+        let (m, audit) = coord.shutdown_audited();
+        audit.assert_balanced();
         assert_eq!(m.requests_completed, 12);
     }
 }
@@ -496,7 +507,7 @@ fn prop_sharded_queue_loses_and_duplicates_nothing_under_interleaving() {
                         let item = (p * 1_000_000 + j) as u64;
                         let shard = pg.range(0, shards as u64 - 1) as usize;
                         let tenant = pg.range(0, 3);
-                        q.push(shard, tenant, item);
+                        q.push(shard, tenant, item).unwrap();
                     }
                 })
             })
@@ -543,9 +554,9 @@ fn prop_front_skip_bound_holds_with_stealing_enabled() {
     // second, empty-shard worker configuration steals nothing here but
     // compiles the same code path the coordinator runs).
     let q = ShardedQueue::<u32>::new(2, MAX_FRONT_SKIPS as usize + 16, true);
-    q.push(0, 0, 1); // never preferred
+    q.push(0, 0, 1).unwrap(); // never preferred
     for _ in 0..MAX_FRONT_SKIPS + 8 {
-        q.push(0, 0, 2); // always preferred
+        q.push(0, 0, 2).unwrap(); // always preferred
     }
     q.close();
     let mut popped_front_at = None;
