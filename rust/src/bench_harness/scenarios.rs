@@ -278,11 +278,11 @@ pub fn run_decode_mix(cfg: &DecodeMix, cached: bool) -> DecodeOutcome {
         .collect();
     let mut per_step = Vec::new();
     for s in &mut sessions {
-        per_step.push(engine.prefill(s));
+        per_step.push(engine.prefill(s).expect("bench sessions stay under the seq bound"));
     }
     for _ in 0..cfg.steps {
         for s in &mut sessions {
-            per_step.push(engine.decode_step(s));
+            per_step.push(engine.decode_step(s).expect("bench sessions stay under the seq bound"));
         }
     }
     let (strip_cache_len, strip_cache_capacity) =
@@ -423,7 +423,8 @@ pub fn run_wave_mix(cfg: &WaveMix) -> WaveOutcome {
     loop {
         for (i, spec) in cfg.sessions.iter().enumerate() {
             if !submitted[i] && spec.join_after <= waves_done {
-                ws.submit(i as u64, i as TenantId + 1, cfg.prompt(i), spec.steps);
+                ws.submit(i as u64, i as TenantId + 1, cfg.prompt(i), spec.steps)
+                    .expect("bench sessions stay under the seq bound");
                 submitted[i] = true;
             }
         }
@@ -462,9 +463,9 @@ pub fn run_wave_mix_per_session(cfg: &WaveMix) -> WaveOutcome {
         .enumerate()
         .map(|(i, spec)| {
             let mut s = engine.open_session(i as u64, i as TenantId + 1, cfg.prompt(i), true);
-            engine.prefill(&mut s);
+            engine.prefill(&mut s).expect("bench sessions stay under the seq bound");
             for _ in 0..spec.steps {
-                engine.decode_step(&mut s);
+                engine.decode_step(&mut s).expect("bench sessions stay under the seq bound");
             }
             s
         })

@@ -1,0 +1,255 @@
+//! Pass 3 — **hot-region hygiene** (blocking calls / allocation).
+//!
+//! Generalizes the PR 6 kernel-allocation lint into a declared-region
+//! pass: [`HOT_REGIONS`] names the functions on the per-job hot path
+//! and what each may not contain. The GEMM microkernel
+//! (`arch/kernel.rs::{gemm, full_block, edge_block}`) runs once per
+//! tile job and may neither block nor allocate — its whole design is
+//! the fixed `MR×NR` stack accumulator. The worker drain loop
+//! (`router.rs::drain_coalesced`, the code between a queue pop and
+//! the batched device dispatch) may allocate its batch Vec but may
+//! not block: a sleep or lock wait there stalls a whole device.
+//!
+//! Like the lock pass's call table, the region table is
+//! hand-maintained and kept honest by staleness findings: a region
+//! whose file or function no longer exists is itself reported, so a
+//! rename cannot silently retire a guarantee. The seeded mutant (a
+//! kernel that sleeps and allocates) proves both rules have teeth.
+
+use super::super::source::{
+    collapse_tokens_from, find_all, fn_spans, strip_source, strip_tests, SourceUnit,
+};
+use super::Finding;
+use crate::check::lint::ALLOC_MARKERS;
+
+pub const PASS: &str = "hot-region";
+pub const RULE_BLOCKING: &str = "hot-region-blocking-call";
+pub const RULE_ALLOC: &str = "hot-region-allocation";
+pub const RULE_STALE: &str = "stale-hot-region";
+
+/// One declared hot region: a function that must stay free of
+/// blocking calls (always) and allocation (when `forbid_alloc`).
+#[derive(Debug, Clone, Copy)]
+pub struct HotRegion {
+    pub file: &'static str,
+    pub func: &'static str,
+    pub forbid_alloc: bool,
+    pub why: &'static str,
+}
+
+/// The shipped hot-region table.
+pub const HOT_REGIONS: &[HotRegion] = &[
+    HotRegion {
+        file: "src/arch/kernel.rs",
+        func: "gemm",
+        forbid_alloc: true,
+        why: "per-job GEMM dispatch — the simulator hot path",
+    },
+    HotRegion {
+        file: "src/arch/kernel.rs",
+        func: "full_block",
+        forbid_alloc: true,
+        why: "inner register block — runs once per MRxNR output tile",
+    },
+    HotRegion {
+        file: "src/arch/kernel.rs",
+        func: "edge_block",
+        forbid_alloc: true,
+        why: "ragged-edge register block",
+    },
+    HotRegion {
+        file: "src/coordinator/router.rs",
+        func: "drain_coalesced",
+        forbid_alloc: false,
+        why: "worker drain loop — between queue pop and device dispatch",
+    },
+];
+
+/// Call shapes that can park the calling thread. Matched against the
+/// token-collapsed function body (comments/strings already blanked).
+const BLOCKING_MARKERS: &[&str] = &[
+    "thread::sleep",
+    ".recv()",
+    ".recv_timeout(",
+    ".join(",
+    ".wait(",
+    ".wait_timeout(",
+    "wait_unpoisoned(",
+    "lock_unpoisoned(",
+    ".lock()",
+    "File::",
+    "fs::",
+    "println!(",
+    "eprintln!(",
+    "Command::new",
+];
+
+/// One scanned region, for `analysis.json`.
+#[derive(Debug, Clone)]
+pub struct RegionReport {
+    pub file: String,
+    pub func: String,
+    pub spans: usize,
+    pub forbid_alloc: bool,
+}
+
+/// Hot-region summary for `analysis.json`.
+#[derive(Debug, Clone, Default)]
+pub struct RegionSummary {
+    pub regions: Vec<RegionReport>,
+}
+
+impl RegionSummary {
+    pub fn to_json(&self) -> crate::jsonio::Json {
+        use crate::jsonio::Json;
+        Json::obj(vec![(
+            "regions",
+            Json::Arr(
+                self.regions
+                    .iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("file", Json::str(r.file.clone())),
+                            ("func", Json::str(r.func.clone())),
+                            ("spans", Json::num(r.spans as f64)),
+                            ("forbid_alloc", Json::Bool(r.forbid_alloc)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        )])
+    }
+}
+
+/// Run the pass: scan each declared region's function body for
+/// blocking (and, where forbidden, allocation) markers.
+pub fn scan(
+    units: &[SourceUnit],
+    regions: &[HotRegion],
+    findings: &mut Vec<Finding>,
+) -> RegionSummary {
+    let mut summary = RegionSummary::default();
+    for region in regions {
+        let Some(unit) = units.iter().find(|u| u.label == region.file) else {
+            findings.push(stale(region, "file not found"));
+            continue;
+        };
+        let stripped = strip_source(&unit.text);
+        let code = strip_tests(&stripped);
+        let spans: Vec<_> =
+            fn_spans(code).into_iter().filter(|s| s.name == region.func).collect();
+        if spans.is_empty() {
+            findings.push(stale(region, "function not found"));
+            continue;
+        }
+        for sp in &spans {
+            let body: String =
+                code.chars().skip(sp.body_start).take(sp.body_end - sp.body_start).collect();
+            let (col, lines) = collapse_tokens_from(&body, sp.body_line);
+            for marker in BLOCKING_MARKERS {
+                for p in find_all(&col, marker) {
+                    findings.push(Finding {
+                        pass: PASS,
+                        rule: RULE_BLOCKING,
+                        file: region.file.to_string(),
+                        line: lines[p],
+                        detail: format!(
+                            "blocking call `{}` inside hot region fn {} ({})",
+                            marker, region.func, region.why
+                        ),
+                    });
+                }
+            }
+            if region.forbid_alloc {
+                for marker in ALLOC_MARKERS {
+                    for p in find_all(&col, marker) {
+                        findings.push(Finding {
+                            pass: PASS,
+                            rule: RULE_ALLOC,
+                            file: region.file.to_string(),
+                            line: lines[p],
+                            detail: format!(
+                                "allocation `{}` inside hot region fn {} ({})",
+                                marker, region.func, region.why
+                            ),
+                        });
+                    }
+                }
+            }
+        }
+        summary.regions.push(RegionReport {
+            file: region.file.to_string(),
+            func: region.func.to_string(),
+            spans: spans.len(),
+            forbid_alloc: region.forbid_alloc,
+        });
+    }
+    summary
+}
+
+fn stale(region: &HotRegion, why: &str) -> Finding {
+    Finding {
+        pass: PASS,
+        rule: RULE_STALE,
+        file: region.file.to_string(),
+        line: 0,
+        detail: format!(
+            "HOT_REGIONS entry {}::{} is stale: {why} — update the table",
+            region.file, region.func
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn unit(label: &str, text: &str) -> SourceUnit {
+        SourceUnit { label: label.to_string(), text: text.to_string() }
+    }
+
+    #[test]
+    fn clean_region_passes_and_dirty_region_is_named() {
+        let u = unit(
+            "src/arch/fake.rs",
+            "pub fn hot(out: &mut [i32]) { out[0] = 1; }\n\
+             pub fn dirty(out: &mut [i32]) { let v = vec![0i32; 4]; std::thread::sleep(d); out[0] = v[0]; }\n",
+        );
+        let regions = [
+            HotRegion { file: "src/arch/fake.rs", func: "hot", forbid_alloc: true, why: "t" },
+            HotRegion { file: "src/arch/fake.rs", func: "dirty", forbid_alloc: true, why: "t" },
+        ];
+        let mut findings = Vec::new();
+        let summary = scan(&[u], &regions, &mut findings);
+        assert_eq!(summary.regions.len(), 2);
+        assert!(findings.iter().any(|f| f.rule == RULE_BLOCKING && f.detail.contains("dirty")));
+        assert!(findings.iter().any(|f| f.rule == RULE_ALLOC && f.detail.contains("vec!")));
+        assert!(!findings.iter().any(|f| f.detail.contains("fn hot ")));
+    }
+
+    #[test]
+    fn stale_region_table_is_reported() {
+        let u = unit("src/arch/fake.rs", "pub fn hot() {}\n");
+        let regions = [
+            HotRegion { file: "src/arch/fake.rs", func: "renamed", forbid_alloc: true, why: "t" },
+            HotRegion { file: "src/arch/gone.rs", func: "hot", forbid_alloc: true, why: "t" },
+        ];
+        let mut findings = Vec::new();
+        scan(&[u], &regions, &mut findings);
+        assert_eq!(findings.len(), 2, "{findings:?}");
+        assert!(findings.iter().all(|f| f.rule == RULE_STALE));
+    }
+
+    #[test]
+    fn drain_region_permits_alloc_but_not_blocking() {
+        let u = unit(
+            "src/coordinator/fake.rs",
+            "fn drain(pool: &Q) { let mut batch = vec![head]; while let Some(j) = pool.try_pop() { batch.push(j); } }\n",
+        );
+        let regions =
+            [HotRegion { file: "src/coordinator/fake.rs", func: "drain", forbid_alloc: false, why: "t" }];
+        let mut findings = Vec::new();
+        scan(&[u], &regions, &mut findings);
+        assert!(findings.is_empty(), "{findings:?}");
+    }
+}

@@ -1,0 +1,722 @@
+//! Pass 1 — **lock-order deadlock freedom**.
+//!
+//! Every mutex in the serving pipeline is acquired through
+//! [`crate::sync::lock_unpoisoned`], which makes acquisition sites
+//! textually uniform and lets a token-level scan see all of them. The
+//! pass assigns each site a **lock class** named `file-stem.field`
+//! (e.g. `queue.inner`, `state.out`): field paths, not object
+//! identity — sound here because no in-tree mutex is reachable under
+//! two different field names (documented out-of-scope: alias
+//! analysis).
+//!
+//! Per function, the pass recovers each guard's **scope**:
+//!
+//! * `let [mut] g = lock_unpoisoned(…)` binds a guard that lives to
+//!   the end of its enclosing block (brace-matched) or to an explicit
+//!   `drop(g)`, whichever comes first;
+//! * any other use (`*lock_unpoisoned(…)`, `lock_unpoisoned(…).f`,
+//!   `mem::take(&mut *lock_unpoisoned(…))`) is a temporary that dies
+//!   at the end of the enclosing statement (the next `;` at nesting
+//!   depth zero), exactly Rust's temporary-drop rule.
+//!
+//! Acquiring class `B` inside the scope of a held class `A` adds edge
+//! `A → B` to the **may-hold-while-acquiring graph**. Cross-function
+//! holds come from [`CALL_SUMMARY`], a hand-maintained table of the
+//! call edges that matter (worker drain → queue → device → request
+//! state, submit paths → placement/queue/metrics): the set of classes
+//! each function *may acquire* is closed transitively over the table,
+//! and a call token found inside a guard's scope adds `held → may
+//! acquire(callee)` edges. The table is kept honest by staleness
+//! findings — an entry whose caller, callee, or call token no longer
+//! exists in the tree is itself reported.
+//!
+//! A cycle in the resulting graph is a potential deadlock and is
+//! reported with the witnessing source path of **every** edge on it
+//! (file:line of the acquisition plus where the held guard was
+//! taken). The shipped tree's graph has exactly two edges
+//! (`state.out → state.stats`, `state.out → state.subs`, both inside
+//! `ReqState::finish`) and is acyclic — pinned by the tier-1 test;
+//! the seeded lock-inversion mutant proves a cycle is caught by name.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::super::source::{
+    collapse_tokens_from, find_all, fn_spans, strip_source, strip_tests, SourceUnit,
+};
+use super::Finding;
+
+pub const PASS: &str = "lock-order";
+pub const RULE_CYCLE: &str = "lock-order-cycle";
+pub const RULE_STALE: &str = "stale-call-summary";
+
+/// One hand-maintained call edge: inside `caller_fn` (defined in a
+/// file whose label ends with `caller_file`), the token `token` calls
+/// `callee_fn` of `callee_file`. Tokens are matched against the
+/// token-collapsed body, so they must be whitespace-free.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CallEdge {
+    pub caller_file: &'static str,
+    pub caller_fn: &'static str,
+    pub token: &'static str,
+    pub callee_file: &'static str,
+    pub callee_fn: &'static str,
+}
+
+const Q: &str = "src/coordinator/queue.rs";
+const R: &str = "src/coordinator/router.rs";
+const D: &str = "src/coordinator/device.rs";
+const S: &str = "src/coordinator/state.rs";
+const M: &str = "src/coordinator/metrics.rs";
+const P: &str = "src/coordinator/placement.rs";
+const G: &str = "src/serving/graph.rs";
+const A: &str = "src/serving/actcache.rs";
+
+const fn edge(
+    caller_file: &'static str,
+    caller_fn: &'static str,
+    token: &'static str,
+    callee_file: &'static str,
+    callee_fn: &'static str,
+) -> CallEdge {
+    CallEdge { caller_file, caller_fn, token, callee_file, callee_fn }
+}
+
+/// The call edges that can carry a lock hold across a function
+/// boundary. Hand-maintained; staleness findings flag rot.
+pub const CALL_SUMMARY: &[CallEdge] = &[
+    // Queue internals.
+    edge(Q, "push", "self.bump(", Q, "bump"),
+    edge(Q, "pop", "self.scan(", Q, "scan"),
+    edge(Q, "try_pop", "self.scan(", Q, "scan"),
+    edge(Q, "scan", "self.pop_own(", Q, "pop_own"),
+    edge(Q, "scan", "self.steal_from(", Q, "steal_from"),
+    // Worker thread (the closure lives inside Coordinator::new) and
+    // the coalesced drain it hands each popped job to.
+    edge(R, "new", "pool.pop(", Q, "pop"),
+    edge(R, "new", "drain_coalesced(", R, "drain_coalesced"),
+    edge(R, "drain_coalesced", "pool.try_pop_own_if(", Q, "try_pop_own_if"),
+    edge(R, "drain_coalesced", "dev.execute_batch(", D, "execute_batch"),
+    // Submit paths: placement, queue, request state, metrics.
+    edge(R, "submit_batched_as", "self.metrics.tenant_submitted(", M, "tenant_submitted"),
+    edge(R, "submit_batched_as", "req.finish(", S, "finish"),
+    edge(R, "submit_batched_as", "self.placement.place(", P, "place"),
+    edge(R, "submit_batched_as", "self.pool.push(", Q, "push"),
+    edge(R, "submit_strips_as", "self.metrics.tenant_submitted(", M, "tenant_submitted"),
+    edge(R, "submit_strips_as", "self.submit_wave_as(", R, "submit_wave_as"),
+    edge(R, "submit_wave_as", "self.metrics.tenant_submitted(", M, "tenant_submitted"),
+    edge(R, "submit_wave_as", "req.finish(", S, "finish"),
+    edge(R, "submit_wave_as", "self.placement.place(", P, "place"),
+    edge(R, "submit_wave_as", "self.pool.push(", Q, "push"),
+    edge(R, "shutdown", "self.pool.close(", Q, "close"),
+    edge(R, "shutdown_audited", "self.pool.close(", Q, "close"),
+    edge(R, "drop", "self.pool.close(", Q, "close"),
+    // Device execution → request state + metrics.
+    edge(D, "execute", "self.account_run(", D, "account_run"),
+    edge(D, "execute_batch", "self.execute(", D, "execute"),
+    edge(D, "execute_batch", "self.account_run(", D, "account_run"),
+    edge(D, "account_run", "self.metrics.tenant_served(", M, "tenant_served"),
+    edge(D, "account_run", "self.metrics.device_job(", M, "device_job"),
+    edge(D, "account_run", "job.req.complete_job(", S, "complete_job"),
+    edge(D, "account_run", "job.req.finish(", S, "finish"),
+    // Serving layer: the stage executor fans into the coordinator and
+    // the activation-strip cache.
+    edge(G, "run_layer", "run_layer_wave(", G, "run_layer_wave"),
+    edge(G, "run_layer_wave", "build_strips(", A, "build_strips"),
+    edge(G, "run_layer_wave", "ctx.coord.submit_wave_as(", R, "submit_wave_as"),
+    edge(G, "run_layer_wave", "ctx.coord.submit_strips_as(", R, "submit_strips_as"),
+    edge(A, "build_strips", ".get_or_build(", A, "get_or_build"),
+];
+
+/// Class-tail aliases: `(file label, extracted tail, canonical tail)`.
+/// The act-strip cache locks a whole shard (`lock_unpoisoned(shard)`
+/// inside an iterator), which extracts as the closure variable name —
+/// mapped back onto the `shards` field it ranges over.
+const CLASS_ALIASES: &[(&str, &str, &str)] = &[("src/serving/actcache.rs", "shard", "shards")];
+
+/// Files the lock pass scans.
+fn in_scope(label: &str) -> bool {
+    label.starts_with("src/coordinator/")
+        || label.starts_with("src/serving/")
+        || label == "src/sync.rs"
+}
+
+/// One `A → B` nesting edge with its witnessing source path.
+#[derive(Debug, Clone)]
+pub struct NestEdge {
+    pub from: String,
+    pub to: String,
+    pub witness: String,
+}
+
+/// Lock-pass summary for `analysis.json`.
+#[derive(Debug, Clone, Default)]
+pub struct LockSummary {
+    /// Total `lock_unpoisoned` acquisition sites seen.
+    pub sites: usize,
+    pub classes: BTreeSet<String>,
+    pub edges: Vec<NestEdge>,
+}
+
+impl LockSummary {
+    pub fn to_json(&self) -> crate::jsonio::Json {
+        use crate::jsonio::Json;
+        Json::obj(vec![
+            ("sites", Json::num(self.sites as f64)),
+            ("classes", Json::Arr(self.classes.iter().map(Json::str).collect())),
+            (
+                "edges",
+                Json::Arr(
+                    self.edges
+                        .iter()
+                        .map(|e| {
+                            Json::obj(vec![
+                                ("from", Json::str(e.from.clone())),
+                                ("to", Json::str(e.to.clone())),
+                                ("witness", Json::str(e.witness.clone())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+const LOCK_TOKEN: &str = "lock_unpoisoned(";
+
+fn is_ident_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// `file-stem` of a `src/…` label: `src/coordinator/queue.rs` →
+/// `queue`.
+fn file_stem(label: &str) -> &str {
+    let base = label.rsplit('/').next().unwrap_or(label);
+    base.strip_suffix(".rs").unwrap_or(base)
+}
+
+/// Derive a lock class tail from an acquisition argument:
+/// `&self.shards[idx].inner` → `inner`, `&shard.inner` → `inner`,
+/// `&self.generation` → `generation`, `shard` → `shard`. Strips
+/// leading `&`/`*`, splits on `.` at bracket depth 0, drops a leading
+/// `self`, takes the last segment minus any `[…]`/`(…)` suffix.
+fn class_tail(arg: &str, label: &str) -> String {
+    let arg = arg.trim_start_matches(['&', '*', ' ']);
+    let arg = arg.strip_prefix("mut ").unwrap_or(arg);
+    let mut segs: Vec<String> = Vec::new();
+    let mut cur = String::new();
+    let mut depth = 0i32;
+    for c in arg.chars() {
+        match c {
+            '[' | '(' => {
+                depth += 1;
+                cur.push(c);
+            }
+            ']' | ')' => {
+                depth -= 1;
+                cur.push(c);
+            }
+            '.' if depth == 0 => {
+                segs.push(std::mem::take(&mut cur));
+            }
+            _ => cur.push(c),
+        }
+    }
+    segs.push(cur);
+    let last = segs.last().map(String::as_str).unwrap_or("");
+    let tail: &str = last.split(['[', '(']).next().unwrap_or(last);
+    let tail = if tail.is_empty() { "?" } else { tail };
+    for &(file, from, to) in CLASS_ALIASES {
+        if label == file && tail == from {
+            return to.to_string();
+        }
+    }
+    tail.to_string()
+}
+
+/// Offset of the `)` matching the `(` at `open` (collapsed text).
+fn match_paren(col: &str, open: usize) -> usize {
+    let b = col.as_bytes();
+    debug_assert_eq!(b[open], b'(');
+    let mut depth = 0i32;
+    for (i, &c) in b.iter().enumerate().skip(open) {
+        match c {
+            b'(' => depth += 1,
+            b')' => {
+                depth -= 1;
+                if depth == 0 {
+                    return i;
+                }
+            }
+            _ => {}
+        }
+    }
+    col.len().saturating_sub(1)
+}
+
+/// If the call at `p` is the initializer of `let [mut] name =
+/// lock_unpoisoned(…)`, return `name`. A `*`/method-chain between `=`
+/// and the call breaks the pattern — correctly, since those bind a
+/// copied value, not the guard.
+fn binding_name(col: &str, p: usize) -> Option<String> {
+    let head = &col[..p];
+    let head = head.strip_suffix('=')?;
+    // Reject compound/comparison operators (`==`, `<=`, `+=`, …).
+    if head.ends_with(['=', '<', '>', '!', '+', '-', '*', '/', '&', '|', '^', '%']) {
+        return None;
+    }
+    let name_start = head.rfind(|c: char| !is_ident_char(c)).map_or(0, |i| i + 1);
+    let name = &head[name_start..];
+    if name.is_empty() || name.chars().next().is_some_and(|c| c.is_ascii_digit()) {
+        return None;
+    }
+    let before = &head[..name_start];
+    let before = before.strip_suffix("mut ").unwrap_or(before);
+    match before.strip_suffix("let ") {
+        // `let` must be its own token (`violet g = …` is not a binding).
+        Some(rest) if !rest.ends_with(is_ident_char) => Some(name.to_string()),
+        _ => None,
+    }
+}
+
+/// Scope end of a bound guard: the `}` that closes its enclosing block
+/// (brace-matched from just past the initializer) or an explicit
+/// `drop(name)`, whichever is first.
+fn bound_scope_end(col: &str, from: usize, name: &str) -> usize {
+    let mut brace_end = col.len();
+    let mut depth = 0i32;
+    for (i, c) in col.bytes().enumerate().skip(from) {
+        match c {
+            b'{' => depth += 1,
+            b'}' => {
+                depth -= 1;
+                if depth < 0 {
+                    brace_end = i;
+                    break;
+                }
+            }
+            _ => {}
+        }
+    }
+    let drop_tok = format!("drop({name})");
+    let drop_end = find_all(&col[from..], &drop_tok)
+        .into_iter()
+        .map(|p| from + p)
+        .find(|&p| !col[..p].ends_with(|c: char| is_ident_char(c)) && p < brace_end);
+    drop_end.unwrap_or(brace_end)
+}
+
+/// Scope end of a temporary guard: the `;` ending the enclosing
+/// statement (nesting-depth zero relative to the call). Conservative
+/// for guards inside `if`/`match` heads — the scope extends into the
+/// following block, which can only add edges, never hide one.
+fn stmt_end(col: &str, from: usize) -> usize {
+    let mut depth = 0i32;
+    for (i, c) in col.bytes().enumerate().skip(from) {
+        match c {
+            b'(' | b'[' | b'{' => depth += 1,
+            b')' | b']' => depth -= 1,
+            b'}' => {
+                depth -= 1;
+                if depth < 0 {
+                    return i;
+                }
+            }
+            b';' if depth == 0 => return i,
+            _ => {}
+        }
+    }
+    col.len()
+}
+
+#[derive(Debug, Clone)]
+struct Acq {
+    class: String,
+    line: usize,
+    pos: usize,
+    scope_end: usize,
+}
+
+#[derive(Debug, Clone)]
+struct CallSite {
+    entry: usize,
+    file: String,
+    func: String,
+    line: usize,
+    /// Classes held at the call, with the line each guard was taken.
+    held: Vec<(String, usize)>,
+}
+
+type FnKey = (String, String);
+
+/// Run the pass: extract sites, build the nesting graph, validate the
+/// call table, detect cycles. Appends findings; returns the summary.
+pub fn scan(units: &[SourceUnit], calls: &[CallEdge], findings: &mut Vec<Finding>) -> LockSummary {
+    let mut summary = LockSummary::default();
+    // Per-fn direct acquisitions: class → first (file, line) witness.
+    let mut direct: BTreeMap<FnKey, BTreeMap<String, (String, usize)>> = BTreeMap::new();
+    let mut defined: BTreeSet<FnKey> = BTreeSet::new();
+    let mut call_sites: Vec<CallSite> = Vec::new();
+    let mut token_found: BTreeSet<usize> = BTreeSet::new();
+
+    for unit in units.iter().filter(|u| in_scope(&u.label)) {
+        let stripped = strip_source(&unit.text);
+        let code: String = strip_tests(&stripped).to_string();
+        let stem = file_stem(&unit.label);
+        for sp in fn_spans(&code) {
+            defined.insert((unit.label.clone(), sp.name.clone()));
+            let body: String =
+                code.chars().skip(sp.body_start).take(sp.body_end - sp.body_start).collect();
+            let (col, lines) = collapse_tokens_from(&body, sp.body_line);
+            // Acquisition sites and their guard scopes.
+            let mut acqs: Vec<Acq> = Vec::new();
+            for p in find_all(&col, LOCK_TOKEN) {
+                if p > 0 && col[..p].ends_with(is_ident_char) {
+                    continue; // part of a longer identifier
+                }
+                let open = p + LOCK_TOKEN.len() - 1;
+                let close = match_paren(&col, open);
+                let class = format!("{stem}.{}", class_tail(&col[open + 1..close], &unit.label));
+                let scope_end = match binding_name(&col, p) {
+                    Some(name) => bound_scope_end(&col, close + 1, &name),
+                    None => stmt_end(&col, close + 1),
+                };
+                summary.classes.insert(class.clone());
+                acqs.push(Acq { class, line: lines[p], pos: p, scope_end });
+            }
+            summary.sites += acqs.len();
+            // Intra-function nesting edges.
+            for g in &acqs {
+                for a in &acqs {
+                    if a.pos > g.pos && a.pos < g.scope_end {
+                        summary.edges.push(NestEdge {
+                            from: g.class.clone(),
+                            to: a.class.clone(),
+                            witness: format!(
+                                "{}:{} (fn {}): acquires {} while holding {} (guard taken at line {})",
+                                unit.label, a.line, sp.name, a.class, g.class, g.line
+                            ),
+                        });
+                    }
+                }
+            }
+            // Table call sites in this function, with held guards.
+            for (ei, ce) in calls.iter().enumerate() {
+                if !unit.label.ends_with(ce.caller_file) || sp.name != ce.caller_fn {
+                    continue;
+                }
+                for p in find_all(&col, ce.token) {
+                    token_found.insert(ei);
+                    let held: Vec<(String, usize)> = acqs
+                        .iter()
+                        .filter(|g| g.pos < p && p < g.scope_end)
+                        .map(|g| (g.class.clone(), g.line))
+                        .collect();
+                    call_sites.push(CallSite {
+                        entry: ei,
+                        file: unit.label.clone(),
+                        func: sp.name.clone(),
+                        line: lines[p],
+                        held,
+                    });
+                }
+            }
+            // Direct-acquisition map for the transitive closure.
+            let key = (unit.label.clone(), sp.name.clone());
+            let entry = direct.entry(key).or_default();
+            for a in &acqs {
+                entry
+                    .entry(a.class.clone())
+                    .or_insert_with(|| (unit.label.clone(), a.line));
+            }
+        }
+    }
+
+    // Validate the hand-maintained table against the scanned tree.
+    let resolves = |file: &str, func: &str| {
+        defined.iter().any(|(label, name)| label.ends_with(file) && name == func)
+    };
+    for (ei, ce) in calls.iter().enumerate() {
+        let mut stale = Vec::new();
+        if !resolves(ce.caller_file, ce.caller_fn) {
+            stale.push(format!("caller fn {}::{} not found", ce.caller_file, ce.caller_fn));
+        }
+        if !resolves(ce.callee_file, ce.callee_fn) {
+            stale.push(format!("callee fn {}::{} not found", ce.callee_file, ce.callee_fn));
+        }
+        if stale.is_empty() && !token_found.contains(&ei) {
+            stale.push(format!(
+                "call token `{}` no longer appears in {}::{}",
+                ce.token, ce.caller_file, ce.caller_fn
+            ));
+        }
+        for why in stale {
+            findings.push(Finding {
+                pass: PASS,
+                rule: RULE_STALE,
+                file: ce.caller_file.to_string(),
+                line: 0,
+                detail: format!("CALL_SUMMARY entry is stale: {why} — update the table"),
+            });
+        }
+    }
+
+    // may-acquire(fn): direct acquisitions closed transitively over
+    // the call table (fixed point; the table is tiny).
+    let mut may = direct.clone();
+    loop {
+        let mut changed = false;
+        for ce in calls {
+            let callee_acqs: BTreeMap<String, (String, usize)> = may
+                .iter()
+                .filter(|((label, name), _)| label.ends_with(ce.callee_file) && name == ce.callee_fn)
+                .flat_map(|(_, m)| m.iter().map(|(k, v)| (k.clone(), v.clone())))
+                .collect();
+            if callee_acqs.is_empty() {
+                continue;
+            }
+            let caller_keys: Vec<FnKey> = defined
+                .iter()
+                .filter(|(label, name)| label.ends_with(ce.caller_file) && name == ce.caller_fn)
+                .cloned()
+                .collect();
+            for key in caller_keys {
+                let entry = may.entry(key).or_default();
+                for (class, site) in &callee_acqs {
+                    if !entry.contains_key(class) {
+                        entry.insert(class.clone(), site.clone());
+                        changed = true;
+                    }
+                }
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+
+    // Cross-function edges: held guards at a call site reach every
+    // class the callee may acquire.
+    for cs in &call_sites {
+        if cs.held.is_empty() {
+            continue;
+        }
+        let ce = &calls[cs.entry];
+        let callee_acqs: BTreeMap<String, (String, usize)> = may
+            .iter()
+            .filter(|((label, name), _)| label.ends_with(ce.callee_file) && name == ce.callee_fn)
+            .flat_map(|(_, m)| m.iter().map(|(k, v)| (k.clone(), v.clone())))
+            .collect();
+        for (held_class, held_line) in &cs.held {
+            for (to, (tf, tl)) in &callee_acqs {
+                summary.edges.push(NestEdge {
+                    from: held_class.clone(),
+                    to: to.clone(),
+                    witness: format!(
+                        "{}:{} (fn {}): calls {} (which may acquire {} at {}:{}) while holding {} (guard taken at line {})",
+                        cs.file, cs.line, cs.func, ce.callee_fn, to, tf, tl, held_class, held_line
+                    ),
+                });
+            }
+        }
+    }
+
+    // Cycle detection over the class graph, witnesses attached.
+    report_cycles(&summary, findings);
+    summary
+}
+
+/// Peel away every node that cannot sit on a cycle (no predecessor or
+/// no successor inside the remainder); walk what survives until a
+/// node repeats, and report that cycle with every edge's witness.
+fn report_cycles(summary: &LockSummary, findings: &mut Vec<Finding>) {
+    let mut adj: BTreeMap<&str, BTreeSet<&str>> = BTreeMap::new();
+    let mut witness: BTreeMap<(&str, &str), &str> = BTreeMap::new();
+    let mut left: BTreeSet<&str> = BTreeSet::new();
+    for e in &summary.edges {
+        adj.entry(&e.from).or_default().insert(&e.to);
+        witness.entry((&e.from, &e.to)).or_insert(&e.witness);
+        left.insert(&e.from);
+        left.insert(&e.to);
+    }
+    loop {
+        let peel: Vec<&str> = left
+            .iter()
+            .filter(|&&n| {
+                let has_succ =
+                    adj.get(n).is_some_and(|ts| ts.iter().any(|t| left.contains(t)));
+                let has_pred = left
+                    .iter()
+                    .any(|&p| adj.get(p).is_some_and(|ts| ts.contains(n)));
+                !has_succ || !has_pred
+            })
+            .copied()
+            .collect();
+        if peel.is_empty() {
+            break;
+        }
+        for n in peel {
+            left.remove(n);
+        }
+    }
+    if left.is_empty() {
+        return;
+    }
+    // Every surviving node has a surviving successor, so the walk must
+    // revisit a node — that repeat is a concrete cycle.
+    let start = *left.iter().next().expect("non-empty leftover");
+    let mut path: Vec<&str> = vec![start];
+    let mut seen: BTreeMap<&str, usize> = BTreeMap::new();
+    seen.insert(start, 0);
+    let cycle: Vec<&str> = loop {
+        let cur = *path.last().expect("non-empty path");
+        let next = adj
+            .get(cur)
+            .into_iter()
+            .flatten()
+            .find(|t| left.contains(**t))
+            .copied()
+            .expect("surviving node keeps a surviving successor");
+        if let Some(&i) = seen.get(next) {
+            let mut c: Vec<&str> = path[i..].to_vec();
+            c.push(next);
+            break c;
+        }
+        seen.insert(next, path.len());
+        path.push(next);
+    };
+    let mut detail = format!("lock-order cycle: {}", cycle.join(" -> "));
+    for pair in cycle.windows(2) {
+        let w = witness.get(&(pair[0], pair[1])).expect("cycle edge has a witness");
+        detail.push_str("; ");
+        detail.push_str(w);
+    }
+    let first_witness = witness
+        .get(&(cycle[0], cycle[1]))
+        .expect("cycle edge has a witness");
+    let file = first_witness.split(':').next().unwrap_or("").to_string();
+    let line = first_witness
+        .split(':')
+        .nth(1)
+        .and_then(|s| s.split(' ').next())
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0);
+    findings.push(Finding { pass: PASS, rule: RULE_CYCLE, file, line, detail });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn class_tails_extract_field_paths() {
+        assert_eq!(class_tail("&self.shards[idx].inner", "x"), "inner");
+        assert_eq!(class_tail("&shard.inner", "x"), "inner");
+        assert_eq!(class_tail("&self.generation", "x"), "generation");
+        assert_eq!(class_tail("&self.shards[shard_idx]", "x"), "shards");
+        assert_eq!(class_tail("shard", "src/serving/actcache.rs"), "shards");
+        assert_eq!(class_tail("s", "x"), "s");
+    }
+
+    #[test]
+    fn binding_vs_temporary_detection() {
+        let (col, _) = collapse_tokens_from("let mut g = lock_unpoisoned(&m);", 1);
+        let p = col.find(LOCK_TOKEN).unwrap();
+        assert_eq!(binding_name(&col, p), Some("g".to_string()));
+        let (col, _) = collapse_tokens_from("let v = *lock_unpoisoned(&m);", 1);
+        let p = col.find(LOCK_TOKEN).unwrap();
+        assert_eq!(binding_name(&col, p), None, "deref copies the value, no guard binding");
+        let (col, _) = collapse_tokens_from("take(&mut *lock_unpoisoned(&m));", 1);
+        let p = col.find(LOCK_TOKEN).unwrap();
+        assert_eq!(binding_name(&col, p), None);
+    }
+
+    #[test]
+    fn bound_scope_ends_at_block_or_drop() {
+        let src = "{ let g = lock_unpoisoned(&m); touch(); } after();";
+        let (col, _) = collapse_tokens_from(src, 1);
+        let p = col.find(LOCK_TOKEN).unwrap();
+        let close = match_paren(&col, p + LOCK_TOKEN.len() - 1);
+        let end = bound_scope_end(&col, close + 1, "g");
+        assert!(col[..end].contains("touch"));
+        assert!(!col[..end].contains("after"));
+
+        let src = "let g = lock_unpoisoned(&m); touch(); drop(g); after();";
+        let (col, _) = collapse_tokens_from(src, 1);
+        let p = col.find(LOCK_TOKEN).unwrap();
+        let close = match_paren(&col, p + LOCK_TOKEN.len() - 1);
+        let end = bound_scope_end(&col, close + 1, "g");
+        assert!(col[..end].contains("touch"));
+        assert!(!col[..end].contains("after"));
+    }
+
+    #[test]
+    fn nested_acquire_produces_edge_and_cycle_is_named() {
+        let a = SourceUnit {
+            label: "src/coordinator/aa.rs".to_string(),
+            text: "impl X { fn f(&self) { let g = lock_unpoisoned(&self.one); let h = lock_unpoisoned(&self.two); } \
+                   fn r(&self) { let g = lock_unpoisoned(&self.two); let h = lock_unpoisoned(&self.one); } }"
+                .to_string(),
+        };
+        let mut findings = Vec::new();
+        let summary = scan(&[a], &[], &mut findings);
+        assert_eq!(summary.sites, 4);
+        assert_eq!(summary.edges.len(), 2);
+        assert_eq!(findings.len(), 1, "{findings:?}");
+        let f = &findings[0];
+        assert_eq!(f.rule, RULE_CYCLE);
+        assert!(f.detail.contains("aa.one -> aa.two") || f.detail.contains("aa.two -> aa.one"));
+        assert!(f.detail.contains("while holding"), "witness paths attached: {}", f.detail);
+    }
+
+    #[test]
+    fn explicit_drop_breaks_the_hold() {
+        let a = SourceUnit {
+            label: "src/coordinator/bb.rs".to_string(),
+            text: "fn f() { let g = lock_unpoisoned(&one); drop(g); let h = lock_unpoisoned(&two); }"
+                .to_string(),
+        };
+        let mut findings = Vec::new();
+        let summary = scan(&[a], &[], &mut findings);
+        assert_eq!(summary.sites, 2);
+        assert!(summary.edges.is_empty(), "{:?}", summary.edges);
+        assert!(findings.is_empty());
+    }
+
+    #[test]
+    fn stale_call_table_entries_are_reported() {
+        let a = SourceUnit {
+            label: "src/coordinator/cc.rs".to_string(),
+            text: "impl C { fn f(&self) { self.g(); } fn g(&self) {} }".to_string(),
+        };
+        let gone = edge("src/coordinator/cc.rs", "vanished", "self.g(", "src/coordinator/cc.rs", "g");
+        let token_rot =
+            edge("src/coordinator/cc.rs", "f", "self.renamed(", "src/coordinator/cc.rs", "g");
+        let mut findings = Vec::new();
+        scan(&[a], &[gone, token_rot], &mut findings);
+        assert_eq!(findings.len(), 2, "{findings:?}");
+        assert!(findings.iter().all(|f| f.rule == RULE_STALE));
+        assert!(findings.iter().any(|f| f.detail.contains("vanished")));
+        assert!(findings.iter().any(|f| f.detail.contains("self.renamed(")));
+    }
+
+    #[test]
+    fn cross_function_hold_uses_call_table() {
+        let a = SourceUnit {
+            label: "src/coordinator/dd.rs".to_string(),
+            text: "impl D { fn outer(&self) { let g = lock_unpoisoned(&self.alpha); self.inner_fn(); } \
+                   fn inner_fn(&self) { let h = lock_unpoisoned(&self.beta); } }"
+                .to_string(),
+        };
+        let table =
+            [edge("src/coordinator/dd.rs", "outer", "self.inner_fn(", "src/coordinator/dd.rs", "inner_fn")];
+        let mut findings = Vec::new();
+        let summary = scan(&[a], &table, &mut findings);
+        assert!(findings.is_empty(), "{findings:?}");
+        assert!(
+            summary.edges.iter().any(|e| e.from == "dd.alpha" && e.to == "dd.beta"),
+            "{:?}",
+            summary.edges
+        );
+    }
+}

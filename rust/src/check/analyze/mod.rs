@@ -1,0 +1,217 @@
+//! `dip analyze` — a multi-pass whole-program static analyzer for the
+//! serving pipeline, run as a CLI gate, a tier-1 test, and a CI step.
+//!
+//! Three passes, each proving one property the threaded tests can only
+//! sample:
+//!
+//! * **[`locks`] — deadlock freedom.** Token-level intra-procedural
+//!   analysis of every `lock_unpoisoned` site under `coordinator/`,
+//!   `serving/`, and `sync.rs`: guard bindings get brace-matched
+//!   scopes, bare calls get temporary-drop scopes, and a hand-written
+//!   call-edge summary table ([`locks::CALL_SUMMARY`]) carries holds
+//!   across function boundaries (`Coordinator::submit_*` → queue →
+//!   placement, worker drain → device → request state). The result is
+//!   the may-hold-while-acquiring graph over lock *classes*
+//!   (`file-stem.field`); any cycle is reported with the witnessing
+//!   source path of every edge on it.
+//! * **[`ranges`] — overflow soundness.** Abstract interpretation over
+//!   the Table-III stage graph ([`crate::serving::graph::layer_graph`]):
+//!   i8 operand intervals are pushed through each GEMM's accumulation
+//!   at its contraction depth
+//!   ([`crate::serving::graph::StageNode::reduction_depth`]), proving
+//!   every i32 accumulator stays in range and deriving the
+//!   `max_safe_seq_len` each supported model config can serve — the
+//!   same bound [`crate::serving::Session`] enforces at runtime.
+//! * **[`blocking`] — hot-region hygiene.** A generalization of the
+//!   kernel allocation lint: declared hot regions
+//!   ([`blocking::HOT_REGIONS`] — the GEMM microkernel and the worker
+//!   drain loop) must contain no blocking calls, and the kernel
+//!   regions no allocations either.
+//!
+//! Each pass is exercised against a seeded mutant
+//! ([`mutants`]) proving the detector has teeth: a lock-inversion
+//! shim must produce a named cycle, an oversized-FFN config a named
+//! overflow, a sleeping kernel a named blocking call.
+//!
+//! **Out of scope** (documented, deliberate): no alias analysis — lock
+//! classes are named by field path, so two `Mutex`es reached through
+//! different field names are different classes and one `Mutex` reached
+//! through two names would be two (neither occurs in-tree); the
+//! call-edge table is hand-maintained, with staleness findings
+//! (missing function, missing call token) keeping it honest; guard
+//! scopes are textual (brace-matched), not control-flow-sensitive.
+
+pub mod blocking;
+pub mod locks;
+#[cfg(test)]
+pub mod mutants;
+pub mod ranges;
+
+use std::fmt;
+
+use super::source::{read_tree_units, SourceUnit};
+use crate::jsonio::Json;
+
+/// One analyzer finding. An empty finding list is the contract `dip
+/// analyze` gates on.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// Which pass produced it: `lock-order`, `value-range`, or
+    /// `hot-region`.
+    pub pass: &'static str,
+    pub rule: &'static str,
+    pub file: String,
+    pub line: usize,
+    pub detail: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[{}/{}] {}:{}: {}", self.pass, self.rule, self.file, self.line, self.detail)
+    }
+}
+
+/// The full analyzer output: findings plus the per-pass summaries that
+/// render into `analysis.json` (the machine-readable safety contract
+/// CI archives next to the BENCH files).
+#[derive(Debug, Clone)]
+pub struct AnalysisReport {
+    pub findings: Vec<Finding>,
+    pub locks: locks::LockSummary,
+    pub ranges: ranges::RangeSummary,
+    pub regions: blocking::RegionSummary,
+}
+
+impl AnalysisReport {
+    pub fn is_clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("clean", Json::Bool(self.is_clean())),
+            (
+                "findings",
+                Json::Arr(
+                    self.findings
+                        .iter()
+                        .map(|f| {
+                            Json::obj(vec![
+                                ("pass", Json::str(f.pass)),
+                                ("rule", Json::str(f.rule)),
+                                ("file", Json::str(f.file.clone())),
+                                ("line", Json::num(f.line as f64)),
+                                ("detail", Json::str(f.detail.clone())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("lock_order", self.locks.to_json()),
+            ("value_range", self.ranges.to_json()),
+            ("hot_regions", self.regions.to_json()),
+        ])
+    }
+}
+
+/// Analyze this crate's `src/` tree with the shipped call table,
+/// config set, and hot-region table — what `dip analyze`, the tier-1
+/// test, and CI all run.
+pub fn analyze_tree() -> AnalysisReport {
+    analyze_units(
+        &read_tree_units(),
+        locks::CALL_SUMMARY,
+        &ranges::builtin_configs(),
+        blocking::HOT_REGIONS,
+    )
+}
+
+/// Analyze an explicit unit set / call table / config set / region
+/// table — the parameterized core, which the mutant tests drive with
+/// seeded-defect inputs.
+pub fn analyze_units(
+    units: &[SourceUnit],
+    calls: &[locks::CallEdge],
+    configs: &[ranges::RangeConfig],
+    regions: &[blocking::HotRegion],
+) -> AnalysisReport {
+    let mut findings = Vec::new();
+    let locks = locks::scan(units, calls, &mut findings);
+    let ranges = ranges::scan(configs, &mut findings);
+    let regions = blocking::scan(units, regions, &mut findings);
+    AnalysisReport { findings, locks, ranges, regions }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Tier-1 gate: the shipped tree analyzes clean, and the lock pass
+    /// sees exactly the nesting the code actually has — proof the
+    /// scanner is looking at real sites, not vacuously passing.
+    #[test]
+    fn shipped_tree_analyzes_clean() {
+        let report = analyze_tree();
+        assert!(
+            report.is_clean(),
+            "analyzer found defects in the shipped tree:\n{}",
+            report
+                .findings
+                .iter()
+                .map(|f| f.to_string())
+                .collect::<Vec<_>>()
+                .join("\n")
+        );
+        // The only guard nesting in-tree is ReqState::finish holding
+        // `out` across the `stats` and `subs` snapshots.
+        let mut nested: Vec<(String, String)> = report
+            .locks
+            .edges
+            .iter()
+            .map(|e| (e.from.clone(), e.to.clone()))
+            .collect();
+        nested.sort();
+        nested.dedup();
+        assert_eq!(
+            nested,
+            vec![
+                ("state.out".to_string(), "state.stats".to_string()),
+                ("state.out".to_string(), "state.subs".to_string()),
+            ],
+            "nesting ground truth drifted — update this pin *and* re-audit the lock order"
+        );
+        assert!(report.locks.sites >= 22, "lock-site extraction collapsed: {}", report.locks.sites);
+        assert!(report.locks.classes.len() >= 9, "lock classes: {:?}", report.locks.classes);
+        // Every supported config proves the same bound the runtime
+        // guard enforces.
+        assert!(!report.ranges.configs.is_empty());
+        for cfg in &report.ranges.configs {
+            assert_eq!(
+                cfg.max_safe_seq_len,
+                ranges::max_safe_seq_len(&cfg.dims),
+                "report / runtime bound mismatch for {}",
+                cfg.name
+            );
+            assert!(cfg.max_safe_seq_len > 0, "{} proves no safe seq len", cfg.name);
+        }
+        assert_eq!(report.regions.regions.len(), blocking::HOT_REGIONS.len());
+    }
+
+    #[test]
+    fn report_json_round_trips() {
+        let report = analyze_tree();
+        let rendered = report.to_json().render();
+        let parsed = Json::parse(&rendered).expect("analysis.json parses");
+        assert_eq!(parsed.get("clean"), Some(&Json::Bool(true)));
+        let cfgs = parsed
+            .get("value_range")
+            .and_then(|v| v.get("configs"))
+            .and_then(Json::as_arr)
+            .expect("configs array");
+        assert_eq!(cfgs.len(), report.ranges.configs.len());
+        for c in cfgs {
+            let msl = c.get("max_safe_seq_len").and_then(Json::as_f64).expect("msl");
+            assert!(msl >= 1.0);
+        }
+    }
+}

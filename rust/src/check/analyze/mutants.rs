@@ -1,0 +1,213 @@
+//! Seeded analyzer mutants — the mutation smoke for `dip analyze`,
+//! following the `QueueDefect` / `DeviceDefect` idiom: each pass is
+//! proven to have teeth by a repo-shaped defect it must catch **by
+//! name**, with a source-path witness. The mutants are synthetic
+//! [`SourceUnit`]s / configs / regions injected only by tests — the
+//! shipped tree never contains them.
+
+use super::super::source::SourceUnit;
+use super::blocking::HotRegion;
+use super::locks::CallEdge;
+use super::ranges::RangeConfig;
+use crate::serving::graph::LayerDims;
+
+/// Label of the lock-inversion mutant unit — shaped like a real
+/// coordinator file so the lock pass scans it.
+pub const LOCK_INVERSION_LABEL: &str = "src/coordinator/lock_inversion_mutant.rs";
+
+/// A queue whose `push` holds its shard guard across the generation
+/// bump while `pop` holds the generation guard across the shard scan —
+/// the classic two-lock inversion, inverted relative to the real
+/// queue's drop-before-bump discipline.
+pub const LOCK_INVERSION: &str = r#"
+pub struct MutantQueue {
+    inner: Mutex<usize>,
+    generation: Mutex<u64>,
+}
+
+impl MutantQueue {
+    pub fn push(&self) {
+        let mut inner = lock_unpoisoned(&self.inner);
+        *inner += 1;
+        self.bump();
+    }
+
+    pub fn pop(&self) -> u64 {
+        let gen = lock_unpoisoned(&self.generation);
+        self.scan();
+        *gen
+    }
+
+    fn bump(&self) {
+        let mut gen = lock_unpoisoned(&self.generation);
+        *gen += 1;
+    }
+
+    fn scan(&self) {
+        let inner = lock_unpoisoned(&self.inner);
+        let _ = *inner;
+    }
+}
+"#;
+
+/// Call edges for the mutant's `push → bump` / `pop → scan` holds.
+pub const LOCK_INVERSION_CALLS: &[CallEdge] = &[
+    CallEdge {
+        caller_file: LOCK_INVERSION_LABEL,
+        caller_fn: "push",
+        token: "self.bump(",
+        callee_file: LOCK_INVERSION_LABEL,
+        callee_fn: "bump",
+    },
+    CallEdge {
+        caller_file: LOCK_INVERSION_LABEL,
+        caller_fn: "pop",
+        token: "self.scan(",
+        callee_file: LOCK_INVERSION_LABEL,
+        callee_fn: "scan",
+    },
+];
+
+/// The lock-inversion mutant as an injectable unit.
+pub fn lock_inversion_unit() -> SourceUnit {
+    SourceUnit { label: LOCK_INVERSION_LABEL.to_string(), text: LOCK_INVERSION.to_string() }
+}
+
+/// A config whose FFN contraction is deeper than any i8×i8 stage can
+/// safely accumulate in i32 (`140_000 · 16384 > 2³¹−1`): the range
+/// pass must prove it has **no** safe sequence length and name the
+/// `FfnDown` stage.
+pub fn overflow_config() -> RangeConfig {
+    RangeConfig {
+        name: "overflow-mutant".to_string(),
+        dims: LayerDims { d_model: 64, d_k: 64, d_ffn: 140_000 },
+    }
+}
+
+/// Label of the hot-region mutant unit.
+pub const BLOCKING_LABEL: &str = "src/arch/kernel_hot_mutant.rs";
+
+/// A "kernel" that allocates scratch and sleeps — both forbidden on
+/// the per-job hot path.
+pub const BLOCKING: &str = r#"
+pub fn gemm_hot(out: &mut [i32]) {
+    let scratch = vec![0i32; 64];
+    std::thread::sleep(std::time::Duration::from_millis(1));
+    out[0] = scratch[0];
+}
+"#;
+
+/// Region entry declaring the mutant function hot.
+pub const BLOCKING_REGION: HotRegion = HotRegion {
+    file: BLOCKING_LABEL,
+    func: "gemm_hot",
+    forbid_alloc: true,
+    why: "seeded hot-region mutant",
+};
+
+/// The hot-region mutant as an injectable unit.
+pub fn blocking_unit() -> SourceUnit {
+    SourceUnit { label: BLOCKING_LABEL.to_string(), text: BLOCKING.to_string() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{analyze_tree, analyze_units, blocking, locks, ranges};
+    use super::*;
+    use crate::check::source::read_tree_units;
+
+    /// The seeded lock inversion is caught by name, with both
+    /// witnessing source paths on the reported cycle — on top of the
+    /// otherwise-clean real tree.
+    #[test]
+    fn lock_inversion_mutant_is_caught_by_name() {
+        let mut units = read_tree_units();
+        units.push(lock_inversion_unit());
+        let mut calls = locks::CALL_SUMMARY.to_vec();
+        calls.extend_from_slice(LOCK_INVERSION_CALLS);
+        let report =
+            analyze_units(&units, &calls, &ranges::builtin_configs(), blocking::HOT_REGIONS);
+        let cycles: Vec<_> =
+            report.findings.iter().filter(|f| f.rule == locks::RULE_CYCLE).collect();
+        assert_eq!(cycles.len(), 1, "{:?}", report.findings);
+        let f = cycles[0];
+        assert!(
+            f.detail.contains("lock_inversion_mutant.inner")
+                && f.detail.contains("lock_inversion_mutant.generation"),
+            "cycle names the mutant classes: {}",
+            f.detail
+        );
+        // Two witnessing source paths: one per direction of the hold.
+        assert!(f.detail.contains("fn push") && f.detail.contains("fn pop"), "{}", f.detail);
+        assert_eq!(f.detail.matches("while holding").count(), 2, "{}", f.detail);
+        assert!(f.file.contains("lock_inversion_mutant"), "witness anchors the mutant file");
+        // No collateral findings: the real tree stays clean around it.
+        assert!(
+            report.findings.iter().all(|x| x.rule == locks::RULE_CYCLE),
+            "{:?}",
+            report.findings
+        );
+    }
+
+    /// The oversized-FFN config is caught by name: `FfnDown` at its
+    /// depth, with the offending interval as witness.
+    #[test]
+    fn overflow_mutant_is_caught_by_name() {
+        let mut configs = ranges::builtin_configs();
+        configs.push(overflow_config());
+        let report =
+            analyze_units(&read_tree_units(), locks::CALL_SUMMARY, &configs, blocking::HOT_REGIONS);
+        let hits: Vec<_> =
+            report.findings.iter().filter(|f| f.rule == ranges::RULE_OVERFLOW).collect();
+        assert_eq!(hits.len(), 1, "{:?}", report.findings);
+        let f = hits[0];
+        assert!(f.detail.contains("overflow-mutant"), "{}", f.detail);
+        assert!(f.detail.contains("FfnDown"), "{}", f.detail);
+        assert!(f.detail.contains("140000") || f.detail.contains("140_000"), "{}", f.detail);
+        // The mutant config reports no safe sequence length.
+        let cfg = report
+            .ranges
+            .configs
+            .iter()
+            .find(|c| c.name == "overflow-mutant")
+            .expect("mutant config analyzed");
+        assert_eq!(cfg.max_safe_seq_len, 0);
+    }
+
+    /// The sleeping, allocating kernel mutant trips both hot-region
+    /// rules.
+    #[test]
+    fn blocking_mutant_is_caught_by_name() {
+        let mut units = read_tree_units();
+        units.push(blocking_unit());
+        let mut regions = blocking::HOT_REGIONS.to_vec();
+        regions.push(BLOCKING_REGION);
+        let report =
+            analyze_units(&units, locks::CALL_SUMMARY, &ranges::builtin_configs(), &regions);
+        assert!(
+            report
+                .findings
+                .iter()
+                .any(|f| f.rule == blocking::RULE_BLOCKING
+                    && f.detail.contains("thread::sleep")
+                    && f.detail.contains("gemm_hot")),
+            "{:?}",
+            report.findings
+        );
+        assert!(
+            report
+                .findings
+                .iter()
+                .any(|f| f.rule == blocking::RULE_ALLOC && f.detail.contains("gemm_hot")),
+            "{:?}",
+            report.findings
+        );
+    }
+
+    /// Sanity: without any mutant, the same harness is clean — the
+    /// mutant tests above fail *because of* the seeds, nothing else.
+    #[test]
+    fn harness_is_clean_without_seeds() {
+        assert!(analyze_tree().is_clean());
+    }
+}

@@ -1,0 +1,363 @@
+//! Pass 2 — **value-range overflow soundness**.
+//!
+//! The serving pipeline quantizes every operand to i8 and accumulates
+//! each GEMM stage in i32
+//! ([`crate::serving::graph::layer_graph`]). This pass is a tiny
+//! abstract interpreter over that stage graph: operands are intervals,
+//! a GEMM's output interval is the product hull of its operand
+//! intervals summed over the stage's contraction depth
+//! ([`crate::serving::graph::StageNode::reduction_depth`]), and the
+//! proof obligation is that every stage's accumulator interval fits
+//! i32.
+//!
+//! Two structural facts make the per-stage analysis compose:
+//!
+//! * the `narrow` requant (`>> 8`, then truncate to i8) sits between
+//!   stages, so every stage's operands are full-range i8 regardless of
+//!   what the previous stage produced — each stage re-proves from
+//!   `[-128, 127]`;
+//! * `mask_causal` only *zeroes* finished i32 entries, and `0` is
+//!   already inside every accumulator interval, so masking never
+//!   widens anything.
+//!
+//! With i8×i8 products in `[-128·127, -128·-128] = [-16256, 16384]`,
+//! the positive endpoint binds and the deepest safe contraction is
+//! `⌊(2³¹−1) / 16384⌋ = 131071`. Stages contracting over a model
+//! dimension (`d_model`, `d_k`, `d_ffn`) are fixed-depth — safe or
+//! not, independent of serving. The attention **Context** stage
+//! (`S · V`) contracts over the session's accumulated sequence length,
+//! which grows every decode step, so the bound becomes the derived
+//! **`max_safe_seq_len`** — emitted per supported model config into
+//! `analysis.json` and enforced at runtime by
+//! [`crate::serving::Session`] (the same function,
+//! [`max_safe_seq_len`], feeds both, so report and guard cannot
+//! drift).
+//!
+//! Note the issue text's "scores accumulate over seq_len" is the
+//! wrong axis: **Scores** (`Q · Kᵀ`) *produces* a seq-wide matrix but
+//! *contracts* over `d_k`; it is Context that contracts over the
+//! sequence. The pass proves the sound version.
+//!
+//! The precision-polymorphism roadmap item (ADiP-style per-layer i4 /
+//! i8 / i16) must extend this pass by widening the operand intervals
+//! per stage — [`max_safe_depth`] is already generic over operand
+//! intervals for exactly that reason.
+
+use crate::serving::graph::{layer_graph, LayerDims};
+use crate::workloads::models::MODELS;
+
+use super::Finding;
+
+pub const PASS: &str = "value-range";
+pub const RULE_OVERFLOW: &str = "value-range-overflow";
+
+/// A closed integer interval, wide enough (i128) that no transfer
+/// function here can itself overflow.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Interval {
+    pub lo: i128,
+    pub hi: i128,
+}
+
+impl Interval {
+    /// The full i8 operand range every quantized stage starts from.
+    pub const I8: Interval = Interval { lo: i8::MIN as i128, hi: i8::MAX as i128 };
+
+    pub fn point(v: i128) -> Interval {
+        Interval { lo: v, hi: v }
+    }
+
+    /// Smallest interval containing both — how `mask_causal`'s zeroing
+    /// enters (a no-op, since every accumulator interval straddles 0).
+    pub fn hull(self, other: Interval) -> Interval {
+        Interval { lo: self.lo.min(other.lo), hi: self.hi.max(other.hi) }
+    }
+
+    /// Exact product range: extrema live at endpoint products.
+    pub fn product(self, other: Interval) -> Interval {
+        let c = [self.lo * other.lo, self.lo * other.hi, self.hi * other.lo, self.hi * other.hi];
+        Interval {
+            lo: *c.iter().min().expect("four candidates"),
+            hi: *c.iter().max().expect("four candidates"),
+        }
+    }
+
+    /// Sum of `n` independent values drawn from this interval.
+    pub fn sum_n(self, n: u64) -> Interval {
+        Interval { lo: self.lo * n as i128, hi: self.hi * n as i128 }
+    }
+
+    pub fn fits_i32(self) -> bool {
+        self.lo >= i32::MIN as i128 && self.hi <= i32::MAX as i128
+    }
+
+    pub fn contains(self, v: i64) -> bool {
+        self.lo <= v as i128 && v as i128 <= self.hi
+    }
+}
+
+/// Accumulator interval of a depth-`depth` dot product with operands
+/// `x` and `w` — the GEMM transfer function.
+pub fn accumulator(x: Interval, w: Interval, depth: u64) -> Interval {
+    x.product(w).sum_n(depth)
+}
+
+/// Largest contraction depth whose accumulator still fits i32 —
+/// generic over operand intervals so the precision-polymorphism work
+/// (i4/i16 operands) reuses it unchanged. For i8×i8 this is
+/// `⌊(2³¹−1)/16384⌋ = 131071`.
+pub fn max_safe_depth(x: Interval, w: Interval) -> u64 {
+    let p = x.product(w);
+    let mut d = u64::MAX;
+    if p.hi > 0 {
+        d = d.min((i32::MAX as i128 / p.hi) as u64);
+    }
+    if p.lo < 0 {
+        d = d.min((i32::MIN as i128 / p.lo) as u64);
+    }
+    d
+}
+
+/// Accumulator interval of one stage at a given accumulated sequence
+/// length (post-`mask_causal`, which can only re-hull in `0`).
+pub fn stage_interval(
+    node: &crate::serving::graph::StageNode,
+    dims: &LayerDims,
+    seq_len: usize,
+) -> Interval {
+    let acc = accumulator(Interval::I8, Interval::I8, node.reduction_depth(dims, seq_len) as u64);
+    if node.causal {
+        acc.hull(Interval::point(0))
+    } else {
+        acc
+    }
+}
+
+/// True iff every stage's accumulator fits i32 at sequence length `s`.
+fn all_stages_fit(dims: &LayerDims, s: usize) -> bool {
+    layer_graph().iter().all(|n| stage_interval(n, dims, s).fits_i32())
+}
+
+/// The largest sequence length (accumulated session rows) at which
+/// every stage of the layer graph provably fits its i32 accumulator —
+/// 0 when a fixed-depth stage already overflows. This is the single
+/// source of truth: [`crate::serving::Session`]'s runtime guard and
+/// the `analysis.json` report both call it.
+pub fn max_safe_seq_len(dims: &LayerDims) -> usize {
+    // No i8×i8 stage can be safe contracting deeper than this, and the
+    // Context stage contracts over exactly the sequence length, so the
+    // answer lies in [0, cap]. Depth is monotone in seq — binary
+    // search for the largest fitting length.
+    let cap = max_safe_depth(Interval::I8, Interval::I8) as usize;
+    if !all_stages_fit(dims, 0) {
+        return 0;
+    }
+    let (mut lo, mut hi) = (0usize, cap);
+    while lo < hi {
+        let mid = lo + (hi - lo).div_ceil(2);
+        if all_stages_fit(dims, mid) {
+            lo = mid;
+        } else {
+            hi = mid - 1;
+        }
+    }
+    lo
+}
+
+/// One analyzed model configuration.
+#[derive(Debug, Clone)]
+pub struct RangeConfig {
+    pub name: String,
+    pub dims: LayerDims,
+}
+
+/// The supported config set: every model in the workload table,
+/// analyzed at its Table-III single-head-group dims.
+pub fn builtin_configs() -> Vec<RangeConfig> {
+    MODELS
+        .iter()
+        .map(|m| RangeConfig {
+            name: m.name.to_string(),
+            dims: LayerDims {
+                d_model: m.d_model as usize,
+                d_k: m.d_k as usize,
+                d_ffn: m.d_ffn as usize,
+            },
+        })
+        .collect()
+}
+
+/// Per-stage interval at the proven bound, for the report.
+#[derive(Debug, Clone)]
+pub struct StageRange {
+    pub stage: String,
+    pub depth: u64,
+    pub lo: i128,
+    pub hi: i128,
+}
+
+/// One config's proof: the derived bound plus each stage's interval
+/// evaluated *at* that bound.
+#[derive(Debug, Clone)]
+pub struct ConfigRange {
+    pub name: String,
+    pub dims: LayerDims,
+    pub max_safe_seq_len: usize,
+    pub stages: Vec<StageRange>,
+}
+
+/// Range-pass summary for `analysis.json`.
+#[derive(Debug, Clone, Default)]
+pub struct RangeSummary {
+    pub configs: Vec<ConfigRange>,
+}
+
+impl RangeSummary {
+    pub fn to_json(&self) -> crate::jsonio::Json {
+        use crate::jsonio::Json;
+        Json::obj(vec![(
+            "configs",
+            Json::Arr(
+                self.configs
+                    .iter()
+                    .map(|c| {
+                        Json::obj(vec![
+                            ("config", Json::str(c.name.clone())),
+                            ("d_model", Json::num(c.dims.d_model as f64)),
+                            ("d_k", Json::num(c.dims.d_k as f64)),
+                            ("d_ffn", Json::num(c.dims.d_ffn as f64)),
+                            ("max_safe_seq_len", Json::num(c.max_safe_seq_len as f64)),
+                            (
+                                "stages",
+                                Json::Arr(
+                                    c.stages
+                                        .iter()
+                                        .map(|s| {
+                                            Json::obj(vec![
+                                                ("stage", Json::str(s.stage.clone())),
+                                                ("depth", Json::num(s.depth as f64)),
+                                                ("lo", Json::num(s.lo as f64)),
+                                                ("hi", Json::num(s.hi as f64)),
+                                            ])
+                                        })
+                                        .collect(),
+                                ),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        )])
+    }
+}
+
+/// Run the pass over `configs`: derive each bound, emit findings for
+/// configs with no safe sequence length (a fixed-depth stage already
+/// overflows), and record every stage's interval at the bound.
+pub fn scan(configs: &[RangeConfig], findings: &mut Vec<Finding>) -> RangeSummary {
+    let mut summary = RangeSummary::default();
+    for cfg in configs {
+        let msl = max_safe_seq_len(&cfg.dims);
+        // Report stages at the proven bound (or at seq 1 when nothing
+        // is safe, to show the offending interval).
+        let report_seq = msl.max(1);
+        let stages: Vec<StageRange> = layer_graph()
+            .iter()
+            .map(|n| {
+                let iv = stage_interval(n, &cfg.dims, report_seq);
+                StageRange {
+                    stage: format!("{:?}", n.id),
+                    depth: n.reduction_depth(&cfg.dims, report_seq) as u64,
+                    lo: iv.lo,
+                    hi: iv.hi,
+                }
+            })
+            .collect();
+        if msl == 0 {
+            for s in stages.iter().filter(|s| {
+                !(Interval { lo: s.lo, hi: s.hi }).fits_i32()
+            }) {
+                findings.push(Finding {
+                    pass: PASS,
+                    rule: RULE_OVERFLOW,
+                    file: "src/serving/graph.rs".to_string(),
+                    line: 0,
+                    detail: format!(
+                        "config {}: stage {} i32 accumulator spans [{}, {}] at contraction depth {} \
+                         (dims d_model={} d_k={} d_ffn={}) — exceeds i32 at every sequence length",
+                        cfg.name,
+                        s.stage,
+                        s.lo,
+                        s.hi,
+                        s.depth,
+                        cfg.dims.d_model,
+                        cfg.dims.d_k,
+                        cfg.dims.d_ffn
+                    ),
+                });
+            }
+        }
+        summary.configs.push(ConfigRange {
+            name: cfg.name.clone(),
+            dims: cfg.dims,
+            max_safe_seq_len: msl,
+            stages,
+        });
+    }
+    summary
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn i8_product_and_depth_bound() {
+        let p = Interval::I8.product(Interval::I8);
+        assert_eq!((p.lo, p.hi), (-16256, 16384));
+        assert_eq!(max_safe_depth(Interval::I8, Interval::I8), 131_071);
+        // The positive endpoint binds: one more step overflows.
+        assert!(accumulator(Interval::I8, Interval::I8, 131_071).fits_i32());
+        assert!(!accumulator(Interval::I8, Interval::I8, 131_072).fits_i32());
+    }
+
+    #[test]
+    fn every_builtin_config_proves_the_full_bound() {
+        for cfg in builtin_configs() {
+            assert_eq!(
+                max_safe_seq_len(&cfg.dims),
+                131_071,
+                "{}: fixed-depth stages all fit, so the Context contraction binds",
+                cfg.name
+            );
+        }
+    }
+
+    #[test]
+    fn oversized_ffn_dim_has_no_safe_seq_len() {
+        let dims = LayerDims { d_model: 64, d_k: 64, d_ffn: 140_000 };
+        assert_eq!(max_safe_seq_len(&dims), 0);
+    }
+
+    #[test]
+    fn sum_and_product_transfer_functions_are_exact() {
+        let a = Interval { lo: -3, hi: 5 };
+        let b = Interval { lo: -2, hi: 7 };
+        assert_eq!(a.product(b), Interval { lo: -21, hi: 35 });
+        assert_eq!(a.sum_n(4), Interval { lo: -12, hi: 20 });
+        assert!(a.hull(Interval::point(0)).contains(0));
+    }
+
+    #[test]
+    fn narrowed_operands_keep_stages_independent() {
+        // Whatever a stage accumulates, `narrow` re-quantizes to i8, so
+        // the next stage's operand interval is I8 again — the per-stage
+        // proofs compose without a whole-graph fixpoint.
+        use crate::serving::graph::narrow;
+        let acc = accumulator(Interval::I8, Interval::I8, 131_071);
+        for v in [acc.lo as i32, -1, 0, 1, acc.hi as i32] {
+            let n = narrow(v) as i64;
+            assert!(Interval::I8.contains(n));
+        }
+    }
+}

@@ -26,13 +26,24 @@
 //!    and its register-block helpers) must stay allocation-free: no
 //!    `vec!`, `Vec::new`, `.collect()`, `Box::new`, etc. The kernel's
 //!    whole point is that per-call scratch lives on the stack.
+//! 5. **`no-unannotated-truncating-cast`** — narrowing `as` casts
+//!    (`as i8` / `as u8` / `as i16` / `as u16`) are banned in the
+//!    `serving/` and `arch/` hot paths outside allowlisted sites
+//!    ([`CAST_ALLOWLIST`]): the one blessed requant point is
+//!    `serving::graph::narrow`, so a stray cast cannot silently
+//!    change the i8 quantization contract the analyzer's value-range
+//!    pass proves against. Scanned per fn body; `#[cfg(test)]`
+//!    modules are exempt (tests truncate deliberately to build
+//!    fixtures).
 //!
 //! The whole-tree scan runs as an ordinary `#[test]`
 //! (`shipped_tree_is_lint_clean`), so tier-1 `cargo test` gates on it;
 //! `dip lint` runs the same scan from the CLI.
 
-use std::fs;
-use std::path::{Path, PathBuf};
+use super::source::{
+    collapse_tokens_from, collapse_with_lines, find_all, fn_spans, read_tree_units, strip_source,
+    strip_tests,
+};
 
 /// One rule violation at a source location.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -56,9 +67,11 @@ const RULE_BARE_LOCK: &str = "bare-lock-unwrap";
 const RULE_SNAPSHOT: &str = "metrics-snapshot-complete";
 const RULE_SEQCST: &str = "no-seqcst";
 const RULE_HOT_ALLOC: &str = "no-hot-path-alloc";
+const RULE_TRUNC_CAST: &str = "no-unannotated-truncating-cast";
 
-/// Allocation markers banned inside the kernel hot region.
-const ALLOC_MARKERS: &[&str] = &[
+/// Allocation markers banned inside the kernel hot region (shared
+/// with the analyzer's hot-region pass).
+pub(crate) const ALLOC_MARKERS: &[&str] = &[
     "vec!",
     "Vec::new",
     ".to_vec()",
@@ -69,187 +82,16 @@ const ALLOC_MARKERS: &[&str] = &[
     ".to_string()",
 ];
 
-/// Replace comments and string/char-literal contents with blanks,
-/// preserving newlines (line numbers survive) and the surrounding
-/// code structure. Handles line comments, *nested* block comments,
-/// ordinary strings with escapes, byte strings, raw strings
-/// (`r"…"` / `r#"…"#`, any hash depth), char literals (including
-/// `'"'` and escapes like `'\''`), and lifetimes (`'a` is left alone).
-fn strip_source(src: &str) -> String {
-    let b: Vec<char> = src.chars().collect();
-    let mut out = String::with_capacity(src.len());
-    let mut i = 0usize;
-    let blank = |out: &mut String, c: char| out.push(if c == '\n' { '\n' } else { ' ' });
-    let is_ident = |c: char| c.is_ascii_alphanumeric() || c == '_';
-    while i < b.len() {
-        let c = b[i];
-        // Line comment.
-        if c == '/' && b.get(i + 1) == Some(&'/') {
-            while i < b.len() && b[i] != '\n' {
-                out.push(' ');
-                i += 1;
-            }
-            continue;
-        }
-        // Block comment (Rust block comments nest).
-        if c == '/' && b.get(i + 1) == Some(&'*') {
-            let mut depth = 1usize;
-            out.push_str("  ");
-            i += 2;
-            while i < b.len() && depth > 0 {
-                if b[i] == '/' && b.get(i + 1) == Some(&'*') {
-                    depth += 1;
-                    out.push_str("  ");
-                    i += 2;
-                } else if b[i] == '*' && b.get(i + 1) == Some(&'/') {
-                    depth -= 1;
-                    out.push_str("  ");
-                    i += 2;
-                } else {
-                    blank(&mut out, b[i]);
-                    i += 1;
-                }
-            }
-            continue;
-        }
-        // Raw (and raw-byte) strings: r"…", r#"…"#, br"…", …
-        if (c == 'r' || c == 'b') && (i == 0 || !is_ident(b[i - 1])) {
-            let mut j = i;
-            if b[j] == 'b' && b.get(j + 1) == Some(&'r') {
-                j += 1;
-            }
-            if b[j] == 'r' {
-                let mut hashes = 0usize;
-                let mut k = j + 1;
-                while b.get(k) == Some(&'#') {
-                    hashes += 1;
-                    k += 1;
-                }
-                if b.get(k) == Some(&'"') {
-                    // Blank the prefix + opening quote, then the body
-                    // until `"` followed by `hashes` hashes.
-                    for &p in &b[i..=k] {
-                        blank(&mut out, p);
-                    }
-                    i = k + 1;
-                    'body: while i < b.len() {
-                        if b[i] == '"' {
-                            let close = (1..=hashes).all(|h| b.get(i + h) == Some(&'#'));
-                            if close {
-                                for _ in 0..=hashes {
-                                    out.push(' ');
-                                    i += 1;
-                                }
-                                break 'body;
-                            }
-                        }
-                        blank(&mut out, b[i]);
-                        i += 1;
-                    }
-                    continue;
-                }
-            }
-        }
-        // Ordinary (or byte) string with escapes.
-        if c == '"' || (c == 'b' && b.get(i + 1) == Some(&'"') && (i == 0 || !is_ident(b[i - 1]))) {
-            if c == 'b' {
-                out.push(' ');
-                i += 1;
-            }
-            out.push(' ');
-            i += 1; // opening quote
-            while i < b.len() {
-                if b[i] == '\\' {
-                    out.push(' ');
-                    i += 1;
-                    if i < b.len() {
-                        blank(&mut out, b[i]);
-                        i += 1;
-                    }
-                    continue;
-                }
-                if b[i] == '"' {
-                    out.push(' ');
-                    i += 1;
-                    break;
-                }
-                blank(&mut out, b[i]);
-                i += 1;
-            }
-            continue;
-        }
-        // Char literal vs lifetime.
-        if c == '\'' {
-            if b.get(i + 1) == Some(&'\\') {
-                // Escaped char literal: consume the escape, then scan
-                // to the closing quote ('\x41', '\u{1F600}', '\'', …).
-                out.push(' ');
-                i += 1; // '
-                out.push(' ');
-                i += 1; // backslash
-                if i < b.len() {
-                    blank(&mut out, b[i]);
-                    i += 1; // escape head (n, t, ', x, u, …)
-                }
-                while i < b.len() && b[i] != '\'' {
-                    blank(&mut out, b[i]);
-                    i += 1;
-                }
-                if i < b.len() {
-                    out.push(' ');
-                    i += 1; // closing quote
-                }
-                continue;
-            }
-            if b.get(i + 2) == Some(&'\'') {
-                // Plain char literal — including '"', which must not
-                // open a string.
-                out.push_str("   ");
-                i += 3;
-                continue;
-            }
-            // Lifetime: keep as-is.
-            out.push('\'');
-            i += 1;
-            continue;
-        }
-        out.push(c);
-        i += 1;
-    }
-    out
-}
+/// Truncating casts the quantization rule bans outside annotated
+/// sites (widening casts — `as i32`, `as i64`, `as usize` — are fine).
+const TRUNC_CASTS: &[&str] = &["as i8", "as u8", "as i16", "as u16"];
 
-/// Whitespace-collapsed view of stripped source with a per-character
-/// line map, so multi-token patterns match across line breaks yet
-/// findings still point at a real line. Non-ASCII survivors are
-/// replaced with `\u{1}` to keep byte offsets == char offsets.
-fn collapse_with_lines(stripped: &str) -> (String, Vec<usize>) {
-    let mut text = String::with_capacity(stripped.len());
-    let mut lines = Vec::with_capacity(stripped.len());
-    let mut line = 1usize;
-    for c in stripped.chars() {
-        if c == '\n' {
-            line += 1;
-            continue;
-        }
-        if c.is_whitespace() {
-            continue;
-        }
-        text.push(if c.is_ascii() { c } else { '\u{1}' });
-        lines.push(line);
-    }
-    (text, lines)
-}
-
-fn find_all(hay: &str, needle: &str) -> Vec<usize> {
-    let mut out = Vec::new();
-    let mut from = 0usize;
-    while let Some(p) = hay[from..].find(needle) {
-        out.push(from + p);
-        from += p + 1;
-    }
-    out
-}
+/// Functions allowed to truncate: `(file suffix, fn name)`. The
+/// explicit-annotation mechanism of the cast rule — adding a site
+/// here *is* the annotation, reviewed like any other diff. `narrow`
+/// is the one blessed requant point
+/// ([`crate::serving::graph::narrow`]).
+const CAST_ALLOWLIST: &[(&str, &str)] = &[("serving/graph.rs", "narrow")];
 
 /// Names and lines of `pub <name>: AtomicU64` fields in stripped lines.
 fn atomic_u64_fields(lines: &[&str]) -> Vec<(usize, String)> {
@@ -349,39 +191,53 @@ pub fn lint_source(label: &str, source: &str) -> Vec<LintFinding> {
         }
     }
 
-    findings
-}
-
-fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) {
-    let entries = fs::read_dir(dir)
-        .unwrap_or_else(|e| panic!("lint: cannot read {}: {e}", dir.display()));
-    for entry in entries {
-        let path = entry.expect("lint: dir entry").path();
-        if path.is_dir() {
-            collect_rs_files(&path, out);
-        } else if path.extension().is_some_and(|x| x == "rs") {
-            out.push(path);
+    // Rule 5: truncating casts in the serving/arch hot paths only at
+    // annotated sites. Scanned per fn body over the token-preserving
+    // collapse so formatting cannot launder `as i8` across lines.
+    if label.contains("serving/") || label.contains("arch/") {
+        let code = strip_tests(&stripped);
+        for sp in fn_spans(code) {
+            if CAST_ALLOWLIST.iter().any(|(f, name)| label.ends_with(f) && sp.name == *name) {
+                continue;
+            }
+            let body: String =
+                code.chars().skip(sp.body_start).take(sp.body_end - sp.body_start).collect();
+            let (col, lmap) = collapse_tokens_from(&body, sp.body_line);
+            let chars: Vec<char> = col.chars().collect();
+            for cast in TRUNC_CASTS {
+                for pos in find_all(&col, cast) {
+                    let before_ok = pos == 0
+                        || !(chars[pos - 1].is_ascii_alphanumeric() || chars[pos - 1] == '_');
+                    let after = pos + cast.chars().count();
+                    let after_ok = after >= chars.len()
+                        || !(chars[after].is_ascii_alphanumeric() || chars[after] == '_');
+                    if before_ok && after_ok {
+                        findings.push(LintFinding {
+                            rule: RULE_TRUNC_CAST,
+                            file: label.to_string(),
+                            line: lmap[pos],
+                            detail: format!(
+                                "truncating `{cast}` in fn {} outside an annotated site; \
+                                 route requantization through serving::graph::narrow or add \
+                                 the (file, fn) to CAST_ALLOWLIST in check/lint.rs",
+                                sp.name
+                            ),
+                        });
+                    }
+                }
+            }
         }
     }
+
+    findings
 }
 
 /// Lint every `.rs` file under this crate's `src/` tree. Labels are
 /// `src/…`-relative so the file-scoped rules bind to the right files.
 pub fn lint_tree() -> Vec<LintFinding> {
-    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
-    let mut files = Vec::new();
-    collect_rs_files(&root, &mut files);
-    files.sort();
     let mut findings = Vec::new();
-    for f in &files {
-        let src = fs::read_to_string(f)
-            .unwrap_or_else(|e| panic!("lint: cannot read {}: {e}", f.display()));
-        let label = f
-            .strip_prefix(root.parent().expect("src has a parent"))
-            .unwrap_or(f)
-            .to_string_lossy()
-            .replace('\\', "/");
-        findings.extend(lint_source(&label, &src));
+    for unit in read_tree_units() {
+        findings.extend(lint_source(&unit.label, &unit.text));
     }
     findings
 }
@@ -389,6 +245,7 @@ pub fn lint_tree() -> Vec<LintFinding> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::path::Path;
 
     #[test]
     fn shipped_tree_is_lint_clean() {
@@ -502,6 +359,44 @@ mod tests {
         assert_eq!((f[0].rule, f[0].line), (RULE_HOT_ALLOC, 3));
         // Other files never trigger the kernel rule.
         assert!(lint_source("src/arch/dip.rs", src).is_empty());
+    }
+
+    #[test]
+    fn truncating_cast_outside_allowlist_is_caught() {
+        let src = "pub fn requant(v: i32) -> i8 {\n    (v >> 8) as i8\n}\n";
+        let f = lint_source("src/serving/fake.rs", src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!((f[0].rule, f[0].line), (RULE_TRUNC_CAST, 2));
+        assert!(f[0].detail.contains("fn requant"), "{}", f[0].detail);
+        // Outside serving/ and arch/ the rule does not apply.
+        assert!(lint_source("src/bench_harness/fake.rs", src).is_empty());
+    }
+
+    #[test]
+    fn truncating_cast_matches_across_line_breaks() {
+        let src = "pub fn requant(v: i32) -> i8 {\n    (v >> 8)\n        as\n        i8\n}\n";
+        let f = lint_source("src/arch/fake.rs", src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, RULE_TRUNC_CAST);
+    }
+
+    #[test]
+    fn narrow_is_the_one_allowed_truncation_site() {
+        let src = "pub fn narrow(v: i32) -> i8 {\n    (v >> NARROW_SHIFT) as i8\n}\n";
+        assert!(lint_source("src/serving/graph.rs", src).is_empty());
+        // The same body under another fn name, or another file, is flagged.
+        assert_eq!(lint_source("src/serving/graph.rs", &src.replace("narrow", "squash")).len(), 1);
+        assert_eq!(lint_source("src/serving/other.rs", src).len(), 1);
+    }
+
+    #[test]
+    fn widening_and_test_module_casts_pass() {
+        let src = "pub fn widen(v: i8) -> i32 {\n    v as i32\n}\n\
+                   #[cfg(test)]\nmod tests {\n    fn t(v: i32) -> i8 { v as i8 }\n}\n";
+        assert!(lint_source("src/arch/fake.rs", src).is_empty());
+        // An identifier merely ending in `as` is not a cast keyword.
+        let ident = "pub fn f(alias: i8) -> i8 {\n    has_i8(alias)\n}\n";
+        assert!(lint_source("src/arch/fake.rs", ident).is_empty());
     }
 
     #[test]

@@ -1,9 +1,10 @@
 //! In-tree correctness tooling: a deterministic interleaving explorer
 //! for the scheduling substrate, a double-entry auditor for the
-//! metrics ledger, and a repo lint gate — all runnable as ordinary
-//! tests (so tier-1 gates on them) and as `dip` subcommands.
+//! metrics ledger, a repo lint gate, and a multi-pass whole-program
+//! static analyzer — all runnable as ordinary tests (so tier-1 gates
+//! on them) and as `dip` subcommands.
 //!
-//! Three checkers, three failure classes:
+//! Four checkers, four failure classes:
 //!
 //! - [`explore`] — a hand-rolled "mini-loom": bounded-DFS schedule
 //!   exploration that steps producers, consumers, coalescing drainers,
@@ -27,17 +28,40 @@
 //!   enforcing repo-wide rules the type system cannot: no bare
 //!   `lock().unwrap()` outside `sync.rs`, `Metrics::snapshot` covers
 //!   every atomic counter, no sequentially-consistent orderings, no
-//!   allocation in the GEMM hot loop. `dip lint` and the
-//!   `shipped_tree_is_lint_clean` test run the same scanner.
+//!   allocation in the GEMM hot loop, no truncating casts in the
+//!   serving/arch hot paths outside annotated sites. `dip lint` and
+//!   the `shipped_tree_is_lint_clean` test run the same scanner.
+//! - [`analyze`] — `dip analyze`, three whole-program passes over the
+//!   shared [`source`] scanning substrate:
+//!   **lock-order** ([`analyze::locks`]) extracts every
+//!   `lock_unpoisoned` guard and its scope from the coordinator /
+//!   serving / sync sources, builds the may-hold-while-acquiring
+//!   graph (scope nesting plus a hand-maintained, staleness-checked
+//!   call-edge table), and reports any cycle with two witnessing
+//!   source paths — deadlock freedom for the shipped lock set;
+//!   **value-range** ([`analyze::ranges`]) runs interval abstract
+//!   interpretation over the quantized stage graph and proves every
+//!   i32 accumulator in range, deriving the `max_safe_seq_len` each
+//!   model config is served under (the same function feeds the
+//!   [`crate::serving::Session`] runtime guard and `analysis.json`,
+//!   so proof and guard cannot drift);
+//!   **hot-region** ([`analyze::blocking`]) generalizes the kernel
+//!   allocation lint into a declared-region pass banning blocking
+//!   calls (and, where declared, allocation) in the GEMM microkernel
+//!   and the worker drain loop.
 //!
 //! Every checker class is validated by **mutation smoke**: a
 //! deliberately broken variant (a [`QueueDefect`] queue, a
-//! [`DeviceDefect`] ledger, a lint fixture) must be caught, proving
-//! the checks have teeth.
+//! [`DeviceDefect`] ledger, a lint fixture, a seeded lock-inversion /
+//! overflow / blocking-kernel mutant in the test-only
+//! `analyze::mutants` module) must be caught **by name**, proving the
+//! checks have teeth.
 //!
 //! [`QueueDefect`]: crate::coordinator::queue::QueueDefect
 //! [`DeviceDefect`]: crate::coordinator::device::DeviceDefect
 
+pub mod analyze;
 pub mod audit;
 pub mod explore;
 pub mod lint;
+pub mod source;

@@ -1,0 +1,477 @@
+//! Shared token-level source substrate for the in-tree checkers.
+//!
+//! Both the lint gate ([`super::lint`]) and the static analyzer
+//! ([`super::analyze`]) scan Rust source without a parser dependency
+//! (`syn` is not in the offline crate set). What makes that workable is
+//! a careful *stripper* — comments and string/char-literal contents are
+//! blanked so no rule can be fooled by a pattern inside a doc comment
+//! or a test fixture string — plus a whitespace-collapsed view with a
+//! per-character line map, so multi-token patterns match across
+//! formatting while findings still point at real lines.
+//!
+//! On top of those, this module adds the pieces the analyzer needs and
+//! the lint rules reuse:
+//!
+//! * [`fn_spans`] — brace-matched `fn` item spans (name + line range +
+//!   body offsets) over stripped source, the unit of every
+//!   intra-procedural pass;
+//! * [`strip_tests`] — truncation at the first `#[cfg(test)]`, so
+//!   hot-path and concurrency rules never fire on test fixtures;
+//! * [`SourceUnit`] / [`read_tree_units`] — one labeled file of the
+//!   `src/` tree, the input shape shared by `lint_tree` and
+//!   `analyze_tree` (and by the mutant shims, which inject synthetic
+//!   units with repo-shaped labels).
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// One source file (or synthetic fixture) under analysis: a
+/// `src/…`-relative label plus the raw text.
+#[derive(Debug, Clone)]
+pub struct SourceUnit {
+    pub label: String,
+    pub text: String,
+}
+
+/// Replace comments and string/char-literal contents with blanks,
+/// preserving newlines (line numbers survive) and the surrounding
+/// code structure. Handles line comments, *nested* block comments,
+/// ordinary strings with escapes, byte strings, raw strings
+/// (`r"…"` / `r#"…"#`, any hash depth), char literals (including
+/// `'"'` and escapes like `'\''`), and lifetimes (`'a` is left alone).
+pub fn strip_source(src: &str) -> String {
+    let b: Vec<char> = src.chars().collect();
+    let mut out = String::with_capacity(src.len());
+    let mut i = 0usize;
+    let blank = |out: &mut String, c: char| out.push(if c == '\n' { '\n' } else { ' ' });
+    let is_ident = |c: char| c.is_ascii_alphanumeric() || c == '_';
+    while i < b.len() {
+        let c = b[i];
+        // Line comment.
+        if c == '/' && b.get(i + 1) == Some(&'/') {
+            while i < b.len() && b[i] != '\n' {
+                out.push(' ');
+                i += 1;
+            }
+            continue;
+        }
+        // Block comment (Rust block comments nest).
+        if c == '/' && b.get(i + 1) == Some(&'*') {
+            let mut depth = 1usize;
+            out.push_str("  ");
+            i += 2;
+            while i < b.len() && depth > 0 {
+                if b[i] == '/' && b.get(i + 1) == Some(&'*') {
+                    depth += 1;
+                    out.push_str("  ");
+                    i += 2;
+                } else if b[i] == '*' && b.get(i + 1) == Some(&'/') {
+                    depth -= 1;
+                    out.push_str("  ");
+                    i += 2;
+                } else {
+                    blank(&mut out, b[i]);
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // Raw (and raw-byte) strings: r"…", r#"…"#, br"…", …
+        if (c == 'r' || c == 'b') && (i == 0 || !is_ident(b[i - 1])) {
+            let mut j = i;
+            if b[j] == 'b' && b.get(j + 1) == Some(&'r') {
+                j += 1;
+            }
+            if b[j] == 'r' {
+                let mut hashes = 0usize;
+                let mut k = j + 1;
+                while b.get(k) == Some(&'#') {
+                    hashes += 1;
+                    k += 1;
+                }
+                if b.get(k) == Some(&'"') {
+                    // Blank the prefix + opening quote, then the body
+                    // until `"` followed by `hashes` hashes.
+                    for &p in &b[i..=k] {
+                        blank(&mut out, p);
+                    }
+                    i = k + 1;
+                    'body: while i < b.len() {
+                        if b[i] == '"' {
+                            let close = (1..=hashes).all(|h| b.get(i + h) == Some(&'#'));
+                            if close {
+                                for _ in 0..=hashes {
+                                    out.push(' ');
+                                    i += 1;
+                                }
+                                break 'body;
+                            }
+                        }
+                        blank(&mut out, b[i]);
+                        i += 1;
+                    }
+                    continue;
+                }
+            }
+        }
+        // Ordinary (or byte) string with escapes.
+        if c == '"' || (c == 'b' && b.get(i + 1) == Some(&'"') && (i == 0 || !is_ident(b[i - 1]))) {
+            if c == 'b' {
+                out.push(' ');
+                i += 1;
+            }
+            out.push(' ');
+            i += 1; // opening quote
+            while i < b.len() {
+                if b[i] == '\\' {
+                    out.push(' ');
+                    i += 1;
+                    if i < b.len() {
+                        blank(&mut out, b[i]);
+                        i += 1;
+                    }
+                    continue;
+                }
+                if b[i] == '"' {
+                    out.push(' ');
+                    i += 1;
+                    break;
+                }
+                blank(&mut out, b[i]);
+                i += 1;
+            }
+            continue;
+        }
+        // Char literal vs lifetime.
+        if c == '\'' {
+            if b.get(i + 1) == Some(&'\\') {
+                // Escaped char literal: consume the escape, then scan
+                // to the closing quote ('\x41', '\u{1F600}', '\'', …).
+                out.push(' ');
+                i += 1; // '
+                out.push(' ');
+                i += 1; // backslash
+                if i < b.len() {
+                    blank(&mut out, b[i]);
+                    i += 1; // escape head (n, t, ', x, u, …)
+                }
+                while i < b.len() && b[i] != '\'' {
+                    blank(&mut out, b[i]);
+                    i += 1;
+                }
+                if i < b.len() {
+                    out.push(' ');
+                    i += 1; // closing quote
+                }
+                continue;
+            }
+            if b.get(i + 2) == Some(&'\'') {
+                // Plain char literal — including '"', which must not
+                // open a string.
+                out.push_str("   ");
+                i += 3;
+                continue;
+            }
+            // Lifetime: keep as-is.
+            out.push('\'');
+            i += 1;
+            continue;
+        }
+        out.push(c);
+        i += 1;
+    }
+    out
+}
+
+/// Whitespace-collapsed view of stripped source with a per-character
+/// line map, so multi-token patterns match across line breaks yet
+/// findings still point at a real line. Non-ASCII survivors are
+/// replaced with `\u{1}` to keep byte offsets == char offsets.
+pub fn collapse_with_lines(stripped: &str) -> (String, Vec<usize>) {
+    collapse_with_lines_from(stripped, 1)
+}
+
+/// [`collapse_with_lines`] for a substring whose first character sits
+/// on `first_line` of the original file (per-function analysis slices
+/// a stripped file by [`fn_spans`] and still wants real line numbers).
+pub fn collapse_with_lines_from(stripped: &str, first_line: usize) -> (String, Vec<usize>) {
+    let mut text = String::with_capacity(stripped.len());
+    let mut lines = Vec::with_capacity(stripped.len());
+    let mut line = first_line;
+    for c in stripped.chars() {
+        if c == '\n' {
+            line += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            continue;
+        }
+        text.push(if c.is_ascii() { c } else { '\u{1}' });
+        lines.push(line);
+    }
+    (text, lines)
+}
+
+/// Token-preserving collapse: like [`collapse_with_lines_from`] but a
+/// single space survives wherever two identifier characters would
+/// otherwise fuse, so `let mut g` stays three tokens instead of
+/// becoming `letmutg`. Keyword-anchored patterns (`let mut x=`) and
+/// punctuation-anchored patterns (`self.bump(`) both match across
+/// arbitrary formatting; the line map covers every emitted character,
+/// inserted spaces included.
+pub fn collapse_tokens_from(stripped: &str, first_line: usize) -> (String, Vec<usize>) {
+    let is_ident = |c: char| c.is_ascii_alphanumeric() || c == '_';
+    let mut text = String::with_capacity(stripped.len());
+    let mut lines = Vec::with_capacity(stripped.len());
+    let mut line = first_line;
+    let mut last: Option<char> = None;
+    let mut pending_ws = false;
+    for c in stripped.chars() {
+        if c == '\n' {
+            line += 1;
+            pending_ws = true;
+            continue;
+        }
+        if c.is_whitespace() {
+            pending_ws = true;
+            continue;
+        }
+        let c = if c.is_ascii() { c } else { '\u{1}' };
+        if pending_ws && is_ident(c) && last.is_some_and(is_ident) {
+            text.push(' ');
+            lines.push(line);
+        }
+        pending_ws = false;
+        text.push(c);
+        lines.push(line);
+        last = Some(c);
+    }
+    (text, lines)
+}
+
+/// Every start offset of `needle` in `hay` (overlapping matches
+/// included).
+pub fn find_all(hay: &str, needle: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut from = 0usize;
+    while let Some(p) = hay[from..].find(needle) {
+        out.push(from + p);
+        from += p + 1;
+    }
+    out
+}
+
+/// Truncate stripped source at the first `#[cfg(test)]` line: the
+/// analyzer's and the hot-path/cast rules' scope is shipped code, not
+/// test fixtures (which deliberately contain known-bad patterns).
+pub fn strip_tests(stripped: &str) -> &str {
+    match stripped.find("#[cfg(test)]") {
+        Some(p) => &stripped[..p],
+        None => stripped,
+    }
+}
+
+/// One `fn` item in stripped source: the name, the 1-based line of the
+/// `fn` keyword, and the body's char range (inside the braces,
+/// exclusive of the braces themselves) as offsets into the stripped
+/// text.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FnSpan {
+    pub name: String,
+    pub line: usize,
+    pub body_start: usize,
+    pub body_end: usize,
+    /// 1-based line of the body's first character.
+    pub body_line: usize,
+}
+
+/// Brace-matched `fn` item spans over stripped source. A `fn` keyword
+/// is any standalone `fn` token followed by an identifier; the body is
+/// the first `{ … }` group after the signature (skipping parenthesized
+/// argument lists, so a closure default or `where` bound cannot
+/// mis-anchor it). Nested fns are reported too — each span is
+/// self-contained, and an inner fn's body is simply covered twice,
+/// which is what an intra-procedural pass wants (the outer fn *does*
+/// textually contain the inner acquisition sites it dominates).
+pub fn fn_spans(stripped: &str) -> Vec<FnSpan> {
+    let b: Vec<char> = stripped.chars().collect();
+    let is_ident = |c: char| c.is_ascii_alphanumeric() || c == '_';
+    // Byte offset of each char == char offset (stripper preserves
+    // ASCII; callers slice by char offsets via these helpers only).
+    let line_of = |off: usize| 1 + b[..off].iter().filter(|&&c| c == '\n').count();
+    let mut spans = Vec::new();
+    let mut i = 0usize;
+    while i + 1 < b.len() {
+        if b[i] == 'f'
+            && b[i + 1] == 'n'
+            && (i == 0 || !is_ident(b[i - 1]))
+            && b.get(i + 2).is_some_and(|&c| !is_ident(c))
+        {
+            let kw_line = line_of(i);
+            // Parse the name (skip whitespace after `fn`).
+            let mut j = i + 2;
+            while j < b.len() && b[j].is_whitespace() {
+                j += 1;
+            }
+            let name_start = j;
+            while j < b.len() && is_ident(b[j]) {
+                j += 1;
+            }
+            if j == name_start {
+                // `fn` in a type position (e.g. `fn(` pointer) — skip.
+                i += 2;
+                continue;
+            }
+            let name: String = b[name_start..j].iter().collect();
+            // Find the body's opening brace: first `{` at
+            // paren-depth 0 after the signature.
+            let mut paren = 0i32;
+            let mut body_start = None;
+            while j < b.len() {
+                match b[j] {
+                    '(' => paren += 1,
+                    ')' => paren -= 1,
+                    ';' if paren == 0 => break, // trait/extern decl, no body
+                    '{' if paren == 0 => {
+                        body_start = Some(j + 1);
+                        break;
+                    }
+                    _ => {}
+                }
+                j += 1;
+            }
+            if let Some(start) = body_start {
+                // Brace-match to the closing brace.
+                let mut depth = 1i32;
+                let mut k = start;
+                while k < b.len() && depth > 0 {
+                    match b[k] {
+                        '{' => depth += 1,
+                        '}' => depth -= 1,
+                        _ => {}
+                    }
+                    k += 1;
+                }
+                let body_end = k.saturating_sub(1); // exclusive of `}`
+                spans.push(FnSpan {
+                    name,
+                    line: kw_line,
+                    body_start: start,
+                    body_end,
+                    body_line: line_of(start),
+                });
+                i = start; // nested fns still found inside the body
+                continue;
+            }
+        }
+        i += 1;
+    }
+    spans
+}
+
+/// Collect every `.rs` file under `dir`, recursively.
+pub fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) {
+    let entries =
+        fs::read_dir(dir).unwrap_or_else(|e| panic!("source scan: cannot read {}: {e}", dir.display()));
+    for entry in entries {
+        let path = entry.expect("source scan: dir entry").path();
+        if path.is_dir() {
+            collect_rs_files(&path, out);
+        } else if path.extension().is_some_and(|x| x == "rs") {
+            out.push(path);
+        }
+    }
+}
+
+/// Read every `.rs` file of this crate's `src/` tree as a
+/// [`SourceUnit`] with a `src/…`-relative label, sorted by path.
+pub fn read_tree_units() -> Vec<SourceUnit> {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let mut files = Vec::new();
+    collect_rs_files(&root, &mut files);
+    files.sort();
+    files
+        .iter()
+        .map(|f| {
+            let text = fs::read_to_string(f)
+                .unwrap_or_else(|e| panic!("source scan: cannot read {}: {e}", f.display()));
+            let label = f
+                .strip_prefix(root.parent().expect("src has a parent"))
+                .unwrap_or(f)
+                .to_string_lossy()
+                .replace('\\', "/");
+            SourceUnit { label, text }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fn_spans_find_names_lines_and_bodies() {
+        let src = "\
+pub fn alpha(x: usize) -> usize {
+    x + 1
+}
+
+fn beta() {
+    if true {
+        let _ = 0;
+    }
+}
+";
+        let spans = fn_spans(src);
+        assert_eq!(spans.len(), 2);
+        assert_eq!((spans[0].name.as_str(), spans[0].line), ("alpha", 1));
+        assert_eq!((spans[1].name.as_str(), spans[1].line), ("beta", 5));
+        let body0: String = src.chars().skip(spans[0].body_start).take(spans[0].body_end - spans[0].body_start).collect();
+        assert!(body0.contains("x + 1"));
+        assert!(!body0.contains('}'), "nested-brace-free body excludes the closer");
+        let body1: String = src.chars().skip(spans[1].body_start).take(spans[1].body_end - spans[1].body_start).collect();
+        assert!(body1.contains("let _ = 0;"));
+        assert!(body1.trim_end().ends_with('}'), "inner block's brace stays inside");
+    }
+
+    #[test]
+    fn fn_spans_skip_bodyless_decls_and_fn_pointers() {
+        let src = "trait T { fn decl(&self); }\nfn real(f: fn(usize) -> usize) { f(1); }\n";
+        let spans = fn_spans(src);
+        assert_eq!(spans.len(), 1, "{spans:?}");
+        assert_eq!(spans[0].name, "real");
+    }
+
+    #[test]
+    fn nested_fns_are_reported_separately() {
+        let src = "fn outer() {\n    fn inner() { let _ = 1; }\n    inner();\n}\n";
+        let names: Vec<String> = fn_spans(src).into_iter().map(|s| s.name).collect();
+        assert_eq!(names, vec!["outer".to_string(), "inner".to_string()]);
+    }
+
+    #[test]
+    fn strip_tests_truncates_at_cfg_test() {
+        let src = "fn a() {}\n#[cfg(test)]\nmod tests { fn b() {} }\n";
+        let stripped = strip_source(src);
+        assert!(strip_tests(&stripped).contains("fn a"));
+        assert!(!strip_tests(&stripped).contains("fn b"));
+        assert_eq!(strip_tests("no tests here"), "no tests here");
+    }
+
+    #[test]
+    fn collapse_from_offsets_line_numbers() {
+        let (text, lines) = collapse_with_lines_from("a\nb c\n", 10);
+        assert_eq!(text, "abc");
+        assert_eq!(lines, vec![10, 11, 11]);
+    }
+
+    #[test]
+    fn token_collapse_preserves_keyword_boundaries() {
+        let (text, lines) = collapse_tokens_from("let mut g =\n    lock(&m);", 3);
+        assert_eq!(text, "let mut g=lock(&m);");
+        assert_eq!(lines[0], 3);
+        assert_eq!(*lines.last().unwrap(), 4);
+        let (t2, _) = collapse_tokens_from("self\n    .bump();", 1);
+        assert_eq!(t2, "self.bump();", "punctuation joins across lines");
+    }
+}

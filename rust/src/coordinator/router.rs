@@ -172,6 +172,28 @@ impl RequestHandle {
     }
 }
 
+/// The worker drain loop, from a popped head job to the batched
+/// device dispatch — tile-coalesced execution: drain the jobs the
+/// scheduler would serve next anyway, as long as they carry the
+/// head's tile (one wave fan-out routinely lands many row blocks of
+/// one tile here), and run them as one batch — one resident check,
+/// one install at most, one array dispatch.
+///
+/// A declared hot region ([`crate::check::analyze::blocking`]): it
+/// may allocate its batch Vec but must never block — a sleep or a
+/// lock wait between the pop and the dispatch stalls a whole device.
+fn drain_coalesced(pool: &ShardedQueue<Job>, dev: &mut Device, me: usize, job: Job) {
+    let tile = job.tile_id;
+    let mut batch = vec![job];
+    while batch.len() < COALESCE_LIMIT {
+        match pool.try_pop_own_if(me, |j: &Job| j.tile_id == tile) {
+            Some(j) => batch.push(j),
+            None => break,
+        }
+    }
+    dev.execute_batch(batch);
+}
+
 /// The L3 coordinator.
 pub struct Coordinator {
     pool: Arc<ShardedQueue<Job>>,
@@ -231,22 +253,7 @@ impl Coordinator {
                                 }
                                 None => break, // closed and drained
                             };
-                            // Tile-coalesced execution: drain the jobs
-                            // the scheduler would serve next anyway, as
-                            // long as they carry the head's tile (one
-                            // wave fan-out routinely lands many row
-                            // blocks of one tile here), and run them as
-                            // one batch — one resident check, one
-                            // install at most, one array dispatch.
-                            let tile = job.tile_id;
-                            let mut batch = vec![job];
-                            while batch.len() < COALESCE_LIMIT {
-                                match pool.try_pop_own_if(i, |j: &Job| j.tile_id == tile) {
-                                    Some(j) => batch.push(j),
-                                    None => break,
-                                }
-                            }
-                            dev.execute_batch(batch);
+                            drain_coalesced(&pool, &mut dev, i, job);
                         }
                     })
                     .expect("spawn worker")

@@ -62,7 +62,7 @@ impl ActStripCache {
 
     /// Strips currently cached, summed across shards.
     pub fn len(&self) -> usize {
-        self.shards.iter().map(|s| lock_unpoisoned(s).len()).sum()
+        self.shards.iter().map(|shard| lock_unpoisoned(shard).len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {

@@ -63,7 +63,7 @@ use crate::power::energy;
 
 use super::decode::ServingEngine;
 use super::graph::{run_layer_wave, LayerCtx, LayerInput};
-use super::session::Session;
+use super::session::{SeqLimitExceeded, Session};
 
 /// Admission/budget policy of a [`WaveScheduler`]: how much work one
 /// wave may stack. Both bounds cap per-wave latency — a wave is one
@@ -161,9 +161,32 @@ impl WaveScheduler {
     /// `prefill` + `steps ×` `decode_step` on the per-session engine).
     /// The session joins the active set between waves, bounded by the
     /// admission policy.
-    pub fn submit(&mut self, id: u64, tenant: TenantId, prompt: Mat<i8>, steps: usize) {
+    ///
+    /// Errs at admission when the session could not finish under its
+    /// proven [`Session::seq_limit`]: the prefill and each decode pass
+    /// append one fed-back row, so the session ends at
+    /// `prompt + steps + 1` accumulated rows — rejecting here is what
+    /// keeps [`Session::finish_pass`]'s mid-flight refusal from ever
+    /// firing inside a wave (a wave must never partially grow a
+    /// cohort).
+    pub fn submit(
+        &mut self,
+        id: u64,
+        tenant: TenantId,
+        prompt: Mat<i8>,
+        steps: usize,
+    ) -> Result<(), SeqLimitExceeded> {
         let s = self.engine.open_session(id, tenant, prompt, true);
+        let total = s.acts.rows().saturating_add(steps).saturating_add(1);
+        if total > s.seq_limit() {
+            return Err(SeqLimitExceeded {
+                session: id,
+                rows: total,
+                max_safe_seq_len: s.seq_limit(),
+            });
+        }
         self.waiting.push_back(ActiveSession { s, passes_left: steps + 1 });
+        Ok(())
     }
 
     /// Sessions admitted and still decoding.
@@ -270,7 +293,7 @@ impl WaveScheduler {
         let mut completed = Vec::new();
         for (a, x) in cohort.iter_mut().zip(&xs) {
             reused += (a.s.done_rows * layers) as u64;
-            a.s.finish_pass(x);
+            a.s.finish_pass(x).expect("admission checked the seq bound");
             a.passes_left -= 1;
         }
         if reused > 0 {
@@ -356,9 +379,9 @@ mod tests {
             .iter()
             .map(|(id, prompt, steps)| {
                 let mut s = e.open_session(*id, *id as TenantId + 1, prompt.clone(), true);
-                e.prefill(&mut s);
+                e.prefill(&mut s).expect("well under the seq bound");
                 for _ in 0..*steps {
-                    e.decode_step(&mut s);
+                    e.decode_step(&mut s).expect("well under the seq bound");
                 }
                 s
             })
@@ -383,7 +406,7 @@ mod tests {
             .collect();
         let mut ws = WaveScheduler::new(engine(128), WavePolicy::default());
         for (id, p, steps) in &prompts {
-            ws.submit(*id, *id as TenantId + 1, p.clone(), *steps);
+            ws.submit(*id, *id as TenantId + 1, p.clone(), *steps).expect("under the seq bound");
         }
         let reports = ws.run_to_completion();
         // Staggered step counts: the longest session (id 2, 4 steps + 1
@@ -414,7 +437,7 @@ mod tests {
         let policy = WavePolicy { max_wave_rows: 8, ..Default::default() };
         let mut ws = WaveScheduler::new(engine(128), policy);
         for (id, p, steps) in &prompts {
-            ws.submit(*id, *id as TenantId + 1, p.clone(), *steps);
+            ws.submit(*id, *id as TenantId + 1, p.clone(), *steps).expect("under the seq bound");
         }
         let reports = ws.run_to_completion();
         // 3 prefill waves (8 rows each fill the budget), then the three
@@ -439,12 +462,12 @@ mod tests {
         let a = (0u64, random_i8(6, 16, 31), 4usize);
         let b = (1u64, random_i8(9, 16, 32), 2usize);
         let mut ws = WaveScheduler::new(engine(128), WavePolicy::default());
-        ws.submit(a.0, 1, a.1.clone(), a.2);
+        ws.submit(a.0, 1, a.1.clone(), a.2).expect("under the seq bound");
         // Two waves alone (prefill + first step)...
         assert_eq!(ws.run_wave().unwrap().sessions, 1);
         assert_eq!(ws.run_wave().unwrap().sessions, 1);
         // ...then b joins: its 9-row prefill stacks with a's decode row.
-        ws.submit(b.0, 2, b.1.clone(), b.2);
+        ws.submit(b.0, 2, b.1.clone(), b.2).expect("under the seq bound");
         let r = ws.run_wave().unwrap();
         assert_eq!((r.joined, r.sessions, r.stacked_rows), (1, 2, 10));
         let reports = ws.run_to_completion();
@@ -466,7 +489,7 @@ mod tests {
         let mut ws =
             WaveScheduler::new(engine(0), WavePolicy { max_sessions: 2, ..Default::default() });
         for i in 0..4u64 {
-            ws.submit(i, 1, random_i8(4, 16, 50 + i), 1);
+            ws.submit(i, 1, random_i8(4, 16, 50 + i), 1).expect("under the seq bound");
         }
         let r = ws.run_wave().unwrap();
         assert_eq!((r.joined, r.sessions), (2, 2));
@@ -480,7 +503,25 @@ mod tests {
     #[should_panic(expected = "sessions still in flight")]
     fn shutdown_with_work_queued_is_a_bug() {
         let mut ws = WaveScheduler::new(engine(0), WavePolicy::default());
-        ws.submit(0, 1, random_i8(4, 16, 9), 1);
+        ws.submit(0, 1, random_i8(4, 16, 9), 1).expect("under the seq bound");
         ws.shutdown();
+    }
+
+    #[test]
+    fn submit_rejects_sessions_that_would_exceed_the_seq_bound() {
+        // The small test dims leave Context as the binding stage, so
+        // the proven bound is the full 131071-row i8×i8 depth cap; a
+        // 4-row prompt plus 131068 steps ends one row past it.
+        let mut ws = WaveScheduler::new(engine(0), WavePolicy::default());
+        let err = ws
+            .submit(9, 1, random_i8(4, 16, 3), 131_068)
+            .expect_err("prompt + steps + 1 past the bound must be rejected at admission");
+        assert_eq!((err.session, err.rows, err.max_safe_seq_len), (9, 131_073, 131_071));
+        assert_eq!(ws.queued_sessions(), 0, "rejected sessions never queue");
+        // The largest budget that still finishes under the bound is
+        // admitted (rejection happens before any device work, so the
+        // queued session is never actually run here).
+        ws.submit(9, 1, random_i8(4, 16, 3), 131_066).expect("exactly at the bound");
+        assert_eq!(ws.queued_sessions(), 1);
     }
 }

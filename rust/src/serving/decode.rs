@@ -20,7 +20,7 @@ use crate::power::energy;
 
 use super::actcache::ActStripCache;
 use super::graph::{run_layer, LayerCtx, LayerInput, PreTiledLayer, ServeModel};
-use super::session::Session;
+use super::session::{SeqLimitExceeded, Session};
 
 /// What one prefill/decode step cost and reused.
 #[derive(Debug, Clone, Copy)]
@@ -99,21 +99,35 @@ impl ServingEngine {
     }
 
     /// Prefill: run the whole prompt through every layer and append the
-    /// first generated row.
-    pub fn prefill(&self, s: &mut Session) -> StepReport {
+    /// first generated row. Errs without streaming anything when the
+    /// session would grow past its proven [`Session::seq_limit`].
+    pub fn prefill(&self, s: &mut Session) -> Result<StepReport, SeqLimitExceeded> {
         assert_eq!(s.done_rows, 0, "prefill runs once, before any decode step");
         self.advance(s)
     }
 
     /// One autoregressive step: process the pending (fed-back) row —
     /// or, without reuse, recompute everything — and append the next
-    /// generated row.
-    pub fn decode_step(&self, s: &mut Session) -> StepReport {
+    /// generated row. Errs without streaming anything when the session
+    /// would grow past its proven [`Session::seq_limit`].
+    pub fn decode_step(&self, s: &mut Session) -> Result<StepReport, SeqLimitExceeded> {
         assert!(s.done_rows > 0, "prefill the session before decoding");
         self.advance(s)
     }
 
-    fn advance(&self, s: &mut Session) -> StepReport {
+    fn advance(&self, s: &mut Session) -> Result<StepReport, SeqLimitExceeded> {
+        // Refuse before streaming anything: a pass both contracts the
+        // Context stage over the accumulated rows and appends the
+        // fed-back row, so check the grown size up front — erring here
+        // leaves the session (and the layer state) untouched.
+        let grown = s.acts.rows() + 1;
+        if grown > s.seq_limit() {
+            return Err(SeqLimitExceeded {
+                session: s.id,
+                rows: grown,
+                max_safe_seq_len: s.seq_limit(),
+            });
+        }
         let before = self.coord.metrics();
         let t0 = Instant::now();
         let n = s.acts.rows();
@@ -152,9 +166,9 @@ impl ServingEngine {
         }
         // Mark the pass done and feed the newest generated row back as
         // the next input token.
-        s.finish_pass(&x);
+        s.finish_pass(&x).expect("growth pre-checked at pass entry");
         let after = self.coord.metrics();
-        StepReport {
+        Ok(StepReport {
             session: s.id,
             rows_processed: n - row0,
             total_rows: s.acts.rows(),
@@ -166,7 +180,7 @@ impl ServingEngine {
             energy_uj: energy::power_mw(self.cfg.device.arch, self.cfg.device.tile as u64)
                 * cycles as f64
                 / 1e6,
-        }
+        })
     }
 
     /// Drain and stop the device pool; final metrics. The settled
@@ -209,13 +223,13 @@ mod tests {
     fn prefill_then_steps_grow_the_session() {
         let e = engine(128);
         let mut s = e.open_session(1, 1, random_i8(10, 16, 5), true);
-        let p = e.prefill(&mut s);
+        let p = e.prefill(&mut s).expect("well under the seq bound");
         assert_eq!(p.rows_processed, 10);
         assert_eq!(p.total_rows, 11);
         assert_eq!(p.rows_reused, 0);
         assert!(p.sim_cycles > 0);
         for step in 0..3 {
-            let r = e.decode_step(&mut s);
+            let r = e.decode_step(&mut s).expect("well under the seq bound");
             assert_eq!(r.rows_processed, 1, "step {step} streams only the fed-back row");
             assert_eq!(r.total_rows, 12 + step);
             assert_eq!(r.rows_reused, ((10 + step) * 2) as u64);
@@ -232,7 +246,7 @@ mod tests {
         // K's and V's strips must come back shared after Q built them.
         let e = engine(128);
         let mut s = e.open_session(1, 1, random_i8(8, 16, 6), true);
-        let p = e.prefill(&mut s);
+        let p = e.prefill(&mut s).expect("well under the seq bound");
         assert!(p.strip_hits > 0, "K/V must reuse Q's strips");
         e.shutdown();
     }
@@ -244,11 +258,11 @@ mod tests {
         let prompt = random_i8(9, 16, 7);
         let mut sc = ec.open_session(1, 1, prompt.clone(), true);
         let mut su = eu.open_session(1, 1, prompt, false);
-        ec.prefill(&mut sc);
-        eu.prefill(&mut su);
+        ec.prefill(&mut sc).expect("well under the seq bound");
+        eu.prefill(&mut su).expect("well under the seq bound");
         for _ in 0..3 {
-            ec.decode_step(&mut sc);
-            eu.decode_step(&mut su);
+            ec.decode_step(&mut sc).expect("well under the seq bound");
+            eu.decode_step(&mut su).expect("well under the seq bound");
         }
         assert_eq!(sc.acts, su.acts, "fed-back token rows diverged");
         for (lc, lu) in sc.layers.iter().zip(&su.layers) {
@@ -268,6 +282,20 @@ mod tests {
     fn decode_before_prefill_is_a_bug() {
         let e = engine(0);
         let mut s = e.open_session(0, 0, random_i8(4, 16, 1), false);
-        e.decode_step(&mut s);
+        let _ = e.decode_step(&mut s);
+    }
+
+    #[test]
+    fn decode_refuses_growth_past_the_proven_bound() {
+        let e = engine(0);
+        let mut s = e.open_session(3, 0, random_i8(4, 16, 2), false);
+        e.prefill(&mut s).expect("prefill fits");
+        s.set_seq_limit_for_test(6);
+        e.decode_step(&mut s).expect("growth 5 -> 6 rows is at the bound");
+        let err = e.decode_step(&mut s).expect_err("growth 6 -> 7 must be refused");
+        assert_eq!((err.session, err.rows, err.max_safe_seq_len), (3, 7, 6));
+        assert_eq!(s.acts.rows(), 6, "refused step leaves the session untouched");
+        assert_eq!(s.done_rows, 5);
+        e.shutdown();
     }
 }

@@ -116,6 +116,27 @@ impl StageNode {
         }
         d
     }
+
+    /// The contraction (reduction) depth of this stage's GEMM — the
+    /// number of i8×i8 products summed into each output i32. This is
+    /// the quantity the analyzer's value-range pass
+    /// ([`crate::check::analyze::ranges`]) bounds accumulators by:
+    /// projections and FFN-up contract over `d_model`, scores and the
+    /// output projection over `d_k`, attention context over the
+    /// session's key rows (`seq_len` — the only stage whose depth
+    /// grows with the session), and FFN-down over `d_ffn`. Because
+    /// [`narrow`] requantizes every stage output back to i8 before the
+    /// next stage streams it, each stage's accumulation starts from
+    /// full-range i8 operands and these depths bound each stage
+    /// independently.
+    pub fn reduction_depth(&self, dims: &LayerDims, seq_len: usize) -> usize {
+        match self.id {
+            StageId::Q | StageId::K | StageId::V | StageId::FfnUp => dims.d_model,
+            StageId::Scores | StageId::OutProj => dims.d_k,
+            StageId::Context => seq_len,
+            StageId::FfnDown => dims.d_ffn,
+        }
+    }
 }
 
 /// The layer graph, in an order that happens to be topological (the
@@ -522,6 +543,26 @@ pub fn run_layer_wave(
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn reduction_depths_follow_the_contraction_dims() {
+        let dims = LayerDims { d_model: 96, d_k: 32, d_ffn: 256 };
+        let depth = |id: StageId, seq: usize| {
+            layer_graph()
+                .iter()
+                .find(|n| n.id == id)
+                .expect("stage present")
+                .reduction_depth(&dims, seq)
+        };
+        for id in [StageId::Q, StageId::K, StageId::V, StageId::FfnUp] {
+            assert_eq!(depth(id, 7), 96);
+        }
+        assert_eq!(depth(StageId::Scores, 7), 32, "scores contract Q rows against K^T over d_k");
+        assert_eq!(depth(StageId::OutProj, 7), 32);
+        assert_eq!(depth(StageId::Context, 7), 7, "context contracts over the session's key rows");
+        assert_eq!(depth(StageId::Context, 9000), 9000);
+        assert_eq!(depth(StageId::FfnDown, 7), 256);
+    }
 
     #[test]
     fn graph_dependencies_are_explicit_and_acyclic() {

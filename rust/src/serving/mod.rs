@@ -75,6 +75,14 @@
 //! on the per-session engine, and per-wave [`WaveReport`]s on the
 //! scheduler.
 //!
+//! Soundness: every session enforces the statically proven
+//! `max_safe_seq_len` of its dims (the i32-accumulator bound derived
+//! by `dip analyze`'s value-range pass,
+//! [`crate::check::analyze::ranges`]) — growth past it returns a typed
+//! [`SeqLimitExceeded`] instead of silently wrapping an accumulator,
+//! and the wave scheduler rejects sessions at admission whose prompt
+//! plus step budget could not finish under the bound.
+//!
 //! [`submit_strips_as`]: crate::coordinator::Coordinator::submit_strips_as
 
 pub mod actcache;
@@ -91,4 +99,4 @@ pub use graph::{
     LayerRun, LayerWeights, Operand, PreTiledLayer, ServeModel, StageId, StageNode, WSource,
     WeightId, NARROW_SHIFT,
 };
-pub use session::{LayerState, Session};
+pub use session::{LayerState, SeqLimitExceeded, Session};

@@ -9,10 +9,45 @@
 //! [`graph`](super::graph) module doc); with `reuse` off the session
 //! recomputes every row each step and serves as the A/B baseline.
 
+use crate::check::analyze::ranges::max_safe_seq_len;
 use crate::coordinator::TenantId;
 use crate::matrix::Mat;
 
 use super::graph::{LayerDims, LayerRun};
+
+/// Growing a session past the statically proven accumulator bound.
+///
+/// The value-range pass of `dip analyze` proves every i32 stage
+/// accumulator in range only up to a per-config `max_safe_seq_len`
+/// (the attention Context stage contracts over the session's
+/// accumulated rows, so its depth grows every decode step). Past that
+/// bound the i8×i8 dot product can wrap i32 — so growth returns this
+/// typed error instead of serving silently-wrapped activations. The
+/// limit is computed by the same
+/// [`max_safe_seq_len`] the analyzer reports into `analysis.json`,
+/// so the proof and the guard cannot drift.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SeqLimitExceeded {
+    /// Session that tried to grow.
+    pub session: u64,
+    /// Accumulated activation rows the growth would have produced.
+    pub rows: usize,
+    /// The proven bound for this session's dims.
+    pub max_safe_seq_len: usize,
+}
+
+impl std::fmt::Display for SeqLimitExceeded {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "session {}: growing to {} accumulated rows exceeds max_safe_seq_len={} \
+             (i32 accumulator soundness bound proven by `dip analyze`)",
+            self.session, self.rows, self.max_safe_seq_len
+        )
+    }
+}
+
+impl std::error::Error for SeqLimitExceeded {}
 
 /// Per-layer accumulated rows (narrowed i8 activations).
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -54,6 +89,10 @@ pub struct Session {
     /// KV-style row reuse on/off (off = full recompute every step, the
     /// A/B baseline).
     pub reuse: bool,
+    /// Largest accumulated row count any pass may contract over —
+    /// [`max_safe_seq_len`] of this session's dims. [`Session::finish_pass`]
+    /// refuses growth past it.
+    seq_limit: usize,
 }
 
 impl Session {
@@ -67,7 +106,20 @@ impl Session {
             layers: (0..layers).map(|_| LayerState::empty(dims)).collect(),
             done_rows: 0,
             reuse,
+            seq_limit: max_safe_seq_len(dims),
         }
+    }
+
+    /// The proven growth bound this session enforces.
+    pub fn seq_limit(&self) -> usize {
+        self.seq_limit
+    }
+
+    /// Shrink the limit so tests can exercise the guard without
+    /// building 131k-row sessions.
+    #[cfg(test)]
+    pub(crate) fn set_seq_limit_for_test(&mut self, limit: usize) {
+        self.seq_limit = limit;
     }
 
     /// Rows awaiting processing (the prompt before prefill; exactly the
@@ -96,10 +148,25 @@ impl Session {
     /// Close one pass: mark every current row processed and feed the
     /// newest generated row back as the next input token. `final_y` is
     /// the last layer's output rows for this pass.
-    pub fn finish_pass(&mut self, final_y: &Mat<i8>) {
+    ///
+    /// Errs (leaving the session untouched) when appending the
+    /// fed-back row would grow the activation past [`Session::seq_limit`]:
+    /// a subsequent pass over that many rows could wrap an i32
+    /// accumulator in the Context stage, outside what the analyzer
+    /// proved sound.
+    pub fn finish_pass(&mut self, final_y: &Mat<i8>) -> Result<(), SeqLimitExceeded> {
+        let grown = self.acts.rows() + 1;
+        if grown > self.seq_limit {
+            return Err(SeqLimitExceeded {
+                session: self.id,
+                rows: grown,
+                max_safe_seq_len: self.seq_limit,
+            });
+        }
         self.done_rows = self.acts.rows();
         let y_new = final_y.block(final_y.rows() - 1, 0, 1, final_y.cols());
         self.acts = self.acts.vconcat(&y_new);
+        Ok(())
     }
 }
 
@@ -119,6 +186,31 @@ mod tests {
             assert_eq!((l.v.rows(), l.v.cols()), (0, 4));
             assert_eq!((l.y.rows(), l.y.cols()), (0, 8));
         }
+    }
+
+    #[test]
+    fn seq_limit_comes_from_the_analyzer_bound() {
+        let dims = LayerDims { d_model: 8, d_k: 4, d_ffn: 16 };
+        let s = Session::new(1, 0, random_i8(2, 8, 5), &dims, 1, true);
+        assert_eq!(s.seq_limit(), max_safe_seq_len(&dims));
+        assert_eq!(s.seq_limit(), 131_071, "small dims leave Context as the binding stage");
+    }
+
+    #[test]
+    fn finish_pass_refuses_growth_past_the_limit() {
+        let dims = LayerDims { d_model: 8, d_k: 4, d_ffn: 16 };
+        let mut s = Session::new(7, 0, random_i8(3, 8, 5), &dims, 1, true);
+        s.set_seq_limit_for_test(4);
+        let y = random_i8(3, 8, 9);
+        // 3 rows -> 4: at the bound, allowed.
+        s.finish_pass(&y).expect("growth to the bound is safe");
+        assert_eq!(s.acts.rows(), 4);
+        // 4 rows -> 5: past the bound, typed error and no mutation.
+        let err = s.finish_pass(&y).expect_err("growth past the bound must be refused");
+        assert_eq!(err, SeqLimitExceeded { session: 7, rows: 5, max_safe_seq_len: 4 });
+        assert!(err.to_string().contains("max_safe_seq_len=4"), "{err}");
+        assert_eq!(s.acts.rows(), 4, "failed growth leaves the session untouched");
+        assert_eq!(s.done_rows, 3);
     }
 
     #[test]

@@ -28,7 +28,13 @@
 //!    is bit-exact with per-session decode while performing strictly
 //!    fewer weight-tile installs and streaming strictly fewer rows,
 //!  * the activation-strip LRU never exceeds its capacity bound and
-//!    hits are pointer-shared.
+//!    hits are pointer-shared,
+//!  * the analyzer's value-range pass is sound: random layer configs
+//!    executed concretely (the stage graph's widened matmuls, causal
+//!    masking, and `narrow` requantization) keep every intermediate
+//!    i32 inside the interval `check::analyze::ranges` infers for its
+//!    stage, and `max_safe_seq_len` sits exactly on the fit/overflow
+//!    frontier.
 
 use std::sync::Arc;
 
@@ -741,6 +747,115 @@ fn prop_act_strip_lru_bound_and_pointer_sharing() {
         let s = metrics.snapshot();
         assert_eq!(s.act_strip_hits + s.act_strip_misses, 400);
         assert!(s.act_strip_hits >= 200, "trial {trial}: immediate re-lookups must hit");
+    }
+}
+
+#[test]
+fn prop_stage_accumulators_stay_inside_the_inferred_intervals() {
+    // Soundness of the analyzer's value-range pass: run random layer
+    // configs *concretely* — the same stage semantics `run_layer_wave`
+    // executes (widened i8 matmuls, prior-K/V concatenation, causal
+    // masking at the session row offset, `narrow` between stages) —
+    // and assert every intermediate i32 lies inside the interval
+    // `check::analyze::ranges` infers for its stage. The abstract
+    // interpreter must over-approximate every concrete execution,
+    // decode shapes (accumulated prefix rows, nonzero row0) included.
+    use dip_core::check::analyze::ranges::{max_safe_seq_len, stage_interval};
+    use dip_core::serving::{layer_graph, narrow_mat, StageId};
+
+    let nodes = layer_graph();
+    let node = |id: StageId| *nodes.iter().find(|n| n.id == id).expect("stage present");
+    let mut g = Gen(0x50A9D);
+    for case in 0..40 {
+        let dims = LayerDims {
+            d_model: g.range(1, 48) as usize,
+            d_k: g.range(1, 32) as usize,
+            d_ffn: g.range(1, 64) as usize,
+        };
+        let prior = g.range(0, 24) as usize; // session rows already accumulated
+        let rows = g.range(1, 16) as usize; // new rows this pass
+        let seq = prior + rows;
+        let seed = g.next();
+        let ctx = format!(
+            "case {case} dims={}/{}/{} prior={prior} rows={rows} seed={seed}",
+            dims.d_model, dims.d_k, dims.d_ffn
+        );
+
+        let check = |id: StageId, m: &Mat<i32>| {
+            let iv = stage_interval(&node(id), &dims, seq);
+            assert!(iv.fits_i32(), "{ctx}: {id:?} interval must fit i32 at seq={seq}");
+            for r in 0..m.rows() {
+                for c in 0..m.cols() {
+                    assert!(
+                        iv.contains(m.get(r, c) as i64),
+                        "{ctx}: {id:?}[{r},{c}] = {} escapes the inferred [{}, {}]",
+                        m.get(r, c),
+                        iv.lo,
+                        iv.hi
+                    );
+                }
+            }
+        };
+
+        let x = random_i8(rows, dims.d_model, seed);
+        let wq = random_i8(dims.d_model, dims.d_k, seed + 1);
+        let wk = random_i8(dims.d_model, dims.d_k, seed + 2);
+        let wv = random_i8(dims.d_model, dims.d_k, seed + 3);
+        let wo = random_i8(dims.d_k, dims.d_model, seed + 4);
+        let w1 = random_i8(dims.d_model, dims.d_ffn, seed + 5);
+        let w2 = random_i8(dims.d_ffn, dims.d_model, seed + 6);
+
+        let q_acc = x.widen().matmul(&wq.widen());
+        check(StageId::Q, &q_acc);
+        let q = narrow_mat(&q_acc);
+        let k_acc = x.widen().matmul(&wk.widen());
+        check(StageId::K, &k_acc);
+        let k = narrow_mat(&k_acc);
+        let v_acc = x.widen().matmul(&wv.widen());
+        check(StageId::V, &v_acc);
+        let v = narrow_mat(&v_acc);
+
+        // Session-accumulated attention operands: prior rows (already
+        // narrowed at earlier steps, so full-range i8) ahead of this
+        // pass's rows — exactly `with_prior` in the executor.
+        let k_full = if prior == 0 { k } else { random_i8(prior, dims.d_k, seed + 7).vconcat(&k) };
+        let v_full = if prior == 0 { v } else { random_i8(prior, dims.d_k, seed + 8).vconcat(&v) };
+
+        let mut s_acc = q.widen().matmul(&k_full.transpose().widen());
+        for r in 0..rows {
+            for j in (prior + r + 1)..seq {
+                s_acc.set(r, j, 0); // mask_causal at row0 = prior
+            }
+        }
+        check(StageId::Scores, &s_acc);
+        let s = narrow_mat(&s_acc);
+
+        let c_acc = s.widen().matmul(&v_full.widen()); // contracts over seq
+        check(StageId::Context, &c_acc);
+        let c = narrow_mat(&c_acc);
+
+        let o_acc = c.widen().matmul(&wo.widen());
+        check(StageId::OutProj, &o_acc);
+        let o = narrow_mat(&o_acc);
+        let u_acc = o.widen().matmul(&w1.widen());
+        check(StageId::FfnUp, &u_acc);
+        let u = narrow_mat(&u_acc);
+        check(StageId::FfnDown, &u.widen().matmul(&w2.widen()));
+
+        // The derived bound sits exactly on the interval analysis'
+        // frontier: every stage fits at the bound, some stage fails one
+        // step past it. (These dims are all far below the i8×i8 depth
+        // cap, so Context binds and the bound is the full 131071.)
+        let msl = max_safe_seq_len(&dims);
+        assert_eq!(msl, 131_071, "{ctx}");
+        assert!(
+            nodes.iter().all(|n| stage_interval(n, &dims, msl).fits_i32()),
+            "{ctx}: every stage must fit at the proven bound"
+        );
+        assert!(
+            nodes.iter().any(|n| !stage_interval(n, &dims, msl + 1).fits_i32()),
+            "{ctx}: one step past the bound must overflow"
+        );
     }
 }
 
