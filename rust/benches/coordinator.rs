@@ -118,12 +118,25 @@ fn fairness_scenario(hot_requests: usize, cold_requests: usize, plug_rows: usize
     );
     for t in &out.final_tenants {
         println!(
-            "tenant {}: submitted {}  served {}  mean wait {:.2} ms",
+            "tenant {}: submitted {}  served {}  mean wait {:.2} ms  wait p50/p95/p99 {:.2}/{:.2}/{:.2} ms",
             t.tenant,
             t.requests_submitted,
             t.jobs_served,
-            t.mean_wait().as_secs_f64() * 1e3
+            t.mean_wait().as_secs_f64() * 1e3,
+            t.wait_hist.p50() as f64 / 1e6,
+            t.wait_hist.p95() as f64 / 1e6,
+            t.wait_hist.p99() as f64 / 1e6,
         );
+        // The per-tenant wait histogram must conserve against the
+        // counters it replaced: one sample per served job, sum exact.
+        assert_eq!(
+            t.wait_hist.count(),
+            t.jobs_served,
+            "tenant {} wait histogram lost samples",
+            t.tenant
+        );
+        assert_eq!(t.wait_hist.sum(), t.wait_ns, "tenant {} wait histogram sum drifted", t.tenant);
+        assert!(t.wait_hist.p95() >= t.wait_hist.p50(), "quantiles must be monotone");
     }
     assert!(
         share >= 0.25,

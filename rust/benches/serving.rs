@@ -15,14 +15,32 @@
 //! Set `DIP_BENCH_SMOKE=1` for reduced sizes (CI smoke: same scenario,
 //! same assertions — including the strict weight-load drop under
 //! batching — at a fraction of the wall time).
+//!
+//! Every measured run's flight-recorder trace is validated and audited
+//! against the settled ledger; the waved run's trace is exported as
+//! `BENCH_serving_trace.json` (Chrome trace-event JSON — open in
+//! Perfetto) and analytical-drift telemetry rides `BENCH_serving.json`.
 
+use dip_core::analytical::Arch;
 use dip_core::bench_harness::report::Json;
 use dip_core::bench_harness::scenarios::{
     assert_cached_strictly_cheaper, assert_waved_strictly_cheaper, run_decode_mix, run_wave_mix,
     run_wave_mix_per_session, DecodeMix, DecodeOutcome, WaveMix, WaveOutcome, WaveSessionSpec,
 };
 use dip_core::bench_harness::timing::{bench, report_throughput, smoke_mode};
+use dip_core::check::audit::audit_trace;
+use dip_core::coordinator::MetricsSnapshot;
+use dip_core::obs::{drift_report, Trace};
 use dip_core::serving::{LayerDims, WavePolicy};
+
+/// Gate on the recorder's contract: the trace is well-formed and its
+/// event tallies conserve exactly against the settled ledger.
+fn assert_trace_faithful(trace: &Trace, snap: &MetricsSnapshot, what: &str) {
+    let violations = trace.validate();
+    assert!(violations.is_empty(), "{what}: malformed trace:\n{}", violations.join("\n"));
+    let report = audit_trace(&trace.counts(), snap);
+    assert!(report.is_balanced(), "{what}: trace-ledger audit failed:\n{report}");
+}
 
 fn outcome_json(o: &DecodeOutcome) -> Json {
     let m = &o.metrics;
@@ -86,6 +104,9 @@ fn main() {
     let cached = run_decode_mix(&cfg, true);
     let uncached = run_decode_mix(&cfg, false);
     let ab = assert_cached_strictly_cheaper(&cached, &uncached);
+    assert_trace_faithful(&cached.trace, &cached.metrics, "decode-mix/cached");
+    assert_trace_faithful(&uncached.trace, &uncached.metrics, "decode-mix/uncached");
+    let decode_drift = drift_report(&cached.trace, Arch::Dip, cfg.tile, 2);
 
     println!("\nper-step (cached run; session, rows streamed/total, cycles, strip hits, energy):");
     for r in &cached.per_step {
@@ -162,6 +183,16 @@ fn main() {
     let waved = run_wave_mix(&wave_cfg);
     let solo = run_wave_mix_per_session(&wave_cfg);
     let wab = assert_waved_strictly_cheaper(&waved, &solo);
+    assert_trace_faithful(&waved.trace, &waved.metrics, "wave-mix/batched");
+    assert_trace_faithful(&solo.trace, &solo.metrics, "wave-mix/per-session");
+    let wave_drift = drift_report(&waved.trace, Arch::Dip, wave_cfg.tile, 2);
+    println!(
+        "-> drift vs analytical closed forms: decode util {:.2} tfpu {:.2}, wave util {:.2} tfpu {:.2}",
+        decode_drift.mean_util_drift,
+        decode_drift.mean_tfpu_drift,
+        wave_drift.mean_util_drift,
+        wave_drift.mean_tfpu_drift,
+    );
 
     println!("\nper-wave (sessions, stacked rows, joins, leaves, cycles):");
     for r in &waved.reports {
@@ -224,6 +255,10 @@ fn main() {
         ("rows_ratio", Json::num(ab.rows_ratio)),
         ("cached", outcome_json(&cached)),
         ("uncached", outcome_json(&uncached)),
+        ("drift", decode_drift.to_json()),
+        ("wait_ns_p50", Json::num(cached.trace.merged_wait_hist().p50() as f64)),
+        ("wait_ns_p95", Json::num(cached.trace.merged_wait_hist().p95() as f64)),
+        ("wait_ns_p99", Json::num(cached.trace.merged_wait_hist().p99() as f64)),
         (
             "wave_mix",
             Json::obj(vec![
@@ -236,9 +271,12 @@ fn main() {
                 ("sessions_per_s_per_session", Json::num(r_solo.throughput(sessions_n))),
                 ("batched", wave_json(&waved)),
                 ("per_session", wave_json(&solo)),
+                ("drift", wave_drift.to_json()),
             ]),
         ),
     ]);
     std::fs::write("BENCH_serving.json", json.render()).expect("write BENCH_serving.json");
-    println!("\nwrote BENCH_serving.json");
+    std::fs::write("BENCH_serving_trace.json", waved.trace.chrome_json().render())
+        .expect("write BENCH_serving_trace.json");
+    println!("\nwrote BENCH_serving.json + BENCH_serving_trace.json");
 }

@@ -42,6 +42,7 @@ use crate::coordinator::{
     TenantSnapshot,
 };
 use crate::matrix::{random_i8, Mat};
+use crate::obs::Trace;
 use crate::serving::{
     LayerDims, LayerState, ServeModel, ServingEngine, Session, StepReport, WavePolicy, WaveReport,
     WaveScheduler,
@@ -241,6 +242,8 @@ pub struct DecodeOutcome {
     pub layers: Vec<Vec<LayerState>>,
     pub strip_cache_len: usize,
     pub strip_cache_capacity: usize,
+    /// Settled flight-recorder trace of the run (see [`crate::obs`]).
+    pub trace: Trace,
 }
 
 /// Serve the decode mix once, with activation caching (session row
@@ -289,8 +292,12 @@ pub fn run_decode_mix(cfg: &DecodeMix, cached: bool) -> DecodeOutcome {
         engine.strip_cache().map_or((0, 0), |c| (c.len(), c.capacity()));
     let acts = sessions.iter().map(|s| s.acts.clone()).collect();
     let layers = sessions.into_iter().map(|s| s.layers).collect();
+    // The recorder outlives the coordinator; its trace settles once
+    // shutdown has joined the workers and published their rings.
+    let rec = engine.coordinator().recorder();
     let metrics = engine.shutdown();
-    DecodeOutcome { metrics, per_step, acts, layers, strip_cache_len, strip_cache_capacity }
+    let trace = rec.trace();
+    DecodeOutcome { metrics, per_step, acts, layers, strip_cache_len, strip_cache_capacity, trace }
 }
 
 /// Improvement factors of the cached run over the uncached baseline.
@@ -403,6 +410,8 @@ pub struct WaveOutcome {
     pub reports: Vec<WaveReport>,
     pub acts: Vec<Mat<i8>>,
     pub layers: Vec<Vec<LayerState>>,
+    /// Settled flight-recorder trace of the run (see [`crate::obs`]).
+    pub trace: Trace,
 }
 
 fn collect_sessions(mut sessions: Vec<Session>) -> (Vec<Mat<i8>>, Vec<Vec<LayerState>>) {
@@ -448,8 +457,10 @@ pub fn run_wave_mix(cfg: &WaveMix) -> WaveOutcome {
         }
     }
     let (acts, layers) = collect_sessions(ws.take_finished());
+    let rec = ws.engine().coordinator().recorder();
     let metrics = ws.shutdown();
-    WaveOutcome { metrics, reports, acts, layers }
+    let trace = rec.trace();
+    WaveOutcome { metrics, reports, acts, layers, trace }
 }
 
 /// The baseline: the same sessions served one at a time on the
@@ -471,8 +482,10 @@ pub fn run_wave_mix_per_session(cfg: &WaveMix) -> WaveOutcome {
         })
         .collect();
     let (acts, layers) = collect_sessions(sessions);
+    let rec = engine.coordinator().recorder();
     let metrics = engine.shutdown();
-    WaveOutcome { metrics, reports: Vec::new(), acts, layers }
+    let trace = rec.trace();
+    WaveOutcome { metrics, reports: Vec::new(), acts, layers, trace }
 }
 
 /// Improvement factors of the waved run over the per-session baseline.

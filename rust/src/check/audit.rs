@@ -20,6 +20,13 @@
 //! [`Coordinator::shutdown_audited`], which audits strictly after the
 //! join, and why there is no `audit(&self)` on a live coordinator.
 //!
+//! [`audit_trace`] extends the same discipline to the flight
+//! recorder: every event tally in a settled [`TraceCounts`] must
+//! partition exactly into the snapshot's counters (jobs, installs,
+//! skips, coalesced tails, waves), so a dropped ring slot or a
+//! double-emitted event fails by name instead of silently skewing the
+//! exported trace.
+//!
 //! Mutation smoke: `DeviceDefect::CreditWithoutCharge` re-introduces
 //! the PR 1 charge-without-credit bug behind a test-only shim, and the
 //! tests here prove the auditor flags it (`load-charge`,
@@ -31,6 +38,7 @@ use std::fmt;
 
 use crate::analytical::Arch;
 use crate::coordinator::{CoordinatorConfig, MetricsSnapshot, TenantSnapshot};
+use crate::obs::TraceCounts;
 
 /// One audited identity.
 #[derive(Debug, Clone)]
@@ -225,6 +233,125 @@ pub fn audit_coordinator(
     AuditReport { checks }
 }
 
+/// Audit a settled flight-recorder trace against the ledger it rode
+/// along with: every traced event tally must partition exactly into
+/// the [`MetricsSnapshot`] counters. A dropped ring slot or a
+/// double-emitted event breaks a named identity here, so the trace can
+/// be trusted as a faithful, lossless journal of the run.
+///
+/// Like [`audit_coordinator`] this is only meaningful at a **settled**
+/// drain point — after [`Recorder::publish`](crate::obs::Recorder) has
+/// collected every worker's ring (i.e. after shutdown).
+pub fn audit_trace(counts: &TraceCounts, snap: &MetricsSnapshot) -> AuditReport {
+    let checks = vec![
+        // Lossless journal: the bounded rings never overwrote anything.
+        eq("trace-no-drops", counts.dropped, 0, "ring drops == 0"),
+        // Per-job spans conserve against the executed-job ledger.
+        eq(
+            "trace-job-conservation",
+            counts.jobs,
+            snap.jobs_executed,
+            "job spans == jobs_executed",
+        ),
+        eq(
+            "trace-kernel-per-job",
+            counts.kernels,
+            counts.jobs,
+            "kernel spans == job spans",
+        ),
+        eq(
+            "trace-install-conservation",
+            counts.installs,
+            snap.weight_loads,
+            "install spans == weight_loads",
+        ),
+        eq(
+            "trace-skip-conservation",
+            counts.install_skips + counts.coalesced_skips,
+            snap.weight_loads_skipped,
+            "install_skips + coalesced_skips == weight_loads_skipped",
+        ),
+        eq(
+            "trace-coalesce-conservation",
+            counts.coalesced_skips,
+            snap.jobs_coalesced,
+            "coalesced_skips == jobs_coalesced",
+        ),
+        // Every job either installed or skipped — exactly once.
+        eq(
+            "trace-install-partition",
+            counts.installs + counts.install_skips + counts.coalesced_skips,
+            counts.jobs,
+            "installs + install_skips + coalesced_skips == job spans",
+        ),
+        eq(
+            "trace-cache-hit-conservation",
+            counts.cache_hits,
+            snap.cache_hits,
+            "cache-hit instants == cache_hits",
+        ),
+        eq(
+            "trace-cache-miss-conservation",
+            counts.cache_misses,
+            snap.cache_misses,
+            "cache-miss instants == cache_misses",
+        ),
+        // Control-track lifecycle events conserve against the router.
+        eq(
+            "trace-submit-conservation",
+            counts.submits,
+            snap.requests_submitted,
+            "submit events == requests_submitted",
+        ),
+        eq(
+            "trace-enqueue-conservation",
+            counts.enqueues,
+            snap.jobs_executed,
+            "enqueue events == jobs_executed",
+        ),
+        eq(
+            "trace-backpressure-conservation",
+            counts.backpressure,
+            snap.backpressure_events,
+            "backpressure events == backpressure_events",
+        ),
+        eq(
+            "trace-steal-conservation",
+            counts.steals,
+            snap.steals,
+            "steal instants == steals",
+        ),
+        // Every job span was fed by exactly one dequeue: a local pop, a
+        // steal, or a coalesced drain by the batch head's worker.
+        eq(
+            "trace-pop-partition",
+            counts.pops + counts.steals + counts.coalesced_skips,
+            counts.jobs,
+            "pops + steals + coalesced_skips == job spans",
+        ),
+        // Serving-side wave/session lifecycle pairs up and conserves.
+        eq(
+            "trace-wave-conservation",
+            counts.wave_closes,
+            snap.waves,
+            "wave-close events == waves",
+        ),
+        eq(
+            "trace-wave-open-close",
+            counts.wave_opens,
+            counts.wave_closes,
+            "wave opens == wave closes",
+        ),
+        eq(
+            "trace-session-join-leave",
+            counts.session_joins,
+            counts.session_leaves,
+            "session joins == session leaves",
+        ),
+    ];
+    AuditReport { checks }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -262,6 +389,7 @@ mod tests {
             requests_submitted: 4,
             jobs_served: 4,
             wait_ns: 0,
+            ..Default::default()
         }];
         (snap, tenants, vec![3, 1], cfg)
     }
@@ -308,6 +436,65 @@ mod tests {
         assert!(report.failures().iter().any(|c| c.name == "device-drain"), "{report}");
         let report = audit_coordinator(&snap, &[], &[3, 1], &cfg);
         assert!(report.failures().iter().any(|c| c.name == "tenant-drain"), "{report}");
+    }
+
+    /// Trace tallies that conserve exactly against [`balanced`]'s
+    /// snapshot: 4 jobs = 1 install + 1 plain skip + 2 coalesced
+    /// tails, fed by 2 pops + 2 coalesced drains.
+    fn balanced_counts() -> TraceCounts {
+        TraceCounts {
+            submits: 4,
+            enqueues: 4,
+            pops: 2,
+            jobs: 4,
+            installs: 1,
+            install_skips: 1,
+            coalesced_skips: 2,
+            kernels: 4,
+            cache_misses: 1,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn balanced_trace_passes_every_identity() {
+        let (snap, _, _, _) = balanced();
+        let report = audit_trace(&balanced_counts(), &snap);
+        assert!(report.is_balanced(), "{report}");
+        report.assert_balanced();
+    }
+
+    #[test]
+    fn each_broken_trace_identity_is_flagged_by_name() {
+        let (snap, _, _, _) = balanced();
+        let cases: Vec<(&str, Box<dyn Fn(&mut TraceCounts)>)> = vec![
+            ("trace-no-drops", Box::new(|c| c.dropped += 1)),
+            ("trace-job-conservation", Box::new(|c| c.jobs -= 1)),
+            ("trace-kernel-per-job", Box::new(|c| c.kernels += 1)),
+            ("trace-install-conservation", Box::new(|c| c.installs += 1)),
+            ("trace-skip-conservation", Box::new(|c| c.install_skips += 1)),
+            ("trace-coalesce-conservation", Box::new(|c| c.coalesced_skips -= 1)),
+            ("trace-install-partition", Box::new(|c| c.install_skips -= 1)),
+            ("trace-cache-hit-conservation", Box::new(|c| c.cache_hits += 1)),
+            ("trace-cache-miss-conservation", Box::new(|c| c.cache_misses -= 1)),
+            ("trace-submit-conservation", Box::new(|c| c.submits -= 1)),
+            ("trace-enqueue-conservation", Box::new(|c| c.enqueues += 1)),
+            ("trace-backpressure-conservation", Box::new(|c| c.backpressure += 1)),
+            ("trace-steal-conservation", Box::new(|c| c.steals += 1)),
+            ("trace-pop-partition", Box::new(|c| c.pops += 1)),
+            ("trace-wave-conservation", Box::new(|c| c.wave_closes += 1)),
+            ("trace-wave-open-close", Box::new(|c| c.wave_opens += 1)),
+            ("trace-session-join-leave", Box::new(|c| c.session_joins += 1)),
+        ];
+        for (name, brk) in cases {
+            let mut c = balanced_counts();
+            brk(&mut c);
+            let report = audit_trace(&c, &snap);
+            assert!(
+                report.failures().iter().any(|f| f.name == name),
+                "breaking `{name}` went unflagged:\n{report}"
+            );
+        }
     }
 
     #[test]

@@ -35,6 +35,13 @@
 //!    pass proves against. Scanned per fn body; `#[cfg(test)]`
 //!    modules are exempt (tests truncate deliberately to build
 //!    fixtures).
+//! 6. **`no-raw-wall-clock`** — `Instant::now()` / `SystemTime::now()`
+//!    are banned in the `serving/` and `arch/` hot paths outside
+//!    allowlisted sites ([`WALL_CLOCK_ALLOWLIST`]): timestamping on
+//!    those paths must go through [`crate::obs::clock`] so the flight
+//!    recorder's overhead contract (one `Stopwatch` read per recorded
+//!    span, nothing hidden) stays machine-checkable. `#[cfg(test)]`
+//!    modules are exempt.
 //!
 //! The whole-tree scan runs as an ordinary `#[test]`
 //! (`shipped_tree_is_lint_clean`), so tier-1 `cargo test` gates on it;
@@ -68,6 +75,7 @@ const RULE_SNAPSHOT: &str = "metrics-snapshot-complete";
 const RULE_SEQCST: &str = "no-seqcst";
 const RULE_HOT_ALLOC: &str = "no-hot-path-alloc";
 const RULE_TRUNC_CAST: &str = "no-unannotated-truncating-cast";
+const RULE_WALL_CLOCK: &str = "no-raw-wall-clock";
 
 /// Allocation markers banned inside the kernel hot region (shared
 /// with the analyzer's hot-region pass).
@@ -92,6 +100,18 @@ const TRUNC_CASTS: &[&str] = &["as i8", "as u8", "as i16", "as u16"];
 /// is the one blessed requant point
 /// ([`crate::serving::graph::narrow`]).
 const CAST_ALLOWLIST: &[(&str, &str)] = &[("serving/graph.rs", "narrow")];
+
+/// Raw wall-clock reads banned on the serving/arch hot paths: all
+/// timestamping there rides [`crate::obs::clock::Stopwatch`], so the
+/// recorder's overhead contract stays auditable in one place.
+const WALL_CLOCK_MARKERS: &[&str] = &["Instant::now(", "SystemTime::now("];
+
+/// Functions allowed to read the wall clock raw: `(file suffix, fn
+/// name)`, same annotation mechanism as [`CAST_ALLOWLIST`]. Empty as
+/// of this PR — every serving/arch call site goes through
+/// `obs::clock` — and kept so a future site is an explicit,
+/// reviewable diff here rather than a silent exception.
+const WALL_CLOCK_ALLOWLIST: &[(&str, &str)] = &[];
 
 /// Names and lines of `pub <name>: AtomicU64` fields in stripped lines.
 fn atomic_u64_fields(lines: &[&str]) -> Vec<(usize, String)> {
@@ -220,6 +240,41 @@ pub fn lint_source(label: &str, source: &str) -> Vec<LintFinding> {
                                 "truncating `{cast}` in fn {} outside an annotated site; \
                                  route requantization through serving::graph::narrow or add \
                                  the (file, fn) to CAST_ALLOWLIST in check/lint.rs",
+                                sp.name
+                            ),
+                        });
+                    }
+                }
+            }
+        }
+    }
+
+    // Rule 6: raw wall-clock reads in the serving/arch hot paths only
+    // at annotated sites; timestamps there belong to obs::clock.
+    if label.contains("serving/") || label.contains("arch/") {
+        let code = strip_tests(&stripped);
+        for sp in fn_spans(code) {
+            if WALL_CLOCK_ALLOWLIST.iter().any(|(f, name)| label.ends_with(f) && sp.name == *name)
+            {
+                continue;
+            }
+            let body: String =
+                code.chars().skip(sp.body_start).take(sp.body_end - sp.body_start).collect();
+            let (col, lmap) = collapse_tokens_from(&body, sp.body_line);
+            let chars: Vec<char> = col.chars().collect();
+            for marker in WALL_CLOCK_MARKERS {
+                for pos in find_all(&col, marker) {
+                    let before_ok = pos == 0
+                        || !(chars[pos - 1].is_ascii_alphanumeric() || chars[pos - 1] == '_');
+                    if before_ok {
+                        findings.push(LintFinding {
+                            rule: RULE_WALL_CLOCK,
+                            file: label.to_string(),
+                            line: lmap[pos],
+                            detail: format!(
+                                "raw `{marker})` in fn {} on a hot path; take timestamps \
+                                 through crate::obs::clock::Stopwatch (or add the (file, fn) \
+                                 to WALL_CLOCK_ALLOWLIST in check/lint.rs)",
                                 sp.name
                             ),
                         });
@@ -397,6 +452,39 @@ mod tests {
         // An identifier merely ending in `as` is not a cast keyword.
         let ident = "pub fn f(alias: i8) -> i8 {\n    has_i8(alias)\n}\n";
         assert!(lint_source("src/arch/fake.rs", ident).is_empty());
+    }
+
+    #[test]
+    fn raw_wall_clock_on_hot_path_is_caught() {
+        let src = "pub fn advance(&mut self) {\n    let t0 = Instant::now();\n}\n";
+        let f = lint_source("src/serving/fake.rs", src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!((f[0].rule, f[0].line), (RULE_WALL_CLOCK, 2));
+        assert!(f[0].detail.contains("fn advance"), "{}", f[0].detail);
+        // SystemTime is banned the same way.
+        let st = "pub fn stamp(&self) {\n    let t = SystemTime::now();\n}\n";
+        assert_eq!(lint_source("src/arch/fake.rs", st).len(), 1);
+    }
+
+    #[test]
+    fn wall_clock_rule_scopes_to_serving_and_arch_only() {
+        let src = "pub fn f() {\n    let t0 = Instant::now();\n}\n";
+        // obs/ owns the blessed wrapper; coordinator and the harness
+        // keep their existing timestamping; only hot paths are gated.
+        assert!(lint_source("src/obs/clock.rs", src).is_empty());
+        assert!(lint_source("src/coordinator/device.rs", src).is_empty());
+        assert!(lint_source("src/bench_harness/timing.rs", src).is_empty());
+        assert_eq!(lint_source("src/serving/decode.rs", src).len(), 1);
+    }
+
+    #[test]
+    fn wall_clock_test_modules_and_lookalike_idents_pass() {
+        let src = "pub fn f(sim: &SimInstant) -> u64 {\n    sim.cycles()\n}\n\
+                   #[cfg(test)]\nmod tests {\n    fn t() { let t0 = Instant::now(); }\n}\n";
+        assert!(lint_source("src/serving/fake.rs", src).is_empty());
+        // A type merely ending in `Instant` is not the std clock.
+        let ident = "pub fn f() -> u64 {\n    MyInstant::now(3)\n}\n";
+        assert!(lint_source("src/serving/fake.rs", ident).is_empty());
     }
 
     #[test]

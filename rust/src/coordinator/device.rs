@@ -27,6 +27,7 @@ use crate::arch::{
     dip::DipArray, weight_load_reg8_writes, ws::WsArray, PreparedWeights, SystolicArray,
 };
 use crate::matrix::Mat;
+use crate::obs::{DeviceObs, Event, EventKind, ObsConfig};
 
 use super::metrics::Metrics;
 use super::queue::TenantId;
@@ -113,10 +114,27 @@ pub struct Device {
     load_cycles: u64,
     /// Injected ledger misbehavior (see [`DeviceDefect`]).
     defect: Option<DeviceDefect>,
+    /// Flight-recorder observer: this device's event ring, latency
+    /// histograms, and simulated-cycle clock (see [`crate::obs`]). The
+    /// worker thread owns it exclusively — emission is branch +
+    /// slot-store, never a lock — and the coordinator collects it via
+    /// [`take_obs`](Self::take_obs) at shutdown.
+    obs: DeviceObs,
 }
 
 impl Device {
     pub fn new(cfg: DeviceConfig, index: usize, metrics: Arc<Metrics>) -> Self {
+        Self::new_with_obs(cfg, index, metrics, ObsConfig::default())
+    }
+
+    /// [`new`](Self::new) with an explicit recorder configuration
+    /// (disabled rings for overhead A/B runs, small rings for tests).
+    pub fn new_with_obs(
+        cfg: DeviceConfig,
+        index: usize,
+        metrics: Arc<Metrics>,
+        obs_cfg: ObsConfig,
+    ) -> Self {
         assert!(cfg.weight_cache_tiles >= 1, "prepared-weight cache needs capacity");
         let array: Box<dyn SystolicArray> = match cfg.arch {
             Arch::Ws => Box::new(WsArray::new(cfg.tile, cfg.mac_stages)),
@@ -131,6 +149,7 @@ impl Device {
             cache_capacity: cfg.weight_cache_tiles,
             load_cycles: 0,
             defect: cfg.defect,
+            obs: DeviceObs::new(index, obs_cfg),
         }
     }
 
@@ -160,6 +179,7 @@ impl Device {
         let resident = self.install_or_skip(&job);
         let mut run = self.array.run_tile(&job.x_strip);
         self.settle_load_phase(&mut run, resident);
+        self.record_job_obs(&job, &run, !resident, false, t0);
         let last = self.account_run(job, &run, t0);
         self.metrics.add_busy(t0.elapsed());
         last
@@ -207,6 +227,7 @@ impl Device {
         debug_assert_eq!(runs.len(), jobs.len());
         for (i, (job, mut run)) in jobs.into_iter().zip(runs).enumerate() {
             self.settle_load_phase(&mut run, resident || i > 0);
+            self.record_job_obs(&job, &run, !resident && i == 0, i > 0, t0);
             self.account_run(job, &run, t0);
         }
         self.metrics.add_busy(t0.elapsed());
@@ -225,6 +246,20 @@ impl Device {
             self.metrics.weight_loads_skipped.fetch_add(1, Relaxed);
             self.metrics.weight_load_cycles_saved.fetch_add(self.load_cycles, Relaxed);
         } else {
+            if self.obs.enabled() {
+                // Same id+content predicate `prepared_for` is about to
+                // apply, so the traced hit/miss tallies match the
+                // ledger's `cache_hits`/`cache_misses` exactly.
+                let hit = self
+                    .cache
+                    .iter()
+                    .any(|(id, w, _)| *id == job.tile_id && **w == *job.w_tile);
+                let kind = if hit { EventKind::CacheHit } else { EventKind::CacheMiss };
+                let mut ev = Event::new(kind, self.obs.cycles(), 0);
+                ev.tenant = job.tenant;
+                ev.tile = job.tile_id;
+                self.obs.emit(ev);
+            }
             let prepared = self.prepared_for(job);
             self.load_cycles = self.array.load_prepared(&prepared);
             self.metrics.weight_loads.fetch_add(1, Relaxed);
@@ -256,6 +291,76 @@ impl Device {
             run.stats.cycles += self.load_cycles;
             run.stats.events.pe_idle_cycles += self.load_cycles * n * n;
         }
+    }
+
+    /// Record one settled job into the flight recorder: the `job` span
+    /// with its nested `install`/`kernel` slices (or the skip instant),
+    /// the wait/install/kernel histograms, and the device clock
+    /// advance. Stamps are in this device's cumulative simulated
+    /// cycles, so the same deterministic scenario always produces the
+    /// same trace. `installed` is whether this job really loaded the
+    /// tile; `coalesced_tail` marks batch tails whose skip rode the
+    /// head's install.
+    fn record_job_obs(
+        &mut self,
+        job: &Job,
+        run: &crate::arch::TileRun,
+        installed: bool,
+        coalesced_tail: bool,
+        started: Instant,
+    ) {
+        if !self.obs.enabled() {
+            return;
+        }
+        let t = self.obs.cycles();
+        let total = run.stats.cycles;
+        let inst = if installed { self.load_cycles } else { 0 };
+        let wait = started.saturating_duration_since(job.enqueued_at);
+        let wait_ns = u64::try_from(wait.as_nanos()).unwrap_or(u64::MAX);
+        self.obs.wait_hist.record(wait_ns);
+        if installed {
+            self.obs.install_hist.record(inst);
+        }
+        self.obs.kernel_hist.record(total - inst);
+        let rows = job.x_strip.rows() as u64;
+        let stamp = |kind: EventKind, cyc: u64, dur: u64| {
+            let mut ev = Event::new(kind, cyc, dur);
+            ev.tenant = job.tenant;
+            ev.tile = job.tile_id;
+            ev.rows = rows;
+            ev
+        };
+        self.obs.emit(stamp(EventKind::Job, t, total));
+        if installed {
+            self.obs.emit(stamp(EventKind::Install, t, inst));
+        } else if coalesced_tail {
+            self.obs.emit(stamp(EventKind::CoalescedSkip, t, 0));
+        } else {
+            self.obs.emit(stamp(EventKind::InstallSkip, t, 0));
+        }
+        self.obs.emit(stamp(EventKind::Kernel, t + inst, total - inst));
+        self.obs.note_job(rows, run.stats.events.pe_active_cycles, run.stats.tfpu_cycles);
+        self.obs.advance(total);
+    }
+
+    /// Record that the worker popped a job from its own shard (an
+    /// instant on this device's track, stamped at its current cycle).
+    pub fn note_pop(&mut self) {
+        let ev = Event::new(EventKind::Pop, self.obs.cycles(), 0);
+        self.obs.emit(ev);
+    }
+
+    /// Record that the worker stole a job from another shard.
+    pub fn note_steal(&mut self) {
+        let ev = Event::new(EventKind::Steal, self.obs.cycles(), 0);
+        self.obs.emit(ev);
+    }
+
+    /// Surrender the device's observer (worker shutdown hands it to
+    /// [`crate::obs::Recorder::publish`]); the device keeps a disabled
+    /// stub so later calls stay safe no-ops.
+    pub fn take_obs(&mut self) -> DeviceObs {
+        std::mem::replace(&mut self.obs, DeviceObs::new(self.index, ObsConfig::disabled()))
     }
 
     /// Per-job accounting + psum fold; returns true if the job
@@ -647,6 +752,96 @@ mod tests {
         let m = metrics.snapshot();
         assert_eq!(m.jobs_executed, 1);
         assert_eq!(m.jobs_coalesced, 0, "a singleton batch has no tail");
+    }
+
+    #[test]
+    fn golden_trace_for_tiny_two_device_scenario() {
+        // Deterministic golden trace, DiP tile 8, s = 2: the dedicated
+        // load phase is N-1 = 7 cycles and an r-row strip streams in
+        // n + r + s - 2 = r + 8 cycles. Device 0 runs an 8-row install
+        // job then a 4-row resident skip; device 1 coalesces a batch of
+        // three 8-row same-tile jobs. Every (kind, cycle, duration)
+        // triple is pinned — the trace is an artifact, not a timing.
+        use crate::obs::EventKind as K;
+        let shape = |dev: &mut Device| -> Vec<(K, u64, u64)> {
+            dev.take_obs().into_trace().events.iter().map(|e| (e.kind, e.cyc, e.dur)).collect()
+        };
+        let metrics = Arc::new(Metrics::default());
+        let w = random_i8(8, 8, 2);
+
+        let mut d0 = Device::new(dip8(), 0, metrics.clone());
+        let (job_a, _rx_a) = job_for(&random_i8(8, 8, 1), &w);
+        d0.execute(job_a);
+        let (job_b, _rx_b) = job_for(&random_i8(4, 8, 3), &w);
+        d0.execute(job_b);
+        assert_eq!(
+            shape(&mut d0),
+            vec![
+                (K::CacheMiss, 0, 0), // cold prepared cache
+                (K::Job, 0, 23),      // 7 install + 16 stream
+                (K::Install, 0, 7),
+                (K::Kernel, 7, 16),
+                (K::Job, 23, 12), // 4-row skip: 4 + 8 stream cycles
+                (K::InstallSkip, 23, 0),
+                (K::Kernel, 23, 12),
+            ]
+        );
+
+        let mut d1 = Device::new(dip8(), 1, metrics.clone());
+        let (jobs, _rxs): (Vec<_>, Vec<_>) =
+            (0..3).map(|i| job_for(&random_i8(8, 8, 40 + i), &w)).unzip();
+        d1.execute_batch(jobs);
+        let trace = d1.take_obs().into_trace();
+        assert_eq!(
+            trace.events.iter().map(|e| (e.kind, e.cyc, e.dur)).collect::<Vec<_>>(),
+            vec![
+                (K::CacheMiss, 0, 0),
+                (K::Job, 0, 23),
+                (K::Install, 0, 7),
+                (K::Kernel, 7, 16),
+                (K::Job, 23, 16), // coalesced tails pay streaming only
+                (K::CoalescedSkip, 23, 0),
+                (K::Kernel, 23, 16),
+                (K::Job, 39, 16),
+                (K::CoalescedSkip, 39, 0),
+                (K::Kernel, 39, 16),
+            ]
+        );
+        assert_eq!(trace.cycles, 55);
+        assert_eq!(trace.jobs, 3);
+        assert_eq!(trace.rows, 24);
+        assert_eq!(trace.first_tfpu, Some(8), "eq (7): DiP reaches full PE use at cycle n");
+        assert_eq!(trace.wait_hist.count(), 3);
+        assert_eq!(trace.install_hist.count(), 1);
+        assert_eq!(trace.kernel_hist.count(), 3);
+    }
+
+    #[test]
+    fn disabled_recorder_emits_nothing_and_ledger_is_untouched() {
+        // The disabled path must be a true no-op for the trace while
+        // leaving every metrics counter identical to the enabled run.
+        let m_on = Arc::new(Metrics::default());
+        let m_off = Arc::new(Metrics::default());
+        let mut on = Device::new(dip8(), 0, m_on.clone());
+        let mut off = Device::new_with_obs(dip8(), 0, m_off.clone(), ObsConfig::disabled());
+        let w = random_i8(8, 8, 2);
+        for seed in [1u64, 9] {
+            let x = random_i8(8, 8, seed);
+            let (job, _rx) = job_for(&x, &w);
+            on.execute(job);
+            let (job, _rx) = job_for(&x, &w);
+            off.execute(job);
+        }
+        let silent = off.take_obs().into_trace();
+        assert!(silent.events.is_empty());
+        assert_eq!(silent.jobs, 0);
+        let loud = on.take_obs().into_trace();
+        assert_eq!(loud.jobs, 2);
+        let (a, b) = (m_on.snapshot(), m_off.snapshot());
+        assert_eq!(a.jobs_executed, b.jobs_executed);
+        assert_eq!(a.sim_cycles, b.sim_cycles);
+        assert_eq!(a.weight_loads, b.weight_loads);
+        assert_eq!(a.weight_loads_skipped, b.weight_loads_skipped);
     }
 
     #[test]

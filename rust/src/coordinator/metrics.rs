@@ -9,6 +9,7 @@ use std::sync::Mutex;
 use std::time::Duration;
 
 use super::queue::TenantId;
+use crate::obs::Hist;
 use crate::sync::lock_unpoisoned;
 
 /// Per-tenant service accounting (fairness observability: who got the
@@ -18,6 +19,7 @@ struct TenantCounters {
     requests_submitted: u64,
     jobs_served: u64,
     wait_ns: u64,
+    wait_hist: Hist,
 }
 
 /// Shared counters updated by the router and every worker.
@@ -140,6 +142,11 @@ pub struct TenantSnapshot {
     /// (includes any time the submit spent blocked on backpressure —
     /// the full latency the tenant experienced before its job ran).
     pub wait_ns: u64,
+    /// Log2-bucketed distribution of the same per-job waits, so the
+    /// fairness story covers tails (p95/p99), not just the mean —
+    /// `wait_hist.count() == jobs_served` and `wait_hist.sum()` equals
+    /// `wait_ns` up to the histogram's saturating add.
+    pub wait_hist: Hist,
 }
 
 impl TenantSnapshot {
@@ -196,7 +203,9 @@ impl Metrics {
         let mut map = lock_unpoisoned(&self.tenants);
         let c = map.entry(tenant).or_default();
         c.jobs_served += 1;
-        c.wait_ns += wait.as_nanos() as u64;
+        let ns = wait.as_nanos() as u64;
+        c.wait_ns += ns;
+        c.wait_hist.record(ns);
     }
 
     /// Per-tenant counters, sorted by tenant id.
@@ -209,6 +218,7 @@ impl Metrics {
                 requests_submitted: c.requests_submitted,
                 jobs_served: c.jobs_served,
                 wait_ns: c.wait_ns,
+                wait_hist: c.wait_hist,
             })
             .collect();
         v.sort_by_key(|t| t.tenant);
@@ -391,6 +401,13 @@ mod tests {
         assert_eq!(ts[1].jobs_served, 2);
         assert_eq!(ts[1].wait_ns, 400);
         assert_eq!(ts[1].mean_wait(), Duration::from_nanos(200));
+        // The histogram rides the same lock: one sample per served job,
+        // summing to the same total the mean is computed from.
+        assert_eq!(ts[1].wait_hist.count(), ts[1].jobs_served);
+        assert_eq!(ts[1].wait_hist.sum(), ts[1].wait_ns);
+        assert_eq!(ts[1].wait_hist.max(), 300);
+        assert!(ts[1].wait_hist.p99() >= 300);
+        assert_eq!(ts[0].wait_hist.count(), 1);
     }
 
     #[test]

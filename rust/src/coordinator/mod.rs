@@ -57,6 +57,25 @@
 //! `act_rows_reused`, plus `waves` / `wave_stacked_rows` (and the
 //! derived `weight_loads_per_wave` / `mean_wave_rows`).
 //!
+//! # Observability
+//!
+//! The pool is threaded through the [`crate::obs`] flight recorder.
+//! Each worker owns a lock-free, fixed-slot
+//! [`DeviceObs`](crate::obs::DeviceObs) ring and emits the full job
+//! lifecycle in *simulated cycles* — `job` / `install` / `kernel`
+//! spans, `install_skip` / `coalesced_skip` / `cache_hit` /
+//! `cache_miss` / `pop` / `steal` instants — while the router's
+//! [`Recorder`](crate::obs::Recorder) control track records `submit` /
+//! `enqueue` / `backpressure` with causal ids (request, tenant, tile,
+//! device). Queue-wait, install, and kernel latencies ride mergeable
+//! log2 histograms ([`crate::obs::Hist`]; the per-tenant
+//! [`TenantSnapshot::wait_hist`](metrics::TenantSnapshot) replaces the
+//! lone `wait_ns` sum for p50/p95/p99). Rings settle at shutdown
+//! ([`Coordinator::recorder`]), export as Chrome trace-event JSON
+//! (`dip trace-export` → Perfetto), and must conserve exactly against
+//! the metrics ledger ([`crate::check::audit::audit_trace`]); `dip
+//! top` renders the one-shot dashboard over the same data.
+//!
 //! # Correctness tooling
 //!
 //! Two in-tree checkers ([`crate::check`]) hold this module to its

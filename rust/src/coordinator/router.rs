@@ -26,6 +26,7 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::matrix::Mat;
+use crate::obs::{Event, EventKind, ObsConfig, Recorder};
 
 use super::device::{Device, DeviceConfig, Job};
 use super::metrics::{Metrics, MetricsSnapshot, TenantSnapshot};
@@ -202,10 +203,21 @@ pub struct Coordinator {
     placement: Arc<PlacementMap>,
     cfg: CoordinatorConfig,
     next_id: std::sync::atomic::AtomicU64,
+    /// Flight recorder ([`crate::obs`]): the control-track ring the
+    /// submission paths write to, and the collection point worker
+    /// devices publish their rings to at shutdown.
+    recorder: Arc<Recorder>,
 }
 
 impl Coordinator {
     pub fn new(cfg: CoordinatorConfig) -> Self {
+        Self::new_with_obs(cfg, ObsConfig::default())
+    }
+
+    /// [`new`](Self::new) with an explicit flight-recorder
+    /// configuration (the recorder is on by default; `ObsConfig::
+    /// disabled()` gives an overhead A/B baseline).
+    pub fn new_with_obs(cfg: CoordinatorConfig, obs_cfg: ObsConfig) -> Self {
         use std::sync::atomic::Ordering::Relaxed;
         // Validate device config on the caller thread: workers are
         // spawned threads whose startup panics would otherwise be
@@ -222,15 +234,18 @@ impl Coordinator {
         ));
         let metrics = Arc::new(Metrics::default());
         let placement = Arc::new(PlacementMap::new(devices, cfg.placement));
+        let recorder = Arc::new(Recorder::new(obs_cfg));
         let workers = (0..devices)
             .map(|i| {
                 let pool = Arc::clone(&pool);
                 let metrics = Arc::clone(&metrics);
+                let recorder = Arc::clone(&recorder);
                 let dcfg = cfg.device;
                 std::thread::Builder::new()
                     .name(format!("dip-worker-{i}"))
                     .spawn(move || {
-                        let mut dev = Device::new(dcfg, i, Arc::clone(&metrics));
+                        let mut dev =
+                            Device::new_with_obs(dcfg, i, Arc::clone(&metrics), obs_cfg);
                         loop {
                             // Prefer queued jobs this device can run
                             // warm — tile stationary (no reload) or
@@ -242,19 +257,27 @@ impl Coordinator {
                             let job = match pool.pop(i, |j: &Job| {
                                 Some(j.tile_id) == resident || dev.has_prepared(j.tile_id)
                             }) {
-                                Some(Pop::Local(j)) => j,
+                                Some(Pop::Local(j)) => {
+                                    dev.note_pop();
+                                    j
+                                }
                                 Some(Pop::Stolen(j)) => {
                                     metrics.steals.fetch_add(1, Relaxed);
                                     if Some(j.tile_id) == resident || dev.has_prepared(j.tile_id)
                                     {
                                         metrics.steals_warm.fetch_add(1, Relaxed);
                                     }
+                                    dev.note_steal();
                                     j
                                 }
                                 None => break, // closed and drained
                             };
                             drain_coalesced(&pool, &mut dev, i, job);
                         }
+                        // Hand the ring + histograms over exactly once,
+                        // after the last job settled: published tracks
+                        // are always complete.
+                        recorder.publish(dev.take_obs());
                     })
                     .expect("spawn worker")
             })
@@ -266,11 +289,27 @@ impl Coordinator {
             placement,
             cfg,
             next_id: std::sync::atomic::AtomicU64::new(0),
+            recorder,
         }
     }
 
     pub fn metrics(&self) -> MetricsSnapshot {
         self.metrics.snapshot()
+    }
+
+    /// The pool's flight recorder. Device tracks are published as
+    /// workers exit, so [`Recorder::trace`] is complete only after
+    /// [`shutdown`](Self::shutdown) (the control track and the
+    /// step/wave histograms are live at any time).
+    pub fn recorder(&self) -> Arc<Recorder> {
+        Arc::clone(&self.recorder)
+    }
+
+    /// Instantaneous per-device queue depths (shard order = device
+    /// index) — a point-in-time read for the `dip top` dashboard, not
+    /// a synchronized snapshot.
+    pub fn queue_depths(&self) -> Vec<usize> {
+        (0..self.cfg.devices.max(1)).map(|i| self.pool.shard_len(i)).collect()
     }
 
     /// Per-tenant service counters (DRR fairness observability).
@@ -352,6 +391,11 @@ impl Coordinator {
             row0 += x.rows();
             self.metrics.requests_submitted.fetch_add(1, Relaxed);
             self.metrics.tenant_submitted(tenant);
+            let mut ev = Event::new(EventKind::Submit, 0, 0);
+            ev.request = id;
+            ev.tenant = tenant;
+            ev.rows = x.rows() as u64;
+            self.recorder.control(ev);
         }
 
         // A degenerate request produces no jobs: an all-empty batch
@@ -399,7 +443,18 @@ impl Coordinator {
                     self.pool.push(shard, tenant, job).expect("job push raced queue close");
                 if waited {
                     self.metrics.backpressure_events.fetch_add(1, Relaxed);
+                    let mut ev = Event::new(EventKind::Backpressure, 0, 0);
+                    ev.tenant = tenant;
+                    ev.tile = tile_id;
+                    ev.device = shard as u64;
+                    self.recorder.control(ev);
                 }
+                let mut ev = Event::new(EventKind::Enqueue, 0, 0);
+                ev.tenant = tenant;
+                ev.tile = tile_id;
+                ev.device = shard as u64;
+                ev.rows = padded_rows as u64;
+                self.recorder.control(ev);
             }
         }
         handles
@@ -438,6 +493,10 @@ impl Coordinator {
             let id = self.next_id.fetch_add(1, Relaxed);
             self.metrics.requests_submitted.fetch_add(1, Relaxed);
             self.metrics.tenant_submitted(tenant);
+            let mut ev = Event::new(EventKind::Submit, 0, 0);
+            ev.request = id;
+            ev.tenant = tenant;
+            self.recorder.control(ev);
             let req = ReqState::new(
                 0,
                 k_dim,
@@ -503,6 +562,11 @@ impl Coordinator {
             row0 += sub.rows;
             self.metrics.requests_submitted.fetch_add(1, Relaxed);
             self.metrics.tenant_submitted(sub.tenant);
+            let mut ev = Event::new(EventKind::Submit, 0, 0);
+            ev.request = id;
+            ev.tenant = sub.tenant;
+            ev.rows = sub.rows as u64;
+            self.recorder.control(ev);
         }
 
         // Degenerate request (no rows, empty contraction, or empty
@@ -544,7 +608,18 @@ impl Coordinator {
                         self.pool.push(shard, lane, job).expect("job push raced queue close");
                     if waited {
                         self.metrics.backpressure_events.fetch_add(1, Relaxed);
+                        let mut ev = Event::new(EventKind::Backpressure, 0, 0);
+                        ev.tenant = lane;
+                        ev.tile = tile_id;
+                        ev.device = shard as u64;
+                        self.recorder.control(ev);
                     }
+                    let mut ev = Event::new(EventKind::Enqueue, 0, 0);
+                    ev.tenant = lane;
+                    ev.tile = tile_id;
+                    ev.device = shard as u64;
+                    ev.rows = t as u64;
+                    self.recorder.control(ev);
                 }
             }
         }
@@ -1004,6 +1079,57 @@ mod tests {
         assert_eq!(m.requests_completed, 8);
         // With queue depth 1 and 16 jobs per request, backpressure fired.
         assert!(m.backpressure_events > 0);
+    }
+
+    #[test]
+    fn recorder_trace_settles_and_conserves_after_shutdown() {
+        // End-to-end through the real worker pool: after shutdown the
+        // published trace is well-formed and its event tallies tie out
+        // against the settled metrics ledger, whatever interleaving
+        // (stealing, coalescing) the threads actually took.
+        let c = Coordinator::new(small());
+        let rec = c.recorder();
+        assert!(rec.enabled());
+        assert_eq!(c.queue_depths().len(), 3);
+        let w = random_i8(16, 16, 5);
+        let handles: Vec<_> =
+            (0..6).map(|i| c.submit(random_i8(8, 16, 10 + i), w.clone())).collect();
+        for h in handles {
+            h.wait();
+        }
+        let m = c.shutdown();
+        let trace = rec.trace();
+        assert_eq!(trace.devices.len(), 3, "every worker published its track");
+        assert!(trace.validate().is_empty(), "{:?}", trace.validate());
+        let counts = trace.counts();
+        assert_eq!(counts.dropped, 0);
+        assert_eq!(counts.jobs, m.jobs_executed);
+        assert_eq!(counts.kernels, m.jobs_executed);
+        assert_eq!(counts.submits, m.requests_submitted);
+        assert_eq!(counts.enqueues, m.jobs_executed, "bounded queues never drop");
+        assert_eq!(counts.installs, m.weight_loads);
+        assert_eq!(counts.install_skips + counts.coalesced_skips, m.weight_loads_skipped);
+        assert_eq!(counts.coalesced_skips, m.jobs_coalesced);
+        assert_eq!(counts.steals, m.steals);
+        assert_eq!(counts.pops + counts.steals + counts.coalesced_skips, counts.jobs);
+        assert_eq!(counts.cache_hits, m.cache_hits);
+        assert_eq!(counts.cache_misses, m.cache_misses);
+        // The queue-wait histogram sampled every executed job.
+        assert_eq!(trace.merged_wait_hist().count(), m.jobs_executed);
+    }
+
+    #[test]
+    fn disabled_recorder_yields_empty_tracks() {
+        let c = Coordinator::new_with_obs(small(), ObsConfig::disabled());
+        let rec = c.recorder();
+        let x = random_i8(8, 8, 1);
+        let w = random_i8(8, 8, 2);
+        c.submit(x, w).wait();
+        c.shutdown();
+        let trace = rec.trace();
+        assert!(trace.devices.is_empty(), "disabled recorder publishes no tracks");
+        assert!(trace.control_events.is_empty());
+        assert_eq!(trace.counts(), crate::obs::TraceCounts::default());
     }
 
     #[test]

@@ -53,6 +53,12 @@
 //!   `verify-artifacts` command; the default build/test is hermetic.
 //! * [`bench_harness`] — regenerates every table and figure of the
 //!   paper’s evaluation section (Fig 5, Tables I/II/IV, Fig 6).
+//! * [`obs`] — the flight recorder: always-on bounded-overhead event
+//!   tracing (per-worker fixed-slot rings, simulated cycles as the
+//!   primary clock, Chrome trace-event export for Perfetto), log2
+//!   latency histograms (queue wait, install, kernel, step, wave),
+//!   and measured-vs-analytical utilization/TFPU drift telemetry —
+//!   surfaced by `dip trace-export` and the `dip top` dashboard.
 //! * [`check`] — in-tree correctness tooling: a deterministic
 //!   interleaving explorer (mini model checker) for the scheduling
 //!   substrate, a double-entry auditor for the metrics ledger, and the
@@ -73,6 +79,7 @@ pub mod check;
 pub mod coordinator;
 pub mod jsonio;
 pub mod matrix;
+pub mod obs;
 pub mod power;
 #[cfg(feature = "pjrt")]
 pub mod runtime;

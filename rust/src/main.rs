@@ -43,6 +43,15 @@ COMMANDS:
     audit               Serve a multi-tenant workload, then audit the
                           settled metrics ledger (double-entry checks)
                           [--requests <n>] [--devices <n>] [--arch <dip|ws>]
+    trace-export        Run the canned wave mix with the flight recorder,
+                          audit the trace against the ledger, and export
+                          Chrome trace-event JSON (open in Perfetto)
+                          [--out <path>]  (default trace.json)
+    top                 One-shot text dashboard over a settled multi-tenant
+                          run: per-device utilization + analytical drift,
+                          queue depths, tenant shares, latency percentiles
+                          [--once] [--requests <n>] [--devices <n>]
+                          [--arch <dip|ws>]
     lint                Repo lint gate over rust/src (exit 1 on findings)
     analyze             Whole-program static analysis: lock-order deadlock
                           freedom, value-range overflow proofs (emits
@@ -117,6 +126,8 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
         "models" => cmd_models(),
         "check" => cmd_check(),
         "audit" => cmd_audit(args),
+        "trace-export" => cmd_trace_export(args),
+        "top" => cmd_top(args),
         "lint" => cmd_lint(),
         "analyze" => cmd_analyze(args),
         "sparsity" => cmd_sparsity(args),
@@ -382,6 +393,99 @@ fn cmd_audit(args: &Args) -> Result<()> {
     println!(
         "audit OK — {} requests, {} jobs, {} sim cycles: every ledger identity balances",
         m.requests_completed, m.jobs_executed, m.sim_cycles
+    );
+    Ok(())
+}
+
+fn cmd_trace_export(args: &Args) -> Result<()> {
+    use dip_core::bench_harness::scenarios::{run_wave_mix, WaveMix, WaveSessionSpec};
+    use dip_core::check::audit::audit_trace;
+    use dip_core::serving::{LayerDims, WavePolicy};
+    let out = args.get("--out").unwrap_or("trace.json");
+    // The canned continuous-batching mix: staggered joins and ragged
+    // prompts so the exported trace exercises session/wave flow,
+    // coalescing, and install-vs-skip on every device track.
+    let mix = WaveMix {
+        tile: 8,
+        layers: 2,
+        dims: LayerDims { d_model: 16, d_k: 8, d_ffn: 24 },
+        sessions: vec![
+            WaveSessionSpec { join_after: 0, prompt_rows: 12, steps: 3 },
+            WaveSessionSpec { join_after: 0, prompt_rows: 6, steps: 4 },
+            WaveSessionSpec { join_after: 2, prompt_rows: 9, steps: 3 },
+        ],
+        devices: 2,
+        seed: 7100,
+        strip_cache_capacity: 512,
+        policy: WavePolicy::default(),
+    };
+    eprintln!("running the canned wave mix (3 sessions, 2 DiP-8 devices)...");
+    let o = run_wave_mix(&mix);
+    let violations = o.trace.validate();
+    anyhow::ensure!(
+        violations.is_empty(),
+        "exported trace is malformed:\n{}",
+        violations.join("\n")
+    );
+    let report = audit_trace(&o.trace.counts(), &o.metrics);
+    anyhow::ensure!(report.is_balanced(), "trace-ledger audit failed:\n{report}");
+    std::fs::write(out, o.trace.chrome_json().render())
+        .with_context(|| format!("writing {out}"))?;
+    let c = o.trace.counts();
+    println!(
+        "trace-export OK — {} job spans on {} device tracks + {} control events \
+         conserve against the settled ledger; wrote {out}",
+        c.jobs,
+        o.trace.devices.len(),
+        o.trace.control_events.len()
+    );
+    println!("view: open https://ui.perfetto.dev and drop {out} in");
+    Ok(())
+}
+
+fn cmd_top(args: &Args) -> Result<()> {
+    use dip_core::obs::{render_top, TopInputs};
+    // `--once` is accepted for CI symmetry; one shot is the only mode.
+    let requests = args.get_u64("--requests", 24)?;
+    let devices = args.get_u64("--devices", 3)? as usize;
+    let arch = args.get_arch(Arch::Dip)?;
+    let tile = 16usize;
+    let cfg = CoordinatorConfig {
+        devices,
+        device: DeviceConfig { arch, tile, mac_stages: 2, ..Default::default() },
+        queue_depth: 64,
+        ..Default::default()
+    };
+    let coord = Coordinator::new(cfg);
+    let w = random_i8(32, 32, 7);
+    let handles: Vec<_> = (0..requests)
+        .map(|i| {
+            let rows = 8 + (i as usize % 4) * 8;
+            coord.submit_as(i % 3, random_i8(rows, 32, 100 + i), w.clone())
+        })
+        .collect();
+    // Sample queue occupancy while the backlog is live; everything
+    // else on the dashboard reads the settled post-shutdown state.
+    let queue_depths = coord.queue_depths();
+    for h in handles {
+        h.wait();
+    }
+    let tenants = coord.tenant_metrics();
+    let rec = coord.recorder();
+    let (snap, report) = coord.shutdown_audited();
+    report.assert_balanced();
+    let trace = rec.trace();
+    print!(
+        "{}",
+        render_top(&TopInputs {
+            trace: &trace,
+            snap: &snap,
+            tenants: &tenants,
+            queue_depths: &queue_depths,
+            arch,
+            tile,
+            mac_stages: 2,
+        })
     );
     Ok(())
 }

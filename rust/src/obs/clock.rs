@@ -1,0 +1,51 @@
+//! Clock discipline: the blessed wall-clock entry point.
+//!
+//! The repo's primary clock is *simulated cycles* — deterministic,
+//! diffable, owned by the device model. Wall time is secondary and
+//! easy to abuse: scattering `Instant::now()` through serving code
+//! makes traces non-reproducible and invites accidental timestamping
+//! inside hot regions. So serving/arch code takes wall time only
+//! through [`start`], and `dip lint` bans raw `Instant::now()` /
+//! `SystemTime::now()` on those paths (the `no-raw-wall-clock` rule)
+//! the same way it bans unannotated truncating casts. Coordinator
+//! internals (queue-wait stamping, busy accounting) and this module
+//! are the allowlisted clock owners.
+
+use std::time::{Duration, Instant};
+
+/// A started wall-clock measurement. Thin wrapper over [`Instant`] so
+/// call sites read as *measurement*, not *timestamping*.
+#[derive(Debug, Clone, Copy)]
+pub struct Stopwatch(Instant);
+
+/// Start a wall-clock measurement (the one sanctioned way for
+/// serving/arch code to touch wall time).
+pub fn start() -> Stopwatch {
+    Stopwatch(Instant::now())
+}
+
+impl Stopwatch {
+    /// Wall time elapsed since [`start`].
+    pub fn elapsed(&self) -> Duration {
+        self.0.elapsed()
+    }
+
+    /// Elapsed wall nanoseconds, saturated into `u64` (585 years).
+    pub fn elapsed_ns(&self) -> u64 {
+        u64::try_from(self.0.elapsed().as_nanos()).unwrap_or(u64::MAX)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_measures_nonnegative_monotone_time() {
+        let sw = start();
+        let a = sw.elapsed_ns();
+        let b = sw.elapsed_ns();
+        assert!(b >= a);
+        assert!(sw.elapsed().as_nanos() >= b as u128);
+    }
+}

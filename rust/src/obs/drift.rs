@@ -1,0 +1,186 @@
+//! Drift telemetry: measured utilization vs the analytical closed
+//! forms.
+//!
+//! The paper's Section IV/V models predict per-tile latency,
+//! throughput, and time-to-full-PE-utilization exactly; the recorder
+//! measures what the simulated pool actually did. This module divides
+//! one by the other so every bench run reports how far the *system*
+//! (scheduling, installs, coalescing, streaming) drifts from the
+//! *single-tile* closed form:
+//!
+//! * **Utilization drift** — measured `pe_active / (n² · cycles)` per
+//!   device over the analytical single-tile utilization
+//!   `n / latency_cycles(arch, n, s)`. Streaming long strips and
+//!   coalescing installs amortize fill/drain, pushing the ratio
+//!   *above* 1; install stalls and idle bubbles pull it below — so
+//!   the ratio is a legibility number, not an error bar.
+//! * **TFPU drift** — the first executed job's measured
+//!   `tfpu_cycles` over the closed form `tfpu_cycles(arch, n)`
+//!   (DiP: `n`, WS: `2n−1`). This one should sit at exactly 1.0 for
+//!   full tiles; a deviation means the simulator and the model
+//!   disagree about the paper's headline claim.
+
+use super::trace::Trace;
+use crate::analytical::{latency_cycles, tfpu_cycles, Arch};
+use crate::jsonio::Json;
+
+/// One device's measured-vs-analytical comparison.
+#[derive(Debug, Clone, Copy)]
+pub struct DeviceDrift {
+    pub device: u64,
+    pub jobs: u64,
+    /// `pe_active / (n² · cycles)` over the device's whole run.
+    pub measured_util: f64,
+    /// `n / latency_cycles(arch, n, s)` — one full n×n tile.
+    pub analytical_util: f64,
+    /// `measured_util / analytical_util`.
+    pub util_drift: f64,
+    /// First executed job's `tfpu_cycles`.
+    pub measured_tfpu: u64,
+    /// `tfpu_cycles(arch, n)`.
+    pub analytical_tfpu: u64,
+    /// `measured_tfpu / analytical_tfpu`.
+    pub tfpu_drift: f64,
+}
+
+/// Per-run drift report (rides `BENCH_serving.json` and `dip top`).
+#[derive(Debug, Clone)]
+pub struct DriftReport {
+    pub arch: Arch,
+    pub tile: usize,
+    pub devices: Vec<DeviceDrift>,
+    /// Mean util drift over devices that executed jobs.
+    pub mean_util_drift: f64,
+    /// Mean TFPU drift over devices that executed jobs.
+    pub mean_tfpu_drift: f64,
+}
+
+/// Compare a trace's per-device measurements against the closed forms
+/// for the pool's (arch, tile, mac_stages) configuration.
+pub fn drift_report(trace: &Trace, arch: Arch, tile: usize, mac_stages: u64) -> DriftReport {
+    let n = tile as u64;
+    let analytical_util = n as f64 / latency_cycles(arch, n, mac_stages) as f64;
+    let analytical_tfpu = tfpu_cycles(arch, n);
+    let mut devices = Vec::with_capacity(trace.devices.len());
+    for d in &trace.devices {
+        let measured_util = d.utilization(tile);
+        let measured_tfpu = d.first_tfpu.unwrap_or(0);
+        devices.push(DeviceDrift {
+            device: d.device,
+            jobs: d.jobs,
+            measured_util,
+            analytical_util,
+            util_drift: measured_util / analytical_util,
+            measured_tfpu,
+            analytical_tfpu,
+            tfpu_drift: measured_tfpu as f64 / analytical_tfpu as f64,
+        });
+    }
+    let active: Vec<DeviceDrift> = devices.iter().filter(|d| d.jobs > 0).copied().collect();
+    let (mut mean_util_drift, mut mean_tfpu_drift) = (0.0, 0.0);
+    if !active.is_empty() {
+        mean_util_drift = active.iter().map(|d| d.util_drift).sum::<f64>() / active.len() as f64;
+        mean_tfpu_drift = active.iter().map(|d| d.tfpu_drift).sum::<f64>() / active.len() as f64;
+    }
+    DriftReport { arch, tile, devices, mean_util_drift, mean_tfpu_drift }
+}
+
+impl DriftReport {
+    /// JSON shape embedded in the BENCH trajectory files.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("arch", Json::str(self.arch.name())),
+            ("tile", Json::num(self.tile as f64)),
+            ("mean_util_drift", Json::num(self.mean_util_drift)),
+            ("mean_tfpu_drift", Json::num(self.mean_tfpu_drift)),
+            (
+                "devices",
+                Json::Arr(
+                    self.devices
+                        .iter()
+                        .map(|d| {
+                            Json::obj(vec![
+                                ("device", Json::num(d.device as f64)),
+                                ("jobs", Json::num(d.jobs as f64)),
+                                ("measured_util", Json::num(d.measured_util)),
+                                ("analytical_util", Json::num(d.analytical_util)),
+                                ("util_drift", Json::num(d.util_drift)),
+                                ("measured_tfpu", Json::num(d.measured_tfpu as f64)),
+                                ("analytical_tfpu", Json::num(d.analytical_tfpu as f64)),
+                                ("tfpu_drift", Json::num(d.tfpu_drift)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::hist::Hist;
+    use crate::obs::trace::DeviceTrace;
+
+    fn track(device: u64, jobs: u64, cycles: u64, pe_active: u64, tfpu: Option<u64>) -> DeviceTrace {
+        DeviceTrace {
+            device,
+            events: Vec::new(),
+            dropped: 0,
+            cycles,
+            jobs,
+            rows: 0,
+            pe_active,
+            first_tfpu: tfpu,
+            wait_hist: Hist::default(),
+            install_hist: Hist::default(),
+            kernel_hist: Hist::default(),
+        }
+    }
+
+    #[test]
+    fn drift_matches_hand_computed_closed_forms() {
+        // DiP n=8, s=2: latency = 2n+s-2 = 16, tfpu = n = 8.
+        // Device 0: one full 8-row tile with no install — cycles 16,
+        // pe_active = 8*64 = 512 — measured util = 512/(64*16) = 0.5,
+        // exactly the analytical single-tile utilization 8/16.
+        let t = Trace {
+            devices: vec![track(0, 1, 16, 512, Some(8)), track(1, 0, 0, 0, None)],
+            ..Trace::default()
+        };
+        let r = drift_report(&t, Arch::Dip, 8, 2);
+        assert_eq!(r.devices.len(), 2);
+        let d0 = &r.devices[0];
+        assert!((d0.measured_util - 0.5).abs() < 1e-12);
+        assert!((d0.analytical_util - 0.5).abs() < 1e-12);
+        assert!((d0.util_drift - 1.0).abs() < 1e-12);
+        assert_eq!(d0.analytical_tfpu, 8);
+        assert!((d0.tfpu_drift - 1.0).abs() < 1e-12);
+        // Idle device excluded from the means.
+        assert!((r.mean_util_drift - 1.0).abs() < 1e-12);
+        assert!((r.mean_tfpu_drift - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn streaming_pushes_util_drift_above_one() {
+        // DiP n=8, s=2, one job streaming 32 rows: cycles = n+rows+s-2
+        // = 40, pe_active = 32*64 = 2048, util = 2048/(64*40) = 0.8 —
+        // 1.6x the single-tile closed form.
+        let t = Trace { devices: vec![track(0, 1, 40, 2048, Some(8))], ..Trace::default() };
+        let r = drift_report(&t, Arch::Dip, 8, 2);
+        assert!((r.devices[0].util_drift - 1.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn drift_json_round_trips() {
+        let t = Trace { devices: vec![track(0, 1, 16, 512, Some(8))], ..Trace::default() };
+        let r = drift_report(&t, Arch::Ws, 8, 2);
+        let back = Json::parse(&r.to_json().render()).unwrap();
+        assert_eq!(back.get("arch").unwrap().as_str(), Some("WS"));
+        assert_eq!(back.get("devices").unwrap().as_arr().unwrap().len(), 1);
+        // WS closed forms: latency = 3n+s-3 = 23, tfpu = 2n-1 = 15.
+        let d = &back.get("devices").unwrap().as_arr().unwrap()[0];
+        assert_eq!(d.get("analytical_tfpu").unwrap().as_u64(), Some(15));
+    }
+}

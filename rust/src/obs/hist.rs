@@ -1,0 +1,213 @@
+//! Allocation-free log2-bucketed latency histograms.
+//!
+//! A [`Hist`] is a fixed `[u64; 64]` bucket array plus count/sum/max —
+//! `Copy`, mergeable, and recordable with a handful of integer ops
+//! (`leading_zeros` + three adds), so it can live inside per-device
+//! observers and per-tenant counters without ever allocating or
+//! locking on the record path. Bucket `b >= 1` holds values in
+//! `[2^(b-1), 2^b - 1]`; bucket 0 holds exactly 0. Quantiles come back
+//! as the upper bound of the bucket containing the requested rank,
+//! clamped to the observed maximum — a <= 2x relative overestimate by
+//! construction, which is the usual log2-histogram contract (and why
+//! p50/p95/p99 here are summaries, not exact order statistics).
+
+/// Number of log2 buckets — one per possible `u64` magnitude.
+pub const HIST_BUCKETS: usize = 64;
+
+/// Mergeable log2-bucketed histogram of `u64` samples (latencies in
+/// ns or simulated cycles). `Copy` on purpose: snapshots embed it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Hist {
+    buckets: [u64; HIST_BUCKETS],
+    count: u64,
+    sum: u64,
+    max: u64,
+}
+
+impl Default for Hist {
+    fn default() -> Self {
+        Self { buckets: [0; HIST_BUCKETS], count: 0, sum: 0, max: 0 }
+    }
+}
+
+impl Hist {
+    /// Bucket index of a sample: 0 for 0, else `1 + floor(log2 v)`,
+    /// saturated into the last bucket.
+    fn bucket(v: u64) -> usize {
+        (64 - v.leading_zeros() as usize).min(HIST_BUCKETS - 1)
+    }
+
+    /// Inclusive upper bound of a bucket (what quantiles report).
+    fn bucket_hi(b: usize) -> u64 {
+        if b == 0 {
+            0
+        } else if b >= HIST_BUCKETS - 1 {
+            u64::MAX
+        } else {
+            (1u64 << b) - 1
+        }
+    }
+
+    /// Record one sample. No allocation, no branching beyond the
+    /// saturating sum.
+    pub fn record(&mut self, v: u64) {
+        self.buckets[Self::bucket(v)] += 1;
+        self.count += 1;
+        self.sum = self.sum.saturating_add(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Fold another histogram in (device → pool, tenant → global).
+    pub fn merge(&mut self, other: &Hist) {
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += *b;
+        }
+        self.count += other.count;
+        self.sum = self.sum.saturating_add(other.sum);
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Upper bound of the bucket holding the sample at quantile
+    /// `q ∈ [0, 1]`, clamped to the observed max. 0 when empty.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (b, &n) in self.buckets.iter().enumerate() {
+            seen += n;
+            if seen >= rank {
+                return Self::bucket_hi(b).min(self.max);
+            }
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p95(&self) -> u64 {
+        self.quantile(0.95)
+    }
+
+    pub fn p99(&self) -> u64 {
+        self.quantile(0.99)
+    }
+
+    /// `p50/p95/p99 (n=count)` — the dashboard summary cell.
+    pub fn summary(&self) -> String {
+        format!("{}/{}/{} (n={})", self.p50(), self.p95(), self.p99(), self.count)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_boundaries_are_exact_powers_of_two() {
+        assert_eq!(Hist::bucket(0), 0);
+        assert_eq!(Hist::bucket(1), 1);
+        assert_eq!(Hist::bucket(2), 2);
+        assert_eq!(Hist::bucket(3), 2);
+        assert_eq!(Hist::bucket(4), 3);
+        assert_eq!(Hist::bucket(1023), 10);
+        assert_eq!(Hist::bucket(1024), 11);
+        assert_eq!(Hist::bucket(u64::MAX), 63);
+        assert_eq!(Hist::bucket_hi(0), 0);
+        assert_eq!(Hist::bucket_hi(1), 1);
+        assert_eq!(Hist::bucket_hi(10), 1023);
+        assert_eq!(Hist::bucket_hi(63), u64::MAX);
+    }
+
+    #[test]
+    fn count_sum_max_mean_track_samples() {
+        let mut h = Hist::default();
+        for v in [0u64, 1, 5, 100, 7] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.sum(), 113);
+        assert_eq!(h.max(), 100);
+        assert!((h.mean() - 22.6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn quantiles_report_bucket_upper_bounds_clamped_to_max() {
+        let mut h = Hist::default();
+        // 100 samples of 10 (bucket 4, hi 15) + 1 sample of 1000
+        // (bucket 10, hi 1023).
+        for _ in 0..100 {
+            h.record(10);
+        }
+        h.record(1000);
+        assert_eq!(h.p50(), 15);
+        assert_eq!(h.p95(), 15);
+        assert_eq!(h.p99(), 15);
+        assert_eq!(h.quantile(1.0), 1000); // bucket hi 1023 clamps to max
+        // All-equal samples: every quantile is the bucket bound clamped
+        // to the one observed value.
+        let mut one = Hist::default();
+        one.record(7);
+        assert_eq!(one.p50(), 7);
+        assert_eq!(one.p99(), 7);
+    }
+
+    #[test]
+    fn empty_hist_is_all_zeros() {
+        let h = Hist::default();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.p50(), 0);
+        assert_eq!(h.p99(), 0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn merge_is_bucketwise_sum() {
+        let mut a = Hist::default();
+        let mut b = Hist::default();
+        let mut whole = Hist::default();
+        for v in [1u64, 2, 3, 900] {
+            a.record(v);
+            whole.record(v);
+        }
+        for v in [4u64, 0, 65_000] {
+            b.record(v);
+            whole.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a, whole);
+    }
+
+    #[test]
+    fn zero_samples_land_in_bucket_zero() {
+        let mut h = Hist::default();
+        h.record(0);
+        h.record(0);
+        h.record(8);
+        assert_eq!(h.p50(), 0);
+        assert_eq!(h.quantile(1.0), 8);
+    }
+}

@@ -1,0 +1,68 @@
+//! Flight-recorder observability: always-on event tracing, latency
+//! histograms, and analytical-model drift telemetry.
+//!
+//! The repo's counters ([`MetricsSnapshot`]) say *how much* happened;
+//! this module says *when* and *why* — cheap enough to leave on.
+//!
+//! # Event model
+//!
+//! Typed [`Event`]s cover the full job lifecycle — `submit → enqueue →
+//! pop/steal → install-or-skip → kernel → complete` — plus wave
+//! open/close, session join/leave, prepared-cache hit/miss, and
+//! backpressure, each stamped with the causal ids that apply (request,
+//! session, wave, tenant, tile, device). Three event kinds are *spans*
+//! (job, install, kernel — install and kernel nest inside their job);
+//! the rest are instants. Events land in fixed-slot rings
+//! ([`EventRing`]): one lock-free ring *owned by each device* (moved
+//! into its worker thread; published once at exit) and one shared
+//! control ring behind a leaf mutex for the coarse submission/wave
+//! paths.
+//!
+//! # Clock domains
+//!
+//! The **primary clock is simulated cycles**: each device track is
+//! stamped with that device's cumulative executed cycles, so two runs
+//! of the same deterministic scenario produce byte-identical span
+//! timelines — traces are diffable artifacts, not flaky timings. The
+//! control track is clocked by a monotone sequence number. Wall-clock
+//! nanoseconds ride along as a secondary field (`wall_ns`) and in the
+//! step/wave latency histograms, but never drive `ts` ordering.
+//! Serving code takes wall time only through [`clock::start`] — the
+//! `no-raw-wall-clock` lint rule machine-checks that discipline.
+//!
+//! # Overhead contract
+//!
+//! Device-track emission is branch + slot-store only (no locks,
+//! atomics, or allocation on the job path; see [`recorder`]); rings
+//! never grow; histograms are `Copy` arrays. The declared hot regions
+//! (GEMM kernel, worker drain loop) contain **no recorder calls at
+//! all** and `dip analyze`'s hot-region pass keeps it that way.
+//! Dropped events (ring wrap) are counted, surfaced, and fail the
+//! trace↔ledger conservation audit rather than lying by omission.
+//!
+//! # Consuming traces
+//!
+//! [`Trace::validate`] checks well-formedness (monotone stamps,
+//! nested spans, resolvable ids); [`Trace::counts`] feeds
+//! [`crate::check::audit::audit_trace`], which ties event tallies to
+//! the settled metrics ledger; [`Trace::chrome_json`] exports Chrome
+//! trace-event JSON (`dip trace-export`) viewable in Perfetto;
+//! [`drift::drift_report`] compares measured utilization and TFPU
+//! against the [`crate::analytical`] closed forms; and
+//! [`top::render_top`] renders the `dip top` dashboard.
+//!
+//! [`MetricsSnapshot`]: crate::coordinator::MetricsSnapshot
+
+pub mod clock;
+pub mod drift;
+pub mod hist;
+pub mod recorder;
+pub mod top;
+pub mod trace;
+
+pub use clock::Stopwatch;
+pub use drift::{drift_report, DeviceDrift, DriftReport};
+pub use hist::{Hist, HIST_BUCKETS};
+pub use recorder::{DeviceObs, Event, EventKind, EventRing, ObsConfig, Recorder, NO_ID};
+pub use top::{render_top, TopInputs};
+pub use trace::{DeviceTrace, Trace, TraceCounts};

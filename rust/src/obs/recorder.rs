@@ -1,0 +1,507 @@
+//! The flight recorder: typed events, fixed-slot rings, the
+//! worker-owned per-device observer, and the shared [`Recorder`] hub.
+//!
+//! # Overhead contract
+//!
+//! * **Device tracks are lock-free.** A [`DeviceObs`] is *owned* by
+//!   its `Device` (moved into the worker thread), so every event write
+//!   is a plain store into a preallocated ring slot — no locks, no
+//!   atomics, no allocation on the job path. The ring is published
+//!   wholesale to the [`Recorder`] exactly once, at worker exit.
+//! * **Ring writes are fixed-slot.** [`EventRing`] preallocates its
+//!   capacity up front; a push past capacity overwrites the oldest
+//!   slot and counts a drop (surfaced by the trace audit) instead of
+//!   growing.
+//! * **Control-track events are coarse.** Submission, backpressure,
+//!   and wave/session lifecycle events go through one leaf mutex in
+//!   [`Recorder::control`] — paths that already take queue/placement
+//!   locks, never the kernel or the worker drain loop (`dip analyze`'s
+//!   hot-region pass keeps it that way).
+//! * **Disabled means near-zero.** With [`ObsConfig::enabled`] off,
+//!   every emit is a single branch on an owned bool and rings are
+//!   1-slot.
+
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use super::hist::Hist;
+use super::trace::{DeviceTrace, Trace};
+use crate::sync::lock_unpoisoned;
+
+/// Sentinel for "this causal id does not apply to this event".
+pub const NO_ID: u64 = u64::MAX;
+
+/// Typed flight-recorder events — the full job lifecycle plus the
+/// serving-layer wave/session lifecycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// A sub-request entered the coordinator (control track).
+    Submit,
+    /// One tile job was pushed onto a device queue (control track).
+    Enqueue,
+    /// A queue push had to wait for space (control track).
+    Backpressure,
+    /// Worker popped a job from its own shard (device track).
+    Pop,
+    /// Worker stole a job from another shard (device track).
+    Steal,
+    /// Whole job on the device: install-or-skip + kernel (span).
+    Job,
+    /// Stationary-weight install actually performed (span, nested).
+    Install,
+    /// Install skipped: the tile was already resident (instant).
+    InstallSkip,
+    /// Install skipped as a coalesced same-tile batch tail (instant).
+    CoalescedSkip,
+    /// Compute portion of the job (span, nested in [`Job`]).
+    Kernel,
+    /// Prepared-weight LRU hit (instant).
+    CacheHit,
+    /// Prepared-weight LRU miss (instant).
+    CacheMiss,
+    /// A wave began executing (control track).
+    WaveOpen,
+    /// A wave finished (control track).
+    WaveClose,
+    /// A session was admitted into the active cohort (control track).
+    SessionJoin,
+    /// A session completed and left the cohort (control track).
+    SessionLeave,
+}
+
+impl EventKind {
+    /// Stable name (trace export, audit failure messages).
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::Submit => "submit",
+            EventKind::Enqueue => "enqueue",
+            EventKind::Backpressure => "backpressure",
+            EventKind::Pop => "pop",
+            EventKind::Steal => "steal",
+            EventKind::Job => "job",
+            EventKind::Install => "install",
+            EventKind::InstallSkip => "install_skip",
+            EventKind::CoalescedSkip => "coalesced_skip",
+            EventKind::Kernel => "kernel",
+            EventKind::CacheHit => "cache_hit",
+            EventKind::CacheMiss => "cache_miss",
+            EventKind::WaveOpen => "wave_open",
+            EventKind::WaveClose => "wave_close",
+            EventKind::SessionJoin => "session_join",
+            EventKind::SessionLeave => "session_leave",
+        }
+    }
+
+    /// Span events carry a duration and render as nested slices;
+    /// everything else is an instant.
+    pub fn is_span(self) -> bool {
+        matches!(self, EventKind::Job | EventKind::Install | EventKind::Kernel)
+    }
+}
+
+/// One recorded event. `Copy` and fixed-size so ring writes are plain
+/// slot stores. Ids that do not apply hold [`NO_ID`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Event {
+    pub kind: EventKind,
+    /// Primary clock: cumulative simulated device cycles on device
+    /// tracks; the monotone control sequence number on the control
+    /// track. Deterministic, so traces diff cleanly across runs.
+    pub cyc: u64,
+    /// Span length in the same clock domain (0 for instants).
+    pub dur: u64,
+    /// Secondary wall clock (ns since the recorder/observer origin).
+    /// Excluded from golden comparisons and the exported `ts` field.
+    pub wall_ns: u64,
+    pub device: u64,
+    pub request: u64,
+    pub tenant: u64,
+    pub tile: u64,
+    pub wave: u64,
+    pub session: u64,
+    pub rows: u64,
+}
+
+impl Event {
+    /// An event with every causal id unset.
+    pub fn new(kind: EventKind, cyc: u64, dur: u64) -> Self {
+        Event {
+            kind,
+            cyc,
+            dur,
+            wall_ns: 0,
+            device: NO_ID,
+            request: NO_ID,
+            tenant: NO_ID,
+            tile: NO_ID,
+            wave: NO_ID,
+            session: NO_ID,
+            rows: 0,
+        }
+    }
+}
+
+/// Fixed-capacity event ring. Slots are preallocated once; a push past
+/// capacity overwrites the oldest slot and counts a drop. Single
+/// writer by construction (owned by a device or behind the control
+/// mutex); reads happen only after the writer published.
+#[derive(Debug, Clone)]
+pub struct EventRing {
+    slots: Vec<Event>,
+    cap: usize,
+    /// Next overwrite position once full (the oldest slot).
+    head: usize,
+    dropped: u64,
+}
+
+impl EventRing {
+    pub fn new(cap: usize) -> Self {
+        let cap = cap.max(1);
+        Self { slots: Vec::with_capacity(cap), cap, head: 0, dropped: 0 }
+    }
+
+    /// Fixed-slot write: appends into preallocated capacity while
+    /// filling, then overwrites oldest. Never reallocates.
+    pub fn push(&mut self, ev: Event) {
+        if self.slots.len() < self.cap {
+            self.slots.push(ev);
+            self.head = self.slots.len() % self.cap;
+        } else {
+            self.slots[self.head] = ev;
+            self.head = (self.head + 1) % self.cap;
+            self.dropped += 1;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Events lost to overwrite (0 unless the ring wrapped).
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Retained events oldest-first (allocates; cold export path).
+    pub fn events_in_order(&self) -> Vec<Event> {
+        if self.slots.len() < self.cap || self.head == 0 {
+            self.slots.clone()
+        } else {
+            let mut out = Vec::with_capacity(self.slots.len());
+            out.extend_from_slice(&self.slots[self.head..]);
+            out.extend_from_slice(&self.slots[..self.head]);
+            out
+        }
+    }
+}
+
+/// Recorder configuration. Default is **enabled** — the recorder is
+/// always-on with bounded overhead; disable it only to measure that
+/// bound.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ObsConfig {
+    pub enabled: bool,
+    /// Per-device ring capacity, in events (~4 events per job).
+    pub device_ring: usize,
+    /// Control-track ring capacity, in events.
+    pub control_ring: usize,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        Self { enabled: true, device_ring: 1 << 14, control_ring: 1 << 15 }
+    }
+}
+
+impl ObsConfig {
+    pub fn disabled() -> Self {
+        Self { enabled: false, ..Self::default() }
+    }
+}
+
+/// The worker-owned half of the recorder: one per device, moved into
+/// the worker thread with it. All writes are plain stores (see the
+/// module overhead contract); [`Recorder::publish`] collects it at
+/// worker exit.
+#[derive(Debug, Clone)]
+pub struct DeviceObs {
+    enabled: bool,
+    device: u64,
+    /// Cumulative simulated cycles this device has executed — the
+    /// primary clock of its trace track.
+    cycles: u64,
+    ring: EventRing,
+    /// Queue wait per executed job, wall ns.
+    pub wait_hist: Hist,
+    /// Charged install cycles (performed installs only).
+    pub install_hist: Hist,
+    /// Compute cycles per job (install excluded).
+    pub kernel_hist: Hist,
+    jobs: u64,
+    rows: u64,
+    pe_active: u64,
+    /// `tfpu_cycles` of the first executed job: measured
+    /// time-to-full-PE-utilization, compared against the closed form.
+    first_tfpu: Option<u64>,
+    origin: Instant,
+}
+
+impl DeviceObs {
+    pub fn new(device: usize, cfg: ObsConfig) -> Self {
+        Self {
+            enabled: cfg.enabled,
+            device: device as u64,
+            cycles: 0,
+            ring: EventRing::new(if cfg.enabled { cfg.device_ring } else { 1 }),
+            wait_hist: Hist::default(),
+            install_hist: Hist::default(),
+            kernel_hist: Hist::default(),
+            jobs: 0,
+            rows: 0,
+            pe_active: 0,
+            first_tfpu: None,
+            origin: Instant::now(),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Current device-cycle clock (where the next job's span starts).
+    pub fn cycles(&self) -> u64 {
+        self.cycles
+    }
+
+    /// Advance the device-cycle clock past an executed run.
+    pub fn advance(&mut self, cycles: u64) {
+        self.cycles += cycles;
+    }
+
+    /// Record an event on this device's track. Stamps the device id
+    /// and the secondary wall clock; `ev.cyc`/`ev.dur` are the
+    /// caller's (device-cycle domain).
+    pub fn emit(&mut self, mut ev: Event) {
+        if !self.enabled {
+            return;
+        }
+        ev.device = self.device;
+        ev.wall_ns = u64::try_from(self.origin.elapsed().as_nanos()).unwrap_or(u64::MAX);
+        self.ring.push(ev);
+    }
+
+    /// Per-job utilization accounting (drift telemetry inputs).
+    pub fn note_job(&mut self, rows: u64, pe_active: u64, tfpu: u64) {
+        if !self.enabled {
+            return;
+        }
+        self.jobs += 1;
+        self.rows += rows;
+        self.pe_active += pe_active;
+        if self.first_tfpu.is_none() {
+            self.first_tfpu = Some(tfpu);
+        }
+    }
+
+    /// Freeze into the published per-device trace track.
+    pub fn into_trace(self) -> DeviceTrace {
+        DeviceTrace {
+            device: self.device,
+            dropped: self.ring.dropped(),
+            events: self.ring.events_in_order(),
+            cycles: self.cycles,
+            jobs: self.jobs,
+            rows: self.rows,
+            pe_active: self.pe_active,
+            first_tfpu: self.first_tfpu,
+            wait_hist: self.wait_hist,
+            install_hist: self.install_hist,
+            kernel_hist: self.kernel_hist,
+        }
+    }
+}
+
+/// The shared recorder hub: owns the control-track ring, the published
+/// device tracks, and the serving-level latency histograms. Every
+/// method takes at most one leaf lock (no nesting — kept out of the
+/// coordinator's lock-order graph by construction).
+#[derive(Debug)]
+pub struct Recorder {
+    cfg: ObsConfig,
+    seq: AtomicU64,
+    control: Mutex<EventRing>,
+    devices: Mutex<Vec<DeviceTrace>>,
+    step_hist: Mutex<Hist>,
+    wave_hist: Mutex<Hist>,
+    origin: Instant,
+}
+
+impl Recorder {
+    pub fn new(cfg: ObsConfig) -> Self {
+        Self {
+            cfg,
+            seq: AtomicU64::new(0),
+            control: Mutex::new(EventRing::new(if cfg.enabled { cfg.control_ring } else { 1 })),
+            devices: Mutex::new(Vec::new()),
+            step_hist: Mutex::new(Hist::default()),
+            wave_hist: Mutex::new(Hist::default()),
+            origin: Instant::now(),
+        }
+    }
+
+    pub fn config(&self) -> ObsConfig {
+        self.cfg
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.cfg.enabled
+    }
+
+    /// Record a control-track event. Overwrites `ev.cyc` with the
+    /// monotone control sequence number (the control track's clock)
+    /// and stamps the secondary wall clock.
+    pub fn control(&self, mut ev: Event) {
+        if !self.cfg.enabled {
+            return;
+        }
+        ev.cyc = self.seq.fetch_add(1, Relaxed);
+        ev.wall_ns = u64::try_from(self.origin.elapsed().as_nanos()).unwrap_or(u64::MAX);
+        lock_unpoisoned(&self.control).push(ev);
+    }
+
+    /// Record one serving decode/prefill step's wall latency.
+    pub fn record_step_ns(&self, ns: u64) {
+        if self.cfg.enabled {
+            lock_unpoisoned(&self.step_hist).record(ns);
+        }
+    }
+
+    /// Record one wave's wall latency.
+    pub fn record_wave_ns(&self, ns: u64) {
+        if self.cfg.enabled {
+            lock_unpoisoned(&self.wave_hist).record(ns);
+        }
+    }
+
+    /// A worker publishes its device's observer at exit (the one
+    /// moment device data crosses threads).
+    pub fn publish(&self, obs: DeviceObs) {
+        if !self.cfg.enabled {
+            return;
+        }
+        let track = obs.into_trace();
+        lock_unpoisoned(&self.devices).push(track);
+    }
+
+    /// Assemble the full trace (cold path; call after the coordinator
+    /// drained/shut down so every worker has published).
+    pub fn trace(&self) -> Trace {
+        let (control_events, control_dropped) = {
+            let ring = lock_unpoisoned(&self.control);
+            (ring.events_in_order(), ring.dropped())
+        };
+        let mut devices = lock_unpoisoned(&self.devices).clone();
+        devices.sort_by_key(|d| d.device);
+        let step_hist = *lock_unpoisoned(&self.step_hist);
+        let wave_hist = *lock_unpoisoned(&self.wave_hist);
+        Trace { control_events, control_dropped, devices, step_hist, wave_hist }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_preserves_order_and_counts_drops_on_wrap() {
+        let mut r = EventRing::new(4);
+        for i in 0..3 {
+            r.push(Event::new(EventKind::Pop, i, 0));
+        }
+        assert_eq!(r.dropped(), 0);
+        let cycs: Vec<u64> = r.events_in_order().iter().map(|e| e.cyc).collect();
+        assert_eq!(cycs, vec![0, 1, 2]);
+        for i in 3..9 {
+            r.push(Event::new(EventKind::Pop, i, 0));
+        }
+        // Capacity 4, 9 pushes: the 5 oldest were overwritten.
+        assert_eq!(r.dropped(), 5);
+        assert_eq!(r.len(), 4);
+        let cycs: Vec<u64> = r.events_in_order().iter().map(|e| e.cyc).collect();
+        assert_eq!(cycs, vec![5, 6, 7, 8]);
+    }
+
+    #[test]
+    fn ring_wrap_at_exact_boundary_keeps_insertion_order() {
+        let mut r = EventRing::new(3);
+        for i in 0..6 {
+            r.push(Event::new(EventKind::Pop, i, 0));
+        }
+        // head wrapped back to 0: the no-rotation fast path.
+        let cycs: Vec<u64> = r.events_in_order().iter().map(|e| e.cyc).collect();
+        assert_eq!(cycs, vec![3, 4, 5]);
+        assert_eq!(r.dropped(), 3);
+    }
+
+    #[test]
+    fn disabled_observer_records_nothing() {
+        let mut obs = DeviceObs::new(2, ObsConfig::disabled());
+        obs.emit(Event::new(EventKind::Job, 0, 10));
+        obs.note_job(4, 64, 8);
+        let t = obs.into_trace();
+        assert!(t.events.is_empty());
+        assert_eq!(t.jobs, 0);
+        assert_eq!(t.first_tfpu, None);
+    }
+
+    #[test]
+    fn observer_stamps_device_id_and_advances_clock() {
+        let mut obs = DeviceObs::new(3, ObsConfig::default());
+        obs.emit(Event::new(EventKind::Job, obs.cycles(), 16));
+        obs.advance(16);
+        obs.emit(Event::new(EventKind::Job, obs.cycles(), 12));
+        obs.advance(12);
+        assert_eq!(obs.cycles(), 28);
+        let t = obs.into_trace();
+        assert_eq!(t.cycles, 28);
+        assert_eq!(t.events.len(), 2);
+        assert!(t.events.iter().all(|e| e.device == 3));
+        assert_eq!(t.events[1].cyc, 16);
+    }
+
+    #[test]
+    fn recorder_control_track_is_sequenced_and_disabled_is_silent() {
+        let rec = Recorder::new(ObsConfig::default());
+        rec.control(Event::new(EventKind::Submit, 999, 0));
+        rec.control(Event::new(EventKind::Enqueue, 999, 0));
+        rec.record_step_ns(100);
+        let t = rec.trace();
+        let cycs: Vec<u64> = t.control_events.iter().map(|e| e.cyc).collect();
+        assert_eq!(cycs, vec![0, 1]); // seq overwrites the caller's cyc
+        assert_eq!(t.step_hist.count(), 1);
+
+        let off = Recorder::new(ObsConfig::disabled());
+        off.control(Event::new(EventKind::Submit, 0, 0));
+        off.record_step_ns(5);
+        off.publish(DeviceObs::new(0, ObsConfig::disabled()));
+        let t = off.trace();
+        assert!(t.control_events.is_empty());
+        assert!(t.devices.is_empty());
+        assert_eq!(t.step_hist.count(), 0);
+    }
+
+    #[test]
+    fn published_devices_sort_by_index() {
+        let rec = Recorder::new(ObsConfig::default());
+        rec.publish(DeviceObs::new(1, ObsConfig::default()));
+        rec.publish(DeviceObs::new(0, ObsConfig::default()));
+        let t = rec.trace();
+        let ids: Vec<u64> = t.devices.iter().map(|d| d.device).collect();
+        assert_eq!(ids, vec![0, 1]);
+    }
+}

@@ -1,0 +1,162 @@
+//! `dip top` — one-shot text dashboard over a settled run: per-device
+//! utilization and drift, queue depths, tenant shares with histogram
+//! queue-wait percentiles, and the pool-wide latency summaries.
+
+use super::drift::drift_report;
+use super::trace::Trace;
+use crate::analytical::Arch;
+use crate::bench_harness::report::{fnum, TextTable};
+use crate::coordinator::{MetricsSnapshot, TenantSnapshot};
+
+/// Everything the dashboard renders from.
+pub struct TopInputs<'a> {
+    pub trace: &'a Trace,
+    pub snap: &'a MetricsSnapshot,
+    pub tenants: &'a [TenantSnapshot],
+    /// Queue depths sampled mid-flight (shard order = device index).
+    pub queue_depths: &'a [usize],
+    pub arch: Arch,
+    pub tile: usize,
+    pub mac_stages: u64,
+}
+
+/// Render the dashboard (pure string; `dip top --once` prints it).
+pub fn render_top(inp: &TopInputs<'_>) -> String {
+    let mut out = String::new();
+    let drift = drift_report(inp.trace, inp.arch, inp.tile, inp.mac_stages);
+    out.push_str(&format!(
+        "dip top — {} pool, tile {}, {} devices\n\n",
+        inp.arch.name(),
+        inp.tile,
+        inp.trace.devices.len()
+    ));
+
+    let mut devices = TextTable::new(vec![
+        "device", "jobs", "rows", "cycles", "util %", "drift", "queue", "wait p50/p95/p99 ns",
+    ]);
+    for d in &inp.trace.devices {
+        let dd = drift.devices.iter().find(|x| x.device == d.device);
+        let depth = inp
+            .queue_depths
+            .get(usize::try_from(d.device).unwrap_or(usize::MAX))
+            .map_or_else(|| "-".to_string(), |q| q.to_string());
+        devices.row(vec![
+            d.device.to_string(),
+            d.jobs.to_string(),
+            d.rows.to_string(),
+            d.cycles.to_string(),
+            fnum(d.utilization(inp.tile) * 100.0, 1),
+            dd.map_or_else(|| "-".to_string(), |x| fnum(x.util_drift, 2)),
+            depth,
+            format!("{}/{}/{}", d.wait_hist.p50(), d.wait_hist.p95(), d.wait_hist.p99()),
+        ]);
+    }
+    out.push_str(&devices.render());
+
+    let total_served: u64 = inp.tenants.iter().map(|t| t.jobs_served).sum();
+    let mut tenants = TextTable::new(vec![
+        "tenant", "submitted", "served", "share %", "wait p50 ns", "wait p95 ns", "wait p99 ns",
+    ]);
+    for t in inp.tenants {
+        let share = if total_served == 0 {
+            0.0
+        } else {
+            t.jobs_served as f64 / total_served as f64
+        };
+        tenants.row(vec![
+            t.tenant.to_string(),
+            t.requests_submitted.to_string(),
+            t.jobs_served.to_string(),
+            fnum(share * 100.0, 1),
+            t.wait_hist.p50().to_string(),
+            t.wait_hist.p95().to_string(),
+            t.wait_hist.p99().to_string(),
+        ]);
+    }
+    out.push('\n');
+    out.push_str(&tenants.render());
+
+    let mut hists = TextTable::new(vec!["histogram", "unit", "p50/p95/p99 (n)"]);
+    hists.row(vec!["queue wait".to_string(), "ns".to_string(), inp.trace.merged_wait_hist().summary()]);
+    hists.row(vec![
+        "install".to_string(),
+        "cycles".to_string(),
+        inp.trace.merged_install_hist().summary(),
+    ]);
+    hists.row(vec![
+        "kernel".to_string(),
+        "cycles".to_string(),
+        inp.trace.merged_kernel_hist().summary(),
+    ]);
+    hists.row(vec!["step".to_string(), "ns".to_string(), inp.trace.step_hist.summary()]);
+    hists.row(vec!["wave".to_string(), "ns".to_string(), inp.trace.wave_hist.summary()]);
+    out.push('\n');
+    out.push_str(&hists.render());
+
+    out.push_str(&format!(
+        "\njobs {}  installs {}  skips {}  coalesced {}  reuse {:.0}%  steals {}  waves {}  \
+         backpressure {}\nmean util drift {:.2}  mean tfpu drift {:.2}  (measured / analytical \
+         closed form)\n",
+        inp.snap.jobs_executed,
+        inp.snap.weight_loads,
+        inp.snap.weight_loads_skipped,
+        inp.snap.jobs_coalesced,
+        inp.snap.weight_reuse_rate() * 100.0,
+        inp.snap.steals,
+        inp.snap.waves,
+        inp.snap.backpressure_events,
+        drift.mean_util_drift,
+        drift.mean_tfpu_drift,
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::hist::Hist;
+    use crate::obs::trace::DeviceTrace;
+
+    #[test]
+    fn dashboard_renders_devices_tenants_and_histograms() {
+        let mut wait = Hist::default();
+        for v in [100u64, 200, 4000] {
+            wait.record(v);
+        }
+        let trace = Trace {
+            devices: vec![DeviceTrace {
+                device: 0,
+                events: Vec::new(),
+                dropped: 0,
+                cycles: 16,
+                jobs: 1,
+                rows: 8,
+                pe_active: 512,
+                first_tfpu: Some(8),
+                wait_hist: wait,
+                install_hist: Hist::default(),
+                kernel_hist: Hist::default(),
+            }],
+            ..Trace::default()
+        };
+        let snap = MetricsSnapshot { jobs_executed: 1, ..MetricsSnapshot::default() };
+        let tenants =
+            vec![TenantSnapshot { tenant: 7, jobs_served: 1, wait_hist: wait, ..Default::default() }];
+        let s = render_top(&TopInputs {
+            trace: &trace,
+            snap: &snap,
+            tenants: &tenants,
+            queue_depths: &[3],
+            arch: Arch::Dip,
+            tile: 8,
+            mac_stages: 2,
+        });
+        assert!(s.contains("device"), "{s}");
+        assert!(s.contains("50.0"), "device 0 utilization: {s}");
+        assert!(s.contains("| 7 "), "tenant row: {s}");
+        assert!(s.contains("queue wait"), "{s}");
+        assert!(s.contains("mean util drift"), "{s}");
+        // Share of the only tenant is 100%.
+        assert!(s.contains("100.0"), "{s}");
+    }
+}

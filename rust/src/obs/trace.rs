@@ -1,0 +1,472 @@
+//! Assembled traces: well-formedness validation, event counting for
+//! the trace↔ledger audit, and Chrome trace-event JSON export.
+//!
+//! A [`Trace`] is the frozen output of a [`Recorder`](super::Recorder)
+//! after the coordinator drained: the control track (submission,
+//! backpressure, wave/session lifecycle, clocked by the control
+//! sequence) plus one [`DeviceTrace`] track per worker (job spans with
+//! nested install/kernel slices, clocked by cumulative simulated
+//! cycles). Export renders devices as Perfetto tracks (`tid = device
+//! index + 1`, control at `tid 0`) with installs vs compute as nested
+//! slices under each job.
+
+use super::hist::Hist;
+use super::recorder::{Event, EventKind, NO_ID};
+use crate::jsonio::Json;
+
+/// One device's published track plus its utilization accounting.
+#[derive(Debug, Clone)]
+pub struct DeviceTrace {
+    pub device: u64,
+    /// Events in ring (= emission) order.
+    pub events: Vec<Event>,
+    /// Events lost to ring overwrite (0 in a well-formed trace).
+    pub dropped: u64,
+    /// Final device-cycle clock (sum of executed run cycles,
+    /// including charged install cycles).
+    pub cycles: u64,
+    pub jobs: u64,
+    pub rows: u64,
+    /// Active-PE cycle total over all executed jobs.
+    pub pe_active: u64,
+    /// Measured time-to-full-PE-utilization: `tfpu_cycles` of the
+    /// device's first job (kernel-relative, like the closed form).
+    pub first_tfpu: Option<u64>,
+    pub wait_hist: Hist,
+    pub install_hist: Hist,
+    pub kernel_hist: Hist,
+}
+
+impl DeviceTrace {
+    /// Measured utilization: active-PE cycles over `n² · cycles`.
+    /// Streaming and coalescing push this *above* the single-tile
+    /// closed form; install stalls pull it below.
+    pub fn utilization(&self, n: usize) -> f64 {
+        if self.cycles == 0 {
+            0.0
+        } else {
+            self.pe_active as f64 / ((n * n) as f64 * self.cycles as f64)
+        }
+    }
+}
+
+/// The full assembled trace.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    /// Control-track events in sequence order.
+    pub control_events: Vec<Event>,
+    pub control_dropped: u64,
+    /// Device tracks, sorted by device index.
+    pub devices: Vec<DeviceTrace>,
+    /// Serving step latency (wall ns).
+    pub step_hist: Hist,
+    /// Wave latency (wall ns).
+    pub wave_hist: Hist,
+}
+
+/// Event tallies of a trace — the left-hand side of the trace↔ledger
+/// conservation identities in [`crate::check::audit::audit_trace`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TraceCounts {
+    pub submits: u64,
+    pub enqueues: u64,
+    pub backpressure: u64,
+    pub pops: u64,
+    pub steals: u64,
+    pub jobs: u64,
+    pub installs: u64,
+    pub install_skips: u64,
+    pub coalesced_skips: u64,
+    pub kernels: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub wave_opens: u64,
+    pub wave_closes: u64,
+    pub session_joins: u64,
+    pub session_leaves: u64,
+    /// Ring drops across every track (a drop voids conservation).
+    pub dropped: u64,
+}
+
+impl Trace {
+    fn all_events(&self) -> impl Iterator<Item = &Event> {
+        self.control_events.iter().chain(self.devices.iter().flat_map(|d| d.events.iter()))
+    }
+
+    /// Tally every event by kind.
+    pub fn counts(&self) -> TraceCounts {
+        let mut c = TraceCounts {
+            dropped: self.control_dropped + self.devices.iter().map(|d| d.dropped).sum::<u64>(),
+            ..TraceCounts::default()
+        };
+        for ev in self.all_events() {
+            match ev.kind {
+                EventKind::Submit => c.submits += 1,
+                EventKind::Enqueue => c.enqueues += 1,
+                EventKind::Backpressure => c.backpressure += 1,
+                EventKind::Pop => c.pops += 1,
+                EventKind::Steal => c.steals += 1,
+                EventKind::Job => c.jobs += 1,
+                EventKind::Install => c.installs += 1,
+                EventKind::InstallSkip => c.install_skips += 1,
+                EventKind::CoalescedSkip => c.coalesced_skips += 1,
+                EventKind::Kernel => c.kernels += 1,
+                EventKind::CacheHit => c.cache_hits += 1,
+                EventKind::CacheMiss => c.cache_misses += 1,
+                EventKind::WaveOpen => c.wave_opens += 1,
+                EventKind::WaveClose => c.wave_closes += 1,
+                EventKind::SessionJoin => c.session_joins += 1,
+                EventKind::SessionLeave => c.session_leaves += 1,
+            }
+        }
+        c
+    }
+
+    /// Pool-wide queue-wait histogram (merged device hists).
+    pub fn merged_wait_hist(&self) -> Hist {
+        let mut h = Hist::default();
+        for d in &self.devices {
+            h.merge(&d.wait_hist);
+        }
+        h
+    }
+
+    /// Pool-wide install-cycle histogram.
+    pub fn merged_install_hist(&self) -> Hist {
+        let mut h = Hist::default();
+        for d in &self.devices {
+            h.merge(&d.install_hist);
+        }
+        h
+    }
+
+    /// Pool-wide kernel-cycle histogram.
+    pub fn merged_kernel_hist(&self) -> Hist {
+        let mut h = Hist::default();
+        for d in &self.devices {
+            h.merge(&d.kernel_hist);
+        }
+        h
+    }
+
+    /// Well-formedness: per-device cycle stamps monotone in ring
+    /// order, install/kernel slices nested inside their job span, job
+    /// spans disjoint, and causal ids resolving (device jobs only use
+    /// tiles/tenants the control track enqueued; session leaves and
+    /// wave closes match an open). Returns every violation found
+    /// (empty = well-formed).
+    pub fn validate(&self) -> Vec<String> {
+        let mut errs = Vec::new();
+        // Control track: sequence stamps strictly increasing.
+        for w in self.control_events.windows(2) {
+            if w[1].cyc <= w[0].cyc {
+                errs.push(format!(
+                    "control sequence not increasing: {} at {} after {} at {}",
+                    w[1].kind.name(),
+                    w[1].cyc,
+                    w[0].kind.name(),
+                    w[0].cyc
+                ));
+            }
+        }
+        let enq_tiles: std::collections::HashSet<u64> = self
+            .control_events
+            .iter()
+            .filter(|e| e.kind == EventKind::Enqueue)
+            .map(|e| e.tile)
+            .collect();
+        let enq_tenants: std::collections::HashSet<u64> = self
+            .control_events
+            .iter()
+            .filter(|e| e.kind == EventKind::Enqueue)
+            .map(|e| e.tenant)
+            .collect();
+        let opened: std::collections::HashSet<u64> = self
+            .control_events
+            .iter()
+            .filter(|e| e.kind == EventKind::WaveOpen)
+            .map(|e| e.wave)
+            .collect();
+        let joined: std::collections::HashSet<u64> = self
+            .control_events
+            .iter()
+            .filter(|e| e.kind == EventKind::SessionJoin)
+            .map(|e| e.session)
+            .collect();
+        for ev in &self.control_events {
+            match ev.kind {
+                EventKind::WaveClose if !opened.contains(&ev.wave) => {
+                    errs.push(format!("wave_close {} without wave_open", ev.wave));
+                }
+                EventKind::SessionLeave if !joined.contains(&ev.session) => {
+                    errs.push(format!("session_leave {} without session_join", ev.session));
+                }
+                _ => {}
+            }
+        }
+        for d in &self.devices {
+            let label = format!("device {}", d.device);
+            let mut last_cyc = 0u64;
+            // Current job span, as (start, end).
+            let mut job: Option<(u64, u64)> = None;
+            for ev in &d.events {
+                if ev.cyc < last_cyc {
+                    errs.push(format!(
+                        "{label}: cycle stamp regressed ({} at {} after {})",
+                        ev.kind.name(),
+                        ev.cyc,
+                        last_cyc
+                    ));
+                }
+                last_cyc = last_cyc.max(ev.cyc);
+                match ev.kind {
+                    EventKind::Job => {
+                        if let Some((s, e)) = job {
+                            if ev.cyc < e {
+                                errs.push(format!(
+                                    "{label}: job at {} overlaps job [{s}, {e})",
+                                    ev.cyc
+                                ));
+                            }
+                        }
+                        job = Some((ev.cyc, ev.cyc + ev.dur));
+                    }
+                    EventKind::Install
+                    | EventKind::Kernel
+                    | EventKind::InstallSkip
+                    | EventKind::CoalescedSkip => match job {
+                        Some((s, e)) if ev.cyc >= s && ev.cyc + ev.dur <= e => {}
+                        Some((s, e)) => errs.push(format!(
+                            "{label}: {} [{}, {}) escapes job [{s}, {e})",
+                            ev.kind.name(),
+                            ev.cyc,
+                            ev.cyc + ev.dur
+                        )),
+                        None => errs.push(format!(
+                            "{label}: {} at {} outside any job span",
+                            ev.kind.name(),
+                            ev.cyc
+                        )),
+                    },
+                    EventKind::Pop | EventKind::Steal | EventKind::CacheHit
+                    | EventKind::CacheMiss => {}
+                    other => {
+                        errs.push(format!(
+                            "{label}: control-track event {} on a device track",
+                            other.name()
+                        ));
+                    }
+                }
+                // Causal ids must resolve against the control track.
+                if ev.kind == EventKind::Job {
+                    if ev.tile != NO_ID && !enq_tiles.contains(&ev.tile) {
+                        errs.push(format!("{label}: job tile {:#x} never enqueued", ev.tile));
+                    }
+                    if ev.tenant != NO_ID && !enq_tenants.contains(&ev.tenant) {
+                        errs.push(format!("{label}: job tenant {} never enqueued", ev.tenant));
+                    }
+                }
+            }
+        }
+        errs
+    }
+
+    /// Chrome trace-event JSON (the `{"traceEvents": [...]}` object
+    /// format). Open in Perfetto / `chrome://tracing`: `tid 0` is the
+    /// coordinator control track, `tid N+1` is device `N`; job spans
+    /// contain their install/kernel slices. `ts` is the primary
+    /// deterministic clock (cycles / control sequence); wall ns ride
+    /// in `args`.
+    pub fn chrome_json(&self) -> Json {
+        let mut evs: Vec<Json> = Vec::new();
+        let meta = |name: &str, tid: u64, value: &str| {
+            Json::obj(vec![
+                ("name", Json::str(name)),
+                ("ph", Json::str("M")),
+                ("pid", Json::num(0)),
+                ("tid", Json::num(tid as f64)),
+                ("args", Json::obj(vec![("name", Json::str(value))])),
+            ])
+        };
+        evs.push(meta("process_name", 0, "dip"));
+        evs.push(meta("thread_name", 0, "coordinator"));
+        for d in &self.devices {
+            evs.push(meta("thread_name", d.device + 1, &format!("device {}", d.device)));
+        }
+        for ev in &self.control_events {
+            evs.push(Self::event_json(ev, 0));
+        }
+        for d in &self.devices {
+            for ev in &d.events {
+                evs.push(Self::event_json(ev, d.device + 1));
+            }
+        }
+        Json::obj(vec![
+            ("traceEvents", Json::Arr(evs)),
+            ("displayTimeUnit", Json::str("ns")),
+        ])
+    }
+
+    fn event_json(ev: &Event, tid: u64) -> Json {
+        let mut args: Vec<(&str, Json)> = vec![("wall_ns", Json::num(ev.wall_ns as f64))];
+        if ev.rows > 0 {
+            args.push(("rows", Json::num(ev.rows as f64)));
+        }
+        if ev.tenant != NO_ID {
+            args.push(("tenant", Json::num(ev.tenant as f64)));
+        }
+        if ev.tile != NO_ID {
+            args.push(("tile", Json::str(format!("{:#018x}", ev.tile))));
+        }
+        if ev.request != NO_ID {
+            args.push(("request", Json::num(ev.request as f64)));
+        }
+        if ev.wave != NO_ID {
+            args.push(("wave", Json::num(ev.wave as f64)));
+        }
+        if ev.session != NO_ID {
+            args.push(("session", Json::num(ev.session as f64)));
+        }
+        let mut fields: Vec<(&str, Json)> = vec![
+            ("name", Json::str(ev.kind.name())),
+            ("pid", Json::num(0)),
+            ("tid", Json::num(tid as f64)),
+            ("ts", Json::num(ev.cyc as f64)),
+            ("args", Json::obj(args)),
+        ];
+        if ev.kind.is_span() {
+            fields.push(("ph", Json::str("X")));
+            fields.push(("dur", Json::num(ev.dur as f64)));
+        } else {
+            fields.push(("ph", Json::str("i")));
+            fields.push(("s", Json::str("t")));
+        }
+        Json::obj(fields)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::recorder::{Event, EventKind};
+
+    fn dev_track(events: Vec<Event>) -> DeviceTrace {
+        DeviceTrace {
+            device: 0,
+            events,
+            dropped: 0,
+            cycles: 0,
+            jobs: 0,
+            rows: 0,
+            pe_active: 0,
+            first_tfpu: None,
+            wait_hist: Hist::default(),
+            install_hist: Hist::default(),
+            kernel_hist: Hist::default(),
+        }
+    }
+
+    fn well_formed() -> Trace {
+        let tile = 0xAB;
+        let enq = Event { tile, tenant: 0, ..Event::new(EventKind::Enqueue, 0, 0) };
+        let mut t = Trace {
+            control_events: vec![
+                Event { request: 1, tenant: 0, ..Event::new(EventKind::Submit, 0, 0) },
+                Event { cyc: 1, ..enq },
+                Event { cyc: 2, ..enq },
+            ],
+            ..Trace::default()
+        };
+        let job = |cyc, dur| Event { tile, tenant: 0, ..Event::new(EventKind::Job, cyc, dur) };
+        t.devices.push(dev_track(vec![
+            Event::new(EventKind::Pop, 0, 0),
+            Event::new(EventKind::CacheMiss, 0, 0),
+            job(0, 23),
+            Event::new(EventKind::Install, 0, 7),
+            Event::new(EventKind::Kernel, 7, 16),
+            job(23, 12),
+            Event::new(EventKind::InstallSkip, 23, 0),
+            Event::new(EventKind::Kernel, 23, 12),
+        ]));
+        t
+    }
+
+    #[test]
+    fn well_formed_trace_validates_clean_and_counts_partition() {
+        let t = well_formed();
+        assert_eq!(t.validate(), Vec::<String>::new());
+        let c = t.counts();
+        assert_eq!(c.submits, 1);
+        assert_eq!(c.enqueues, 2);
+        assert_eq!(c.jobs, 2);
+        assert_eq!(c.installs, 1);
+        assert_eq!(c.install_skips, 1);
+        assert_eq!(c.kernels, 2);
+        assert_eq!(c.pops, 1);
+        assert_eq!(c.cache_misses, 1);
+        assert_eq!(c.dropped, 0);
+        assert_eq!(c.installs + c.install_skips + c.coalesced_skips, c.jobs);
+    }
+
+    #[test]
+    fn validator_catches_cycle_regression() {
+        let mut t = well_formed();
+        t.devices[0].events[5].cyc = 3; // second job stamped before the first ended
+        let errs = t.validate();
+        assert!(
+            errs.iter().any(|e| e.contains("overlaps job")),
+            "want an overlap violation, got {errs:?}"
+        );
+        t.devices[0].events[5].cyc = 23;
+        t.devices[0].events[7].cyc = 1; // kernel stamped before its job
+        let errs = t.validate();
+        assert!(errs.iter().any(|e| e.contains("cycle stamp regressed")), "{errs:?}");
+    }
+
+    #[test]
+    fn validator_catches_escaped_slice_and_unresolved_ids() {
+        let mut t = well_formed();
+        t.devices[0].events[4].dur = 40; // kernel runs past its job span
+        assert!(t.validate().iter().any(|e| e.contains("escapes job")));
+
+        let mut t = well_formed();
+        t.devices[0].events[2].tile = 0xDEAD; // job against a never-enqueued tile
+        assert!(t.validate().iter().any(|e| e.contains("never enqueued")));
+
+        let mut t = well_formed();
+        t.control_events.push(Event {
+            wave: 9,
+            ..Event::new(EventKind::WaveClose, 99, 0)
+        });
+        assert!(t.validate().iter().any(|e| e.contains("without wave_open")));
+    }
+
+    #[test]
+    fn chrome_export_is_valid_json_with_tracks_and_nested_slices() {
+        let t = well_formed();
+        let rendered = t.chrome_json().render();
+        let back = Json::parse(&rendered).expect("export must be valid JSON");
+        let evs = back.get("traceEvents").unwrap().as_arr().unwrap();
+        // 3 metadata (process + control + 1 device) + 3 control + 8 device.
+        assert_eq!(evs.len(), 14);
+        let spans: Vec<&Json> = evs
+            .iter()
+            .filter(|e| e.get("ph").and_then(Json::as_str) == Some("X"))
+            .collect();
+        assert_eq!(spans.len(), 5); // 2 jobs + 1 install + 2 kernels
+        let job = spans
+            .iter()
+            .find(|e| e.get("name").and_then(Json::as_str) == Some("job"))
+            .unwrap();
+        assert_eq!(job.get("tid").unwrap().as_u64(), Some(1));
+        assert_eq!(job.get("ts").unwrap().as_u64(), Some(0));
+        assert_eq!(job.get("dur").unwrap().as_u64(), Some(23));
+        // Instants carry the scope field Perfetto expects.
+        let inst = evs
+            .iter()
+            .find(|e| e.get("name").and_then(Json::as_str) == Some("install_skip"))
+            .unwrap();
+        assert_eq!(inst.get("ph").unwrap().as_str(), Some("i"));
+        assert_eq!(inst.get("s").unwrap().as_str(), Some("t"));
+    }
+}

@@ -55,10 +55,11 @@
 //! [`submit_wave_as`]: crate::coordinator::Coordinator::submit_wave_as
 
 use std::collections::VecDeque;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use crate::coordinator::{MetricsSnapshot, TenantId, DEFAULT_TENANT};
 use crate::matrix::Mat;
+use crate::obs::{clock, Event, EventKind};
 use crate::power::energy;
 
 use super::decode::ServingEngine;
@@ -209,12 +210,17 @@ impl WaveScheduler {
     /// Run one wave. Returns `None` when nothing is active or queued.
     pub fn run_wave(&mut self) -> Option<WaveReport> {
         use std::sync::atomic::Ordering::Relaxed;
+        let rec = self.engine.coordinator().recorder();
         // Admission: fill the active set from the queue (continuous
         // batching — joiners prefill inside the next wave).
         let mut joined = 0;
         while self.active.len() < self.policy.max_sessions {
             match self.waiting.pop_front() {
                 Some(w) => {
+                    let mut ev = Event::new(EventKind::SessionJoin, 0, 0);
+                    ev.session = w.s.id;
+                    ev.tenant = w.s.tenant;
+                    rec.control(ev);
                     self.active.push_back(w);
                     joined += 1;
                 }
@@ -239,7 +245,12 @@ impl WaveScheduler {
         }
         let mut cohort: Vec<ActiveSession> = self.active.drain(..take).collect();
 
-        let t0 = Instant::now();
+        let wave_id = self.waves_run + 1;
+        let mut ev = Event::new(EventKind::WaveOpen, 0, 0);
+        ev.wave = wave_id;
+        ev.rows = stacked_rows as u64;
+        rec.control(ev);
+        let t0 = clock::start();
         let metrics = self.engine.coordinator().metrics_arc();
         let model = self.engine.model();
         let d_model = model.dims.d_model;
@@ -313,6 +324,18 @@ impl WaveScheduler {
                 self.active.push_back(a);
             }
         }
+
+        for id in &completed {
+            let mut ev = Event::new(EventKind::SessionLeave, 0, 0);
+            ev.session = *id;
+            ev.wave = wave_id;
+            rec.control(ev);
+        }
+        let mut ev = Event::new(EventKind::WaveClose, 0, 0);
+        ev.wave = wave_id;
+        ev.rows = stacked_rows as u64;
+        rec.control(ev);
+        rec.record_wave_ns(t0.elapsed_ns());
 
         let cfg = self.engine.coordinator().config();
         Some(WaveReport {

@@ -12,10 +12,11 @@
 //! the whole activation (the A/B baseline the benches compare
 //! against).
 
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use crate::coordinator::{Coordinator, CoordinatorConfig, MetricsSnapshot, TenantId};
 use crate::matrix::Mat;
+use crate::obs::clock;
 use crate::power::energy;
 
 use super::actcache::ActStripCache;
@@ -129,7 +130,7 @@ impl ServingEngine {
             });
         }
         let before = self.coord.metrics();
-        let t0 = Instant::now();
+        let t0 = clock::start();
         let n = s.acts.rows();
         let d_model = self.model.dims.d_model;
         // With reuse, only the pending rows stream; without, everything
@@ -168,6 +169,9 @@ impl ServingEngine {
         // the next input token.
         s.finish_pass(&x).expect("growth pre-checked at pass entry");
         let after = self.coord.metrics();
+        // Step latency lands in the recorder's pool-wide histogram
+        // (`dip top` reports its p50/p95/p99 alongside the queue wait).
+        self.coord.recorder().record_step_ns(t0.elapsed_ns());
         Ok(StepReport {
             session: s.id,
             rows_processed: n - row0,

@@ -67,13 +67,23 @@
 //! serving hot path pays per-wave, not per-job, overhead all the way
 //! down to the PE model.
 //!
-//! Observability: `act_strip_hits` / `act_strip_misses` /
+//! # Observability
+//!
+//! Counters: `act_strip_hits` / `act_strip_misses` /
 //! `act_bytes_saved` / `act_rows_reused` and `waves` /
 //! `wave_stacked_rows` (plus the derived `weight_loads_per_wave` /
 //! `mean_wave_rows`) in the coordinator
 //! [`Metrics`](crate::coordinator::Metrics), per-step [`StepReport`]s
 //! on the per-session engine, and per-wave [`WaveReport`]s on the
-//! scheduler.
+//! scheduler. The [`crate::obs`] flight recorder adds the event view:
+//! [`decode`] stamps each step's wall latency into the recorder's
+//! step histogram and [`batch`] emits the wave lifecycle —
+//! `session_join` at admission, `wave_open`/`wave_close` around each
+//! pass, `session_leave` at completion — onto the control track, so
+//! an exported trace (`dip trace-export`) shows which jobs served
+//! which wave and tenant. Wall-clock reads on these paths go through
+//! [`crate::obs::clock::Stopwatch`] only; the `no-raw-wall-clock`
+//! lint rule ([`crate::check::lint`]) machine-checks that.
 //!
 //! Soundness: every session enforces the statically proven
 //! `max_safe_seq_len` of its dims (the i32-accumulator bound derived

@@ -27,6 +27,10 @@
 //!    wave scheduler (mid-flight joins, staggered leaves, row budgets)
 //!    is bit-exact with per-session decode while performing strictly
 //!    fewer weight-tile installs and streaming strictly fewer rows,
+//!  * a randomized wave-mix run's flight-recorder trace is well-formed
+//!    (spans nest, causal ids resolve, per-device cycle stamps are
+//!    monotone) and its event tallies conserve exactly against the
+//!    settled metrics ledger,
 //!  * the activation-strip LRU never exceeds its capacity bound and
 //!    hits are pointer-shared,
 //!  * the analyzer's value-range pass is sound: random layer configs
@@ -45,6 +49,7 @@ use dip_core::bench_harness::scenarios::{
     assert_cached_strictly_cheaper, assert_waved_strictly_cheaper, run_decode_mix, run_wave_mix,
     run_wave_mix_per_session, DecodeMix, WaveMix, WaveSessionSpec,
 };
+use dip_core::check::audit::audit_trace;
 use dip_core::coordinator::{
     Coordinator, CoordinatorConfig, DeviceConfig, Metrics, PlacementPolicy, ShardedQueue,
     TenantId, DEFAULT_TENANT, MAX_FRONT_SKIPS,
@@ -713,6 +718,64 @@ fn prop_wave_decode_bit_exact_with_strictly_fewer_weight_loads() {
                 r.stacked_rows
             );
         }
+    }
+}
+
+#[test]
+fn prop_wave_mix_trace_is_well_formed_and_conserves() {
+    // The flight recorder's contract over randomized wave mixes: the
+    // settled trace must be well-formed — spans nest, causal ids
+    // resolve against the control track, per-device cycle stamps are
+    // monotone — and its event tallies must partition exactly into the
+    // settled ledger (check::audit::audit_trace), with zero ring drops
+    // and one queue-wait histogram sample per executed job.
+    let mut g = Gen(0x0B5EC);
+    for trial in 0..4 {
+        let sessions = g.range(2, 4) as usize;
+        let specs: Vec<WaveSessionSpec> = (0..sessions)
+            .map(|i| WaveSessionSpec {
+                join_after: if i < 2 { 0 } else { g.range(0, 3) as usize },
+                prompt_rows: 4 + g.range(0, 8) as usize,
+                steps: g.range(1, 3) as usize,
+            })
+            .collect();
+        let cfg = WaveMix {
+            tile: 8,
+            layers: g.range(1, 2) as usize,
+            dims: LayerDims {
+                d_model: 8 * g.range(1, 2) as usize,
+                d_k: 8,
+                d_ffn: 8 * g.range(1, 3) as usize,
+            },
+            sessions: specs,
+            devices: g.range(1, 3) as usize,
+            seed: g.next(),
+            strip_cache_capacity: g.range(8, 64) as usize,
+            policy: WavePolicy {
+                max_wave_rows: 16 + g.range(0, 48) as usize,
+                max_sessions: g.range(2, 8) as usize,
+                ..Default::default()
+            },
+        };
+        let o = run_wave_mix(&cfg);
+        let violations = o.trace.validate();
+        assert!(
+            violations.is_empty(),
+            "trial {trial}: malformed trace:\n{}",
+            violations.join("\n")
+        );
+        let counts = o.trace.counts();
+        let report = audit_trace(&counts, &o.metrics);
+        assert!(report.is_balanced(), "trial {trial}: trace-ledger audit failed:\n{report}");
+        assert_eq!(counts.dropped, 0, "trial {trial}: rings must never drop");
+        assert_eq!(
+            o.trace.merged_wait_hist().count(),
+            o.metrics.jobs_executed,
+            "trial {trial}: one wait sample per executed job"
+        );
+        // Device tracks partition the executed jobs.
+        let track_jobs: u64 = o.trace.devices.iter().map(|d| d.jobs).sum();
+        assert_eq!(track_jobs, o.metrics.jobs_executed, "trial {trial}");
     }
 }
 
