@@ -28,9 +28,9 @@ use dip_core::bench_harness::scenarios::{
     run_wave_mix_per_session, DecodeMix, DecodeOutcome, WaveMix, WaveOutcome, WaveSessionSpec,
 };
 use dip_core::bench_harness::timing::{bench, report_throughput, smoke_mode};
-use dip_core::check::audit::audit_trace;
+use dip_core::check::audit::{audit_critpath, audit_trace};
 use dip_core::coordinator::MetricsSnapshot;
-use dip_core::obs::{drift_report, Trace};
+use dip_core::obs::{attribute, drift_report, what_if, Trace};
 use dip_core::serving::{LayerDims, WavePolicy};
 
 /// Gate on the recorder's contract: the trace is well-formed and its
@@ -226,6 +226,31 @@ fn main() {
         wab.weight_loads_ratio, wab.rows_ratio, wab.cycles_ratio
     );
 
+    // === Critical-path profile of the batched run ===
+    // The attribution must conserve (audited by name), and the what-if
+    // "installs hidden" bound must reproduce the ledger's measured
+    // install share within 1% — on a conserving trace the two are the
+    // same quantity derived through independent paths (event walk vs
+    // atomic counters), so this pins the profiler against the ledger.
+    let profile_attr = attribute(&waved.trace);
+    audit_critpath(&profile_attr, &waved.metrics).assert_balanced();
+    let profile_bounds = what_if(&profile_attr);
+    let ledger_install_share =
+        waved.metrics.weight_load_cycles_charged as f64 / waved.metrics.sim_cycles as f64;
+    assert!(
+        (profile_bounds.install_share - ledger_install_share).abs() <= 0.01,
+        "what-if install share {:.4} drifted from the ledger's {:.4}",
+        profile_bounds.install_share,
+        ledger_install_share
+    );
+    println!(
+        "-> critical path: install share {:.1}% of busy cycles; installs-hidden bound {:.3}x, \
+         perfect-balance bound {:.3}x",
+        profile_bounds.install_share * 100.0,
+        profile_bounds.bound("installs_hidden").map_or(1.0, |c| c.speedup_bound),
+        profile_bounds.bound("perfect_balance").map_or(1.0, |c| c.speedup_bound),
+    );
+
     let wave_json = |o: &WaveOutcome| {
         Json::obj(vec![
             ("sim_cycles", Json::num(o.metrics.sim_cycles as f64)),
@@ -272,6 +297,13 @@ fn main() {
                 ("batched", wave_json(&waved)),
                 ("per_session", wave_json(&solo)),
                 ("drift", wave_drift.to_json()),
+            ]),
+        ),
+        (
+            "profile",
+            Json::obj(vec![
+                ("attribution", profile_attr.to_json()),
+                ("what_if", profile_bounds.to_json()),
             ]),
         ),
     ]);

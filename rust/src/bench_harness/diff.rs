@@ -1,0 +1,431 @@
+//! Bench-trajectory regression diffing: compare an emitted
+//! `BENCH_*.json` against its committed baseline with per-metric
+//! tolerance bands, so perf regressions (and the profiler's own
+//! attribution drift) fail CI instead of rotting silently.
+//!
+//! Three bands, classified by key path:
+//!
+//! * **Exempt** — wall-clock rates and latencies (`*_per_s`, `*_ns_p*`,
+//!   `wait_ns`, `throughput`, `busy_ns`, `wall_ns`). CI runners share
+//!   cores; wall time is not comparable across runs and never gates.
+//! * **Loose** (±60% + slop) — counters that depend on which device
+//!   won a race: steals, cache hits/misses, weight loads, reuse and
+//!   coalesce rates, drift ratios. Deterministic scenarios keep these
+//!   stable; work-stealing scenarios legitimately wobble.
+//! * **Tight** (±10% + slop, the default) — simulated cycles, rows,
+//!   jobs, speedup ratios: the numbers a perf PR is judged by.
+//!   `*_ratio` paths are always tight, even when a loose keyword
+//!   (e.g. `weight_loads_ratio`) appears inside them — ratios are the
+//!   acceptance metrics.
+//!
+//! Structure is always enforced: a metric present in the baseline but
+//! missing from the current run fails (the bench stopped reporting
+//! it), a type change fails, an array length change fails; a *new*
+//! current-only metric only warns (commit a refreshed baseline to
+//! adopt it).
+//!
+//! **Provisional baselines**: a baseline carrying `"provisional": true`
+//! pins the schema but not the values — value deviations downgrade to
+//! warnings. This is how a baseline is introduced before trustworthy
+//! measured numbers exist; a later run replaces it with measured
+//! values and drops the flag, arming the gate. A top-level `smoke`
+//! flag mismatch (baseline from a smoke run, current from a full run
+//! or vice versa) also skips value comparison — sizes differ by
+//! design — while still enforcing the schema.
+
+use std::fmt::Write as _;
+
+use crate::jsonio::Json;
+
+/// Relative tolerance of the tight band (plus [`TIGHT_ABS_SLOP`]).
+pub const TIGHT_REL_TOL: f64 = 0.10;
+/// Relative tolerance of the loose band (plus [`LOOSE_ABS_SLOP`]).
+pub const LOOSE_REL_TOL: f64 = 0.60;
+/// Absolute slop so small integer counters (baseline 3, current 4)
+/// don't trip a relative band.
+pub const TIGHT_ABS_SLOP: f64 = 2.0;
+pub const LOOSE_ABS_SLOP: f64 = 8.0;
+
+/// Tolerance band of one metric path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Band {
+    Exempt,
+    Loose,
+    Tight,
+}
+
+/// Classify a dotted key path (e.g. `wave_mix.weight_loads_ratio`).
+pub fn band(path: &str) -> Band {
+    const EXEMPT: &[&str] =
+        &["_per_s", "_ns_p", "wait_ns", "throughput", "busy_ns", "wall_ns"];
+    const LOOSE: &[&str] = &[
+        "steal", "cache_hit", "cache_miss", "weight_load", "reuse", "coalesce", "drift", "util",
+        "tfpu", "hit_rate", "act_strip", "act_bytes", "act_rows",
+    ];
+    if EXEMPT.iter().any(|k| path.contains(k)) {
+        return Band::Exempt;
+    }
+    // Ratios are the acceptance metrics — always tight, even when a
+    // loose keyword appears inside the path.
+    if path.contains("_ratio") {
+        return Band::Tight;
+    }
+    if LOOSE.iter().any(|k| path.contains(k)) {
+        return Band::Loose;
+    }
+    Band::Tight
+}
+
+/// Severity of one finding: `Fail` gates CI, `Warn` is informational.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Severity {
+    Fail,
+    Warn,
+}
+
+/// One baseline/current deviation.
+#[derive(Debug, Clone)]
+pub struct DiffFinding {
+    pub file: String,
+    pub path: String,
+    pub severity: Severity,
+    pub detail: String,
+}
+
+/// Diff one bench file against its baseline. `file` labels findings.
+pub fn diff_bench(file: &str, baseline: &Json, current: &Json) -> Vec<DiffFinding> {
+    let mut out = Vec::new();
+    let provisional = matches!(baseline.get("provisional"), Some(Json::Bool(true)));
+    let skip_values = baseline.get("smoke") != current.get("smoke");
+    if skip_values {
+        out.push(DiffFinding {
+            file: file.to_string(),
+            path: "smoke".to_string(),
+            severity: Severity::Warn,
+            detail: "smoke flag differs from the baseline; value comparison skipped".to_string(),
+        });
+    }
+    diff_value(file, "", baseline, current, provisional, skip_values, &mut out);
+    out
+}
+
+fn join(path: &str, key: &str) -> String {
+    if path.is_empty() {
+        key.to_string()
+    } else {
+        format!("{path}.{key}")
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn push(
+    out: &mut Vec<DiffFinding>,
+    file: &str,
+    path: &str,
+    severity: Severity,
+    detail: String,
+) {
+    out.push(DiffFinding {
+        file: file.to_string(),
+        path: path.to_string(),
+        severity,
+        detail,
+    });
+}
+
+fn diff_value(
+    file: &str,
+    path: &str,
+    baseline: &Json,
+    current: &Json,
+    provisional: bool,
+    skip_values: bool,
+    out: &mut Vec<DiffFinding>,
+) {
+    match (baseline, current) {
+        (Json::Obj(bm), Json::Obj(cm)) => {
+            for (k, bv) in bm {
+                if k == "provisional" {
+                    continue; // baseline metadata, not a metric
+                }
+                let p = join(path, k);
+                match cm.get(k) {
+                    None => push(
+                        out,
+                        file,
+                        &p,
+                        Severity::Fail,
+                        "metric in the baseline is missing from the current run".to_string(),
+                    ),
+                    Some(cv) => diff_value(file, &p, bv, cv, provisional, skip_values, out),
+                }
+            }
+            for k in cm.keys().filter(|k| !bm.contains_key(*k)) {
+                push(
+                    out,
+                    file,
+                    &join(path, k),
+                    Severity::Warn,
+                    "new metric not in the baseline (refresh the baseline to adopt it)"
+                        .to_string(),
+                );
+            }
+        }
+        (Json::Arr(ba), Json::Arr(ca)) => {
+            if ba.len() != ca.len() {
+                push(
+                    out,
+                    file,
+                    path,
+                    Severity::Fail,
+                    format!("array length changed: baseline {} vs current {}", ba.len(), ca.len()),
+                );
+                return;
+            }
+            for (i, (bv, cv)) in ba.iter().zip(ca).enumerate() {
+                let p = format!("{path}[{i}]");
+                diff_value(file, &p, bv, cv, provisional, skip_values, out);
+            }
+        }
+        (Json::Num(bn), Json::Num(cn)) => {
+            if skip_values {
+                return;
+            }
+            let tols = match band(path) {
+                Band::Exempt => return,
+                Band::Loose => (LOOSE_REL_TOL, LOOSE_ABS_SLOP),
+                Band::Tight => (TIGHT_REL_TOL, TIGHT_ABS_SLOP),
+            };
+            let allowed = tols.0 * bn.abs() + tols.1;
+            let delta = (cn - bn).abs();
+            if delta > allowed {
+                let severity = if provisional { Severity::Warn } else { Severity::Fail };
+                push(
+                    out,
+                    file,
+                    path,
+                    severity,
+                    format!(
+                        "{cn} deviates from baseline {bn} by {delta:.3} (allowed {allowed:.3})"
+                    ),
+                );
+            }
+        }
+        (Json::Str(bs), Json::Str(cs)) => {
+            if !skip_values && bs != cs {
+                let severity = if provisional { Severity::Warn } else { Severity::Fail };
+                push(out, file, path, severity, format!("{cs:?} != baseline {bs:?}"));
+            }
+        }
+        (Json::Bool(bb), Json::Bool(cb)) => {
+            // The top-level smoke mismatch is already reported once.
+            if !skip_values && bb != cb {
+                let severity = if provisional { Severity::Warn } else { Severity::Fail };
+                push(out, file, path, severity, format!("{cb} != baseline {bb}"));
+            }
+        }
+        (Json::Null, Json::Null) => {}
+        _ => push(
+            out,
+            file,
+            path,
+            Severity::Fail,
+            "metric type changed between baseline and current".to_string(),
+        ),
+    }
+}
+
+/// Human-readable report; `fails > 0` means the gate should exit 1.
+pub fn render_findings(findings: &[DiffFinding]) -> (String, usize) {
+    let mut out = String::new();
+    let mut fails = 0usize;
+    for f in findings {
+        let tag = match f.severity {
+            Severity::Fail => {
+                fails += 1;
+                "FAIL"
+            }
+            Severity::Warn => "warn",
+        };
+        let _ = writeln!(out, "[{tag}] {} :: {} — {}", f.file, f.path, f.detail);
+    }
+    (out, fails)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mini(smoke: bool, provisional: bool, sim_cycles: f64) -> Json {
+        let mut pairs = vec![
+            ("smoke", Json::Bool(smoke)),
+            ("scenario", Json::str("decode")),
+            ("sim_cycles", Json::num(sim_cycles)),
+            ("steps_per_s_cached", Json::num(120.0)),
+            ("steals", Json::num(3.0)),
+            (
+                "wave_mix",
+                Json::obj(vec![
+                    ("weight_loads_ratio", Json::num(2.5)),
+                    ("waves", Json::num(6.0)),
+                ]),
+            ),
+            (
+                "configs",
+                Json::Arr(vec![Json::obj(vec![("rows", Json::num(64.0))])]),
+            ),
+        ];
+        if provisional {
+            pairs.push(("provisional", Json::Bool(true)));
+        }
+        Json::obj(pairs)
+    }
+
+    fn fails(findings: &[DiffFinding]) -> Vec<&DiffFinding> {
+        findings.iter().filter(|f| f.severity == Severity::Fail).collect()
+    }
+
+    #[test]
+    fn identical_runs_pass() {
+        let b = mini(true, false, 1000.0);
+        let findings = diff_bench("BENCH_t.json", &b, &b);
+        assert!(fails(&findings).is_empty(), "{findings:?}");
+    }
+
+    #[test]
+    fn seeded_regression_fixture_fails_by_path() {
+        // The acceptance fixture: a non-provisional baseline against a
+        // run whose sim_cycles doubled must fail, naming the metric.
+        let b = mini(true, false, 1000.0);
+        let c = mini(true, false, 2000.0);
+        let findings = diff_bench("BENCH_t.json", &b, &c);
+        let f = fails(&findings);
+        assert_eq!(f.len(), 1, "{findings:?}");
+        assert_eq!(f[0].path, "sim_cycles");
+        assert!(f[0].detail.contains("2000"));
+    }
+
+    #[test]
+    fn provisional_baseline_downgrades_value_drift_to_warning() {
+        let b = mini(true, true, 1000.0);
+        let c = mini(true, false, 2000.0);
+        let findings = diff_bench("BENCH_t.json", &b, &c);
+        assert!(fails(&findings).is_empty(), "{findings:?}");
+        assert!(
+            findings.iter().any(|f| f.path == "sim_cycles" && f.severity == Severity::Warn),
+            "the drift must still be surfaced as a warning: {findings:?}"
+        );
+    }
+
+    #[test]
+    fn wall_clock_rates_are_exempt() {
+        let mut c = mini(true, false, 1000.0);
+        if let Json::Obj(m) = &mut c {
+            m.insert("steps_per_s_cached".to_string(), Json::num(9e9));
+        }
+        let findings = diff_bench("BENCH_t.json", &mini(true, false, 1000.0), &c);
+        assert!(fails(&findings).is_empty(), "{findings:?}");
+    }
+
+    #[test]
+    fn loose_band_absorbs_stealing_wobble_but_not_collapse() {
+        // steals 3 -> 7 is within loose slop; 3 -> 60 is not.
+        let b = mini(true, false, 1000.0);
+        let mut c = mini(true, false, 1000.0);
+        if let Json::Obj(m) = &mut c {
+            m.insert("steals".to_string(), Json::num(7.0));
+        }
+        assert!(fails(&diff_bench("f", &b, &c)).is_empty());
+        if let Json::Obj(m) = &mut c {
+            m.insert("steals".to_string(), Json::num(60.0));
+        }
+        let findings = diff_bench("f", &b, &c);
+        assert_eq!(fails(&findings).len(), 1);
+        assert_eq!(fails(&findings)[0].path, "steals");
+    }
+
+    #[test]
+    fn missing_metric_fails_even_when_provisional() {
+        let b = mini(true, true, 1000.0);
+        let mut c = mini(true, false, 1000.0);
+        if let Json::Obj(m) = &mut c {
+            m.remove("sim_cycles");
+        }
+        let findings = diff_bench("f", &b, &c);
+        let f = fails(&findings);
+        assert_eq!(f.len(), 1, "{findings:?}");
+        assert_eq!(f[0].path, "sim_cycles");
+        assert!(f[0].detail.contains("missing"));
+    }
+
+    #[test]
+    fn new_metric_only_warns() {
+        let b = mini(true, false, 1000.0);
+        let mut c = mini(true, false, 1000.0);
+        if let Json::Obj(m) = &mut c {
+            m.insert("brand_new".to_string(), Json::num(1.0));
+        }
+        let findings = diff_bench("f", &b, &c);
+        assert!(fails(&findings).is_empty());
+        assert!(findings.iter().any(|f| f.path == "brand_new"));
+    }
+
+    #[test]
+    fn smoke_mismatch_skips_values_but_keeps_schema() {
+        let b = mini(false, false, 1000.0);
+        let mut c = mini(true, false, 9_999_999.0);
+        let findings = diff_bench("f", &b, &c);
+        assert!(fails(&findings).is_empty(), "values skipped: {findings:?}");
+        // ... but a vanished metric still fails.
+        if let Json::Obj(m) = &mut c {
+            m.remove("wave_mix");
+        }
+        assert_eq!(fails(&diff_bench("f", &b, &c)).len(), 1);
+    }
+
+    #[test]
+    fn array_length_change_fails() {
+        let b = mini(true, false, 1000.0);
+        let mut c = mini(true, false, 1000.0);
+        if let Json::Obj(m) = &mut c {
+            m.insert("configs".to_string(), Json::Arr(vec![]));
+        }
+        let findings = diff_bench("f", &b, &c);
+        assert_eq!(fails(&findings).len(), 1);
+        assert!(fails(&findings)[0].detail.contains("length"));
+    }
+
+    #[test]
+    fn type_change_fails() {
+        let b = mini(true, false, 1000.0);
+        let mut c = mini(true, false, 1000.0);
+        if let Json::Obj(m) = &mut c {
+            m.insert("sim_cycles".to_string(), Json::str("fast"));
+        }
+        assert_eq!(fails(&diff_bench("f", &b, &c)).len(), 1);
+    }
+
+    #[test]
+    fn band_classification_is_pinned() {
+        assert_eq!(band("throughput_req_per_s.devices4_batch4"), Band::Exempt);
+        assert_eq!(band("wait_ns_p95"), Band::Exempt);
+        assert_eq!(band("drift.devices[0].busy_ns"), Band::Exempt);
+        assert_eq!(band("steals_warm"), Band::Loose);
+        assert_eq!(band("cached.weight_loads"), Band::Loose);
+        assert_eq!(band("drift.mean_util_drift"), Band::Loose);
+        assert_eq!(band("wave_mix.weight_loads_ratio"), Band::Tight);
+        assert_eq!(band("cycles_ratio"), Band::Tight);
+        assert_eq!(band("cached.sim_cycles"), Band::Tight);
+        assert_eq!(band("profile.categories.install_cycles"), Band::Tight);
+    }
+
+    #[test]
+    fn render_counts_fails() {
+        let b = mini(true, false, 1000.0);
+        let c = mini(true, false, 2000.0);
+        let findings = diff_bench("BENCH_t.json", &b, &c);
+        let (text, fails) = render_findings(&findings);
+        assert_eq!(fails, 1);
+        assert!(text.contains("[FAIL] BENCH_t.json :: sim_cycles"));
+    }
+}

@@ -5,6 +5,7 @@
 //! `render()` / `to_json()` so the CLI, the examples, and the criterion
 //! benches share one implementation.
 
+pub mod diff;
 pub mod fig5;
 pub mod fig6;
 pub mod report;

@@ -38,6 +38,7 @@ use std::fmt;
 
 use crate::analytical::Arch;
 use crate::coordinator::{CoordinatorConfig, MetricsSnapshot, TenantSnapshot};
+use crate::obs::critpath::Attribution;
 use crate::obs::TraceCounts;
 
 /// One audited identity.
@@ -352,6 +353,68 @@ pub fn audit_trace(counts: &TraceCounts, snap: &MetricsSnapshot) -> AuditReport 
     AuditReport { checks }
 }
 
+/// Audit a critical-path attribution: the six categories must
+/// partition the `devices × makespan` budget exactly — per device and
+/// in total — and the busy-side totals must land on the settled
+/// metrics ledger to the cycle. A dropped or double-counted segment in
+/// the attribution walk breaks a named identity here instead of
+/// silently skewing a percentage in `dip profile`.
+///
+/// Like the other auditors this is only meaningful on a **settled**
+/// trace whose snapshot came from the same run.
+pub fn audit_critpath(attr: &Attribution, snap: &MetricsSnapshot) -> AuditReport {
+    let per_device_ok = attr.devices.iter().all(|d| d.cats.total() == attr.makespan);
+    let checks = vec![
+        // Double-entry: the whole budget, no more, no less.
+        eq(
+            "critpath-budget",
+            attr.totals.total(),
+            attr.budget,
+            "sum(categories) == devices * makespan",
+        ),
+        AuditCheck {
+            name: "critpath-device-partition",
+            ok: per_device_ok,
+            detail: format!(
+                "each device's six categories sum to the makespan {}: [{}]",
+                attr.makespan,
+                attr.devices
+                    .iter()
+                    .map(|d| format!("d{}={}", d.device, d.cats.total()))
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            ),
+        },
+        // The busy-side categories are re-derivations of ledger
+        // counters; they must agree exactly, not approximately.
+        eq(
+            "critpath-install-ledger",
+            attr.totals.install_cycles,
+            snap.weight_load_cycles_charged,
+            "install_cycles == weight_load_cycles_charged",
+        ),
+        eq(
+            "critpath-compute-ledger",
+            attr.totals.compute_cycles,
+            snap.rows_streamed,
+            "compute_cycles == rows_streamed",
+        ),
+        eq(
+            "critpath-busy-ledger",
+            attr.totals.busy(),
+            snap.sim_cycles,
+            "install + compute + overhead == sim_cycles",
+        ),
+        le(
+            "critpath-makespan-le-sim",
+            attr.makespan,
+            snap.sim_cycles,
+            "makespan <= sim_cycles (a track can't outrun the pool ledger)",
+        ),
+    ];
+    AuditReport { checks }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -492,6 +555,100 @@ mod tests {
             let report = audit_trace(&c, &snap);
             assert!(
                 report.failures().iter().any(|f| f.name == name),
+                "breaking `{name}` went unflagged:\n{report}"
+            );
+        }
+    }
+
+    /// The golden 2-device attribution (the numbers
+    /// `critpath::tests::golden_two_device_attribution_is_pinned`
+    /// derives from real device runs) plus the matching ledger slice.
+    fn balanced_attribution() -> (Attribution, MetricsSnapshot) {
+        use crate::obs::critpath::{Categories, DeviceAttribution};
+        let d0 = DeviceAttribution {
+            device: 0,
+            jobs: 2,
+            busy_end: 35,
+            cats: Categories {
+                install_cycles: 7,
+                compute_cycles: 12,
+                overhead_cycles: 16,
+                gap_cycles: 20,
+                ..Categories::default()
+            },
+            critical: false,
+        };
+        let d1 = DeviceAttribution {
+            device: 1,
+            jobs: 3,
+            busy_end: 55,
+            cats: Categories {
+                install_cycles: 7,
+                compute_cycles: 24,
+                overhead_cycles: 24,
+                ..Categories::default()
+            },
+            critical: true,
+        };
+        let totals = Categories {
+            install_cycles: 14,
+            compute_cycles: 36,
+            overhead_cycles: 40,
+            gap_cycles: 20,
+            ..Categories::default()
+        };
+        let attr = Attribution {
+            makespan: 55,
+            budget: 110,
+            devices: vec![d0, d1],
+            totals,
+            waves: Vec::new(),
+        };
+        let snap = MetricsSnapshot {
+            weight_load_cycles_charged: 14,
+            rows_streamed: 36,
+            sim_cycles: 90,
+            ..Default::default()
+        };
+        (attr, snap)
+    }
+
+    #[test]
+    fn balanced_attribution_passes_every_identity() {
+        let (attr, snap) = balanced_attribution();
+        let report = audit_critpath(&attr, &snap);
+        assert!(report.is_balanced(), "{report}");
+        report.assert_balanced();
+    }
+
+    #[test]
+    fn each_broken_critpath_identity_is_flagged_by_name() {
+        type Break = Box<dyn Fn(&mut Attribution, &mut MetricsSnapshot)>;
+        let cases: Vec<(&str, Break)> = vec![
+            // A dropped segment: device 0 loses gap cycles nobody else
+            // picks up.
+            ("critpath-budget", Box::new(|a, _| a.totals.gap_cycles -= 5)),
+            // A double-counted segment on one device.
+            (
+                "critpath-device-partition",
+                Box::new(|a, _| a.devices[1].cats.overhead_cycles += 3),
+            ),
+            ("critpath-install-ledger", Box::new(|_, s| s.weight_load_cycles_charged += 7)),
+            ("critpath-compute-ledger", Box::new(|a, _| {
+                // Keep the partition intact but misclassify compute as
+                // overhead: the ledger identity must still catch it.
+                a.totals.compute_cycles -= 4;
+                a.totals.overhead_cycles += 4;
+            })),
+            ("critpath-busy-ledger", Box::new(|_, s| s.sim_cycles += 1)),
+            ("critpath-makespan-le-sim", Box::new(|_, s| s.sim_cycles = 40)),
+        ];
+        for (name, brk) in cases {
+            let (mut attr, mut snap) = balanced_attribution();
+            brk(&mut attr, &mut snap);
+            let report = audit_critpath(&attr, &snap);
+            assert!(
+                report.failures().iter().any(|c| c.name == name),
                 "breaking `{name}` went unflagged:\n{report}"
             );
         }

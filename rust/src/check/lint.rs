@@ -42,6 +42,14 @@
 //!    recorder's overhead contract (one `Stopwatch` read per recorded
 //!    span, nothing hidden) stays machine-checkable. `#[cfg(test)]`
 //!    modules are exempt.
+//! 7. **`hist-rendered-or-exported`** — every `pub ... : Hist` field
+//!    on the exported snapshot types (`obs/trace.rs`,
+//!    `coordinator/metrics.rs`) must surface in the `dip top`
+//!    dashboard (`obs/top.rs` references it, directly or through a
+//!    `merged_*` accessor). A histogram that is recorded but never
+//!    rendered or exported is dead telemetry: it costs hot-path
+//!    `record()` calls and shows nobody anything. Cross-file, so it
+//!    runs in [`lint_tree`] / [`lint_hists`], not [`lint_source`].
 //!
 //! The whole-tree scan runs as an ordinary `#[test]`
 //! (`shipped_tree_is_lint_clean`), so tier-1 `cargo test` gates on it;
@@ -76,6 +84,7 @@ const RULE_SEQCST: &str = "no-seqcst";
 const RULE_HOT_ALLOC: &str = "no-hot-path-alloc";
 const RULE_TRUNC_CAST: &str = "no-unannotated-truncating-cast";
 const RULE_WALL_CLOCK: &str = "no-raw-wall-clock";
+const RULE_HIST: &str = "hist-rendered-or-exported";
 
 /// Allocation markers banned inside the kernel hot region (shared
 /// with the analyzer's hot-region pass).
@@ -129,6 +138,53 @@ fn atomic_u64_fields(lines: &[&str]) -> Vec<(usize, String)> {
         }
     }
     out
+}
+
+/// Names and lines of `pub <name>: Hist` fields in stripped lines
+/// (same shape as [`atomic_u64_fields`], for the histogram rule).
+fn hist_fields(lines: &[&str]) -> Vec<(usize, String)> {
+    let mut out = Vec::new();
+    for (i, l) in lines.iter().enumerate() {
+        let t = l.trim();
+        let Some(rest) = t.strip_prefix("pub ") else { continue };
+        let Some((name, ty)) = rest.split_once(':') else { continue };
+        let name = name.trim();
+        if ty.trim().trim_end_matches(',') == "Hist"
+            && !name.is_empty()
+            && name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_')
+        {
+            out.push((i + 1, name.to_string()));
+        }
+    }
+    out
+}
+
+/// Rule 7 (cross-file): every `pub ... : Hist` field on the exported
+/// snapshot types must be referenced by the dashboard source (a direct
+/// field read or a `merged_<name>()` accessor both mention the field
+/// name, so a substring check is exact enough and stays parser-free).
+pub fn lint_hists(label: &str, source: &str, dashboard: &str) -> Vec<LintFinding> {
+    if !(label.ends_with("obs/trace.rs") || label.ends_with("coordinator/metrics.rs")) {
+        return Vec::new();
+    }
+    let stripped = strip_source(source);
+    let lines: Vec<&str> = stripped.lines().collect();
+    let mut findings = Vec::new();
+    for (line, name) in hist_fields(&lines) {
+        if !dashboard.contains(&name) {
+            findings.push(LintFinding {
+                rule: RULE_HIST,
+                file: label.to_string(),
+                line,
+                detail: format!(
+                    "histogram `{name}` is recorded but never rendered — reference it \
+                     (or a merged_* accessor over it) in obs/top.rs, or stop paying \
+                     for its record() calls"
+                ),
+            });
+        }
+    }
+    findings
 }
 
 /// Lint one source file. `label` selects the file-scoped rules
@@ -290,9 +346,16 @@ pub fn lint_source(label: &str, source: &str) -> Vec<LintFinding> {
 /// Lint every `.rs` file under this crate's `src/` tree. Labels are
 /// `src/…`-relative so the file-scoped rules bind to the right files.
 pub fn lint_tree() -> Vec<LintFinding> {
+    let units = read_tree_units();
+    let dashboard = units
+        .iter()
+        .find(|u| u.label.ends_with("obs/top.rs"))
+        .map(|u| u.text.clone())
+        .unwrap_or_default();
     let mut findings = Vec::new();
-    for unit in read_tree_units() {
+    for unit in &units {
         findings.extend(lint_source(&unit.label, &unit.text));
+        findings.extend(lint_hists(&unit.label, &unit.text, &dashboard));
     }
     findings
 }
@@ -485,6 +548,40 @@ mod tests {
         // A type merely ending in `Instant` is not the std clock.
         let ident = "pub fn f() -> u64 {\n    MyInstant::now(3)\n}\n";
         assert!(lint_source("src/serving/fake.rs", ident).is_empty());
+    }
+
+    #[test]
+    fn unrendered_hist_mutant_is_caught() {
+        // A trace type growing a histogram the dashboard never shows —
+        // the dead-telemetry mutant rule 7 exists for.
+        let src = "pub struct DeviceTrace {\n    pub wait_hist: Hist,\n    pub spin_hist: Hist,\n}\n";
+        let dash = "hists.row(vec![inp.trace.merged_wait_hist().summary()]);";
+        let f = lint_hists("src/obs/trace.rs", src, dash);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!((f[0].rule, f[0].line), (RULE_HIST, 3));
+        assert!(f[0].detail.contains("spin_hist"), "{}", f[0].detail);
+        // Snapshot types only: other files may hold working histograms.
+        assert!(lint_hists("src/obs/recorder.rs", src, dash).is_empty());
+        // Private histograms are internal accumulation, not exports.
+        let private = "struct Inner {\n    scratch_hist: Hist,\n}\n";
+        assert!(lint_hists("src/obs/trace.rs", private, dash).is_empty());
+    }
+
+    #[test]
+    fn hist_field_parser_sees_all_shipped_histograms() {
+        // Pin the parser against the real snapshot layouts (5 on the
+        // trace, 1 on TenantSnapshot as of this PR), or rule 7 silently
+        // checks nothing; then assert the shipped dashboard renders all.
+        let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+        let trace = std::fs::read_to_string(root.join("src/obs/trace.rs")).unwrap();
+        let metrics = std::fs::read_to_string(root.join("src/coordinator/metrics.rs")).unwrap();
+        let dash = std::fs::read_to_string(root.join("src/obs/top.rs")).unwrap();
+        let stripped = strip_source(&trace);
+        let fields = hist_fields(&stripped.lines().collect::<Vec<_>>());
+        assert!(fields.len() >= 5, "found only {}: {fields:?}", fields.len());
+        assert!(fields.iter().any(|(_, n)| n == "step_hist"));
+        assert!(lint_hists("src/obs/trace.rs", &trace, &dash).is_empty());
+        assert!(lint_hists("src/coordinator/metrics.rs", &metrics, &dash).is_empty());
     }
 
     #[test]

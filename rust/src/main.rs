@@ -47,11 +47,23 @@ COMMANDS:
                           audit the trace against the ledger, and export
                           Chrome trace-event JSON (open in Perfetto)
                           [--out <path>]  (default trace.json)
-    top                 One-shot text dashboard over a settled multi-tenant
-                          run: per-device utilization + analytical drift,
-                          queue depths, tenant shares, latency percentiles
-                          [--once] [--requests <n>] [--devices <n>]
-                          [--arch <dip|ws>]
+    top                 Text dashboard over a multi-tenant run: per-device
+                          utilization + analytical drift, queue depths,
+                          tenant shares, latency percentiles, critical-path
+                          split + what-if bounds; --watch renders per-tick
+                          counter deltas while the run is live
+                          [--once | --watch <secs>] [--requests <n>]
+                          [--devices <n>] [--arch <dip|ws>]
+    profile             Critical-path profiler over the canned wave mix:
+                          attribute every cycle of the device budget to six
+                          audited causal categories, then price the ROADMAP
+                          counterfactuals (double-buffered installs, async
+                          front end, perfect cache) as speedup bounds
+                          [--out <path>]  (default profile.json)
+    bench-diff          Compare emitted BENCH_*.json against committed
+                          baselines with per-metric tolerance bands; exit 1
+                          on regression (the CI perf gate)
+                          [--baseline <dir>] [--current <dir>]
     lint                Repo lint gate over rust/src (exit 1 on findings)
     analyze             Whole-program static analysis: lock-order deadlock
                           freedom, value-range overflow proofs (emits
@@ -128,6 +140,8 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
         "audit" => cmd_audit(args),
         "trace-export" => cmd_trace_export(args),
         "top" => cmd_top(args),
+        "profile" => cmd_profile(args),
+        "bench-diff" => cmd_bench_diff(args),
         "lint" => cmd_lint(),
         "analyze" => cmd_analyze(args),
         "sparsity" => cmd_sparsity(args),
@@ -397,15 +411,15 @@ fn cmd_audit(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_trace_export(args: &Args) -> Result<()> {
-    use dip_core::bench_harness::scenarios::{run_wave_mix, WaveMix, WaveSessionSpec};
-    use dip_core::check::audit::audit_trace;
+/// The canned continuous-batching mix: staggered joins and ragged
+/// prompts so the traced run exercises session/wave flow, coalescing,
+/// and install-vs-skip on every device track. `trace-export` and
+/// `profile` share it so the exported timeline and the attribution
+/// report describe the same deterministic run.
+fn canned_wave_mix() -> dip_core::bench_harness::scenarios::WaveMix {
+    use dip_core::bench_harness::scenarios::{WaveMix, WaveSessionSpec};
     use dip_core::serving::{LayerDims, WavePolicy};
-    let out = args.get("--out").unwrap_or("trace.json");
-    // The canned continuous-batching mix: staggered joins and ragged
-    // prompts so the exported trace exercises session/wave flow,
-    // coalescing, and install-vs-skip on every device track.
-    let mix = WaveMix {
+    WaveMix {
         tile: 8,
         layers: 2,
         dims: LayerDims { d_model: 16, d_k: 8, d_ffn: 24 },
@@ -418,7 +432,14 @@ fn cmd_trace_export(args: &Args) -> Result<()> {
         seed: 7100,
         strip_cache_capacity: 512,
         policy: WavePolicy::default(),
-    };
+    }
+}
+
+fn cmd_trace_export(args: &Args) -> Result<()> {
+    use dip_core::bench_harness::scenarios::run_wave_mix;
+    use dip_core::check::audit::audit_trace;
+    let out = args.get("--out").unwrap_or("trace.json");
+    let mix = canned_wave_mix();
     eprintln!("running the canned wave mix (3 sessions, 2 DiP-8 devices)...");
     let o = run_wave_mix(&mix);
     let violations = o.trace.validate();
@@ -443,12 +464,109 @@ fn cmd_trace_export(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_profile(args: &Args) -> Result<()> {
+    use dip_core::bench_harness::scenarios::run_wave_mix;
+    use dip_core::check::audit::{audit_critpath, audit_trace};
+    use dip_core::obs::{attribute, what_if};
+    let out = args.get("--out").unwrap_or("profile.json");
+    let mix = canned_wave_mix();
+    eprintln!("profiling the canned wave mix (3 sessions, 2 DiP-8 devices)...");
+    let o = run_wave_mix(&mix);
+    let violations = o.trace.validate();
+    anyhow::ensure!(
+        violations.is_empty(),
+        "trace is malformed; refusing to attribute it:\n{}",
+        violations.join("\n")
+    );
+    audit_trace(&o.trace.counts(), &o.metrics).assert_balanced();
+    let attr = attribute(&o.trace);
+    let report = audit_critpath(&attr, &o.metrics);
+    anyhow::ensure!(
+        report.is_balanced(),
+        "critical-path attribution does not conserve:\n{report}"
+    );
+    let bounds = what_if(&attr);
+    print!("{}", attr.render());
+    println!();
+    print!("{}", bounds.render());
+    let json = Json::obj(vec![
+        ("attribution", attr.to_json()),
+        ("what_if", bounds.to_json()),
+    ]);
+    std::fs::write(out, json.render()).with_context(|| format!("writing {out}"))?;
+    println!(
+        "profile OK — {} device-cycles attributed across 6 categories (all {} audit \
+         identities balance); wrote {out}",
+        attr.budget,
+        report.checks.len()
+    );
+    Ok(())
+}
+
+fn cmd_bench_diff(args: &Args) -> Result<()> {
+    use dip_core::bench_harness::diff::{diff_bench, render_findings, DiffFinding, Severity};
+    let baseline_dir = args.get("--baseline").unwrap_or("rust/benches/baselines");
+    let current_dir = args.get("--current").unwrap_or(".");
+    let mut names: Vec<String> = std::fs::read_dir(baseline_dir)
+        .with_context(|| format!("reading baseline dir {baseline_dir}"))?
+        .filter_map(|e| e.ok().map(|e| e.file_name().to_string_lossy().into_owned()))
+        .filter(|n| n.starts_with("BENCH_") && n.ends_with(".json"))
+        .collect();
+    names.sort();
+    anyhow::ensure!(!names.is_empty(), "no BENCH_*.json baselines in {baseline_dir}");
+    let mut findings: Vec<DiffFinding> = Vec::new();
+    for name in &names {
+        let bpath = format!("{baseline_dir}/{name}");
+        let btext =
+            std::fs::read_to_string(&bpath).with_context(|| format!("reading {bpath}"))?;
+        let baseline = Json::parse(&btext).map_err(|e| anyhow!("parsing {bpath}: {e}"))?;
+        let cpath = format!("{current_dir}/{name}");
+        match std::fs::read_to_string(&cpath) {
+            Err(_) => findings.push(DiffFinding {
+                file: name.clone(),
+                path: "<file>".to_string(),
+                severity: Severity::Fail,
+                detail: format!(
+                    "baselined bench output missing from {current_dir} (did the bench run?)"
+                ),
+            }),
+            Ok(ctext) => {
+                let current =
+                    Json::parse(&ctext).map_err(|e| anyhow!("parsing {cpath}: {e}"))?;
+                findings.extend(diff_bench(name, &baseline, &current));
+            }
+        }
+    }
+    let (text, fails) = render_findings(&findings);
+    print!("{text}");
+    anyhow::ensure!(
+        fails == 0,
+        "bench-diff: {fails} regression finding(s) across {} baseline file(s)",
+        names.len()
+    );
+    println!(
+        "bench-diff OK — {} bench file(s) within tolerance of {baseline_dir} \
+         ({} warning(s))",
+        names.len(),
+        findings.len()
+    );
+    Ok(())
+}
+
 fn cmd_top(args: &Args) -> Result<()> {
-    use dip_core::obs::{render_top, TopInputs};
-    // `--once` is accepted for CI symmetry; one shot is the only mode.
+    use dip_core::obs::{render_top, render_watch_tick, TopInputs};
+    // `--once` is accepted for CI symmetry (the one-shot default).
     let requests = args.get_u64("--requests", 24)?;
     let devices = args.get_u64("--devices", 3)? as usize;
     let arch = args.get_arch(Arch::Dip)?;
+    let watch_secs: Option<f64> = match args.get("--watch") {
+        None => None,
+        Some(v) => {
+            let s: f64 = v.parse().with_context(|| format!("bad value for --watch: {v}"))?;
+            anyhow::ensure!(s > 0.0, "--watch needs a positive seconds value");
+            Some(s)
+        }
+    };
     let tile = 16usize;
     let cfg = CoordinatorConfig {
         devices,
@@ -458,15 +576,37 @@ fn cmd_top(args: &Args) -> Result<()> {
     };
     let coord = Coordinator::new(cfg);
     let w = random_i8(32, 32, 7);
-    let handles: Vec<_> = (0..requests)
-        .map(|i| {
-            let rows = 8 + (i as usize % 4) * 8;
-            coord.submit_as(i % 3, random_i8(rows, 32, 100 + i), w.clone())
-        })
-        .collect();
-    // Sample queue occupancy while the backlog is live; everything
-    // else on the dashboard reads the settled post-shutdown state.
-    let queue_depths = coord.queue_depths();
+    let submit = |i: u64| {
+        let rows = 8 + (i as usize % 4) * 8;
+        coord.submit_as(i % 3, random_i8(rows, 32, 100 + i), w.clone())
+    };
+    let mut handles = Vec::new();
+    let queue_depths;
+    if let Some(secs) = watch_secs {
+        // Live mode: feed the workload in bursts across ticks and
+        // render the counter movement of each tick as it happens.
+        let ticks = 4u64;
+        let mut prev = coord.metrics();
+        let mut submitted = 0u64;
+        let mut depths = coord.queue_depths();
+        for tick in 0..ticks {
+            while submitted < requests * (tick + 1) / ticks {
+                handles.push(submit(submitted));
+                submitted += 1;
+            }
+            depths = coord.queue_depths();
+            std::thread::sleep(std::time::Duration::from_secs_f64(secs));
+            let now = coord.metrics();
+            print!("{}", render_watch_tick(tick + 1, &now.delta(&prev), &depths, secs));
+            prev = now;
+        }
+        queue_depths = depths;
+    } else {
+        handles.extend((0..requests).map(submit));
+        // Sample queue occupancy while the backlog is live; everything
+        // else on the dashboard reads the settled post-shutdown state.
+        queue_depths = coord.queue_depths();
+    }
     for h in handles {
         h.wait();
     }

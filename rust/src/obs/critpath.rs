@@ -1,0 +1,612 @@
+//! Critical-path extraction and causal latency attribution.
+//!
+//! The flight recorder ([`super::recorder`]) says *where* cycles went;
+//! this module says *why*, by walking every settled device track along
+//! its causal event chain (pop/steal → job → install/skip → kernel)
+//! and splitting the pool's whole cycle budget — `devices × makespan`,
+//! where the makespan is the latest busy cycle on any track — into six
+//! **exclusive, exhaustive** categories:
+//!
+//! * `queue_wait` — idle cycles between jobs with no steal in the gap
+//!   (the async-front-end ROADMAP item's upper bound),
+//! * `install` — dedicated weight-load phases (what double-buffered
+//!   installs would hide),
+//! * `compute` — rows actually streaming through the array (one cycle
+//!   per row by the paper's eq. (1); the only category that is pure
+//!   useful work),
+//! * `overhead` — per-kernel fill/drain pipeline cycles, the cost that
+//!   tile-coalescing and batch formation amortize,
+//! * `steal` — idle gaps bridged by a steal transfer,
+//! * `gap` — trailing scheduler idle between a device's last job and
+//!   the pool makespan (what perfect load balance would reclaim).
+//!
+//! The split is double-entry: every category is measured from the
+//! events themselves (never assumed), the six per-device tallies sum
+//! to the makespan *exactly*, and [`crate::check::audit::audit_critpath`]
+//! holds the totals against the settled metrics ledger by name
+//! (`install == weight_load_cycles_charged`, `compute == rows_streamed`,
+//! `busy == sim_cycles`), so a dropped or double-counted segment fails
+//! loudly instead of skewing a percentage.
+//!
+//! Wave lifecycle events live on the control track and are summarized
+//! descriptively ([`WaveSummary`]): device `Job` spans carry tenant,
+//! tile, and rows but no wave id, so per-wave *cycle slicing* is not
+//! possible today — the summaries report wall-clock extent and the
+//! enqueues/rows each wave covered, and the limitation is documented
+//! here rather than papered over with a guess.
+
+use std::fmt::Write as _;
+
+use super::recorder::EventKind;
+use super::trace::{DeviceTrace, Trace};
+use crate::bench_harness::report::{fnum, TextTable};
+use crate::jsonio::Json;
+
+/// Display names of the six attribution categories, in ledger order.
+pub const CATEGORY_NAMES: [&str; 6] = [
+    "queue wait",
+    "install",
+    "kernel compute",
+    "fill/drain overhead",
+    "steal transfer",
+    "scheduler gap",
+];
+
+/// One exclusive, exhaustive split of a cycle span. All six fields sum
+/// to the span the split covers (per device: the pool makespan).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Categories {
+    pub queue_wait_cycles: u64,
+    pub install_cycles: u64,
+    pub compute_cycles: u64,
+    pub overhead_cycles: u64,
+    pub steal_cycles: u64,
+    pub gap_cycles: u64,
+}
+
+impl Categories {
+    /// Sum of all six categories — must equal the attributed span.
+    pub fn total(&self) -> u64 {
+        self.queue_wait_cycles
+            + self.install_cycles
+            + self.compute_cycles
+            + self.overhead_cycles
+            + self.steal_cycles
+            + self.gap_cycles
+    }
+
+    /// Cycles the device was executing a job (install + compute +
+    /// overhead) — the slice the metrics ledger counts as `sim_cycles`.
+    pub fn busy(&self) -> u64 {
+        self.install_cycles + self.compute_cycles + self.overhead_cycles
+    }
+
+    /// `(display name, cycles)` pairs in [`CATEGORY_NAMES`] order.
+    pub fn named(&self) -> [(&'static str, u64); 6] {
+        [
+            (CATEGORY_NAMES[0], self.queue_wait_cycles),
+            (CATEGORY_NAMES[1], self.install_cycles),
+            (CATEGORY_NAMES[2], self.compute_cycles),
+            (CATEGORY_NAMES[3], self.overhead_cycles),
+            (CATEGORY_NAMES[4], self.steal_cycles),
+            (CATEGORY_NAMES[5], self.gap_cycles),
+        ]
+    }
+
+    fn fold(&mut self, other: &Categories) {
+        self.queue_wait_cycles += other.queue_wait_cycles;
+        self.install_cycles += other.install_cycles;
+        self.compute_cycles += other.compute_cycles;
+        self.overhead_cycles += other.overhead_cycles;
+        self.steal_cycles += other.steal_cycles;
+        self.gap_cycles += other.gap_cycles;
+    }
+
+    fn to_json(self) -> Json {
+        Json::obj(vec![
+            ("queue_wait_cycles", Json::num(self.queue_wait_cycles as f64)),
+            ("install_cycles", Json::num(self.install_cycles as f64)),
+            ("compute_cycles", Json::num(self.compute_cycles as f64)),
+            ("overhead_cycles", Json::num(self.overhead_cycles as f64)),
+            ("steal_cycles", Json::num(self.steal_cycles as f64)),
+            ("gap_cycles", Json::num(self.gap_cycles as f64)),
+        ])
+    }
+}
+
+/// One device track's attribution: its six-way split of the pool
+/// makespan plus where its own busy extent ended.
+#[derive(Debug, Clone)]
+pub struct DeviceAttribution {
+    pub device: u64,
+    pub jobs: u64,
+    /// Cycle stamp at which the device finished its last job (its
+    /// contribution to the makespan; `gap_cycles` covers the rest).
+    pub busy_end: u64,
+    pub cats: Categories,
+    /// Whether this device's `busy_end` *is* the makespan — the track
+    /// every end-to-end cycle saved must come off of.
+    pub critical: bool,
+}
+
+/// Descriptive summary of one wave on the control track (see the
+/// module docs for why waves are summarized, not cycle-sliced).
+#[derive(Debug, Clone)]
+pub struct WaveSummary {
+    pub wave: u64,
+    /// `wave_close.wall_ns - wave_open.wall_ns`.
+    pub wall_ns: u64,
+    /// Enqueues observed between open and close.
+    pub enqueues: u64,
+    /// Rows those enqueues carried.
+    pub rows: u64,
+}
+
+/// The full causal attribution of a settled trace.
+#[derive(Debug, Clone)]
+pub struct Attribution {
+    /// Latest busy cycle on any device track.
+    pub makespan: u64,
+    /// `devices × makespan` — the span the categories partition.
+    pub budget: u64,
+    pub devices: Vec<DeviceAttribution>,
+    /// Category totals over all devices; `totals.total() == budget`.
+    pub totals: Categories,
+    pub waves: Vec<WaveSummary>,
+}
+
+/// Walk one device track: split every job span into install / compute /
+/// overhead from its nested events, classify inter-job gaps as queue
+/// wait or steal transfer, and return `(jobs, busy_end, cats)` with the
+/// trailing `gap_cycles` still unassigned (it needs the pool makespan).
+fn walk_device(d: &DeviceTrace) -> (u64, u64, Categories) {
+    let mut cats = Categories::default();
+    let mut cursor = 0u64; // end of the previous job span
+    let mut stolen_gap = false; // a Steal instant since the last job
+    // Open job span: (duration, cycles its nested events covered). Any
+    // residue a malformed trace leaves between the job span and its
+    // nested install/kernel slices is charged to overhead, keeping the
+    // split exhaustive by construction rather than by assumption.
+    let mut open: Option<(u64, u64)> = None;
+    let mut jobs = 0u64;
+    let mut settle = |cats: &mut Categories, open: &mut Option<(u64, u64)>| {
+        if let Some((dur, covered)) = open.take() {
+            cats.overhead_cycles += dur.saturating_sub(covered);
+        }
+    };
+    for ev in &d.events {
+        match ev.kind {
+            EventKind::Steal => stolen_gap = true,
+            EventKind::Job => {
+                settle(&mut cats, &mut open);
+                let gap = ev.cyc.saturating_sub(cursor);
+                if gap > 0 {
+                    if stolen_gap {
+                        cats.steal_cycles += gap;
+                    } else {
+                        cats.queue_wait_cycles += gap;
+                    }
+                }
+                stolen_gap = false;
+                jobs += 1;
+                open = Some((ev.dur, 0));
+                cursor = ev.cyc + ev.dur;
+            }
+            EventKind::Install => {
+                cats.install_cycles += ev.dur;
+                if let Some(o) = open.as_mut() {
+                    o.1 += ev.dur;
+                }
+            }
+            EventKind::Kernel => {
+                // One streaming cycle per row (eq. (1)); the rest of
+                // the kernel is pipeline fill/drain.
+                let compute = ev.dur.min(ev.rows);
+                cats.compute_cycles += compute;
+                cats.overhead_cycles += ev.dur - compute;
+                if let Some(o) = open.as_mut() {
+                    o.1 += ev.dur;
+                }
+            }
+            _ => {}
+        }
+    }
+    settle(&mut cats, &mut open);
+    (jobs, cursor, cats)
+}
+
+/// Summarize the control track's wave lifecycle (open → enqueues →
+/// close). Waves are sequential on the control seq order, so a simple
+/// open-wave accumulator suffices.
+fn wave_summaries(trace: &Trace) -> Vec<WaveSummary> {
+    let mut waves = Vec::new();
+    let mut open: Option<(u64, u64, u64, u64)> = None; // (wave, wall_ns, enqueues, rows)
+    for ev in &trace.control_events {
+        match ev.kind {
+            EventKind::WaveOpen => open = Some((ev.wave, ev.wall_ns, 0, 0)),
+            EventKind::Enqueue => {
+                if let Some(o) = open.as_mut() {
+                    o.2 += 1;
+                    o.3 += ev.rows;
+                }
+            }
+            EventKind::WaveClose => {
+                if let Some((wave, opened_ns, enqueues, rows)) = open.take() {
+                    waves.push(WaveSummary {
+                        wave,
+                        wall_ns: ev.wall_ns.saturating_sub(opened_ns),
+                        enqueues,
+                        rows,
+                    });
+                }
+            }
+            _ => {}
+        }
+    }
+    waves
+}
+
+/// Attribute a settled trace: per-device causal walk, pool makespan,
+/// and the six-way split of the whole `devices × makespan` budget.
+pub fn attribute(trace: &Trace) -> Attribution {
+    let walked: Vec<(u64, u64, Categories)> =
+        trace.devices.iter().map(walk_device).collect();
+    let makespan = walked.iter().map(|&(_, end, _)| end).max().unwrap_or(0);
+    let mut devices = Vec::with_capacity(walked.len());
+    let mut totals = Categories::default();
+    for (d, (jobs, busy_end, mut cats)) in trace.devices.iter().zip(walked) {
+        cats.gap_cycles = makespan - busy_end;
+        totals.fold(&cats);
+        devices.push(DeviceAttribution {
+            device: d.device,
+            jobs,
+            busy_end,
+            cats,
+            critical: busy_end == makespan && makespan > 0,
+        });
+    }
+    Attribution {
+        makespan,
+        budget: devices.len() as u64 * makespan,
+        devices,
+        totals,
+        waves: wave_summaries(trace),
+    }
+}
+
+impl Attribution {
+    /// Double-entry check: every device's six categories partition the
+    /// makespan exactly, and the totals partition the budget.
+    pub fn conserves(&self) -> bool {
+        self.totals.total() == self.budget
+            && self.devices.iter().all(|d| d.cats.total() == self.makespan)
+    }
+
+    /// Share of busy cycles spent in dedicated install phases —
+    /// `install / (install + compute + overhead)`. This equals
+    /// `weight_load_cycles_charged / sim_cycles` on a conserving trace
+    /// (the audit identities pin both sides), and is the number the
+    /// double-buffered-install ROADMAP item would hide.
+    pub fn install_share(&self) -> f64 {
+        let busy = self.totals.busy();
+        if busy == 0 {
+            0.0
+        } else {
+            self.totals.install_cycles as f64 / busy as f64
+        }
+    }
+
+    /// Text report: category split, per-device breakdown, waves.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "critical path — makespan {} cycles across {} devices (budget {} device-cycles)",
+            self.makespan,
+            self.devices.len(),
+            self.budget
+        );
+        let mut cat = TextTable::new(vec!["category", "cycles", "% of budget"]);
+        for (name, cycles) in self.totals.named() {
+            let pct = if self.budget == 0 {
+                0.0
+            } else {
+                cycles as f64 / self.budget as f64 * 100.0
+            };
+            cat.row(vec![name.to_string(), cycles.to_string(), fnum(pct, 1)]);
+        }
+        out.push_str(&cat.render());
+        let mut dev = TextTable::new(vec![
+            "device", "jobs", "busy end", "wait", "install", "compute", "overhead", "steal",
+            "gap", "critical",
+        ]);
+        for d in &self.devices {
+            dev.row(vec![
+                d.device.to_string(),
+                d.jobs.to_string(),
+                d.busy_end.to_string(),
+                d.cats.queue_wait_cycles.to_string(),
+                d.cats.install_cycles.to_string(),
+                d.cats.compute_cycles.to_string(),
+                d.cats.overhead_cycles.to_string(),
+                d.cats.steal_cycles.to_string(),
+                d.cats.gap_cycles.to_string(),
+                if d.critical { "*".to_string() } else { String::new() },
+            ]);
+        }
+        out.push_str(&dev.render());
+        let _ = writeln!(
+            out,
+            "install share of busy cycles: {} — conserves: {}",
+            fnum(self.install_share() * 100.0, 1) + "%",
+            self.conserves()
+        );
+        if !self.waves.is_empty() {
+            let _ = writeln!(
+                out,
+                "{} waves on the control track (descriptive — job spans carry no wave ids):",
+                self.waves.len()
+            );
+            for w in &self.waves {
+                let _ = writeln!(
+                    out,
+                    "  wave {}: {} enqueues, {} rows, {} ns wall",
+                    w.wave, w.enqueues, w.rows, w.wall_ns
+                );
+            }
+        }
+        out
+    }
+
+    /// JSON shape for `profile.json` and the BENCH trajectory files.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("makespan_cycles", Json::num(self.makespan as f64)),
+            ("budget_cycles", Json::num(self.budget as f64)),
+            ("conserves", Json::Bool(self.conserves())),
+            ("install_share", Json::num(self.install_share())),
+            ("categories", self.totals.to_json()),
+            (
+                "devices",
+                Json::Arr(
+                    self.devices
+                        .iter()
+                        .map(|d| {
+                            Json::obj(vec![
+                                ("device", Json::num(d.device as f64)),
+                                ("jobs", Json::num(d.jobs as f64)),
+                                ("busy_end", Json::num(d.busy_end as f64)),
+                                ("critical", Json::Bool(d.critical)),
+                                ("categories", d.cats.to_json()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "waves",
+                Json::Arr(
+                    self.waves
+                        .iter()
+                        .map(|w| {
+                            Json::obj(vec![
+                                ("wave", Json::num(w.wave as f64)),
+                                ("wall_ns", Json::num(w.wall_ns as f64)),
+                                ("enqueues", Json::num(w.enqueues as f64)),
+                                ("rows", Json::num(w.rows as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analytical::Arch;
+    use crate::coordinator::{
+        Device, DeviceConfig, Job, MatmulResponse, Metrics, ReqState, SubRequest, DEFAULT_TENANT,
+    };
+    use crate::matrix::{random_i8, Mat};
+    use crate::obs::recorder::Event;
+    use std::sync::mpsc::{channel, Receiver};
+    use std::sync::Arc;
+    use std::time::Instant;
+
+    fn job_for(x: &Mat<i8>, w: &Mat<i8>) -> (Job, Receiver<MatmulResponse>) {
+        let (tx, rx) = channel();
+        let req = Arc::new(ReqState::new(
+            x.rows(),
+            w.cols(),
+            w.cols(),
+            1,
+            vec![SubRequest { id: 0, row0: 0, rows: x.rows(), tx }],
+        ));
+        let w_tile = Arc::new(w.clone());
+        let tile_id = w_tile.content_hash();
+        (
+            Job {
+                req,
+                w_tile,
+                x_strip: Arc::new(x.clone()),
+                r0: 0,
+                c0: 0,
+                tile_id,
+                tenant: DEFAULT_TENANT,
+                enqueued_at: Instant::now(),
+            },
+            rx,
+        )
+    }
+
+    /// The deterministic 2-device golden scenario (the same runs
+    /// `device::tests::golden_trace_for_tiny_two_device_scenario` pins
+    /// event-by-event), now pinned at the attribution level: every
+    /// category's cycle count is an artifact, not a measurement.
+    #[test]
+    fn golden_two_device_attribution_is_pinned() {
+        let metrics = Arc::new(Metrics::default());
+        let cfg =
+            DeviceConfig { arch: Arch::Dip, tile: 8, mac_stages: 2, ..Default::default() };
+        let w = random_i8(8, 8, 2);
+        let mut keep = Vec::new();
+
+        // Device 0: an 8-row install job (7 + 16 cycles) then a 4-row
+        // resident skip (12 cycles) — busy through cycle 35.
+        let mut d0 = Device::new(cfg, 0, metrics.clone());
+        let (job, rx) = job_for(&random_i8(8, 8, 1), &w);
+        keep.push(rx);
+        d0.execute(job);
+        let (job, rx) = job_for(&random_i8(4, 8, 3), &w);
+        keep.push(rx);
+        d0.execute(job);
+
+        // Device 1: a coalesced batch of three 8-row same-tile jobs —
+        // one install, busy through cycle 55 (the makespan).
+        let mut d1 = Device::new(cfg, 1, metrics.clone());
+        let (jobs, rxs): (Vec<_>, Vec<_>) =
+            (0..3).map(|i| job_for(&random_i8(8, 8, 40 + i), &w)).unzip();
+        keep.extend(rxs);
+        d1.execute_batch(jobs);
+
+        let trace = Trace {
+            devices: vec![d0.take_obs().into_trace(), d1.take_obs().into_trace()],
+            ..Trace::default()
+        };
+        let attr = attribute(&trace);
+        assert_eq!(attr.makespan, 55);
+        assert_eq!(attr.budget, 110);
+        // Exclusive + exhaustive: 14 + 36 + 40 + 20 = 110.
+        assert_eq!(attr.totals.install_cycles, 14, "7-cycle install per device");
+        assert_eq!(attr.totals.compute_cycles, 36, "12 + 24 streamed rows");
+        assert_eq!(attr.totals.overhead_cycles, 40, "n+s-2 = 8 fill/drain per kernel");
+        assert_eq!(attr.totals.gap_cycles, 20, "device 0 idles 55-35 cycles");
+        assert_eq!(attr.totals.queue_wait_cycles, 0, "saturated tracks: no inter-job gaps");
+        assert_eq!(attr.totals.steal_cycles, 0);
+        assert_eq!(attr.totals.total(), attr.budget);
+        assert!(attr.conserves());
+        assert!(attr.devices[1].critical, "device 1's busy end is the makespan");
+        assert!(!attr.devices[0].critical);
+        assert_eq!(attr.devices[0].cats.gap_cycles, 20);
+        assert_eq!(attr.devices[1].cats.gap_cycles, 0);
+
+        // The three ledger identities audit_critpath enforces, held
+        // concretely against the settled metrics of this very run.
+        let snap = metrics.snapshot();
+        assert_eq!(attr.totals.install_cycles, snap.weight_load_cycles_charged);
+        assert_eq!(attr.totals.compute_cycles, snap.rows_streamed);
+        assert_eq!(attr.totals.busy(), snap.sim_cycles);
+        assert!((attr.install_share() - 14.0 / 90.0).abs() < 1e-12);
+    }
+
+    fn ev(kind: EventKind, cyc: u64, dur: u64, rows: u64) -> Event {
+        let mut e = Event::new(kind, cyc, dur);
+        e.rows = rows;
+        e
+    }
+
+    #[test]
+    fn inter_job_gaps_classify_as_wait_or_steal() {
+        // Synthetic track with real gaps: job at 0..10, idle 10..16
+        // with a Steal instant in the gap, job 16..26, idle 26..30
+        // with no steal, job 30..40.
+        let mut d = DeviceTrace { device: 0, ..DeviceTrace::default() };
+        for (cyc, stolen) in [(0, false), (16, true), (30, false)] {
+            if stolen {
+                d.events.push(ev(EventKind::Steal, cyc, 0, 0));
+            }
+            d.events.push(ev(EventKind::Job, cyc, 10, 4));
+            d.events.push(ev(EventKind::Kernel, cyc, 10, 4));
+        }
+        let trace = Trace { devices: vec![d], ..Trace::default() };
+        let attr = attribute(&trace);
+        assert_eq!(attr.makespan, 40);
+        assert_eq!(attr.totals.steal_cycles, 6, "10..16 bridged by the steal");
+        assert_eq!(attr.totals.queue_wait_cycles, 4, "26..30 has no steal");
+        assert_eq!(attr.totals.compute_cycles, 12);
+        assert_eq!(attr.totals.overhead_cycles, 18);
+        assert!(attr.conserves());
+    }
+
+    #[test]
+    fn uncovered_job_residue_lands_in_overhead_not_thin_air() {
+        // A job span whose nested slices cover only part of it (a
+        // malformed producer): the residue must still be attributed so
+        // the partition stays exhaustive.
+        let mut d = DeviceTrace { device: 0, ..DeviceTrace::default() };
+        d.events.push(ev(EventKind::Job, 0, 20, 8));
+        d.events.push(ev(EventKind::Kernel, 0, 12, 8)); // 8 cycles uncovered
+        let trace = Trace { devices: vec![d], ..Trace::default() };
+        let attr = attribute(&trace);
+        assert_eq!(attr.totals.compute_cycles, 8);
+        assert_eq!(attr.totals.overhead_cycles, 12, "4 fill/drain + 8 residue");
+        assert!(attr.conserves());
+    }
+
+    #[test]
+    fn empty_trace_attributes_nothing() {
+        let attr = attribute(&Trace::default());
+        assert_eq!(attr.makespan, 0);
+        assert_eq!(attr.budget, 0);
+        assert!(attr.conserves());
+        assert_eq!(attr.install_share(), 0.0);
+    }
+
+    #[test]
+    fn wave_summaries_cover_the_control_track() {
+        let mut t = Trace::default();
+        let mut ctl = |kind: EventKind, wall_ns: u64, wave: u64, rows: u64| {
+            let mut e = Event::new(kind, 0, 0);
+            e.wall_ns = wall_ns;
+            e.wave = wave;
+            e.rows = rows;
+            t.control_events.push(e);
+        };
+        ctl(EventKind::WaveOpen, 100, 1, 0);
+        ctl(EventKind::Enqueue, 110, 1, 8);
+        ctl(EventKind::Enqueue, 120, 1, 4);
+        ctl(EventKind::WaveClose, 150, 1, 0);
+        ctl(EventKind::WaveOpen, 200, 2, 0);
+        ctl(EventKind::Enqueue, 210, 2, 16);
+        ctl(EventKind::WaveClose, 260, 2, 0);
+        let attr = attribute(&t);
+        assert_eq!(attr.waves.len(), 2);
+        assert_eq!(attr.waves[0].wave, 1);
+        assert_eq!(attr.waves[0].wall_ns, 50);
+        assert_eq!(attr.waves[0].enqueues, 2);
+        assert_eq!(attr.waves[0].rows, 12);
+        assert_eq!(attr.waves[1].rows, 16);
+    }
+
+    #[test]
+    fn attribution_json_round_trips() {
+        let mut d = DeviceTrace { device: 3, ..DeviceTrace::default() };
+        d.events.push(ev(EventKind::Job, 0, 10, 4));
+        d.events.push(ev(EventKind::Install, 0, 2, 4));
+        d.events.push(ev(EventKind::Kernel, 2, 8, 4));
+        let trace = Trace { devices: vec![d], ..Trace::default() };
+        let attr = attribute(&trace);
+        let back = Json::parse(&attr.to_json().render()).unwrap();
+        assert_eq!(back.get("makespan_cycles").unwrap().as_u64(), Some(10));
+        assert_eq!(back.get("conserves"), Some(&Json::Bool(true)));
+        let cats = back.get("categories").unwrap();
+        assert_eq!(cats.get("install_cycles").unwrap().as_u64(), Some(2));
+        assert_eq!(cats.get("compute_cycles").unwrap().as_u64(), Some(4));
+        assert_eq!(cats.get("overhead_cycles").unwrap().as_u64(), Some(4));
+        let devs = back.get("devices").unwrap().as_arr().unwrap();
+        assert_eq!(devs[0].get("device").unwrap().as_u64(), Some(3));
+        assert_eq!(devs[0].get("critical"), Some(&Json::Bool(true)));
+    }
+
+    #[test]
+    fn render_names_every_category() {
+        let attr = attribute(&Trace::default());
+        let text = attr.render();
+        for name in CATEGORY_NAMES {
+            assert!(text.contains(name), "render must show {name:?}");
+        }
+    }
+}

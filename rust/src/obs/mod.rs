@@ -48,21 +48,31 @@
 //! the settled metrics ledger; [`Trace::chrome_json`] exports Chrome
 //! trace-event JSON (`dip trace-export`) viewable in Perfetto;
 //! [`drift::drift_report`] compares measured utilization and TFPU
-//! against the [`crate::analytical`] closed forms; and
-//! [`top::render_top`] renders the `dip top` dashboard.
+//! against the [`crate::analytical`] closed forms;
+//! [`critpath::attribute`] walks every device track and charges each
+//! simulated cycle of the pool budget to exactly one of six causal
+//! categories (double-entry, audited by
+//! [`crate::check::audit::audit_critpath`]); [`whatif::what_if`]
+//! replays that attribution under counterfactuals to price ROADMAP
+//! optimizations (`dip profile`); and [`top::render_top`] renders the
+//! `dip top` dashboard.
 //!
 //! [`MetricsSnapshot`]: crate::coordinator::MetricsSnapshot
 
 pub mod clock;
+pub mod critpath;
 pub mod drift;
 pub mod hist;
 pub mod recorder;
 pub mod top;
 pub mod trace;
+pub mod whatif;
 
 pub use clock::Stopwatch;
+pub use critpath::{attribute, Attribution, Categories, DeviceAttribution, WaveSummary};
 pub use drift::{drift_report, DeviceDrift, DriftReport};
 pub use hist::{Hist, HIST_BUCKETS};
 pub use recorder::{DeviceObs, Event, EventKind, EventRing, ObsConfig, Recorder, NO_ID};
-pub use top::{render_top, TopInputs};
+pub use top::{render_top, render_watch_tick, TopInputs};
 pub use trace::{DeviceTrace, Trace, TraceCounts};
+pub use whatif::{what_if, Counterfactual, WhatIfReport};

@@ -1,9 +1,15 @@
-//! `dip top` — one-shot text dashboard over a settled run: per-device
+//! `dip top` — text dashboard over a settled run: per-device
 //! utilization and drift, queue depths, tenant shares with histogram
-//! queue-wait percentiles, and the pool-wide latency summaries.
+//! queue-wait percentiles, the pool-wide latency summaries, and the
+//! critical-path category split with its what-if speedup bounds.
+//! `dip top --watch <secs>` renders per-tick counter deltas
+//! ([`render_watch_tick`]) while the run is in flight, then the full
+//! dashboard at the settled drain point.
 
+use super::critpath::attribute;
 use super::drift::drift_report;
 use super::trace::Trace;
+use super::whatif::what_if;
 use crate::analytical::Arch;
 use crate::bench_harness::report::{fnum, TextTable};
 use crate::coordinator::{MetricsSnapshot, TenantSnapshot};
@@ -93,6 +99,33 @@ pub fn render_top(inp: &TopInputs<'_>) -> String {
     out.push('\n');
     out.push_str(&hists.render());
 
+    // Critical-path attribution: where the cycle budget actually went,
+    // and what each ROADMAP counterfactual could buy back.
+    let attr = attribute(inp.trace);
+    if attr.makespan > 0 {
+        let mut cats = TextTable::new(vec!["critical path", "cycles", "% of budget"]);
+        for (name, cycles) in attr.totals.named() {
+            cats.row(vec![
+                name.to_string(),
+                cycles.to_string(),
+                fnum(cycles as f64 / attr.budget as f64 * 100.0, 1),
+            ]);
+        }
+        out.push('\n');
+        out.push_str(&cats.render());
+        let bounds = what_if(&attr);
+        let mut wi = TextTable::new(vec!["what-if", "predicted makespan", "speedup <="]);
+        for c in &bounds.counterfactuals {
+            wi.row(vec![
+                c.name.to_string(),
+                c.predicted_makespan.to_string(),
+                fnum(c.speedup_bound, 3),
+            ]);
+        }
+        out.push('\n');
+        out.push_str(&wi.render());
+    }
+
     out.push_str(&format!(
         "\njobs {}  installs {}  skips {}  coalesced {}  reuse {:.0}%  steals {}  waves {}  \
          backpressure {}\nmean util drift {:.2}  mean tfpu drift {:.2}  (measured / analytical \
@@ -109,6 +142,41 @@ pub fn render_top(inp: &TopInputs<'_>) -> String {
         drift.mean_tfpu_drift,
     ));
     out
+}
+
+/// One `--watch` refresh line set: the counter movement since the
+/// previous tick (`delta = now.delta(&prev)`), plus instantaneous
+/// queue depths. Rates use the tick's wall elapsed seconds.
+pub fn render_watch_tick(
+    tick: u64,
+    delta: &MetricsSnapshot,
+    queue_depths: &[usize],
+    elapsed_s: f64,
+) -> String {
+    let rate = |v: u64| {
+        if elapsed_s > 0.0 {
+            fnum(v as f64 / elapsed_s, 1)
+        } else {
+            "-".to_string()
+        }
+    };
+    let depths: Vec<String> = queue_depths.iter().map(|d| d.to_string()).collect();
+    format!(
+        "[tick {tick}] +jobs {} ({}/s)  +rows {} ({}/s)  +cycles {}  +installs {}  +skips {}  \
+         +coalesced {}  +steals {}  +waves {}  +backpressure {}  queues [{}]\n",
+        delta.jobs_executed,
+        rate(delta.jobs_executed),
+        delta.rows_streamed,
+        rate(delta.rows_streamed),
+        delta.sim_cycles,
+        delta.weight_loads,
+        delta.weight_loads_skipped,
+        delta.jobs_coalesced,
+        delta.steals,
+        delta.waves,
+        delta.backpressure_events,
+        depths.join(" "),
+    )
 }
 
 #[cfg(test)]
@@ -158,5 +226,54 @@ mod tests {
         assert!(s.contains("mean util drift"), "{s}");
         // Share of the only tenant is 100%.
         assert!(s.contains("100.0"), "{s}");
+        // No job events on the track: makespan 0, so the critical-path
+        // and what-if tables are withheld rather than rendered empty.
+        assert!(!s.contains("critical path"), "{s}");
+    }
+
+    #[test]
+    fn dashboard_folds_in_attribution_and_what_if_bounds() {
+        use crate::obs::recorder::{Event, EventKind};
+        let mut d = DeviceTrace { device: 0, ..DeviceTrace::default() };
+        d.events.push(Event::new(EventKind::Job, 0, 10));
+        d.events.push(Event::new(EventKind::Install, 0, 2));
+        let mut kernel = Event::new(EventKind::Kernel, 2, 8);
+        kernel.rows = 4;
+        d.events.push(kernel);
+        let trace = Trace { devices: vec![d], ..Trace::default() };
+        let snap = MetricsSnapshot::default();
+        let s = render_top(&TopInputs {
+            trace: &trace,
+            snap: &snap,
+            tenants: &[],
+            queue_depths: &[0],
+            arch: Arch::Dip,
+            tile: 8,
+            mac_stages: 2,
+        });
+        assert!(s.contains("critical path"), "{s}");
+        assert!(s.contains("install"), "{s}");
+        assert!(s.contains("what-if"), "{s}");
+        assert!(s.contains("installs_hidden"), "{s}");
+        assert!(s.contains("perfect_balance"), "{s}");
+    }
+
+    #[test]
+    fn watch_tick_renders_deltas_and_rates() {
+        let delta = MetricsSnapshot {
+            jobs_executed: 6,
+            rows_streamed: 48,
+            sim_cycles: 100,
+            steals: 1,
+            ..Default::default()
+        };
+        let s = render_watch_tick(3, &delta, &[2, 0], 2.0);
+        assert!(s.contains("[tick 3]"), "{s}");
+        assert!(s.contains("+jobs 6 (3.0/s)"), "{s}");
+        assert!(s.contains("+rows 48 (24.0/s)"), "{s}");
+        assert!(s.contains("queues [2 0]"), "{s}");
+        // Zero elapsed degrades rates to "-" instead of dividing.
+        let s = render_watch_tick(0, &delta, &[], 0.0);
+        assert!(s.contains("(-/s)"), "{s}");
     }
 }

@@ -15,7 +15,7 @@ use super::recorder::{Event, EventKind, NO_ID};
 use crate::jsonio::Json;
 
 /// One device's published track plus its utilization accounting.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct DeviceTrace {
     pub device: u64,
     /// Events in ring (= emission) order.
@@ -274,9 +274,12 @@ impl Trace {
     /// Chrome trace-event JSON (the `{"traceEvents": [...]}` object
     /// format). Open in Perfetto / `chrome://tracing`: `tid 0` is the
     /// coordinator control track, `tid N+1` is device `N`; job spans
-    /// contain their install/kernel slices. `ts` is the primary
-    /// deterministic clock (cycles / control sequence); wall ns ride
-    /// in `args`.
+    /// contain their install/kernel slices, and `handoff` flow arrows
+    /// link each submit → pop/steal → job chain across tracks (so a
+    /// stolen job visibly departs from the submitting control event to
+    /// the thief's track instead of appearing as disconnected dots).
+    /// `ts` is the primary deterministic clock (cycles / control
+    /// sequence); wall ns ride in `args`.
     pub fn chrome_json(&self) -> Json {
         let mut evs: Vec<Json> = Vec::new();
         let meta = |name: &str, tid: u64, value: &str| {
@@ -301,10 +304,91 @@ impl Trace {
                 evs.push(Self::event_json(ev, d.device + 1));
             }
         }
+        self.flow_events(&mut evs);
         Json::obj(vec![
             ("traceEvents", Json::Arr(evs)),
             ("displayTimeUnit", Json::str("ns")),
         ])
+    }
+
+    /// Emit `submit → pop/steal → job` flow chains. Each control-track
+    /// enqueue (bound to the most recent preceding submit) opens a
+    /// chain; device jobs consume chains FIFO by `(tenant, tile)` —
+    /// rows don't participate because coalesced batches execute with
+    /// different row counts than were enqueued. Each matched job also
+    /// consumes the earliest unconsumed pop/steal instant on its own
+    /// track as the flow's middle step (a coalesced batch has one pop
+    /// for several jobs, so later jobs flow straight submit → job).
+    fn flow_events(&self, evs: &mut Vec<Json>) {
+        struct Chain {
+            submit_cyc: u64,
+            tenant: u64,
+            tile: u64,
+            matched: bool,
+        }
+        let mut chains: Vec<Chain> = Vec::new();
+        let mut last_submit: Option<u64> = None;
+        for ev in &self.control_events {
+            match ev.kind {
+                EventKind::Submit => last_submit = Some(ev.cyc),
+                EventKind::Enqueue => {
+                    if let Some(submit_cyc) = last_submit {
+                        chains.push(Chain {
+                            submit_cyc,
+                            tenant: ev.tenant,
+                            tile: ev.tile,
+                            matched: false,
+                        });
+                    }
+                }
+                _ => {}
+            }
+        }
+        let mut next_id = 0u64;
+        for d in &self.devices {
+            let tid = d.device + 1;
+            let mut pops: std::collections::VecDeque<u64> = std::collections::VecDeque::new();
+            for ev in &d.events {
+                match ev.kind {
+                    EventKind::Pop | EventKind::Steal => pops.push_back(ev.cyc),
+                    EventKind::Job => {
+                        let Some(chain) = chains
+                            .iter_mut()
+                            .find(|c| !c.matched && c.tenant == ev.tenant && c.tile == ev.tile)
+                        else {
+                            continue;
+                        };
+                        chain.matched = true;
+                        let id = next_id;
+                        next_id += 1;
+                        evs.push(Self::flow_json("s", id, 0, chain.submit_cyc));
+                        if let Some(pop_cyc) = pops.pop_front() {
+                            evs.push(Self::flow_json("t", id, tid, pop_cyc));
+                        }
+                        evs.push(Self::flow_json("f", id, tid, ev.cyc));
+                    }
+                    _ => {}
+                }
+            }
+        }
+    }
+
+    fn flow_json(ph: &str, id: u64, tid: u64, ts: u64) -> Json {
+        let mut fields: Vec<(&str, Json)> = vec![
+            ("name", Json::str("handoff")),
+            ("cat", Json::str("flow")),
+            ("ph", Json::str(ph)),
+            ("id", Json::num(id as f64)),
+            ("pid", Json::num(0)),
+            ("tid", Json::num(tid as f64)),
+            ("ts", Json::num(ts as f64)),
+        ];
+        if ph == "f" {
+            // Bind to the enclosing slice's start, so the arrow lands
+            // on the job span instead of floating.
+            fields.push(("bp", Json::str("e")));
+        }
+        Json::obj(fields)
     }
 
     fn event_json(ev: &Event, tid: u64) -> Json {
@@ -447,8 +531,9 @@ mod tests {
         let rendered = t.chrome_json().render();
         let back = Json::parse(&rendered).expect("export must be valid JSON");
         let evs = back.get("traceEvents").unwrap().as_arr().unwrap();
-        // 3 metadata (process + control + 1 device) + 3 control + 8 device.
-        assert_eq!(evs.len(), 14);
+        // 3 metadata (process + control + 1 device) + 3 control +
+        // 8 device + 5 flow (s/t/f for job 1, s/f for job 2).
+        assert_eq!(evs.len(), 19);
         let spans: Vec<&Json> = evs
             .iter()
             .filter(|e| e.get("ph").and_then(Json::as_str) == Some("X"))
@@ -468,5 +553,42 @@ mod tests {
             .unwrap();
         assert_eq!(inst.get("ph").unwrap().as_str(), Some("i"));
         assert_eq!(inst.get("s").unwrap().as_str(), Some("t"));
+    }
+
+    #[test]
+    fn flow_events_link_submit_pop_job_across_tracks() {
+        let t = well_formed();
+        let back = Json::parse(&t.chrome_json().render()).unwrap();
+        let evs = back.get("traceEvents").unwrap().as_arr().unwrap();
+        let flows: Vec<&Json> = evs
+            .iter()
+            .filter(|e| e.get("cat").and_then(Json::as_str) == Some("flow"))
+            .collect();
+        // Two enqueued chains: the first job consumes the track's one
+        // pop (s → t → f); the second flows straight submit → job.
+        assert_eq!(flows.len(), 5);
+        let ph = |f: &Json| f.get("ph").and_then(Json::as_str).unwrap().to_string();
+        let phases: Vec<String> = flows.iter().map(|f| ph(f)).collect();
+        assert_eq!(phases, ["s", "t", "f", "s", "f"]);
+        // Starts sit on the control track at the submit's stamp;
+        // steps and finishes sit on the device track.
+        for f in &flows {
+            let tid = f.get("tid").unwrap().as_u64().unwrap();
+            if ph(f) == "s" {
+                assert_eq!(tid, 0);
+                assert_eq!(f.get("ts").unwrap().as_u64(), Some(0));
+            } else {
+                assert_eq!(tid, 1);
+            }
+            if ph(f) == "f" {
+                assert_eq!(f.get("bp").and_then(Json::as_str), Some("e"));
+            }
+        }
+        // The two chains carry distinct flow ids.
+        let ids: std::collections::HashSet<u64> =
+            flows.iter().filter_map(|f| f.get("id").and_then(Json::as_u64)).collect();
+        assert_eq!(ids.len(), 2);
+        // The second chain's finish lands at the second job's start.
+        assert_eq!(flows[4].get("ts").unwrap().as_u64(), Some(23));
     }
 }

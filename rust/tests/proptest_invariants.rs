@@ -31,6 +31,12 @@
 //!    (spans nest, causal ids resolve, per-device cycle stamps are
 //!    monotone) and its event tallies conserve exactly against the
 //!    settled metrics ledger,
+//!  * the critical-path profiler's attribution over a randomized
+//!    wave-mix trace partitions the device-cycle budget exactly
+//!    (every category sums back to the span, double-entry against the
+//!    settled ledger via `audit_critpath`), and every what-if
+//!    counterfactual is a true lower bound: predicted makespan never
+//!    exceeds the measured one, so speedup bounds never dip below 1,
 //!  * the activation-strip LRU never exceeds its capacity bound and
 //!    hits are pointer-shared,
 //!  * the analyzer's value-range pass is sound: random layer configs
@@ -49,12 +55,13 @@ use dip_core::bench_harness::scenarios::{
     assert_cached_strictly_cheaper, assert_waved_strictly_cheaper, run_decode_mix, run_wave_mix,
     run_wave_mix_per_session, DecodeMix, WaveMix, WaveSessionSpec,
 };
-use dip_core::check::audit::audit_trace;
+use dip_core::check::audit::{audit_critpath, audit_trace};
 use dip_core::coordinator::{
     Coordinator, CoordinatorConfig, DeviceConfig, Metrics, PlacementPolicy, ShardedQueue,
     TenantId, DEFAULT_TENANT, MAX_FRONT_SKIPS,
 };
 use dip_core::matrix::{random_i8, Mat};
+use dip_core::obs::{attribute, what_if};
 use dip_core::serving::{ActStripCache, LayerDims, WavePolicy};
 use dip_core::tiling::schedule::{run_tiled_matmul, TilingConfig, WeightLoadPolicy};
 
@@ -776,6 +783,71 @@ fn prop_wave_mix_trace_is_well_formed_and_conserves() {
         // Device tracks partition the executed jobs.
         let track_jobs: u64 = o.trace.devices.iter().map(|d| d.jobs).sum();
         assert_eq!(track_jobs, o.metrics.jobs_executed, "trial {trial}");
+    }
+}
+
+#[test]
+fn prop_critical_path_attribution_conserves_and_bounds_hold() {
+    // The profiler's contract over randomized wave mixes: causal
+    // attribution must partition the device-cycle budget exactly —
+    // every category on every device sums back to the makespan, and
+    // the totals double-enter against the settled ledger
+    // (check::audit::audit_critpath) — and every what-if
+    // counterfactual must be a true lower bound: removing work can
+    // never predict a makespan above the measured one.
+    let mut g = Gen(0xC417);
+    for trial in 0..4 {
+        let sessions = g.range(2, 4) as usize;
+        let specs: Vec<WaveSessionSpec> = (0..sessions)
+            .map(|i| WaveSessionSpec {
+                join_after: if i < 2 { 0 } else { g.range(0, 3) as usize },
+                prompt_rows: 4 + g.range(0, 8) as usize,
+                steps: g.range(1, 3) as usize,
+            })
+            .collect();
+        let cfg = WaveMix {
+            tile: 8,
+            layers: g.range(1, 2) as usize,
+            dims: LayerDims {
+                d_model: 8 * g.range(1, 2) as usize,
+                d_k: 8,
+                d_ffn: 8 * g.range(1, 3) as usize,
+            },
+            sessions: specs,
+            devices: g.range(1, 3) as usize,
+            seed: g.next(),
+            strip_cache_capacity: g.range(8, 64) as usize,
+            policy: WavePolicy {
+                max_wave_rows: 16 + g.range(0, 48) as usize,
+                max_sessions: g.range(2, 8) as usize,
+                ..Default::default()
+            },
+        };
+        let o = run_wave_mix(&cfg);
+        let attr = attribute(&o.trace);
+        assert!(
+            attr.conserves(),
+            "trial {trial}: categories must partition the cycle budget:\n{}",
+            attr.render()
+        );
+        let report = audit_critpath(&attr, &o.metrics);
+        assert!(report.is_balanced(), "trial {trial}: critpath audit failed:\n{report}");
+        let bounds = what_if(&attr);
+        for c in &bounds.counterfactuals {
+            assert!(
+                c.predicted_makespan <= attr.makespan,
+                "trial {trial}: counterfactual {} predicts {} cycles above the measured {}",
+                c.name,
+                c.predicted_makespan,
+                attr.makespan
+            );
+            assert!(
+                c.speedup_bound >= 1.0,
+                "trial {trial}: counterfactual {} speedup bound {} < 1",
+                c.name,
+                c.speedup_bound
+            );
+        }
     }
 }
 
