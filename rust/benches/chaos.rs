@@ -1,0 +1,170 @@
+//! Bench: chaos — graceful degradation of the device fleet.
+//! `cargo bench --bench chaos`.
+//!
+//! Two measurements, emitted as `BENCH_chaos.json`:
+//!
+//! * **Degraded capacity**: the same continuous-batching session mix
+//!   served fault-free on 4, then 3, then 2 devices — the planned
+//!   headroom curve a deployment consults before draining devices.
+//!   Outputs must be bit-identical across fleet sizes (placement moves
+//!   work, never changes math).
+//! * **Mid-bench kill**: the 4-device mix under a schedule whose only
+//!   event is one device dying permanently a few jobs in. The
+//!   acceptance criterion is asserted: every session completes with
+//!   outputs bit-exact against the healthy fleet, the trace↔ledger
+//!   audit balances, and wall-clock throughput degrades by less than
+//!   2x (the fleet loses a quarter of its capacity, not half).
+//!
+//! Set `DIP_BENCH_SMOKE=1` for reduced sizes (CI smoke: same scenario,
+//! same assertions, with wall-ratio slack for shared runners).
+
+use dip_core::bench_harness::report::Json;
+use dip_core::bench_harness::scenarios::{
+    run_wave_mix, run_wave_mix_with_faults, WaveMix, WaveSessionSpec,
+};
+use dip_core::bench_harness::timing::{bench, report_throughput, smoke_mode};
+use dip_core::check::audit::audit_trace;
+use dip_core::fault::FaultPlan;
+use dip_core::serving::{LayerDims, WavePolicy};
+
+/// Device killed by the mid-bench death schedule.
+const KILL_VICTIM: usize = 1;
+/// The victim dies on reaching its 4th job (slot 3) — early enough to
+/// leave most of the mix to the survivors, late enough to strand an
+/// installed tile and an in-flight backlog worth reclaiming.
+const KILL_SLOT: u64 = 3;
+
+fn mix(devices: usize, smoke: bool) -> WaveMix {
+    let steps = if smoke { 3 } else { 8 };
+    let prompt = if smoke { 10 } else { 20 };
+    WaveMix {
+        tile: 8,
+        layers: 2,
+        dims: LayerDims { d_model: 16, d_k: 8, d_ffn: 24 },
+        sessions: (0..if smoke { 4 } else { 6 })
+            .map(|i| WaveSessionSpec {
+                join_after: if i < 3 { 0 } else { i - 2 },
+                prompt_rows: prompt - (i % 3),
+                steps: steps + (i % 3),
+            })
+            .collect(),
+        devices,
+        seed: 8200,
+        strip_cache_capacity: 512,
+        policy: WavePolicy::default(),
+    }
+}
+
+/// A schedule whose only event is [`KILL_VICTIM`] dying permanently at
+/// [`KILL_SLOT`]. No job faults, so the measured slowdown is pure
+/// capacity loss plus reclamation/re-homing overhead.
+fn kill_plan(devices: usize) -> FaultPlan {
+    let mut death_at = vec![None; devices];
+    death_at[KILL_VICTIM] = Some(KILL_SLOT);
+    FaultPlan { faults: vec![Vec::new(); devices], death_at, retry_immunity: true }
+}
+
+fn main() {
+    let smoke = smoke_mode();
+    if smoke {
+        println!("[smoke mode: reduced sizes]");
+    }
+    let iters = if smoke { 2 } else { 3 };
+
+    // === Degraded capacity: fault-free runs on a shrinking fleet ===
+    println!("=== Degraded capacity (fault-free, shrinking fleet) ===");
+    let mut capacity_json = Vec::new();
+    let mut sweep = Vec::new();
+    for devices in [4usize, 3, 2] {
+        let cfg = mix(devices, smoke);
+        let sessions_n = cfg.sessions.len() as f64;
+        let r = bench(&format!("chaos/capacity/devices{devices}"), 1, iters, || {
+            run_wave_mix(&cfg).metrics.sim_cycles
+        });
+        report_throughput("sessions", r.throughput(sessions_n), "/s");
+        let o = run_wave_mix(&cfg);
+        assert_eq!(o.acts.len(), cfg.sessions.len(), "{devices} devices: sessions lost");
+        capacity_json.push(Json::obj(vec![
+            ("devices", Json::num(devices as f64)),
+            ("sim_cycles", Json::num(o.metrics.sim_cycles as f64)),
+            ("jobs_executed", Json::num(o.metrics.jobs_executed as f64)),
+            ("requests_completed", Json::num(o.metrics.requests_completed as f64)),
+            ("sessions_per_s", Json::num(r.throughput(sessions_n))),
+        ]));
+        sweep.push((devices, r, o));
+    }
+    // Fleet size moves work between devices but never the math: every
+    // fleet size must produce bit-identical session outputs.
+    for (devices, _, o) in &sweep[1..] {
+        assert_eq!(o.acts, sweep[0].2.acts, "{devices} devices: token rows diverged");
+        assert_eq!(o.layers, sweep[0].2.layers, "{devices} devices: K/V/Y state diverged");
+    }
+
+    // === Mid-bench kill: 1 of 4 devices dies, survivors finish ===
+    println!("\n=== Mid-bench kill: device {KILL_VICTIM} of 4 dies at job {KILL_SLOT} ===");
+    let cfg = mix(4, smoke);
+    let sessions_n = cfg.sessions.len() as f64;
+    let r_clean = sweep[0].1;
+    let r_kill = bench("chaos/kill-1-of-4", 1, iters, || {
+        run_wave_mix_with_faults(&cfg, kill_plan(4)).metrics.sim_cycles
+    });
+    report_throughput("sessions", r_kill.throughput(sessions_n), "/s");
+
+    let clean = &sweep[0].2;
+    let chaotic = run_wave_mix_with_faults(&cfg, kill_plan(4));
+
+    // All sessions complete, bit-exact against the healthy fleet, and
+    // the flight recorder's tallies conserve against the ledger.
+    assert_eq!(chaotic.acts, clean.acts, "kill run: token rows diverged");
+    assert_eq!(chaotic.layers, clean.layers, "kill run: K/V/Y state diverged");
+    assert_eq!(chaotic.metrics.requests_completed, clean.metrics.requests_completed);
+    assert_eq!(chaotic.metrics.jobs_executed, clean.metrics.jobs_executed);
+    assert_eq!(chaotic.metrics.device_deaths, 1, "the victim never died");
+    let violations = chaotic.trace.validate();
+    assert!(violations.is_empty(), "kill run: malformed trace:\n{}", violations.join("\n"));
+    let report = audit_trace(&chaotic.trace.counts(), &chaotic.metrics);
+    assert!(report.is_balanced(), "kill run: trace-ledger audit failed:\n{report}");
+
+    // The acceptance bound: losing 1 of 4 devices costs < 2x wall
+    // throughput. Smoke runs are milliseconds on shared CI cores, so
+    // the smoke bound carries noise slack.
+    let wall_factor = r_kill.median.as_secs_f64() / r_clean.median.as_secs_f64();
+    let cycles_factor = chaotic.metrics.sim_cycles as f64 / clean.metrics.sim_cycles as f64;
+    let limit = if smoke { 2.5 } else { 2.0 };
+    assert!(
+        wall_factor < limit,
+        "killing 1 of 4 devices degraded wall throughput {wall_factor:.2}x (limit {limit}x)"
+    );
+    println!(
+        "-> kill 1/4: wall {:.2}x, simulated cycles {:.2}x, {} job(s) reclaimed, \
+         all {} sessions bit-exact",
+        wall_factor,
+        cycles_factor,
+        chaotic.metrics.jobs_reclaimed,
+        cfg.sessions.len()
+    );
+
+    let json = Json::obj(vec![
+        ("scenario", Json::str("chaos_degraded_capacity")),
+        ("smoke", Json::Bool(smoke)),
+        ("sessions", Json::num(sessions_n)),
+        ("capacity", Json::Arr(capacity_json)),
+        (
+            "kill",
+            Json::obj(vec![
+                ("victim", Json::num(KILL_VICTIM as f64)),
+                ("death_slot", Json::num(KILL_SLOT as f64)),
+                ("sessions_per_s_clean", Json::num(r_clean.throughput(sessions_n))),
+                ("sessions_per_s_killed", Json::num(r_kill.throughput(sessions_n))),
+                ("wall_factor", Json::num(wall_factor)),
+                ("cycles_factor", Json::num(cycles_factor)),
+                ("sim_cycles_clean", Json::num(clean.metrics.sim_cycles as f64)),
+                ("requests_completed", Json::num(chaotic.metrics.requests_completed as f64)),
+                ("jobs_executed", Json::num(chaotic.metrics.jobs_executed as f64)),
+                ("device_deaths", Json::num(chaotic.metrics.device_deaths as f64)),
+            ]),
+        ),
+    ]);
+    std::fs::write("BENCH_chaos.json", json.render()).expect("write BENCH_chaos.json");
+    println!("\nwrote BENCH_chaos.json");
+}

@@ -1,0 +1,127 @@
+//! Algorithm-based fault tolerance (ABFT) for the GEMM result:
+//! Huang–Abraham column checksums.
+//!
+//! For `Y = X @ W` (exact integer semantics), every output column `c`
+//! must satisfy
+//!
+//! ```text
+//! sum_m Y[m][c]  ==  sum_r (sum_m X[m][r]) * W[r][c]
+//! ```
+//!
+//! i.e. the column sums of the result equal the checksum row of the
+//! inputs (`colsum(X) @ W`). Computing both sides costs `O(M*K + K*N +
+//! M*N)` adds — negligible next to the `O(M*K*N)` MACs of the GEMM
+//! itself — and catches any single flipped output element (it perturbs
+//! exactly one column sum). Accumulation is `i64`, which cannot
+//! overflow for any realistic strip (`|Y| <= K * 127^2 < 2^24` per
+//! element, summed over `M <= 2^20` rows stays far below `2^63`).
+//!
+//! The device runs this verify on every executed job: under fault
+//! injection it is the *real* detector for
+//! [`FlipOutput`](crate::fault::FaultKind::FlipOutput), and in normal
+//! operation it is a free end-to-end check of the simulator kernels.
+
+use crate::matrix::Mat;
+
+/// Verify the Huang–Abraham column checksums of `y == x @ w`.
+/// Returns `Err(c)` with the first mismatching output column.
+pub fn verify_columns(x: &Mat<i8>, w: &Mat<i8>, y: &Mat<i32>) -> Result<(), usize> {
+    assert_eq!(x.rows(), y.rows(), "X and Y row counts must match");
+    assert_eq!(x.cols(), w.rows(), "X cols must match W rows");
+    assert_eq!(w.cols(), y.cols(), "W and Y column counts must match");
+    // Checksum row of X: colsum_x[r] = sum over rows m of X[m][r].
+    let mut colsum_x = vec![0i64; x.cols()];
+    for m in 0..x.rows() {
+        for (acc, &v) in colsum_x.iter_mut().zip(x.row(m)) {
+            *acc += i64::from(v);
+        }
+    }
+    // Expected column sums: colsum_x @ W.
+    let mut expect = vec![0i64; w.cols()];
+    for r in 0..w.rows() {
+        let s = colsum_x[r];
+        if s == 0 {
+            continue;
+        }
+        for (acc, &v) in expect.iter_mut().zip(w.row(r)) {
+            *acc += s * i64::from(v);
+        }
+    }
+    // Observed column sums of Y.
+    let mut got = vec![0i64; y.cols()];
+    for m in 0..y.rows() {
+        for (acc, &v) in got.iter_mut().zip(y.row(m)) {
+            *acc += i64::from(v);
+        }
+    }
+    match got.iter().zip(&expect).position(|(g, e)| g != e) {
+        None => Ok(()),
+        Some(c) => Err(c),
+    }
+}
+
+/// Exact host reference `X @ W` in `i32` — the oracle the fault layer
+/// flips an element of to exercise detection.
+pub fn host_matmul(x: &Mat<i8>, w: &Mat<i8>) -> Mat<i32> {
+    assert_eq!(x.cols(), w.rows());
+    let mut y = Mat::zeros(x.rows(), w.cols());
+    for m in 0..x.rows() {
+        for (r, &xv) in x.row(m).iter().enumerate() {
+            if xv == 0 {
+                continue;
+            }
+            let xv = i32::from(xv);
+            let dst = y.row_mut(m);
+            for (d, &wv) in dst.iter_mut().zip(w.row(r)) {
+                *d += xv * i32::from(wv);
+            }
+        }
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::random_i8;
+
+    #[test]
+    fn clean_product_passes() {
+        let x = random_i8(5, 8, 11);
+        let w = random_i8(8, 8, 22);
+        let y = host_matmul(&x, &w);
+        assert_eq!(verify_columns(&x, &w, &y), Ok(()));
+    }
+
+    #[test]
+    fn any_single_flip_is_caught_in_its_column() {
+        let x = random_i8(4, 8, 33);
+        let w = random_i8(8, 8, 44);
+        let clean = host_matmul(&x, &w);
+        for m in 0..clean.rows() {
+            for c in 0..clean.cols() {
+                let mut y = clean.clone();
+                y.row_mut(m)[c] ^= 1;
+                assert_eq!(verify_columns(&x, &w, &y), Err(c), "flip at ({m},{c})");
+            }
+        }
+    }
+
+    #[test]
+    fn first_bad_column_is_reported() {
+        let x = random_i8(3, 4, 55);
+        let w = random_i8(4, 6, 66);
+        let mut y = host_matmul(&x, &w);
+        y.row_mut(1)[2] += 7;
+        y.row_mut(0)[5] += 9;
+        assert_eq!(verify_columns(&x, &w, &y), Err(2));
+    }
+
+    #[test]
+    fn degenerate_shapes_pass() {
+        let x = Mat::<i8>::zeros(0, 4);
+        let w = random_i8(4, 4, 77);
+        let y = Mat::<i32>::zeros(0, 4);
+        assert_eq!(verify_columns(&x, &w, &y), Ok(()));
+    }
+}

@@ -47,6 +47,7 @@
 //! [`run_tile`]: SystolicArray::run_tile
 //! [`Trace`]: crate::sim::trace::Trace
 
+pub mod abft;
 pub mod dip;
 pub mod fifo;
 pub mod kernel;

@@ -38,15 +38,32 @@
 
 use crate::analytical::Arch;
 use crate::coordinator::{
-    Coordinator, CoordinatorConfig, DeviceConfig, MetricsSnapshot, PlacementPolicy, TenantId,
-    TenantSnapshot,
+    Coordinator, CoordinatorConfig, DeviceConfig, MetricsSnapshot, PlacementPolicy, RequestHandle,
+    TenantId, TenantSnapshot,
 };
+use crate::fault::FaultPlan;
 use crate::matrix::{random_i8, Mat};
 use crate::obs::Trace;
 use crate::serving::{
     LayerDims, LayerState, ServeModel, ServingEngine, Session, StepReport, WavePolicy, WaveReport,
     WaveScheduler,
 };
+
+/// Upper bound on any single scenario wait: long enough for the
+/// slowest CI machine, short enough that a stuck fleet fails the run
+/// with a typed error instead of hanging the whole suite (satellite of
+/// the fault-injection PR — no scenario may block forever).
+const SCENARIO_WAIT: std::time::Duration = std::time::Duration::from_secs(120);
+
+/// [`RequestHandle::wait`] with the scenario-wide bound; panics with
+/// the typed [`crate::fault::FleetError`] on timeout or a torn-down
+/// fleet rather than deadlocking the bench.
+fn wait_bounded(h: &RequestHandle) -> crate::coordinator::MatmulResponse {
+    match h.wait_timeout(SCENARIO_WAIT) {
+        Ok(resp) => resp,
+        Err(e) => panic!("scenario request failed under the fleet: {e}"),
+    }
+}
 
 /// Parameters of the two-model alternating-burst serving scenario.
 pub struct TwoModelBurst {
@@ -107,7 +124,7 @@ pub fn serve_two_model_bursts(cfg: &TwoModelBurst, policy: PlacementPolicy) -> B
             for (tenant, w) in [(0 as TenantId, &model_a[layer]), (1, &model_b[layer])] {
                 let seed = 5000 + (layer * cfg.burst + rep) as u64 * 2 + tenant;
                 let x = random_i8(cfg.tile, cfg.tile, seed);
-                let resp = coord.submit_as(tenant, x.clone(), w.clone()).wait();
+                let resp = wait_bounded(&coord.submit_as(tenant, x.clone(), w.clone()));
                 assert_eq!(resp.out, x.widen().matmul(&w.widen()), "{policy:?} diverged");
             }
         }
@@ -183,7 +200,7 @@ pub fn cold_share_under_flood(cfg: &FloodScenario) -> FloodOutcome {
         coord.metrics().requests_completed > (cfg.hot_requests as u64 / 8).max(8);
 
     for (x, h) in cold_handles {
-        assert_eq!(h.wait().out, x.widen().matmul(&w_cold.widen()), "cold tenant diverged");
+        assert_eq!(wait_bounded(&h).out, x.widen().matmul(&w_cold.widen()), "cold tenant diverged");
     }
     // The moment the cold tenant finishes: how was service split?
     let tenants = coord.tenant_metrics();
@@ -192,9 +209,9 @@ pub fn cold_share_under_flood(cfg: &FloodScenario) -> FloodOutcome {
     assert_eq!(cold_served, cfg.cold_requests as u64);
     let share = cold_served as f64 / (cold_served + hot_served) as f64;
 
-    plug.wait();
+    wait_bounded(&plug);
     for h in hot_handles {
-        h.wait();
+        wait_bounded(&h);
     }
     let final_tenants = coord.tenant_metrics();
     let (m, audit) = coord.shutdown_audited();
@@ -378,22 +395,37 @@ pub struct WaveMix {
 }
 
 impl WaveMix {
+    fn coordinator_config(&self) -> CoordinatorConfig {
+        CoordinatorConfig {
+            devices: self.devices,
+            device: DeviceConfig {
+                arch: Arch::Dip,
+                tile: self.tile,
+                mac_stages: 2,
+                ..Default::default()
+            },
+            queue_depth: 256,
+            work_stealing: false,
+            placement: PlacementPolicy::HeatAware,
+        }
+    }
+
     fn engine(&self) -> ServingEngine {
         ServingEngine::new(
-            CoordinatorConfig {
-                devices: self.devices,
-                device: DeviceConfig {
-                    arch: Arch::Dip,
-                    tile: self.tile,
-                    mac_stages: 2,
-                    ..Default::default()
-                },
-                queue_depth: 256,
-                work_stealing: false,
-                placement: PlacementPolicy::HeatAware,
-            },
+            self.coordinator_config(),
             ServeModel::synthetic(self.dims, self.layers, self.seed),
             self.strip_cache_capacity,
+        )
+    }
+
+    /// The same engine with a seeded fault schedule armed on its
+    /// device pool (the `dip chaos` wave-survival path).
+    fn engine_with_faults(&self, plan: FaultPlan) -> ServingEngine {
+        ServingEngine::new_with_faults(
+            self.coordinator_config(),
+            ServeModel::synthetic(self.dims, self.layers, self.seed),
+            self.strip_cache_capacity,
+            plan,
         )
     }
 
@@ -425,7 +457,20 @@ fn collect_sessions(mut sessions: Vec<Session>) -> (Vec<Mat<i8>>, Vec<Vec<LayerS
 /// their `join_after` wave (an idle scheduler fast-forwards to the
 /// next joiner), waves run until every session finished.
 pub fn run_wave_mix(cfg: &WaveMix) -> WaveOutcome {
-    let mut ws = WaveScheduler::new(cfg.engine(), cfg.policy);
+    drive_wave_mix(cfg, cfg.engine())
+}
+
+/// [`run_wave_mix`] on a fleet with `plan`'s seeded fault schedule
+/// armed: devices die mid-wave, jobs fail and retry, stragglers stall
+/// — and the wave scheduler must still finish every session. The
+/// caller compares the outcome bit-exactly against a fault-free
+/// [`run_wave_mix`] of the same mix (`dip chaos` does exactly that).
+pub fn run_wave_mix_with_faults(cfg: &WaveMix, plan: FaultPlan) -> WaveOutcome {
+    drive_wave_mix(cfg, cfg.engine_with_faults(plan))
+}
+
+fn drive_wave_mix(cfg: &WaveMix, engine: ServingEngine) -> WaveOutcome {
+    let mut ws = WaveScheduler::new(engine, cfg.policy);
     let mut submitted = vec![false; cfg.sessions.len()];
     let mut waves_done = 0usize;
     let mut reports = Vec::new();

@@ -27,6 +27,14 @@
 //! double-emitted event fails by name instead of silently skewing the
 //! exported trace.
 //!
+//! The fault layer ([`crate::fault`]) adds its own double-entry slice:
+//! every failed attempt is retried or abandoned exactly once
+//! (`retry-conservation`), wasted work only accrues against recorded
+//! failures (`failed-cycles-gated`), quarantine entries/exits conserve
+//! with death as a one-way exit (`dead-stay-quarantined`), and the
+//! traced fault/retry/quarantine instants tie out one-for-one against
+//! the ledger.
+//!
 //! Mutation smoke: `DeviceDefect::CreditWithoutCharge` re-introduces
 //! the PR 1 charge-without-credit bug behind a test-only shim, and the
 //! tests here prove the auditor flags it (`load-charge`,
@@ -230,6 +238,52 @@ pub fn audit_coordinator(
                 snap.waves, snap.wave_stacked_rows
             ),
         },
+        // The double-entry retry ledger ([`crate::fault`]): every
+        // failed attempt was either retried or abandoned — exactly
+        // once — and nothing fails without an injected fault behind it.
+        eq(
+            "retry-conservation",
+            snap.jobs_failed,
+            snap.jobs_retried + snap.jobs_abandoned,
+            "jobs_failed == jobs_retried + jobs_abandoned",
+        ),
+        le(
+            "retry-within-faults",
+            snap.jobs_failed,
+            snap.faults_injected,
+            "jobs_failed <= faults_injected",
+        ),
+        le(
+            "quarantine-conservation",
+            snap.quarantines_exited,
+            snap.quarantines_entered,
+            "quarantines_exited <= quarantines_entered",
+        ),
+        // Death is a one-way quarantine: each death either closes an
+        // open quarantine for good or opens one that never exits, so
+        // exits and deaths together never outnumber entries.
+        le(
+            "dead-stay-quarantined",
+            snap.quarantines_exited + snap.device_deaths,
+            snap.quarantines_entered,
+            "quarantines_exited + device_deaths <= quarantines_entered",
+        ),
+        AuditCheck {
+            name: "failed-cycles-gated",
+            ok: snap.jobs_failed > 0 || snap.failed_cycles == 0,
+            detail: format!(
+                "failed_cycles {} needs jobs_failed > 0 (got {})",
+                snap.failed_cycles, snap.jobs_failed
+            ),
+        },
+        AuditCheck {
+            name: "reclaims-only-on-death",
+            ok: snap.device_deaths > 0 || snap.jobs_reclaimed == 0,
+            detail: format!(
+                "jobs_reclaimed {} needs device_deaths > 0 (got {})",
+                snap.jobs_reclaimed, snap.device_deaths
+            ),
+        },
     ];
     AuditReport { checks }
 }
@@ -304,11 +358,14 @@ pub fn audit_trace(counts: &TraceCounts, snap: &MetricsSnapshot) -> AuditReport 
             snap.requests_submitted,
             "submit events == requests_submitted",
         ),
+        // An enqueued job either executed or was abandoned by the
+        // bounded retry — retry/reclaim re-pushes emit no new Enqueue,
+        // so the original enqueue still covers the eventual outcome.
         eq(
             "trace-enqueue-conservation",
             counts.enqueues,
-            snap.jobs_executed,
-            "enqueue events == jobs_executed",
+            snap.jobs_executed + snap.jobs_abandoned,
+            "enqueue events == jobs_executed + jobs_abandoned",
         ),
         eq(
             "trace-backpressure-conservation",
@@ -322,13 +379,46 @@ pub fn audit_trace(counts: &TraceCounts, snap: &MetricsSnapshot) -> AuditReport 
             snap.steals,
             "steal instants == steals",
         ),
-        // Every job span was fed by exactly one dequeue: a local pop, a
-        // steal, or a coalesced drain by the batch head's worker.
+        // Every execution attempt was fed by exactly one dequeue — a
+        // local pop, a steal, or a coalesced drain — and produced
+        // exactly one outcome: a job span (success), a retry instant,
+        // or an abandon instant.
         eq(
             "trace-pop-partition",
             counts.pops + counts.steals + counts.coalesced_skips,
-            counts.jobs,
-            "pops + steals + coalesced_skips == job spans",
+            counts.jobs + counts.job_retries + counts.job_abandons,
+            "pops + steals + coalesced_skips == job spans + retries + abandons",
+        ),
+        // Fault-layer instants conserve against the ledger one-for-one.
+        eq(
+            "trace-fault-conservation",
+            counts.faults,
+            snap.faults_injected,
+            "fault instants == faults_injected",
+        ),
+        eq(
+            "trace-retry-conservation",
+            counts.job_retries,
+            snap.jobs_retried,
+            "retry instants == jobs_retried",
+        ),
+        eq(
+            "trace-abandon-conservation",
+            counts.job_abandons,
+            snap.jobs_abandoned,
+            "abandon instants == jobs_abandoned",
+        ),
+        eq(
+            "trace-quarantine-conservation",
+            counts.device_quarantines,
+            snap.quarantines_entered,
+            "quarantine events == quarantines_entered",
+        ),
+        eq(
+            "trace-revive-conservation",
+            counts.device_revives,
+            snap.quarantines_exited,
+            "revive events == quarantines_exited",
         ),
         // Serving-side wave/session lifecycle pairs up and conserves.
         eq(
@@ -445,6 +535,15 @@ mod tests {
             weight_load_cycles_charged: 7,
             cache_hits: 0,
             cache_misses: 1,
+            // Fault-layer slice: two injected faults (one failed the
+            // attempt, one was a straggler), the failure retried, the
+            // device quarantined and later revived.
+            faults_injected: 2,
+            jobs_failed: 1,
+            jobs_retried: 1,
+            failed_cycles: 5,
+            quarantines_entered: 1,
+            quarantines_exited: 1,
             ..Default::default()
         };
         let tenants = vec![TenantSnapshot {
@@ -480,6 +579,18 @@ mod tests {
             ("mac-ledger", Box::new(|s| s.mac_ops -= 64)),
             ("strip-credit", Box::new(|s| s.act_bytes_saved = 512)),
             ("wave-stacking", Box::new(|s| s.wave_stacked_rows = 9)),
+            ("retry-conservation", Box::new(|s| s.jobs_retried += 1)),
+            ("retry-within-faults", Box::new(|s| s.jobs_failed = 3)),
+            ("quarantine-conservation", Box::new(|s| s.quarantines_exited += 1)),
+            ("dead-stay-quarantined", Box::new(|s| s.device_deaths += 1)),
+            (
+                "failed-cycles-gated",
+                Box::new(|s| {
+                    s.jobs_failed = 0;
+                    s.jobs_retried = 0;
+                }),
+            ),
+            ("reclaims-only-on-death", Box::new(|s| s.jobs_reclaimed = 1)),
         ];
         for (name, brk) in cases {
             let mut s = snap;
@@ -502,19 +613,25 @@ mod tests {
     }
 
     /// Trace tallies that conserve exactly against [`balanced`]'s
-    /// snapshot: 4 jobs = 1 install + 1 plain skip + 2 coalesced
-    /// tails, fed by 2 pops + 2 coalesced drains.
+    /// snapshot: 4 job spans = 1 install + 1 plain skip + 2 coalesced
+    /// tails, fed by 3 pops + 2 coalesced drains — the extra pop is the
+    /// failed attempt, whose outcome is the retry instant rather than a
+    /// job span.
     fn balanced_counts() -> TraceCounts {
         TraceCounts {
             submits: 4,
             enqueues: 4,
-            pops: 2,
+            pops: 3,
             jobs: 4,
             installs: 1,
             install_skips: 1,
             coalesced_skips: 2,
             kernels: 4,
             cache_misses: 1,
+            faults: 2,
+            job_retries: 1,
+            device_quarantines: 1,
+            device_revives: 1,
             ..Default::default()
         }
     }
@@ -548,6 +665,11 @@ mod tests {
             ("trace-wave-conservation", Box::new(|c| c.wave_closes += 1)),
             ("trace-wave-open-close", Box::new(|c| c.wave_opens += 1)),
             ("trace-session-join-leave", Box::new(|c| c.session_joins += 1)),
+            ("trace-fault-conservation", Box::new(|c| c.faults += 1)),
+            ("trace-retry-conservation", Box::new(|c| c.job_retries += 1)),
+            ("trace-abandon-conservation", Box::new(|c| c.job_abandons += 1)),
+            ("trace-quarantine-conservation", Box::new(|c| c.device_quarantines += 1)),
+            ("trace-revive-conservation", Box::new(|c| c.device_revives += 1)),
         ];
         for (name, brk) in cases {
             let mut c = balanced_counts();

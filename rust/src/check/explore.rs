@@ -634,7 +634,10 @@ pub fn explore_device_batches() -> usize {
     };
     use crate::matrix::{random_i8, Mat};
 
-    fn job_for(x: &Mat<i8>, w: &Arc<Mat<i8>>) -> (Job, Receiver<MatmulResponse>) {
+    fn job_for(
+        x: &Mat<i8>,
+        w: &Arc<Mat<i8>>,
+    ) -> (Job, Receiver<Result<MatmulResponse, crate::fault::FleetError>>) {
         let (tx, rx) = channel();
         let req = Arc::new(ReqState::new(
             x.rows(),
@@ -652,6 +655,7 @@ pub fn explore_device_batches() -> usize {
             tile_id: w.content_hash(),
             tenant: DEFAULT_TENANT,
             enqueued_at: Instant::now(),
+            attempt: 0,
         };
         (job, rx)
     }
@@ -677,7 +681,9 @@ pub fn explore_device_batches() -> usize {
             .map(|x| {
                 let (job, rx) = job_for(x, &w);
                 dev.execute(job);
-                rx.try_recv().expect("sequential job must respond")
+                rx.try_recv()
+                    .expect("sequential job must respond")
+                    .expect("fault-free job cannot fail")
             })
             .collect();
         let ref_snap = normalized(m_ref.snapshot());
@@ -700,7 +706,10 @@ pub fn explore_device_batches() -> usize {
                 dev.execute_batch(batch);
             }
             for (i, rx) in rxs.into_iter().enumerate() {
-                let got = rx.try_recv().expect("batched job must respond");
+                let got = rx
+                    .try_recv()
+                    .expect("batched job must respond")
+                    .expect("fault-free job cannot fail");
                 assert_eq!(got.out, refs[i].out, "{arch:?} mask {mask:#b}: output diverged");
                 assert_eq!(
                     got.stats, refs[i].stats,

@@ -50,6 +50,14 @@
 //!    rendered or exported is dead telemetry: it costs hot-path
 //!    `record()` calls and shows nobody anything. Cross-file, so it
 //!    runs in [`lint_tree`] / [`lint_hists`], not [`lint_source`].
+//! 8. **`no-bare-queue-unwrap`** — `.unwrap()` / `.expect(` on a
+//!    queue/channel operation (`.push(`, `.send(`, `.recv(`,
+//!    `try_recv`, `.pop(`) is banned in `coordinator/` fn bodies
+//!    outside [`QUEUE_UNWRAP_ALLOWLIST`]: under fault injection a
+//!    refused push or a dropped sender is a *recoverable* fleet event
+//!    ([`crate::fault::FleetError`]), and a panic takes the whole
+//!    worker — and its queue shard — down with it. Statement-granular
+//!    (split on `;`), `#[cfg(test)]` exempt.
 //!
 //! The whole-tree scan runs as an ordinary `#[test]`
 //! (`shipped_tree_is_lint_clean`), so tier-1 `cargo test` gates on it;
@@ -85,6 +93,7 @@ const RULE_HOT_ALLOC: &str = "no-hot-path-alloc";
 const RULE_TRUNC_CAST: &str = "no-unannotated-truncating-cast";
 const RULE_WALL_CLOCK: &str = "no-raw-wall-clock";
 const RULE_HIST: &str = "hist-rendered-or-exported";
+const RULE_QUEUE_UNWRAP: &str = "no-bare-queue-unwrap";
 
 /// Allocation markers banned inside the kernel hot region (shared
 /// with the analyzer's hot-region pass).
@@ -114,6 +123,25 @@ const CAST_ALLOWLIST: &[(&str, &str)] = &[("serving/graph.rs", "narrow")];
 /// timestamping there rides [`crate::obs::clock::Stopwatch`], so the
 /// recorder's overhead contract stays auditable in one place.
 const WALL_CLOCK_MARKERS: &[&str] = &["Instant::now(", "SystemTime::now("];
+
+/// Queue/channel operations whose `Result`/`Option`s rule 8 guards in
+/// the coordinator: each names an operation that *legitimately* fails
+/// when the fleet degrades (shard retired, queue closed, response
+/// sender dropped), so its failure must flow into a typed recovery
+/// path, not a panic.
+const QUEUE_OPS: &[&str] = &[".push(", ".send(", ".recv(", "try_recv", ".pop("];
+
+/// Coordinator functions allowed to unwrap a queue/channel result:
+/// `(file suffix, fn name)`, the same annotation mechanism as
+/// [`CAST_ALLOWLIST`]. `wait` is the handle's *documented* panicking
+/// variant — fault-free callers opt into the panic, chaos callers use
+/// `wait_timeout` — and the two submit wrappers unwrap a `Vec::pop` on
+/// a one-element vec they just built, not a queue.
+const QUEUE_UNWRAP_ALLOWLIST: &[(&str, &str)] = &[
+    ("coordinator/router.rs", "wait"),
+    ("coordinator/router.rs", "submit_as"),
+    ("coordinator/router.rs", "submit_strips_as"),
+];
 
 /// Functions allowed to read the wall clock raw: `(file suffix, fn
 /// name)`, same annotation mechanism as [`CAST_ALLOWLIST`]. Empty as
@@ -336,6 +364,52 @@ pub fn lint_source(label: &str, source: &str) -> Vec<LintFinding> {
                         });
                     }
                 }
+            }
+        }
+    }
+
+    // Rule 8: queue/channel results in the coordinator are matched
+    // into typed recovery paths, never unwrapped bare — under fault
+    // injection a refused push or a dropped sender is a recoverable
+    // fleet event, and a panic takes the worker (and its shard) down.
+    // Statement-granular: an `.unwrap()`/`.expect(` only violates when
+    // the same `;`-delimited statement performs a queue operation.
+    if label.contains("coordinator/") {
+        let code = strip_tests(&stripped);
+        for sp in fn_spans(code) {
+            if QUEUE_UNWRAP_ALLOWLIST
+                .iter()
+                .any(|(f, name)| label.ends_with(f) && sp.name == *name)
+            {
+                continue;
+            }
+            let body: String =
+                code.chars().skip(sp.body_start).take(sp.body_end - sp.body_start).collect();
+            let (col, lmap) = collapse_tokens_from(&body, sp.body_line);
+            let mut seg_start = 0usize;
+            let bytes = col.as_bytes();
+            for seg_end in
+                (0..col.len()).filter(|&i| bytes[i] == b';').chain(std::iter::once(col.len()))
+            {
+                let seg = &col[seg_start..seg_end];
+                if QUEUE_OPS.iter().any(|op| seg.contains(op)) {
+                    for marker in [".unwrap()", ".expect("] {
+                        if let Some(p) = seg.find(marker) {
+                            findings.push(LintFinding {
+                                rule: RULE_QUEUE_UNWRAP,
+                                file: label.to_string(),
+                                line: lmap[seg_start + p],
+                                detail: format!(
+                                    "`{marker}` on a queue/channel result in fn {}; match it \
+                                     into a typed FleetError recovery path (or add the \
+                                     (file, fn) to QUEUE_UNWRAP_ALLOWLIST in check/lint.rs)",
+                                    sp.name
+                                ),
+                            });
+                        }
+                    }
+                }
+                seg_start = seg_end;
             }
         }
     }
@@ -599,5 +673,45 @@ mod tests {
         assert!(fields.len() >= 23, "found only {}: {fields:?}", fields.len());
         assert!(fields.iter().any(|(_, n)| n == "weight_load_cycles_charged"));
         assert!(fields.iter().any(|(_, n)| n == "wave_stacked_rows"));
+        assert!(fields.iter().any(|(_, n)| n == "jobs_reclaimed"));
+    }
+
+    #[test]
+    fn bare_queue_unwrap_in_coordinator_is_caught() {
+        let bad = "fn worker(q: &Q) {\n    let j = q.rx.recv().unwrap();\n    run(j);\n}\n";
+        let f = lint_source("src/coordinator/worker.rs", bad);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!((f[0].rule, f[0].line), (RULE_QUEUE_UNWRAP, 2));
+        assert!(f[0].detail.contains("fn worker"), "{}", f[0].detail);
+        // `.expect(` is no better than `.unwrap()` here, and the rule
+        // sees through rustfmt's multi-line method chains.
+        let bad2 = "fn fan_out(&self) {\n    self.pool\n        .push(shard, tenant, job)\n        \
+                    .expect(\"push raced close\");\n}\n";
+        let f2 = lint_source("src/coordinator/router2.rs", bad2);
+        assert_eq!(f2.len(), 1, "{f2:?}");
+        assert_eq!(f2[0].rule, RULE_QUEUE_UNWRAP);
+        // Outside coordinator/ the rule does not bind.
+        assert!(lint_source("src/bench_harness/worker.rs", bad).is_empty());
+    }
+
+    #[test]
+    fn queue_unwrap_rule_is_statement_granular_and_allowlisted() {
+        // An unwrap on a non-queue result may share a fn with queue
+        // ops, as long as no single statement mixes the two.
+        let ok = "fn route(&self) {\n    let d = self.map.get(&k).unwrap();\n    \
+                  self.pool.push(d, t, job)?;\n}\n";
+        assert!(lint_source("src/coordinator/worker.rs", ok).is_empty());
+        // The allowlisted (file, fn) pair is the annotation mechanism:
+        // same body, wrong file or wrong fn name, and the rule bites.
+        let waity = "impl H {\n    pub fn wait(self) -> R {\n        \
+                     self.rx.recv().expect(\"closed\")\n    }\n}\n";
+        assert!(lint_source("src/coordinator/router.rs", waity).is_empty());
+        assert_eq!(lint_source("src/coordinator/queue.rs", waity).len(), 1);
+        let renamed = waity.replace("wait", "grab");
+        assert_eq!(lint_source("src/coordinator/router.rs", &renamed).len(), 1);
+        // Test modules unwrap freely — fixtures are not recovery paths.
+        let tests =
+            "#[cfg(test)]\nmod tests {\n    fn t(q: &Q) { q.rx.recv().unwrap(); }\n}\n";
+        assert!(lint_source("src/coordinator/worker.rs", tests).is_empty());
     }
 }

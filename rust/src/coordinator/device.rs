@@ -20,24 +20,29 @@
 
 use std::collections::VecDeque;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::analytical::Arch;
 use crate::arch::{
-    dip::DipArray, weight_load_reg8_writes, ws::WsArray, PreparedWeights, SystolicArray,
+    abft, dip::DipArray, weight_load_reg8_writes, ws::WsArray, PreparedWeights, SystolicArray,
 };
+use crate::fault::{FaultInjector, FaultKind, MAX_ATTEMPTS};
 use crate::matrix::Mat;
 use crate::obs::{DeviceObs, Event, EventKind, ObsConfig};
 
 use super::metrics::Metrics;
 use super::queue::TenantId;
-use super::state::ReqState;
+use super::state::{ReqState, FAIL_ABANDONED};
 
 /// One weight-stationary unit of work: make `w_tile` stationary (a
 /// no-op when it already is), stream the full `x_strip` (all M1 tiles
 /// back-to-back), fold the psum strip into the request at column
 /// offset `c0`. Both matrices are `Arc`-shared with every other job of
 /// the fan-out — submitting never deep-copies operand data per job.
+/// `Clone` is cheap for the same reason (Arc bumps + scalars); the
+/// recovery paths clone a job before a fallible re-push, because a
+/// refused [`push`](super::queue::ShardedQueue::push) consumes it.
+#[derive(Clone)]
 pub struct Job {
     pub req: Arc<ReqState>,
     pub w_tile: Arc<Mat<i8>>,
@@ -56,6 +61,10 @@ pub struct Job {
     /// backpressure-blocked) push — per-tenant wait accounting covers
     /// the full submit→execute latency.
     pub enqueued_at: Instant,
+    /// Execution attempt (0 = first try). Bumped by the fault layer's
+    /// bounded retry; at [`MAX_ATTEMPTS`] the job is abandoned with a
+    /// typed error instead of retried.
+    pub attempt: u32,
 }
 
 /// A deliberately broken device ledger, injectable via
@@ -114,6 +123,23 @@ pub struct Device {
     load_cycles: u64,
     /// Injected ledger misbehavior (see [`DeviceDefect`]).
     defect: Option<DeviceDefect>,
+    /// Seeded fault schedule, when the fleet runs under chaos (see
+    /// [`crate::fault`]). `None` in production: every check below is a
+    /// single branch on a cold path.
+    injector: Option<Arc<FaultInjector>>,
+    /// Jobs whose attempt failed here and earned a retry. The worker
+    /// drains these via [`take_retries`](Self::take_retries) and
+    /// re-places them through the router, so a quarantined device never
+    /// re-executes its own failures.
+    retry_out: Vec<Job>,
+    /// Failed / successful attempts since the worker last drained the
+    /// outcome (feeds the consecutive-failure health tracker).
+    drain_failures: u32,
+    drain_successes: u32,
+    /// Load-phase cycles for this array geometry (`N-1` DiP, `N` WS) —
+    /// what a `CorruptInstall` fault wastes even when nothing was ever
+    /// installed (`load_cycles` is only set after a real install).
+    fault_load_cycles: u64,
     /// Flight-recorder observer: this device's event ring, latency
     /// histograms, and simulated-cycle clock (see [`crate::obs`]). The
     /// worker thread owns it exclusively — emission is branch +
@@ -149,8 +175,46 @@ impl Device {
             cache_capacity: cfg.weight_cache_tiles,
             load_cycles: 0,
             defect: cfg.defect,
+            injector: None,
+            retry_out: Vec::new(),
+            drain_failures: 0,
+            drain_successes: 0,
+            fault_load_cycles: match cfg.arch {
+                Arch::Dip => cfg.tile as u64 - 1,
+                Arch::Ws => cfg.tile as u64,
+            },
             obs: DeviceObs::new(index, obs_cfg),
         }
+    }
+
+    /// Arm this device with a seeded fault schedule (chaos runs only).
+    pub fn set_injector(&mut self, injector: Arc<FaultInjector>) {
+        self.injector = Some(injector);
+    }
+
+    /// Drain the jobs that failed here and earned a retry. The worker
+    /// re-places them (placement skips quarantined/dead devices), so
+    /// retried work re-homes to a healthy device.
+    pub fn take_retries(&mut self) -> Vec<Job> {
+        std::mem::take(&mut self.retry_out)
+    }
+
+    /// Drain the (failures, successes) attempt outcome since the last
+    /// call — the worker feeds these to the health tracker in drain
+    /// order, so consecutive-failure quarantine semantics hold.
+    pub fn take_drain_outcome(&mut self) -> (u32, u32) {
+        let out = (self.drain_failures, self.drain_successes);
+        self.drain_failures = 0;
+        self.drain_successes = 0;
+        out
+    }
+
+    /// Whether a fault (or this device's death) is scheduled within the
+    /// next `window` attempt slots. The worker checks this before
+    /// coalescing a batch so batched execution never crosses a fault
+    /// slot — batch tails consume slots without a per-job fault branch.
+    pub fn faults_pending(&self, window: u64) -> bool {
+        self.injector.as_ref().is_some_and(|inj| inj.faults_within(self.index, window))
     }
 
     /// Identity of the tile currently stationary on the array (the
@@ -174,7 +238,26 @@ impl Device {
     }
 
     /// Execute one job; returns true if it completed its request.
+    ///
+    /// Under an armed [`FaultInjector`], the scheduled fault for this
+    /// attempt slot (if any) is applied *before* any ledger counter
+    /// moves: a failed attempt charges only `failed_cycles`, so the
+    /// cycle/mac ledgers stay identity-clean and the retry re-charges
+    /// the work exactly once, on the attempt that actually lands it.
     pub fn execute(&mut self, job: Job) -> bool {
+        if let Some(kind) =
+            self.injector.as_ref().and_then(|inj| inj.next_fault(self.index, job.attempt))
+        {
+            if kind == FaultKind::Straggler {
+                // A straggler is slow, not wrong: note it, stall the
+                // wall clock, then run normally. No simulated cycles
+                // move — wall time and sim time are separate ledgers.
+                self.note_fault(&job, kind);
+                std::thread::sleep(Duration::from_micros(200));
+            } else {
+                return self.fail_job(job, kind);
+            }
+        }
         let t0 = Instant::now();
         let resident = self.install_or_skip(&job);
         let mut run = self.array.run_tile(&job.x_strip);
@@ -211,6 +294,16 @@ impl Device {
                 self.execute(job);
             }
             return;
+        }
+        // The worker only coalesces when no fault slot falls inside
+        // the batch window (`faults_pending`), so consuming one attempt
+        // slot per job here must come up empty — the debug_assert pins
+        // that contract.
+        if let Some(inj) = &self.injector {
+            for job in &jobs {
+                let fault = inj.next_fault(self.index, job.attempt);
+                debug_assert!(fault.is_none(), "coalesced batch crossed a fault slot");
+            }
         }
         let t0 = Instant::now();
         let resident = self.install_or_skip(head);
@@ -369,6 +462,13 @@ impl Device {
     /// queue until then just like its head.
     fn account_run(&mut self, job: Job, run: &crate::arch::TileRun, started: Instant) -> bool {
         use std::sync::atomic::Ordering::Relaxed;
+        // Huang–Abraham column-checksum check on the real result —
+        // O(M·K + K·N) against the O(M·K·N) GEMM that produced it. The
+        // chaos `FlipOutput` path proves this detector has teeth.
+        if let Err(col) = abft::verify_columns(&job.x_strip, &job.w_tile, &run.outputs) {
+            panic!("ABFT column checksum failed at output column {col}");
+        }
+        self.drain_successes += 1;
         let wait = started.saturating_duration_since(job.enqueued_at);
         self.metrics.jobs_executed.fetch_add(1, Relaxed);
         self.metrics.rows_streamed.fetch_add(job.x_strip.rows() as u64, Relaxed);
@@ -405,6 +505,122 @@ impl Device {
         self.cache.push_front((job.tile_id, Arc::clone(&job.w_tile), prepared.clone()));
         prepared
     }
+
+    /// Instant on this device's track marking an injected fault, plus
+    /// the `faults_injected` ledger bump (stamped at the current clock:
+    /// failed attempts advance no simulated cycles).
+    fn note_fault(&mut self, job: &Job, kind: FaultKind) {
+        self.metrics.faults_injected.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        if self.obs.enabled() {
+            let mut ev = Event::new(EventKind::FaultInjected, self.obs.cycles(), 0);
+            ev.tenant = job.tenant;
+            ev.tile = job.tile_id;
+            // `rows` carries the fault-class index, so a trace alone
+            // can attribute which class fired where.
+            ev.rows = kind.index() as u64;
+            self.obs.emit(ev);
+        }
+    }
+
+    /// The death mark on this device's track: the `faults_injected`
+    /// ledger bump plus a [`FaultInjected`](EventKind::FaultInjected)
+    /// instant carrying [`FaultKind::DeviceDeath`]'s class index. No
+    /// job is in hand when a worker dies, so unlike
+    /// [`note_fault`](Self::note_fault) there is no tenant/tile to
+    /// attribute.
+    pub fn note_death(&mut self) {
+        self.metrics.faults_injected.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        if self.obs.enabled() {
+            let mut ev = Event::new(EventKind::FaultInjected, self.obs.cycles(), 0);
+            ev.rows = FaultKind::DeviceDeath.index() as u64;
+            self.obs.emit(ev);
+        }
+    }
+
+    /// Apply a non-straggler fault to this attempt: *detect* it the way
+    /// production would (content-hash re-verify for a corrupted
+    /// install, ABFT column checksums for a flipped output), charge the
+    /// wasted cycles to `failed_cycles` — and only there — then either
+    /// queue a bounded retry or abandon the job with a typed error.
+    /// Returns true iff abandonment completed the request.
+    fn fail_job(&mut self, mut job: Job, kind: FaultKind) -> bool {
+        use std::sync::atomic::Ordering::Relaxed;
+        let wasted = match kind {
+            // The job never reached the array: nothing wasted.
+            FaultKind::Transient => 0,
+            FaultKind::CorruptInstall => {
+                // Corrupt a copy of the tile in flight and catch it the
+                // way the installer does: re-hash and compare against
+                // the job's content identity.
+                let mut corrupted = (*job.w_tile).clone();
+                let v = corrupted.get(0, 0);
+                corrupted.set(0, 0, v.wrapping_add(1));
+                assert_ne!(
+                    corrupted.content_hash(),
+                    job.w_tile.content_hash(),
+                    "content-hash re-verify must catch a corrupted install"
+                );
+                // Whatever was stationary is suspect now; force a clean
+                // reinstall on the retry (wherever it lands).
+                self.loaded = None;
+                self.fault_load_cycles
+            }
+            FaultKind::FlipOutput => {
+                // The array produced the strip, then one element
+                // flipped on the way out. ABFT column checksums catch
+                // any single flip in its column.
+                let mut y = abft::host_matmul(&job.x_strip, &job.w_tile);
+                if y.rows() > 0 && y.cols() > 0 {
+                    let v = y.get(0, 0);
+                    y.set(0, 0, v.wrapping_add(1));
+                    assert!(
+                        abft::verify_columns(&job.x_strip, &job.w_tile, &y).is_err(),
+                        "ABFT column checksums must catch a flipped output"
+                    );
+                }
+                // Load phase + full stream, all discarded.
+                self.fault_load_cycles + job.x_strip.rows() as u64 + self.array.n() as u64
+            }
+            FaultKind::Straggler | FaultKind::DeviceDeath => {
+                unreachable!("{} is not an attempt-level failure", kind.name())
+            }
+        };
+        self.note_fault(&job, kind);
+        self.metrics.jobs_failed.fetch_add(1, Relaxed);
+        if wasted > 0 {
+            self.metrics.failed_cycles.fetch_add(wasted, Relaxed);
+        }
+        self.drain_failures += 1;
+        let stamp = |dev: &Self, kind: EventKind| {
+            let mut ev = Event::new(kind, dev.obs.cycles(), 0);
+            ev.tenant = job.tenant;
+            ev.tile = job.tile_id;
+            ev.rows = job.x_strip.rows() as u64;
+            ev
+        };
+        if job.attempt + 1 < MAX_ATTEMPTS {
+            self.metrics.jobs_retried.fetch_add(1, Relaxed);
+            if self.obs.enabled() {
+                let ev = stamp(self, EventKind::JobRetry);
+                self.obs.emit(ev);
+            }
+            job.attempt += 1;
+            self.retry_out.push(job);
+            false
+        } else {
+            self.metrics.jobs_abandoned.fetch_add(1, Relaxed);
+            if self.obs.enabled() {
+                let ev = stamp(self, EventKind::JobAbandon);
+                self.obs.emit(ev);
+            }
+            let last = job.req.fail_jobs(1, FAIL_ABANDONED);
+            if last {
+                let completed = job.req.finish();
+                self.metrics.requests_completed.fetch_add(completed, Relaxed);
+            }
+            last
+        }
+    }
 }
 
 #[cfg(test)]
@@ -415,7 +631,9 @@ mod tests {
     use crate::matrix::random_i8;
     use std::sync::mpsc::channel;
 
-    fn job_for(x: &Mat<i8>, w: &Mat<i8>) -> (Job, std::sync::mpsc::Receiver<MatmulResponse>) {
+    type RespRx = std::sync::mpsc::Receiver<Result<MatmulResponse, crate::fault::FleetError>>;
+
+    fn job_for(x: &Mat<i8>, w: &Mat<i8>) -> (Job, RespRx) {
         let (tx, rx) = channel();
         let req = Arc::new(ReqState::new(
             x.rows(),
@@ -436,6 +654,7 @@ mod tests {
                 tile_id,
                 tenant: DEFAULT_TENANT,
                 enqueued_at: Instant::now(),
+                attempt: 0,
             },
             rx,
         )
@@ -454,7 +673,7 @@ mod tests {
         let (job, rx) = job_for(&x, &w);
         let last = dev.execute(job);
         assert!(last);
-        let resp = rx.try_recv().unwrap();
+        let resp = rx.try_recv().unwrap().unwrap();
         assert_eq!(resp.out, x.widen().matmul(&w.widen()));
         let m = metrics.snapshot();
         assert_eq!(m.jobs_executed, 1);
@@ -475,7 +694,7 @@ mod tests {
             let x = random_i8(8, 8, seed);
             let (job, rx) = job_for(&x, &w);
             dev.execute(job);
-            assert_eq!(rx.try_recv().unwrap().out, x.widen().matmul(&w.widen()));
+            assert_eq!(rx.try_recv().unwrap().unwrap().out, x.widen().matmul(&w.widen()));
         }
         let m = metrics.snapshot();
         assert_eq!(m.weight_loads, 1);
@@ -545,10 +764,10 @@ mod tests {
         let w = random_i8(8, 8, 4);
         let (job, rx) = job_for(&x, &w);
         dev.execute(job);
-        let cold = rx.try_recv().unwrap().stats;
+        let cold = rx.try_recv().unwrap().unwrap().stats;
         let (job, rx) = job_for(&x, &w);
         dev.execute(job);
-        let hot = rx.try_recv().unwrap().stats;
+        let hot = rx.try_recv().unwrap().unwrap().stats;
         assert_eq!(cold.cycles - hot.cycles, 7); // N-1 = 7
         assert_eq!(cold.weight_load_cycles, 7);
         assert_eq!(hot.weight_load_cycles, 0);
@@ -566,7 +785,7 @@ mod tests {
         for w in [&wa, &wb, &wa, &wb] {
             let (job, rx) = job_for(&x, w);
             dev.execute(job);
-            assert_eq!(rx.try_recv().unwrap().out, x.widen().matmul(&w.widen()));
+            assert_eq!(rx.try_recv().unwrap().unwrap().out, x.widen().matmul(&w.widen()));
         }
         let m = metrics.snapshot();
         assert_eq!(m.weight_loads, 4);
@@ -622,7 +841,7 @@ mod tests {
             let (mut job, rx) = job_for(&x, &w);
             job.tile_id = 42; // forged collision
             dev.execute(job);
-            assert_eq!(rx.try_recv().unwrap().out, x.widen().matmul(&w.widen()));
+            assert_eq!(rx.try_recv().unwrap().unwrap().out, x.widen().matmul(&w.widen()));
         }
         let m = metrics.snapshot();
         assert_eq!(m.weight_loads, 2);
@@ -663,7 +882,7 @@ mod tests {
             for x in &xs {
                 let (job, rx) = job_for(x, &w);
                 dev_seq.execute(job);
-                seq_resps.push(rx.try_recv().unwrap());
+                seq_resps.push(rx.try_recv().unwrap().unwrap());
             }
 
             let m_bat = Arc::new(Metrics::default());
@@ -672,7 +891,7 @@ mod tests {
             dev_bat.execute_batch(jobs);
 
             for ((x, seq), rx) in xs.iter().zip(&seq_resps).zip(rxs) {
-                let bat = rx.try_recv().unwrap();
+                let bat = rx.try_recv().unwrap().unwrap();
                 assert_eq!(bat.out, seq.out, "{arch:?}");
                 assert_eq!(bat.out, x.widen().matmul(&w.widen()), "{arch:?}");
                 assert_eq!(bat.stats, seq.stats, "{arch:?} per-request stats diverged");
@@ -707,7 +926,7 @@ mod tests {
         dev.execute_batch(jobs);
         for (i, rx) in rxs.into_iter().enumerate() {
             let x = random_i8(8, 8, 20 + i as u64);
-            assert_eq!(rx.try_recv().unwrap().out, x.widen().matmul(&w.widen()));
+            assert_eq!(rx.try_recv().unwrap().unwrap().out, x.widen().matmul(&w.widen()));
         }
         let m = metrics.snapshot();
         assert_eq!(m.weight_loads, 1, "only the warmup installed");
@@ -731,7 +950,7 @@ mod tests {
         dev.execute_batch(jobs);
         for (i, rx) in rxs.into_iter().enumerate() {
             let w = random_i8(8, 8, 30 + i as u64);
-            assert_eq!(rx.try_recv().unwrap().out, x.widen().matmul(&w.widen()));
+            assert_eq!(rx.try_recv().unwrap().unwrap().out, x.widen().matmul(&w.widen()));
         }
         let m = metrics.snapshot();
         assert_eq!(m.weight_loads, 2, "divergent contents force real reloads");
@@ -748,7 +967,7 @@ mod tests {
         let w = random_i8(8, 8, 4);
         let (job, rx) = job_for(&x, &w);
         dev.execute_batch(vec![job]);
-        assert_eq!(rx.try_recv().unwrap().out, x.widen().matmul(&w.widen()));
+        assert_eq!(rx.try_recv().unwrap().unwrap().out, x.widen().matmul(&w.widen()));
         let m = metrics.snapshot();
         assert_eq!(m.jobs_executed, 1);
         assert_eq!(m.jobs_coalesced, 0, "a singleton batch has no tail");
@@ -855,8 +1074,177 @@ mod tests {
         let run = |dev: &mut Device| {
             let (job, rx) = job_for(&x, &w);
             dev.execute(job);
-            rx.try_recv().unwrap().out
+            rx.try_recv().unwrap().unwrap().out
         };
         assert_eq!(run(&mut dip), run(&mut ws));
+    }
+
+    // ---- fault injection ------------------------------------------------
+
+    use crate::fault::{FaultPlan, FleetError};
+
+    /// A device armed with a scripted single-device fault lane.
+    fn chaos_dev(
+        lane: Vec<(u64, FaultKind)>,
+        retry_immunity: bool,
+    ) -> (Device, Arc<Metrics>) {
+        let plan = FaultPlan {
+            faults: vec![lane, Vec::new()],
+            death_at: vec![None, None],
+            retry_immunity,
+        };
+        let metrics = Arc::new(Metrics::default());
+        let mut dev = Device::new(dip8(), 0, metrics.clone());
+        dev.set_injector(Arc::new(FaultInjector::new(plan)));
+        (dev, metrics)
+    }
+
+    #[test]
+    fn transient_fault_retries_and_the_retry_lands_bit_exact() {
+        let (mut dev, metrics) = chaos_dev(vec![(0, FaultKind::Transient)], true);
+        let x = random_i8(8, 8, 1);
+        let w = random_i8(8, 8, 2);
+        let (job, rx) = job_for(&x, &w);
+        assert!(!dev.execute(job), "failed attempt must not complete the request");
+        assert_eq!(dev.take_drain_outcome(), (1, 0));
+        let mut retries = dev.take_retries();
+        assert_eq!(retries.len(), 1);
+        let retry = retries.pop().unwrap();
+        assert_eq!(retry.attempt, 1);
+        assert!(dev.execute(retry));
+        assert_eq!(dev.take_drain_outcome(), (0, 1));
+        assert_eq!(rx.try_recv().unwrap().unwrap().out, x.widen().matmul(&w.widen()));
+        let m = metrics.snapshot();
+        assert_eq!((m.faults_injected, m.jobs_failed, m.jobs_retried), (1, 1, 1));
+        assert_eq!(m.jobs_abandoned, 0);
+        assert_eq!(m.failed_cycles, 0, "a transient never reached the array");
+        // The retry is the only execution the ledgers ever saw.
+        assert_eq!(m.jobs_executed, 1);
+        assert_eq!(m.rows_streamed, 8);
+    }
+
+    #[test]
+    fn corrupt_install_is_caught_and_charges_only_failed_cycles() {
+        let (mut dev, metrics) = chaos_dev(vec![(1, FaultKind::CorruptInstall)], true);
+        let x = random_i8(8, 8, 1);
+        let w = random_i8(8, 8, 2);
+        let (warm, _rx) = job_for(&x, &w);
+        dev.execute(warm); // slot 0: clean install
+        assert!(dev.loaded_tile_id().is_some());
+        let (job, rx) = job_for(&x, &w);
+        dev.execute(job); // slot 1: corrupted install, detected
+        assert_eq!(dev.loaded_tile_id(), None, "suspect tile must be evicted");
+        let m = metrics.snapshot();
+        assert_eq!(m.failed_cycles, 7, "DiP tile 8 wastes its N-1 load phase");
+        assert_eq!(m.jobs_failed, 1);
+        let retry = dev.take_retries().pop().unwrap();
+        assert!(dev.execute(retry));
+        assert_eq!(rx.try_recv().unwrap().unwrap().out, x.widen().matmul(&w.widen()));
+        let m = metrics.snapshot();
+        // Clean run + clean retry: 2 executions, 2 installs, balanced.
+        assert_eq!((m.jobs_executed, m.weight_loads), (2, 2));
+    }
+
+    #[test]
+    fn flipped_output_is_caught_by_abft_and_charges_the_full_stream() {
+        let (mut dev, metrics) = chaos_dev(vec![(0, FaultKind::FlipOutput)], true);
+        let x = random_i8(8, 8, 1);
+        let w = random_i8(8, 8, 2);
+        let (job, rx) = job_for(&x, &w);
+        dev.execute(job);
+        let m = metrics.snapshot();
+        assert_eq!(m.jobs_failed, 1);
+        // Wasted: N-1 load + 8 rows + N stream overhead = 7 + 8 + 8.
+        assert_eq!(m.failed_cycles, 23);
+        let retry = dev.take_retries().pop().unwrap();
+        assert!(dev.execute(retry));
+        assert_eq!(rx.try_recv().unwrap().unwrap().out, x.widen().matmul(&w.widen()));
+    }
+
+    #[test]
+    fn straggler_is_slow_but_correct_and_not_a_failure() {
+        let (mut dev, metrics) = chaos_dev(vec![(0, FaultKind::Straggler)], true);
+        let x = random_i8(8, 8, 1);
+        let w = random_i8(8, 8, 2);
+        let (job, rx) = job_for(&x, &w);
+        assert!(dev.execute(job), "a straggler still completes its request");
+        assert_eq!(rx.try_recv().unwrap().unwrap().out, x.widen().matmul(&w.widen()));
+        let m = metrics.snapshot();
+        assert_eq!(m.faults_injected, 1);
+        assert_eq!((m.jobs_failed, m.jobs_retried, m.failed_cycles), (0, 0, 0));
+        assert_eq!(dev.take_drain_outcome(), (0, 1));
+        assert!(dev.take_retries().is_empty());
+    }
+
+    #[test]
+    fn exhausted_retries_abandon_with_a_typed_error() {
+        // Immunity off: every attempt faults, so the bounded retry runs
+        // dry and the waiter gets a typed abandonment — never a hang.
+        let lane = vec![
+            (0, FaultKind::Transient),
+            (1, FaultKind::Transient),
+            (2, FaultKind::Transient),
+        ];
+        let (mut dev, metrics) = chaos_dev(lane, false);
+        let x = random_i8(8, 8, 1);
+        let w = random_i8(8, 8, 2);
+        let (job, rx) = job_for(&x, &w);
+        let mut job = Some(job);
+        let mut last = false;
+        while let Some(j) = job.take() {
+            last = dev.execute(j);
+            job = dev.take_retries().pop();
+        }
+        assert!(last, "abandonment resolves the request");
+        assert!(matches!(rx.try_recv().unwrap(), Err(FleetError::RequestAbandoned)));
+        let m = metrics.snapshot();
+        assert_eq!(m.jobs_failed, MAX_ATTEMPTS as u64);
+        assert_eq!(m.jobs_retried, MAX_ATTEMPTS as u64 - 1);
+        assert_eq!(m.jobs_abandoned, 1);
+        assert_eq!(m.jobs_failed, m.jobs_retried + m.jobs_abandoned);
+        assert_eq!(m.requests_completed, 1, "abandoned requests still finish");
+        assert_eq!(m.jobs_executed, 0, "no attempt ever reached the array");
+    }
+
+    #[test]
+    fn retry_immunity_shields_second_attempts() {
+        // Faults scheduled on both slots, but the retry (attempt 1) is
+        // immune: it consumes slot 1 without faulting, so seeded chaos
+        // stays bit-exact no matter where retries land.
+        let lane = vec![(0, FaultKind::Transient), (1, FaultKind::FlipOutput)];
+        let (mut dev, metrics) = chaos_dev(lane, true);
+        let x = random_i8(8, 8, 1);
+        let w = random_i8(8, 8, 2);
+        let (job, rx) = job_for(&x, &w);
+        dev.execute(job);
+        let retry = dev.take_retries().pop().unwrap();
+        assert!(dev.execute(retry));
+        assert_eq!(rx.try_recv().unwrap().unwrap().out, x.widen().matmul(&w.widen()));
+        assert_eq!(metrics.snapshot().jobs_failed, 1, "slot 1 was consumed, not fired");
+    }
+
+    #[test]
+    fn fault_events_land_on_the_device_track() {
+        let (mut dev, _metrics) = chaos_dev(vec![(0, FaultKind::CorruptInstall)], true);
+        let x = random_i8(8, 8, 1);
+        let w = random_i8(8, 8, 2);
+        let (job, _rx) = job_for(&x, &w);
+        dev.execute(job);
+        let retry = dev.take_retries().pop().unwrap();
+        dev.execute(retry);
+        let trace = dev.take_obs().into_trace();
+        let kinds: Vec<_> = trace.events.iter().map(|e| e.kind).collect();
+        assert_eq!(&kinds[..2], &[EventKind::FaultInjected, EventKind::JobRetry]);
+        let fault = &trace.events[0];
+        assert_eq!(fault.rows, FaultKind::CorruptInstall.index() as u64);
+        assert_eq!(fault.tile, w.content_hash());
+    }
+
+    #[test]
+    fn faults_pending_guards_the_coalescing_window() {
+        let (dev, _metrics) = chaos_dev(vec![(3, FaultKind::Transient)], true);
+        assert!(dev.faults_pending(4), "slot 3 inside a 4-wide window");
+        let (dev, _metrics) = chaos_dev(vec![(9, FaultKind::Transient)], true);
+        assert!(!dev.faults_pending(4), "slot 9 beyond a 4-wide window");
     }
 }

@@ -95,6 +95,35 @@ pub struct Metrics {
     /// cohort size in rows (how much weight residency each wave
     /// amortized).
     pub wave_stacked_rows: AtomicU64,
+    /// Fault injections that actually fired (all classes, including
+    /// stragglers and device deaths — `jobs_failed` counts only the
+    /// classes that fail the attempt).
+    pub faults_injected: AtomicU64,
+    /// Job attempts that failed with a detected fault. Double-entry:
+    /// `jobs_failed == jobs_retried + jobs_abandoned`, audited.
+    pub jobs_failed: AtomicU64,
+    /// Failed attempts requeued for another try (bounded by the retry
+    /// budget).
+    pub jobs_retried: AtomicU64,
+    /// Jobs that exhausted the retry budget; their request resolves to
+    /// a typed `FleetError::RequestAbandoned` instead of hanging.
+    pub jobs_abandoned: AtomicU64,
+    /// Jobs drained from a dead device's queue shard and re-homed onto
+    /// a healthy device (never executed on the dead one).
+    pub jobs_reclaimed: AtomicU64,
+    /// Simulated cycles wasted by failed attempts — charged here and
+    /// *only* here, so the main cycle ledger stays exact: the retried
+    /// success re-charges its work normally.
+    pub failed_cycles: AtomicU64,
+    /// Circuit-breaker entries (consecutive-failure quarantine or
+    /// death). Conserved against exits: a device cannot exit a
+    /// quarantine it never entered, and dead devices never exit.
+    pub quarantines_entered: AtomicU64,
+    /// Circuit-breaker exits (a quarantined, still-alive device served
+    /// a job successfully and was revived).
+    pub quarantines_exited: AtomicU64,
+    /// Permanent device deaths (each also enters quarantine, once).
+    pub device_deaths: AtomicU64,
     /// Per-tenant service breakdown (DRR fairness observability).
     tenants: Mutex<HashMap<TenantId, TenantCounters>>,
     /// Jobs executed per worker device (placement skew observability;
@@ -128,6 +157,15 @@ pub struct MetricsSnapshot {
     pub act_rows_reused: u64,
     pub waves: u64,
     pub wave_stacked_rows: u64,
+    pub faults_injected: u64,
+    pub jobs_failed: u64,
+    pub jobs_retried: u64,
+    pub jobs_abandoned: u64,
+    pub jobs_reclaimed: u64,
+    pub failed_cycles: u64,
+    pub quarantines_entered: u64,
+    pub quarantines_exited: u64,
+    pub device_deaths: u64,
 }
 
 /// Point-in-time copy of one tenant's counters.
@@ -186,6 +224,15 @@ impl Metrics {
             act_rows_reused: self.act_rows_reused.load(Ordering::Relaxed),
             waves: self.waves.load(Ordering::Relaxed),
             wave_stacked_rows: self.wave_stacked_rows.load(Ordering::Relaxed),
+            faults_injected: self.faults_injected.load(Ordering::Relaxed),
+            jobs_failed: self.jobs_failed.load(Ordering::Relaxed),
+            jobs_retried: self.jobs_retried.load(Ordering::Relaxed),
+            jobs_abandoned: self.jobs_abandoned.load(Ordering::Relaxed),
+            jobs_reclaimed: self.jobs_reclaimed.load(Ordering::Relaxed),
+            failed_cycles: self.failed_cycles.load(Ordering::Relaxed),
+            quarantines_entered: self.quarantines_entered.load(Ordering::Relaxed),
+            quarantines_exited: self.quarantines_exited.load(Ordering::Relaxed),
+            device_deaths: self.device_deaths.load(Ordering::Relaxed),
         }
     }
 
@@ -339,6 +386,17 @@ impl MetricsSnapshot {
             act_rows_reused: self.act_rows_reused.saturating_sub(prev.act_rows_reused),
             waves: self.waves.saturating_sub(prev.waves),
             wave_stacked_rows: self.wave_stacked_rows.saturating_sub(prev.wave_stacked_rows),
+            faults_injected: self.faults_injected.saturating_sub(prev.faults_injected),
+            jobs_failed: self.jobs_failed.saturating_sub(prev.jobs_failed),
+            jobs_retried: self.jobs_retried.saturating_sub(prev.jobs_retried),
+            jobs_abandoned: self.jobs_abandoned.saturating_sub(prev.jobs_abandoned),
+            jobs_reclaimed: self.jobs_reclaimed.saturating_sub(prev.jobs_reclaimed),
+            failed_cycles: self.failed_cycles.saturating_sub(prev.failed_cycles),
+            quarantines_entered: self
+                .quarantines_entered
+                .saturating_sub(prev.quarantines_entered),
+            quarantines_exited: self.quarantines_exited.saturating_sub(prev.quarantines_exited),
+            device_deaths: self.device_deaths.saturating_sub(prev.device_deaths),
         }
     }
 }
@@ -441,6 +499,37 @@ mod tests {
         assert_eq!(now.delta(&now), MetricsSnapshot::default());
         // A regressed counter saturates instead of wrapping.
         assert_eq!(prev.delta(&now).jobs_executed, 0);
+    }
+
+    #[test]
+    fn fault_counters_snapshot_round_trip() {
+        // Both sides of the retry double-entry ledger and the
+        // quarantine conservation pair must survive snapshot() (the
+        // lint gate separately proves no field can be left out).
+        let m = Metrics::default();
+        m.faults_injected.fetch_add(5, Ordering::Relaxed);
+        m.jobs_failed.fetch_add(4, Ordering::Relaxed);
+        m.jobs_retried.fetch_add(3, Ordering::Relaxed);
+        m.jobs_abandoned.fetch_add(1, Ordering::Relaxed);
+        m.jobs_reclaimed.fetch_add(2, Ordering::Relaxed);
+        m.failed_cycles.fetch_add(77, Ordering::Relaxed);
+        m.quarantines_entered.fetch_add(2, Ordering::Relaxed);
+        m.quarantines_exited.fetch_add(1, Ordering::Relaxed);
+        m.device_deaths.fetch_add(1, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.faults_injected, 5);
+        assert_eq!(s.jobs_failed, 4);
+        assert_eq!(s.jobs_retried, 3);
+        assert_eq!(s.jobs_abandoned, 1);
+        assert_eq!(s.jobs_reclaimed, 2);
+        assert_eq!(s.failed_cycles, 77);
+        assert_eq!(s.quarantines_entered, 2);
+        assert_eq!(s.quarantines_exited, 1);
+        assert_eq!(s.device_deaths, 1);
+        assert_eq!(s.jobs_failed, s.jobs_retried + s.jobs_abandoned);
+        // delta() covers the new fields too (self-delta is zero).
+        assert_eq!(s.delta(&s), MetricsSnapshot::default());
+        assert_eq!(s.delta(&MetricsSnapshot::default()), s);
     }
 
     #[test]

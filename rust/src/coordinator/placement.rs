@@ -31,7 +31,7 @@
 //! stealing and mid-flight rebalances never affect numerics.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use crate::sync::lock_unpoisoned;
@@ -87,6 +87,11 @@ pub struct PlacementMap {
     /// stateless `HashMod` path never takes the lock.
     devices: usize,
     inner: Mutex<PlacementInner>,
+    /// Per-device availability (health feedback from the fault layer:
+    /// quarantined or dead devices are routed around). All-unavailable
+    /// degenerates to ignoring the flags — the queue's push reroute is
+    /// the backstop, and routing must never deadlock on health state.
+    available: Vec<AtomicBool>,
     placements: AtomicU64,
     rebalances: AtomicU64,
 }
@@ -137,9 +142,37 @@ impl PlacementMap {
                 device_heat: vec![0; devices],
                 touches: 0,
             }),
+            available: (0..devices).map(|_| AtomicBool::new(true)).collect(),
             placements: AtomicU64::new(0),
             rebalances: AtomicU64::new(0),
         }
+    }
+
+    /// Steer placement away from `device` (it died or tripped the
+    /// circuit breaker). Placed tiles homed there are lazily re-homed
+    /// on their next routed job; unseen tiles never land there while
+    /// the flag is set.
+    pub fn set_unavailable(&self, device: usize) {
+        self.available[device].store(false, Ordering::Relaxed);
+    }
+
+    /// Re-admit `device` to placement (quarantine exit). Tiles that
+    /// were re-homed away stay where they are — strict affinity — and
+    /// the device warms back up through unseen tiles and rebalancing.
+    pub fn set_available(&self, device: usize) {
+        self.available[device].store(true, Ordering::Relaxed);
+    }
+
+    pub fn is_available(&self, device: usize) -> bool {
+        self.available[device].load(Ordering::Relaxed)
+    }
+
+    /// Coldest available device, or `None` when the whole fleet is
+    /// flagged unavailable.
+    fn coldest_available(&self, inner: &PlacementInner) -> Option<usize> {
+        (0..self.devices)
+            .filter(|&d| self.is_available(d))
+            .min_by_key(|&d| (inner.device_heat[d], d))
     }
 
     pub fn policy(&self) -> PlacementPolicy {
@@ -160,7 +193,14 @@ impl PlacementMap {
     pub fn place(&self, tile_id: u64, work: u64) -> usize {
         let devices = self.devices as u64;
         if self.policy == PlacementPolicy::HashMod {
-            return (tile_id % devices) as usize;
+            // Stateless modulus, advanced past unavailable devices; if
+            // every device is flagged, fall back to the plain modulus
+            // (the queue's push reroute is the backstop).
+            let base = (tile_id % devices) as usize;
+            return (0..self.devices)
+                .map(|k| (base + k) % self.devices)
+                .find(|&d| self.is_available(d))
+                .unwrap_or(base);
         }
         let work = work.max(1);
         let mut inner = lock_unpoisoned(&self.inner);
@@ -177,17 +217,43 @@ impl PlacementMap {
             e.device
         });
         if let Some(d) = existing {
+            if !self.is_available(d) {
+                // Lazy re-home: the tile's home died or is quarantined,
+                // so this job (and, by strict affinity, every later
+                // one) moves to the coldest live device. With the whole
+                // fleet flagged, keep the home — routing never
+                // deadlocks on health state.
+                if let Some(nd) = self.coldest_available(&inner) {
+                    let e = inner.tiles.get_mut(&tile_id).unwrap();
+                    let heat = e.heat; // includes this job's work
+                    e.device = nd;
+                    inner.device_heat[d] =
+                        inner.device_heat[d].saturating_sub(heat - work);
+                    inner.device_heat[nd] += heat;
+                    self.rebalances.fetch_add(1, Ordering::Relaxed);
+                    return nd;
+                }
+            }
             inner.device_heat[d] += work;
         } else {
             // Power-of-two-choices: modulus candidate vs an independent
             // hash candidate (forced distinct when devices > 1), colder
-            // aggregate heat wins, first candidate wins ties.
+            // aggregate heat wins, first candidate wins ties. An
+            // unavailable candidate loses to an available one; with
+            // both down, the coldest live device takes the tile (or
+            // the plain choice, when the whole fleet is flagged).
             let c1 = (tile_id % devices) as usize;
             let mut c2 = (splitmix64(tile_id) % devices) as usize;
             if c2 == c1 {
                 c2 = (c1 + 1) % devices as usize;
             }
-            let d = if inner.device_heat[c2] < inner.device_heat[c1] { c2 } else { c1 };
+            let by_heat = if inner.device_heat[c2] < inner.device_heat[c1] { c2 } else { c1 };
+            let d = match (self.is_available(c1), self.is_available(c2)) {
+                (true, true) => by_heat,
+                (true, false) => c1,
+                (false, true) => c2,
+                (false, false) => self.coldest_available(&inner).unwrap_or(by_heat),
+            };
             inner.tiles.insert(tile_id, TileEntry { device: d, heat: work });
             inner.device_heat[d] += work;
             self.placements.fetch_add(1, Ordering::Relaxed);
@@ -247,15 +313,15 @@ impl PlacementMap {
     }
 
     fn rebalance_locked(&self, inner: &mut PlacementInner) -> bool {
-        let (mut hot, mut cold) = (0usize, 0usize);
+        let mut hot = 0usize;
         for (d, &h) in inner.device_heat.iter().enumerate() {
             if h > inner.device_heat[hot] {
                 hot = d;
             }
-            if h < inner.device_heat[cold] {
-                cold = d;
-            }
         }
+        // Tiles only ever move *to* a live device; with the whole fleet
+        // flagged unavailable there is nowhere better to put anything.
+        let Some(cold) = self.coldest_available(inner) else { return false };
         let (hot_heat, cold_heat) = (inner.device_heat[hot], inner.device_heat[cold]);
         if hot == cold || hot_heat <= REBALANCE_RATIO * cold_heat + REBALANCE_SLACK {
             return false;
@@ -415,5 +481,56 @@ mod tests {
             assert_eq!(p.place(id, 1), 0);
         }
         assert!(!p.rebalance());
+    }
+
+    #[test]
+    fn hash_mod_advances_past_unavailable_devices() {
+        let p = PlacementMap::new(4, PlacementPolicy::HashMod);
+        p.set_unavailable(1);
+        assert_eq!(p.place(1, 1), 2, "modulus home down: next live device");
+        assert_eq!(p.place(5, 1), 2);
+        assert_eq!(p.place(2, 1), 2, "live homes unaffected");
+        p.set_available(1);
+        assert_eq!(p.place(1, 1), 1, "revived device serves its modulus again");
+    }
+
+    #[test]
+    fn dead_home_rehomes_placed_tiles_lazily() {
+        let p = PlacementMap::new(2, PlacementPolicy::HeatAware);
+        let home = p.place(42, 1);
+        p.set_unavailable(home);
+        let new_home = p.place(42, 1);
+        assert_ne!(new_home, home, "tile must leave its dead home");
+        assert_eq!(p.device_of(42), Some(new_home));
+        assert!(p.snapshot().rebalances >= 1, "re-homing is a counted move");
+        // Strict affinity to the *new* home survives the old device's
+        // revival — moving back would throw away the new residency.
+        p.set_available(home);
+        assert_eq!(p.place(42, 1), new_home);
+    }
+
+    #[test]
+    fn unseen_tiles_avoid_unavailable_devices() {
+        let p = PlacementMap::new(2, PlacementPolicy::HeatAware);
+        p.set_unavailable(0);
+        for id in 0u64..8 {
+            assert_eq!(p.place(id, 1), 1, "only device 1 is placeable");
+        }
+    }
+
+    #[test]
+    fn all_unavailable_falls_back_to_plain_placement() {
+        // Health flags must degrade placement, never deadlock it: with
+        // the whole fleet flagged, placement behaves as if unflagged
+        // and the queue-level reroute is the backstop.
+        let hm = PlacementMap::new(2, PlacementPolicy::HashMod);
+        hm.set_unavailable(0);
+        hm.set_unavailable(1);
+        assert_eq!(hm.place(3, 1), 1);
+        let ha = PlacementMap::new(2, PlacementPolicy::HeatAware);
+        ha.set_unavailable(0);
+        ha.set_unavailable(1);
+        let first = ha.place(7, 1);
+        assert_eq!(ha.place(7, 1), first, "affinity still sticky");
     }
 }

@@ -147,6 +147,10 @@ struct ShardInner<T> {
     cur: usize,
     /// Total queued jobs across lanes (capacity accounting).
     len: usize,
+    /// The shard's device died ([`ShardedQueue::retire_shard`]): new
+    /// pushes reroute to the next live shard, and thieves may take the
+    /// shard's last job (nobody is coming back for it).
+    retired: bool,
     /// Injected misbehavior (None in production; see [`QueueDefect`]).
     defect: Option<QueueDefect>,
 }
@@ -264,7 +268,13 @@ impl<T> ShardedQueue<T> {
         Self {
             shards: (0..shards)
                 .map(|_| Shard {
-                    inner: Mutex::new(ShardInner { lanes: Vec::new(), cur: 0, len: 0, defect }),
+                    inner: Mutex::new(ShardInner {
+                        lanes: Vec::new(),
+                        cur: 0,
+                        len: 0,
+                        retired: false,
+                        defect,
+                    }),
                     not_full: Condvar::new(),
                 })
                 .collect(),
@@ -288,27 +298,68 @@ impl<T> ShardedQueue<T> {
     /// closed, including when `close()` lands while this push is
     /// blocked on backpressure: the blocked pusher is woken and hands
     /// the item back instead of planting it in a drained shard.
+    ///
+    /// A **retired** shard ([`retire_shard`](Self::retire_shard): its
+    /// device died) is never planted with new work: the push reroutes
+    /// to the next live shard in index order — including when the
+    /// retirement lands while this push is blocked on the retired
+    /// shard's backpressure. Only when *every* shard is retired does
+    /// the push give up with [`QueueClosed`] (the fleet is gone; the
+    /// caller turns that into a typed error, not a hang).
     pub fn push(&self, idx: usize, tenant: TenantId, item: T) -> Result<bool, QueueClosed> {
-        let shard = &self.shards[idx];
-        let mut inner = lock_unpoisoned(&shard.inner);
-        // Checked under the shard lock: a close() that any drain scan
-        // has already observed happened before this lock acquisition,
-        // so the rejection lands before the item can be stranded.
-        if self.closed.load(Ordering::Acquire) {
-            return Err(QueueClosed);
-        }
-        let waited = inner.len >= self.capacity;
-        while inner.len >= self.capacity {
-            inner = wait_unpoisoned(&shard.not_full, inner);
+        let n = self.shards.len();
+        let mut waited = false;
+        'shards: for k in 0..n {
+            let shard = &self.shards[(idx + k) % n];
+            let mut inner = lock_unpoisoned(&shard.inner);
+            // Checked under the shard lock: a close() that any drain
+            // scan has already observed happened before this lock
+            // acquisition, so the rejection lands before the item can
+            // be stranded.
             if self.closed.load(Ordering::Acquire) {
                 return Err(QueueClosed);
             }
+            if inner.retired {
+                continue 'shards;
+            }
+            waited = waited || inner.len >= self.capacity;
+            while inner.len >= self.capacity {
+                inner = wait_unpoisoned(&shard.not_full, inner);
+                if self.closed.load(Ordering::Acquire) {
+                    return Err(QueueClosed);
+                }
+                if inner.retired {
+                    continue 'shards;
+                }
+            }
+            inner.lane_mut(tenant).queue.push_back(item);
+            inner.len += 1;
+            drop(inner);
+            self.bump();
+            return Ok(waited);
         }
-        inner.lane_mut(tenant).queue.push_back(item);
-        inner.len += 1;
+        Err(QueueClosed)
+    }
+
+    /// Mark shard `idx`'s device as gone: subsequent pushes aimed here
+    /// reroute to the next live shard (pushes currently blocked on this
+    /// shard's backpressure are woken to reroute too), and thieves may
+    /// take its last queued job — the affinity owner it was being
+    /// reserved for is never coming back. Irreversible; idempotent.
+    pub fn retire_shard(&self, idx: usize) {
+        let shard = &self.shards[idx];
+        let mut inner = lock_unpoisoned(&shard.inner);
+        inner.retired = true;
         drop(inner);
+        shard.not_full.notify_all();
+        // Wake idle workers: the remaining backlog of a retired shard
+        // is now fair game for any thief.
         self.bump();
-        Ok(waited)
+    }
+
+    /// Whether shard `idx` has been retired.
+    pub fn is_retired(&self, idx: usize) -> bool {
+        lock_unpoisoned(&self.shards[idx].inner).retired
     }
 
     /// Pop for worker `me`. `prefer` marks jobs the worker can run
@@ -469,7 +520,11 @@ impl<T> ShardedQueue<T> {
     fn steal_from(&self, victim: usize, prefer: &impl Fn(&T) -> bool) -> Option<T> {
         let shard = &self.shards[victim];
         let mut inner = lock_unpoisoned(&shard.inner);
-        if inner.len < 2 {
+        // A retired shard's owner is never coming back: the leave-last
+        // reservation would strand its final job forever, so thieves
+        // may drain it to empty.
+        let reserve = if inner.retired { 1 } else { 2 };
+        if inner.len < reserve {
             return None;
         }
         let warm = inner.lanes.iter().enumerate().find_map(|(li, l)| {
@@ -888,5 +943,78 @@ mod tests {
         // The shard drains exactly the pre-close contents.
         assert!(matches!(q.pop(0, no_pref), Some(Pop::Local(1))));
         assert!(q.pop(0, no_pref).is_none());
+    }
+
+    #[test]
+    fn push_reroutes_off_a_retired_shard() {
+        let q = ShardedQueue::new(2, 8, false);
+        q.retire_shard(0);
+        assert!(q.is_retired(0) && !q.is_retired(1));
+        q.push(0, T0, 7u32).unwrap(); // aimed at the dead shard
+        q.close();
+        assert!(q.pop(0, no_pref).is_none(), "nothing may land on a retired shard");
+        assert!(matches!(q.pop(1, no_pref), Some(Pop::Local(7))));
+    }
+
+    #[test]
+    fn retiring_every_shard_rejects_pushes() {
+        let q = ShardedQueue::new(2, 8, false);
+        q.retire_shard(0);
+        q.retire_shard(1);
+        assert_eq!(q.push(0, T0, 7u32), Err(QueueClosed), "no live shard left");
+    }
+
+    #[test]
+    fn blocked_push_reroutes_when_its_shard_retires() {
+        // A push parked on a full shard's backpressure must wake when
+        // that shard retires and land its job on the next live shard —
+        // not deadlock, not plant work on the dead device.
+        let q = Arc::new(ShardedQueue::new(2, 1, false));
+        q.push(0, T0, 1u32).unwrap(); // fill shard 0
+        let producer = {
+            let q = Arc::clone(&q);
+            std::thread::spawn(move || q.push(0, T0, 2u32))
+        };
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q.retire_shard(0);
+        producer.join().unwrap().unwrap();
+        q.close();
+        // The pre-retirement job still drains locally; the rerouted one
+        // landed on the live shard.
+        assert!(matches!(q.pop(0, no_pref), Some(Pop::Local(1))));
+        assert!(matches!(q.pop(1, no_pref), Some(Pop::Local(2))));
+    }
+
+    #[test]
+    fn thief_takes_the_last_job_of_a_retired_shard() {
+        // Live shard: the last job is reserved for its affinity owner,
+        // so worker 1 drains to None without touching it.
+        let q = ShardedQueue::new(2, 8, true);
+        q.push(0, T0, 7u32).unwrap();
+        q.close();
+        assert!(q.pop(1, no_pref).is_none());
+        let q2 = ShardedQueue::new(2, 8, true);
+        q2.push(0, T0, 7u32).unwrap();
+        q2.retire_shard(0);
+        q2.close();
+        // Retired shard: nobody is coming back — the thief drains it.
+        assert!(matches!(q2.pop(1, no_pref), Some(Pop::Stolen(7))));
+    }
+
+    #[test]
+    fn retired_shard_still_drains_through_its_own_pop() {
+        // The dying worker reclaims its own backlog via try_pop_own_if
+        // after retiring the shard — retirement blocks pushes, not
+        // draining.
+        let q = ShardedQueue::new(2, 8, false);
+        for v in [1u32, 2, 3] {
+            q.push(0, T0, v).unwrap();
+        }
+        q.retire_shard(0);
+        let mut got = Vec::new();
+        while let Some(v) = q.try_pop_own_if(0, |_| true) {
+            got.push(v);
+        }
+        assert_eq!(got, vec![1, 2, 3]);
     }
 }

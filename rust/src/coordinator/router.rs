@@ -25,6 +25,7 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::fault::{FaultInjector, FaultPlan, FleetError, HealthTracker};
 use crate::matrix::Mat;
 use crate::obs::{Event, EventKind, ObsConfig, Recorder};
 
@@ -32,7 +33,7 @@ use super::device::{Device, DeviceConfig, Job};
 use super::metrics::{Metrics, MetricsSnapshot, TenantSnapshot};
 use super::placement::{PlacementMap, PlacementPolicy, PlacementSnapshot};
 use super::queue::{Pop, ShardedQueue, TenantId, DEFAULT_TENANT};
-use super::state::{MatmulResponse, ReqState, SubRequest};
+use super::state::{MatmulResponse, ReqState, SubRequest, FAIL_CLOSED};
 
 /// Coordinator configuration.
 #[derive(Debug, Clone, Copy)]
@@ -152,23 +153,32 @@ pub struct WaveSub {
 
 /// Handle to one submitted request.
 pub struct RequestHandle {
-    rx: Receiver<MatmulResponse>,
+    rx: Receiver<Result<MatmulResponse, FleetError>>,
 }
 
 impl RequestHandle {
-    /// Block until the response arrives.
+    /// Block until the response arrives; panics if the request failed
+    /// with a typed [`FleetError`] (fault-free callers own this
+    /// invariant — anything that runs under chaos uses
+    /// [`wait_timeout`](Self::wait_timeout) and handles the error).
     pub fn wait(self) -> MatmulResponse {
-        self.rx.recv().expect("coordinator dropped response channel")
+        self.rx
+            .recv()
+            .expect("coordinator dropped response channel")
+            .expect("request failed under fault injection; use wait_timeout")
     }
 
-    /// Block with a timeout (None on timeout).
-    pub fn wait_timeout(&self, d: Duration) -> Option<MatmulResponse> {
+    /// Block at most `d` for the response. Every failure is a typed
+    /// [`FleetError`] — [`WaitTimeout`](FleetError::WaitTimeout) when
+    /// the budget elapses, [`ChannelClosed`](FleetError::ChannelClosed)
+    /// when the coordinator dropped the sender — so a caller with a
+    /// deadline can never block forever or panic on a lost fleet.
+    pub fn wait_timeout(&self, d: Duration) -> Result<MatmulResponse, FleetError> {
         match self.rx.recv_timeout(d) {
-            Ok(r) => Some(r),
-            Err(RecvTimeoutError::Timeout) => None,
-            Err(RecvTimeoutError::Disconnected) => {
-                panic!("coordinator dropped response channel")
-            }
+            Ok(Ok(r)) => Ok(r),
+            Ok(Err(e)) => Err(e),
+            Err(RecvTimeoutError::Timeout) => Err(FleetError::WaitTimeout(d)),
+            Err(RecvTimeoutError::Disconnected) => Err(FleetError::ChannelClosed),
         }
     }
 }
@@ -184,6 +194,15 @@ impl RequestHandle {
 /// may allocate its batch Vec but must never block — a sleep or a
 /// lock wait between the pop and the dispatch stalls a whole device.
 fn drain_coalesced(pool: &ShardedQueue<Job>, dev: &mut Device, me: usize, job: Job) {
+    // Chaos guard (lock-free, one relaxed load when no injector is
+    // armed): batch tails consume fault-schedule slots without a
+    // per-job fault branch, so a batch must never cross a scheduled
+    // fault or this device's death slot. Near one, fall back to
+    // single-job execution — the fault path sees every attempt.
+    if dev.faults_pending(COALESCE_LIMIT as u64 + 1) {
+        dev.execute_batch(vec![job]);
+        return;
+    }
     let tile = job.tile_id;
     let mut batch = vec![job];
     while batch.len() < COALESCE_LIMIT {
@@ -193,6 +212,103 @@ fn drain_coalesced(pool: &ShardedQueue<Job>, dev: &mut Device, me: usize, job: J
         }
     }
     dev.execute_batch(batch);
+}
+
+/// Permanent-death teardown, run on the dying worker's own thread in
+/// recovery order: mark the fleet state (quarantine + death), retire
+/// the shard so thieves and the push reroute stop feeding it, then
+/// reclaim the backlog — every job still queued on the dead shard is
+/// re-placed onto a surviving device. Reclaim re-pushes emit no
+/// `Enqueue` event and the drain emits no `Pop`: conservation treats a
+/// reclaimed job as the same enqueue, still owed exactly one execution
+/// ([`crate::check::audit`] pins both sides).
+#[allow(clippy::too_many_arguments)]
+fn worker_die(
+    me: usize,
+    dev: &mut Device,
+    pool: &ShardedQueue<Job>,
+    placement: &PlacementMap,
+    health: &HealthTracker,
+    metrics: &Metrics,
+    recorder: &Recorder,
+) {
+    use std::sync::atomic::Ordering::Relaxed;
+    let (_, newly_quarantined) = health.mark_dead(me);
+    if newly_quarantined {
+        metrics.quarantines_entered.fetch_add(1, Relaxed);
+        let mut ev = Event::new(EventKind::DeviceQuarantined, 0, 0);
+        ev.device = me as u64;
+        recorder.control(ev);
+    }
+    metrics.device_deaths.fetch_add(1, Relaxed);
+    dev.note_death();
+    placement.set_unavailable(me);
+    pool.retire_shard(me);
+    while let Some(job) = pool.try_pop_own_if(me, |_| true) {
+        metrics.jobs_reclaimed.fetch_add(1, Relaxed);
+        // Heat weight 1: the strip's true tile count was charged at
+        // first placement; re-homing only needs the affinity update.
+        let shard = placement.place(job.tile_id, 1);
+        let fallback = job.clone();
+        if pool.push(shard, job.tenant, job).is_err() {
+            // Queue closed under the reclaim: the job can never run.
+            // Fail its request typed instead of hanging the waiter.
+            if fallback.req.fail_jobs(1, FAIL_CLOSED) {
+                let completed = fallback.req.finish();
+                metrics.requests_completed.fetch_add(completed, Relaxed);
+            }
+        }
+    }
+}
+
+/// Post-drain fault bookkeeping for one worker: fold the drain's
+/// success/failure edges into the health tracker (consecutive-failure
+/// quarantine in, first-success revive out — both feeding placement so
+/// new tiles re-home off sick devices), then requeue bounded retries
+/// through placement so a retried job can land on a healthier device.
+/// Cold path by construction: no-ops unless an injector is armed.
+#[allow(clippy::too_many_arguments)]
+fn worker_settle_faults(
+    me: usize,
+    dev: &mut Device,
+    pool: &ShardedQueue<Job>,
+    placement: &PlacementMap,
+    health: &HealthTracker,
+    metrics: &Metrics,
+    recorder: &Recorder,
+    injector: Option<&FaultInjector>,
+) {
+    use std::sync::atomic::Ordering::Relaxed;
+    let (failures, successes) = dev.take_drain_outcome();
+    for _ in 0..failures {
+        if health.record_failure(me) {
+            metrics.quarantines_entered.fetch_add(1, Relaxed);
+            placement.set_unavailable(me);
+            let mut ev = Event::new(EventKind::DeviceQuarantined, 0, 0);
+            ev.device = me as u64;
+            recorder.control(ev);
+        }
+    }
+    if successes > 0 && health.record_success(me) {
+        metrics.quarantines_exited.fetch_add(1, Relaxed);
+        placement.set_available(me);
+        let mut ev = Event::new(EventKind::DeviceRevived, 0, 0);
+        ev.device = me as u64;
+        recorder.control(ev);
+    }
+    for rjob in dev.take_retries() {
+        let shard = placement.place(rjob.tile_id, 1);
+        let fallback = rjob.clone();
+        if pool.push(shard, rjob.tenant, rjob).is_err() {
+            // Shutdown raced the retry requeue. Liveness beats the
+            // schedule: disarm the remaining faults and run the attempt
+            // inline so the request still settles.
+            if let Some(inj) = injector {
+                inj.disarm();
+            }
+            dev.execute(fallback);
+        }
+    }
 }
 
 /// The L3 coordinator.
@@ -207,6 +323,14 @@ pub struct Coordinator {
     /// submission paths write to, and the collection point worker
     /// devices publish their rings to at shutdown.
     recorder: Arc<Recorder>,
+    /// Fleet health: consecutive-failure quarantine (circuit breaker)
+    /// and permanent deaths, fed by the workers and consulted by tests
+    /// and the chaos harness. Always present; all-healthy when no
+    /// faults are injected.
+    health: Arc<HealthTracker>,
+    /// Seeded fault schedule ([`Coordinator::new_with_faults`]);
+    /// `None` in production.
+    injector: Option<Arc<FaultInjector>>,
 }
 
 impl Coordinator {
@@ -218,6 +342,26 @@ impl Coordinator {
     /// configuration (the recorder is on by default; `ObsConfig::
     /// disabled()` gives an overhead A/B baseline).
     pub fn new_with_obs(cfg: CoordinatorConfig, obs_cfg: ObsConfig) -> Self {
+        Self::build(cfg, obs_cfg, None)
+    }
+
+    /// [`new`](Self::new) with a seeded fault schedule replayed against
+    /// the real worker pool — the `dip chaos` entry point. The plan
+    /// must cover exactly `cfg.devices` devices.
+    pub fn new_with_faults(cfg: CoordinatorConfig, plan: FaultPlan) -> Self {
+        assert_eq!(
+            plan.devices(),
+            cfg.devices.max(1),
+            "fault plan and coordinator disagree on fleet size"
+        );
+        Self::build(cfg, ObsConfig::default(), Some(Arc::new(FaultInjector::new(plan))))
+    }
+
+    fn build(
+        cfg: CoordinatorConfig,
+        obs_cfg: ObsConfig,
+        injector: Option<Arc<FaultInjector>>,
+    ) -> Self {
         use std::sync::atomic::Ordering::Relaxed;
         // Validate device config on the caller thread: workers are
         // spawned threads whose startup panics would otherwise be
@@ -235,18 +379,38 @@ impl Coordinator {
         let metrics = Arc::new(Metrics::default());
         let placement = Arc::new(PlacementMap::new(devices, cfg.placement));
         let recorder = Arc::new(Recorder::new(obs_cfg));
+        let health = Arc::new(HealthTracker::new(devices));
         let workers = (0..devices)
             .map(|i| {
                 let pool = Arc::clone(&pool);
                 let metrics = Arc::clone(&metrics);
                 let recorder = Arc::clone(&recorder);
+                let placement = Arc::clone(&placement);
+                let health = Arc::clone(&health);
+                let injector = injector.clone();
                 let dcfg = cfg.device;
                 std::thread::Builder::new()
                     .name(format!("dip-worker-{i}"))
                     .spawn(move || {
                         let mut dev =
                             Device::new_with_obs(dcfg, i, Arc::clone(&metrics), obs_cfg);
+                        if let Some(inj) = &injector {
+                            dev.set_injector(Arc::clone(inj));
+                        }
                         loop {
+                            // Scheduled permanent death: hand the whole
+                            // shard back and exit — the fleet degrades,
+                            // the work survives.
+                            if let Some(inj) =
+                                injector.as_ref().filter(|inj| inj.death_due(i))
+                            {
+                                inj.note_death();
+                                worker_die(
+                                    i, &mut dev, &pool, &placement, &health, &metrics,
+                                    &recorder,
+                                );
+                                break;
+                            }
                             // Prefer queued jobs this device can run
                             // warm — tile stationary (no reload) or
                             // prepared-cached (no re-permutation) —
@@ -273,6 +437,12 @@ impl Coordinator {
                                 None => break, // closed and drained
                             };
                             drain_coalesced(&pool, &mut dev, i, job);
+                            if injector.is_some() {
+                                worker_settle_faults(
+                                    i, &mut dev, &pool, &placement, &health, &metrics,
+                                    &recorder, injector.as_deref(),
+                                );
+                            }
                         }
                         // Hand the ring + histograms over exactly once,
                         // after the last job settled: published tracks
@@ -290,6 +460,8 @@ impl Coordinator {
             cfg,
             next_id: std::sync::atomic::AtomicU64::new(0),
             recorder,
+            health,
+            injector,
         }
     }
 
@@ -428,6 +600,7 @@ impl Coordinator {
                     tile_id,
                     tenant,
                     enqueued_at: Instant::now(),
+                    attempt: 0,
                 };
                 // Affinity: the same tile always routes to its home
                 // device (which then skips the stationary reload);
@@ -436,11 +609,21 @@ impl Coordinator {
                 // streamed M1-tile count so placement balances work,
                 // not request count.
                 let shard = self.placement.place(tile_id, (padded_rows / t) as u64);
-                // Closing consumes the coordinator, so a submit can
-                // never race it: a rejection here is a use-after-
-                // shutdown bug, not a recoverable condition.
-                let waited =
-                    self.pool.push(shard, tenant, job).expect("job push raced queue close");
+                // Closing consumes the coordinator, so a submit cannot
+                // race it — but under fault injection the whole fleet
+                // can die mid-submit (every shard retired), and then
+                // the push is refused. Fail the request typed instead
+                // of panicking; the handle resolves to `ChannelClosed`.
+                let waited = match self.pool.push(shard, tenant, job) {
+                    Ok(waited) => waited,
+                    Err(_) => {
+                        if req.fail_jobs(1, FAIL_CLOSED) {
+                            let completed = req.finish();
+                            self.metrics.requests_completed.fetch_add(completed, Relaxed);
+                        }
+                        continue;
+                    }
+                };
                 if waited {
                     self.metrics.backpressure_events.fetch_add(1, Relaxed);
                     let mut ev = Event::new(EventKind::Backpressure, 0, 0);
@@ -602,10 +785,23 @@ impl Coordinator {
                         tile_id,
                         tenant: lane,
                         enqueued_at: Instant::now(),
+                        attempt: 0,
                     };
                     let shard = self.placement.place(tile_id, 1);
-                    let waited =
-                        self.pool.push(shard, lane, job).expect("job push raced queue close");
+                    // Same typed refusal as the batched path: a fully
+                    // retired fleet fails the request, never panics.
+                    let waited = match self.pool.push(shard, lane, job) {
+                        Ok(waited) => waited,
+                        Err(_) => {
+                            if req.fail_jobs(1, FAIL_CLOSED) {
+                                let completed = req.finish();
+                                self.metrics
+                                    .requests_completed
+                                    .fetch_add(completed, Relaxed);
+                            }
+                            continue;
+                        }
+                    };
                     if waited {
                         self.metrics.backpressure_events.fetch_add(1, Relaxed);
                         let mut ev = Event::new(EventKind::Backpressure, 0, 0);
@@ -630,6 +826,20 @@ impl Coordinator {
     /// cache and decode-reuse counters live next to the scheduler's).
     pub(crate) fn metrics_arc(&self) -> Arc<Metrics> {
         Arc::clone(&self.metrics)
+    }
+
+    /// Fleet health (quarantine / death state). An `Arc` clone, so the
+    /// chaos harness can keep it across [`shutdown`](Self::shutdown)
+    /// and assert against the *settled* state — worker threads update
+    /// health asynchronously, so mid-run reads are only advisory.
+    pub fn health(&self) -> Arc<HealthTracker> {
+        Arc::clone(&self.health)
+    }
+
+    /// The armed fault injector, if this coordinator was built with
+    /// [`new_with_faults`](Self::new_with_faults).
+    pub fn injector(&self) -> Option<&Arc<FaultInjector>> {
+        self.injector.as_ref()
     }
 
     /// Drain the queues, stop the workers, and return final metrics.
@@ -676,6 +886,7 @@ impl Drop for Coordinator {
 mod tests {
     use super::*;
     use crate::analytical::Arch;
+    use crate::fault::FaultKind;
     use crate::matrix::random_i8;
 
     fn small() -> CoordinatorConfig {
@@ -1141,5 +1352,128 @@ mod tests {
         let m = c.shutdown(); // must drain, not drop
         assert_eq!(m.requests_completed, 1);
         assert_eq!(h.wait().out, x.widen().matmul(&w.widen()));
+    }
+
+    #[test]
+    fn wait_timeout_returns_typed_errors_not_hangs() {
+        // A handle whose sender is still alive but silent times out
+        // with the budget echoed back; one whose sender is gone reports
+        // the closed channel. Neither blocks forever or panics.
+        let (tx, rx) = channel();
+        let h = RequestHandle { rx };
+        let d = Duration::from_millis(5);
+        assert!(matches!(h.wait_timeout(d), Err(FleetError::WaitTimeout(got)) if got == d));
+        drop(tx);
+        assert!(matches!(h.wait_timeout(d), Err(FleetError::ChannelClosed)));
+    }
+
+    #[test]
+    fn transient_fault_is_retried_through_the_queue_bit_exact() {
+        // One transient on the fleet's very first execution: the job
+        // fails, requeues through the scheduler, and the retry lands
+        // the same bits as a fault-free run. One device makes the slot
+        // schedule deterministic — the faulted attempt is always the
+        // first pop.
+        let mut cfg = small();
+        cfg.devices = 1;
+        let plan = FaultPlan {
+            faults: vec![vec![(0, FaultKind::Transient)]],
+            death_at: vec![None],
+            retry_immunity: true,
+        };
+        let c = Coordinator::new_with_faults(cfg, plan);
+        let x = random_i8(16, 24, 31);
+        let w = random_i8(24, 16, 32);
+        let resp = c
+            .submit(x.clone(), w.clone())
+            .wait_timeout(Duration::from_secs(30))
+            .expect("retry must settle the request");
+        assert_eq!(resp.out, x.widen().matmul(&w.widen()));
+        let m = c.shutdown();
+        assert_eq!(m.jobs_failed, 1);
+        assert_eq!(m.jobs_retried, 1);
+        assert_eq!(m.jobs_abandoned, 0);
+        assert_eq!(m.faults_injected, 1);
+        assert_eq!(m.jobs_failed, m.jobs_retried + m.jobs_abandoned, "retry ledger balances");
+    }
+
+    #[test]
+    fn coordinator_survives_mid_run_device_death() {
+        // Device 1 dies on its first scheduler pass: its shard retires,
+        // its backlog re-homes, and every request still completes
+        // bit-exactly on the survivors.
+        let mut cfg = small();
+        cfg.devices = 3;
+        let plan = FaultPlan {
+            faults: vec![vec![], vec![], vec![]],
+            death_at: vec![None, Some(0), None],
+            retry_immunity: true,
+        };
+        let c = Coordinator::new_with_faults(cfg, plan);
+        let w = random_i8(32, 32, 41);
+        let xs: Vec<_> = (0..6).map(|i| random_i8(16, 32, 50 + i)).collect();
+        let handles: Vec<_> = xs.iter().map(|x| c.submit(x.clone(), w.clone())).collect();
+        for (h, x) in handles.into_iter().zip(&xs) {
+            let resp = h
+                .wait_timeout(Duration::from_secs(30))
+                .expect("survivors must absorb the dead device's work");
+            assert_eq!(resp.out, x.widen().matmul(&w.widen()));
+        }
+        let health = c.health();
+        let m = c.shutdown(); // joins the workers: health is settled
+        assert!(health.is_dead(1));
+        assert!(health.is_quarantined(1), "dead devices stay quarantined");
+        assert_eq!(health.healthy_count(), 2);
+        assert_eq!(m.device_deaths, 1);
+        assert_eq!(m.faults_injected, 1, "death is the only injected fault");
+        assert!(m.quarantines_entered >= 1);
+        assert_eq!(m.quarantines_exited, 0, "death is not a recoverable quarantine");
+        assert_eq!(m.jobs_failed, 0);
+    }
+
+    #[test]
+    fn consecutive_failures_quarantine_then_success_revives() {
+        // One job, immunity off, three scheduled faults: attempts 0-2
+        // all fail, the job is abandoned with a typed error, and the
+        // third consecutive failure trips the circuit breaker. A second
+        // request then succeeds on the quarantined device and revives
+        // it. Serial by construction (one job in flight at a time on
+        // one live device), so every count is exact.
+        let mut cfg = small();
+        cfg.devices = 1;
+        let plan = FaultPlan {
+            faults: vec![vec![
+                (0, FaultKind::Transient),
+                (1, FaultKind::Transient),
+                (2, FaultKind::CorruptInstall),
+            ]],
+            death_at: vec![None],
+            retry_immunity: false,
+        };
+        let c = Coordinator::new_with_faults(cfg, plan);
+        let w = random_i8(8, 8, 61);
+        let xa = random_i8(8, 8, 62);
+        let err = c
+            .submit(xa, w.clone())
+            .wait_timeout(Duration::from_secs(30))
+            .expect_err("three faulted attempts must abandon the job");
+        assert!(matches!(err, FleetError::RequestAbandoned));
+        let xb = random_i8(8, 8, 63);
+        let resp = c
+            .submit(xb.clone(), w.clone())
+            .wait_timeout(Duration::from_secs(30))
+            .expect("a quarantined (not dead) device still serves");
+        assert_eq!(resp.out, xb.widen().matmul(&w.widen()));
+        let health = c.health();
+        let m = c.shutdown(); // joins the worker: health transitions settled
+        assert!(!health.is_quarantined(0), "success closes the breaker");
+        assert!(!health.is_dead(0));
+        assert_eq!(m.jobs_failed, 3);
+        assert_eq!(m.jobs_retried, 2);
+        assert_eq!(m.jobs_abandoned, 1);
+        assert_eq!(m.jobs_failed, m.jobs_retried + m.jobs_abandoned, "retry ledger balances");
+        assert_eq!(m.quarantines_entered, 1);
+        assert_eq!(m.quarantines_exited, 1, "a success after quarantine revives the device");
+        assert_eq!(m.requests_completed, 2, "abandoned requests still settle their waiters");
     }
 }

@@ -5,13 +5,23 @@
 //! accumulation is commutative so the result is order-independent
 //! (covered by property tests).
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU32, AtomicUsize, Ordering};
 use std::sync::mpsc::Sender;
 use std::sync::Mutex;
 
+use crate::fault::FleetError;
 use crate::matrix::Mat;
 use crate::sim::stats::RunStats;
 use crate::sync::lock_unpoisoned;
+
+/// Failure codes for [`ReqState::fail_jobs`] (an `AtomicU32` rather
+/// than a mutex-guarded enum so the failure path adds no lock — the
+/// analyzer pins the coordinator's lock-nesting edges exactly).
+pub const FAIL_NONE: u32 = 0;
+/// A job exhausted its retry budget.
+pub const FAIL_ABANDONED: u32 = 1;
+/// The queue closed before every job could be enqueued.
+pub const FAIL_CLOSED: u32 = 2;
 
 /// Final response for one submitted matmul.
 #[derive(Debug)]
@@ -29,7 +39,7 @@ pub struct SubRequest {
     pub id: u64,
     pub row0: usize,
     pub rows: usize,
-    pub tx: Sender<MatmulResponse>,
+    pub tx: Sender<Result<MatmulResponse, FleetError>>,
 }
 
 /// Shared state of one in-flight (possibly batched) request.
@@ -41,6 +51,10 @@ pub struct ReqState {
     subs: Mutex<Vec<SubRequest>>,
     /// Unpadded output column count (K of the original request).
     out_cols: usize,
+    /// First failure code recorded against this request (`FAIL_*`);
+    /// once nonzero, [`finish`](Self::finish) delivers a typed
+    /// [`FleetError`] instead of the (partial) result.
+    failed: AtomicU32,
 }
 
 impl ReqState {
@@ -51,7 +65,19 @@ impl ReqState {
             pending_jobs: AtomicUsize::new(jobs),
             subs: Mutex::new(subs),
             out_cols,
+            failed: AtomicU32::new(FAIL_NONE),
         }
+    }
+
+    /// Retire `n` jobs of this request as permanently failed with
+    /// `code` (a `FAIL_*` constant; the *first* recorded code wins).
+    /// Returns true when these were the last outstanding jobs — the
+    /// caller must then [`finish`](Self::finish) so waiters get their
+    /// typed error instead of hanging.
+    pub fn fail_jobs(&self, n: usize, code: u32) -> bool {
+        debug_assert_ne!(code, FAIL_NONE);
+        let _ = self.failed.compare_exchange(FAIL_NONE, code, Ordering::Relaxed, Ordering::Relaxed);
+        self.pending_jobs.fetch_sub(n, Ordering::AcqRel) == n
     }
 
     /// Fold one job's partial result (a strip at row offset `r0`,
@@ -101,17 +127,31 @@ impl ReqState {
         self.pending_jobs.fetch_sub(1, Ordering::AcqRel) == 1
     }
 
-    /// Deliver responses to every sub-requester (last job just retired).
+    /// Deliver responses to every sub-requester (last job just retired
+    /// — completed or failed). A request with any failed job resolves
+    /// to a typed [`FleetError`] for *every* waiter: a partial
+    /// accumulator is never delivered as if it were the product.
     /// Returns the number of sub-requests completed.
     pub fn finish(&self) -> u64 {
+        let err = match self.failed.load(Ordering::Relaxed) {
+            FAIL_NONE => None,
+            FAIL_CLOSED => Some(FleetError::ChannelClosed),
+            _ => Some(FleetError::RequestAbandoned),
+        };
         let out = lock_unpoisoned(&self.out);
         let stats = *lock_unpoisoned(&self.stats);
         let subs = std::mem::take(&mut *lock_unpoisoned(&self.subs));
         let n = subs.len() as u64;
         for sub in subs {
-            let mine = out.block(sub.row0, 0, sub.rows, self.out_cols);
+            let resp = match &err {
+                Some(e) => Err(e.clone()),
+                None => {
+                    let mine = out.block(sub.row0, 0, sub.rows, self.out_cols);
+                    Ok(MatmulResponse { id: sub.id, out: mine, stats })
+                }
+            };
             // Receiver may have hung up (dropped handle) — that's fine.
-            let _ = sub.tx.send(MatmulResponse { id: sub.id, out: mine, stats });
+            let _ = sub.tx.send(resp);
         }
         n
     }
@@ -131,7 +171,7 @@ mod tests {
         assert!(!st.complete_job(0, 0, &strip, &stats));
         assert!(st.complete_job(0, 0, &strip, &stats));
         st.finish();
-        let resp = rx.try_recv().unwrap();
+        let resp = rx.try_recv().unwrap().unwrap();
         assert_eq!(resp.id, 7);
         assert_eq!(resp.out, Mat::from_vec(2, 2, vec![2, 4, 6, 8]));
         assert_eq!(resp.stats.cycles, 10);
@@ -154,8 +194,8 @@ mod tests {
         let strip = Mat::from_vec(4, 2, vec![1, 2, 3, 4, 5, 6, 7, 8]);
         assert!(st.complete_job(0, 0, &strip, &RunStats::default()));
         st.finish();
-        assert_eq!(rx1.try_recv().unwrap().out, Mat::from_vec(2, 2, vec![1, 2, 3, 4]));
-        assert_eq!(rx2.try_recv().unwrap().out, Mat::from_vec(2, 2, vec![5, 6, 7, 8]));
+        assert_eq!(rx1.try_recv().unwrap().unwrap().out, Mat::from_vec(2, 2, vec![1, 2, 3, 4]));
+        assert_eq!(rx2.try_recv().unwrap().unwrap().out, Mat::from_vec(2, 2, vec![5, 6, 7, 8]));
     }
 
     #[test]
@@ -165,7 +205,7 @@ mod tests {
         let strip = Mat::from_vec(1, 2, vec![9, 9]);
         assert!(st.complete_job(0, 2, &strip, &RunStats::default()));
         st.finish();
-        assert_eq!(rx.try_recv().unwrap().out, Mat::from_vec(1, 4, vec![0, 0, 9, 9]));
+        assert_eq!(rx.try_recv().unwrap().unwrap().out, Mat::from_vec(1, 4, vec![0, 0, 9, 9]));
     }
 
     #[test]
@@ -178,7 +218,7 @@ mod tests {
         assert!(st.complete_job(2, 0, &strip, &RunStats::default()));
         st.finish();
         assert_eq!(
-            rx.try_recv().unwrap().out,
+            rx.try_recv().unwrap().unwrap().out,
             Mat::from_vec(4, 2, vec![0, 0, 0, 0, 5, 6, 7, 8])
         );
     }
@@ -201,6 +241,40 @@ mod tests {
         let st = ReqState::new(1, 2, 2, 1, vec![SubRequest { id: 0, row0: 0, rows: 1, tx }]);
         let strip = Mat::from_vec(1, 2, vec![1, 2]);
         st.complete_job(0, 1, &strip, &RunStats::default()); // c0 1 + 2 > 2
+    }
+
+    #[test]
+    fn failed_jobs_resolve_every_waiter_with_a_typed_error() {
+        let (tx1, rx1) = channel();
+        let (tx2, rx2) = channel();
+        let st = ReqState::new(
+            4,
+            2,
+            2,
+            2,
+            vec![
+                SubRequest { id: 1, row0: 0, rows: 2, tx: tx1 },
+                SubRequest { id: 2, row0: 2, rows: 2, tx: tx2 },
+            ],
+        );
+        // One job completes normally, the other is abandoned — the
+        // partial accumulator must NOT be delivered as a result.
+        let strip = Mat::from_vec(4, 2, vec![1; 8]);
+        assert!(!st.complete_job(0, 0, &strip, &RunStats::default()));
+        assert!(st.fail_jobs(1, FAIL_ABANDONED));
+        assert_eq!(st.finish(), 2);
+        assert!(matches!(rx1.try_recv().unwrap(), Err(FleetError::RequestAbandoned)));
+        assert!(matches!(rx2.try_recv().unwrap(), Err(FleetError::RequestAbandoned)));
+    }
+
+    #[test]
+    fn first_failure_code_wins() {
+        let (tx, rx) = channel();
+        let st = ReqState::new(1, 1, 1, 2, vec![SubRequest { id: 0, row0: 0, rows: 1, tx }]);
+        assert!(!st.fail_jobs(1, FAIL_CLOSED));
+        assert!(st.fail_jobs(1, FAIL_ABANDONED));
+        st.finish();
+        assert!(matches!(rx.try_recv().unwrap(), Err(FleetError::ChannelClosed)));
     }
 
     #[test]

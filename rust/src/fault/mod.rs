@@ -1,0 +1,551 @@
+//! Deterministic, seeded fault injection and the recovery machinery
+//! that lets the simulated device fleet survive it.
+//!
+//! # Fault model
+//!
+//! What **is** simulated, per device, keyed by that device's execution
+//! slot (under retry immunity the nth *first-attempt* job the device
+//! runs, with immunity off the nth attempt of any kind — never wall
+//! time, so the schedule is deterministic relative to each device's
+//! own sequence of fresh work):
+//!
+//! - **Transient job failure** ([`FaultKind::Transient`]): the attempt
+//!   produces nothing and charges nothing; the job is retried.
+//! - **Corrupted weight install** ([`FaultKind::CorruptInstall`]): the
+//!   install writes a corrupted tile. Detection is *real*: the device
+//!   re-hashes the installed bytes and compares against the tile's
+//!   content hash (the same hash that keys affinity routing). The
+//!   wasted load cycles land in `failed_cycles`, the resident tile is
+//!   discarded, and the job is retried.
+//! - **Flipped GEMM output** ([`FaultKind::FlipOutput`]): one element
+//!   of the result strip is flipped. Detection is *real*: the
+//!   Huang–Abraham column checksum ([`crate::arch::abft`]) catches the
+//!   bad column. The wasted stream cycles land in `failed_cycles` and
+//!   the job is retried.
+//! - **Straggler slowdown** ([`FaultKind::Straggler`]): the attempt
+//!   completes correctly but only after a wall-clock stall. Simulated
+//!   cycles are untouched, so outputs and the cycle ledger stay exact.
+//! - **Permanent device death** ([`FaultPlan::death_at`]): the worker
+//!   stops accepting work forever. Its queue shard is retired (new
+//!   pushes reroute), its in-flight backlog is reclaimed and re-homed
+//!   onto healthy devices, and placement stops targeting it.
+//!
+//! What is **not** simulated: network partitions, memory pressure,
+//! Byzantine devices that forge *passing* checksums, partial strip
+//! writes, or clock skew. Every injected corruption is detectable by
+//! construction — the point is to exercise the recovery machinery, not
+//! to model silent data loss.
+//!
+//! # Recovery machinery
+//!
+//! - **Bounded retry**: a failed job is requeued (to a healthy device,
+//!   via placement) up to [`MAX_ATTEMPTS`] total attempts, then
+//!   abandoned with a typed [`FleetError::RequestAbandoned`] delivered
+//!   to every waiter — nobody hangs.
+//! - **Circuit breaker** ([`HealthTracker`]): [`QUARANTINE_THRESHOLD`]
+//!   *consecutive* detected failures quarantine a device — placement
+//!   steers new tiles away until a later success revives it. Death is
+//!   permanent: a dead device never revives.
+//! - **Retry immunity** (`FaultPlan::retry_immunity`, on for seeded
+//!   chaos plans): the injector only fires on a job's *first* attempt,
+//!   so a retry always succeeds if any device is alive. This makes
+//!   chaos outputs bit-exact against the fault-free run under every
+//!   thread interleaving. Immune retries also don't consume schedule
+//!   slots — the schedule is keyed to each device's nth *first-attempt*
+//!   execution, so an interleaved retry can never silently skip a
+//!   planned injection and every scheduled fault class fires
+//!   deterministically given enough fresh work. The abandonment path is
+//!   covered by unit tests with immunity off.
+//!
+//! # Accounting
+//!
+//! Failed attempts move **none** of the normal ledger counters — their
+//! waste is charged to `failed_cycles` only, and the retried success
+//! re-charges normally, so the cycle ledger stays exact. The retry
+//! ledger is double-entry (`jobs_failed == jobs_retried +
+//! jobs_abandoned`, quarantine enter/exit conserved) and enforced by
+//! [`crate::check::audit`]. Every injection, retry, abandonment,
+//! quarantine, and revival is also a flight-recorder event, and the
+//! trace↔ledger audit ties the two tallies together.
+
+use std::fmt;
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Total attempts (first try + retries) a job gets before abandonment.
+pub const MAX_ATTEMPTS: u32 = 3;
+
+/// Consecutive detected failures that trip a device's circuit breaker.
+pub const QUARANTINE_THRESHOLD: u32 = 3;
+
+/// Typed terminal errors a fleet request can resolve to instead of a
+/// result — callers using [`wait_timeout`] can never block forever.
+///
+/// [`wait_timeout`]: crate::coordinator::RequestHandle::wait_timeout
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FleetError {
+    /// The caller's wait budget elapsed before the request settled.
+    WaitTimeout(Duration),
+    /// A job of this request exhausted its retry budget; the partial
+    /// result was discarded rather than silently delivered.
+    RequestAbandoned,
+    /// The coordinator shut down (or dropped the response channel)
+    /// before the request settled.
+    ChannelClosed,
+}
+
+impl fmt::Display for FleetError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FleetError::WaitTimeout(d) => write!(f, "request did not settle within {d:?}"),
+            FleetError::RequestAbandoned => {
+                write!(f, "a job exhausted its {MAX_ATTEMPTS}-attempt retry budget")
+            }
+            FleetError::ChannelClosed => write!(f, "coordinator closed before the request settled"),
+        }
+    }
+}
+
+impl std::error::Error for FleetError {}
+
+/// One injectable fault class (device death is scheduled separately,
+/// via [`FaultPlan::death_at`], because it ends the worker rather than
+/// one job attempt).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    Transient,
+    CorruptInstall,
+    FlipOutput,
+    Straggler,
+    DeviceDeath,
+}
+
+impl FaultKind {
+    pub const ALL: [FaultKind; 5] = [
+        FaultKind::Transient,
+        FaultKind::CorruptInstall,
+        FaultKind::FlipOutput,
+        FaultKind::Straggler,
+        FaultKind::DeviceDeath,
+    ];
+
+    /// Stable ordinal (indexes the injector's per-class fired counters;
+    /// trace `fault_injected` instants carry it in `rows`).
+    pub fn index(self) -> usize {
+        match self {
+            FaultKind::Transient => 0,
+            FaultKind::CorruptInstall => 1,
+            FaultKind::FlipOutput => 2,
+            FaultKind::Straggler => 3,
+            FaultKind::DeviceDeath => 4,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultKind::Transient => "transient",
+            FaultKind::CorruptInstall => "corrupt_install",
+            FaultKind::FlipOutput => "flip_output",
+            FaultKind::Straggler => "straggler",
+            FaultKind::DeviceDeath => "device_death",
+        }
+    }
+}
+
+/// A deterministic fault schedule: per device, `(slot, kind)` pairs
+/// sorted by slot (slot = that device's nth execution attempt), plus an
+/// optional death slot per device.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub faults: Vec<Vec<(u64, FaultKind)>>,
+    pub death_at: Vec<Option<u64>>,
+    /// Fire only on first attempts (`job.attempt == 0`) — see the
+    /// module doc's retry-immunity rationale.
+    pub retry_immunity: bool,
+}
+
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+impl FaultPlan {
+    /// An empty schedule (useful as a fixture).
+    pub fn quiet(devices: usize) -> Self {
+        Self {
+            faults: vec![Vec::new(); devices],
+            death_at: vec![None; devices],
+            retry_immunity: true,
+        }
+    }
+
+    /// Build a seeded schedule that exercises every fault class: one
+    /// "flaky" device gets a straggler early, then a
+    /// [`QUARANTINE_THRESHOLD`]-long burst of detected failures (the
+    /// straggler precedes the burst so it always fires before the
+    /// breaker can possibly quarantine the device and starve its lane);
+    /// a *different* victim device dies permanently a few slots in
+    /// (death enters quarantine deterministically — burst failures only
+    /// trip the breaker when no retried success lands between them);
+    /// other devices get scattered transients. Deterministic in
+    /// `(seed, devices)`.
+    pub fn from_seed(seed: u64, devices: usize) -> Self {
+        assert!(devices >= 2, "a fault plan needs a survivor, got {devices} device(s)");
+        let mut s = seed;
+        let mut faults = vec![Vec::new(); devices];
+        let flaky = (splitmix64(&mut s) % devices as u64) as usize;
+        let off = 1 + (splitmix64(&mut s) % (devices as u64 - 1)) as usize;
+        let victim = (flaky + off) % devices;
+        let burst = [FaultKind::Transient, FaultKind::CorruptInstall, FaultKind::FlipOutput];
+        let rot = (splitmix64(&mut s) % 3) as usize;
+        faults[flaky].push((1, FaultKind::Straggler));
+        for (i, slot) in (2..2 + QUARANTINE_THRESHOLD as u64).enumerate() {
+            faults[flaky].push((slot, burst[(i + rot) % burst.len()]));
+        }
+        for (d, lane) in faults.iter_mut().enumerate() {
+            if d != flaky && d != victim && splitmix64(&mut s) % 2 == 0 {
+                lane.push((2 + splitmix64(&mut s) % 10, FaultKind::Transient));
+            }
+            lane.sort_unstable_by_key(|&(slot, _)| slot);
+            lane.dedup_by_key(|&mut (slot, _)| slot);
+        }
+        let mut death_at = vec![None; devices];
+        death_at[victim] = Some(4 + splitmix64(&mut s) % 8);
+        Self { faults, death_at, retry_immunity: true }
+    }
+
+    pub fn devices(&self) -> usize {
+        self.faults.len()
+    }
+
+    /// The device scheduled to die, if any (seeded plans always have
+    /// exactly one).
+    pub fn victim(&self) -> Option<usize> {
+        self.death_at.iter().position(|d| d.is_some())
+    }
+}
+
+/// Lock-free replayer of a [`FaultPlan`]: each device's worker thread
+/// consumes its own slot counter, so the schedule is exact per device
+/// with no cross-thread coordination beyond relaxed atomics.
+pub struct FaultInjector {
+    plan: FaultPlan,
+    slots: Vec<AtomicU64>,
+    armed: AtomicBool,
+    fired: [AtomicU64; 5],
+}
+
+impl FaultInjector {
+    pub fn new(plan: FaultPlan) -> Self {
+        let slots = (0..plan.devices()).map(|_| AtomicU64::new(0)).collect();
+        Self { plan, slots, armed: AtomicBool::new(true), fired: Default::default() }
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// Consume one execution slot on `device` and return the fault (if
+    /// any) scheduled for it. With retry immunity, retries (`attempt >
+    /// 0`) neither fault *nor consume a slot* — the schedule is keyed
+    /// to the device's nth first-attempt execution, so an interleaved
+    /// retry can never silently skip a scheduled injection and every
+    /// planned fault fires as long as the device runs enough fresh
+    /// jobs. (With immunity off, retries consume and can fault.)
+    pub fn next_fault(&self, device: usize, attempt: u32) -> Option<FaultKind> {
+        if !self.armed.load(Ordering::Relaxed) {
+            return None;
+        }
+        if self.plan.retry_immunity && attempt > 0 {
+            return None;
+        }
+        let slot = self.slots[device].fetch_add(1, Ordering::Relaxed);
+        let lane = &self.plan.faults[device];
+        let kind = lane.binary_search_by_key(&slot, |&(s, _)| s).ok().map(|i| lane[i].1)?;
+        self.fired[kind.index()].fetch_add(1, Ordering::Relaxed);
+        Some(kind)
+    }
+
+    /// Whether any fault (or the death slot) lands within the next
+    /// `window` slots of `device` — the coalescing guard: a drain only
+    /// batches jobs when the whole batch is fault-free, so batched
+    /// slot consumption never skips a scheduled injection.
+    pub fn faults_within(&self, device: usize, window: u64) -> bool {
+        if !self.armed.load(Ordering::Relaxed) {
+            return false;
+        }
+        let cur = self.slots[device].load(Ordering::Relaxed);
+        self.plan.faults[device].iter().any(|&(s, _)| s >= cur && s < cur + window)
+            || self.plan.death_at[device].is_some_and(|d| d < cur + window)
+    }
+
+    /// Whether `device` has reached its scheduled death slot.
+    pub fn death_due(&self, device: usize) -> bool {
+        self.armed.load(Ordering::Relaxed)
+            && self.plan.death_at[device]
+                .is_some_and(|d| self.slots[device].load(Ordering::Relaxed) >= d)
+    }
+
+    /// Record that a worker actually died (counted once by the caller).
+    pub fn note_death(&self) {
+        self.fired[FaultKind::DeviceDeath.index()].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Stop injecting (shutdown fallback paths execute retries locally
+    /// and must not fault forever).
+    pub fn disarm(&self) {
+        self.armed.store(false, Ordering::Relaxed);
+    }
+
+    /// How many injections of `kind` actually fired.
+    pub fn fired(&self, kind: FaultKind) -> u64 {
+        self.fired[kind.index()].load(Ordering::Relaxed)
+    }
+}
+
+struct DeviceHealth {
+    consecutive_failures: AtomicU32,
+    quarantined: AtomicBool,
+    dead: AtomicBool,
+}
+
+/// Circuit breaker over the fleet: consecutive detected failures
+/// quarantine a device (placement steers away), a later success revives
+/// it, death is permanent. All transitions are edge-triggered — the
+/// boolean returns say "newly entered this state", so callers count
+/// quarantine enter/exit exactly once per transition.
+pub struct HealthTracker {
+    devices: Vec<DeviceHealth>,
+}
+
+impl HealthTracker {
+    pub fn new(devices: usize) -> Self {
+        Self {
+            devices: (0..devices)
+                .map(|_| DeviceHealth {
+                    consecutive_failures: AtomicU32::new(0),
+                    quarantined: AtomicBool::new(false),
+                    dead: AtomicBool::new(false),
+                })
+                .collect(),
+        }
+    }
+
+    /// Record one detected failure on `device`; returns true when this
+    /// failure newly trips the circuit breaker.
+    pub fn record_failure(&self, device: usize) -> bool {
+        let h = &self.devices[device];
+        let n = h.consecutive_failures.fetch_add(1, Ordering::Relaxed) + 1;
+        n >= QUARANTINE_THRESHOLD && !h.quarantined.swap(true, Ordering::Relaxed)
+    }
+
+    /// Record one successful job on `device`; returns true when this
+    /// success revives a quarantined (but alive) device.
+    pub fn record_success(&self, device: usize) -> bool {
+        let h = &self.devices[device];
+        h.consecutive_failures.store(0, Ordering::Relaxed);
+        !h.dead.load(Ordering::Relaxed) && h.quarantined.swap(false, Ordering::Relaxed)
+    }
+
+    /// Mark `device` permanently dead. Returns `(newly_dead,
+    /// newly_quarantined)` — death implies quarantine, entered here if
+    /// the breaker had not already tripped.
+    pub fn mark_dead(&self, device: usize) -> (bool, bool) {
+        let h = &self.devices[device];
+        let newly_dead = !h.dead.swap(true, Ordering::Relaxed);
+        let newly_quarantined = newly_dead && !h.quarantined.swap(true, Ordering::Relaxed);
+        (newly_dead, newly_quarantined)
+    }
+
+    pub fn is_dead(&self, device: usize) -> bool {
+        self.devices[device].dead.load(Ordering::Relaxed)
+    }
+
+    pub fn is_quarantined(&self, device: usize) -> bool {
+        self.devices[device].quarantined.load(Ordering::Relaxed)
+    }
+
+    /// Devices neither dead nor quarantined.
+    pub fn healthy_count(&self) -> usize {
+        self.devices
+            .iter()
+            .filter(|h| {
+                !h.dead.load(Ordering::Relaxed) && !h.quarantined.load(Ordering::Relaxed)
+            })
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_is_deterministic_and_covers_every_class() {
+        for seed in [42, 1337, 7] {
+            let a = FaultPlan::from_seed(seed, 4);
+            let b = FaultPlan::from_seed(seed, 4);
+            assert_eq!(a, b);
+            assert!(a.retry_immunity);
+            let victim = a.victim().expect("seeded plans schedule a death");
+            // The flaky burst never lands on the victim (the burst must
+            // quarantine-then-revive; the victim must die).
+            let flaky = a
+                .faults
+                .iter()
+                .position(|lane| lane.len() >= QUARANTINE_THRESHOLD as usize)
+                .expect("a flaky device with a quarantine-length burst");
+            assert_ne!(flaky, victim);
+            let kinds: Vec<FaultKind> =
+                a.faults.iter().flatten().map(|&(_, k)| k).collect();
+            for k in [
+                FaultKind::Transient,
+                FaultKind::CorruptInstall,
+                FaultKind::FlipOutput,
+                FaultKind::Straggler,
+            ] {
+                assert!(kinds.contains(&k), "seed {seed} missing {k:?}");
+            }
+            // Slots within a lane are strictly increasing (dedup'd).
+            for lane in &a.faults {
+                for w in lane.windows(2) {
+                    assert!(w[0].0 < w[1].0);
+                }
+            }
+        }
+        assert_ne!(FaultPlan::from_seed(42, 4), FaultPlan::from_seed(1337, 4));
+    }
+
+    #[test]
+    #[should_panic(expected = "needs a survivor")]
+    fn single_device_plan_is_rejected() {
+        FaultPlan::from_seed(42, 1);
+    }
+
+    #[test]
+    fn injector_fires_planned_slots_in_order() {
+        let plan = FaultPlan {
+            faults: vec![vec![(1, FaultKind::Transient), (3, FaultKind::FlipOutput)], vec![]],
+            death_at: vec![None, None],
+            retry_immunity: true,
+        };
+        let inj = FaultInjector::new(plan);
+        assert_eq!(inj.next_fault(0, 0), None); // slot 0
+        assert_eq!(inj.next_fault(0, 0), Some(FaultKind::Transient)); // slot 1
+        assert_eq!(inj.next_fault(0, 0), None); // slot 2
+        assert_eq!(inj.next_fault(0, 0), Some(FaultKind::FlipOutput)); // slot 3
+        assert_eq!(inj.next_fault(1, 0), None); // device 1 untouched
+        assert_eq!(inj.fired(FaultKind::Transient), 1);
+        assert_eq!(inj.fired(FaultKind::FlipOutput), 1);
+        assert_eq!(inj.fired(FaultKind::Straggler), 0);
+    }
+
+    #[test]
+    fn retry_immunity_suppresses_faults_without_consuming_slots() {
+        let plan = FaultPlan {
+            faults: vec![vec![(0, FaultKind::Transient), (1, FaultKind::Transient)]],
+            death_at: vec![None],
+            retry_immunity: true,
+        };
+        let inj = FaultInjector::new(plan);
+        assert_eq!(inj.next_fault(0, 1), None); // retry: no fault, no slot
+        assert_eq!(inj.next_fault(0, 0), Some(FaultKind::Transient)); // slot 0 still fires
+        assert_eq!(inj.next_fault(0, 0), Some(FaultKind::Transient)); // slot 1 not skipped
+        assert_eq!(inj.fired(FaultKind::Transient), 2);
+    }
+
+    #[test]
+    fn immunity_off_faults_retries_too() {
+        let plan = FaultPlan {
+            faults: vec![vec![(0, FaultKind::Transient)]],
+            death_at: vec![None],
+            retry_immunity: false,
+        };
+        let inj = FaultInjector::new(plan);
+        assert_eq!(inj.next_fault(0, 2), Some(FaultKind::Transient));
+    }
+
+    #[test]
+    fn faults_within_covers_window_and_death() {
+        let plan = FaultPlan {
+            faults: vec![vec![(5, FaultKind::Transient)], vec![]],
+            death_at: vec![None, Some(3)],
+            retry_immunity: true,
+        };
+        let inj = FaultInjector::new(plan);
+        assert!(!inj.faults_within(0, 5)); // slots 0..5 clean
+        assert!(inj.faults_within(0, 6)); // slot 5 inside
+        assert!(inj.faults_within(1, 4)); // death slot 3 inside
+        assert!(!inj.death_due(1)); // slot counter still at 0
+        for _ in 0..3 {
+            inj.next_fault(1, 0);
+        }
+        assert!(inj.death_due(1));
+        assert!(!inj.death_due(0));
+    }
+
+    #[test]
+    fn disarm_silences_everything() {
+        let inj = FaultInjector::new(FaultPlan {
+            faults: vec![vec![(0, FaultKind::Transient)]],
+            death_at: vec![Some(0)],
+            retry_immunity: true,
+        });
+        inj.disarm();
+        assert_eq!(inj.next_fault(0, 0), None);
+        assert!(!inj.faults_within(0, 100));
+        assert!(!inj.death_due(0));
+    }
+
+    #[test]
+    fn health_quarantines_after_consecutive_failures_and_revives() {
+        let h = HealthTracker::new(2);
+        assert!(!h.record_failure(0));
+        assert!(!h.record_failure(0));
+        assert!(!h.record_success(0)); // success resets the streak, no revive
+        assert!(!h.record_failure(0));
+        assert!(!h.record_failure(0));
+        assert!(h.record_failure(0)); // third consecutive: newly quarantined
+        assert!(h.is_quarantined(0));
+        assert!(!h.record_failure(0)); // already quarantined, no re-entry
+        assert_eq!(h.healthy_count(), 1);
+        assert!(h.record_success(0)); // newly revived
+        assert!(!h.is_quarantined(0));
+        assert!(!h.record_success(0)); // already healthy
+        assert_eq!(h.healthy_count(), 2);
+    }
+
+    #[test]
+    fn death_is_permanent_and_edge_triggered() {
+        let h = HealthTracker::new(2);
+        assert_eq!(h.mark_dead(1), (true, true));
+        assert_eq!(h.mark_dead(1), (false, false));
+        assert!(h.is_dead(1));
+        assert!(h.is_quarantined(1));
+        assert!(!h.record_success(1)); // no resurrection
+        assert!(h.is_quarantined(1));
+        assert_eq!(h.healthy_count(), 1);
+        // A breaker that already tripped doesn't re-enter quarantine on death.
+        for _ in 0..QUARANTINE_THRESHOLD {
+            h.record_failure(0);
+        }
+        assert_eq!(h.mark_dead(0), (true, false));
+    }
+
+    #[test]
+    fn fleet_error_displays_are_typed_and_distinct() {
+        let msgs = [
+            FleetError::WaitTimeout(Duration::from_secs(5)).to_string(),
+            FleetError::RequestAbandoned.to_string(),
+            FleetError::ChannelClosed.to_string(),
+        ];
+        assert!(msgs[0].contains("did not settle"));
+        assert!(msgs[1].contains("retry budget"));
+        assert!(msgs[2].contains("closed"));
+        assert_ne!(msgs[0], msgs[1]);
+        assert_ne!(msgs[1], msgs[2]);
+    }
+}

@@ -59,6 +59,14 @@
 //!   latency histograms (queue wait, install, kernel, step, wave),
 //!   and measured-vs-analytical utilization/TFPU drift telemetry —
 //!   surfaced by `dip trace-export` and the `dip top` dashboard.
+//! * [`fault`] — deterministic, seeded fault injection over the
+//!   simulated fleet (device death, transient failures, stragglers,
+//!   corrupted installs and flipped outputs detected by content-hash
+//!   re-verify and Huang–Abraham column checksums) plus the recovery
+//!   machinery: bounded retry with requeue-to-healthy, a
+//!   consecutive-failure circuit breaker feeding placement, in-flight
+//!   job reclamation, and typed `FleetError`s so no caller ever hangs
+//!   — replayed end-to-end by `dip chaos`.
 //! * [`check`] — in-tree correctness tooling: a deterministic
 //!   interleaving explorer (mini model checker) for the scheduling
 //!   substrate, a double-entry auditor for the metrics ledger, and the
@@ -77,6 +85,7 @@ pub mod arch;
 pub mod bench_harness;
 pub mod check;
 pub mod coordinator;
+pub mod fault;
 pub mod jsonio;
 pub mod matrix;
 pub mod obs;

@@ -65,6 +65,13 @@ COMMANDS:
                           on regression (the CI perf gate)
                           [--baseline <dir>] [--current <dir>]
     lint                Repo lint gate over rust/src (exit 1 on findings)
+    chaos               Replay seeded fault schedules (device death, job
+                          failures, corrupted installs, flipped outputs,
+                          stragglers) through the real coordinator/serving
+                          stack: outputs must stay bit-exact vs the
+                          fault-free run, every request must settle, and
+                          the retry ledger must balance
+                          [--seed <s>]...  (default: 42 and 1337)
     analyze             Whole-program static analysis: lock-order deadlock
                           freedom, value-range overflow proofs (emits
                           max_safe_seq_len per model config), hot-region
@@ -92,6 +99,15 @@ impl Args {
             .position(|a| a == key)
             .and_then(|i| self.rest.get(i + 1))
             .map(String::as_str)
+    }
+
+    /// Every value of a repeatable `--key value` flag, in order.
+    fn get_all(&self, key: &str) -> Vec<&str> {
+        (0..self.rest.len())
+            .filter(|&i| self.rest[i] == key)
+            .filter_map(|i| self.rest.get(i + 1))
+            .map(String::as_str)
+            .collect()
     }
 
     fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
@@ -143,6 +159,7 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
         "profile" => cmd_profile(args),
         "bench-diff" => cmd_bench_diff(args),
         "lint" => cmd_lint(),
+        "chaos" => cmd_chaos(args),
         "analyze" => cmd_analyze(args),
         "sparsity" => cmd_sparsity(args),
         "bandwidth" => cmd_bandwidth(),
@@ -639,6 +656,135 @@ fn cmd_lint() -> Result<()> {
         bail!("{} lint finding(s)", findings.len());
     }
     println!("lint OK — rust/src is clean under the repo rules");
+    Ok(())
+}
+
+/// The chaos wave mix: deliberately bigger than the canned trace mix so
+/// every device executes comfortably more first-attempt jobs than the
+/// largest scheduled fault slot (seeded death slots go up to 11) — the
+/// whole plan is guaranteed to replay, on every seed.
+fn chaos_wave_mix() -> dip_core::bench_harness::scenarios::WaveMix {
+    use dip_core::bench_harness::scenarios::{WaveMix, WaveSessionSpec};
+    use dip_core::serving::{LayerDims, WavePolicy};
+    WaveMix {
+        tile: 8,
+        layers: 2,
+        dims: LayerDims { d_model: 16, d_k: 8, d_ffn: 24 },
+        sessions: vec![
+            WaveSessionSpec { join_after: 0, prompt_rows: 12, steps: 4 },
+            WaveSessionSpec { join_after: 0, prompt_rows: 10, steps: 5 },
+            WaveSessionSpec { join_after: 1, prompt_rows: 16, steps: 4 },
+            WaveSessionSpec { join_after: 2, prompt_rows: 9, steps: 5 },
+        ],
+        devices: 4,
+        seed: 7900,
+        strip_cache_capacity: 512,
+        policy: WavePolicy::default(),
+    }
+}
+
+fn cmd_chaos(args: &Args) -> Result<()> {
+    use dip_core::bench_harness::scenarios::{run_wave_mix, run_wave_mix_with_faults};
+    use dip_core::check::audit::audit_trace;
+    use dip_core::fault::{FaultKind, FaultPlan};
+    use dip_core::obs::EventKind;
+
+    let seeds: Vec<u64> = {
+        let raw = args.get_all("--seed");
+        if raw.is_empty() {
+            vec![42, 1337]
+        } else {
+            raw.iter()
+                .map(|v| v.parse().with_context(|| format!("bad value for --seed: {v}")))
+                .collect::<Result<_>>()?
+        }
+    };
+    let mix = chaos_wave_mix();
+    println!(
+        "chaos: {} sessions on {} DiP-8 devices, fault-free baseline first",
+        mix.sessions.len(),
+        mix.devices
+    );
+    let clean = run_wave_mix(&mix);
+
+    for &seed in &seeds {
+        let plan = FaultPlan::from_seed(seed, mix.devices);
+        let victim = plan.victim().expect("seeded plans schedule a death");
+        println!("seed {seed}: replaying (victim device {victim} dies mid-run)...");
+        let chaotic = run_wave_mix_with_faults(&mix, plan);
+
+        // Bit-exact graceful degradation: faults may slow the run and
+        // reroute work, but never change a single output element.
+        anyhow::ensure!(chaotic.acts == clean.acts, "seed {seed}: token rows diverged");
+        anyhow::ensure!(chaotic.layers == clean.layers, "seed {seed}: K/V/Y state diverged");
+
+        // Every fault class actually fired, per the flight recorder.
+        let mut fired = [0u64; 5];
+        for d in &chaotic.trace.devices {
+            for ev in &d.events {
+                if ev.kind == EventKind::FaultInjected {
+                    fired[ev.rows as usize] += 1;
+                }
+            }
+        }
+        for kind in FaultKind::ALL {
+            anyhow::ensure!(
+                fired[kind.index()] > 0,
+                "seed {seed}: fault class {} never fired",
+                kind.name()
+            );
+        }
+
+        // Liveness + no loss/duplication: the chaotic run settles the
+        // same requests and charges each job's success exactly once.
+        let (c, q) = (&clean.metrics, &chaotic.metrics);
+        anyhow::ensure!(
+            q.requests_completed == c.requests_completed,
+            "seed {seed}: lost requests ({} vs {})",
+            q.requests_completed,
+            c.requests_completed
+        );
+        anyhow::ensure!(
+            q.jobs_executed == c.jobs_executed,
+            "seed {seed}: lost or duplicated jobs ({} vs {})",
+            q.jobs_executed,
+            c.jobs_executed
+        );
+
+        // Double-entry retry ledger (shutdown already re-audited the
+        // full coordinator ledger; the trace audit ties the recorder's
+        // tallies to the same counters).
+        anyhow::ensure!(
+            q.jobs_failed == q.jobs_retried + q.jobs_abandoned,
+            "seed {seed}: retry ledger out of balance"
+        );
+        anyhow::ensure!(q.jobs_abandoned == 0, "seed {seed}: an immune retry was abandoned");
+        anyhow::ensure!(q.device_deaths == 1, "seed {seed}: the victim never died");
+        anyhow::ensure!(q.quarantines_entered >= 1, "seed {seed}: death must quarantine");
+        anyhow::ensure!(
+            q.quarantines_exited <= q.quarantines_entered,
+            "seed {seed}: more quarantine exits than entries"
+        );
+        let report = audit_trace(&chaotic.trace.counts(), q);
+        anyhow::ensure!(report.is_balanced(), "seed {seed}: trace audit failed:\n{report}");
+
+        println!(
+            "seed {seed} OK — {} faults injected ({} failed, {} retried, {} reclaimed), \
+             {} failed cycles, quarantines {}/{}, outputs bit-exact",
+            q.faults_injected,
+            q.jobs_failed,
+            q.jobs_retried,
+            q.jobs_reclaimed,
+            q.failed_cycles,
+            q.quarantines_entered,
+            q.quarantines_exited
+        );
+    }
+    println!(
+        "chaos OK — {} seed(s): every fault class fired, every request settled, \
+         outputs bit-exact against the fault-free run, retry ledger balanced",
+        seeds.len()
+    );
     Ok(())
 }
 

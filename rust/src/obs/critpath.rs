@@ -416,7 +416,10 @@ mod tests {
     use std::sync::Arc;
     use std::time::Instant;
 
-    fn job_for(x: &Mat<i8>, w: &Mat<i8>) -> (Job, Receiver<MatmulResponse>) {
+    fn job_for(
+        x: &Mat<i8>,
+        w: &Mat<i8>,
+    ) -> (Job, Receiver<Result<MatmulResponse, crate::fault::FleetError>>) {
         let (tx, rx) = channel();
         let req = Arc::new(ReqState::new(
             x.rows(),
@@ -437,6 +440,7 @@ mod tests {
                 tile_id,
                 tenant: DEFAULT_TENANT,
                 enqueued_at: Instant::now(),
+                attempt: 0,
             },
             rx,
         )

@@ -68,6 +68,23 @@ pub enum EventKind {
     SessionJoin,
     /// A session completed and left the cohort (control track).
     SessionLeave,
+    /// A fault fired on this device — transient, corrupt install,
+    /// flipped output, straggler, or (last event of a dying worker)
+    /// device death (device track, instant).
+    FaultInjected,
+    /// A failed job attempt was requeued for retry (device track,
+    /// instant; the re-execution emits its own `Job` span later,
+    /// possibly on another device).
+    JobRetry,
+    /// A failed job exhausted its retry budget; its request resolves
+    /// to a typed error (device track, instant).
+    JobAbandon,
+    /// A device entered circuit-breaker quarantine — consecutive
+    /// failures or death; `device` carries the subject (control track).
+    DeviceQuarantined,
+    /// A quarantined device served successfully and was revived;
+    /// `device` carries the subject (control track).
+    DeviceRevived,
 }
 
 impl EventKind {
@@ -90,6 +107,11 @@ impl EventKind {
             EventKind::WaveClose => "wave_close",
             EventKind::SessionJoin => "session_join",
             EventKind::SessionLeave => "session_leave",
+            EventKind::FaultInjected => "fault_injected",
+            EventKind::JobRetry => "job_retry",
+            EventKind::JobAbandon => "job_abandon",
+            EventKind::DeviceQuarantined => "device_quarantined",
+            EventKind::DeviceRevived => "device_revived",
         }
     }
 

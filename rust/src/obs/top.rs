@@ -141,6 +141,23 @@ pub fn render_top(inp: &TopInputs<'_>) -> String {
         drift.mean_util_drift,
         drift.mean_tfpu_drift,
     ));
+    // Fault/recovery slice — only when something actually fired, so
+    // fault-free runs keep their familiar layout.
+    if inp.snap.faults_injected > 0 {
+        out.push_str(&format!(
+            "faults {}  failed {}  retried {}  abandoned {}  reclaimed {}  failed-cycles {}  \
+             quarantines {}/{}  deaths {}\n",
+            inp.snap.faults_injected,
+            inp.snap.jobs_failed,
+            inp.snap.jobs_retried,
+            inp.snap.jobs_abandoned,
+            inp.snap.jobs_reclaimed,
+            inp.snap.failed_cycles,
+            inp.snap.quarantines_entered,
+            inp.snap.quarantines_exited,
+            inp.snap.device_deaths,
+        ));
+    }
     out
 }
 
@@ -229,6 +246,41 @@ mod tests {
         // No job events on the track: makespan 0, so the critical-path
         // and what-if tables are withheld rather than rendered empty.
         assert!(!s.contains("critical path"), "{s}");
+    }
+
+    #[test]
+    fn dashboard_shows_fault_slice_only_when_faults_fired() {
+        let trace = Trace::default();
+        let inputs = |snap: &MetricsSnapshot| {
+            render_top(&TopInputs {
+                trace: &trace,
+                snap,
+                tenants: &[],
+                queue_depths: &[0],
+                arch: Arch::Dip,
+                tile: 8,
+                mac_stages: 2,
+            })
+        };
+        let quiet = MetricsSnapshot::default();
+        assert!(!inputs(&quiet).contains("faults"), "fault-free layout stays unchanged");
+        let chaotic = MetricsSnapshot {
+            faults_injected: 4,
+            jobs_failed: 3,
+            jobs_retried: 2,
+            jobs_abandoned: 1,
+            jobs_reclaimed: 5,
+            failed_cycles: 30,
+            quarantines_entered: 2,
+            quarantines_exited: 1,
+            device_deaths: 1,
+            ..Default::default()
+        };
+        let s = inputs(&chaotic);
+        assert!(s.contains("faults 4"), "{s}");
+        assert!(s.contains("retried 2"), "{s}");
+        assert!(s.contains("quarantines 2/1"), "{s}");
+        assert!(s.contains("deaths 1"), "{s}");
     }
 
     #[test]

@@ -84,6 +84,11 @@ pub struct TraceCounts {
     pub wave_closes: u64,
     pub session_joins: u64,
     pub session_leaves: u64,
+    pub faults: u64,
+    pub job_retries: u64,
+    pub job_abandons: u64,
+    pub device_quarantines: u64,
+    pub device_revives: u64,
     /// Ring drops across every track (a drop voids conservation).
     pub dropped: u64,
 }
@@ -117,6 +122,11 @@ impl Trace {
                 EventKind::WaveClose => c.wave_closes += 1,
                 EventKind::SessionJoin => c.session_joins += 1,
                 EventKind::SessionLeave => c.session_leaves += 1,
+                EventKind::FaultInjected => c.faults += 1,
+                EventKind::JobRetry => c.job_retries += 1,
+                EventKind::JobAbandon => c.job_abandons += 1,
+                EventKind::DeviceQuarantined => c.device_quarantines += 1,
+                EventKind::DeviceRevived => c.device_revives += 1,
             }
         }
         c
@@ -249,7 +259,8 @@ impl Trace {
                         )),
                     },
                     EventKind::Pop | EventKind::Steal | EventKind::CacheHit
-                    | EventKind::CacheMiss => {}
+                    | EventKind::CacheMiss | EventKind::FaultInjected
+                    | EventKind::JobRetry | EventKind::JobAbandon => {}
                     other => {
                         errs.push(format!(
                             "{label}: control-track event {} on a device track",
@@ -523,6 +534,41 @@ mod tests {
             ..Event::new(EventKind::WaveClose, 99, 0)
         });
         assert!(t.validate().iter().any(|e| e.contains("without wave_open")));
+    }
+
+    #[test]
+    fn fault_events_validate_count_and_export() {
+        let mut t = well_formed();
+        let tile = 0xAB;
+        // Fault lifecycle on the device track: injection/retry/abandon
+        // are free instants (a failed attempt emits no job span).
+        let inst = |k, cyc| Event { tile, tenant: 0, ..Event::new(k, cyc, 0) };
+        t.devices[0].events.push(inst(EventKind::FaultInjected, 35));
+        t.devices[0].events.push(inst(EventKind::JobRetry, 35));
+        t.devices[0].events.push(inst(EventKind::JobAbandon, 35));
+        // Quarantine transitions live on the control track, with the
+        // subject device as the causal id.
+        t.control_events
+            .push(Event { device: 0, ..Event::new(EventKind::DeviceQuarantined, 3, 0) });
+        t.control_events.push(Event { device: 0, ..Event::new(EventKind::DeviceRevived, 4, 0) });
+        assert_eq!(t.validate(), Vec::<String>::new());
+        let c = t.counts();
+        assert_eq!(c.faults, 1);
+        assert_eq!(c.job_retries, 1);
+        assert_eq!(c.job_abandons, 1);
+        assert_eq!(c.device_quarantines, 1);
+        assert_eq!(c.device_revives, 1);
+        // The Perfetto export renders them under their stable names.
+        let rendered = t.chrome_json().render();
+        for name in
+            ["fault_injected", "job_retry", "job_abandon", "device_quarantined", "device_revived"]
+        {
+            assert!(rendered.contains(name), "export missing {name}");
+        }
+        // A quarantine stamped onto a device track is misplaced.
+        let mut bad = well_formed();
+        bad.devices[0].events.push(Event::new(EventKind::DeviceQuarantined, 40, 0));
+        assert!(bad.validate().iter().any(|e| e.contains("control-track event")));
     }
 
     #[test]

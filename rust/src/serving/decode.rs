@@ -66,7 +66,28 @@ impl ServingEngine {
     /// uncached A/B baseline); otherwise the cache is sharded one shard
     /// per device.
     pub fn new(cfg: CoordinatorConfig, model: ServeModel, strip_cache_capacity: usize) -> Self {
-        let coord = Coordinator::new(cfg);
+        Self::with_coordinator(Coordinator::new(cfg), cfg, model, strip_cache_capacity)
+    }
+
+    /// [`new`](Self::new) with a seeded fault schedule replayed against
+    /// the engine's device pool — the serving-side `dip chaos` entry
+    /// point. The plan must cover exactly `cfg.devices` devices.
+    pub fn new_with_faults(
+        cfg: CoordinatorConfig,
+        model: ServeModel,
+        strip_cache_capacity: usize,
+        plan: crate::fault::FaultPlan,
+    ) -> Self {
+        let coord = Coordinator::new_with_faults(cfg, plan);
+        Self::with_coordinator(coord, cfg, model, strip_cache_capacity)
+    }
+
+    fn with_coordinator(
+        coord: Coordinator,
+        cfg: CoordinatorConfig,
+        model: ServeModel,
+        strip_cache_capacity: usize,
+    ) -> Self {
         let cache = (strip_cache_capacity > 0).then(|| {
             ActStripCache::new(cfg.devices.max(1), strip_cache_capacity, coord.metrics_arc())
         });

@@ -330,6 +330,22 @@ fn with_prior(prior: Option<&Mat<i8>>, new: &Mat<i8>) -> Mat<i8> {
     }
 }
 
+/// Generous per-stage response budget. A stage GEMM settles in
+/// milliseconds even on a degraded fleet; a full minute only trips
+/// when the coordinator genuinely lost the request.
+const STAGE_WAIT: std::time::Duration = std::time::Duration::from_secs(60);
+
+/// Collect one stage response with a deadline instead of an unbounded
+/// block: a wedged fleet (or a fault-layer bug) panics with the typed
+/// error after [`STAGE_WAIT`] rather than hanging the layer pass — and
+/// the whole test suite behind it — forever.
+fn wait_bounded(h: &RequestHandle) -> crate::coordinator::MatmulResponse {
+    match h.wait_timeout(STAGE_WAIT) {
+        Ok(resp) => resp,
+        Err(e) => panic!("stage request failed under the fleet: {e}"),
+    }
+}
+
 /// Run one layer pass for a single session — the cohort-of-one case of
 /// [`run_layer_wave`]. Returns the session's rows plus the pass's
 /// simulated cycles.
@@ -505,7 +521,7 @@ pub fn run_layer_wave(
                 Pending::Batched(handles) => {
                     assert!(!node.causal, "batched stages are attention-free");
                     for (i, h) in handles.into_iter().enumerate() {
-                        let resp = h.wait();
+                        let resp = wait_bounded(&h);
                         if i == 0 {
                             // Every sub of a wave carries the request's
                             // aggregate stats: count them once.
@@ -516,7 +532,7 @@ pub fn run_layer_wave(
                 }
                 Pending::PerSession(handles) => {
                     for (i, h) in handles.into_iter().enumerate() {
-                        let resp = h.wait();
+                        let resp = wait_bounded(&h);
                         cycles += resp.stats.cycles;
                         let mut out = resp.out;
                         if node.causal {

@@ -371,6 +371,7 @@ fn warm_steals_prefer_resident_tiles_and_skip_the_reload() {
             tile_id,
             tenant: DEFAULT_TENANT,
             enqueued_at: Instant::now(),
+            attempt: 0,
         }
     }
 

@@ -53,7 +53,7 @@ use dip_core::arch::permute::{permute, unpermute};
 use dip_core::arch::{dip::DipArray, ws::WsArray, SystolicArray};
 use dip_core::bench_harness::scenarios::{
     assert_cached_strictly_cheaper, assert_waved_strictly_cheaper, run_decode_mix, run_wave_mix,
-    run_wave_mix_per_session, DecodeMix, WaveMix, WaveSessionSpec,
+    run_wave_mix_per_session, run_wave_mix_with_faults, DecodeMix, WaveMix, WaveSessionSpec,
 };
 use dip_core::check::audit::{audit_critpath, audit_trace};
 use dip_core::coordinator::{
@@ -216,8 +216,11 @@ fn prop_coalesced_device_batch_matches_sequential_ledger() {
     // ledger (one install charge, N-1 skips) on both architectures.
     use dip_core::coordinator::{Device, Job};
     use dip_core::coordinator::{MatmulResponse, ReqState, SubRequest};
+    use dip_core::fault::FleetError;
     use std::sync::mpsc::{channel, Receiver};
     use std::time::Instant;
+
+    type Resp = Result<MatmulResponse, FleetError>;
 
     let mut g = Gen(0xC0A1E5CE);
     for case in 0..12 {
@@ -230,7 +233,7 @@ fn prop_coalesced_device_batch_matches_sequential_ledger() {
         let xs: Vec<dip_core::Mat<i8>> = (0..batch)
             .map(|i| random_i8(g.range(1, 2 * tile as u64) as usize, tile, seed + 1 + i as u64))
             .collect();
-        let job_for = |x: &dip_core::Mat<i8>| -> (Job, Receiver<MatmulResponse>) {
+        let job_for = |x: &dip_core::Mat<i8>| -> (Job, Receiver<Resp>) {
             let (tx, rx) = channel();
             let req = Arc::new(ReqState::new(
                 x.rows(),
@@ -248,6 +251,7 @@ fn prop_coalesced_device_batch_matches_sequential_ledger() {
                 tile_id,
                 tenant: DEFAULT_TENANT,
                 enqueued_at: Instant::now(),
+                attempt: 0,
             };
             (job, rx)
         };
@@ -260,19 +264,20 @@ fn prop_coalesced_device_batch_matches_sequential_ledger() {
             .map(|x| {
                 let (job, rx) = job_for(x);
                 dev_seq.execute(job);
-                rx.try_recv().expect("sequential response")
+                rx.try_recv().expect("sequential response").expect("fault-free job cannot fail")
             })
             .collect();
 
         let m_bat = Arc::new(Metrics::default());
         let mut dev_bat = Device::new(cfg, 0, m_bat.clone());
-        let (jobs, rxs): (Vec<Job>, Vec<Receiver<MatmulResponse>>) =
+        let (jobs, rxs): (Vec<Job>, Vec<Receiver<Resp>>) =
             xs.iter().map(|x| job_for(x)).unzip();
         dev_bat.execute_batch(jobs);
 
         let ctx = format!("case {case} arch={arch:?} tile={tile} batch={batch} seed={seed}");
         for ((x, s_resp), rx) in xs.iter().zip(&seq).zip(rxs) {
-            let b_resp = rx.try_recv().expect("batched response");
+            let b_resp =
+                rx.try_recv().expect("batched response").expect("fault-free job cannot fail");
             assert_eq!(b_resp.out, s_resp.out, "{ctx}");
             assert_eq!(b_resp.out, x.widen().matmul(&w.widen()), "{ctx}");
             assert_eq!(b_resp.stats, s_resp.stats, "{ctx}");
@@ -724,6 +729,86 @@ fn prop_wave_decode_bit_exact_with_strictly_fewer_weight_loads() {
                 r.wave,
                 r.stacked_rows
             );
+        }
+    }
+}
+
+#[test]
+fn prop_seeded_fault_schedules_keep_wave_mixes_exact_and_balanced() {
+    // Chaos over randomized wave mixes: a seeded fault schedule
+    // (quarantine-length failure burst, scattered transients, a
+    // straggler, and one permanent device death, all from
+    // `FaultPlan::from_seed`) replayed against the real fleet must
+    // leave every observable output bit-exact against the fault-free
+    // run of the same mix, lose and duplicate no jobs (each job's
+    // successful execution is charged exactly once, so `jobs_executed`
+    // matches the clean run exactly), and settle a balanced retry
+    // ledger. `shutdown` re-audits every run's full double-entry
+    // ledger on top of the assertions here.
+    use dip_core::fault::FaultPlan;
+
+    let mut g = Gen(0xFA017);
+    for trial in 0..3 {
+        let sessions = g.range(2, 4) as usize;
+        let specs: Vec<WaveSessionSpec> = (0..sessions)
+            .map(|i| WaveSessionSpec {
+                join_after: if i < 2 { 0 } else { g.range(0, 2) as usize },
+                prompt_rows: 4 + g.range(0, 8) as usize,
+                steps: g.range(1, 3) as usize,
+            })
+            .collect();
+        let cfg = WaveMix {
+            tile: 8,
+            layers: g.range(1, 2) as usize,
+            dims: LayerDims {
+                d_model: 8 * g.range(1, 2) as usize,
+                d_k: 8,
+                d_ffn: 8 * g.range(1, 3) as usize,
+            },
+            sessions: specs,
+            devices: g.range(2, 4) as usize,
+            seed: g.next(),
+            strip_cache_capacity: g.range(8, 64) as usize,
+            policy: WavePolicy {
+                max_wave_rows: 16 + g.range(0, 48) as usize,
+                max_sessions: g.range(2, 8) as usize,
+                ..Default::default()
+            },
+        };
+        let fault_seed = g.next();
+        let ctx = format!(
+            "trial {trial}: sessions={} devices={} fault_seed={fault_seed}",
+            cfg.sessions.len(),
+            cfg.devices
+        );
+        let clean = run_wave_mix(&cfg);
+        let plan = FaultPlan::from_seed(fault_seed, cfg.devices);
+        let chaotic = run_wave_mix_with_faults(&cfg, plan);
+
+        // Bit-exact degradation: faults may slow the run, never change it.
+        assert_eq!(chaotic.acts, clean.acts, "{ctx}: generated token rows diverged");
+        assert_eq!(chaotic.layers, clean.layers, "{ctx}: per-layer K/V/Y state diverged");
+
+        // No job loss, no duplication: every job's successful execution
+        // is charged exactly once, failed attempts move nothing.
+        let (c, q) = (&clean.metrics, &chaotic.metrics);
+        // (`sim_cycles` is *not* compared: re-homing after the death
+        // legitimately changes install/skip patterns, so cycle totals
+        // may differ even though every output is bit-exact.)
+        assert_eq!(q.jobs_executed, c.jobs_executed, "{ctx}: lost or duplicated jobs");
+        assert_eq!(q.requests_completed, c.requests_completed, "{ctx}: lost requests");
+
+        // The retry ledger balances, and retry immunity means no
+        // request is ever abandoned.
+        assert_eq!(q.jobs_failed, q.jobs_retried + q.jobs_abandoned, "{ctx}");
+        assert_eq!(q.jobs_abandoned, 0, "{ctx}: immune retries must always succeed");
+        assert!(q.jobs_retried <= q.faults_injected, "{ctx}");
+        assert!(q.quarantines_exited <= q.quarantines_entered, "{ctx}");
+        // At most one victim dies per seeded plan (whether its death
+        // slot is reached depends on how placement shares the mix).
+        assert!(q.device_deaths <= 1, "{ctx}: seeded plans schedule one death");
+        if q.jobs_failed == 0 {
+            assert_eq!(q.failed_cycles, 0, "{ctx}: failed cycles need a failed job");
         }
     }
 }
